@@ -1,0 +1,57 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds a `DynamicDbscan`, streams points in, queries clusters, deletes
+//! points, and checks the structure against the Theorem-2 invariant
+//! checker.
+
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+
+fn main() {
+    // 1. Initialise(k, t, eps): k-point buckets confer core-ness, t
+    //    independent grid hashes, bucket side 2*eps.
+    let cfg = DbscanConfig { k: 5, t: 8, eps: 0.5, dim: 2, ..Default::default() };
+    let mut db = DynamicDbscan::new(cfg, /*seed=*/ 42);
+
+    // 2. AddPoint: two dense blobs plus an outlier.
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    for i in 0..20 {
+        let j = (i % 5) as f32 * 0.05;
+        left.push(db.add_point(&[0.0 + j, 0.0 + j]));
+        right.push(db.add_point(&[8.0 + j, 8.0 - j]));
+    }
+    let outlier = db.add_point(&[100.0, -100.0]);
+
+    // 3. GetCluster: O(log n) canonical cluster ids.
+    println!("points: {}  cores: {}", db.num_points(), db.num_core_points());
+    println!(
+        "left[0] ~ left[19]?   {}",
+        db.get_cluster(left[0]) == db.get_cluster(left[19])
+    );
+    println!(
+        "left[0] ~ right[0]?   {}",
+        db.get_cluster(left[0]) == db.get_cluster(right[0])
+    );
+    println!("outlier is core?      {}", db.is_core(outlier));
+
+    // 4. Dense labels (noise = -1) for downstream metrics.
+    let mut ids = left.clone();
+    ids.extend(&right);
+    ids.push(outlier);
+    let labels = db.labels_for(&ids);
+    println!("labels: {labels:?}");
+
+    // 5. DeletePoint: remove the left blob entirely.
+    for p in left {
+        db.delete_point(p);
+    }
+    println!("after deletes: points={} cores={}", db.num_points(), db.num_core_points());
+
+    // 6. Machine-checked Theorem 2: G[C] is a spanning forest of H.
+    db.verify().expect("invariants hold");
+    println!("invariants OK — quickstart done");
+}

@@ -1,0 +1,85 @@
+//! Sliding-window clustering over a drifting stream — the workload where
+//! deletions are as frequent as insertions (each arrival evicts the oldest
+//! record once the window fills), i.e. the regime where the paper's
+//! `O(d log³n + log⁴n)` DeletePoint matters most.
+//!
+//! The generating distribution drifts: cluster centers move over time, and
+//! the report shows the window's clustering tracking the drift while a
+//! whole-history clustering would smear.
+//!
+//! ```bash
+//! cargo run --release --example sliding_window
+//! ```
+
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::util::rng::Rng;
+use std::collections::VecDeque;
+
+fn main() {
+    let dim = 4;
+    let clusters = 3;
+    let window = 3000;
+    let total = 30_000;
+    let cfg = DbscanConfig {
+        k: 8,
+        t: 10,
+        eps: 0.6,
+        dim,
+        ..Default::default()
+    };
+    let mut db = DynamicDbscan::new(cfg, 11);
+    let mut rng = Rng::new(4);
+    let mut live: VecDeque<(u64, i64)> = VecDeque::new(); // (id, truth)
+
+    let t0 = std::time::Instant::now();
+    for step in 0..total {
+        // drifting centers: rotate slowly with time
+        let phase = step as f64 / total as f64 * std::f64::consts::PI;
+        let c = rng.below(clusters) as usize;
+        let center: Vec<f64> = (0..dim)
+            .map(|j| 6.0 * ((c as f64 * 2.1) + phase + j as f64).sin())
+            .collect();
+        let p: Vec<f32> = center
+            .iter()
+            .map(|&x| (x + 0.25 * rng.normal()) as f32)
+            .collect();
+        let id = db.add_point(&p);
+        live.push_back((id, c as i64));
+        if live.len() > window {
+            let (old, _) = live.pop_front().unwrap();
+            db.delete_point(old);
+        }
+
+        if step % 5000 == 4999 {
+            let ids: Vec<u64> = live.iter().map(|&(i, _)| i).collect();
+            let truth: Vec<i64> = live.iter().map(|&(_, t)| t).collect();
+            let pred = db.labels_for(&ids);
+            let ari = adjusted_rand_index(&truth, &pred);
+            println!(
+                "step {:>6}: live={} cores={} window-ARI={:.3}",
+                step + 1,
+                db.num_points(),
+                db.num_core_points(),
+                ari
+            );
+            assert!(ari > 0.5, "window clustering lost the drifting clusters");
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "\n{} updates ({} inserts + {} deletes) in {:.2}s = {:.0} updates/s",
+        total * 2 - window,
+        total,
+        total - window,
+        secs,
+        (total * 2 - window) as f64 / secs
+    );
+    let st = db.repair_stats();
+    println!(
+        "replacement searches: {} (promoted {}, visited {} vertices)",
+        st.searches, st.replacements, st.visited
+    );
+    db.verify().expect("invariants hold at end");
+    println!("invariants OK");
+}

@@ -1,0 +1,60 @@
+//! Figure-2-style streaming run: the blobs workload through the full L3
+//! coordinator (hash stage → apply stage, bounded channels), with per-batch
+//! ARI/NMI snapshots and latency histograms — the paper's §5 experiment as
+//! a runnable example.
+//!
+//! ```bash
+//! cargo run --release --example streaming_blobs [-- scale seed]
+//! # paper size: cargo run --release --example streaming_blobs -- 1.0
+//! ```
+
+use dyn_dbscan::coordinator::driver::{
+    final_quality, stream_dataset, summarize, EngineKind,
+};
+use dyn_dbscan::data::stream::Order;
+use dyn_dbscan::data::synth::{load, PaperDataset};
+use dyn_dbscan::dbscan::DbscanConfig;
+use dyn_dbscan::experiments::{PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(42);
+
+    let ds = load(PaperDataset::Blobs, scale, seed);
+    println!(
+        "blobs stand-in: n={} d={} clusters={} (scale {scale})",
+        ds.n(),
+        ds.dim,
+        ds.num_clusters()
+    );
+    let cfg = DbscanConfig {
+        k: PAPER_K,
+        t: PAPER_T,
+        eps: PAPER_EPS,
+        dim: ds.dim,
+        ..Default::default()
+    };
+    let out = stream_dataset(
+        &ds,
+        cfg,
+        Order::Random,
+        PAPER_BATCH,
+        /*snapshot_every=*/ 5,
+        seed,
+        EngineKind::Native,
+    )
+    .expect("stream failed");
+
+    for r in &out.reports {
+        println!("{}", summarize(r));
+    }
+    let (ari, nmi) = final_quality(&ds, &out);
+    println!("\nfinal ARI={ari:.3} NMI={nmi:.3}");
+    println!("total apply time: {:.2}s", out.total_apply_s);
+    println!(
+        "throughput: {:.0} updates/s",
+        out.add_latency.count() as f64 / out.total_apply_s
+    );
+    println!("add latency:    {}", out.add_latency.summary());
+}

@@ -1,0 +1,181 @@
+"""AOT pipeline: lower every L2 model variant to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(``rust/src/runtime/``) loads ``artifacts/<name>.hlo.txt`` via
+``HloModuleProto::from_text_file``, compiles it on the PJRT CPU client and
+executes it from the L3 hot path. Python never runs at request time.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 crate links) rejects with
+``proto.id() <= INT_MAX``; the text parser reassigns ids and round-trips
+cleanly. Lowering goes stablehlo -> XlaComputation with ``return_tuple=True``
+(the Rust side unwraps with ``to_tuple1``).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only NAME] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Variant registry
+# ---------------------------------------------------------------------------
+
+# Dataset dims used across Table 1 after preprocessing (blobs=10, letter=16,
+# mnist/fashion/kddcup=20, covertype=54).
+HASH_DIMS = (10, 16, 20, 54)
+HASH_T = 10
+HASH_B = 1024
+
+DIST_DIMS = (10, 16, 20, 54)
+DIST_Q = 256
+DIST_M = 2048
+
+PROJECT_B, PROJECT_DIN, PROJECT_DOUT = 1024, 784, 20
+
+F32 = "f32"
+I32 = "i32"
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def variants(smoke: bool = False):
+    """Yield (name, fn, example_arg_specs, meta) for every artifact."""
+    out = []
+
+    def add_hash(d, t, b):
+        name = f"hash_d{d}_t{t}_b{b}"
+        fn = model.make_hash_model(t)
+        specs = (_spec((b, d)), _spec((t,)), _spec((1,)))
+        meta = {
+            "name": name,
+            "kind": "hash",
+            "d": d,
+            "t": t,
+            "b": b,
+            "inputs": [
+                {"shape": [b, d], "dtype": F32},
+                {"shape": [t], "dtype": F32},
+                {"shape": [1], "dtype": F32},
+            ],
+            "output": {"shape": [t, b, d], "dtype": I32},
+        }
+        out.append((name, fn, specs, meta))
+
+    def add_dist(d, q, m):
+        name = f"dist_d{d}_q{q}_m{m}"
+        specs = (_spec((q, d)), _spec((m, d)))
+        meta = {
+            "name": name,
+            "kind": "dist",
+            "d": d,
+            "q": q,
+            "m": m,
+            "inputs": [
+                {"shape": [q, d], "dtype": F32},
+                {"shape": [m, d], "dtype": F32},
+            ],
+            "output": {"shape": [q, m], "dtype": F32},
+        }
+        out.append((name, model.distance_model, specs, meta))
+
+    def add_project(b, din, dout):
+        name = f"project_b{b}_din{din}_dout{dout}"
+        specs = (_spec((b, din)), _spec((din, dout)))
+        meta = {
+            "name": name,
+            "kind": "project",
+            "b": b,
+            "din": din,
+            "dout": dout,
+            "inputs": [
+                {"shape": [b, din], "dtype": F32},
+                {"shape": [din, dout], "dtype": F32},
+            ],
+            "output": {"shape": [b, dout], "dtype": F32},
+        }
+        out.append((name, model.project_model, specs, meta))
+
+    if smoke:
+        # Tiny variants for fast pytest / cargo integration tests.
+        add_hash(4, 2, 128)
+        add_dist(4, 128, 128)
+        add_project(128, 8, 4)
+        return out
+
+    for d in HASH_DIMS:
+        add_hash(d, HASH_T, HASH_B)
+    for d in DIST_DIMS:
+        add_dist(d, DIST_Q, DIST_M)
+    add_project(PROJECT_B, PROJECT_DIN, PROJECT_DOUT)
+    # Smoke variants ship alongside the full set so tests never rebuild.
+    add_hash(4, 2, 128)
+    add_dist(4, 128, 128)
+    add_project(128, 8, 4)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build(out_dir: str, only: str | None = None, smoke: bool = False) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, fn, specs, meta in variants(smoke=smoke):
+        if only is not None and name != only:
+            continue
+        text = lower_variant(fn, specs)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["file"] = f"{name}.hlo.txt"
+        manifest.append(meta)
+        print(f"[aot] wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=2)
+    print(f"[aot] wrote manifest with {len(manifest)} artifacts")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build a single variant")
+    ap.add_argument(
+        "--smoke", action="store_true", help="only the tiny test variants"
+    )
+    args = ap.parse_args()
+    build(args.out_dir, only=args.only, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

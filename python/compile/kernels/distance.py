@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: tiled pairwise squared Euclidean distances.
+
+Computes ``D2[i, j] = || x[i] - y[j] ||^2`` for a query tile ``x`` of shape
+``(Bq, d)`` against a corpus tile ``y`` of shape ``(M, d)`` using the
+MXU-friendly decomposition
+
+    D2 = ||x||^2[:, None] + ||y||^2[None, :] - 2 * x @ y.T
+
+The exact-DBSCAN baseline (``rust/src/baselines/brute.rs``) consumes these
+tiles for its eps-range queries: Rust streams fixed-size corpus tiles through
+the compiled artifact and thresholds the result at ``eps^2``.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the output is tiled
+``(TILE, TILE) = (128, 128)`` so the ``x @ y.T`` contraction maps onto the
+128x128 systolic MXU; ``x`` and ``y`` tiles of shape ``(128, d)`` with
+d <= 64 fit comfortably in VMEM (3 * 128 * 64 * 4B = 96 KiB << 16 MiB).
+Under ``interpret=True`` we validate numerics only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _dist2_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...]
+    y = y_ref[...]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)          # (TILE, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T        # (1, TILE)
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    # Clamp tiny negatives produced by cancellation so downstream
+    # thresholding at eps^2 is safe.
+    o_ref[...] = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def pairwise_dist2(x, y, *, tile: int = TILE):
+    """Pairwise squared distances between two point tiles.
+
+    Args:
+      x: ``(Bq, d)`` float32, ``Bq`` a multiple of ``tile``.
+      y: ``(M, d)`` float32, ``M`` a multiple of ``tile``.
+
+    Returns:
+      ``(Bq, M)`` float32 squared distances.
+    """
+    bq, d = x.shape
+    m, d2 = y.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch {d} vs {d2}")
+    if bq % tile or m % tile:
+        raise ValueError(f"tile sizes must divide shapes: {bq}x{m} vs {tile}")
+    grid = (bq // tile, m // tile)
+    return pl.pallas_call(
+        _dist2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bq, m), jnp.float32),
+        interpret=True,
+    )(x, y)

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: grid-LSH quantizer (Definition 3 of the paper).
+
+For a point batch ``x`` of shape ``(B, d)``, a shift ``eta`` drawn uniformly
+from ``[0, 2eps]`` and ``inv_two_eps = 1/(2*eps)``, computes the integer grid
+coordinates
+
+    q[b, j] = floor((x[b, j] + eta) * inv_two_eps)            (int32)
+
+Two points share a hash bucket iff their coordinate rows are equal
+(the u128 bucket *key* is derived from the row on the Rust side so that the
+kernel stays purely numeric).
+
+TPU adaptation notes (see DESIGN.md §Hardware-Adaptation):
+  * the batch is tiled into ``(ROW_BLOCK, d)`` VMEM blocks via ``BlockSpec``;
+    with d <= 64 each row occupies a fraction of a VPU lane tile, so the
+    kernel is VPU-bound (no MXU use) and the only schedule decision is the
+    HBM->VMEM row blocking expressed by the index map;
+  * ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+    custom-calls, so correctness is validated through the interpreter and the
+    same HLO is what the Rust runtime loads.
+
+IMPORTANT numerical contract: the expression is ``(x + eta) * inv_two_eps``
+(an add followed by a multiply, *not* a division, *not* an FMA-rewritten
+form). The Rust native hashing engine evaluates the identical expression so
+that artifact and native paths agree bit-for-bit on non-boundary inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM block. 128 matches the TPU lane count; on CPU interpret mode
+# it is simply the batch tile.
+ROW_BLOCK = 128
+
+
+def _quantize_kernel(x_ref, eta_ref, inv_ref, o_ref):
+    """Pallas kernel body: one (ROW_BLOCK, d) tile."""
+    x = x_ref[...]
+    eta = eta_ref[0]
+    inv = inv_ref[0]
+    o_ref[...] = jnp.floor((x + eta) * inv).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def quantize(x, eta, inv_two_eps, *, row_block: int = ROW_BLOCK):
+    """Quantize a batch of points to integer grid coordinates.
+
+    Args:
+      x: ``(B, d)`` float32 array, ``B`` a multiple of ``row_block``.
+      eta: ``(1,)`` float32 — the hash function's shift.
+      inv_two_eps: ``(1,)`` float32 — ``1 / (2 * eps)``.
+      row_block: rows per block (static).
+
+    Returns:
+      ``(B, d)`` int32 grid coordinates.
+    """
+    b, d = x.shape
+    if b % row_block != 0:
+        raise ValueError(f"batch {b} not a multiple of row block {row_block}")
+    grid = (b // row_block,)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((row_block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.int32),
+        interpret=True,
+    )(x, eta, inv_two_eps)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference implementation here written in
+the most direct jnp form possible. pytest (with hypothesis sweeps over
+shapes) asserts ``assert_allclose(kernel(...), ref(...))``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, eta, inv_two_eps):
+    """floor((x + eta) * inv_two_eps) as int32. Shapes: x (B,d); eta, inv (1,)."""
+    return jnp.floor((x + eta[0]) * inv_two_eps[0]).astype(jnp.int32)
+
+
+def hash_model_ref(x, etas, inv_two_eps):
+    """All-t quantization: (B,d) x (T,) -> (T,B,d) int32."""
+    return jnp.floor(
+        (x[None, :, :] + etas[:, None, None]) * inv_two_eps[0]
+    ).astype(jnp.int32)
+
+
+def pairwise_dist2_ref(x, y):
+    """Exact O(Bq*M*d) squared distances via explicit differences."""
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def project_ref(x, w):
+    """PCA-apply / linear projection oracle."""
+    return jnp.dot(x, w)

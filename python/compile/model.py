@@ -1,0 +1,51 @@
+"""L2: JAX compute graphs consumed by the Rust runtime.
+
+Three model families, each lowered AOT (by ``aot.py``) to HLO text for a set
+of fixed shape variants and executed from ``rust/src/runtime/``:
+
+  * ``hash_model``    — the t-way grid-LSH quantizer (calls the L1 Pallas
+                        kernel once per hash function; static unroll over t).
+  * ``distance_model``— tiled pairwise squared distances (L1 Pallas kernel).
+  * ``project_model`` — linear projection (PCA-apply) used by the data
+                        preprocessing path for the MNIST-like datasets.
+
+Conventions:
+  * every model returns a 1-tuple so the HLO entry computation has a tuple
+    root (the Rust side unwraps with ``to_tuple1``);
+  * all shapes are static; the Rust engines pad batches to the compiled
+    batch size and slice the results.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import distance as distance_kernel
+from .kernels import hash_kernel
+
+
+def make_hash_model(t: int):
+    """Return ``f(x[B,d], etas[t], inv_two_eps[1]) -> (coords[t,B,d] i32,)``.
+
+    Static unroll over the ``t`` hash functions — each iteration invokes the
+    L1 Pallas quantizer so the whole model lowers into a single HLO module.
+    """
+
+    def hash_model(x, etas, inv_two_eps):
+        outs = []
+        for i in range(t):
+            eta_i = jnp.reshape(etas[i], (1,))
+            outs.append(hash_kernel.quantize(x, eta_i, inv_two_eps))
+        return (jnp.stack(outs, axis=0),)
+
+    return hash_model
+
+
+def distance_model(x, y):
+    """``f(x[Bq,d], y[M,d]) -> (dist2[Bq,M] f32,)``."""
+    return (distance_kernel.pairwise_dist2(x, y),)
+
+
+def project_model(x, w):
+    """``f(x[B,Din], w[Din,Dout]) -> (proj[B,Dout] f32,)``."""
+    return (jnp.dot(x, w),)

@@ -1,0 +1,38 @@
+"""AOT pipeline: lowering produces parseable HLO text + a coherent manifest."""
+
+import json
+import os
+
+from compile import aot
+
+
+def test_smoke_variants_lower(tmp_path):
+    manifest = aot.build(str(tmp_path), smoke=True)
+    names = {m["name"] for m in manifest}
+    assert "hash_d4_t2_b128" in names
+    assert "dist_d4_q128_m128" in names
+    for m in manifest:
+        path = tmp_path / m["file"]
+        text = path.read_text()
+        assert "ENTRY" in text, f"{m['name']}: no ENTRY computation"
+        assert "->" in text
+        # tuple root: aot lowers with return_tuple=True
+        assert text.count("parameter(") >= len(m["inputs"])
+    data = json.loads((tmp_path / "manifest.json").read_text())
+    assert len(data["artifacts"]) == len(manifest)
+
+
+def test_hash_artifact_shapes_in_text(tmp_path):
+    aot.build(str(tmp_path), only="hash_d4_t2_b128", smoke=True)
+    text = (tmp_path / "hash_d4_t2_b128.hlo.txt").read_text()
+    # output is (2,128,4) int32 inside a tuple
+    assert "s32[2,128,4]" in text.replace(" ", "")
+
+
+def test_variant_registry_full_set():
+    names = [m[0] for m in aot.variants(smoke=False)]
+    assert len(names) == len(set(names)), "duplicate variant names"
+    for d in aot.HASH_DIMS:
+        assert f"hash_d{d}_t{aot.HASH_T}_b{aot.HASH_B}" in names
+    for d in aot.DIST_DIMS:
+        assert f"dist_d{d}_q{aot.DIST_Q}_m{aot.DIST_M}" in names

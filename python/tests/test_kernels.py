@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (block-multiple batches, arbitrary small dims) and
+value regimes; numpy RNG seeds derive from hypothesis-drawn integers so every
+case is reproducible.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose, assert_array_equal
+
+import jax.numpy as jnp
+
+from compile.kernels import distance, hash_kernel, ref
+
+# ---------------------------------------------------------------------------
+# quantize (grid LSH)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.sampled_from([1, 2, 4]),
+    d=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    eps=st.floats(min_value=0.05, max_value=4.0),
+)
+def test_quantize_matches_ref(rows, d, seed, eps):
+    b = rows * hash_kernel.ROW_BLOCK
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d)).astype(np.float32) * 10.0
+    eta = rng.uniform(0.0, 2.0 * eps, size=(1,)).astype(np.float32)
+    inv = np.array([1.0 / (2.0 * eps)], dtype=np.float32)
+    got = hash_kernel.quantize(jnp.asarray(x), jnp.asarray(eta), jnp.asarray(inv))
+    want = ref.quantize_ref(jnp.asarray(x), jnp.asarray(eta), jnp.asarray(inv))
+    assert got.dtype == jnp.int32
+    assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_rejects_ragged_batch():
+    x = jnp.zeros((100, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        hash_kernel.quantize(x, jnp.zeros((1,)), jnp.ones((1,)))
+
+
+def test_quantize_translation_invariance():
+    """Shifting x by exactly 2*eps shifts every coordinate by exactly 1."""
+    rng = np.random.default_rng(0)
+    eps = 0.75
+    x = rng.normal(size=(128, 8)).astype(np.float32)
+    eta = np.array([0.3], dtype=np.float32)
+    inv = np.array([1.0 / (2 * eps)], dtype=np.float32)
+    a = hash_kernel.quantize(jnp.asarray(x), jnp.asarray(eta), jnp.asarray(inv))
+    # adding 2*eps*4 = 6.0 (exactly representable) shifts coords by 4
+    b = hash_kernel.quantize(
+        jnp.asarray(x + 4 * 2 * eps), jnp.asarray(eta), jnp.asarray(inv)
+    )
+    assert_array_equal(np.asarray(b), np.asarray(a) + 4)
+
+
+def test_quantize_bucket_width_lemma1():
+    """Lemma 1(2): equal hash row => L_inf distance <= 2*eps."""
+    rng = np.random.default_rng(7)
+    eps = 0.5
+    x = rng.uniform(-5, 5, size=(256, 6)).astype(np.float32)
+    eta = rng.uniform(0, 2 * eps, size=(1,)).astype(np.float32)
+    inv = np.array([1 / (2 * eps)], dtype=np.float32)
+    q = np.asarray(
+        hash_kernel.quantize(jnp.asarray(x), jnp.asarray(eta), jnp.asarray(inv))
+    )
+    # group rows by identical coords and check the diameter bound
+    buckets = {}
+    for i in range(x.shape[0]):
+        buckets.setdefault(tuple(q[i]), []).append(i)
+    for idxs in buckets.values():
+        pts = x[idxs]
+        linf = np.max(np.abs(pts[:, None, :] - pts[None, :, :]))
+        assert linf <= 2 * eps + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# pairwise_dist2
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    qt=st.sampled_from([1, 2]),
+    mt=st.sampled_from([1, 2, 3]),
+    d=st.integers(min_value=1, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dist2_matches_ref(qt, mt, d, seed):
+    bq, m = qt * distance.TILE, mt * distance.TILE
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(bq, d)).astype(np.float32)
+    y = rng.normal(size=(m, d)).astype(np.float32)
+    got = np.asarray(distance.pairwise_dist2(jnp.asarray(x), jnp.asarray(y)))
+    want = np.asarray(ref.pairwise_dist2_ref(jnp.asarray(x), jnp.asarray(y)))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dist2_self_diagonal_zero():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(128, 16)).astype(np.float32)
+    d2 = np.asarray(distance.pairwise_dist2(jnp.asarray(x), jnp.asarray(x)))
+    assert_allclose(np.diag(d2), np.zeros(128), atol=1e-3)
+    assert (d2 >= 0).all()
+
+
+def test_dist2_symmetry():
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(128, 12)).astype(np.float32)
+    y = rng.normal(size=(256, 12)).astype(np.float32)
+    a = np.asarray(distance.pairwise_dist2(jnp.asarray(x), jnp.asarray(y)))
+    b = np.asarray(distance.pairwise_dist2(jnp.asarray(y), jnp.asarray(x)))
+    assert_allclose(a, b.T, rtol=1e-4, atol=1e-4)
+
+
+def test_dist2_shape_validation():
+    with pytest.raises(ValueError):
+        distance.pairwise_dist2(
+            jnp.zeros((128, 3)), jnp.zeros((128, 4))
+        )
+    with pytest.raises(ValueError):
+        distance.pairwise_dist2(jnp.zeros((100, 3)), jnp.zeros((128, 3)))

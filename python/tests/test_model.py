@@ -1,0 +1,72 @@
+"""L2 correctness: model graphs vs oracles + shape contracts."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose, assert_array_equal
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(min_value=1, max_value=12),
+    d=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hash_model_matches_ref(t, d, seed):
+    b = 128
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, d)).astype(np.float32) * 3.0
+    etas = rng.uniform(0, 1.5, size=(t,)).astype(np.float32)
+    inv = np.array([1 / 1.5], dtype=np.float32)
+    fn = model.make_hash_model(t)
+    (got,) = fn(jnp.asarray(x), jnp.asarray(etas), jnp.asarray(inv))
+    want = ref.hash_model_ref(jnp.asarray(x), jnp.asarray(etas), jnp.asarray(inv))
+    assert got.shape == (t, b, d)
+    assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_distance_model_matches_ref():
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(128, 20)).astype(np.float32)
+    y = rng.normal(size=(256, 20)).astype(np.float32)
+    (got,) = model.distance_model(jnp.asarray(x), jnp.asarray(y))
+    want = ref.pairwise_dist2_ref(jnp.asarray(x), jnp.asarray(y))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_project_model_matches_ref():
+    rng = np.random.default_rng(12)
+    x = rng.normal(size=(64, 32)).astype(np.float32)
+    w = rng.normal(size=(32, 8)).astype(np.float32)
+    (got,) = model.project_model(jnp.asarray(x), jnp.asarray(w))
+    want = ref.project_ref(jnp.asarray(x), jnp.asarray(w))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_hash_model_collision_probability_lemma1():
+    """Lemma 1(1): Pr[h(x)=h(y)] >= 1 - ||x-y||_1 / (2 eps), empirically.
+
+    Uses the model over many independent etas (many 'hash functions') and
+    checks the empirical collision frequency dominates the bound.
+    """
+    eps = 1.0
+    t = 512
+    rng = np.random.default_rng(99)
+    x = np.zeros((128, 4), dtype=np.float32)
+    delta = rng.uniform(-0.2, 0.2, size=(128, 4)).astype(np.float32)
+    y = x + delta
+    etas = rng.uniform(0, 2 * eps, size=(t,)).astype(np.float32)
+    inv = np.array([1 / (2 * eps)], dtype=np.float32)
+    fn = model.make_hash_model(t)
+    (qx,) = fn(jnp.asarray(x), jnp.asarray(etas), jnp.asarray(inv))
+    (qy,) = fn(jnp.asarray(y), jnp.asarray(etas), jnp.asarray(inv))
+    qx, qy = np.asarray(qx), np.asarray(qy)
+    collide = (qx == qy).all(axis=2).mean(axis=0)  # per-point frequency
+    bound = 1.0 - np.abs(delta).sum(axis=1) / (2 * eps)
+    # allow 3-sigma slack on the empirical estimate
+    sigma = np.sqrt(bound * (1 - bound) / t + 1e-9)
+    assert (collide >= bound - 4 * sigma - 1e-3).all()

@@ -1,0 +1,142 @@
+//! Ablation A1: Euler-tour sequence backends — skip list (Tseng et al.,
+//! the paper's choice) vs treap (Henzinger–King) vs the naive DFS forest.
+//!
+//! Workloads: (i) random link/cut churn on n vertices, (ii) path build +
+//! teardown, (iii) root-query storms on large components — the three
+//! access patterns Algorithm 2 generates.
+//!
+//! ```bash
+//! cargo bench --bench bench_ett
+//! ```
+
+use dyn_dbscan::bench_harness::{bench, Table};
+use dyn_dbscan::ett::naive::NaiveForest;
+use dyn_dbscan::ett::{Forest, SkipForest, TreapForest};
+use dyn_dbscan::util::rng::Rng;
+
+fn churn<F: Forest>(f: &mut F, n: usize, ops: usize, seed: u64) -> u64 {
+    let vs: Vec<u32> = (0..n).map(|_| f.add_vertex()).collect();
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut acc = 0u64;
+    for _ in 0..ops {
+        match rng.below(10) {
+            0..=4 => {
+                let a = vs[rng.below_usize(n)];
+                let b = vs[rng.below_usize(n)];
+                if a != b && f.link(a, b) {
+                    edges.push((a, b));
+                }
+            }
+            5..=7 => {
+                if !edges.is_empty() {
+                    let i = rng.below_usize(edges.len());
+                    let (a, b) = edges.swap_remove(i);
+                    f.cut(a, b);
+                }
+            }
+            _ => {
+                acc ^= f.root(vs[rng.below_usize(n)]);
+            }
+        }
+    }
+    acc
+}
+
+fn path_cycle<F: Forest>(f: &mut F, n: usize) -> u64 {
+    let vs: Vec<u32> = (0..n).map(|_| f.add_vertex()).collect();
+    for w in vs.windows(2) {
+        f.link(w[0], w[1]);
+    }
+    let r = f.root(vs[n / 2]);
+    for w in vs.windows(2) {
+        f.cut(w[0], w[1]);
+    }
+    r
+}
+
+fn root_storm<F: Forest>(f: &mut F, n: usize, queries: usize, seed: u64) -> u64 {
+    let vs: Vec<u32> = (0..n).map(|_| f.add_vertex()).collect();
+    for w in vs.windows(2) {
+        f.link(w[0], w[1]);
+    }
+    let mut rng = Rng::new(seed);
+    let mut acc = 0u64;
+    for _ in 0..queries {
+        acc ^= f.root(vs[rng.below_usize(n)]);
+    }
+    acc
+}
+
+fn main() {
+    let mut table = Table::new(
+        "A1: Euler-tour backend ablation (mean s ± stderr)",
+        &["workload", "n", "skiplist", "treap", "naive"],
+    );
+    let runs = 5;
+    for &n in &[1_000usize, 10_000, 50_000] {
+        let ops = n * 4;
+        let s = bench("skip", 1, runs, || {
+            let mut f = SkipForest::new(1);
+            std::hint::black_box(churn(&mut f, n, ops, 7));
+        });
+        let t = bench("treap", 1, runs, || {
+            let mut f = TreapForest::new(1);
+            std::hint::black_box(churn(&mut f, n, ops, 7));
+        });
+        // naive is O(n) per op — only measure at the small size
+        let nv = if n <= 1_000 {
+            let m = bench("naive", 0, 2, || {
+                let mut f = NaiveForest::new();
+                std::hint::black_box(churn(&mut f, n, ops, 7));
+            });
+            m.fmt_seconds()
+        } else {
+            "-".to_string()
+        };
+        table.row(vec![
+            format!("churn x{ops}"),
+            n.to_string(),
+            s.fmt_seconds(),
+            t.fmt_seconds(),
+            nv,
+        ]);
+    }
+    for &n in &[10_000usize, 100_000] {
+        let s = bench("skip", 1, runs, || {
+            let mut f = SkipForest::new(1);
+            std::hint::black_box(path_cycle(&mut f, n));
+        });
+        let t = bench("treap", 1, runs, || {
+            let mut f = TreapForest::new(1);
+            std::hint::black_box(path_cycle(&mut f, n));
+        });
+        table.row(vec![
+            "path build+teardown".into(),
+            n.to_string(),
+            s.fmt_seconds(),
+            t.fmt_seconds(),
+            "-".into(),
+        ]);
+    }
+    for &n in &[100_000usize] {
+        let q = 1_000_000;
+        let s = bench("skip", 1, runs, || {
+            let mut f = SkipForest::new(1);
+            std::hint::black_box(root_storm(&mut f, n, q, 3));
+        });
+        let t = bench("treap", 1, runs, || {
+            let mut f = TreapForest::new(1);
+            std::hint::black_box(root_storm(&mut f, n, q, 3));
+        });
+        table.row(vec![
+            format!("root storm x{q}"),
+            n.to_string(),
+            s.fmt_seconds(),
+            t.fmt_seconds(),
+            "-".into(),
+        ]);
+    }
+    table.print();
+    dyn_dbscan::bench_harness::export_json(&table.to_json());
+}

@@ -1,0 +1,39 @@
+//! Bench target for **Figure 2** (blobs dataset):
+//!   (a) cumulative running time per batch;
+//!   (b) ARI per batch, random arrival order;
+//!   (c) ARI per batch, cluster-by-cluster arrival order.
+//!
+//! ```bash
+//! cargo bench --bench bench_fig2            # all three panels, SCALE=0.05
+//! cargo bench --bench bench_fig2 -- b c     # selected panels
+//! FULL=1 cargo bench --bench bench_fig2     # paper-size (n=200k)
+//! EXACT=1 cargo bench --bench bench_fig2    # include the O(n²) baseline
+//! ```
+//!
+//! Paper reference: (a) DyDBSCAN lowest curve, EMZ ~3x, sklearn ~7x at
+//! n=200k; (b) all ARI ≈ 1 under random order; (c) EMZFixedCore collapses
+//! while DyDBSCAN/EMZ stay ≈ 1.
+
+use dyn_dbscan::bench_harness::export_json;
+use dyn_dbscan::experiments::env_scale;
+use dyn_dbscan::experiments::fig2::{run_fig2, Panel};
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let panels: Vec<Panel> = if args.is_empty() {
+        vec![Panel::Time, Panel::AriRandom, Panel::AriClustered]
+    } else {
+        args.iter().filter_map(|a| Panel::from_name(a)).collect()
+    };
+    let scale = env_scale();
+    let include_exact = std::env::var("EXACT").map(|v| v == "1").unwrap_or(false)
+        || scale <= 0.05;
+    for panel in panels {
+        let series = run_fig2(panel, scale, 42, include_exact).expect("fig2");
+        series.print();
+        export_json(&series.to_json());
+    }
+}

@@ -1,0 +1,68 @@
+//! Ablation A2: hashing engines — native scalar Rust vs the AOT
+//! Pallas/XLA artifact through PJRT, on identical inputs, across the
+//! Table-1 dimensionalities.
+//!
+//! ```bash
+//! cargo bench --bench bench_hashing
+//! ```
+//!
+//! Expected shape: the XLA path pays a per-dispatch cost (~100 µs on CPU
+//! PJRT) amortized over the compiled batch of 1024 points; the native path
+//! has no dispatch cost. On CPU the native path wins; the artifact path
+//! exists to validate the three-layer architecture and to model the TPU
+//! deployment where the quantizer rides along with larger fused graphs.
+
+use dyn_dbscan::bench_harness::{bench, Table};
+use dyn_dbscan::lsh::GridHasher;
+use dyn_dbscan::runtime::engines::{HashingEngine, NativeHashing, XlaHashing};
+use dyn_dbscan::runtime::Runtime;
+use dyn_dbscan::util::rng::Rng;
+
+fn main() {
+    let dir = Runtime::default_dir();
+    let have_xla = Runtime::available(&dir);
+    if !have_xla {
+        eprintln!("warning: no artifacts at {dir:?}; run `make artifacts` for the XLA column");
+    }
+    let mut table = Table::new(
+        "A2: hashing engine ablation (points/s, batch=1024, t=10)",
+        &["d", "native pts/s", "xla pts/s", "xla/native"],
+    );
+    let n = 16 * 1024;
+    let runs = 5;
+    for &d in &[10usize, 16, 20, 54] {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 8.0 - 4.0).collect();
+        let hasher = GridHasher::new(10, d, 0.75, 42);
+
+        let mut native = NativeHashing::new(hasher.clone());
+        let mn = bench("native", 1, runs, || {
+            std::hint::black_box(native.keys_batch(&xs, n).unwrap());
+        });
+        let native_pps = n as f64 / mn.mean_s;
+
+        let (xla_pps, ratio) = if have_xla {
+            let rt = Runtime::new(&dir).expect("runtime");
+            match XlaHashing::new(rt, hasher.clone()) {
+                Ok(mut xla) => {
+                    let mx = bench("xla", 1, runs, || {
+                        std::hint::black_box(xla.keys_batch(&xs, n).unwrap());
+                    });
+                    let pps = n as f64 / mx.mean_s;
+                    (format!("{pps:.0}"), format!("{:.3}", pps / native_pps))
+                }
+                Err(e) => (format!("n/a ({e})"), "-".into()),
+            }
+        } else {
+            ("n/a".into(), "-".into())
+        };
+        table.row(vec![
+            d.to_string(),
+            format!("{native_pps:.0}"),
+            xla_pps,
+            ratio,
+        ]);
+    }
+    table.print();
+    dyn_dbscan::bench_harness::export_json(&table.to_json());
+}

@@ -1,0 +1,129 @@
+//! Ablation A3: per-operation update cost vs n — the empirical check of
+//! Theorem 1's `O(d log³n + log⁴n)` claim, plus the eager-attach extension
+//! and repair-mode overhead.
+//!
+//! For each n the structure is pre-filled with n points, then the marginal
+//! cost of 2000 further inserts and 2000 deletes is measured. A polylog
+//! bound predicts near-flat per-op times across decades of n (vs the
+//! linear growth a per-batch static rebuild exhibits).
+//!
+//! ```bash
+//! cargo bench --bench bench_updates
+//! ```
+
+use dyn_dbscan::bench_harness::Table;
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan, PaperConn, RepairConn};
+use dyn_dbscan::ett::SkipForest;
+use dyn_dbscan::util::rng::Rng;
+
+const DIM: usize = 10;
+
+fn gen_point(rng: &mut Rng) -> Vec<f32> {
+    let c = rng.below(10) as f64 * 1.2;
+    (0..DIM).map(|_| (c + rng.uniform(-0.6, 0.6)) as f32).collect()
+}
+
+struct Probe {
+    add_us: f64,
+    del_us: f64,
+    searches: u64,
+    visited: u64,
+}
+
+fn probe_mode(n: usize, eager: bool, paper_exact: bool, seed: u64) -> Probe {
+    let cfg = DbscanConfig {
+        k: 10,
+        t: 10,
+        eps: 0.75,
+        dim: DIM,
+        eager_attach: eager,
+    };
+    macro_rules! run {
+        ($db:expr) => {{
+            let mut db = $db;
+            let mut rng = Rng::new(seed);
+            let mut live: Vec<u64> = Vec::with_capacity(n + 4000);
+            for _ in 0..n {
+                live.push(db.add_point(&gen_point(&mut rng)));
+            }
+            let probes = 2000;
+            let t0 = std::time::Instant::now();
+            let mut added = Vec::with_capacity(probes);
+            for _ in 0..probes {
+                added.push(db.add_point(&gen_point(&mut rng)));
+            }
+            let add_us = t0.elapsed().as_secs_f64() * 1e6 / probes as f64;
+            // delete a random mix of old and new points
+            let t0 = std::time::Instant::now();
+            for i in 0..probes {
+                let p = if i % 2 == 0 {
+                    added.pop().unwrap()
+                } else {
+                    let j = rng.below_usize(live.len());
+                    live.swap_remove(j)
+                };
+                db.delete_point(p);
+            }
+            let del_us = t0.elapsed().as_secs_f64() * 1e6 / probes as f64;
+            let st = db.repair_stats();
+            Probe { add_us, del_us, searches: st.searches, visited: st.visited }
+        }};
+    }
+    if paper_exact {
+        run!(DynamicDbscan::with_conn(
+            cfg,
+            seed,
+            PaperConn::new(SkipForest::new(seed ^ 1))
+        ))
+    } else {
+        run!(DynamicDbscan::with_conn(
+            cfg,
+            seed,
+            RepairConn::new(SkipForest::new(seed ^ 1))
+        ))
+    }
+}
+
+fn main() {
+    let mut table = Table::new(
+        "A3: per-op update cost vs n (µs/op; polylog ⇒ near-flat)",
+        &[
+            "n",
+            "add µs",
+            "del µs",
+            "add µs (eager)",
+            "del µs (eager)",
+            "add µs (paper-exact)",
+            "repl searches",
+            "visited/search",
+        ],
+    );
+    let quick = std::env::var("FULL").map(|v| v != "1").unwrap_or(true);
+    let sizes: &[usize] = if quick {
+        &[1_000, 4_000, 16_000, 64_000]
+    } else {
+        &[1_000, 4_000, 16_000, 64_000, 200_000]
+    };
+    for &n in sizes {
+        let base = probe_mode(n, false, false, 42);
+        let eager = probe_mode(n, true, false, 42);
+        let paper = probe_mode(n, false, true, 42);
+        let vps = if base.searches > 0 {
+            format!("{:.1}", base.visited as f64 / base.searches as f64)
+        } else {
+            "0".into()
+        };
+        table.row(vec![
+            n.to_string(),
+            format!("{:.1}", base.add_us),
+            format!("{:.1}", base.del_us),
+            format!("{:.1}", eager.add_us),
+            format!("{:.1}", eager.del_us),
+            format!("{:.1}", paper.add_us),
+            base.searches.to_string(),
+            vps,
+        ]);
+    }
+    table.print();
+    dyn_dbscan::bench_harness::export_json(&table.to_json());
+}

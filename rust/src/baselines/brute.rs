@@ -1,0 +1,253 @@
+//! Exact DBSCAN (Ester et al. 1996) with scikit-learn semantics — the
+//! paper's "Sklearn" baseline.
+//!
+//! * core point: at least `min_pts` points within distance `eps`
+//!   (**including itself**, the sklearn convention);
+//! * clusters: BFS over ε-reachability from core points; border points join
+//!   the first cluster that reaches them; the rest is noise (−1).
+//!
+//! Range queries run through a [`PairwiseDistance`] provider so the same
+//! algorithm can use either the blocked native implementation or the AOT
+//! Pallas distance-tile artifact (`runtime::engines::XlaDistance`). Cost is
+//! `O(n²·d)` — the quadratic wall the paper's algorithm removes.
+
+/// Tile-oriented pairwise squared-distance provider.
+pub trait PairwiseDistance {
+    /// Row-major `nq × nc` squared distances between `q` (`nq × d`) and
+    /// `c` (`nc × d`), written into `out` (len `nq * nc`).
+    fn dist2(&mut self, q: &[f32], nq: usize, c: &[f32], nc: usize, d: usize, out: &mut [f32]);
+}
+
+/// Blocked native implementation (cache-friendly `‖x‖²+‖y‖²−2x·y`).
+#[derive(Default)]
+pub struct NativeDistance;
+
+impl PairwiseDistance for NativeDistance {
+    fn dist2(
+        &mut self,
+        q: &[f32],
+        nq: usize,
+        c: &[f32],
+        nc: usize,
+        d: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(q.len(), nq * d);
+        debug_assert_eq!(c.len(), nc * d);
+        debug_assert_eq!(out.len(), nq * nc);
+        let qn: Vec<f32> = (0..nq)
+            .map(|i| q[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+            .collect();
+        let cn: Vec<f32> = (0..nc)
+            .map(|j| c[j * d..(j + 1) * d].iter().map(|v| v * v).sum())
+            .collect();
+        for i in 0..nq {
+            let qi = &q[i * d..(i + 1) * d];
+            let row = &mut out[i * nc..(i + 1) * nc];
+            for (j, r) in row.iter_mut().enumerate() {
+                let cj = &c[j * d..(j + 1) * d];
+                let mut dot = 0.0f32;
+                for k in 0..d {
+                    dot += qi[k] * cj[k];
+                }
+                *r = (qn[i] + cn[j] - 2.0 * dot).max(0.0);
+            }
+        }
+    }
+}
+
+/// Query tile size (matches the AOT `dist_*_q256_*` artifacts).
+pub const QUERY_TILE: usize = 256;
+/// Corpus tile size (matches the AOT `dist_*_m2048` artifacts).
+pub const CORPUS_TILE: usize = 2048;
+
+pub struct BruteDbscan {
+    pub eps: f32,
+    pub min_pts: usize,
+}
+
+impl BruteDbscan {
+    pub fn new(eps: f32, min_pts: usize) -> Self {
+        BruteDbscan { eps, min_pts }
+    }
+
+    /// Neighbor lists within eps for all points (tile-blocked).
+    fn neighbors(
+        &self,
+        xs: &[f32],
+        n: usize,
+        d: usize,
+        engine: &mut dyn PairwiseDistance,
+    ) -> Vec<Vec<u32>> {
+        let eps2 = self.eps * self.eps;
+        let mut nbrs: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut tile = vec![0.0f32; QUERY_TILE * CORPUS_TILE];
+        let mut qi = 0;
+        while qi < n {
+            let nq = (n - qi).min(QUERY_TILE);
+            let q = &xs[qi * d..(qi + nq) * d];
+            let mut cj = 0;
+            while cj < n {
+                let nc = (n - cj).min(CORPUS_TILE);
+                let c = &xs[cj * d..(cj + nc) * d];
+                let out = &mut tile[..nq * nc];
+                engine.dist2(q, nq, c, nc, d, out);
+                for a in 0..nq {
+                    let row = &out[a * nc..(a + 1) * nc];
+                    let list = &mut nbrs[qi + a];
+                    for (b, &v) in row.iter().enumerate() {
+                        if v <= eps2 {
+                            list.push((cj + b) as u32);
+                        }
+                    }
+                }
+                cj += nc;
+            }
+            qi += nq;
+        }
+        nbrs
+    }
+
+    /// Cluster `n` points; returns labels (−1 = noise).
+    pub fn cluster(
+        &self,
+        xs: &[f32],
+        n: usize,
+        d: usize,
+        engine: &mut dyn PairwiseDistance,
+    ) -> Vec<i64> {
+        let nbrs = self.neighbors(xs, n, d, engine);
+        let is_core: Vec<bool> =
+            nbrs.iter().map(|l| l.len() >= self.min_pts).collect();
+        let mut labels = vec![-1i64; n];
+        let mut cluster = 0i64;
+        let mut queue = std::collections::VecDeque::new();
+        for s in 0..n {
+            if !is_core[s] || labels[s] != -1 {
+                continue;
+            }
+            labels[s] = cluster;
+            queue.push_back(s);
+            while let Some(x) = queue.pop_front() {
+                if !is_core[x] {
+                    continue; // border: claimed but not expanded
+                }
+                for &y in &nbrs[x] {
+                    let y = y as usize;
+                    if labels[y] == -1 {
+                        labels[y] = cluster;
+                        if is_core[y] {
+                            queue.push_back(y);
+                        }
+                    }
+                }
+            }
+            cluster += 1;
+        }
+        labels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{make_blobs, BlobsConfig};
+    use crate::metrics::adjusted_rand_index;
+
+    /// O(n²) literal reference (no tiling) for cross-checking the blocked
+    /// implementation.
+    fn naive_labels(xs: &[f32], n: usize, d: usize, eps: f32, k: usize) -> Vec<i64> {
+        let eps2 = eps * eps;
+        let dist2 = |a: usize, b: usize| -> f32 {
+            (0..d).map(|j| (xs[a * d + j] - xs[b * d + j]).powi(2)).sum()
+        };
+        let nbrs: Vec<Vec<usize>> = (0..n)
+            .map(|i| (0..n).filter(|&j| dist2(i, j) <= eps2).collect())
+            .collect();
+        let is_core: Vec<bool> = nbrs.iter().map(|l| l.len() >= k).collect();
+        let mut labels = vec![-1i64; n];
+        let mut cl = 0;
+        for s in 0..n {
+            if !is_core[s] || labels[s] != -1 {
+                continue;
+            }
+            let mut stack = vec![s];
+            labels[s] = cl;
+            while let Some(x) = stack.pop() {
+                if !is_core[x] {
+                    continue;
+                }
+                for &y in &nbrs[x] {
+                    if labels[y] == -1 {
+                        labels[y] = cl;
+                        if is_core[y] {
+                            stack.push(y);
+                        }
+                    }
+                }
+            }
+            cl += 1;
+        }
+        labels
+    }
+
+    #[test]
+    fn matches_naive_reference() {
+        use crate::util::proptest::{run_prop, Gen};
+        run_prop("brute matches naive", 25, |g: &mut Gen| {
+            let n = g.usize_in(5..=150);
+            let d = g.usize_in(1..=4);
+            let xs: Vec<f32> = (0..n * d)
+                .map(|_| (g.f64_in(0.0, 4.0).floor() + g.f64_in(-0.15, 0.15)) as f32)
+                .collect();
+            let eps = g.f64_in(0.2, 0.8) as f32;
+            let k = g.usize_in(2..=6);
+            let got =
+                BruteDbscan::new(eps, k).cluster(&xs, n, d, &mut NativeDistance);
+            let want = naive_labels(&xs, n, d, eps, k);
+            // identical partitions up to renaming + identical noise set
+            assert_eq!(
+                adjusted_rand_index(&want, &got),
+                1.0,
+                "partitions differ"
+            );
+            for i in 0..n {
+                assert_eq!(got[i] == -1, want[i] == -1, "noise mismatch at {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn tile_boundaries_exact() {
+        // n > QUERY_TILE forces multiple tiles
+        let n = QUERY_TILE + 37;
+        let xs: Vec<f32> = (0..n).map(|i| (i / 8) as f32 * 10.0).collect();
+        let labels =
+            BruteDbscan::new(0.5, 4).cluster(&xs, n, 1, &mut NativeDistance);
+        let want = naive_labels(&xs, n, 1, 0.5, 4);
+        assert_eq!(adjusted_rand_index(&want, &labels), 1.0);
+    }
+
+    #[test]
+    fn blobs_quality() {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 600,
+                dim: 3,
+                clusters: 3,
+                std: 0.25,
+                center_box: 15.0,
+                weights: vec![],
+            },
+            21,
+        );
+        let labels = BruteDbscan::new(1.0, 6).cluster(
+            &ds.xs,
+            ds.n(),
+            ds.dim,
+            &mut NativeDistance,
+        );
+        let ari = adjusted_rand_index(&ds.labels, &labels);
+        assert!(ari > 0.98, "ARI {ari}");
+    }
+}

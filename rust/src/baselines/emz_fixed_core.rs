@@ -1,0 +1,154 @@
+//! EMZFixedCore (paper §5, "Comparison with a fixed core point set"):
+//! run EMZ on the initial batch, then **freeze the core set** — every
+//! subsequent point is treated as non-core and assigned to the cluster of
+//! the first frozen core it collides with under any hash function.
+//!
+//! Cheap (O(t·d) per arrival, no graph updates) but, as Figure 2(c) shows,
+//! it cannot represent clusters that appear after the initial batch —
+//! the failure mode `DynamicDbscan` fixes.
+
+use rustc_hash::FxHashMap;
+
+use crate::lsh::BucketKey;
+
+use super::emz::{Emz, EmzConfig, EmzResult};
+
+pub struct EmzFixedCore {
+    emz: Emz,
+    /// (hash index 1..=t, bucket key) → cluster label of a core in there
+    core_buckets: FxHashMap<(usize, BucketKey), i64>,
+    /// labels of the initial batch
+    pub initial_labels: Vec<i64>,
+    pub num_clusters: usize,
+    scratch: Vec<i32>,
+}
+
+impl EmzFixedCore {
+    /// Fit on the initial batch (row-major xs, n points).
+    pub fn fit_initial(cfg: EmzConfig, seed: u64, xs: &[f32], n: usize) -> Self {
+        let emz = Emz::new(cfg, seed);
+        let EmzResult { labels, is_core, num_clusters } = emz.cluster(xs, n);
+        let d = emz.cfg.dim;
+        let mut core_buckets = FxHashMap::default();
+        let mut scratch = Vec::new();
+        for i in 0..n {
+            if is_core[i] {
+                let keys = emz.keys(&xs[i * d..(i + 1) * d], &mut scratch);
+                for (j, &kj) in keys.iter().enumerate().skip(1) {
+                    core_buckets.entry((j, kj)).or_insert(labels[i]);
+                }
+            }
+        }
+        EmzFixedCore {
+            emz,
+            core_buckets,
+            initial_labels: labels,
+            num_clusters,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Label one arriving point: the cluster of the first frozen core it
+    /// collides with, else noise (−1).
+    pub fn assign(&mut self, x: &[f32]) -> i64 {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let keys = self.emz.keys(x, &mut scratch);
+        self.scratch = scratch;
+        for (j, &kj) in keys.iter().enumerate().skip(1) {
+            if let Some(&l) = self.core_buckets.get(&(j, kj)) {
+                return l;
+            }
+        }
+        -1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{make_blobs, BlobsConfig};
+    use crate::metrics::adjusted_rand_index;
+
+    fn cfg(dim: usize) -> EmzConfig {
+        EmzConfig { k: 8, t: 10, eps: 0.75, dim }
+    }
+
+    #[test]
+    fn random_order_works_cluster_order_fails() {
+        // The Figure-2 phenomenon in miniature: with random arrivals the
+        // initial batch samples every cluster, so assignments stay good;
+        // cluster-by-cluster arrivals leave later clusters unrepresented.
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 3000,
+                dim: 4,
+                clusters: 5,
+                std: 0.3,
+                center_box: 20.0,
+                weights: vec![],
+            },
+            3,
+        );
+        let n0 = 600;
+        let d = ds.dim;
+
+        // random order: initial batch = random sample
+        let mut order: Vec<usize> = (0..ds.n()).collect();
+        crate::util::rng::Rng::new(5).shuffle(&mut order);
+        let mut xs0 = Vec::new();
+        for &i in &order[..n0] {
+            xs0.extend_from_slice(ds.point(i));
+        }
+        let mut fc = EmzFixedCore::fit_initial(cfg(d), 11, &xs0, n0);
+        let mut pred = vec![0i64; ds.n()];
+        let mut truth = vec![0i64; ds.n()];
+        for (pos, &i) in order.iter().enumerate() {
+            truth[pos] = ds.labels[i];
+            pred[pos] = if pos < n0 {
+                fc.initial_labels[pos]
+            } else {
+                fc.assign(ds.point(i))
+            };
+        }
+        let ari_random = adjusted_rand_index(&truth, &pred);
+
+        // cluster-by-cluster: initial batch sees only cluster 0
+        let mut order2: Vec<usize> = (0..ds.n()).collect();
+        order2.sort_by_key(|&i| ds.labels[i]);
+        let mut xs0b = Vec::new();
+        for &i in &order2[..n0] {
+            xs0b.extend_from_slice(ds.point(i));
+        }
+        let mut fc2 = EmzFixedCore::fit_initial(cfg(d), 11, &xs0b, n0);
+        let mut pred2 = vec![0i64; ds.n()];
+        let mut truth2 = vec![0i64; ds.n()];
+        for (pos, &i) in order2.iter().enumerate() {
+            truth2[pos] = ds.labels[i];
+            pred2[pos] = if pos < n0 {
+                fc2.initial_labels[pos]
+            } else {
+                fc2.assign(ds.point(i))
+            };
+        }
+        let ari_cluster = adjusted_rand_index(&truth2, &pred2);
+
+        assert!(ari_random > 0.9, "random-order ARI {ari_random}");
+        assert!(
+            ari_cluster < ari_random - 0.2,
+            "cluster-order ARI {ari_cluster} should collapse vs {ari_random}"
+        );
+    }
+
+    #[test]
+    fn unseen_region_is_noise() {
+        let xs0: Vec<f32> = (0..20).map(|i| (i % 5) as f32 * 0.01).collect();
+        let mut fc = EmzFixedCore::fit_initial(
+            EmzConfig { k: 5, t: 4, eps: 0.5, dim: 1 },
+            1,
+            &xs0,
+            20,
+        );
+        assert_eq!(fc.assign(&[500.0]), -1);
+        assert!(fc.assign(&[0.02]) >= 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Baseline algorithms the paper compares against (§5):
+//!
+//! * [`emz`] — the static near-linear-time DBSCAN of Esfandiari, Mirrokni &
+//!   Zhong (AAAI'21), re-run from scratch after every batch (the paper's
+//!   "EMZ" rows/curves);
+//! * [`emz_fixed_core`] — the paper's own EMZFixedCore variant: EMZ on the
+//!   first batch, core set frozen afterwards;
+//! * [`brute`] — exact DBSCAN with sklearn semantics (the paper's "Sklearn"
+//!   rows), range queries via pairwise-distance tiles (native or the AOT
+//!   Pallas artifact);
+//! * [`unionfind`] — shared connectivity substrate.
+
+pub mod brute;
+pub mod emz;
+pub mod emz_fixed_core;
+pub mod unionfind;

@@ -1,0 +1,92 @@
+//! Union-Find (disjoint sets) with path halving and union by size.
+
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+    components: usize,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        UnionFind {
+            parent: (0..n as u32).collect(),
+            size: vec![1; n],
+            components: n,
+        }
+    }
+
+    pub fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] as usize != x {
+            let gp = self.parent[self.parent[x] as usize];
+            self.parent[x] = gp; // path halving
+            x = gp as usize;
+        }
+        x
+    }
+
+    /// Returns true if the two sets were merged (false if already joined).
+    pub fn union(&mut self, a: usize, b: usize) -> bool {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        if self.size[ra] < self.size[rb] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb] = ra as u32;
+        self.size[ra] += self.size[rb];
+        self.components -= 1;
+        true
+    }
+
+    pub fn same(&mut self, a: usize, b: usize) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    pub fn component_size(&mut self, a: usize) -> usize {
+        let r = self.find(a);
+        self.size[r] as usize
+    }
+
+    pub fn num_components(&self) -> usize {
+        self.components
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_unions() {
+        let mut uf = UnionFind::new(6);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(2, 3));
+        assert!(!uf.union(1, 0));
+        assert!(uf.union(1, 2));
+        assert!(uf.same(0, 3));
+        assert!(!uf.same(0, 4));
+        assert_eq!(uf.component_size(3), 4);
+        assert_eq!(uf.num_components(), 3); // {0,1,2,3}, {4}, {5}
+    }
+
+    #[test]
+    fn transitive_chain() {
+        let n = 1000;
+        let mut uf = UnionFind::new(n);
+        for i in 1..n {
+            uf.union(i - 1, i);
+        }
+        assert_eq!(uf.num_components(), 1);
+        assert!(uf.same(0, n - 1));
+        assert_eq!(uf.component_size(42), n);
+    }
+}

@@ -1,0 +1,242 @@
+//! Benchmark harness (criterion is unavailable offline): timed runs with
+//! warmup, mean ± stderr aggregation, aligned table / CSV-ish series
+//! printing, and JSON export for EXPERIMENTS.md bookkeeping.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_s: f64,
+    pub stderr_s: f64,
+    pub runs: usize,
+}
+
+impl Measurement {
+    pub fn fmt_seconds(&self) -> String {
+        format!("{:.2}±{:.3}", self.mean_s, self.stderr_s)
+    }
+}
+
+/// Time one invocation of `f` in seconds.
+pub fn time_once<T>(mut f: impl FnMut() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let out = f();
+    (t0.elapsed().as_secs_f64(), out)
+}
+
+/// Run `f` `runs` times (after `warmup` unmeasured runs); mean ± stderr.
+pub fn bench(name: &str, warmup: usize, runs: usize, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut w = Welford::new();
+    for _ in 0..runs.max(1) {
+        let (s, ()) = time_once(&mut f);
+        w.push(s);
+    }
+    Measurement {
+        name: name.to_string(),
+        mean_s: w.mean(),
+        stderr_s: w.stderr(),
+        runs: runs.max(1),
+    }
+}
+
+/// Aligned console table (the Table-2-style report).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::new();
+            for i in 0..ncol {
+                s.push_str(&format!("{:<width$}  ", cells[i], width = w[i]));
+            }
+            s.trim_end().to_string() + "\n"
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::Arr(r.iter().map(|c| Json::str(c.clone())).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A named (x, series...) line chart printed as aligned columns — the
+/// Figure-2-style report.
+pub struct Series {
+    pub title: String,
+    pub x_name: String,
+    pub names: Vec<String>,
+    pub xs: Vec<f64>,
+    pub ys: Vec<Vec<f64>>, // ys[series][point]
+}
+
+impl Series {
+    pub fn new(title: &str, x_name: &str, names: &[&str]) -> Self {
+        Series {
+            title: title.to_string(),
+            x_name: x_name.to_string(),
+            names: names.iter().map(|s| s.to_string()).collect(),
+            xs: Vec::new(),
+            ys: vec![Vec::new(); names.len()],
+        }
+    }
+
+    pub fn push(&mut self, x: f64, values: &[f64]) {
+        assert_eq!(values.len(), self.names.len());
+        self.xs.push(x);
+        for (s, &v) in self.ys.iter_mut().zip(values) {
+            s.push(v);
+        }
+    }
+
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut hdr = format!("{:>12}", self.x_name);
+        for n in &self.names {
+            hdr.push_str(&format!("  {n:>14}"));
+        }
+        println!("{hdr}");
+        for (i, &x) in self.xs.iter().enumerate() {
+            let mut row = format!("{x:>12.0}");
+            for s in &self.ys {
+                row.push_str(&format!("  {:>14.4}", s[i]));
+            }
+            println!("{row}");
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("x_name", Json::str(self.x_name.clone())),
+            (
+                "series",
+                Json::Arr(
+                    self.names
+                        .iter()
+                        .zip(&self.ys)
+                        .map(|(n, ys)| {
+                            Json::obj(vec![
+                                ("name", Json::str(n.clone())),
+                                ("y", Json::arr_f64(ys)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("x", Json::arr_f64(&self.xs)),
+        ])
+    }
+}
+
+/// Append a JSON record to `bench_results.jsonl` (best-effort).
+pub fn export_json(record: &Json) {
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("bench_results.jsonl")
+    {
+        let _ = writeln!(f, "{record}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let m = bench("spin", 1, 3, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.mean_s > 0.0);
+        assert_eq!(m.runs, 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["dataset", "time"]);
+        t.row(vec!["blobs".into(), "84.39".into()]);
+        t.row(vec!["covertype-long".into(), "874".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("covertype-long"));
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains("  ")).collect();
+        assert!(lines.len() >= 3);
+    }
+
+    #[test]
+    fn series_roundtrip_json() {
+        let mut s = Series::new("fig", "n", &["a", "b"]);
+        s.push(1000.0, &[0.5, 0.7]);
+        s.push(2000.0, &[0.6, 0.8]);
+        let j = s.to_json();
+        assert_eq!(j.get("x").unwrap().as_arr().unwrap().len(), 2);
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed, j);
+    }
+}

@@ -1,0 +1,202 @@
+//! CLI command implementations.
+
+use anyhow::{anyhow, Result};
+
+use crate::bench_harness::export_json;
+use crate::coordinator::driver::{
+    final_quality, make_engine, summarize, to_stream_ops, EngineKind,
+};
+use crate::coordinator::{run_pipeline, CoordinatorConfig};
+use crate::data::stream::{self, Order};
+use crate::data::synth::{load, PaperDataset};
+use crate::dbscan::{DbscanConfig, DynamicDbscan};
+use crate::experiments::fig2::{run_fig2, Panel};
+use crate::experiments::table2::run_table2;
+use crate::experiments::{env_runs, env_scale, PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+use super::Args;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("table2") => cmd_table2(args),
+        Some("fig2") => cmd_fig2(args),
+        Some("stream") => cmd_stream(args),
+        Some("verify") => cmd_verify(args),
+        Some("info") => cmd_info(args),
+        Some("help") | None => {
+            print!("{}", super::USAGE);
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown command '{other}'\n\n{}", super::USAGE)),
+    }
+}
+
+fn engine_kind(args: &Args) -> Result<EngineKind> {
+    let name = args.get("engine").unwrap_or("native");
+    EngineKind::from_name(name).ok_or_else(|| anyhow!("unknown engine '{name}'"))
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let scale = args.get_f64("scale", env_scale())?;
+    let runs = args.get_usize("runs", env_runs())?;
+    let engine = engine_kind(args)?;
+    let datasets: Vec<PaperDataset> = match args.get("datasets") {
+        None => PaperDataset::ALL.to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                PaperDataset::from_name(s.trim())
+                    .ok_or_else(|| anyhow!("unknown dataset '{s}'"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let (table, _) = run_table2(&datasets, scale, runs, engine)?;
+    table.print();
+    export_json(&table.to_json());
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let panel_name = args
+        .get("panel")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.first().cloned())
+        .unwrap_or_else(|| "a".into());
+    let panel = Panel::from_name(&panel_name)
+        .ok_or_else(|| anyhow!("unknown panel '{panel_name}' (a|b|c)"))?;
+    let scale = args.get_f64("scale", env_scale())?;
+    let seed = args.get_u64("seed", 42)?;
+    let exact = args.get_bool("exact");
+    let series = run_fig2(panel, scale, seed, exact)?;
+    series.print();
+    export_json(&series.to_json());
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("blobs");
+    let which = PaperDataset::from_name(name)
+        .ok_or_else(|| anyhow!("unknown dataset '{name}'"))?;
+    let scale = args.get_f64("scale", env_scale())?;
+    let seed = args.get_u64("seed", 42)?;
+    let batch = args.get_usize("batch", PAPER_BATCH)?;
+    let snapshot = args.get_usize("snapshot-every", 5)?;
+    let window = args.get_usize("window", 0)?;
+    let order = match args.get("order").unwrap_or("random") {
+        "random" => Order::Random,
+        "clustered" => Order::ClusterByCluster,
+        o => return Err(anyhow!("unknown order '{o}'")),
+    };
+    let kind = engine_kind(args)?;
+
+    let ds = load(which, scale, seed);
+    let cfg = DbscanConfig {
+        k: args.get_usize("k", PAPER_K)?,
+        t: args.get_usize("t", PAPER_T)?,
+        eps: args.get_f64("eps", PAPER_EPS as f64)? as f32,
+        dim: ds.dim,
+        eager_attach: args.get_bool("eager-attach"),
+    };
+    let batches = if window > 0 {
+        stream::sliding_window_stream(&ds, order, batch, window, seed)
+    } else {
+        stream::insert_stream(&ds, order, batch, seed)
+    };
+    println!(
+        "streaming {} (n={}, d={}) in {} batches; engine={kind:?}",
+        ds.name,
+        ds.n(),
+        ds.dim,
+        batches.len()
+    );
+    let ops = to_stream_ops(&ds, &batches);
+    let mut engine = make_engine(&cfg, seed, kind)?;
+    println!("hash stage: {}", engine.describe());
+    let ccfg = CoordinatorConfig {
+        dbscan: cfg,
+        queue: 4,
+        snapshot_every: snapshot,
+        seed,
+    };
+    let labels = ds.labels.clone();
+    let truth = move |e: u64| labels[e as usize];
+    let out = run_pipeline(ccfg, engine.as_mut(), ops, Some(&truth))?;
+    for r in &out.reports {
+        println!("{}", summarize(r));
+    }
+    let (ari, nmi) = final_quality(&ds, &out);
+    println!(
+        "\nfinal: live={} ARI={ari:.3} NMI={nmi:.3} total_apply={:.2}s",
+        out.final_labels.len(),
+        out.total_apply_s
+    );
+    println!("add    latency: {}", out.add_latency.summary());
+    println!("delete latency: {}", out.delete_latency.summary());
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let ops = args.get_usize("ops", 2000)?;
+    let seed = args.get_u64("seed", 7)?;
+    let mut rng = Rng::new(seed);
+    let cfg = DbscanConfig { k: 4, t: 6, eps: 0.5, dim: 3, ..Default::default() };
+    let mut db = DynamicDbscan::new(cfg, seed);
+    let mut live: Vec<u64> = Vec::new();
+    let mut checked = 0;
+    for op in 0..ops {
+        if live.is_empty() || rng.coin(0.7) {
+            let c = rng.below(3) as f64 * 3.0;
+            let p: Vec<f32> =
+                (0..3).map(|_| (c + rng.uniform(-0.5, 0.5)) as f32).collect();
+            live.push(db.add_point(&p));
+        } else {
+            let i = rng.below_usize(live.len());
+            let p = live.swap_remove(i);
+            db.delete_point(p);
+        }
+        // full invariant check is O(n²); sample it
+        if op % 50 == 0 {
+            db.verify().map_err(|e| anyhow!("invariant violated at op {op}: {e}"))?;
+            checked += 1;
+        }
+    }
+    db.verify().map_err(|e| anyhow!("final invariant violated: {e}"))?;
+    println!(
+        "verify OK: {ops} ops, {} live points, {} cores, {} full checks",
+        db.num_points(),
+        db.num_core_points(),
+        checked + 1
+    );
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let dir = Runtime::default_dir();
+    if !Runtime::available(&dir) {
+        println!("no artifacts at {dir:?} — run `make artifacts`");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    let mut names: Vec<&String> = rt.artifacts.keys().collect();
+    names.sort();
+    println!("artifacts at {dir:?}:");
+    for n in names {
+        let a = &rt.artifacts[n];
+        let ins: Vec<String> = a
+            .inputs
+            .iter()
+            .map(|i| format!("{}{:?}", i.dtype, i.shape))
+            .collect();
+        println!(
+            "  {:<28} {:<8} {} -> {}{:?}",
+            a.name,
+            a.kind,
+            ins.join(", "),
+            a.output.dtype,
+            a.output.shape
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! Minimal CLI substrate (clap is unavailable offline): subcommand + flag
+//! parsing with typed accessors, `--help` generation, and the command
+//! implementations for the `dyn-dbscan` binary.
+
+pub mod commands;
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+}
+
+/// Parsed arguments: positional subcommand + `--key value` flags
+/// (`--flag` with no value = "true").
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value | --key value | --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(key.into(), v.clone())),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(key.into(), v.clone())),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::BadValue(key.into(), v.clone())),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+pub const USAGE: &str = "\
+dyn-dbscan — Dynamic DBSCAN with Euler Tour Sequences (AISTATS 2025)
+
+USAGE:
+    dyn-dbscan <COMMAND> [FLAGS]
+
+COMMANDS:
+    table2     Reproduce Table 2 (time/ARI/NMI per dataset)
+                 --datasets letter,mnist,...   (default: all six)
+                 --scale 0.05  --runs 3  --engine native|xla
+    fig2       Reproduce Figure 2, panel a|b|c
+                 --panel a  --scale 0.05  --seed 42  --exact
+    stream     Stream a dataset through the coordinator, printing reports
+                 --dataset blobs --scale 0.05 --batch 1000
+                 --order random|clustered --engine native|xla
+                 --snapshot-every 5 --window N (sliding-window deletes)
+    verify     Run the Theorem-2 invariant checker on a random workload
+                 --ops 2000 --seed 7
+    info       List compiled AOT artifacts and their shapes
+
+ENVIRONMENT:
+    FULL=1                paper-size datasets (default: SCALE=0.05)
+    SCALE=<f>             dataset scale factor
+    RUNS=<n>              experiment repetitions
+    DYN_DBSCAN_ARTIFACTS  artifacts directory (default: ./artifacts)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&argv(&[
+            "table2",
+            "--scale",
+            "0.1",
+            "--engine=xla",
+            "--verbose",
+        ]))
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("table2"));
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.1);
+        assert_eq!(a.get("engine"), Some("xla"));
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(&argv(&["fig2", "--scale", "abc"])).unwrap();
+        assert_eq!(a.get_usize("runs", 3).unwrap(), 3);
+        assert!(a.get_f64("scale", 1.0).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = Args::parse(&argv(&["fig2", "b", "--seed", "9"])).unwrap();
+        assert_eq!(a.positional, vec!["b".to_string()]);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 9);
+    }
+}

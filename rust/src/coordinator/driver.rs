@@ -1,0 +1,163 @@
+//! Convenience drivers gluing datasets, streams, engines and the pipeline —
+//! shared by the CLI, the examples and the bench harness.
+
+use anyhow::Result;
+
+use crate::data::stream::{self, Order, UpdateOp};
+use crate::data::Dataset;
+use crate::dbscan::DbscanConfig;
+use crate::lsh::GridHasher;
+use crate::runtime::engines::{HashingEngine, NativeHashing, XlaHashing};
+use crate::runtime::Runtime;
+
+use super::{run_pipeline, BatchReport, CoordinatorConfig, RunOutcome, StreamOp};
+
+/// Which hashing engine the hash stage should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    /// AOT Pallas artifact via PJRT; falls back to Native (with a warning)
+    /// when no artifact matches the (d, t) configuration.
+    Xla,
+}
+
+impl EngineKind {
+    pub fn from_name(s: &str) -> Option<EngineKind> {
+        match s {
+            "native" => Some(EngineKind::Native),
+            "xla" => Some(EngineKind::Xla),
+            _ => None,
+        }
+    }
+}
+
+/// Build a hashing engine whose η/ε match what `DynamicDbscan::new(cfg,
+/// seed)` will draw internally (same seed ⇒ same GridHasher).
+pub fn make_engine(
+    cfg: &DbscanConfig,
+    seed: u64,
+    kind: EngineKind,
+) -> Result<Box<dyn HashingEngine>> {
+    let hasher = GridHasher::new(cfg.t, cfg.dim, cfg.eps, seed);
+    match kind {
+        EngineKind::Native => Ok(Box::new(NativeHashing::new(hasher))),
+        EngineKind::Xla => {
+            let dir = Runtime::default_dir();
+            let rt = Runtime::new(&dir)?;
+            match XlaHashing::new(rt, hasher.clone()) {
+                Ok(e) => Ok(Box::new(e)),
+                Err(e) => {
+                    eprintln!(
+                        "[coordinator] no XLA hash artifact ({e}); falling back to native"
+                    );
+                    Ok(Box::new(NativeHashing::new(hasher)))
+                }
+            }
+        }
+    }
+}
+
+/// Convert dataset-index update ops into coordinator stream ops.
+pub fn to_stream_ops(ds: &Dataset, batches: &[Vec<UpdateOp>]) -> Vec<Vec<StreamOp>> {
+    batches
+        .iter()
+        .map(|b| {
+            b.iter()
+                .map(|op| match op {
+                    UpdateOp::Insert(i) => StreamOp::Insert {
+                        ext: *i as u64,
+                        coords: ds.point(*i).to_vec(),
+                    },
+                    UpdateOp::Delete(i) => StreamOp::Delete { ext: *i as u64 },
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Stream a dataset (insert-only) through the pipeline with ground-truth
+/// snapshots every `snapshot_every` batches.
+pub fn stream_dataset(
+    ds: &Dataset,
+    cfg: DbscanConfig,
+    order: Order,
+    batch: usize,
+    snapshot_every: usize,
+    seed: u64,
+    kind: EngineKind,
+) -> Result<RunOutcome> {
+    let batches = to_stream_ops(ds, &stream::insert_stream(ds, order, batch, seed));
+    let mut engine = make_engine(&cfg, seed, kind)?;
+    let ccfg = CoordinatorConfig { dbscan: cfg, queue: 4, snapshot_every, seed };
+    let labels = &ds.labels;
+    let truth = move |e: u64| labels[e as usize];
+    run_pipeline(ccfg, engine.as_mut(), batches, Some(&truth))
+}
+
+/// Final-state quality of a run (ARI/NMI over the live points).
+pub fn final_quality(ds: &Dataset, out: &RunOutcome) -> (f64, f64) {
+    let truth: Vec<i64> =
+        out.final_labels.iter().map(|&(e, _)| ds.labels[e as usize]).collect();
+    let pred: Vec<i64> = out.final_labels.iter().map(|&(_, l)| l).collect();
+    crate::metrics::ari_nmi(&truth, &pred)
+}
+
+/// Pretty one-line summary for progress logs.
+pub fn summarize(r: &BatchReport) -> String {
+    format!(
+        "batch {:>4}: ops={:<5} live={:<7} cores={:<7} t={:.3}s (cum {:.2}s){}",
+        r.seq,
+        r.ops,
+        r.live_points,
+        r.core_points,
+        r.apply_s,
+        r.cumulative_apply_s,
+        match (r.ari, r.nmi) {
+            (Some(a), Some(n)) => format!(" ARI={a:.3} NMI={n:.3}"),
+            _ => String::new(),
+        }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{make_blobs, BlobsConfig};
+
+    #[test]
+    fn stream_dataset_end_to_end() {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 600,
+                dim: 4,
+                clusters: 3,
+                std: 0.3,
+                center_box: 20.0,
+                weights: vec![],
+            },
+            7,
+        );
+        let cfg = DbscanConfig { k: 8, t: 10, eps: 0.75, dim: 4, ..Default::default() };
+        let out = stream_dataset(
+            &ds,
+            cfg,
+            Order::Random,
+            200,
+            1,
+            11,
+            EngineKind::Native,
+        )
+        .unwrap();
+        assert_eq!(out.reports.len(), 3);
+        let (ari, nmi) = final_quality(&ds, &out);
+        assert!(ari > 0.95, "ari {ari}");
+        assert!(nmi > 0.9, "nmi {nmi}");
+    }
+
+    #[test]
+    fn engine_kind_parsing() {
+        assert_eq!(EngineKind::from_name("native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::from_name("xla"), Some(EngineKind::Xla));
+        assert_eq!(EngineKind::from_name("gpu"), None);
+    }
+}

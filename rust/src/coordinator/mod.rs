@@ -1,0 +1,292 @@
+//! Streaming coordinator: the L3 serving loop.
+//!
+//! A three-stage, thread-per-stage pipeline over bounded channels (natural
+//! backpressure — a slow applier throttles the hasher, a slow hasher
+//! throttles ingestion):
+//!
+//! ```text
+//!  source ──batches──▶ [hash stage] ──keyed batches──▶ [apply stage] ──▶ reports
+//!            (bounded)   native or       (bounded)      DynamicDbscan
+//!                        XLA artifact                   + snapshots
+//! ```
+//!
+//! The hash stage computes bucket keys for every inserted point (batched —
+//! this is where the AOT Pallas artifact slots in); the apply stage owns the
+//! `DynamicDbscan` structure, tracks per-op latency histograms, and emits a
+//! [`BatchReport`] per batch, with optional ARI/NMI snapshots against
+//! ground-truth labels. Python never appears anywhere on this path.
+
+pub mod driver;
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+
+use anyhow::Result;
+
+use crate::dbscan::{DbscanConfig, DynamicDbscan};
+use crate::lsh::BucketKey;
+use crate::metrics::ari_nmi;
+use crate::runtime::engines::HashingEngine;
+use crate::util::stats::LatencyHisto;
+
+/// One update travelling through the pipeline. `ext` is the caller's stable
+/// identifier (e.g. dataset row), decoupled from internal `PointId`s.
+#[derive(Clone, Debug)]
+pub enum StreamOp {
+    Insert { ext: u64, coords: Vec<f32> },
+    Delete { ext: u64 },
+}
+
+/// A batch after the hash stage: ops plus precomputed keys for the inserts
+/// (in op order; deletes have no key entry).
+struct KeyedBatch {
+    seq: usize,
+    ops: Vec<StreamOp>,
+    keys: Vec<Vec<BucketKey>>,
+}
+
+/// Per-batch report from the apply stage.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    pub seq: usize,
+    pub ops: usize,
+    pub live_points: usize,
+    pub core_points: usize,
+    /// wall time spent applying this batch (seconds)
+    pub apply_s: f64,
+    /// cumulative apply time since stream start
+    pub cumulative_apply_s: f64,
+    /// ARI/NMI of current labels vs ground truth (when snapshotting)
+    pub ari: Option<f64>,
+    pub nmi: Option<f64>,
+}
+
+/// Coordinator configuration.
+pub struct CoordinatorConfig {
+    pub dbscan: DbscanConfig,
+    /// bounded channel capacity (batches) between stages
+    pub queue: usize,
+    /// evaluate ARI/NMI every `snapshot_every` batches (0 = never)
+    pub snapshot_every: usize,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            dbscan: DbscanConfig::default(),
+            queue: 4,
+            snapshot_every: 0,
+            seed: 42,
+        }
+    }
+}
+
+/// Ground truth used by snapshots: `truth_of(ext) -> label`.
+pub type TruthFn<'a> = dyn Fn(u64) -> i64 + Sync + 'a;
+
+/// Outcome of a full stream run.
+pub struct RunOutcome {
+    pub reports: Vec<BatchReport>,
+    /// final predicted labels per live ext id (sorted by ext)
+    pub final_labels: Vec<(u64, i64)>,
+    pub add_latency: LatencyHisto,
+    pub delete_latency: LatencyHisto,
+    pub total_apply_s: f64,
+}
+
+/// Run a batched stream through the pipeline. `engine` runs on the hash
+/// stage thread; the apply stage owns the clustering structure. Reports are
+/// returned in batch order.
+pub fn run_pipeline(
+    cfg: CoordinatorConfig,
+    engine: &mut dyn HashingEngine,
+    batches: Vec<Vec<StreamOp>>,
+    truth: Option<&TruthFn>,
+) -> Result<RunOutcome> {
+    let queue = cfg.queue.max(1);
+    let (keyed_tx, keyed_rx): (SyncSender<KeyedBatch>, Receiver<KeyedBatch>) =
+        sync_channel(queue);
+    let dim = cfg.dbscan.dim;
+
+    std::thread::scope(|scope| -> Result<RunOutcome> {
+        // ---- apply stage ------------------------------------------------
+        let apply = scope.spawn(move || -> Result<RunOutcome> {
+            let mut db = DynamicDbscan::new(cfg.dbscan.clone(), cfg.seed);
+            let mut ext_to_pid: rustc_hash::FxHashMap<u64, u64> =
+                rustc_hash::FxHashMap::default();
+            let mut add_latency = LatencyHisto::new();
+            let mut delete_latency = LatencyHisto::new();
+            let mut reports = Vec::new();
+            let mut cumulative = 0.0f64;
+            for KeyedBatch { seq, ops, keys } in keyed_rx.iter() {
+                let t0 = std::time::Instant::now();
+                let mut key_it = keys.into_iter();
+                for op in &ops {
+                    match op {
+                        StreamOp::Insert { ext, coords } => {
+                            let keys = key_it.next().expect("missing keys");
+                            let o0 = std::time::Instant::now();
+                            let pid = db.add_point_with_keys(coords, keys);
+                            add_latency.record(o0.elapsed().as_nanos() as u64);
+                            ext_to_pid.insert(*ext, pid);
+                        }
+                        StreamOp::Delete { ext } => {
+                            let pid = ext_to_pid
+                                .remove(ext)
+                                .expect("delete of unknown ext id");
+                            let o0 = std::time::Instant::now();
+                            db.delete_point(pid);
+                            delete_latency.record(o0.elapsed().as_nanos() as u64);
+                        }
+                    }
+                }
+                let apply_s = t0.elapsed().as_secs_f64();
+                cumulative += apply_s;
+                let mut report = BatchReport {
+                    seq,
+                    ops: ops.len(),
+                    live_points: db.num_points(),
+                    core_points: db.num_core_points(),
+                    apply_s,
+                    cumulative_apply_s: cumulative,
+                    ari: None,
+                    nmi: None,
+                };
+                let snap = cfg.snapshot_every > 0
+                    && (seq + 1) % cfg.snapshot_every == 0;
+                if snap {
+                    if let Some(truth) = truth {
+                        let mut exts: Vec<u64> =
+                            ext_to_pid.keys().copied().collect();
+                        exts.sort_unstable();
+                        let pids: Vec<u64> =
+                            exts.iter().map(|e| ext_to_pid[e]).collect();
+                        let pred = db.labels_for(&pids);
+                        let want: Vec<i64> =
+                            exts.iter().map(|&e| truth(e)).collect();
+                        let (ari, nmi) = ari_nmi(&want, &pred);
+                        report.ari = Some(ari);
+                        report.nmi = Some(nmi);
+                    }
+                }
+                reports.push(report);
+            }
+            // final labels
+            let mut exts: Vec<u64> = ext_to_pid.keys().copied().collect();
+            exts.sort_unstable();
+            let pids: Vec<u64> = exts.iter().map(|e| ext_to_pid[e]).collect();
+            let labels = db.labels_for(&pids);
+            Ok(RunOutcome {
+                reports,
+                final_labels: exts.into_iter().zip(labels).collect(),
+                add_latency,
+                delete_latency,
+                total_apply_s: cumulative,
+            })
+        });
+
+        // ---- hash stage (this thread) -----------------------------------
+        let mut flat: Vec<f32> = Vec::new();
+        for (seq, ops) in batches.into_iter().enumerate() {
+            flat.clear();
+            let mut n = 0usize;
+            for op in &ops {
+                if let StreamOp::Insert { coords, .. } = op {
+                    assert_eq!(coords.len(), dim, "bad dim in stream op");
+                    flat.extend_from_slice(coords);
+                    n += 1;
+                }
+            }
+            let keys =
+                if n > 0 { engine.keys_batch(&flat, n)? } else { Vec::new() };
+            // bounded send: blocks when the applier lags ⇒ backpressure
+            keyed_tx
+                .send(KeyedBatch { seq, ops, keys })
+                .map_err(|_| anyhow::anyhow!("apply stage terminated early"))?;
+        }
+        drop(keyed_tx); // close the stream
+        apply.join().expect("apply stage panicked")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{make_blobs, BlobsConfig};
+    use crate::lsh::GridHasher;
+    use crate::runtime::engines::NativeHashing;
+
+    fn blob_ops(n: usize, seed: u64) -> (Vec<Vec<StreamOp>>, Vec<i64>) {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n,
+                dim: 4,
+                clusters: 3,
+                std: 0.3,
+                center_box: 20.0,
+                weights: vec![],
+            },
+            seed,
+        );
+        let ops: Vec<StreamOp> = (0..n)
+            .map(|i| StreamOp::Insert { ext: i as u64, coords: ds.point(i).to_vec() })
+            .collect();
+        let batches = ops.chunks(100).map(|c| c.to_vec()).collect();
+        (batches, ds.labels)
+    }
+
+    #[test]
+    fn pipeline_end_to_end_with_snapshots() {
+        let (batches, labels) = blob_ops(800, 3);
+        let cfg = CoordinatorConfig {
+            dbscan: DbscanConfig { k: 8, t: 10, eps: 0.75, dim: 4, ..Default::default() },
+            queue: 2,
+            snapshot_every: 2,
+            seed: 9,
+        };
+        let hasher = GridHasher::new(10, 4, 0.75, 9);
+        let mut engine = NativeHashing::new(hasher);
+        let truth = |e: u64| labels[e as usize];
+        let out = run_pipeline(cfg, &mut engine, batches, Some(&truth)).unwrap();
+        assert_eq!(out.reports.len(), 8);
+        assert_eq!(out.reports.last().unwrap().live_points, 800);
+        assert_eq!(out.final_labels.len(), 800);
+        // snapshot batches carry metrics; final snapshot near-perfect ARI
+        let last_snap = out.reports.iter().rev().find(|r| r.ari.is_some()).unwrap();
+        assert!(last_snap.ari.unwrap() > 0.95, "ari={:?}", last_snap.ari);
+        assert!(out.add_latency.count() == 800);
+        assert!(out.total_apply_s > 0.0);
+    }
+
+    #[test]
+    fn pipeline_handles_deletes() {
+        let (mut batches, _) = blob_ops(300, 5);
+        // delete the first 100 points in a trailing batch
+        let dels: Vec<StreamOp> =
+            (0..100).map(|e| StreamOp::Delete { ext: e as u64 }).collect();
+        batches.push(dels);
+        let cfg = CoordinatorConfig {
+            dbscan: DbscanConfig { k: 6, t: 8, eps: 0.75, dim: 4, ..Default::default() },
+            queue: 1,
+            snapshot_every: 0,
+            seed: 1,
+        };
+        let hasher = GridHasher::new(8, 4, 0.75, 1);
+        let mut engine = NativeHashing::new(hasher);
+        let out = run_pipeline(cfg, &mut engine, batches, None).unwrap();
+        assert_eq!(out.reports.last().unwrap().live_points, 200);
+        assert_eq!(out.delete_latency.count(), 100);
+        assert_eq!(out.final_labels.len(), 200);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad dim")]
+    fn dim_mismatch_is_caught() {
+        let cfg = CoordinatorConfig::default(); // dim = 2
+        let hasher = GridHasher::new(cfg.dbscan.t, 2, 0.75, 1);
+        let mut engine = NativeHashing::new(hasher);
+        let batches =
+            vec![vec![StreamOp::Insert { ext: 0, coords: vec![1.0, 2.0, 3.0] }]];
+        let _ = run_pipeline(cfg, &mut engine, batches, None);
+    }
+}

@@ -1,0 +1,174 @@
+//! Isotropic Gaussian mixture ("blobs") generator — the paper's synthetic
+//! dataset (n = 200 000, d = 10, 10 clusters) and the workload of Figure 2.
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+/// Configuration mirroring `sklearn.datasets.make_blobs`.
+#[derive(Clone, Debug)]
+pub struct BlobsConfig {
+    pub n: usize,
+    pub dim: usize,
+    pub clusters: usize,
+    /// per-cluster standard deviation
+    pub std: f64,
+    /// centers drawn uniformly from [-center_box, center_box]^d
+    pub center_box: f64,
+    /// relative cluster weights (uniform when empty)
+    pub weights: Vec<f64>,
+}
+
+impl Default for BlobsConfig {
+    fn default() -> Self {
+        BlobsConfig {
+            n: 200_000,
+            dim: 10,
+            clusters: 10,
+            std: 1.0,
+            center_box: 10.0,
+            weights: Vec::new(),
+        }
+    }
+}
+
+pub fn make_blobs(cfg: &BlobsConfig, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f64>> = (0..cfg.clusters)
+        .map(|_| {
+            (0..cfg.dim)
+                .map(|_| rng.uniform(-cfg.center_box, cfg.center_box))
+                .collect()
+        })
+        .collect();
+    make_blobs_with_centers(cfg, centers, rng)
+}
+
+/// Blobs with centers on random `±center_box` hypercube corners, chosen
+/// with pairwise Hamming distance ≥ `dim/3` — guarantees clusters stay
+/// separated by many grid-bucket widths even after standardization (the
+/// regime of the paper's blobs evaluation, where every algorithm reaches
+/// ARI ≈ 1).
+pub fn make_separated_blobs(cfg: &BlobsConfig, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let min_hamming = (cfg.dim / 3).max(1);
+    let mut centers: Vec<Vec<f64>> = Vec::new();
+    while centers.len() < cfg.clusters {
+        let cand: Vec<f64> = (0..cfg.dim)
+            .map(|_| if rng.coin(0.5) { cfg.center_box } else { -cfg.center_box })
+            .collect();
+        let ok = centers.iter().all(|c| {
+            c.iter().zip(&cand).filter(|(a, b)| a != b).count() >= min_hamming
+        });
+        if ok {
+            centers.push(cand);
+        }
+    }
+    make_blobs_with_centers(cfg, centers, rng)
+}
+
+fn make_blobs_with_centers(
+    cfg: &BlobsConfig,
+    centers: Vec<Vec<f64>>,
+    mut rng: Rng,
+) -> Dataset {
+    // cumulative weights
+    let w: Vec<f64> = if cfg.weights.is_empty() {
+        vec![1.0; cfg.clusters]
+    } else {
+        assert_eq!(cfg.weights.len(), cfg.clusters);
+        cfg.weights.clone()
+    };
+    let total: f64 = w.iter().sum();
+    let mut cum = Vec::with_capacity(cfg.clusters);
+    let mut acc = 0.0;
+    for x in &w {
+        acc += x / total;
+        cum.push(acc);
+    }
+    let mut xs = Vec::with_capacity(cfg.n * cfg.dim);
+    let mut labels = Vec::with_capacity(cfg.n);
+    for _ in 0..cfg.n {
+        let u = rng.next_f64();
+        let c = cum.iter().position(|&x| u <= x).unwrap_or(cfg.clusters - 1);
+        for j in 0..cfg.dim {
+            xs.push((centers[c][j] + cfg.std * rng.normal()) as f32);
+        }
+        labels.push(c as i64);
+    }
+    Dataset { name: "blobs".into(), dim: cfg.dim, xs, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let cfg = BlobsConfig { n: 500, dim: 4, clusters: 3, ..Default::default() };
+        let d = make_blobs(&cfg, 7);
+        assert_eq!(d.n(), 500);
+        assert_eq!(d.xs.len(), 2000);
+        assert_eq!(d.num_clusters(), 3);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = BlobsConfig { n: 100, dim: 3, clusters: 2, ..Default::default() };
+        let a = make_blobs(&cfg, 1);
+        let b = make_blobs(&cfg, 1);
+        let c = make_blobs(&cfg, 2);
+        assert_eq!(a.xs, b.xs);
+        assert_ne!(a.xs, c.xs);
+    }
+
+    #[test]
+    fn points_near_their_center() {
+        // with std=0.5 and box=50 the intra-cluster spread is far below the
+        // inter-center distance w.h.p.; check points of one cluster are
+        // mutually closer than points across clusters on average.
+        let cfg = BlobsConfig {
+            n: 400,
+            dim: 5,
+            clusters: 4,
+            std: 0.5,
+            center_box: 50.0,
+            weights: vec![],
+        };
+        let d = make_blobs(&cfg, 3);
+        let dist = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut intra = (0.0, 0);
+        let mut inter = (0.0, 0);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let dd = dist(d.point(i), d.point(j));
+                if d.labels[i] == d.labels[j] {
+                    intra = (intra.0 + dd, intra.1 + 1);
+                } else {
+                    inter = (inter.0 + dd, inter.1 + 1);
+                }
+            }
+        }
+        assert!(intra.0 / intra.1 as f64 * 4.0 < inter.0 / inter.1 as f64);
+    }
+
+    #[test]
+    fn weighted_mixture_respects_weights() {
+        let cfg = BlobsConfig {
+            n: 10_000,
+            dim: 2,
+            clusters: 2,
+            weights: vec![0.9, 0.1],
+            ..Default::default()
+        };
+        let d = make_blobs(&cfg, 11);
+        let c0 = d.labels.iter().filter(|&&l| l == 0).count();
+        assert!((c0 as f64 / 10_000.0 - 0.9).abs() < 0.02);
+    }
+}

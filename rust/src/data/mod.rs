@@ -1,0 +1,76 @@
+//! Datasets and preprocessing.
+//!
+//! The paper evaluates on OpenML datasets (Table 1). The build environment
+//! has no network access, so [`synth`] provides **seeded synthetic
+//! stand-ins** with the same `(n, d, #clusters)` and per-dataset
+//! separation/imbalance profiles (see `DESIGN.md` §Substitutions). The
+//! preprocessing path is exactly the paper's: generate at native
+//! dimensionality → [`pca`] to 20 where the paper does → [`scale`] every
+//! dimension to zero mean / unit variance → stream in batches of 1000
+//! ([`stream`]).
+
+pub mod blobs;
+pub mod pca;
+pub mod scale;
+pub mod stream;
+pub mod synth;
+
+/// A labeled point set, row-major `n × dim`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub dim: usize,
+    /// row-major coordinates, `n * dim`
+    pub xs: Vec<f32>,
+    /// ground-truth cluster labels, length n
+    pub labels: Vec<i64>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.xs[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Number of distinct ground-truth labels.
+    pub fn num_clusters(&self) -> usize {
+        let mut ls: Vec<i64> = self.labels.clone();
+        ls.sort_unstable();
+        ls.dedup();
+        ls.len()
+    }
+
+    /// Keep only the first `n` points (used by scaled-down bench runs).
+    pub fn truncate(&mut self, n: usize) {
+        if n < self.n() {
+            self.xs.truncate(n * self.dim);
+            self.labels.truncate(n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_accessors() {
+        let d = Dataset {
+            name: "t".into(),
+            dim: 2,
+            xs: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            labels: vec![0, 0, 1],
+        };
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.point(1), &[2.0, 3.0]);
+        assert_eq!(d.num_clusters(), 2);
+        let mut e = d.clone();
+        e.truncate(2);
+        assert_eq!(e.n(), 2);
+        assert_eq!(e.xs.len(), 4);
+    }
+}

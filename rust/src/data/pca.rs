@@ -1,0 +1,207 @@
+//! Principal component analysis via covariance + subspace (orthogonal)
+//! iteration — used to reduce the MNIST/Fashion-MNIST/KDDCup-like datasets
+//! to d = 20, exactly the paper's preprocessing.
+//!
+//! The projection step (`X @ W`) can optionally run through the AOT
+//! `project_*` artifact (see `runtime::engines`); the fit is pure Rust
+//! (d ≤ a few hundred, so the d×d eigenproblem is tiny).
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+#[derive(Clone, Debug)]
+pub struct Pca {
+    pub mean: Vec<f64>,
+    /// column-major `din × dout` projection matrix
+    pub components: Vec<f64>,
+    pub din: usize,
+    pub dout: usize,
+}
+
+impl Pca {
+    /// Fit the top `dout` principal components with subspace iteration.
+    pub fn fit(ds: &Dataset, dout: usize, seed: u64) -> Pca {
+        let (n, d) = (ds.n(), ds.dim);
+        assert!(dout <= d, "dout {dout} > dim {d}");
+        // mean
+        let mut mean = vec![0.0f64; d];
+        for i in 0..n {
+            for (j, m) in mean.iter_mut().enumerate() {
+                *m += ds.xs[i * d + j] as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        // covariance (upper triangle, then mirror)
+        let mut cov = vec![0.0f64; d * d];
+        for i in 0..n {
+            let row = &ds.xs[i * d..(i + 1) * d];
+            for a in 0..d {
+                let xa = row[a] as f64 - mean[a];
+                for b in a..d {
+                    cov[a * d + b] += xa * (row[b] as f64 - mean[b]);
+                }
+            }
+        }
+        for a in 0..d {
+            for b in a..d {
+                let v = cov[a * d + b] / (n as f64 - 1.0).max(1.0);
+                cov[a * d + b] = v;
+                cov[b * d + a] = v;
+            }
+        }
+        // subspace iteration: Q ← orth(C·Q), 60 rounds
+        let mut rng = Rng::new(seed);
+        let mut q = vec![0.0f64; d * dout]; // column-major d × dout
+        for v in q.iter_mut() {
+            *v = rng.normal();
+        }
+        orthonormalize(&mut q, d, dout);
+        let mut tmp = vec![0.0f64; d * dout];
+        for _ in 0..60 {
+            // tmp = C * q  (column by column)
+            for c in 0..dout {
+                for a in 0..d {
+                    let mut s = 0.0;
+                    for b in 0..d {
+                        s += cov[a * d + b] * q[c * d + b];
+                    }
+                    tmp[c * d + a] = s;
+                }
+            }
+            std::mem::swap(&mut q, &mut tmp);
+            orthonormalize(&mut q, d, dout);
+        }
+        Pca { mean, components: q, din: d, dout }
+    }
+
+    /// Project a dataset to the fitted subspace.
+    pub fn transform(&self, ds: &Dataset) -> Dataset {
+        let (n, d) = (ds.n(), ds.dim);
+        assert_eq!(d, self.din);
+        let mut xs = Vec::with_capacity(n * self.dout);
+        for i in 0..n {
+            let row = &ds.xs[i * d..(i + 1) * d];
+            for c in 0..self.dout {
+                let col = &self.components[c * d..(c + 1) * d];
+                let mut s = 0.0f64;
+                for j in 0..d {
+                    s += (row[j] as f64 - self.mean[j]) * col[j];
+                }
+                xs.push(s as f32);
+            }
+        }
+        Dataset {
+            name: ds.name.clone(),
+            dim: self.dout,
+            xs,
+            labels: ds.labels.clone(),
+        }
+    }
+
+    /// Projection matrix as row-major f32 `din × dout` (for the AOT
+    /// `project` artifact which computes `X @ W`).
+    pub fn weight_matrix_f32(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.din * self.dout];
+        for c in 0..self.dout {
+            for r in 0..self.din {
+                w[r * self.dout + c] = self.components[c * self.din + r] as f32;
+            }
+        }
+        w
+    }
+}
+
+/// Gram–Schmidt on column-major `d × k`.
+fn orthonormalize(q: &mut [f64], d: usize, k: usize) {
+    for c in 0..k {
+        // subtract projections on previous columns
+        for p in 0..c {
+            let mut dot = 0.0;
+            for j in 0..d {
+                dot += q[c * d + j] * q[p * d + j];
+            }
+            for j in 0..d {
+                q[c * d + j] -= dot * q[p * d + j];
+            }
+        }
+        let norm: f64 = q[c * d..(c + 1) * d].iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            for j in 0..d {
+                q[c * d + j] /= norm;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Build a dataset with known dominant directions.
+    fn anisotropic(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut xs = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            // variance 100 on dim 0, 25 on dim 1, 1 elsewhere
+            for j in 0..d {
+                let s = match j {
+                    0 => 10.0,
+                    1 => 5.0,
+                    _ => 1.0,
+                };
+                xs.push((s * rng.normal()) as f32);
+            }
+        }
+        Dataset { name: "aniso".into(), dim: d, xs, labels: vec![0; n] }
+    }
+
+    #[test]
+    fn recovers_dominant_directions() {
+        let ds = anisotropic(4000, 6, 1);
+        let pca = Pca::fit(&ds, 2, 2);
+        // first component ≈ e0, second ≈ e1 (up to sign)
+        let c0 = &pca.components[0..6];
+        let c1 = &pca.components[6..12];
+        assert!(c0[0].abs() > 0.99, "c0 = {c0:?}");
+        assert!(c1[1].abs() > 0.99, "c1 = {c1:?}");
+    }
+
+    #[test]
+    fn transform_preserves_variance_ordering() {
+        let ds = anisotropic(4000, 6, 3);
+        let pca = Pca::fit(&ds, 3, 4);
+        let proj = pca.transform(&ds);
+        assert_eq!(proj.dim, 3);
+        assert_eq!(proj.n(), ds.n());
+        let var = |k: usize| -> f64 {
+            let m: f64 = (0..proj.n()).map(|i| proj.xs[i * 3 + k] as f64).sum::<f64>()
+                / proj.n() as f64;
+            (0..proj.n())
+                .map(|i| (proj.xs[i * 3 + k] as f64 - m).powi(2))
+                .sum::<f64>()
+                / proj.n() as f64
+        };
+        let (v0, v1, v2) = (var(0), var(1), var(2));
+        assert!(v0 > v1 && v1 > v2, "variances not ordered: {v0} {v1} {v2}");
+        assert!((v0 - 100.0).abs() / 100.0 < 0.15, "v0 = {v0}");
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let ds = anisotropic(1000, 8, 5);
+        let pca = Pca::fit(&ds, 4, 6);
+        for a in 0..4 {
+            for b in 0..4 {
+                let dot: f64 = (0..8)
+                    .map(|j| pca.components[a * 8 + j] * pca.components[b * 8 + j])
+                    .sum();
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-8, "Q'Q[{a}][{b}] = {dot}");
+            }
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Per-dimension standardization (zero mean, unit variance) — the paper
+//! applies this to every dataset before clustering.
+
+use super::Dataset;
+
+/// Fitted standardizer (kept so streams of *new* points can be transformed
+//  with the same statistics).
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub mean: Vec<f64>,
+    pub inv_std: Vec<f64>,
+}
+
+impl Standardizer {
+    /// Fit on a dataset (population variance, like sklearn StandardScaler).
+    pub fn fit(ds: &Dataset) -> Self {
+        let (n, d) = (ds.n(), ds.dim);
+        let mut mean = vec![0.0f64; d];
+        for i in 0..n {
+            for (j, m) in mean.iter_mut().enumerate() {
+                *m += ds.xs[i * d + j] as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut var = vec![0.0f64; d];
+        for i in 0..n {
+            for j in 0..d {
+                let e = ds.xs[i * d + j] as f64 - mean[j];
+                var[j] += e * e;
+            }
+        }
+        let inv_std = var
+            .iter()
+            .map(|&v| {
+                let s = (v / n as f64).sqrt();
+                if s > 1e-12 {
+                    1.0 / s
+                } else {
+                    1.0 // constant dimension: leave centered values at 0
+                }
+            })
+            .collect();
+        Standardizer { mean, inv_std }
+    }
+
+    pub fn transform_point(&self, x: &mut [f32]) {
+        for (j, v) in x.iter_mut().enumerate() {
+            *v = ((*v as f64 - self.mean[j]) * self.inv_std[j]) as f32;
+        }
+    }
+
+    pub fn transform(&self, ds: &mut Dataset) {
+        let d = ds.dim;
+        for row in ds.xs.chunks_mut(d) {
+            self.transform_point(row);
+        }
+    }
+}
+
+/// Fit + transform in place.
+pub fn standardize(ds: &mut Dataset) -> Standardizer {
+    let s = Standardizer::fit(ds);
+    s.transform(ds);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{make_blobs, BlobsConfig};
+
+    #[test]
+    fn zero_mean_unit_var() {
+        let cfg = BlobsConfig { n: 2000, dim: 6, clusters: 3, ..Default::default() };
+        let mut ds = make_blobs(&cfg, 5);
+        standardize(&mut ds);
+        let (n, d) = (ds.n(), ds.dim);
+        for j in 0..d {
+            let mean: f64 =
+                (0..n).map(|i| ds.xs[i * d + j] as f64).sum::<f64>() / n as f64;
+            let var: f64 = (0..n)
+                .map(|i| (ds.xs[i * d + j] as f64 - mean).powi(2))
+                .sum::<f64>()
+                / n as f64;
+            assert!(mean.abs() < 1e-3, "dim {j} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "dim {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn constant_dimension_is_safe() {
+        let mut ds = Dataset {
+            name: "c".into(),
+            dim: 2,
+            xs: vec![3.0, 1.0, 3.0, 2.0, 3.0, 3.0],
+            labels: vec![0, 0, 0],
+        };
+        standardize(&mut ds);
+        for i in 0..3 {
+            assert_eq!(ds.xs[i * 2], 0.0, "constant dim centered to zero");
+            assert!(ds.xs[i * 2 + 1].is_finite());
+        }
+    }
+
+    #[test]
+    fn stream_transform_matches_batch() {
+        let cfg = BlobsConfig { n: 100, dim: 3, clusters: 2, ..Default::default() };
+        let ds0 = make_blobs(&cfg, 9);
+        let mut batch = ds0.clone();
+        let s = standardize(&mut batch);
+        // transform points one by one with the fitted scaler
+        for i in 0..ds0.n() {
+            let mut p = ds0.point(i).to_vec();
+            s.transform_point(&mut p);
+            assert_eq!(&p[..], batch.point(i));
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Update streams: turn a dataset into the dynamic workload the paper
+//! evaluates — batches of 1000 insertions in a random or cluster-by-cluster
+//! order, plus deletion-bearing variants (sliding window) for the dynamic
+//! stress tests.
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+/// Arrival order of the stream (Figure 2 b vs c).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Order {
+    Random,
+    /// all of cluster 0, then cluster 1, ... (the EMZFixedCore killer)
+    ClusterByCluster,
+}
+
+/// A single update against the clustering structure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum UpdateOp {
+    /// Insert point `i` of the dataset.
+    Insert(usize),
+    /// Delete (previously inserted) point `i`.
+    Delete(usize),
+}
+
+/// Insertion order of dataset indices under `order`.
+pub fn insertion_order(ds: &Dataset, order: Order, seed: u64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..ds.n()).collect();
+    match order {
+        Order::Random => {
+            let mut rng = Rng::new(seed);
+            rng.shuffle(&mut idx);
+        }
+        Order::ClusterByCluster => {
+            // stable by (label, original position); shuffle within cluster
+            let mut rng = Rng::new(seed);
+            idx.sort_by_key(|&i| (ds.labels[i], i));
+            // shuffle runs of equal labels
+            let mut start = 0;
+            while start < idx.len() {
+                let l = ds.labels[idx[start]];
+                let mut end = start;
+                while end < idx.len() && ds.labels[idx[end]] == l {
+                    end += 1;
+                }
+                rng.shuffle(&mut idx[start..end]);
+                start = end;
+            }
+        }
+    }
+    idx
+}
+
+/// Pure-insertion stream in `batch`-sized chunks (the paper's workload:
+/// batch = 1000, metrics evaluated after each batch).
+pub fn insert_stream(
+    ds: &Dataset,
+    order: Order,
+    batch: usize,
+    seed: u64,
+) -> Vec<Vec<UpdateOp>> {
+    insertion_order(ds, order, seed)
+        .chunks(batch.max(1))
+        .map(|c| c.iter().map(|&i| UpdateOp::Insert(i)).collect())
+        .collect()
+}
+
+/// Sliding-window stream: insert in order; once more than `window` points
+/// are live, delete the oldest alongside each insertion. Exercises
+/// `DeletePoint` exactly as the paper's dynamic setting requires.
+pub fn sliding_window_stream(
+    ds: &Dataset,
+    order: Order,
+    batch: usize,
+    window: usize,
+    seed: u64,
+) -> Vec<Vec<UpdateOp>> {
+    let idx = insertion_order(ds, order, seed);
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(batch * 2);
+    let mut live_from = 0usize; // pointer into idx of the oldest live point
+    for (pos, &i) in idx.iter().enumerate() {
+        cur.push(UpdateOp::Insert(i));
+        let live = pos + 1 - live_from;
+        if live > window {
+            cur.push(UpdateOp::Delete(idx[live_from]));
+            live_from += 1;
+        }
+        if cur.len() >= batch {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{make_blobs, BlobsConfig};
+
+    fn ds() -> Dataset {
+        make_blobs(
+            &BlobsConfig { n: 100, dim: 2, clusters: 4, ..Default::default() },
+            3,
+        )
+    }
+
+    #[test]
+    fn random_order_is_permutation() {
+        let d = ds();
+        let idx = insertion_order(&d, Order::Random, 1);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(idx, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cluster_order_is_grouped() {
+        let d = ds();
+        let idx = insertion_order(&d, Order::ClusterByCluster, 1);
+        let labels: Vec<i64> = idx.iter().map(|&i| d.labels[i]).collect();
+        // labels must be non-decreasing
+        assert!(labels.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn batching() {
+        let d = ds();
+        let s = insert_stream(&d, Order::Random, 30, 2);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].len(), 30);
+        assert_eq!(s[3].len(), 10);
+        let total: usize = s.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn sliding_window_keeps_live_bounded() {
+        let d = ds();
+        let s = sliding_window_stream(&d, Order::Random, 25, 40, 4);
+        let mut live = std::collections::HashSet::new();
+        for batch in &s {
+            for op in batch {
+                match op {
+                    UpdateOp::Insert(i) => {
+                        assert!(live.insert(*i));
+                    }
+                    UpdateOp::Delete(i) => {
+                        assert!(live.remove(i));
+                    }
+                }
+                assert!(live.len() <= 41);
+            }
+        }
+        assert_eq!(live.len(), 40);
+    }
+}

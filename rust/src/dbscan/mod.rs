@@ -1,0 +1,700 @@
+//! `DynamicDbscan` — Algorithm 2 of the paper, the system's core.
+//!
+//! Core points are defined through `t` grid-LSH hash functions
+//! (Definition 4: `x` is core iff some bucket containing it has ≥ `k`
+//! members). A spanning forest of the collision graph `H` is maintained in
+//! an Euler-tour dynamic forest: within every bucket the core points form a
+//! path in index order (unless an edge would close a cycle), bounding every
+//! core's degree by `2t`; each non-core point attaches to at most one core
+//! it collides with. `AddPoint`/`DeletePoint` run in
+//! `O(t²k(d + log n))` = `O(d log³n + log⁴n)` for `t,k = O(log n)`
+//! (Theorem 1) and preserve the spanning-forest invariant (Theorem 2 —
+//! machine-checked by [`invariants`]).
+
+pub mod connectivity;
+pub mod invariants;
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+use crate::ett::{SkipForest, TreapForest, VertexId};
+use crate::lsh::table::{LshTable, PointId};
+use crate::lsh::{BucketKey, GridHasher};
+
+pub use connectivity::{Connectivity, PaperConn, RepairConn, RepairStats};
+
+/// Default connectivity: repaired spanning forest over skip-list ETT.
+pub type DefaultConn = RepairConn<SkipForest>;
+/// The paper's verbatim (unsound — see [`connectivity`]) behaviour.
+pub type PaperExactConn = PaperConn<SkipForest>;
+/// Repair mode over the treap (Henzinger–King) backend.
+pub type TreapConn = RepairConn<TreapForest>;
+
+/// Hyper-parameters (paper §5 uses k = 10, t = 10, ε = 0.75 throughout).
+#[derive(Clone, Debug)]
+pub struct DbscanConfig {
+    /// core threshold: bucket size conferring core-ness
+    pub k: usize,
+    /// number of hash functions
+    pub t: usize,
+    /// neighborhood radius (bucket side = 2ε)
+    pub eps: f32,
+    /// data dimensionality
+    pub dim: usize,
+    /// extension (off = exact Algorithm 2): when a fresh core point arrives,
+    /// adopt unattached non-core points in its buckets (O(t·k) extra work).
+    pub eager_attach: bool,
+}
+
+impl Default for DbscanConfig {
+    fn default() -> Self {
+        DbscanConfig { k: 10, t: 10, eps: 0.75, dim: 2, eager_attach: false }
+    }
+}
+
+struct PointState {
+    x: Vec<f32>,
+    /// bucket key per hash function (length t)
+    keys: Vec<BucketKey>,
+    vertex: VertexId,
+    is_core: bool,
+    /// non-core: the core point this point is attached to (≤ 1)
+    attached_to: Option<PointId>,
+    /// core: non-core points attached to this point
+    attached: FxHashSet<PointId>,
+}
+
+/// Operation counters (exposed for the perf harness and the polylog
+/// update-cost ablation A3).
+#[derive(Clone, Debug, Default)]
+pub struct OpStats {
+    pub adds: u64,
+    pub deletes: u64,
+    pub promotions: u64,
+    pub demotions: u64,
+    pub forest_links: u64,
+    pub forest_cuts: u64,
+}
+
+/// The dynamic clustering structure. Generic over the connectivity layer
+/// (default: repaired spanning forest over the paper's skip-list Euler tour
+/// sequences — see [`connectivity`] for why repair is needed).
+pub struct DynamicDbscan<C: Connectivity = DefaultConn> {
+    pub cfg: DbscanConfig,
+    pub hasher: GridHasher,
+    tables: Vec<LshTable>,
+    conn: C,
+    points: FxHashMap<PointId, PointState>,
+    next_idx: PointId,
+    n_core: usize,
+    pub stats: OpStats,
+    scratch: Vec<i32>,
+}
+
+impl DynamicDbscan<DefaultConn> {
+    /// `Initialise(k, t, ε)` — O(t·d): draw the t hash shifts.
+    pub fn new(cfg: DbscanConfig, seed: u64) -> Self {
+        Self::with_conn(cfg, seed, RepairConn::new(SkipForest::new(seed ^ 0xF0E57)))
+    }
+}
+
+impl DynamicDbscan<PaperExactConn> {
+    /// Verbatim Algorithm 2 (unsound in a corner — see [`connectivity`]).
+    pub fn paper_exact(cfg: DbscanConfig, seed: u64) -> Self {
+        Self::with_conn(cfg, seed, PaperConn::new(SkipForest::new(seed ^ 0xF0E57)))
+    }
+}
+
+impl<C: Connectivity> DynamicDbscan<C> {
+    pub fn with_conn(cfg: DbscanConfig, seed: u64, conn: C) -> Self {
+        let hasher = GridHasher::new(cfg.t, cfg.dim, cfg.eps, seed);
+        let tables = (0..cfg.t).map(|_| LshTable::new()).collect();
+        DynamicDbscan {
+            cfg,
+            hasher,
+            tables,
+            conn,
+            points: FxHashMap::default(),
+            next_idx: 0,
+            n_core: 0,
+            stats: OpStats::default(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Construct with externally computed hash shifts (used when the XLA
+    /// hashing engine owns the η vector — it must match `hasher.etas`).
+    pub fn hasher_mut(&mut self) -> &mut GridHasher {
+        &mut self.hasher
+    }
+
+    // ------------------------------------------------------------------
+    // queries
+    // ------------------------------------------------------------------
+
+    pub fn num_points(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn num_core_points(&self) -> usize {
+        self.n_core
+    }
+
+    pub fn is_core(&self, p: PointId) -> bool {
+        self.points.get(&p).map(|s| s.is_core).unwrap_or(false)
+    }
+
+    pub fn contains(&self, p: PointId) -> bool {
+        self.points.contains_key(&p)
+    }
+
+    pub fn point_coords(&self, p: PointId) -> Option<&[f32]> {
+        self.points.get(&p).map(|s| s.x.as_slice())
+    }
+
+    /// `GetCluster(x)`: canonical cluster identifier — O(log n). Stable
+    /// between updates; noise points (unattached non-cores) are singleton
+    /// clusters.
+    pub fn get_cluster(&self, p: PointId) -> u64 {
+        let st = &self.points[&p];
+        self.conn.root(st.vertex)
+    }
+
+    /// Live point ids (unordered).
+    pub fn point_ids(&self) -> impl Iterator<Item = PointId> + '_ {
+        self.points.keys().copied()
+    }
+
+    /// Dense labels for a set of points: clusters numbered 0.., noise
+    /// (unattached non-core singletons) labeled −1 to match sklearn
+    /// conventions in the metrics.
+    pub fn labels_for(&self, ids: &[PointId]) -> Vec<i64> {
+        let mut roots: FxHashMap<u64, i64> = FxHashMap::default();
+        let mut out = Vec::with_capacity(ids.len());
+        for &p in ids {
+            let st = &self.points[&p];
+            if !st.is_core && st.attached_to.is_none() {
+                out.push(-1);
+                continue;
+            }
+            let r = self.conn.root(st.vertex);
+            let next = roots.len() as i64;
+            out.push(*roots.entry(r).or_insert(next));
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // AddPoint
+    // ------------------------------------------------------------------
+
+    /// `AddPoint(x)` with natively computed hash keys.
+    pub fn add_point(&mut self, x: &[f32]) -> PointId {
+        let keys = {
+            let mut scratch = std::mem::take(&mut self.scratch);
+            let keys = self.hasher.keys(x, &mut scratch);
+            self.scratch = scratch;
+            keys
+        };
+        self.add_point_with_keys(x, keys)
+    }
+
+    /// `AddPoint(x)` with precomputed bucket keys (the XLA-artifact hashing
+    /// path; keys must come from the same η/ε as `self.hasher`).
+    pub fn add_point_with_keys(&mut self, x: &[f32], keys: Vec<BucketKey>) -> PointId {
+        assert_eq!(x.len(), self.cfg.dim, "point dimensionality mismatch");
+        assert_eq!(keys.len(), self.cfg.t);
+        self.stats.adds += 1;
+        let idx = self.next_idx;
+        self.next_idx += 1;
+        let vertex = self.conn.add_vertex();
+        // bucket insertion + new-core detection (Algorithm 2 lines 6-11)
+        let mut newly_core: Vec<PointId> = Vec::new();
+        let mut self_core = false;
+        for i in 0..self.cfg.t {
+            let size = self.tables[i].insert(keys[i], idx);
+            if size > self.cfg.k {
+                self_core = true;
+            } else if size == self.cfg.k {
+                // the whole bucket crosses the threshold
+                self_core = true;
+                let b = self.tables[i].bucket(keys[i]);
+                for &y in &b.members {
+                    if y != idx && !self.points[&y].is_core {
+                        newly_core.push(y);
+                    }
+                }
+            }
+        }
+        self.points.insert(
+            idx,
+            PointState {
+                x: x.to_vec(),
+                keys,
+                vertex,
+                is_core: false,
+                attached_to: None,
+                attached: FxHashSet::default(),
+            },
+        );
+        if self_core {
+            newly_core.push(idx);
+        }
+        newly_core.sort_unstable();
+        newly_core.dedup();
+        // promote + link each new core (lines 12-14)
+        for &c in &newly_core {
+            self.promote(c);
+        }
+        if !self_core {
+            // line 15-16
+            self.link_non_core(idx);
+        } else if self.cfg.eager_attach {
+            self.eager_attach(idx);
+        }
+        idx
+    }
+
+    /// Mark `c` core in all its buckets, then splice it into each bucket's
+    /// core path (`LinkCorePoint`, lines 28-35).
+    fn promote(&mut self, c: PointId) {
+        debug_assert!(!self.points[&c].is_core);
+        self.stats.promotions += 1;
+        self.n_core += 1;
+        let keys = self.points[&c].keys.clone();
+        for (i, &key) in keys.iter().enumerate() {
+            self.tables[i].mark_core(key, c);
+        }
+        self.points.get_mut(&c).unwrap().is_core = true;
+        // line 29: cut any edge incident to c (it was non-core: ≤ 1 edge)
+        if let Some(h) = self.points.get_mut(&c).unwrap().attached_to.take() {
+            let (vc, vh) = (self.points[&c].vertex, self.points[&h].vertex);
+            self.conn.undesire(vc, vh);
+            self.stats.forest_cuts += 1;
+            self.points.get_mut(&h).unwrap().attached.remove(&c);
+        }
+        // lines 30-35: splice into the idx-ordered core path of each bucket
+        let vc = self.points[&c].vertex;
+        for (i, &key) in keys.iter().enumerate() {
+            let b = self.tables[i].bucket(key);
+            let c1 = b.core_pred(c);
+            let c2 = b.core_succ(c);
+            // Desire the new path edges before retracting (c1,c2) so the
+            // retraction's replacement is found in O(1) via the hint.
+            let v1 = c1.map(|c| self.points[&c].vertex);
+            let v2 = c2.map(|c| self.points[&c].vertex);
+            if let Some(v1) = v1 {
+                self.conn.desire(v1, vc);
+                self.stats.forest_links += 1;
+            }
+            if let Some(v2) = v2 {
+                self.conn.desire(vc, v2);
+                self.stats.forest_links += 1;
+            }
+            if let (Some(v1), Some(v2)) = (v1, v2) {
+                self.conn.undesire_hinted(v1, v2, &[(v1, vc), (vc, v2)]);
+                self.stats.forest_cuts += 1;
+            }
+        }
+    }
+
+    /// `LinkNonCorePoint` (lines 44-45): attach to one colliding core.
+    fn link_non_core(&mut self, p: PointId) {
+        debug_assert!(!self.points[&p].is_core);
+        debug_assert!(self.points[&p].attached_to.is_none());
+        let keys = &self.points[&p].keys;
+        let mut target = None;
+        for (i, &key) in keys.iter().enumerate() {
+            if let Some(b) = self.tables[i].get(key) {
+                if let Some(c) = b.any_core_not(p) {
+                    target = Some(c);
+                    break;
+                }
+            }
+        }
+        if let Some(c) = target {
+            let (vp, vc) = (self.points[&p].vertex, self.points[&c].vertex);
+            self.conn.desire(vp, vc);
+            self.stats.forest_links += 1;
+            self.points.get_mut(&p).unwrap().attached_to = Some(c);
+            self.points.get_mut(&c).unwrap().attached.insert(p);
+        }
+    }
+
+    /// Extension: adopt unattached non-core points in the buckets of the
+    /// fresh core `c`.
+    fn eager_attach(&mut self, c: PointId) {
+        let keys = self.points[&c].keys.clone();
+        let mut orphans: Vec<PointId> = Vec::new();
+        for (i, &key) in keys.iter().enumerate() {
+            if let Some(b) = self.tables[i].get(key) {
+                for &y in &b.members {
+                    if y != c {
+                        let st = &self.points[&y];
+                        if !st.is_core && st.attached_to.is_none() {
+                            orphans.push(y);
+                        }
+                    }
+                }
+            }
+        }
+        orphans.sort_unstable();
+        orphans.dedup();
+        for y in orphans {
+            self.link_non_core(y);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // DeletePoint
+    // ------------------------------------------------------------------
+
+    /// `DeletePoint(x)` (lines 17-27).
+    pub fn delete_point(&mut self, p: PointId) {
+        assert!(self.points.contains_key(&p), "delete of unknown point {p}");
+        self.stats.deletes += 1;
+        let is_core = self.points[&p].is_core;
+        if is_core {
+            // line 19-22: cores demoted by this removal — y loses core-ness
+            // iff after removing x from every bucket, none of y's buckets
+            // has ≥ k members.
+            let keys = self.points[&p].keys.clone();
+            let mut demoted: Vec<PointId> = Vec::new();
+            for (i, &key) in keys.iter().enumerate() {
+                let b = self.tables[i].bucket(key);
+                if b.len() == self.cfg.k {
+                    for &y in &b.members {
+                        if y != p
+                            && self.points[&y].is_core
+                            && !self.still_core_without(y, p)
+                        {
+                            demoted.push(y);
+                        }
+                    }
+                }
+            }
+            demoted.sort_unstable();
+            demoted.dedup();
+            // unlink x itself first (its pred/succ computed while it is
+            // still marked), re-link its attached non-cores elsewhere
+            self.unlink_core(p);
+            self.demote_marks(p);
+            self.reattach_orphans_of(p);
+            // drop x from all buckets before processing the demotions
+            let keys_p = self.points[&p].keys.clone();
+            for (i, &key) in keys_p.iter().enumerate() {
+                self.tables[i].remove(key, p);
+            }
+            // lines 23-26
+            for c in demoted {
+                self.unlink_core(c);
+                self.demote_marks(c);
+                self.reattach_orphans_of(c);
+                self.link_non_core(c);
+            }
+        } else {
+            if let Some(h) = self.points.get_mut(&p).unwrap().attached_to.take() {
+                let (vp, vh) = (self.points[&p].vertex, self.points[&h].vertex);
+                self.conn.undesire(vp, vh);
+                self.stats.forest_cuts += 1;
+                self.points.get_mut(&h).unwrap().attached.remove(&p);
+            }
+            let keys = self.points[&p].keys.clone();
+            for (i, &key) in keys.iter().enumerate() {
+                self.tables[i].remove(key, p);
+            }
+        }
+        // line 27: remove x from G and the point store
+        let st = self.points.remove(&p).unwrap();
+        debug_assert_eq!(
+            self.conn.tree_degree(st.vertex),
+            0,
+            "point {p} still has forest edges at removal"
+        );
+        self.conn.remove_vertex(st.vertex);
+    }
+
+    /// Would `y` still be core after removing `x` from every bucket?
+    fn still_core_without(&self, y: PointId, x: PointId) -> bool {
+        let sy = &self.points[&y];
+        let sx = &self.points[&x];
+        for (i, &key) in sy.keys.iter().enumerate() {
+            let len = self.tables[i].bucket(key).len();
+            let contains_x = sx.keys[i] == key;
+            if len - usize::from(contains_x) >= self.cfg.k {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// `UnlinkCorePoint` (lines 36-42): remove `c` from every bucket's core
+    /// path, bridging its neighbors.
+    fn unlink_core(&mut self, c: PointId) {
+        debug_assert!(self.points[&c].is_core);
+        let keys = self.points[&c].keys.clone();
+        let vc = self.points[&c].vertex;
+        for (i, &key) in keys.iter().enumerate() {
+            let b = self.tables[i].bucket(key);
+            let c1 = b.core_pred(c);
+            let c2 = b.core_succ(c);
+            // Bridge (c1,c2) first so the two retractions below repair
+            // through the hint instead of a component walk.
+            let v1 = c1.map(|c| self.points[&c].vertex);
+            let v2 = c2.map(|c| self.points[&c].vertex);
+            let mut hints: Vec<(VertexId, VertexId)> = Vec::with_capacity(1);
+            if let (Some(v1), Some(v2)) = (v1, v2) {
+                self.conn.desire(v1, v2);
+                self.stats.forest_links += 1;
+                hints.push((v1, v2));
+            }
+            if let Some(v1) = v1 {
+                self.conn.undesire_hinted(v1, vc, &hints);
+                self.stats.forest_cuts += 1;
+            }
+            if let Some(v2) = v2 {
+                self.conn.undesire_hinted(vc, v2, &hints);
+                self.stats.forest_cuts += 1;
+            }
+        }
+    }
+
+    /// Clear core marks of `c` in all tables and flip its flag.
+    fn demote_marks(&mut self, c: PointId) {
+        self.stats.demotions += 1;
+        self.n_core -= 1;
+        let keys = self.points[&c].keys.clone();
+        for (i, &key) in keys.iter().enumerate() {
+            self.tables[i].unmark_core(key, c);
+        }
+        self.points.get_mut(&c).unwrap().is_core = false;
+    }
+
+    /// Line 43 / 26: re-link every non-core point that was attached to `c`.
+    fn reattach_orphans_of(&mut self, c: PointId) {
+        let orphans: Vec<PointId> =
+            self.points.get_mut(&c).unwrap().attached.drain().collect();
+        let vc = self.points[&c].vertex;
+        for nc in orphans {
+            let vn = self.points[&nc].vertex;
+            self.conn.undesire(vc, vn);
+            self.stats.forest_cuts += 1;
+            self.points.get_mut(&nc).unwrap().attached_to = None;
+            self.link_non_core(nc);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // introspection for invariants / benches
+    // ------------------------------------------------------------------
+
+    pub(crate) fn conn(&self) -> &C {
+        &self.conn
+    }
+
+    /// Replacement-search counters from the connectivity layer.
+    pub fn repair_stats(&self) -> RepairStats {
+        self.conn.repair_stats()
+    }
+
+    pub(crate) fn tables(&self) -> &[LshTable] {
+        &self.tables
+    }
+
+    pub(crate) fn point_state(
+        &self,
+        p: PointId,
+    ) -> (bool, Option<PointId>, &FxHashSet<PointId>, VertexId) {
+        let st = &self.points[&p];
+        (st.is_core, st.attached_to, &st.attached, st.vertex)
+    }
+
+    pub(crate) fn point_keys(&self, p: PointId) -> &[BucketKey] {
+        &self.points[&p].keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{make_blobs, BlobsConfig};
+
+    fn tight_cluster(center: f32, n: usize, dim: usize) -> Vec<Vec<f32>> {
+        // n points within a tiny ball around `center`·1_d
+        (0..n)
+            .map(|i| (0..dim).map(|j| center + 1e-3 * (i + j) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn dense_region_becomes_one_cluster() {
+        let cfg = DbscanConfig { k: 5, t: 8, eps: 0.5, dim: 3, ..Default::default() };
+        let mut db = DynamicDbscan::new(cfg, 42);
+        let ids: Vec<_> = tight_cluster(0.0, 20, 3)
+            .iter()
+            .map(|p| db.add_point(p))
+            .collect();
+        assert!(db.num_core_points() >= 20 - 1, "tight ball must be core");
+        let c0 = db.get_cluster(ids[0]);
+        for &i in &ids {
+            assert_eq!(db.get_cluster(i), c0, "point {i} in different cluster");
+        }
+    }
+
+    #[test]
+    fn distant_regions_are_distinct_clusters() {
+        let cfg = DbscanConfig { k: 4, t: 8, eps: 0.3, dim: 2, ..Default::default() };
+        let mut db = DynamicDbscan::new(cfg, 7);
+        let a: Vec<_> = tight_cluster(0.0, 10, 2)
+            .iter()
+            .map(|p| db.add_point(p))
+            .collect();
+        let b: Vec<_> = tight_cluster(100.0, 10, 2)
+            .iter()
+            .map(|p| db.add_point(p))
+            .collect();
+        assert_ne!(db.get_cluster(a[0]), db.get_cluster(b[0]));
+        assert_eq!(db.get_cluster(a[3]), db.get_cluster(a[9]));
+        assert_eq!(db.get_cluster(b[3]), db.get_cluster(b[9]));
+    }
+
+    #[test]
+    fn sparse_points_are_noise() {
+        let cfg = DbscanConfig { k: 5, t: 6, eps: 0.1, dim: 2, ..Default::default() };
+        let mut db = DynamicDbscan::new(cfg, 3);
+        let mut ids = Vec::new();
+        for i in 0..10 {
+            ids.push(db.add_point(&[i as f32 * 50.0, -(i as f32) * 50.0]));
+        }
+        assert_eq!(db.num_core_points(), 0);
+        let labels = db.labels_for(&ids);
+        assert!(labels.iter().all(|&l| l == -1), "{labels:?}");
+    }
+
+    #[test]
+    fn delete_reverses_add() {
+        let cfg = DbscanConfig { k: 5, t: 8, eps: 0.5, dim: 3, ..Default::default() };
+        let mut db = DynamicDbscan::new(cfg, 42);
+        let pts = tight_cluster(0.0, 30, 3);
+        let ids: Vec<_> = pts.iter().map(|p| db.add_point(p)).collect();
+        assert!(db.num_core_points() > 0);
+        for &i in &ids {
+            db.delete_point(i);
+        }
+        assert_eq!(db.num_points(), 0);
+        assert_eq!(db.num_core_points(), 0);
+        // structure stays usable
+        let j = db.add_point(&pts[0]);
+        assert!(db.contains(j));
+    }
+
+    #[test]
+    fn delete_can_split_clusters() {
+        // two tight balls joined by a bridge point; deleting the bridge
+        // separates them (when the bridge was the only collision path).
+        let cfg = DbscanConfig { k: 3, t: 10, eps: 0.6, dim: 1, ..Default::default() };
+        let mut db = DynamicDbscan::new(cfg, 11);
+        let left: Vec<_> = (0..6).map(|i| vec![0.0 + 0.01 * i as f32]).collect();
+        let right: Vec<_> = (0..6).map(|i| vec![2.0 + 0.01 * i as f32]).collect();
+        let lids: Vec<_> = left.iter().map(|p| db.add_point(p)).collect();
+        let rids: Vec<_> = right.iter().map(|p| db.add_point(p)).collect();
+        // bridge cloud in the middle making everything one component
+        let bids: Vec<_> =
+            (0..6).map(|i| db.add_point(&[1.0 + 0.01 * i as f32])).collect();
+        let one = db.get_cluster(lids[0]);
+        if db.get_cluster(rids[0]) == one {
+            // bridge connected them; removing the bridge must split them
+            for &b in &bids {
+                db.delete_point(b);
+            }
+            assert_ne!(db.get_cluster(lids[0]), db.get_cluster(rids[0]));
+        }
+    }
+
+    #[test]
+    fn labels_noise_and_dense() {
+        let cfg = DbscanConfig { k: 4, t: 8, eps: 0.4, dim: 2, ..Default::default() };
+        let mut db = DynamicDbscan::new(cfg, 5);
+        let mut ids = Vec::new();
+        for p in tight_cluster(0.0, 10, 2) {
+            ids.push(db.add_point(&p));
+        }
+        ids.push(db.add_point(&[500.0, 500.0])); // isolated noise
+        let labels = db.labels_for(&ids);
+        assert_eq!(labels[10], -1);
+        assert!(labels[..10].iter().all(|&l| l == labels[0] && l >= 0));
+    }
+
+    #[test]
+    fn blobs_end_to_end_quality() {
+        // 3 well-separated blobs; ARI of the maintained labels ≈ 1
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 900,
+                dim: 4,
+                clusters: 3,
+                std: 0.3,
+                center_box: 20.0,
+                weights: vec![],
+            },
+            13,
+        );
+        let cfg = DbscanConfig {
+            k: 8,
+            t: 10,
+            eps: 0.75,
+            dim: 4,
+            ..Default::default()
+        };
+        let mut db = DynamicDbscan::new(cfg, 99);
+        let ids: Vec<_> = (0..ds.n()).map(|i| db.add_point(ds.point(i))).collect();
+        let pred = db.labels_for(&ids);
+        let ari = crate::metrics::adjusted_rand_index(&ds.labels, &pred);
+        assert!(ari > 0.98, "ARI {ari} too low on separable blobs");
+    }
+
+    #[test]
+    #[should_panic(expected = "delete of unknown point")]
+    fn double_delete_panics() {
+        let cfg = DbscanConfig { dim: 1, ..Default::default() };
+        let mut db = DynamicDbscan::new(cfg, 1);
+        let p = db.add_point(&[0.0]);
+        db.delete_point(p);
+        db.delete_point(p);
+    }
+}
+
+impl<C: Connectivity> DynamicDbscan<C> {
+    /// Test-only structural dump: per-point (core?, attached_to) and per
+    /// table the bucket membership, plus forest edge list between points.
+    pub fn debug_dump(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let mut ids: Vec<PointId> = self.points.keys().copied().collect();
+        ids.sort_unstable();
+        for &p in &ids {
+            let st = &self.points[&p];
+            write!(s, "p{p}(core={},att={:?}) ", st.is_core, st.attached_to).ok();
+        }
+        for (i, t) in self.tables.iter().enumerate() {
+            write!(s, "| T{i}: ").ok();
+            for (_, b) in t.iter() {
+                let mut m: Vec<_> = b.members.iter().collect();
+                m.sort();
+                write!(s, "{m:?}c{:?} ", b.cores).ok();
+            }
+        }
+        write!(s, "| edges: ").ok();
+        for &a in &ids {
+            for &b in &ids {
+                if a < b
+                    && self
+                        .conn
+                        .has_tree_edge(self.points[&a].vertex, self.points[&b].vertex)
+                {
+                    write!(s, "({a},{b}) ").ok();
+                }
+            }
+        }
+        s
+    }
+}

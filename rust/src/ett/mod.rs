@@ -1,0 +1,570 @@
+//! Euler Tour Trees: the dynamic-forest data structure of the paper.
+//!
+//! A forest on vertices supports `link`, `cut`, `root` (a canonical cluster
+//! identifier) and connectivity queries in `O(log n)` by storing the **Euler
+//! tour sequence** of every tree in a balanced sequence structure
+//! (Henzinger & King '95). Two interchangeable sequence backends are
+//! provided:
+//!
+//! * [`treap::TreapSeq`] — randomized balanced BST (the classic
+//!   Henzinger–King realization);
+//! * [`skiplist::SkipSeq`] — indexable skip list (the Tseng–Dhulipala–
+//!   Blelloch '19 realization the paper adopts).
+//!
+//! Both implement the [`Sequence`] trait; [`EulerForest`] contains all the
+//! Euler-tour logic generically, so the two backends are exactly comparable
+//! in the `bench_ett` ablation.
+//!
+//! ## Representation
+//!
+//! The tour of a tree rooted at `r` is the arc sequence
+//! `tour(r) = (r,r) ⧺ [(r,c) ⧺ tour(c) ⧺ (c,r) for each child c]`,
+//! i.e. one *loop arc* per vertex and two *edge arcs* per tree edge, so a
+//! tree with `v` vertices has a tour of length `3v − 2`. With this encoding:
+//!
+//! * `link(u,v)`  = reroot both tours and concatenate with the two new arcs;
+//! * `cut(u,v)`   = split out the sub-sequence between the two edge arcs;
+//! * `root(v)`    = canonical id of the sequence containing v's loop arc;
+//! * `size(v)`    = `(len + 2) / 3`.
+
+pub mod naive;
+pub mod skiplist;
+pub mod treap;
+
+use rustc_hash::FxHashMap;
+
+/// Handle to a sequence element. `u32::MAX` is reserved as NIL internally.
+pub type Node = u32;
+pub const NIL: Node = u32::MAX;
+
+/// Vertex identifier within a forest.
+pub type VertexId = u32;
+
+/// A splittable, joinable sequence of elements with canonical per-sequence
+/// identifiers. This is the exact interface Euler tour trees need; both the
+/// treap and the skip-list provide it in `O(log n)` expected per call.
+pub trait Sequence {
+    /// Allocate a fresh element forming its own singleton sequence.
+    fn new_node(&mut self) -> Node;
+    /// Free an element. Must currently be a singleton sequence.
+    fn free_node(&mut self, x: Node);
+    /// Canonical identifier of x's sequence — stable between mutations.
+    fn seq_id(&self, x: Node) -> u64;
+    /// Are a and b in the same sequence?
+    fn same_seq(&self, a: Node, b: Node) -> bool {
+        self.seq_id(a) == self.seq_id(b)
+    }
+    /// Number of elements in x's sequence.
+    fn seq_len(&self, x: Node) -> usize;
+    /// First element of x's sequence.
+    fn first_of_seq(&self, x: Node) -> Node;
+    /// In-sequence predecessor / successor.
+    fn prev(&self, x: Node) -> Option<Node>;
+    fn next(&self, x: Node) -> Option<Node>;
+    /// Split x's sequence so that x becomes the first element of a new
+    /// sequence (no-op when x is already first).
+    fn split_before(&mut self, x: Node);
+    /// Split x's sequence so that x becomes the last element (no-op when x
+    /// is already last).
+    fn split_after(&mut self, x: Node);
+    /// Concatenate: sequence containing `a` followed by sequence containing
+    /// `b`. Must be different sequences.
+    fn concat(&mut self, a: Node, b: Node);
+    /// Number of live elements (for leak tests).
+    fn live_nodes(&self) -> usize;
+}
+
+/// Dynamic forest interface consumed by the DBSCAN layer (and by the test
+/// oracle comparisons).
+pub trait Forest {
+    fn add_vertex(&mut self) -> VertexId;
+    /// Remove an isolated vertex (degree 0). Panics otherwise.
+    fn remove_vertex(&mut self, v: VertexId);
+    /// Add edge {u,v} iff u, v are in different trees. Returns whether the
+    /// edge was added.
+    fn link(&mut self, u: VertexId, v: VertexId) -> bool;
+    /// Remove edge {u,v} if it exists. Returns whether an edge was removed.
+    fn cut(&mut self, u: VertexId, v: VertexId) -> bool;
+    /// Canonical identifier of v's tree — stable until the next mutation.
+    fn root(&self, v: VertexId) -> u64;
+    fn connected(&self, u: VertexId, v: VertexId) -> bool {
+        self.root(u) == self.root(v)
+    }
+    /// Number of vertices in v's tree.
+    fn component_size(&self, v: VertexId) -> usize;
+    /// Degree of v in the forest.
+    fn degree(&self, v: VertexId) -> usize;
+    fn has_edge(&self, u: VertexId, v: VertexId) -> bool;
+    fn num_vertices(&self) -> usize;
+    fn num_edges(&self) -> usize;
+    /// All vertices of v's tree, O(component size). Used by the
+    /// replacement-search connectivity repair (see `dbscan::connectivity`).
+    fn component_vertices(&self, v: VertexId) -> Vec<VertexId>;
+}
+
+/// Euler-tour forest over any [`Sequence`] backend.
+pub struct EulerForest<S: Sequence> {
+    seq: S,
+    /// loop-arc node per vertex (NIL in freed slots).
+    verts: Vec<Node>,
+    degree: Vec<u32>,
+    free_verts: Vec<VertexId>,
+    /// {u,v} (u<v) → (arc u→v, arc v→u)
+    edges: FxHashMap<(VertexId, VertexId), (Node, Node)>,
+    /// loop arc → vertex (inverse of `verts`; used by tour traversal)
+    loop_of: FxHashMap<Node, VertexId>,
+    live: usize,
+}
+
+#[inline]
+fn ekey(u: VertexId, v: VertexId) -> (VertexId, VertexId) {
+    if u < v {
+        (u, v)
+    } else {
+        (v, u)
+    }
+}
+
+impl<S: Sequence> EulerForest<S> {
+    pub fn with_backend(seq: S) -> Self {
+        EulerForest {
+            seq,
+            verts: Vec::new(),
+            degree: Vec::new(),
+            free_verts: Vec::new(),
+            edges: FxHashMap::default(),
+            loop_of: FxHashMap::default(),
+            live: 0,
+        }
+    }
+
+    #[inline]
+    fn loop_node(&self, v: VertexId) -> Node {
+        let n = self.verts[v as usize];
+        debug_assert_ne!(n, NIL, "vertex {v} is not live");
+        n
+    }
+
+    /// Rotate v's tour so it starts at v's loop arc.
+    fn reroot(&mut self, v: VertexId) {
+        let lv = self.loop_node(v);
+        let first = self.seq.first_of_seq(lv);
+        if first != lv {
+            self.seq.split_before(lv);
+            // tour = B(starting at lv) ++ A(starting at old first)
+            self.seq.concat(lv, first);
+        }
+    }
+}
+
+impl<S: Sequence> Forest for EulerForest<S> {
+    fn add_vertex(&mut self) -> VertexId {
+        let n = self.seq.new_node();
+        self.live += 1;
+        let v = if let Some(v) = self.free_verts.pop() {
+            self.verts[v as usize] = n;
+            self.degree[v as usize] = 0;
+            v
+        } else {
+            self.verts.push(n);
+            self.degree.push(0);
+            (self.verts.len() - 1) as VertexId
+        };
+        self.loop_of.insert(n, v);
+        v
+    }
+
+    fn remove_vertex(&mut self, v: VertexId) {
+        assert_eq!(
+            self.degree[v as usize], 0,
+            "remove_vertex: vertex {v} still has incident edges"
+        );
+        let n = self.loop_node(v);
+        debug_assert_eq!(self.seq.seq_len(n), 1);
+        self.seq.free_node(n);
+        self.loop_of.remove(&n);
+        self.live -= 1;
+        self.verts[v as usize] = NIL;
+        self.free_verts.push(v);
+    }
+
+    fn link(&mut self, u: VertexId, v: VertexId) -> bool {
+        assert_ne!(u, v, "self-loops are not allowed");
+        let lu = self.loop_node(u);
+        let lv = self.loop_node(v);
+        if self.seq.same_seq(lu, lv) {
+            return false;
+        }
+        self.reroot(u);
+        self.reroot(v);
+        let auv = self.seq.new_node();
+        let avu = self.seq.new_node();
+        self.live += 2;
+        // Tu ++ (u,v) ++ Tv ++ (v,u)
+        self.seq.concat(lu, auv);
+        self.seq.concat(lu, lv);
+        self.seq.concat(lu, avu);
+        let (a, b) = if u < v { (auv, avu) } else { (avu, auv) };
+        self.edges.insert(ekey(u, v), (a, b));
+        self.degree[u as usize] += 1;
+        self.degree[v as usize] += 1;
+        true
+    }
+
+    fn cut(&mut self, u: VertexId, v: VertexId) -> bool {
+        let Some((a, b)) = self.edges.remove(&ekey(u, v)) else {
+            return false;
+        };
+        // The tour is S = A ⧺ [n1] ⧺ M ⧺ [n2] ⧺ C where {n1,n2} = {a,b} in
+        // unknown order; M is the inner subtree's tour, A ⧺ C the outer's.
+        // Capture the boundary neighbors before any splits.
+        let pa = self.seq.prev(a);
+        let pb = self.seq.prev(b);
+        // After split_before(a): if b is still with a, a precedes b.
+        self.seq.split_before(a);
+        let (n1, n2, a_last) =
+            if self.seq.same_seq(a, b) { (a, b, pa) } else { (b, a, pb) };
+        if n1 != a {
+            self.seq.split_before(n1); // [A] | [n1 M n2 C]
+        }
+        self.seq.split_after(n1); // [n1] | [M n2 C]
+        self.seq.split_before(n2); // [M] | [n2 C]
+        let c_first = self.seq.next(n2);
+        self.seq.split_after(n2); // [n2] | [C]
+        // Outer tour: A ⧺ C (either side may be absent).
+        if let (Some(al), Some(cf)) = (a_last, c_first) {
+            self.seq.concat(al, cf);
+        }
+        debug_assert_eq!(self.seq.seq_len(n1), 1);
+        debug_assert_eq!(self.seq.seq_len(n2), 1);
+        self.seq.free_node(n1);
+        self.seq.free_node(n2);
+        self.live -= 2;
+        self.degree[u as usize] -= 1;
+        self.degree[v as usize] -= 1;
+        true
+    }
+
+    fn root(&self, v: VertexId) -> u64 {
+        self.seq.seq_id(self.loop_node(v))
+    }
+
+    fn component_size(&self, v: VertexId) -> usize {
+        let len = self.seq.seq_len(self.loop_node(v));
+        debug_assert_eq!((len + 2) % 3, 0, "tour length {len} malformed");
+        (len + 2) / 3
+    }
+
+    fn degree(&self, v: VertexId) -> usize {
+        self.degree[v as usize] as usize
+    }
+
+    fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.edges.contains_key(&ekey(u, v))
+    }
+
+    fn num_vertices(&self) -> usize {
+        self.verts.len() - self.free_verts.len()
+    }
+
+    fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    fn component_vertices(&self, v: VertexId) -> Vec<VertexId> {
+        // walk the Euler tour once, collecting loop arcs
+        let lv = self.loop_node(v);
+        let mut out = Vec::new();
+        let mut cur = Some(self.seq.first_of_seq(lv));
+        while let Some(n) = cur {
+            if let Some(&w) = self.loop_of.get(&n) {
+                out.push(w);
+            }
+            cur = self.seq.next(n);
+        }
+        out
+    }
+}
+
+/// The default (paper) forest: skip-list Euler tour sequences.
+pub type SkipForest = EulerForest<skiplist::SkipSeq>;
+/// Henzinger–King style balanced-BST forest.
+pub type TreapForest = EulerForest<treap::TreapSeq>;
+
+impl SkipForest {
+    pub fn new(seed: u64) -> Self {
+        EulerForest::with_backend(skiplist::SkipSeq::new(seed))
+    }
+}
+
+impl TreapForest {
+    pub fn new(seed: u64) -> Self {
+        EulerForest::with_backend(treap::TreapSeq::new(seed))
+    }
+}
+
+/// Shared test scenario: drive a [`Sequence`] implementation against a
+/// `Vec<Vec<Node>>` oracle under random split/concat churn, auditing order,
+/// ids, lengths and neighbors after every op.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::proptest::Gen;
+
+    pub(crate) fn sequence_oracle_scenario<S: Sequence>(s: &mut S, g: &mut Gen) {
+        let n = g.usize_in(1..=20);
+        let mut seqs: Vec<Vec<Node>> = (0..n).map(|_| vec![s.new_node()]).collect();
+        let ops = g.usize_in(0..=80);
+        for _ in 0..ops {
+            match g.usize_in(0..=2) {
+                0 => {
+                    // concat two random distinct sequences
+                    if seqs.len() >= 2 {
+                        let i = g.usize_in(0..=seqs.len() - 1);
+                        let mut j = g.usize_in(0..=seqs.len() - 1);
+                        if i == j {
+                            j = (j + 1) % seqs.len();
+                        }
+                        let (i, j) = (i.min(j), i.max(j));
+                        let b = seqs.remove(j);
+                        let pa = *g.choose(&seqs[i]);
+                        let pb = *g.choose(&b);
+                        s.concat(pa, pb);
+                        seqs[i].extend(b);
+                    }
+                }
+                1 => {
+                    // split a random sequence before a random element
+                    let i = g.usize_in(0..=seqs.len() - 1);
+                    let at = g.usize_in(0..=seqs[i].len() - 1);
+                    s.split_before(seqs[i][at]);
+                    if at > 0 {
+                        let right = seqs[i].split_off(at);
+                        seqs.push(right);
+                    }
+                }
+                _ => {
+                    // split after
+                    let i = g.usize_in(0..=seqs.len() - 1);
+                    let at = g.usize_in(0..=seqs[i].len() - 1);
+                    s.split_after(seqs[i][at]);
+                    if at + 1 < seqs[i].len() {
+                        let right = seqs[i].split_off(at + 1);
+                        seqs.push(right);
+                    }
+                }
+            }
+            // audit everything
+            for seq in &seqs {
+                let id = s.seq_id(seq[0]);
+                assert_eq!(s.seq_len(seq[0]), seq.len());
+                assert_eq!(s.first_of_seq(*seq.last().unwrap()), seq[0]);
+                for (k, &x) in seq.iter().enumerate() {
+                    assert_eq!(s.seq_id(x), id, "consistent id within seq");
+                    let want_prev = if k > 0 { Some(seq[k - 1]) } else { None };
+                    let want_next =
+                        if k + 1 < seq.len() { Some(seq[k + 1]) } else { None };
+                    assert_eq!(s.prev(x), want_prev, "prev of pos {k}");
+                    assert_eq!(s.next(x), want_next, "next of pos {k}");
+                }
+            }
+            // distinct sequences must have distinct ids
+            let ids: Vec<u64> = seqs.iter().map(|q| s.seq_id(q[0])).collect();
+            let mut dedup = ids.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), seqs.len(), "id collision across sequences");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::naive::NaiveForest;
+    use super::*;
+    use crate::util::proptest::{run_prop, Gen};
+
+    fn forest_smoke<F: Forest>(mut f: F) {
+        let a = f.add_vertex();
+        let b = f.add_vertex();
+        let c = f.add_vertex();
+        let d = f.add_vertex();
+        assert!(!f.connected(a, b));
+        assert!(f.link(a, b));
+        assert!(!f.link(a, b), "duplicate link must be rejected");
+        assert!(f.link(c, d));
+        assert!(!f.connected(a, c));
+        assert!(f.link(b, c));
+        assert!(f.connected(a, d));
+        assert!(!f.link(a, d), "cycle link must be rejected");
+        assert_eq!(f.component_size(a), 4);
+        assert_eq!(f.degree(b), 2);
+        assert!(f.cut(b, c));
+        assert!(!f.cut(b, c));
+        assert!(!f.connected(a, c));
+        assert_eq!(f.component_size(a), 2);
+        assert_eq!(f.component_size(c), 2);
+        assert!(f.cut(a, b));
+        assert!(f.cut(c, d));
+        for v in [a, b, c, d] {
+            assert_eq!(f.component_size(v), 1);
+            f.remove_vertex(v);
+        }
+        assert_eq!(f.num_vertices(), 0);
+        assert_eq!(f.num_edges(), 0);
+    }
+
+    #[test]
+    fn treap_smoke() {
+        forest_smoke(TreapForest::new(1));
+    }
+
+    #[test]
+    fn skiplist_smoke() {
+        forest_smoke(SkipForest::new(1));
+    }
+
+    /// Drive random link/cut/remove sequences and compare connectivity,
+    /// component sizes and degrees against the DFS oracle.
+    fn forest_matches_oracle<F: Forest>(make: impl Fn(u64) -> F) {
+        run_prop("forest matches naive oracle", 60, |g: &mut Gen| {
+            let n = g.usize_in(2..=24);
+            let mut f = make(g.rng.next_u64());
+            let mut o = NaiveForest::new();
+            let vf: Vec<VertexId> = (0..n).map(|_| f.add_vertex()).collect();
+            let vo: Vec<VertexId> = (0..n).map(|_| o.add_vertex()).collect();
+            let ops = g.usize_in(1..=120);
+            let mut edges: Vec<(usize, usize)> = Vec::new();
+            for _ in 0..ops {
+                let a = g.usize_in(0..=n - 1);
+                let mut b = g.usize_in(0..=n - 1);
+                if a == b {
+                    b = (b + 1) % n;
+                }
+                match g.usize_in(0..=2) {
+                    0 => {
+                        let rf = f.link(vf[a], vf[b]);
+                        let ro = o.link(vo[a], vo[b]);
+                        assert_eq!(rf, ro, "link({a},{b}) disagreement");
+                        if rf {
+                            edges.push((a, b));
+                        }
+                    }
+                    1 => {
+                        // cut a random existing edge (or a non-edge probe)
+                        if !edges.is_empty() && g.rng.coin(0.8) {
+                            let i = g.usize_in(0..=edges.len() - 1);
+                            let (x, y) = edges.swap_remove(i);
+                            assert!(f.cut(vf[x], vf[y]));
+                            assert!(o.cut(vo[x], vo[y]));
+                        } else {
+                            let rf = f.cut(vf[a], vf[b]);
+                            let ro = o.cut(vo[a], vo[b]);
+                            assert_eq!(rf, ro);
+                            if rf {
+                                edges.retain(|&(x, y)| {
+                                    (x, y) != (a, b) && (x, y) != (b, a)
+                                });
+                            }
+                        }
+                    }
+                    _ => {
+                        // consistency audit of the full state
+                        for i in 0..n {
+                            assert_eq!(
+                                f.component_size(vf[i]),
+                                o.component_size(vo[i]),
+                                "component size of {i}"
+                            );
+                            assert_eq!(f.degree(vf[i]), o.degree(vo[i]));
+                            for j in 0..n {
+                                assert_eq!(
+                                    f.connected(vf[i], vf[j]),
+                                    o.connected(vo[i], vo[j]),
+                                    "connectivity({i},{j})"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            // root must be identical within components, distinct across
+            let mut seen: std::collections::HashMap<u64, u64> =
+                std::collections::HashMap::new();
+            for i in 0..n {
+                let rf = f.root(vf[i]);
+                let ro = o.root(vo[i]);
+                match seen.get(&ro) {
+                    Some(&expect) => assert_eq!(rf, expect),
+                    None => {
+                        assert!(
+                            !seen.values().any(|&x| x == rf),
+                            "distinct components share a root id"
+                        );
+                        seen.insert(ro, rf);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn treap_matches_oracle() {
+        forest_matches_oracle(TreapForest::new);
+    }
+
+    #[test]
+    fn skiplist_matches_oracle() {
+        forest_matches_oracle(SkipForest::new);
+    }
+
+    #[test]
+    fn no_node_leaks_after_churn() {
+        let mut f = TreapForest::new(3);
+        let vs: Vec<_> = (0..10).map(|_| f.add_vertex()).collect();
+        for w in 1..10 {
+            f.link(vs[0], vs[w]);
+        }
+        for w in 1..10 {
+            f.cut(vs[0], vs[w]);
+        }
+        for &v in &vs {
+            f.remove_vertex(v);
+        }
+        assert_eq!(f.seq.live_nodes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "still has incident edges")]
+    fn remove_nonisolated_panics() {
+        let mut f = TreapForest::new(4);
+        let a = f.add_vertex();
+        let b = f.add_vertex();
+        f.link(a, b);
+        f.remove_vertex(a);
+    }
+
+    #[test]
+    fn large_path_and_star() {
+        for backend in 0..2 {
+            let mut f: Box<dyn Forest> = if backend == 0 {
+                Box::new(TreapForest::new(9))
+            } else {
+                Box::new(SkipForest::new(9))
+            };
+            let n = 2000;
+            let vs: Vec<_> = (0..n).map(|_| f.add_vertex()).collect();
+            // path
+            for i in 1..n {
+                assert!(f.link(vs[i - 1], vs[i]));
+            }
+            assert_eq!(f.component_size(vs[0]), n);
+            assert!(f.connected(vs[0], vs[n - 1]));
+            // cut the middle
+            assert!(f.cut(vs[n / 2 - 1], vs[n / 2]));
+            assert!(!f.connected(vs[0], vs[n - 1]));
+            assert_eq!(f.component_size(vs[0]), n / 2);
+            assert_eq!(f.component_size(vs[n - 1]), n / 2);
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Naive dynamic forest: adjacency sets + DFS. `O(n)` per query — the test
+//! oracle for the Euler-tour backends and a baseline in the `bench_ett`
+//! ablation.
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::{Forest, VertexId};
+
+#[derive(Default)]
+pub struct NaiveForest {
+    adj: Vec<Option<BTreeSet<VertexId>>>,
+    free: Vec<VertexId>,
+    edges: usize,
+}
+
+impl NaiveForest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn component(&self, v: VertexId) -> Vec<VertexId> {
+        let mut seen = HashMap::new();
+        let mut stack = vec![v];
+        seen.insert(v, ());
+        while let Some(x) = stack.pop() {
+            for &y in self.adj[x as usize].as_ref().unwrap() {
+                if seen.insert(y, ()).is_none() {
+                    stack.push(y);
+                }
+            }
+        }
+        let mut out: Vec<VertexId> = seen.into_keys().collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+impl Forest for NaiveForest {
+    fn add_vertex(&mut self) -> VertexId {
+        if let Some(v) = self.free.pop() {
+            self.adj[v as usize] = Some(BTreeSet::new());
+            v
+        } else {
+            self.adj.push(Some(BTreeSet::new()));
+            (self.adj.len() - 1) as VertexId
+        }
+    }
+
+    fn remove_vertex(&mut self, v: VertexId) {
+        assert!(
+            self.adj[v as usize].as_ref().unwrap().is_empty(),
+            "remove_vertex: vertex {v} still has incident edges"
+        );
+        self.adj[v as usize] = None;
+        self.free.push(v);
+    }
+
+    fn link(&mut self, u: VertexId, v: VertexId) -> bool {
+        assert_ne!(u, v);
+        if self.connected(u, v) {
+            return false;
+        }
+        self.adj[u as usize].as_mut().unwrap().insert(v);
+        self.adj[v as usize].as_mut().unwrap().insert(u);
+        self.edges += 1;
+        true
+    }
+
+    fn cut(&mut self, u: VertexId, v: VertexId) -> bool {
+        let removed = self.adj[u as usize].as_mut().unwrap().remove(&v);
+        if removed {
+            self.adj[v as usize].as_mut().unwrap().remove(&u);
+            self.edges -= 1;
+        }
+        removed
+    }
+
+    fn root(&self, v: VertexId) -> u64 {
+        // canonical: minimum vertex id in the component
+        self.component(v)[0] as u64
+    }
+
+    fn component_size(&self, v: VertexId) -> usize {
+        self.component(v).len()
+    }
+
+    fn degree(&self, v: VertexId) -> usize {
+        self.adj[v as usize].as_ref().unwrap().len()
+    }
+
+    fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.adj[u as usize]
+            .as_ref()
+            .map(|s| s.contains(&v))
+            .unwrap_or(false)
+    }
+
+    fn num_vertices(&self) -> usize {
+        self.adj.iter().filter(|a| a.is_some()).count()
+    }
+
+    fn num_edges(&self) -> usize {
+        self.edges
+    }
+
+    fn component_vertices(&self, v: VertexId) -> Vec<VertexId> {
+        self.component(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_basics() {
+        let mut f = NaiveForest::new();
+        let a = f.add_vertex();
+        let b = f.add_vertex();
+        let c = f.add_vertex();
+        assert!(f.link(a, b));
+        assert!(!f.link(b, a));
+        assert!(f.link(b, c));
+        assert!(!f.link(a, c));
+        assert_eq!(f.root(a), f.root(c));
+        assert_eq!(f.component_size(b), 3);
+        assert!(f.cut(a, b));
+        assert_ne!(f.root(a), f.root(c));
+    }
+}

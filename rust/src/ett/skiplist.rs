@@ -1,0 +1,366 @@
+//! Skip-list-backed sequence: the Tseng–Dhulipala–Blelloch '19 Euler tour
+//! realization the paper adopts.
+//!
+//! Each sequence is a linear, *indexable* skip list headed by a full-height
+//! sentinel. Every forward link stores its **width** (number of level-0
+//! steps it spans), which makes sequence length an `O(log n)` walk and lets
+//! splits repair the widths of boundary-crossing links without rescans.
+//!
+//! * `seq_id(x)`       — walk up-left from `x` to the sentinel (`O(log n)`
+//!                       expected: each leftward step at level ℓ lands on a
+//!                       taller node with prob. ½).
+//! * `split_before(x)` — the same walk records, per level, the nearest
+//!                       left anchor of height > ℓ; exactly those links
+//!                       cross the boundary and are re-pointed at a fresh
+//!                       sentinel with recomputed widths.
+//! * `concat(a, b)`    — a top-down right walk from A's sentinel finds the
+//!                       per-level tails; B's sentinel is spliced out.
+
+use crate::util::rng::Rng;
+
+use super::{Node, Sequence, NIL};
+
+/// Maximum tower height (supports sequences of ~2²⁶ elements; tours are
+/// 3v−2 elements so this covers ~2·10⁷ vertices per tree).
+const MAX_H: usize = 26;
+
+#[derive(Clone, Copy)]
+struct Lvl {
+    prev: Node,
+    next: Node,
+    /// level-0 steps spanned by the `next` link (0 when next == NIL).
+    width: u32,
+}
+
+const EMPTY_LVL: Lvl = Lvl { prev: NIL, next: NIL, width: 0 };
+
+/// Node header; the tower's `h` levels live contiguously in the arena at
+/// `[base, base + h)`. Flat storage removes a pointer indirection per level
+/// access and keeps towers cache-resident (the up-left walk is the hottest
+/// loop in the whole system — see EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy)]
+struct SNode {
+    base: u32,
+    h: u8,
+    sentinel: bool,
+}
+
+pub struct SkipSeq {
+    n: Vec<SNode>,
+    /// tower arena
+    lvs: Vec<Lvl>,
+    /// reusable node ids by tower height
+    free_by_h: Vec<Vec<Node>>,
+    rng: Rng,
+    live: usize,
+}
+
+impl SkipSeq {
+    pub fn new(seed: u64) -> Self {
+        SkipSeq {
+            n: Vec::new(),
+            lvs: Vec::new(),
+            free_by_h: vec![Vec::new(); MAX_H + 1],
+            rng: Rng::new(seed),
+            live: 0,
+        }
+    }
+
+    #[inline]
+    fn h(&self, x: Node) -> usize {
+        self.n[x as usize].h as usize
+    }
+
+    /// Level ℓ of node x (immutable).
+    #[inline]
+    fn lv(&self, x: Node, l: usize) -> Lvl {
+        let nd = self.n[x as usize];
+        debug_assert!(l < nd.h as usize);
+        self.lvs[nd.base as usize + l]
+    }
+
+    /// Level ℓ of node x (mutable).
+    #[inline]
+    fn lv_mut(&mut self, x: Node, l: usize) -> &mut Lvl {
+        let nd = self.n[x as usize];
+        debug_assert!(l < nd.h as usize);
+        &mut self.lvs[nd.base as usize + l]
+    }
+
+    fn alloc(&mut self, height: usize, sentinel: bool) -> Node {
+        if let Some(x) = self.free_by_h[height].pop() {
+            let base = self.n[x as usize].base as usize;
+            self.lvs[base..base + height].fill(EMPTY_LVL);
+            self.n[x as usize].sentinel = sentinel;
+            return x;
+        }
+        let base = self.lvs.len() as u32;
+        self.lvs.extend(std::iter::repeat(EMPTY_LVL).take(height));
+        self.n.push(SNode { base, h: height as u8, sentinel });
+        (self.n.len() - 1) as Node
+    }
+
+    fn release(&mut self, x: Node) {
+        let h = self.n[x as usize].h as usize;
+        self.free_by_h[h].push(x);
+    }
+
+    /// Up-left walk from element `x`: returns its sentinel, its 1-based
+    /// position, and (optionally via `anchors`) per level ℓ the nearest node
+    /// of height > ℓ at-or-left of x together with `pos(x) − pos(anchor)`.
+    fn walk_up_left(
+        &self,
+        x: Node,
+        mut anchors: Option<&mut [(Node, u32); MAX_H]>,
+    ) -> (Node, u32) {
+        let mut cur = x;
+        let mut delta = 0u32; // pos(x) - pos(cur)
+        let mut l = 0usize;
+        loop {
+            let nd = self.n[cur as usize];
+            if let Some(a) = anchors.as_deref_mut() {
+                while l < nd.h as usize {
+                    a[l] = (cur, delta);
+                    l += 1;
+                }
+            }
+            if nd.sentinel {
+                return (cur, delta);
+            }
+            let top = nd.h as usize - 1;
+            let q = self.lvs[nd.base as usize + top].prev;
+            debug_assert_ne!(q, NIL, "non-sentinel node missing prev at top level");
+            let qn = self.n[q as usize];
+            delta += self.lvs[qn.base as usize + top].width;
+            cur = q;
+        }
+    }
+
+    /// Down-right walk from a sentinel: per-level tail nodes and their
+    /// positions, plus the sequence length.
+    fn tails(&self, sentinel: Node) -> ([(Node, u32); MAX_H], u32) {
+        let mut out = [(sentinel, 0u32); MAX_H];
+        let mut cur = sentinel;
+        let mut pos = 0u32;
+        for l in (0..MAX_H).rev() {
+            loop {
+                // cur always has height > l on this walk
+                let lvl = self.lv(cur, l);
+                if lvl.next == NIL {
+                    break;
+                }
+                pos += lvl.width;
+                cur = lvl.next;
+            }
+            out[l] = (cur, pos);
+        }
+        (out, pos)
+    }
+
+    fn sentinel_of(&self, x: Node) -> Node {
+        if self.n[x as usize].sentinel {
+            return x;
+        }
+        self.walk_up_left(x, None).0
+    }
+
+    /// 1-based position of element x within its sequence (pos 0 = sentinel).
+    #[cfg(test)]
+    fn pos(&self, x: Node) -> u32 {
+        self.walk_up_left(x, None).1
+    }
+}
+
+impl Sequence for SkipSeq {
+    fn new_node(&mut self) -> Node {
+        let height = (1 + self.rng.skip_height(MAX_H as u32 - 1)) as usize;
+        let x = self.alloc(height, false);
+        let s = self.alloc(MAX_H, true);
+        for l in 0..height {
+            *self.lv_mut(s, l) = Lvl { prev: NIL, next: x, width: 1 };
+            *self.lv_mut(x, l) = Lvl { prev: s, next: NIL, width: 0 };
+        }
+        self.live += 1;
+        x
+    }
+
+    fn free_node(&mut self, x: Node) {
+        assert!(!self.n[x as usize].sentinel);
+        let s = self.lv(x, 0).prev;
+        assert!(
+            self.n[s as usize].sentinel && self.lv(x, 0).next == NIL,
+            "free_node: node {x} is not a singleton sequence"
+        );
+        self.release(x);
+        self.release(s);
+        self.live -= 1;
+    }
+
+    fn seq_id(&self, x: Node) -> u64 {
+        self.sentinel_of(x) as u64
+    }
+
+    fn seq_len(&self, x: Node) -> usize {
+        let s = self.sentinel_of(x);
+        self.tails(s).1 as usize
+    }
+
+    fn first_of_seq(&self, x: Node) -> Node {
+        let s = self.sentinel_of(x);
+        let f = self.lv(s, 0).next;
+        debug_assert_ne!(f, NIL, "externally visible sequences are non-empty");
+        f
+    }
+
+    fn prev(&self, x: Node) -> Option<Node> {
+        let p = self.lv(x, 0).prev;
+        if p == NIL || self.n[p as usize].sentinel {
+            None
+        } else {
+            Some(p)
+        }
+    }
+
+    fn next(&self, x: Node) -> Option<Node> {
+        let nx = self.lv(x, 0).next;
+        if nx == NIL {
+            None
+        } else {
+            Some(nx)
+        }
+    }
+
+    fn split_before(&mut self, x: Node) {
+        let p0 = self.lv(x, 0).prev;
+        if self.n[p0 as usize].sentinel {
+            return; // already first
+        }
+        let mut anchors = [(NIL, 0u32); MAX_H];
+        let (_old_sent, pos_x) = self.walk_up_left(x, Some(&mut anchors));
+        let s2 = self.alloc(MAX_H, true);
+        let hx = self.h(x);
+        for l in 0..MAX_H {
+            if l < hx {
+                // boundary link: x.prev[l] -> x
+                let p = self.lv(x, l).prev;
+                let plv = self.lv_mut(p, l);
+                plv.next = NIL;
+                plv.width = 0;
+                *self.lv_mut(s2, l) = Lvl { prev: NIL, next: x, width: 1 };
+                self.lv_mut(x, l).prev = s2;
+            } else {
+                let (a, da) = anchors[l];
+                let alv = self.lv(a, l);
+                if alv.next == NIL {
+                    continue; // nothing crosses at this level
+                }
+                let c = alv.next;
+                let w = alv.width;
+                debug_assert!(w >= da, "anchor link does not reach the boundary");
+                // new position of c in the right sequence: (pos(c)-pos_x)+1
+                let w_right = w - da + 1;
+                let alv = self.lv_mut(a, l);
+                alv.next = NIL;
+                alv.width = 0;
+                *self.lv_mut(s2, l) = Lvl { prev: NIL, next: c, width: w_right };
+                self.lv_mut(c, l).prev = s2;
+            }
+        }
+        let _ = pos_x;
+    }
+
+    fn split_after(&mut self, x: Node) {
+        let nx = self.lv(x, 0).next;
+        if nx == NIL {
+            return; // already last
+        }
+        self.split_before(nx);
+    }
+
+    fn concat(&mut self, a: Node, b: Node) {
+        let sa = self.sentinel_of(a);
+        let sb = self.sentinel_of(b);
+        assert_ne!(sa, sb, "concat within one sequence");
+        let (tails, len_a) = self.tails(sa);
+        for l in 0..MAX_H {
+            let blv = self.lv(sb, l);
+            if blv.next == NIL {
+                continue;
+            }
+            let (f, wb) = (blv.next, blv.width);
+            let (t, pt) = tails[l];
+            let tlv = self.lv_mut(t, l);
+            tlv.next = f;
+            tlv.width = (len_a - pt) + wb;
+            self.lv_mut(f, l).prev = t;
+        }
+        self.release(sb);
+    }
+
+    fn live_nodes(&self) -> usize {
+        self.live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run_prop, Gen};
+
+    #[test]
+    fn skiplist_sequence_matches_vec_oracle() {
+        run_prop("skiplist seq oracle", 80, |g: &mut Gen| {
+            let mut s = SkipSeq::new(g.rng.next_u64());
+            crate::ett::testutil::sequence_oracle_scenario(&mut s, g);
+        });
+    }
+
+    #[test]
+    fn positions_and_lengths() {
+        let mut s = SkipSeq::new(7);
+        let nodes: Vec<Node> = (0..100).map(|_| s.new_node()).collect();
+        for w in nodes.windows(2) {
+            s.concat(w[0], w[1]);
+        }
+        assert_eq!(s.seq_len(nodes[50]), 100);
+        for (i, &x) in nodes.iter().enumerate() {
+            assert_eq!(s.pos(x), i as u32 + 1, "pos of element {i}");
+        }
+        // split in the middle and re-check
+        s.split_before(nodes[40]);
+        assert_eq!(s.seq_len(nodes[0]), 40);
+        assert_eq!(s.seq_len(nodes[99]), 60);
+        assert_eq!(s.pos(nodes[40]), 1);
+        assert_eq!(s.pos(nodes[99]), 60);
+        assert_ne!(s.seq_id(nodes[39]), s.seq_id(nodes[40]));
+    }
+
+    #[test]
+    fn singleton_lifecycle() {
+        let mut s = SkipSeq::new(1);
+        let a = s.new_node();
+        assert_eq!(s.seq_len(a), 1);
+        assert_eq!(s.prev(a), None);
+        assert_eq!(s.next(a), None);
+        s.split_before(a);
+        s.split_after(a);
+        assert_eq!(s.first_of_seq(a), a);
+        s.free_node(a);
+        assert_eq!(s.live_nodes(), 0);
+    }
+
+    #[test]
+    fn heights_are_geometric() {
+        let mut s = SkipSeq::new(42);
+        let mut tall = 0;
+        let n = 4000;
+        for _ in 0..n {
+            let x = s.new_node();
+            if s.h(x) >= 2 {
+                tall += 1;
+            }
+        }
+        let frac = tall as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "P(h>=2)={frac}");
+    }
+}

@@ -1,0 +1,281 @@
+//! Treap-backed sequence: the Henzinger–King "balanced binary tree" Euler
+//! tour realization.
+//!
+//! Elements are treap nodes ordered purely by position; each node keeps a
+//! parent pointer so any element can locate its sequence root (= canonical
+//! sequence id) in `O(log n)` expected, and a subtree size so sequence
+//! lengths are `O(1)` at the root. `split_before`/`split_after` are "finger"
+//! splits that walk from the element up to the root, accumulating left and
+//! right fragments; `concat` is a standard priority merge.
+
+use crate::util::rng::Rng;
+
+use super::{Node, Sequence, NIL};
+
+struct TNode {
+    left: Node,
+    right: Node,
+    parent: Node,
+    pri: u64,
+    size: u32,
+}
+
+pub struct TreapSeq {
+    n: Vec<TNode>,
+    free: Vec<Node>,
+    rng: Rng,
+    live: usize,
+}
+
+impl TreapSeq {
+    pub fn new(seed: u64) -> Self {
+        TreapSeq { n: Vec::new(), free: Vec::new(), rng: Rng::new(seed), live: 0 }
+    }
+
+    #[inline]
+    fn size(&self, x: Node) -> u32 {
+        if x == NIL {
+            0
+        } else {
+            self.n[x as usize].size
+        }
+    }
+
+    #[inline]
+    fn update(&mut self, x: Node) {
+        let l = self.n[x as usize].left;
+        let r = self.n[x as usize].right;
+        self.n[x as usize].size = 1 + self.size(l) + self.size(r);
+    }
+
+    fn root_of(&self, mut x: Node) -> Node {
+        loop {
+            let p = self.n[x as usize].parent;
+            if p == NIL {
+                return x;
+            }
+            x = p;
+        }
+    }
+
+    fn leftmost(&self, mut x: Node) -> Node {
+        loop {
+            let l = self.n[x as usize].left;
+            if l == NIL {
+                return x;
+            }
+            x = l;
+        }
+    }
+
+    fn rightmost(&self, mut x: Node) -> Node {
+        loop {
+            let r = self.n[x as usize].right;
+            if r == NIL {
+                return x;
+            }
+            x = r;
+        }
+    }
+
+    /// Merge two treaps (all of `a` precedes all of `b`); returns new root.
+    fn merge(&mut self, a: Node, b: Node) -> Node {
+        if a == NIL {
+            return b;
+        }
+        if b == NIL {
+            return a;
+        }
+        if self.n[a as usize].pri > self.n[b as usize].pri {
+            let ar = self.n[a as usize].right;
+            let m = self.merge(ar, b);
+            self.n[a as usize].right = m;
+            self.n[m as usize].parent = a;
+            self.update(a);
+            a
+        } else {
+            let bl = self.n[b as usize].left;
+            let m = self.merge(a, bl);
+            self.n[b as usize].left = m;
+            self.n[m as usize].parent = b;
+            self.update(b);
+            b
+        }
+    }
+}
+
+impl Sequence for TreapSeq {
+    fn new_node(&mut self) -> Node {
+        let pri = self.rng.next_u64();
+        self.live += 1;
+        if let Some(x) = self.free.pop() {
+            self.n[x as usize] =
+                TNode { left: NIL, right: NIL, parent: NIL, pri, size: 1 };
+            x
+        } else {
+            self.n.push(TNode { left: NIL, right: NIL, parent: NIL, pri, size: 1 });
+            (self.n.len() - 1) as Node
+        }
+    }
+
+    fn free_node(&mut self, x: Node) {
+        let nd = &self.n[x as usize];
+        assert!(
+            nd.left == NIL && nd.right == NIL && nd.parent == NIL,
+            "free_node: node {x} is not a singleton"
+        );
+        self.live -= 1;
+        self.free.push(x);
+    }
+
+    fn seq_id(&self, x: Node) -> u64 {
+        self.root_of(x) as u64
+    }
+
+    fn seq_len(&self, x: Node) -> usize {
+        self.size(self.root_of(x)) as usize
+    }
+
+    fn first_of_seq(&self, x: Node) -> Node {
+        self.leftmost(self.root_of(x))
+    }
+
+    fn prev(&self, x: Node) -> Option<Node> {
+        let l = self.n[x as usize].left;
+        if l != NIL {
+            return Some(self.rightmost(l));
+        }
+        let mut cur = x;
+        loop {
+            let p = self.n[cur as usize].parent;
+            if p == NIL {
+                return None;
+            }
+            if self.n[p as usize].right == cur {
+                return Some(p);
+            }
+            cur = p;
+        }
+    }
+
+    fn next(&self, x: Node) -> Option<Node> {
+        let r = self.n[x as usize].right;
+        if r != NIL {
+            return Some(self.leftmost(r));
+        }
+        let mut cur = x;
+        loop {
+            let p = self.n[cur as usize].parent;
+            if p == NIL {
+                return None;
+            }
+            if self.n[p as usize].left == cur {
+                return Some(p);
+            }
+            cur = p;
+        }
+    }
+
+    fn split_before(&mut self, x: Node) {
+        // L = everything strictly before x; R = x and after.
+        let mut l = self.n[x as usize].left;
+        if l != NIL {
+            self.n[l as usize].parent = NIL;
+            self.n[x as usize].left = NIL;
+        }
+        self.update(x);
+        let mut r = x;
+        let mut cur = x;
+        let mut p = self.n[x as usize].parent;
+        self.n[x as usize].parent = NIL;
+        while p != NIL {
+            let gp = self.n[p as usize].parent;
+            self.n[p as usize].parent = NIL;
+            if self.n[p as usize].right == cur {
+                // p and its left subtree precede the accumulated left part
+                self.n[p as usize].right = NIL;
+                self.update(p);
+                l = self.merge(p, l);
+            } else {
+                // p and its right subtree follow the accumulated right part
+                self.n[p as usize].left = NIL;
+                self.update(p);
+                r = self.merge(r, p);
+            }
+            cur = p;
+            p = gp;
+        }
+        let _ = (l, r); // both now roots with parent == NIL
+    }
+
+    fn split_after(&mut self, x: Node) {
+        // L = everything up to and including x; R = strictly after.
+        let mut r = self.n[x as usize].right;
+        if r != NIL {
+            self.n[r as usize].parent = NIL;
+            self.n[x as usize].right = NIL;
+        }
+        self.update(x);
+        let mut l = x;
+        let mut cur = x;
+        let mut p = self.n[x as usize].parent;
+        self.n[x as usize].parent = NIL;
+        while p != NIL {
+            let gp = self.n[p as usize].parent;
+            self.n[p as usize].parent = NIL;
+            if self.n[p as usize].right == cur {
+                self.n[p as usize].right = NIL;
+                self.update(p);
+                l = self.merge(p, l);
+            } else {
+                self.n[p as usize].left = NIL;
+                self.update(p);
+                r = self.merge(r, p);
+            }
+            cur = p;
+            p = gp;
+        }
+        let _ = (l, r);
+    }
+
+    fn concat(&mut self, a: Node, b: Node) {
+        let ra = self.root_of(a);
+        let rb = self.root_of(b);
+        assert_ne!(ra, rb, "concat within one sequence");
+        self.merge(ra, rb);
+    }
+
+    fn live_nodes(&self) -> usize {
+        self.live
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run_prop, Gen};
+
+    /// Oracle: maintain the same sequences as Vec<Vec<Node>> and compare
+    /// order, ids, neighbors after random split/concat churn.
+    #[test]
+    fn treap_sequence_matches_vec_oracle() {
+        run_prop("treap seq oracle", 80, |g: &mut Gen| {
+            let mut s = TreapSeq::new(g.rng.next_u64());
+            crate::ett::testutil::sequence_oracle_scenario(&mut s, g);
+        });
+    }
+
+    #[test]
+    fn singleton_lifecycle() {
+        let mut s = TreapSeq::new(1);
+        let a = s.new_node();
+        assert_eq!(s.seq_len(a), 1);
+        assert_eq!(s.prev(a), None);
+        assert_eq!(s.next(a), None);
+        assert_eq!(s.first_of_seq(a), a);
+        s.split_before(a); // no-ops
+        s.split_after(a);
+        s.free_node(a);
+        assert_eq!(s.live_nodes(), 0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Figure 2: blobs-dataset comparison of DynamicDBSCAN, EMZ, EMZFixedCore
+//! (and the exact baseline at small scales).
+//!
+//! (a) cumulative running time after each batch;
+//! (b) ARI of the full current labeling after each batch, random arrivals;
+//! (c) same with cluster-by-cluster arrivals (the EMZFixedCore failure).
+
+use anyhow::Result;
+
+use crate::baselines::brute::{BruteDbscan, NativeDistance};
+use crate::baselines::emz::{Emz, EmzConfig};
+use crate::baselines::emz_fixed_core::EmzFixedCore;
+use crate::bench_harness::Series;
+use crate::data::stream::{insertion_order, Order};
+use crate::data::synth::{load, PaperDataset};
+use crate::dbscan::{DbscanConfig, DynamicDbscan};
+use crate::metrics::adjusted_rand_index;
+
+use super::{PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
+
+/// Which panel of Figure 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Panel {
+    /// (a) running time vs stream position (random order)
+    Time,
+    /// (b) ARI vs stream position, random order
+    AriRandom,
+    /// (c) ARI vs stream position, cluster-by-cluster order
+    AriClustered,
+}
+
+impl Panel {
+    pub fn from_name(s: &str) -> Option<Panel> {
+        match s {
+            "a" | "time" => Some(Panel::Time),
+            "b" | "ari-random" => Some(Panel::AriRandom),
+            "c" | "ari-clustered" => Some(Panel::AriClustered),
+            _ => None,
+        }
+    }
+}
+
+/// Run one panel; `include_exact` adds the O(n²) baseline (only sensible at
+/// small scale). Returns a printable/plottable series.
+pub fn run_fig2(panel: Panel, scale: f64, seed: u64, include_exact: bool) -> Result<Series> {
+    let ds = load(PaperDataset::Blobs, scale, seed);
+    let dim = ds.dim;
+    let order_kind = match panel {
+        Panel::AriClustered => Order::ClusterByCluster,
+        _ => Order::Random,
+    };
+    let order = insertion_order(&ds, order_kind, seed);
+    let batch = PAPER_BATCH.min((order.len() / 10).max(1));
+
+    let mut names = vec!["DyDBSCAN", "EMZ", "EMZFixedCore"];
+    if include_exact {
+        names.push("SKLEARN");
+    }
+    let (title, x_name) = match panel {
+        Panel::Time => ("Figure 2(a): cumulative seconds vs points", "points"),
+        Panel::AriRandom => ("Figure 2(b): ARI vs points (random order)", "points"),
+        Panel::AriClustered => {
+            ("Figure 2(c): ARI vs points (cluster-by-cluster)", "points")
+        }
+    };
+    let mut series = Series::new(title, x_name, &names);
+
+    // --- DynamicDBSCAN ---
+    let cfg = DbscanConfig {
+        k: PAPER_K,
+        t: PAPER_T,
+        eps: PAPER_EPS,
+        dim,
+        ..Default::default()
+    };
+    let mut db = DynamicDbscan::new(cfg, seed);
+    let mut dyn_ids: Vec<u64> = Vec::with_capacity(order.len());
+    let mut dyn_cum = Vec::new();
+    let mut dyn_ari = Vec::new();
+    let mut cum = 0.0;
+    for chunk in order.chunks(batch) {
+        let t0 = std::time::Instant::now();
+        for &i in chunk {
+            dyn_ids.push(db.add_point(ds.point(i)));
+        }
+        cum += t0.elapsed().as_secs_f64();
+        dyn_cum.push(cum);
+        let pred = db.labels_for(&dyn_ids);
+        let truth: Vec<i64> =
+            order[..dyn_ids.len()].iter().map(|&i| ds.labels[i]).collect();
+        dyn_ari.push(adjusted_rand_index(&truth, &pred));
+    }
+
+    // --- EMZ (re-run per batch) ---
+    let emz = Emz::new(EmzConfig { k: PAPER_K, t: PAPER_T, eps: PAPER_EPS, dim }, seed);
+    let mut emz_cum = Vec::new();
+    let mut emz_ari = Vec::new();
+    let mut xs: Vec<f32> = Vec::new();
+    let mut n = 0;
+    cum = 0.0;
+    for chunk in order.chunks(batch) {
+        let t0 = std::time::Instant::now();
+        for &i in chunk {
+            xs.extend_from_slice(ds.point(i));
+            n += 1;
+        }
+        let r = emz.cluster(&xs, n);
+        cum += t0.elapsed().as_secs_f64();
+        emz_cum.push(cum);
+        let truth: Vec<i64> = order[..n].iter().map(|&i| ds.labels[i]).collect();
+        emz_ari.push(adjusted_rand_index(&truth, &r.labels));
+    }
+
+    // --- EMZFixedCore ---
+    let mut fc_cum = Vec::new();
+    let mut fc_ari = Vec::new();
+    let first: Vec<f32> = order[..batch.min(order.len())]
+        .iter()
+        .flat_map(|&i| ds.point(i).iter().copied())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut fc = EmzFixedCore::fit_initial(
+        EmzConfig { k: PAPER_K, t: PAPER_T, eps: PAPER_EPS, dim },
+        seed,
+        &first,
+        batch.min(order.len()),
+    );
+    cum = t0.elapsed().as_secs_f64();
+    let mut fc_labels: Vec<i64> = fc.initial_labels.clone();
+    fc_cum.push(cum);
+    {
+        let truth: Vec<i64> =
+            order[..fc_labels.len()].iter().map(|&i| ds.labels[i]).collect();
+        fc_ari.push(adjusted_rand_index(&truth, &fc_labels));
+    }
+    for chunk in order.chunks(batch).skip(1) {
+        let t0 = std::time::Instant::now();
+        for &i in chunk {
+            fc_labels.push(fc.assign(ds.point(i)));
+        }
+        cum += t0.elapsed().as_secs_f64();
+        fc_cum.push(cum);
+        let truth: Vec<i64> =
+            order[..fc_labels.len()].iter().map(|&i| ds.labels[i]).collect();
+        fc_ari.push(adjusted_rand_index(&truth, &fc_labels));
+    }
+
+    // --- exact baseline (optional; re-clusters per batch like sklearn
+    // would have to in a dynamic setting) ---
+    let (mut sk_cum, mut sk_ari) = (Vec::new(), Vec::new());
+    if include_exact {
+        let brute = BruteDbscan::new(PAPER_EPS, PAPER_K);
+        let mut xs: Vec<f32> = Vec::new();
+        let mut n = 0;
+        cum = 0.0;
+        for chunk in order.chunks(batch) {
+            let t0 = std::time::Instant::now();
+            for &i in chunk {
+                xs.extend_from_slice(ds.point(i));
+                n += 1;
+            }
+            let labels = brute.cluster(&xs, n, dim, &mut NativeDistance);
+            cum += t0.elapsed().as_secs_f64();
+            sk_cum.push(cum);
+            let truth: Vec<i64> = order[..n].iter().map(|&i| ds.labels[i]).collect();
+            sk_ari.push(adjusted_rand_index(&truth, &labels));
+        }
+    }
+
+    let nb = dyn_cum.len();
+    for b in 0..nb {
+        let x = ((b + 1) * batch).min(order.len()) as f64;
+        let mut vals = match panel {
+            Panel::Time => vec![dyn_cum[b], emz_cum[b], fc_cum[b]],
+            _ => vec![dyn_ari[b], emz_ari[b], fc_ari[b]],
+        };
+        if include_exact {
+            vals.push(match panel {
+                Panel::Time => sk_cum[b],
+                _ => sk_ari[b],
+            });
+        }
+        series.push(x, &vals);
+    }
+    Ok(series)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panel_parsing() {
+        assert_eq!(Panel::from_name("a"), Some(Panel::Time));
+        assert_eq!(Panel::from_name("ari-random"), Some(Panel::AriRandom));
+        assert_eq!(Panel::from_name("z"), None);
+    }
+
+    #[test]
+    fn fig2b_small_scale() {
+        let s = run_fig2(Panel::AriRandom, 0.01, 4, false).unwrap();
+        assert_eq!(s.names.len(), 3);
+        assert!(!s.xs.is_empty());
+        // DyDBSCAN final ARI should be high on blobs
+        let last = *s.ys[0].last().unwrap();
+        assert!(last > 0.9, "DyDBSCAN ARI {last}");
+    }
+
+    #[test]
+    fn fig2c_fixedcore_collapses() {
+        let s = run_fig2(Panel::AriClustered, 0.02, 4, false).unwrap();
+        let dyn_final = *s.ys[0].last().unwrap();
+        let fc_final = *s.ys[2].last().unwrap();
+        assert!(
+            fc_final < dyn_final - 0.2,
+            "EMZFixedCore {fc_final} should collapse vs DyDBSCAN {dyn_final}"
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Paper-experiment runners — the code behind every table and figure
+//! (shared by `cargo bench` targets and the CLI).
+//!
+//! * [`table2`] — Table 2: time / ARI / NMI on the six Table-1 datasets for
+//!   DynamicDBSCAN, EMZ (re-run per batch) and Sklearn-equivalent exact
+//!   DBSCAN.
+//! * [`fig2`] — Figure 2 (a) running time, (b) ARI under random arrivals,
+//!   (c) ARI under cluster-by-cluster arrivals, on the blobs dataset, for
+//!   DynamicDBSCAN, EMZ, EMZFixedCore and Sklearn-equivalent.
+//!
+//! Measurement semantics (documented in EXPERIMENTS.md): streaming
+//! algorithms are timed over the entire update stream (batch = 1000, the
+//! paper's setting); the exact-DBSCAN baseline is timed for one full
+//! clustering of the final dataset. Quality is ARI/NMI of the final labels
+//! against ground truth, mean ± stderr over independent seeds.
+
+pub mod fig2;
+pub mod table2;
+
+/// Paper hyper-parameters (§5): k = 10, t = 10, ε = 0.75, batch = 1000.
+pub const PAPER_K: usize = 10;
+pub const PAPER_T: usize = 10;
+pub const PAPER_EPS: f32 = 0.75;
+pub const PAPER_BATCH: usize = 1000;
+
+/// Scale factor for dataset sizes: `FULL=1` reproduces paper sizes;
+/// otherwise `SCALE` (default 0.05) shrinks n for tractable CI runs.
+pub fn env_scale() -> f64 {
+    if std::env::var("FULL").map(|v| v == "1").unwrap_or(false) {
+        return 1.0;
+    }
+    std::env::var("SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05)
+}
+
+/// Number of independent runs (paper: 10). Default 3 scaled.
+pub fn env_runs() -> usize {
+    std::env::var("RUNS").ok().and_then(|s| s.parse().ok()).unwrap_or(3)
+}

@@ -1,0 +1,204 @@
+//! Table 2: per-dataset Time / ARI / NMI for DyDBSCAN, EMZ and Sklearn.
+
+use anyhow::Result;
+
+use crate::baselines::brute::{BruteDbscan, NativeDistance};
+use crate::baselines::emz::{Emz, EmzConfig};
+use crate::bench_harness::Table;
+use crate::coordinator::driver::{final_quality, stream_dataset, EngineKind};
+use crate::data::stream::{insertion_order, Order};
+use crate::data::synth::{load, PaperDataset};
+use crate::dbscan::DbscanConfig;
+use crate::metrics::ari_nmi;
+use crate::util::stats::Welford;
+
+use super::{PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
+
+/// Per-algorithm outcome of one dataset row.
+#[derive(Clone, Debug, Default)]
+pub struct Cell {
+    pub time: Welford,
+    pub ari: Welford,
+    pub nmi: Welford,
+}
+
+impl Cell {
+    fn fmt(&self) -> (String, String, String) {
+        (
+            format!("{:.2}±{:.3}", self.time.mean(), self.time.stderr()),
+            format!("{:.2}±{:.3}", self.ari.mean(), self.ari.stderr()),
+            format!("{:.2}±{:.3}", self.nmi.mean(), self.nmi.stderr()),
+        )
+    }
+}
+
+pub struct Row {
+    pub dataset: PaperDataset,
+    pub n: usize,
+    pub dyn_: Cell,
+    pub emz: Cell,
+    pub sklearn: Option<Cell>,
+}
+
+/// Run one dataset × one seed for all three algorithms.
+/// `run_sklearn=false` mirrors the paper skipping sklearn on the largest
+/// datasets (memory), and keeps scaled runs fast.
+pub fn run_dataset(
+    which: PaperDataset,
+    scale: f64,
+    seed: u64,
+    engine: EngineKind,
+    run_sklearn: bool,
+) -> Result<(f64, f64, f64, f64, f64, f64, Option<(f64, f64, f64)>, usize)> {
+    let ds = load(which, scale, seed);
+    let dim = ds.dim;
+    let cfg = DbscanConfig {
+        k: PAPER_K,
+        t: PAPER_T,
+        eps: PAPER_EPS,
+        dim,
+        ..Default::default()
+    };
+
+    // --- DynamicDBSCAN: stream through the coordinator ---
+    let t0 = std::time::Instant::now();
+    let out = stream_dataset(&ds, cfg, Order::Random, PAPER_BATCH, 0, seed, engine)?;
+    let dyn_time = t0.elapsed().as_secs_f64();
+    let (dyn_ari, dyn_nmi) = final_quality(&ds, &out);
+
+    // --- EMZ: re-run the static algorithm after every batch ---
+    let emz = Emz::new(
+        EmzConfig { k: PAPER_K, t: PAPER_T, eps: PAPER_EPS, dim },
+        seed,
+    );
+    let order = insertion_order(&ds, Order::Random, seed);
+    let t0 = std::time::Instant::now();
+    let mut xs_sofar: Vec<f32> = Vec::with_capacity(ds.xs.len());
+    let mut labels_last = Vec::new();
+    let mut seen = 0usize;
+    for chunk in order.chunks(PAPER_BATCH) {
+        for &i in chunk {
+            xs_sofar.extend_from_slice(ds.point(i));
+            seen += 1;
+        }
+        let r = emz.cluster(&xs_sofar, seen);
+        labels_last = r.labels;
+    }
+    let emz_time = t0.elapsed().as_secs_f64();
+    let truth: Vec<i64> = order.iter().map(|&i| ds.labels[i]).collect();
+    let (emz_ari, emz_nmi) = ari_nmi(&truth, &labels_last);
+
+    // --- Sklearn-equivalent exact DBSCAN: one full clustering ---
+    let sk = if run_sklearn {
+        let t0 = std::time::Instant::now();
+        let labels = BruteDbscan::new(PAPER_EPS, PAPER_K).cluster(
+            &ds.xs,
+            ds.n(),
+            dim,
+            &mut NativeDistance,
+        );
+        let sk_time = t0.elapsed().as_secs_f64();
+        let (a, m) = ari_nmi(&ds.labels, &labels);
+        Some((sk_time, a, m))
+    } else {
+        None
+    };
+
+    Ok((dyn_time, dyn_ari, dyn_nmi, emz_time, emz_ari, emz_nmi, sk, ds.n()))
+}
+
+/// Full Table 2 over the requested datasets.
+pub fn run_table2(
+    datasets: &[PaperDataset],
+    scale: f64,
+    runs: usize,
+    engine: EngineKind,
+) -> Result<(Table, Vec<Row>)> {
+    let mut rows = Vec::new();
+    for &which in datasets {
+        // the paper could not run sklearn on the two biggest datasets
+        // (memory); we skip it whenever the scaled n crosses the O(n²)
+        // practicality wall, which reproduces the same "-" cells.
+        let n_scaled = (which.shape().0 as f64 * scale) as usize;
+        let run_sklearn = n_scaled <= 30_000;
+        let mut row = Row {
+            dataset: which,
+            n: 0,
+            dyn_: Cell::default(),
+            emz: Cell::default(),
+            sklearn: run_sklearn.then(Cell::default),
+        };
+        for r in 0..runs {
+            let seed = 1000 + r as u64;
+            let (dt, da, dn, et, ea, en, sk, n) =
+                run_dataset(which, scale, seed, engine, run_sklearn)?;
+            row.n = n;
+            row.dyn_.time.push(dt);
+            row.dyn_.ari.push(da);
+            row.dyn_.nmi.push(dn);
+            row.emz.time.push(et);
+            row.emz.ari.push(ea);
+            row.emz.nmi.push(en);
+            if let (Some(cell), Some((st, sa, sn))) = (row.sklearn.as_mut(), sk) {
+                cell.time.push(st);
+                cell.ari.push(sa);
+                cell.nmi.push(sn);
+            }
+        }
+        rows.push(row);
+    }
+
+    let mut table = Table::new(
+        &format!("Table 2 (scale={:.2}, runs={})", rows_scale(scale), runs),
+        &["dataset", "n", "metric", "DyDBSCAN", "EMZ", "SKLEARN"],
+    );
+    for row in &rows {
+        let d = row.dyn_.fmt();
+        let e = row.emz.fmt();
+        let s = row
+            .sklearn
+            .as_ref()
+            .map(|c| c.fmt())
+            .unwrap_or(("-".into(), "-".into(), "-".into()));
+        let name = row.dataset.name();
+        table.row(vec![
+            name.into(),
+            row.n.to_string(),
+            "Time".into(),
+            d.0,
+            e.0,
+            s.0,
+        ]);
+        table.row(vec!["".into(), "".into(), "ARI".into(), d.1, e.1, s.1]);
+        table.row(vec!["".into(), "".into(), "NMI".into(), d.2, e.2, s.2]);
+    }
+    Ok((table, rows))
+}
+
+fn rows_scale(s: f64) -> f64 {
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_table2_runs() {
+        // smoke at 1% scale, letter only, 1 run — exercises all 3 algorithms
+        let (table, rows) = run_table2(
+            &[PaperDataset::Letter],
+            0.01,
+            1,
+            EngineKind::Native,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].dyn_.time.mean() > 0.0);
+        assert!(rows[0].emz.time.mean() > 0.0);
+        assert!(rows[0].sklearn.is_some());
+        let s = table.render();
+        assert!(s.contains("letter"));
+        assert!(s.contains("ARI"));
+    }
+}

@@ -1,0 +1,48 @@
+//! # dyn-dbscan — Dynamic DBSCAN with Euler Tour Sequences
+//!
+//! Production-grade reproduction of *“Dynamic DBSCAN with Euler Tour
+//! Sequences”* (Shin, Shomorony, Macgregor — AISTATS 2025): a density-based
+//! clustering structure that supports **point insertion and deletion in
+//! `O(d·log³n + log⁴n)`** while matching the density-level-set guarantees of
+//! the static near-linear-time DBSCAN of Esfandiari–Mirrokni–Zhong (AAAI'21).
+//!
+//! The library is the L3 (Rust) layer of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the dynamic clustering structure
+//!   ([`dbscan::DynamicDbscan`]), the Euler-tour dynamic forest ([`ett`]),
+//!   grid-LSH bucket tables ([`lsh`]), baselines ([`baselines`]), metrics
+//!   ([`metrics`]), datasets ([`data`]), the streaming coordinator
+//!   ([`coordinator`]) and the benchmark harness ([`bench_harness`]).
+//! * **L2/L1 (python, build-time only)** — JAX/Pallas compute graphs
+//!   (batched grid-hash quantizer, pairwise-distance tiles, PCA projection)
+//!   AOT-lowered to HLO text and executed through [`runtime`] on the PJRT
+//!   CPU client. Python never runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+//!
+//! let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: 2, ..Default::default() };
+//! let mut db = DynamicDbscan::new(cfg, 42);
+//! let a = db.add_point(&[0.0, 0.0]);
+//! let b = db.add_point(&[0.1, 0.1]);
+//! let _ = db.get_cluster(a) == db.get_cluster(b);
+//! db.delete_point(a);
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the paper-vs-measured reproduction of every table and figure.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod dbscan;
+pub mod ett;
+pub mod experiments;
+pub mod lsh;
+pub mod metrics;
+pub mod runtime;
+pub mod util;

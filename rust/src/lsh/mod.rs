@@ -1,0 +1,185 @@
+//! Grid locality-sensitive hashing (Definition 3 of the paper).
+//!
+//! A hash function is `h(x) = ⌊(x + η·1_d) / (2ε)⌋` with `η ~ U[0, 2ε)`;
+//! two points collide iff all `d` integer grid coordinates agree (Lemma 1:
+//! collision probability ≥ 1 − ‖x−y‖₁/2ε, and collision ⟹ ‖x−y‖∞ ≤ 2ε).
+//!
+//! [`GridHasher`] owns the `t` independent shifts and turns a point into
+//! per-function *bucket keys*; [`table::LshTable`] stores the buckets. The
+//! numeric quantization here is the exact expression the L1 Pallas kernel
+//! computes (`(x + η) * inv_two_eps`, add-then-multiply, f32) so the native
+//! and AOT-artifact hashing engines agree bit-for-bit.
+
+pub mod table;
+
+use crate::util::rng::{mix64, Rng};
+
+/// 128-bit bucket key: two independent 64-bit mixes of the grid-coordinate
+/// row. Collision probability per pair is ~2⁻¹²⁸ — negligible against the
+/// paper's δ. (`table::LshTable` tests confirm keys never collide in
+/// practice against exact `Vec<i32>` keys.)
+pub type BucketKey = u128;
+
+#[derive(Clone, Debug)]
+pub struct GridHasher {
+    pub dim: usize,
+    pub t: usize,
+    pub eps: f32,
+    inv_two_eps: f32,
+    /// one shift per hash function
+    pub etas: Vec<f32>,
+}
+
+impl GridHasher {
+    pub fn new(t: usize, dim: usize, eps: f32, seed: u64) -> Self {
+        assert!(eps > 0.0 && t > 0 && dim > 0);
+        let mut rng = Rng::new(seed);
+        let etas = (0..t)
+            .map(|_| (rng.next_f64() * 2.0 * eps as f64) as f32)
+            .collect();
+        GridHasher { dim, t, eps, inv_two_eps: 1.0 / (2.0 * eps), etas }
+    }
+
+    #[inline]
+    pub fn inv_two_eps(&self) -> f32 {
+        self.inv_two_eps
+    }
+
+    /// Integer grid coordinates of `x` under hash function `i`.
+    /// Exactly `floor((x + eta_i) * inv_two_eps)` in f32 — matching the
+    /// Pallas kernel bit-for-bit.
+    #[inline]
+    pub fn coords_into(&self, i: usize, x: &[f32], out: &mut [i32]) {
+        debug_assert_eq!(x.len(), self.dim);
+        let eta = self.etas[i];
+        let inv = self.inv_two_eps;
+        for (o, &v) in out.iter_mut().zip(x.iter()) {
+            *o = ((v + eta) * inv).floor() as i32;
+        }
+    }
+
+    pub fn coords(&self, i: usize, x: &[f32]) -> Vec<i32> {
+        let mut out = vec![0i32; self.dim];
+        self.coords_into(i, x, &mut out);
+        out
+    }
+
+    /// Bucket key from a grid-coordinate row (shared by the native and the
+    /// XLA-artifact hashing paths).
+    #[inline]
+    pub fn key_from_coords(coords: &[i32]) -> BucketKey {
+        let mut h1: u64 = 0x243f_6a88_85a3_08d3; // pi digits — arbitrary
+        let mut h2: u64 = 0x1319_8a2e_0370_7344;
+        for &c in coords {
+            let c = c as u32 as u64;
+            h1 = mix64(h1 ^ c.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            h2 = mix64(h2 ^ c.wrapping_mul(0xc2b2_ae3d_27d4_eb4f));
+        }
+        ((h1 as u128) << 64) | h2 as u128
+    }
+
+    /// All `t` bucket keys of a point (native path).
+    pub fn keys(&self, x: &[f32], scratch: &mut Vec<i32>) -> Vec<BucketKey> {
+        scratch.resize(self.dim, 0);
+        (0..self.t)
+            .map(|i| {
+                self.coords_into(i, x, scratch);
+                Self::key_from_coords(scratch)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run_prop, Gen};
+
+    #[test]
+    fn collision_implies_linf_bound() {
+        // Lemma 1 (2): same key (same coords) => ||x-y||_inf <= 2 eps
+        run_prop("lsh linf bound", 50, |g: &mut Gen| {
+            let dim = g.usize_in(1..=8);
+            let eps = g.f64_in(0.1, 2.0) as f32;
+            let h = GridHasher::new(4, dim, eps, g.rng.next_u64());
+            let n = 64;
+            let pts: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..dim).map(|_| g.f64_in(-5.0, 5.0) as f32).collect())
+                .collect();
+            for i in 0..h.t {
+                let coords: Vec<Vec<i32>> =
+                    pts.iter().map(|p| h.coords(i, p)).collect();
+                for a in 0..n {
+                    for b in 0..n {
+                        if coords[a] == coords[b] {
+                            let linf = pts[a]
+                                .iter()
+                                .zip(&pts[b])
+                                .map(|(x, y)| (x - y).abs())
+                                .fold(0f32, f32::max);
+                            assert!(
+                                linf <= 2.0 * eps + 1e-4,
+                                "collision with linf {linf} > 2eps {}",
+                                2.0 * eps
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn collision_probability_lower_bound() {
+        // Lemma 1 (1): Pr[h(x)=h(y)] >= 1 - ||x-y||_1/(2 eps), over eta.
+        let eps = 1.0f32;
+        let dim = 4;
+        let trials = 4000;
+        let x = vec![0.3f32, -0.7, 1.1, 0.0];
+        let y = vec![0.5f32, -0.6, 1.0, 0.2];
+        let l1: f32 = x.iter().zip(&y).map(|(a, b)| (a - b).abs()).sum();
+        let bound = 1.0 - l1 / (2.0 * eps);
+        let mut collide = 0;
+        for s in 0..trials {
+            let h = GridHasher::new(1, dim, eps, s as u64);
+            if h.coords(0, &x) == h.coords(0, &y) {
+                collide += 1;
+            }
+        }
+        let freq = collide as f32 / trials as f32;
+        assert!(
+            freq >= bound - 0.03,
+            "collision freq {freq} below Lemma 1 bound {bound}"
+        );
+    }
+
+    #[test]
+    fn keys_deterministic_and_seed_sensitive() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut s = Vec::new();
+        let h1 = GridHasher::new(5, 3, 0.75, 42);
+        let h2 = GridHasher::new(5, 3, 0.75, 42);
+        let h3 = GridHasher::new(5, 3, 0.75, 43);
+        assert_eq!(h1.keys(&x, &mut s), h2.keys(&x, &mut s));
+        assert_ne!(h1.keys(&x, &mut s), h3.keys(&x, &mut s));
+    }
+
+    #[test]
+    fn key_from_coords_is_order_sensitive() {
+        let a = GridHasher::key_from_coords(&[1, 2, 3]);
+        let b = GridHasher::key_from_coords(&[3, 2, 1]);
+        let c = GridHasher::key_from_coords(&[1, 2, 3]);
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn no_key_collisions_on_distinct_coords() {
+        // 128-bit keys over 100k distinct rows: no collisions expected.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..100_000i32 {
+            let key = GridHasher::key_from_coords(&[i, -i, i ^ 7, i / 3]);
+            assert!(seen.insert(key), "key collision at {i}");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Hash-bucket tables: one [`LshTable`] per hash function.
+//!
+//! Each bucket keeps (a) the full member set (whose size against `k`
+//! decides core-ness, Definition 4) and (b) the **core members ordered by
+//! point index** — a `BTreeSet` giving the `O(log n)` predecessor/successor
+//! queries that `LinkCorePoint`/`UnlinkCorePoint` (Algorithm 2, lines
+//! 31–32 / 38–39) need to maintain the in-bucket path structure.
+
+use std::collections::BTreeSet;
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+use super::BucketKey;
+
+/// Monotonically increasing point identifier (`idx(·)` in the paper).
+pub type PointId = u64;
+
+#[derive(Debug, Default)]
+pub struct Bucket {
+    pub members: FxHashSet<PointId>,
+    /// Core members ordered by idx — the in-bucket path follows this order.
+    pub cores: BTreeSet<PointId>,
+}
+
+impl Bucket {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Core predecessor of `p` by index (largest core idx < p).
+    #[inline]
+    pub fn core_pred(&self, p: PointId) -> Option<PointId> {
+        self.cores.range(..p).next_back().copied()
+    }
+
+    /// Core successor of `p` by index (smallest core idx > p).
+    #[inline]
+    pub fn core_succ(&self, p: PointId) -> Option<PointId> {
+        self.cores.range(p + 1..).next().copied()
+    }
+
+    /// Any core member other than `p`, if one exists.
+    #[inline]
+    pub fn any_core_not(&self, p: PointId) -> Option<PointId> {
+        self.cores.iter().copied().find(|&c| c != p)
+    }
+}
+
+/// Buckets of a single hash function.
+#[derive(Debug, Default)]
+pub struct LshTable {
+    map: FxHashMap<BucketKey, Bucket>,
+}
+
+impl LshTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a point; returns the bucket size after insertion.
+    pub fn insert(&mut self, key: BucketKey, p: PointId) -> usize {
+        let b = self.map.entry(key).or_default();
+        let added = b.members.insert(p);
+        debug_assert!(added, "point {p} already in bucket");
+        b.members.len()
+    }
+
+    /// Remove a point (must exist); drops the bucket when it empties.
+    pub fn remove(&mut self, key: BucketKey, p: PointId) {
+        let b = self.map.get_mut(&key).expect("bucket missing on remove");
+        let removed = b.members.remove(&p);
+        debug_assert!(removed, "point {p} not in bucket");
+        b.cores.remove(&p);
+        if b.members.is_empty() {
+            self.map.remove(&key);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, key: BucketKey) -> Option<&Bucket> {
+        self.map.get(&key)
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, key: BucketKey) -> Option<&mut Bucket> {
+        self.map.get_mut(&key)
+    }
+
+    #[inline]
+    pub fn bucket(&self, key: BucketKey) -> &Bucket {
+        self.map.get(&key).expect("bucket missing")
+    }
+
+    pub fn mark_core(&mut self, key: BucketKey, p: PointId) {
+        let b = self.map.get_mut(&key).expect("bucket missing");
+        debug_assert!(b.members.contains(&p));
+        b.cores.insert(p);
+    }
+
+    pub fn unmark_core(&mut self, key: BucketKey, p: PointId) {
+        if let Some(b) = self.map.get_mut(&key) {
+            b.cores.remove(&p);
+        }
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&BucketKey, &Bucket)> {
+        self.map.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_lifecycle() {
+        let mut t = LshTable::new();
+        assert_eq!(t.insert(7, 1), 1);
+        assert_eq!(t.insert(7, 2), 2);
+        assert_eq!(t.insert(9, 3), 1);
+        assert_eq!(t.num_buckets(), 2);
+        t.remove(7, 1);
+        assert_eq!(t.bucket(7).len(), 1);
+        t.remove(7, 2);
+        assert_eq!(t.num_buckets(), 1, "empty bucket must be dropped");
+    }
+
+    #[test]
+    fn core_ordering_queries() {
+        let mut t = LshTable::new();
+        for p in [10u64, 20, 30, 40] {
+            t.insert(5, p);
+        }
+        for p in [10u64, 30, 40] {
+            t.mark_core(5, p);
+        }
+        let b = t.bucket(5);
+        assert_eq!(b.core_pred(30), Some(10));
+        assert_eq!(b.core_succ(30), Some(40));
+        assert_eq!(b.core_pred(10), None);
+        assert_eq!(b.core_succ(40), None);
+        assert_eq!(b.core_pred(25), Some(10));
+        assert_eq!(b.core_succ(25), Some(30));
+        assert_eq!(b.any_core_not(10), Some(30));
+    }
+
+    #[test]
+    fn remove_clears_core_flag() {
+        let mut t = LshTable::new();
+        t.insert(1, 100);
+        t.insert(1, 200);
+        t.mark_core(1, 100);
+        t.remove(1, 100);
+        assert!(t.bucket(1).cores.is_empty());
+    }
+}

@@ -1,0 +1,23 @@
+//! `dyn-dbscan` — leader entrypoint for the Dynamic DBSCAN system.
+//!
+//! See `dyn-dbscan help` (or `cli::USAGE`) for the command set: paper
+//! experiment reproduction (`table2`, `fig2`), the streaming coordinator
+//! (`stream`), the Theorem-2 invariant checker (`verify`) and artifact
+//! introspection (`info`).
+
+use dyn_dbscan::cli::{commands, Args};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", dyn_dbscan::cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = commands::dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,85 @@
+//! Adjusted Rand Index (Hubert & Arabie 1985).
+//!
+//! `ARI = (Index − E[Index]) / (MaxIndex − E[Index])` over pair counts;
+//! 1.0 for identical partitions (up to relabeling), ~0 for independent ones.
+
+use super::contingency::{comb2, Contingency};
+
+pub fn ari_from_contingency(c: &Contingency) -> f64 {
+    let sum_cells: f64 = c.cells.values().map(|&v| comb2(v)).sum();
+    let sum_rows: f64 = c.row_sums.values().map(|&v| comb2(v)).sum();
+    let sum_cols: f64 = c.col_sums.values().map(|&v| comb2(v)).sum();
+    let total = comb2(c.n as u64);
+    if total == 0.0 {
+        return 1.0; // degenerate: <2 points
+    }
+    let expected = sum_rows * sum_cols / total;
+    let max_index = 0.5 * (sum_rows + sum_cols);
+    if (max_index - expected).abs() < 1e-12 {
+        // both partitions are all-singletons or a single cluster
+        return 1.0;
+    }
+    (sum_cells - expected) / (max_index - expected)
+}
+
+/// ARI between a ground-truth labeling and a predicted labeling.
+pub fn adjusted_rand_index(truth: &[i64], pred: &[i64]) -> f64 {
+    ari_from_contingency(&Contingency::build(truth, pred))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_agreement() {
+        let t = [0i64, 0, 1, 1, 2, 2];
+        let p = [5i64, 5, 7, 7, 9, 9]; // same partition, renamed
+        assert!((adjusted_rand_index(&t, &p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sklearn_fixture() {
+        // sklearn.metrics.adjusted_rand_score([0,0,1,1],[0,0,1,2]) = 0.5714285714285715
+        let t = [0i64, 0, 1, 1];
+        let p = [0i64, 0, 1, 2];
+        assert!((adjusted_rand_index(&t, &p) - 0.571_428_571_428_571_5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sklearn_fixture_2() {
+        // adjusted_rand_score([0,0,1,2],[0,0,1,1]) is symmetric = 0.57142857...
+        let t = [0i64, 0, 1, 2];
+        let p = [0i64, 0, 1, 1];
+        assert!((adjusted_rand_index(&t, &p) - 0.571_428_571_428_571_5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_is_near_zero_can_be_negative() {
+        // adjusted_rand_score([0,0,1,1],[0,1,0,1]) = -0.5
+        let t = [0i64, 0, 1, 1];
+        let p = [0i64, 1, 0, 1];
+        assert!((adjusted_rand_index(&t, &p) + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        assert_eq!(adjusted_rand_index(&[0], &[3]), 1.0);
+        // all singletons vs all singletons
+        let t = [0i64, 1, 2, 3];
+        let p = [9i64, 8, 7, 6];
+        assert_eq!(adjusted_rand_index(&t, &p), 1.0);
+        // one-cluster vs one-cluster
+        let t = [0i64; 5];
+        let p = [1i64; 5];
+        assert_eq!(adjusted_rand_index(&t, &p), 1.0);
+    }
+
+    #[test]
+    fn noise_as_label() {
+        // -1 labels participate as a normal cluster, like sklearn
+        let t = [0i64, 0, 1, 1];
+        let p = [-1i64, -1, 1, 1];
+        assert!((adjusted_rand_index(&t, &p) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,60 @@
+//! Contingency table between two labelings (sparse, hashmap-backed).
+
+use rustc_hash::FxHashMap;
+
+/// Sparse contingency table: `cells[(i,j)]` = #points with truth-class i and
+/// predicted-cluster j, plus the marginals.
+pub struct Contingency {
+    pub n: usize,
+    pub cells: FxHashMap<(i64, i64), u64>,
+    pub row_sums: FxHashMap<i64, u64>,
+    pub col_sums: FxHashMap<i64, u64>,
+}
+
+impl Contingency {
+    pub fn build(truth: &[i64], pred: &[i64]) -> Self {
+        assert_eq!(
+            truth.len(),
+            pred.len(),
+            "labelings must cover the same points"
+        );
+        let mut cells: FxHashMap<(i64, i64), u64> = FxHashMap::default();
+        let mut row_sums: FxHashMap<i64, u64> = FxHashMap::default();
+        let mut col_sums: FxHashMap<i64, u64> = FxHashMap::default();
+        for (&a, &b) in truth.iter().zip(pred.iter()) {
+            *cells.entry((a, b)).or_insert(0) += 1;
+            *row_sums.entry(a).or_insert(0) += 1;
+            *col_sums.entry(b).or_insert(0) += 1;
+        }
+        Contingency { n: truth.len(), cells, row_sums, col_sums }
+    }
+}
+
+/// n choose 2 as f64.
+#[inline]
+pub fn comb2(n: u64) -> f64 {
+    n as f64 * (n as f64 - 1.0) / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_marginals() {
+        let t = [0i64, 0, 1, 1, 1];
+        let p = [0i64, 1, 1, 1, 2];
+        let c = Contingency::build(&t, &p);
+        assert_eq!(c.n, 5);
+        assert_eq!(c.cells[&(1, 1)], 2);
+        assert_eq!(c.row_sums[&1], 3);
+        assert_eq!(c.col_sums[&1], 3);
+    }
+
+    #[test]
+    fn comb2_basics() {
+        assert_eq!(comb2(0), 0.0);
+        assert_eq!(comb2(1), 0.0);
+        assert_eq!(comb2(4), 6.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Clustering-quality metrics used in the paper's evaluation: Adjusted Rand
+//! Index and Normalized Mutual Information (arithmetic normalization, the
+//! scikit-learn default the paper reports).
+//!
+//! Noise points labeled `-1` are treated as an ordinary label value —
+//! matching `sklearn.metrics.adjusted_rand_score` /
+//! `normalized_mutual_info_score` behaviour on DBSCAN outputs.
+
+mod ari;
+mod contingency;
+mod nmi;
+
+pub use ari::adjusted_rand_index;
+pub use contingency::Contingency;
+pub use nmi::normalized_mutual_info;
+
+/// Convenience: both metrics at once (shares the contingency table).
+pub fn ari_nmi(truth: &[i64], pred: &[i64]) -> (f64, f64) {
+    let c = Contingency::build(truth, pred);
+    (ari::ari_from_contingency(&c), nmi::nmi_from_contingency(&c))
+}

@@ -1,0 +1,98 @@
+//! Normalized Mutual Information with arithmetic-mean normalization
+//! (`sklearn.metrics.normalized_mutual_info_score` default).
+
+use super::contingency::Contingency;
+
+fn entropy(marginals: &rustc_hash::FxHashMap<i64, u64>, n: f64) -> f64 {
+    marginals
+        .values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            if p > 0.0 {
+                -p * p.ln()
+            } else {
+                0.0
+            }
+        })
+        .sum()
+}
+
+pub fn nmi_from_contingency(c: &Contingency) -> f64 {
+    let n = c.n as f64;
+    if c.n == 0 {
+        return 1.0;
+    }
+    let hu = entropy(&c.row_sums, n);
+    let hv = entropy(&c.col_sums, n);
+    // MI = sum_ij p_ij ln(p_ij / (p_i p_j))
+    let mut mi = 0.0;
+    for (&(i, j), &nij) in &c.cells {
+        let pij = nij as f64 / n;
+        let pi = c.row_sums[&i] as f64 / n;
+        let pj = c.col_sums[&j] as f64 / n;
+        if pij > 0.0 {
+            mi += pij * (pij / (pi * pj)).ln();
+        }
+    }
+    let denom = 0.5 * (hu + hv);
+    if denom <= 1e-15 {
+        // both labelings constant: by sklearn convention NMI = 1 if identical
+        // partitions else 0; constant vs constant is identical ⇒ 1.
+        return 1.0;
+    }
+    (mi / denom).clamp(0.0, 1.0)
+}
+
+/// NMI between a ground-truth labeling and a predicted labeling.
+pub fn normalized_mutual_info(truth: &[i64], pred: &[i64]) -> f64 {
+    nmi_from_contingency(&Contingency::build(truth, pred))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_agreement() {
+        let t = [0i64, 0, 1, 1, 2, 2];
+        let p = [5i64, 5, 7, 7, 9, 9];
+        assert!((normalized_mutual_info(&t, &p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sklearn_fixture() {
+        // normalized_mutual_info_score([0,0,1,1],[0,0,1,2]) = 0.8 exactly
+        // (MI = ln2, H(U) = ln2, H(V) = 1.5·ln2, arithmetic mean = 1.25·ln2)
+        let t = [0i64, 0, 1, 1];
+        let p = [0i64, 0, 1, 2];
+        let got = normalized_mutual_info(&t, &p);
+        assert!((got - 0.8).abs() < 1e-12, "got {got}");
+    }
+
+    #[test]
+    fn independent_labelings_zero() {
+        // [0,0,1,1] vs [0,1,0,1]: MI = 0
+        let t = [0i64, 0, 1, 1];
+        let p = [0i64, 1, 0, 1];
+        assert!(normalized_mutual_info(&t, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_labelings() {
+        let t = [0i64; 4];
+        let p = [7i64; 4];
+        assert_eq!(normalized_mutual_info(&t, &p), 1.0);
+    }
+
+    #[test]
+    fn bounded_in_unit_interval() {
+        use crate::util::proptest::{run_prop, Gen};
+        run_prop("nmi in [0,1]", 100, |g: &mut Gen| {
+            let n = g.usize_in(1..=40);
+            let t: Vec<i64> = (0..n).map(|_| g.usize_in(0..=4) as i64 - 1).collect();
+            let p: Vec<i64> = (0..n).map(|_| g.usize_in(0..=4) as i64 - 1).collect();
+            let v = normalized_mutual_info(&t, &p);
+            assert!((0.0..=1.0).contains(&v), "nmi {v} out of range");
+        });
+    }
+}

@@ -1,0 +1,209 @@
+//! Hashing and distance engines: the seam between the L3 coordinator and
+//! the AOT compute artifacts.
+//!
+//! Each engine exists in two flavours — `Native` (pure Rust, scalar) and
+//! `Xla` (batched through the compiled Pallas/JAX artifact) — implementing
+//! the same trait, so the coordinator can route batches to either and the
+//! `bench_hashing` ablation can compare them on identical inputs. The two
+//! flavours are bit-identical on non-boundary inputs because both evaluate
+//! exactly `floor((x + η) * inv_two_eps)` in f32.
+
+use anyhow::{anyhow, Result};
+
+use crate::baselines::brute::PairwiseDistance;
+use crate::lsh::{BucketKey, GridHasher};
+
+use super::Runtime;
+
+/// Batched hashing: point batch → per-point `t` bucket keys.
+pub trait HashingEngine {
+    /// `xs` is row-major `n × dim`; returns `n` key vectors of length `t`.
+    fn keys_batch(&mut self, xs: &[f32], n: usize) -> Result<Vec<Vec<BucketKey>>>;
+    fn describe(&self) -> String;
+}
+
+/// Pure-Rust scalar hashing.
+pub struct NativeHashing {
+    pub hasher: GridHasher,
+    scratch: Vec<i32>,
+}
+
+impl NativeHashing {
+    pub fn new(hasher: GridHasher) -> Self {
+        NativeHashing { hasher, scratch: Vec::new() }
+    }
+}
+
+impl HashingEngine for NativeHashing {
+    fn keys_batch(&mut self, xs: &[f32], n: usize) -> Result<Vec<Vec<BucketKey>>> {
+        let d = self.hasher.dim;
+        debug_assert_eq!(xs.len(), n * d);
+        Ok((0..n)
+            .map(|i| self.hasher.keys(&xs[i * d..(i + 1) * d], &mut self.scratch))
+            .collect())
+    }
+
+    fn describe(&self) -> String {
+        format!("native(d={}, t={})", self.hasher.dim, self.hasher.t)
+    }
+}
+
+/// Hashing through the AOT `hash_d{d}_t{t}_b{b}` artifact: pads the batch
+/// to the compiled batch size, runs the Pallas quantizer, and reduces the
+/// returned `t × b × d` grid coordinates to bucket keys with the same
+/// combiner as the native path.
+pub struct XlaHashing {
+    runtime: Runtime,
+    artifact: String,
+    pub hasher: GridHasher,
+    b: usize,
+    padded: Vec<f32>,
+}
+
+impl XlaHashing {
+    /// Pick the artifact matching the hasher's (d, t); errors when no
+    /// compiled variant fits (fall back to native in that case).
+    pub fn new(mut runtime: Runtime, hasher: GridHasher) -> Result<Self> {
+        let (d, t) = (hasher.dim, hasher.t);
+        let artifact = runtime
+            .artifacts
+            .values()
+            .filter(|a| {
+                a.kind == "hash"
+                    && a.params.get("d") == Some(&d)
+                    && a.params.get("t") == Some(&t)
+            })
+            .map(|a| a.name.clone())
+            .next()
+            .ok_or_else(|| anyhow!("no hash artifact for d={d}, t={t}"))?;
+        let b = *runtime.meta(&artifact)?.params.get("b").unwrap();
+        runtime.load(&artifact)?;
+        Ok(XlaHashing { runtime, artifact, hasher, b, padded: Vec::new() })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.b
+    }
+}
+
+impl HashingEngine for XlaHashing {
+    fn keys_batch(&mut self, xs: &[f32], n: usize) -> Result<Vec<Vec<BucketKey>>> {
+        let (d, t, b) = (self.hasher.dim, self.hasher.t, self.b);
+        debug_assert_eq!(xs.len(), n * d);
+        let inv = [self.hasher.inv_two_eps()];
+        let mut out: Vec<Vec<BucketKey>> = Vec::with_capacity(n);
+        let mut start = 0;
+        while start < n {
+            let chunk = (n - start).min(b);
+            // pad the tail chunk with zeros up to the compiled batch size
+            self.padded.clear();
+            self.padded.extend_from_slice(&xs[start * d..(start + chunk) * d]);
+            self.padded.resize(b * d, 0.0);
+            let coords = self.runtime.execute_f32_to_i32(
+                &self.artifact,
+                &[&self.padded, &self.hasher.etas, &inv],
+            )?;
+            debug_assert_eq!(coords.len(), t * b * d);
+            for j in 0..chunk {
+                let keys = (0..t)
+                    .map(|i| {
+                        let off = i * b * d + j * d;
+                        GridHasher::key_from_coords(&coords[off..off + d])
+                    })
+                    .collect();
+                out.push(keys);
+            }
+            start += chunk;
+        }
+        Ok(out)
+    }
+
+    fn describe(&self) -> String {
+        format!("xla({}, b={})", self.artifact, self.b)
+    }
+}
+
+/// Distance tiles through the AOT `dist_d{d}_q{q}_m{m}` artifact,
+/// implementing the exact-DBSCAN baseline's [`PairwiseDistance`].
+pub struct XlaDistance {
+    runtime: Runtime,
+    artifact: String,
+    q: usize,
+    m: usize,
+    d: usize,
+    qbuf: Vec<f32>,
+    cbuf: Vec<f32>,
+}
+
+impl XlaDistance {
+    pub fn new(mut runtime: Runtime, d: usize) -> Result<Self> {
+        let artifact = runtime
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "dist" && a.params.get("d") == Some(&d))
+            .map(|a| a.name.clone())
+            .next()
+            .ok_or_else(|| anyhow!("no dist artifact for d={d}"))?;
+        let meta = runtime.meta(&artifact)?.clone();
+        let q = *meta.params.get("q").unwrap();
+        let m = *meta.params.get("m").unwrap();
+        runtime.load(&artifact)?;
+        Ok(XlaDistance { runtime, artifact, q, m, d, qbuf: Vec::new(), cbuf: Vec::new() })
+    }
+
+    pub fn tile_shape(&self) -> (usize, usize) {
+        (self.q, self.m)
+    }
+}
+
+/// Padding coordinate far from all real data so padded rows/cols never pass
+/// an ε-threshold.
+const PAD: f32 = 1.0e15;
+
+impl PairwiseDistance for XlaDistance {
+    fn dist2(
+        &mut self,
+        q: &[f32],
+        nq: usize,
+        c: &[f32],
+        nc: usize,
+        d: usize,
+        out: &mut [f32],
+    ) {
+        assert_eq!(d, self.d, "XlaDistance compiled for d={}, got {d}", self.d);
+        assert!(nq <= self.q && nc <= self.m, "tile exceeds compiled shape");
+        self.qbuf.clear();
+        self.qbuf.extend_from_slice(q);
+        self.qbuf.resize(self.q * d, PAD);
+        self.cbuf.clear();
+        self.cbuf.extend_from_slice(c);
+        self.cbuf.resize(self.m * d, -PAD);
+        let full = self
+            .runtime
+            .execute_f32_to_f32(&self.artifact, &[&self.qbuf, &self.cbuf])
+            .expect("distance artifact execution failed");
+        for i in 0..nq {
+            out[i * nc..(i + 1) * nc]
+                .copy_from_slice(&full[i * self.m..i * self.m + nc]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_matches_hasher() {
+        let hasher = GridHasher::new(4, 3, 0.75, 9);
+        let mut eng = NativeHashing::new(hasher.clone());
+        let xs = vec![0.1f32, 0.2, 0.3, -4.0, 5.0, -6.0];
+        let keys = eng.keys_batch(&xs, 2).unwrap();
+        let mut scratch = Vec::new();
+        assert_eq!(keys[0], hasher.keys(&xs[0..3], &mut scratch));
+        assert_eq!(keys[1], hasher.keys(&xs[3..6], &mut scratch));
+    }
+
+    // XLA-engine parity tests live in rust/tests/runtime_artifacts.rs (they
+    // need the compiled artifacts on disk).
+}

@@ -1,0 +1,213 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! Interchange is **HLO text**, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+//! version the published `xla` 0.1.6 crate links) rejects; the text parser
+//! reassigns ids and round-trips cleanly. Every model returns a 1-tuple
+//! (`return_tuple=True` at lowering), unwrapped here with `to_tuple1`.
+
+pub mod engines;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape+dtype of one artifact input/output, from `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+    /// kind-specific integer params (d, t, b, q, m, ...)
+    pub params: HashMap<String, usize>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing shape"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing dtype"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+/// The artifact registry: parses `manifest.json`, lazily compiles
+/// executables on the PJRT CPU client, and runs them.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Default artifacts directory: `$DYN_DBSCAN_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root (also checked one level up so tests
+    /// running from target dirs find it).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("DYN_DBSCAN_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    /// Are artifacts present (without constructing a client)?
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let mut artifacts = HashMap::new();
+        for a in json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let kind = a
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing file"))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact missing inputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let output = tensor_spec(
+                a.get("output").ok_or_else(|| anyhow!("artifact missing output"))?,
+            )?;
+            let mut params = HashMap::new();
+            if let Json::Obj(m) = a {
+                for (k, v) in m {
+                    if let Some(x) = v.as_f64() {
+                        params.insert(k.clone(), x as usize);
+                    }
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta { name, kind, file, inputs, output, params },
+            );
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), artifacts, executables: HashMap::new() })
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Compile (idempotent) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.meta(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute with f32 inputs (shape-checked against the manifest); returns
+    /// the single tuple element as a Literal.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<xla::Literal> {
+        self.load(name)?;
+        let meta = self.meta(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(anyhow!(
+                "{name}: {} inputs supplied, {} expected",
+                inputs.len(),
+                meta.inputs.len()
+            ));
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (spec, &data) in meta.inputs.iter().zip(inputs) {
+            let want: usize = spec.shape.iter().product();
+            if data.len() != want {
+                return Err(anyhow!(
+                    "{name}: input size {} != manifest {:?}",
+                    data.len(),
+                    spec.shape
+                ));
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&x| x as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            lits.push(lit);
+        }
+        let exe = self.executables.get(name).expect("loaded above");
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        result.to_tuple1().map_err(|e| anyhow!("tuple unwrap: {e:?}"))
+    }
+
+    /// Execute and read the output as i32 (hash artifacts).
+    pub fn execute_f32_to_i32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<i32>> {
+        let lit = self.execute_f32(name, inputs)?;
+        lit.to_vec::<i32>().map_err(|e| anyhow!("i32 readback: {e:?}"))
+    }
+
+    /// Execute and read the output as f32 (distance/project artifacts).
+    pub fn execute_f32_to_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let lit = self.execute_f32(name, inputs)?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("f32 readback: {e:?}"))
+    }
+}

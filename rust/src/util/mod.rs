@@ -1,0 +1,39 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (`rand`, `serde`/`serde_json`, `clap`, `criterion`, `proptest`) are not
+//! available. This module provides the small, well-tested equivalents the
+//! rest of the crate needs:
+//!
+//! * [`rng`] — splittable xoshiro256** PRNG (deterministic, seedable);
+//! * [`json`] — minimal JSON value model, parser and serializer (configs,
+//!   the artifact manifest, experiment outputs);
+//! * [`stats`] — streaming mean/variance, percentile sketches and latency
+//!   histograms for the coordinator and the bench harness;
+//! * [`proptest`] — a tiny property-testing harness (random case generation
+//!   with seed reporting and bounded shrinking).
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(1000, 1024), 1024);
+    }
+}

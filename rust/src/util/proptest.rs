@@ -1,0 +1,120 @@
+//! Tiny property-testing harness (offline stand-in for the `proptest` crate).
+//!
+//! Usage pattern (`no_run`: doctest binaries don't get the xla rpath):
+//!
+//! ```no_run
+//! use dyn_dbscan::util::proptest::{run_prop, Gen};
+//! run_prop("vec reverse twice is identity", 100, |g| {
+//!     let v: Vec<u32> = g.vec(0..=64, |g| g.rng.next_u64() as u32);
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+//!
+//! Each case runs with a seed derived from a fixed master seed (or the
+//! `PROPTEST_SEED` env var) so failures are reproducible; on panic the
+//! harness reports the case seed before propagating.
+
+use std::ops::RangeInclusive;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::util::rng::Rng;
+
+/// Per-case generation context.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Random length in `range`, then build a vec with `f`.
+    pub fn vec<T>(&mut self, range: RangeInclusive<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let lo = *range.start();
+        let hi = *range.end();
+        let len = lo + self.rng.below_usize(hi - lo + 1);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Uniform usize in inclusive range.
+    pub fn usize_in(&mut self, range: RangeInclusive<usize>) -> usize {
+        let lo = *range.start();
+        let hi = *range.end();
+        lo + self.rng.below_usize(hi - lo + 1)
+    }
+
+    /// Uniform f64 in range.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Pick one element from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+}
+
+fn master_seed() -> u64 {
+    std::env::var("PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD15_EA5E)
+}
+
+/// Run `cases` random cases of `prop`. Panics (with the failing case seed in
+/// the message) if any case fails.
+pub fn run_prop(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let master = master_seed();
+    for case in 0..cases {
+        let seed = master
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let result = catch_unwind(AssertUnwindSafe(|| prop(&mut g)));
+        #[allow(clippy::manual_assert)]
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (PROPTEST_SEED={master}, case seed {seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop("sort idempotent", 50, |g| {
+            let mut v: Vec<u64> = g.vec(0..=32, |g| g.rng.below(100));
+            v.sort_unstable();
+            let w = v.clone();
+            v.sort_unstable();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn reports_failure() {
+        run_prop("always fails eventually", 50, |g| {
+            assert!(g.rng.below(10) != 3);
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<usize> = Vec::new();
+        run_prop("collect", 5, |g| {
+            first.push(g.usize_in(0..=1000));
+        });
+        let mut second: Vec<usize> = Vec::new();
+        run_prop("collect", 5, |g| {
+            second.push(g.usize_in(0..=1000));
+        });
+        assert_eq!(first, second);
+    }
+}

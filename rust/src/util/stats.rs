@@ -1,0 +1,252 @@
+//! Streaming statistics: Welford mean/variance, log-bucketed latency
+//! histograms (HdrHistogram-lite) and simple run summaries with standard
+//! errors — shared by the coordinator's metrics endpoint and the bench
+//! harness.
+
+/// Streaming mean / variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn stderr(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Log₂-bucketed latency histogram with sub-bucket linear resolution.
+///
+/// Records `u64` nanosecond values in `O(1)`; quantiles are approximate
+/// (≤ ~3% relative error with 16 sub-buckets), which is plenty for p50/p99
+/// reporting in the coordinator.
+#[derive(Clone, Debug)]
+pub struct LatencyHisto {
+    /// counts[b][s]: bucket b covers [2^b, 2^(b+1)), split into SUB linear
+    /// sub-buckets.
+    counts: Vec<[u64; Self::SUB]>,
+    total: u64,
+    max: u64,
+    min: u64,
+    sum: u128,
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHisto {
+    const SUB: usize = 16;
+    const BUCKETS: usize = 64;
+
+    pub fn new() -> Self {
+        LatencyHisto {
+            counts: vec![[0u64; Self::SUB]; Self::BUCKETS],
+            total: 0,
+            max: 0,
+            min: u64::MAX,
+            sum: 0,
+        }
+    }
+
+    #[inline]
+    fn slot(v: u64) -> (usize, usize) {
+        if v < Self::SUB as u64 {
+            return (0, v as usize % Self::SUB);
+        }
+        let b = 63 - v.leading_zeros() as usize;
+        let sub = ((v - (1u64 << b)) * Self::SUB as u64 >> b) as usize;
+        (b, sub.min(Self::SUB - 1))
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let (b, s) = Self::slot(v);
+        self.counts[b][s] += 1;
+        self.total += 1;
+        self.max = self.max.max(v);
+        self.min = self.min.min(v);
+        self.sum += v as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Approximate quantile (q in [0,1]): midpoint of the containing slot.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for b in 0..Self::BUCKETS {
+            for s in 0..Self::SUB {
+                let c = self.counts[b][s];
+                if c == 0 {
+                    continue;
+                }
+                seen += c;
+                if seen >= target.max(1) {
+                    let lo = if b == 0 {
+                        s as u64
+                    } else {
+                        (1u64 << b) + ((s as u64) << b) / Self::SUB as u64
+                    };
+                    let hi = if b == 0 {
+                        s as u64 + 1
+                    } else {
+                        (1u64 << b) + (((s + 1) as u64) << b) / Self::SUB as u64
+                    };
+                    return (lo + hi) / 2;
+                }
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LatencyHisto) {
+        for b in 0..Self::BUCKETS {
+            for s in 0..Self::SUB {
+                self.counts[b][s] += other.counts[b][s];
+            }
+        }
+        self.total += other.total;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+        self.sum += other.sum;
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}ns p50={} p90={} p99={} max={}",
+            self.total,
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.9),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn histo_quantiles_on_uniform() {
+        let mut h = LatencyHisto::new();
+        let mut r = Rng::new(1);
+        for _ in 0..200_000 {
+            h.record(r.below(1_000_000));
+        }
+        let p50 = h.quantile(0.5) as f64;
+        let p99 = h.quantile(0.99) as f64;
+        assert!((p50 - 500_000.0).abs() / 500_000.0 < 0.08, "p50={p50}");
+        assert!((p99 - 990_000.0).abs() / 990_000.0 < 0.08, "p99={p99}");
+        assert!((h.mean() - 500_000.0).abs() / 500_000.0 < 0.02);
+    }
+
+    #[test]
+    fn histo_exact_small_values() {
+        let mut h = LatencyHisto::new();
+        for v in [3u64, 3, 3, 10] {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 3);
+        assert_eq!(h.max(), 10);
+        assert_eq!(h.quantile(0.5), 3);
+    }
+
+    #[test]
+    fn histo_merge() {
+        let mut a = LatencyHisto::new();
+        let mut b = LatencyHisto::new();
+        for v in 0..1000u64 {
+            a.record(v);
+            b.record(v + 1000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2000);
+        assert_eq!(a.max(), 1999);
+        let p50 = a.quantile(0.5);
+        assert!((900..=1100).contains(&p50), "p50={p50}");
+    }
+}

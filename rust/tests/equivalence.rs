@@ -1,0 +1,196 @@
+//! Cross-validation between independent implementations:
+//!
+//! * `DynamicDbscan` (incremental, Euler-tour forest) vs a from-scratch
+//!   static realization of Definition 4 over the *same* hash functions —
+//!   core sets and core components must agree exactly after any stream;
+//! * quality agreement between `DynamicDbscan`, EMZ and exact DBSCAN on
+//!   separable data (all three should find the planted clusters);
+//! * treap vs skip-list backends must produce identical clusterings.
+
+use dyn_dbscan::baselines::brute::{BruteDbscan, NativeDistance};
+use dyn_dbscan::baselines::emz::{Emz, EmzConfig};
+use dyn_dbscan::baselines::unionfind::UnionFind;
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+use dyn_dbscan::lsh::GridHasher;
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::util::rng::Rng;
+use rustc_hash::FxHashMap;
+
+/// Static Definition-4 clustering with externally supplied hash functions:
+/// core = some bucket ≥ k; components = cores colliding anywhere.
+fn static_def4(
+    hasher: &GridHasher,
+    k: usize,
+    pts: &[Vec<f32>],
+) -> (Vec<bool>, Vec<i64>) {
+    let n = pts.len();
+    let mut scratch = Vec::new();
+    let keys: Vec<Vec<u128>> = pts.iter().map(|p| hasher.keys(p, &mut scratch)).collect();
+    let mut is_core = vec![false; n];
+    for i in 0..hasher.t {
+        let mut buckets: FxHashMap<u128, Vec<usize>> = FxHashMap::default();
+        for (j, kk) in keys.iter().enumerate() {
+            buckets.entry(kk[i]).or_default().push(j);
+        }
+        for members in buckets.values() {
+            if members.len() >= k {
+                for &m in members {
+                    is_core[m] = true;
+                }
+            }
+        }
+    }
+    let mut uf = UnionFind::new(n);
+    for i in 0..hasher.t {
+        let mut rep: FxHashMap<u128, usize> = FxHashMap::default();
+        for (j, kk) in keys.iter().enumerate() {
+            if !is_core[j] {
+                continue;
+            }
+            match rep.entry(kk[i]) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    uf.union(j, *e.get());
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(j);
+                }
+            }
+        }
+    }
+    let mut labels = vec![-1i64; n];
+    let mut next = 0i64;
+    let mut seen: FxHashMap<usize, i64> = FxHashMap::default();
+    for j in 0..n {
+        if is_core[j] {
+            let r = uf.find(j);
+            labels[j] = *seen.entry(r).or_insert_with(|| {
+                let l = next;
+                next += 1;
+                l
+            });
+        }
+    }
+    (is_core, labels)
+}
+
+#[test]
+fn dynamic_matches_static_def4_after_stream() {
+    for seed in [3u64, 17, 99] {
+        let cfg = DbscanConfig { k: 4, t: 5, eps: 0.5, dim: 2, ..Default::default() };
+        let mut db = DynamicDbscan::new(cfg.clone(), seed);
+        let mut rng = Rng::new(seed ^ 0xAB);
+        // churn: adds with interleaved deletes, then compare the SURVIVORS
+        let mut pts: Vec<Vec<f32>> = Vec::new();
+        let mut ids: Vec<u64> = Vec::new();
+        let mut alive: Vec<usize> = Vec::new();
+        for _ in 0..400 {
+            if alive.is_empty() || rng.coin(0.75) {
+                let c = rng.below(3) as f64 * 2.0;
+                let p: Vec<f32> = (0..2)
+                    .map(|_| (c + rng.uniform(-0.6, 0.6)) as f32)
+                    .collect();
+                ids.push(db.add_point(&p));
+                pts.push(p);
+                alive.push(ids.len() - 1);
+            } else {
+                let i = rng.below_usize(alive.len());
+                let j = alive.swap_remove(i);
+                db.delete_point(ids[j]);
+            }
+        }
+        // static reference over the surviving points with the same hasher
+        let survivors: Vec<Vec<f32>> = alive.iter().map(|&j| pts[j].clone()).collect();
+        let (ref_core, ref_labels) = static_def4(&db.hasher, cfg.k, &survivors);
+        // core set must agree exactly
+        for (pos, &j) in alive.iter().enumerate() {
+            assert_eq!(
+                db.is_core(ids[j]),
+                ref_core[pos],
+                "core flag mismatch at live point {pos} (seed {seed})"
+            );
+        }
+        // core components must agree exactly (pairwise)
+        let live_ids: Vec<u64> = alive.iter().map(|&j| ids[j]).collect();
+        for a in 0..alive.len() {
+            for b in (a + 1)..alive.len() {
+                if ref_core[a] && ref_core[b] {
+                    assert_eq!(
+                        db.get_cluster(live_ids[a]) == db.get_cluster(live_ids[b]),
+                        ref_labels[a] == ref_labels[b],
+                        "component mismatch between {a},{b} (seed {seed})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn three_algorithms_agree_on_separable_blobs() {
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: 1500,
+            dim: 5,
+            clusters: 4,
+            std: 0.3,
+            center_box: 25.0,
+            weights: vec![],
+        },
+        11,
+    );
+    // DynamicDbscan
+    let cfg = DbscanConfig { k: 8, t: 10, eps: 0.75, dim: 5, ..Default::default() };
+    let mut db = DynamicDbscan::new(cfg, 2);
+    let ids: Vec<u64> = (0..ds.n()).map(|i| db.add_point(ds.point(i))).collect();
+    let dyn_labels = db.labels_for(&ids);
+    // EMZ
+    let emz = Emz::new(EmzConfig { k: 8, t: 10, eps: 0.75, dim: 5 }, 3);
+    let emz_labels = emz.cluster(&ds.xs, ds.n()).labels;
+    // exact
+    let brute_labels =
+        BruteDbscan::new(1.0, 8).cluster(&ds.xs, ds.n(), 5, &mut NativeDistance);
+    for (name, labels) in
+        [("dyn", &dyn_labels), ("emz", &emz_labels), ("brute", &brute_labels)]
+    {
+        let ari = adjusted_rand_index(&ds.labels, labels);
+        assert!(ari > 0.97, "{name} ARI {ari} too low");
+    }
+    // and with each other
+    assert!(adjusted_rand_index(&dyn_labels, &emz_labels) > 0.95);
+    assert!(adjusted_rand_index(&dyn_labels, &brute_labels) > 0.95);
+}
+
+#[test]
+fn treap_and_skiplist_backends_agree() {
+    use dyn_dbscan::dbscan::{RepairConn, TreapConn};
+    use dyn_dbscan::ett::TreapForest;
+    let cfg = DbscanConfig { k: 4, t: 6, eps: 0.5, dim: 2, ..Default::default() };
+    let mut a = DynamicDbscan::new(cfg.clone(), 7);
+    let mut b: DynamicDbscan<TreapConn> =
+        DynamicDbscan::with_conn(cfg, 7, RepairConn::new(TreapForest::new(8)));
+    let mut rng = Rng::new(123);
+    let mut ids: Vec<(u64, u64)> = Vec::new();
+    for _ in 0..500 {
+        if ids.is_empty() || rng.coin(0.7) {
+            let c = rng.below(3) as f64 * 2.0;
+            let p: Vec<f32> =
+                (0..2).map(|_| (c + rng.uniform(-0.5, 0.5)) as f32).collect();
+            ids.push((a.add_point(&p), b.add_point(&p)));
+        } else {
+            let i = rng.below_usize(ids.len());
+            let (ia, ib) = ids.swap_remove(i);
+            a.delete_point(ia);
+            b.delete_point(ib);
+        }
+    }
+    assert_eq!(a.num_points(), b.num_points());
+    assert_eq!(a.num_core_points(), b.num_core_points());
+    for (pos, &(ia, ib)) in ids.iter().enumerate() {
+        assert_eq!(a.is_core(ia), b.is_core(ib), "core mismatch at {pos}");
+    }
+    // identical partitions over all live points
+    let la: Vec<i64> = a.labels_for(&ids.iter().map(|x| x.0).collect::<Vec<_>>());
+    let lb: Vec<i64> = b.labels_for(&ids.iter().map(|x| x.1).collect::<Vec<_>>());
+    assert_eq!(adjusted_rand_index(&la, &lb), 1.0, "backends disagree");
+}

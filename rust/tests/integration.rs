@@ -1,0 +1,160 @@
+//! End-to-end integration: full pipelines over realistic workloads —
+//! streaming with deletions, sliding windows, snapshots, CLI arg parsing
+//! against command dispatch, and long-run structural health.
+
+use dyn_dbscan::coordinator::driver::{
+    final_quality, make_engine, stream_dataset, to_stream_ops, EngineKind,
+};
+use dyn_dbscan::coordinator::{run_pipeline, CoordinatorConfig};
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::data::stream::{sliding_window_stream, Order};
+use dyn_dbscan::data::synth::{load, PaperDataset};
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+use dyn_dbscan::util::rng::Rng;
+
+#[test]
+fn blobs_stream_high_quality_with_snapshots() {
+    // well-separated mixture at test scale (the paper-scale stand-in needs
+    // its full n=200k for this density regime; see bench_fig2 for that)
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: 3000,
+            dim: 6,
+            clusters: 5,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        5,
+    );
+    let cfg = DbscanConfig {
+        k: 10,
+        t: 10,
+        eps: 0.75,
+        dim: ds.dim,
+        ..Default::default()
+    };
+    let out =
+        stream_dataset(&ds, cfg, Order::Random, 500, 1, 42, EngineKind::Native)
+            .unwrap();
+    let (ari, nmi) = final_quality(&ds, &out);
+    assert!(ari > 0.95, "blobs ARI {ari}");
+    assert!(nmi > 0.9, "blobs NMI {nmi}");
+    // snapshots were produced and final snapshot is near-perfect
+    let snaps: Vec<f64> = out.reports.iter().filter_map(|r| r.ari).collect();
+    assert_eq!(snaps.len(), out.reports.len());
+    assert!(snaps.last().unwrap() > &0.95);
+}
+
+#[test]
+fn sliding_window_stream_is_stable() {
+    let ds = load(PaperDataset::Blobs, 0.005, 9);
+    let cfg = DbscanConfig {
+        k: 8,
+        t: 8,
+        eps: 0.75,
+        dim: ds.dim,
+        ..Default::default()
+    };
+    let window = ds.n() / 3;
+    let batches = sliding_window_stream(&ds, Order::Random, 200, window, 4);
+    let ops = to_stream_ops(&ds, &batches);
+    let mut engine = make_engine(&cfg, 17, EngineKind::Native).unwrap();
+    let ccfg = CoordinatorConfig {
+        dbscan: cfg,
+        queue: 2,
+        snapshot_every: 0,
+        seed: 17,
+    };
+    let out = run_pipeline(ccfg, engine.as_mut(), ops, None).unwrap();
+    let last = out.reports.last().unwrap();
+    assert_eq!(last.live_points, window, "window size not respected");
+    assert!(out.delete_latency.count() > 0, "no deletes were exercised");
+    // live points of a stationary distribution should still cluster well
+    let live: Vec<u64> = out.final_labels.iter().map(|&(e, _)| e).collect();
+    let truth: Vec<i64> = live.iter().map(|&e| ds.labels[e as usize]).collect();
+    let pred: Vec<i64> = out.final_labels.iter().map(|&(_, l)| l).collect();
+    let ari = dyn_dbscan::metrics::adjusted_rand_index(&truth, &pred);
+    assert!(ari > 0.85, "sliding-window ARI {ari}");
+}
+
+#[test]
+fn long_churn_preserves_invariants_and_memory() {
+    // heavy add/delete churn, then verify + drain to empty
+    let cfg = DbscanConfig { k: 5, t: 6, eps: 0.4, dim: 3, ..Default::default() };
+    let mut db = DynamicDbscan::new(cfg, 77);
+    let mut rng = Rng::new(42);
+    let mut live: Vec<u64> = Vec::new();
+    for step in 0..3000 {
+        if live.is_empty() || rng.coin(0.6) {
+            let c = rng.below(4) as f64 * 2.5;
+            let p: Vec<f32> =
+                (0..3).map(|_| (c + rng.uniform(-0.5, 0.5)) as f32).collect();
+            live.push(db.add_point(&p));
+        } else {
+            let i = rng.below_usize(live.len());
+            db.delete_point(live.swap_remove(i));
+        }
+        if step % 500 == 499 {
+            db.verify().unwrap_or_else(|e| panic!("step {step}: {e}"));
+        }
+    }
+    let stats = db.repair_stats();
+    // replacement machinery exercised but bounded
+    assert!(stats.searches < db.stats.deletes * 50 + 1000);
+    while let Some(p) = live.pop() {
+        db.delete_point(p);
+    }
+    assert_eq!(db.num_points(), 0);
+    assert_eq!(db.num_core_points(), 0);
+    db.verify().unwrap();
+}
+
+#[test]
+fn cli_dispatch_verify_and_info() {
+    use dyn_dbscan::cli::{commands, Args};
+    let argv: Vec<String> = ["verify", "--ops", "400", "--seed", "3"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let args = Args::parse(&argv).unwrap();
+    commands::dispatch(&args).expect("verify command failed");
+    // unknown command errors cleanly
+    let bad = Args::parse(&["wat".to_string()]).unwrap();
+    assert!(commands::dispatch(&bad).is_err());
+}
+
+#[test]
+fn cluster_by_cluster_order_still_correct_for_dynamic() {
+    // the order that breaks EMZFixedCore must not hurt DynamicDbscan
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: 2000,
+            dim: 6,
+            clusters: 5,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        3,
+    );
+    let cfg = DbscanConfig {
+        k: 10,
+        t: 10,
+        eps: 0.75,
+        dim: ds.dim,
+        ..Default::default()
+    };
+    let out = stream_dataset(
+        &ds,
+        cfg,
+        Order::ClusterByCluster,
+        400,
+        0,
+        11,
+        EngineKind::Native,
+    )
+    .unwrap();
+    let (ari, _) = final_quality(&ds, &out);
+    assert!(ari > 0.95, "cluster-ordered ARI {ari}");
+}

@@ -1,0 +1,144 @@
+//! Integration over the PJRT runtime: load the AOT artifacts produced by
+//! `make artifacts`, execute them, and check parity with the native Rust
+//! implementations. Skipped (with a notice) when artifacts are absent.
+
+use dyn_dbscan::baselines::brute::{NativeDistance, PairwiseDistance};
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+use dyn_dbscan::lsh::GridHasher;
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::runtime::engines::{HashingEngine, NativeHashing, XlaHashing, XlaDistance};
+use dyn_dbscan::runtime::Runtime;
+use dyn_dbscan::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime init"))
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in ["hash_d4_t2_b128", "dist_d4_q128_m128", "project_b128_din8_dout4"] {
+        assert!(rt.artifacts.contains_key(name), "missing artifact {name}");
+    }
+    let h = &rt.artifacts["hash_d4_t2_b128"];
+    assert_eq!(h.kind, "hash");
+    assert_eq!(h.output.shape, vec![2, 128, 4]);
+}
+
+#[test]
+fn project_artifact_matches_native_matmul() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (b, din, dout) = (128usize, 8usize, 4usize);
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..b * din).map(|_| rng.next_f32() - 0.5).collect();
+    let w: Vec<f32> = (0..din * dout).map(|_| rng.next_f32() - 0.5).collect();
+    let got = rt
+        .execute_f32_to_f32("project_b128_din8_dout4", &[&x, &w])
+        .expect("execute");
+    assert_eq!(got.len(), b * dout);
+    for i in 0..b {
+        for j in 0..dout {
+            let want: f32 = (0..din).map(|k| x[i * din + k] * w[k * dout + j]).sum();
+            assert!(
+                (got[i * dout + j] - want).abs() < 1e-4,
+                "({i},{j}): {} vs {want}",
+                got[i * dout + j]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_hashing_engine_matches_native_bit_for_bit() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (d, t) = (4usize, 2usize);
+    let hasher = GridHasher::new(t, d, 0.75, 99);
+    let mut native = NativeHashing::new(hasher.clone());
+    let mut xla = match XlaHashing::new(rt, hasher) {
+        Ok(x) => x,
+        Err(e) => panic!("no hash artifact for smoke shape: {e}"),
+    };
+    let mut rng = Rng::new(7);
+    // n deliberately not a multiple of the compiled batch (tests padding)
+    let n = 300;
+    let xs: Vec<f32> = (0..n * d).map(|_| (rng.next_f32() - 0.5) * 10.0).collect();
+    let kn = native.keys_batch(&xs, n).unwrap();
+    let kx = xla.keys_batch(&xs, n).unwrap();
+    assert_eq!(kn.len(), kx.len());
+    let mut mismatches = 0;
+    for i in 0..n {
+        if kn[i] != kx[i] {
+            mismatches += 1;
+        }
+    }
+    assert_eq!(
+        mismatches, 0,
+        "native and XLA hashing disagree on {mismatches}/{n} points"
+    );
+}
+
+#[test]
+fn xla_distance_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let d = 4usize;
+    let mut xd = XlaDistance::new(rt, d).expect("dist artifact");
+    let (q, m) = xd.tile_shape();
+    let mut rng = Rng::new(13);
+    let nq = q.min(100);
+    let nc = m.min(120);
+    let qs: Vec<f32> = (0..nq * d).map(|_| rng.next_f32() * 4.0).collect();
+    let cs: Vec<f32> = (0..nc * d).map(|_| rng.next_f32() * 4.0).collect();
+    let mut got = vec![0f32; nq * nc];
+    let mut want = vec![0f32; nq * nc];
+    xd.dist2(&qs, nq, &cs, nc, d, &mut got);
+    NativeDistance.dist2(&qs, nq, &cs, nc, d, &mut want);
+    for i in 0..nq * nc {
+        assert!(
+            (got[i] - want[i]).abs() <= 1e-3 * (1.0 + want[i]),
+            "tile mismatch at {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn clustering_through_xla_engine_matches_native_engine() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (d, t, k) = (4usize, 2usize, 4usize);
+    let cfg = DbscanConfig { k, t, eps: 0.75, dim: d, ..Default::default() };
+    let seed = 21;
+    // identical hashers (same seed/config) on both paths
+    let hasher = GridHasher::new(t, d, 0.75, seed);
+    let mut xla = XlaHashing::new(rt, hasher).expect("hash artifact");
+
+    let mut rng = Rng::new(3);
+    let n = 500;
+    let mut xs = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let c = rng.below(3) as f32 * 5.0;
+        for _ in 0..d {
+            xs.push(c + (rng.next_f32() - 0.5));
+        }
+    }
+    let keys = xla.keys_batch(&xs, n).unwrap();
+
+    let mut via_native = DynamicDbscan::new(cfg.clone(), seed);
+    let mut via_xla = DynamicDbscan::new(cfg, seed);
+    let mut ids_n = Vec::new();
+    let mut ids_x = Vec::new();
+    for i in 0..n {
+        let p = &xs[i * d..(i + 1) * d];
+        ids_n.push(via_native.add_point(p));
+        ids_x.push(via_xla.add_point_with_keys(p, keys[i].clone()));
+    }
+    assert_eq!(via_native.num_core_points(), via_xla.num_core_points());
+    let ln = via_native.labels_for(&ids_n);
+    let lx = via_xla.labels_for(&ids_x);
+    assert_eq!(adjusted_rand_index(&ln, &lx), 1.0, "XLA path diverged");
+}
