@@ -1,0 +1,101 @@
+//! Sharded serving demo: the blobs workload through `ShardedEngine` — S
+//! parallel `DynamicDbscan` workers behind the deterministic grid-cell
+//! router, ghost replication at block boundaries, cross-shard cluster
+//! stitching, and snapshot-backed reads — compared against the
+//! single-instance path on the same stream.
+//!
+//! ```bash
+//! cargo run --release --example sharded_stream [-- scale shards seed]
+//! # e.g. paper-size blobs on 8 shards:
+//! cargo run --release --example sharded_stream -- 1.0 8
+//! ```
+
+use std::time::Instant;
+
+use dyn_dbscan::data::stream::Order;
+use dyn_dbscan::data::synth::{load, PaperDataset};
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+use dyn_dbscan::experiments::{PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::shard::driver::{
+    final_quality_sharded, stream_dataset_sharded, summarize_shard,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    let shards: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let seed: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(42);
+
+    let ds = load(PaperDataset::Blobs, scale, seed);
+    println!(
+        "blobs stand-in: n={} d={} clusters={} (scale {scale}), {shards} shards",
+        ds.n(),
+        ds.dim,
+        ds.num_clusters()
+    );
+    let cfg = DbscanConfig {
+        k: PAPER_K,
+        t: PAPER_T,
+        eps: PAPER_EPS,
+        dim: ds.dim,
+        ..Default::default()
+    };
+
+    // sharded run with periodic snapshots
+    let out = stream_dataset_sharded(
+        &ds,
+        cfg.clone(),
+        Order::Random,
+        PAPER_BATCH,
+        /*window=*/ 0,
+        /*snapshot_every=*/ 5,
+        seed,
+        shards,
+    )
+    .expect("sharded stream failed");
+    for r in &out.reports {
+        println!("{}", summarize_shard(r));
+    }
+    let (ari, nmi) = final_quality_sharded(&ds, &out);
+    let stats = &out.engine.stats;
+    println!("\nsharded: ARI={ari:.3} NMI={nmi:.3} wall={:.2}s", out.total_wall_s);
+    println!(
+        "         {:.0} updates/s, ghost ratio {:.2}, per-shard live {:?}",
+        out.updates_per_s(),
+        stats.ghost_ratio(),
+        out.engine.snapshot.shard_live
+    );
+    println!("         add latency: {}", out.engine.add_latency.summary());
+    let snap = &out.engine.snapshot;
+    let top: Vec<String> = snap
+        .cluster_sizes
+        .iter()
+        .take(5)
+        .map(|&(l, s)| format!("#{l}:{s}"))
+        .collect();
+    println!("         {} clusters, largest: {}", snap.clusters, top.join(" "));
+
+    // single-instance reference on the identical point set
+    let t0 = Instant::now();
+    let mut db = DynamicDbscan::new(cfg, seed);
+    let ids: Vec<u64> = (0..ds.n()).map(|i| db.add_point(ds.point(i))).collect();
+    let single_s = t0.elapsed().as_secs_f64();
+    let single = db.labels_for(&ids);
+    let sharded: Vec<i64> = out
+        .final_labels
+        .iter()
+        .map(|&(_, l)| l)
+        .collect();
+    // final_labels is sorted by ext = insertion index, aligning with `ids`
+    let agreement = adjusted_rand_index(&single, &sharded);
+    println!(
+        "\nsingle:  {:.2}s ({:.0} updates/s)",
+        single_s,
+        ds.n() as f64 / single_s
+    );
+    println!(
+        "         sharded-vs-single ARI {agreement:.3}, speedup {:.2}x",
+        single_s / out.total_wall_s
+    );
+}

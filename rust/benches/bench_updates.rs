@@ -7,13 +7,25 @@
 //! bound predicts near-flat per-op times across decades of n (vs the
 //! linear growth a per-batch static rebuild exhibits).
 //!
+//! Also runs the **shard sweep**: one insert stream through
+//! `ShardedEngine` at S ∈ {1, 2, 4, 8} against the single-instance
+//! baseline, recording wall-clock throughput, speedup and ghost-replication
+//! overhead to `BENCH_shard.json` (the scaling trajectory every later
+//! perf PR appends to).
+//!
 //! ```bash
 //! cargo bench --bench bench_updates
 //! ```
 
-use dyn_dbscan::bench_harness::Table;
+use std::time::Instant;
+
+use dyn_dbscan::bench_harness::{write_json, Table};
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::data::Dataset;
 use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan, PaperConn, RepairConn};
 use dyn_dbscan::ett::SkipForest;
+use dyn_dbscan::shard::{ShardConfig, ShardedEngine};
+use dyn_dbscan::util::json::Json;
 use dyn_dbscan::util::rng::Rng;
 
 const DIM: usize = 10;
@@ -126,4 +138,100 @@ fn main() {
     }
     table.print();
     dyn_dbscan::bench_harness::export_json(&table.to_json());
+
+    shard_sweep(if quick { 50_000 } else { 200_000 });
+}
+
+/// Insert-stream throughput: single-instance `DynamicDbscan` vs
+/// `ShardedEngine` at S ∈ {1, 2, 4, 8} on the same synthetic stream.
+/// The sharded wall time includes routing, channel transport and the
+/// final stitch barrier — it is the end-to-end serving cost.
+fn shard_sweep(n: usize) {
+    // wide center box: the 24 clusters spread over ~10 blocks per routing
+    // axis, so block→shard hashing balances and ghost zones stay thin
+    let ds: Dataset = make_blobs(
+        &BlobsConfig {
+            n,
+            dim: DIM,
+            clusters: 24,
+            std: 0.3,
+            center_box: 60.0,
+            weights: vec![],
+        },
+        7,
+    );
+    let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: DIM, ..Default::default() };
+
+    // single-instance baseline (the per-op path, no pipeline overhead)
+    let t0 = Instant::now();
+    let mut db = DynamicDbscan::new(cfg.clone(), 42);
+    for i in 0..ds.n() {
+        db.add_point(ds.point(i));
+    }
+    let single_s = t0.elapsed().as_secs_f64();
+    let single_ups = n as f64 / single_s;
+    std::hint::black_box(db.num_core_points());
+
+    let mut table = Table::new(
+        "shard sweep: 1 insert stream, single vs ShardedEngine",
+        &["shards", "wall s", "updates/s", "speedup", "ghost ratio", "clusters"],
+    );
+    table.row(vec![
+        "single".into(),
+        format!("{single_s:.2}"),
+        format!("{single_ups:.0}"),
+        "1.00".into(),
+        "0.00".into(),
+        "-".into(),
+    ]);
+
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for &shards in &[1usize, 2, 4, 8] {
+        let scfg = ShardConfig::new(cfg.clone(), shards, 42);
+        let mut eng = ShardedEngine::new(scfg);
+        let t0 = Instant::now();
+        for i in 0..ds.n() {
+            eng.insert(i as u64, ds.point(i));
+            if (i + 1) % 1000 == 0 {
+                eng.flush();
+            }
+        }
+        eng.flush();
+        let snap = eng.publish(); // barrier: every op applied + stitched
+        let wall_s = t0.elapsed().as_secs_f64();
+        let out = eng.finish();
+        let ups = n as f64 / wall_s;
+        let speedup = single_s / wall_s;
+        let ghost_ratio = out.stats.ghost_ratio();
+        table.row(vec![
+            shards.to_string(),
+            format!("{wall_s:.2}"),
+            format!("{ups:.0}"),
+            format!("{speedup:.2}"),
+            format!("{ghost_ratio:.2}"),
+            snap.clusters.to_string(),
+        ]);
+        sweep_rows.push(Json::obj(vec![
+            ("shards", Json::num(shards as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("updates_per_s", Json::num(ups)),
+            ("speedup_vs_single", Json::num(speedup)),
+            ("ghost_ratio", Json::num(ghost_ratio)),
+            ("clusters", Json::num(snap.clusters as f64)),
+        ]));
+    }
+    table.print();
+
+    let record = Json::obj(vec![
+        ("bench", Json::str("shard_sweep")),
+        ("n", Json::num(n as f64)),
+        ("dim", Json::num(DIM as f64)),
+        ("clusters", Json::num(24.0)),
+        ("single_wall_s", Json::num(single_s)),
+        ("single_updates_per_s", Json::num(single_ups)),
+        ("sweep", Json::Arr(sweep_rows)),
+    ]);
+    write_json("BENCH_shard.json", &record);
+    dyn_dbscan::bench_harness::export_json(&record);
+    println!("\nwrote BENCH_shard.json");
 }

@@ -200,6 +200,16 @@ pub fn export_json(record: &Json) {
     }
 }
 
+/// Write a JSON record to a named file, replacing any previous contents
+/// (best-effort) — used for standalone machine-readable results like
+/// `BENCH_shard.json`.
+pub fn write_json(path: &str, record: &Json) {
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::File::create(path) {
+        let _ = writeln!(f, "{record}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -14,6 +14,8 @@ use crate::experiments::fig2::{run_fig2, Panel};
 use crate::experiments::table2::run_table2;
 use crate::experiments::{env_runs, env_scale, PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
 use crate::runtime::Runtime;
+use crate::shard::driver::{final_quality_sharded, run_sharded, summarize_shard};
+use crate::shard::ShardConfig;
 use crate::util::rng::Rng;
 
 use super::Args;
@@ -112,6 +114,45 @@ fn cmd_stream(args: &Args) -> Result<()> {
         batches.len()
     );
     let ops = to_stream_ops(&ds, &batches);
+    let shards = args.get_usize("shards", 1)?;
+    if shards > 1 {
+        if kind != EngineKind::Native {
+            eprintln!(
+                "[stream] note: --engine {kind:?} applies to the single-instance \
+                 hash stage; sharded workers hash natively"
+            );
+        }
+        let scfg = ShardConfig::new(cfg, shards, seed);
+        println!(
+            "apply stage: {shards} shards (block_side={}, ghost_margin={})",
+            scfg.block_side, scfg.ghost_margin
+        );
+        let labels = ds.labels.clone();
+        let truth = move |e: u64| labels[e as usize];
+        let out = run_sharded(scfg, ops, snapshot, Some(&truth))?;
+        for r in &out.reports {
+            println!("{}", summarize_shard(r));
+        }
+        let (ari, nmi) = final_quality_sharded(&ds, &out);
+        let stats = &out.engine.stats;
+        println!(
+            "\nfinal: live={} ARI={ari:.3} NMI={nmi:.3} wall={:.2}s ({:.0} updates/s)",
+            out.final_labels.len(),
+            out.total_wall_s,
+            out.updates_per_s()
+        );
+        println!(
+            "sharding: {} primary + {} ghost inserts (ghost ratio {:.2}), {} deletes",
+            stats.inserts,
+            stats.ghost_inserts,
+            stats.ghost_ratio(),
+            stats.deletes
+        );
+        println!("per-shard live (ghosts incl.): {:?}", out.engine.snapshot.shard_live);
+        println!("add    latency: {}", out.engine.add_latency.summary());
+        println!("delete latency: {}", out.engine.delete_latency.summary());
+        return Ok(());
+    }
     let mut engine = make_engine(&cfg, seed, kind)?;
     println!("hash stage: {}", engine.describe());
     let ccfg = CoordinatorConfig {

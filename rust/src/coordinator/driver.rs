@@ -1,5 +1,11 @@
 //! Convenience drivers gluing datasets, streams, engines and the pipeline —
 //! shared by the CLI, the examples and the bench harness.
+//!
+//! The single-instance apply stage here has a sharded alternative: the
+//! same `StreamOp` batches can be fed to [`crate::shard::ShardedEngine`]
+//! via the re-exported [`run_sharded`] / [`stream_dataset_sharded`]
+//! drivers (S parallel `DynamicDbscan` workers with cross-shard cluster
+//! stitching — see [`crate::shard`]).
 
 use anyhow::Result;
 
@@ -11,6 +17,11 @@ use crate::runtime::engines::{HashingEngine, NativeHashing, XlaHashing};
 use crate::runtime::Runtime;
 
 use super::{run_pipeline, BatchReport, CoordinatorConfig, RunOutcome, StreamOp};
+
+pub use crate::shard::driver::{
+    final_quality_sharded, run_sharded, stream_dataset_sharded, summarize_shard,
+    ShardReport, ShardedRunOutcome,
+};
 
 /// Which hashing engine the hash stage should use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

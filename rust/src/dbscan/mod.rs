@@ -164,6 +164,17 @@ impl<C: Connectivity> DynamicDbscan<C> {
         self.points.keys().copied()
     }
 
+    /// True when `p` is currently live noise: non-core and unattached —
+    /// the singleton case `labels_for` reports as −1 (false for unknown
+    /// ids, like [`Self::is_core`]). Used by the sharded engine's
+    /// stitcher to decide which replicas carry cluster identity.
+    pub fn is_noise(&self, p: PointId) -> bool {
+        self.points
+            .get(&p)
+            .map(|st| !st.is_core && st.attached_to.is_none())
+            .unwrap_or(false)
+    }
+
     /// Dense labels for a set of points: clusters numbered 0.., noise
     /// (unattached non-core singletons) labeled −1 to match sklearn
     /// conventions in the metrics.

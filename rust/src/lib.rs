@@ -12,7 +12,9 @@
 //!   ([`dbscan::DynamicDbscan`]), the Euler-tour dynamic forest ([`ett`]),
 //!   grid-LSH bucket tables ([`lsh`]), baselines ([`baselines`]), metrics
 //!   ([`metrics`]), datasets ([`data`]), the streaming coordinator
-//!   ([`coordinator`]) and the benchmark harness ([`bench_harness`]).
+//!   ([`coordinator`]), the sharded parallel serving engine with
+//!   cross-shard cluster stitching ([`shard`]) and the benchmark harness
+//!   ([`bench_harness`]).
 //! * **L2/L1 (python, build-time only)** — JAX/Pallas compute graphs
 //!   (batched grid-hash quantizer, pairwise-distance tiles, PCA projection)
 //!   AOT-lowered to HLO text and executed through [`runtime`] on the PJRT
@@ -45,4 +47,5 @@ pub mod experiments;
 pub mod lsh;
 pub mod metrics;
 pub mod runtime;
+pub mod shard;
 pub mod util;

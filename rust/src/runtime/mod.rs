@@ -8,6 +8,10 @@
 //! (`return_tuple=True` at lowering), unwrapped here with `to_tuple1`.
 
 pub mod engines;
+#[cfg(not(feature = "xla"))]
+mod xla_stub;
+#[cfg(not(feature = "xla"))]
+use self::xla_stub as xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -1,0 +1,237 @@
+//! Stream drivers for the sharded engine — the S-way counterpart of
+//! [`crate::coordinator::driver`], sharing its `StreamOp`/`TruthFn` types
+//! so datasets, stream generators and the CLI feed either path.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::driver::to_stream_ops;
+use crate::coordinator::{StreamOp, TruthFn};
+use crate::data::stream::{self, Order};
+use crate::data::Dataset;
+use crate::dbscan::DbscanConfig;
+use crate::metrics::ari_nmi;
+
+use super::engine::{EngineOutcome, ShardedEngine};
+use super::ShardConfig;
+
+/// Per-published-snapshot progress report.
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    /// index of the last batch folded into this snapshot
+    pub seq: usize,
+    /// ops in that batch (primary ops; ghosts excluded)
+    pub ops: usize,
+    pub live_points: usize,
+    pub core_points: usize,
+    pub clusters: usize,
+    /// wall-clock seconds since stream start (routing + workers + stitch)
+    pub wall_s: f64,
+    pub ari: Option<f64>,
+    pub nmi: Option<f64>,
+}
+
+/// Outcome of a sharded stream run.
+pub struct ShardedRunOutcome {
+    pub reports: Vec<ShardReport>,
+    /// final global labels per live ext id (sorted by ext)
+    pub final_labels: Vec<(u64, i64)>,
+    pub engine: EngineOutcome,
+    /// end-to-end wall time: first op routed → final snapshot published
+    pub total_wall_s: f64,
+}
+
+impl ShardedRunOutcome {
+    /// Primary updates applied per wall-clock second.
+    pub fn updates_per_s(&self) -> f64 {
+        let ops = self.engine.stats.inserts + self.engine.stats.deletes;
+        if self.total_wall_s > 0.0 {
+            ops as f64 / self.total_wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run batched stream ops through a [`ShardedEngine`], publishing a
+/// snapshot (and a report) every `snapshot_every` batches plus once at the
+/// end. `truth` adds ARI/NMI against ground-truth labels to each report.
+pub fn run_sharded(
+    cfg: ShardConfig,
+    batches: Vec<Vec<StreamOp>>,
+    snapshot_every: usize,
+    truth: Option<&TruthFn>,
+) -> Result<ShardedRunOutcome> {
+    let mut engine = ShardedEngine::new(cfg);
+    let mut reports = Vec::new();
+    let t0 = Instant::now();
+    let last = batches.len().saturating_sub(1);
+    for (seq, ops) in batches.into_iter().enumerate() {
+        let n_ops = ops.len();
+        for op in ops {
+            match op {
+                StreamOp::Insert { ext, coords } => engine.insert(ext, &coords),
+                StreamOp::Delete { ext } => engine.delete(ext),
+            }
+        }
+        engine.flush();
+        let snap_due =
+            snapshot_every > 0 && (seq + 1) % snapshot_every == 0 && seq != last;
+        if snap_due {
+            let snap = engine.publish();
+            let (ari, nmi) = quality_vs_truth(&snap.labels, truth);
+            reports.push(ShardReport {
+                seq,
+                ops: n_ops,
+                live_points: snap.live_points,
+                core_points: snap.core_points,
+                clusters: snap.clusters,
+                wall_s: t0.elapsed().as_secs_f64(),
+                ari,
+                nmi,
+            });
+        }
+    }
+    // final barrier + snapshot (finish always publishes once more)
+    let outcome = engine.finish();
+    let total_wall_s = t0.elapsed().as_secs_f64();
+    let snap = &outcome.snapshot;
+    let (ari, nmi) = quality_vs_truth(&snap.labels, truth);
+    reports.push(ShardReport {
+        seq: last,
+        ops: 0,
+        live_points: snap.live_points,
+        core_points: snap.core_points,
+        clusters: snap.clusters,
+        wall_s: total_wall_s,
+        ari,
+        nmi,
+    });
+    Ok(ShardedRunOutcome {
+        reports,
+        final_labels: outcome.snapshot.labels.clone(),
+        engine: outcome,
+        total_wall_s,
+    })
+}
+
+fn quality_vs_truth(
+    labels: &[(u64, i64)],
+    truth: Option<&TruthFn>,
+) -> (Option<f64>, Option<f64>) {
+    match truth {
+        None => (None, None),
+        Some(t) => {
+            if labels.is_empty() {
+                return (None, None);
+            }
+            let want: Vec<i64> = labels.iter().map(|&(e, _)| t(e)).collect();
+            let pred: Vec<i64> = labels.iter().map(|&(_, l)| l).collect();
+            let (a, n) = ari_nmi(&want, &pred);
+            (Some(a), Some(n))
+        }
+    }
+}
+
+/// Stream a dataset (insert-only, or sliding-window when `window > 0`)
+/// through the sharded engine — the S-way analogue of
+/// [`crate::coordinator::driver::stream_dataset`].
+#[allow(clippy::too_many_arguments)]
+pub fn stream_dataset_sharded(
+    ds: &Dataset,
+    cfg: DbscanConfig,
+    order: Order,
+    batch: usize,
+    window: usize,
+    snapshot_every: usize,
+    seed: u64,
+    shards: usize,
+) -> Result<ShardedRunOutcome> {
+    let update_batches = if window > 0 {
+        stream::sliding_window_stream(ds, order, batch, window, seed)
+    } else {
+        stream::insert_stream(ds, order, batch, seed)
+    };
+    let batches = to_stream_ops(ds, &update_batches);
+    let scfg = ShardConfig::new(cfg, shards, seed);
+    let labels = &ds.labels;
+    let truth = move |e: u64| labels[e as usize];
+    run_sharded(scfg, batches, snapshot_every, Some(&truth))
+}
+
+/// Final-state quality of a sharded run (ARI/NMI over live points).
+pub fn final_quality_sharded(ds: &Dataset, out: &ShardedRunOutcome) -> (f64, f64) {
+    let truth: Vec<i64> =
+        out.final_labels.iter().map(|&(e, _)| ds.labels[e as usize]).collect();
+    let pred: Vec<i64> = out.final_labels.iter().map(|&(_, l)| l).collect();
+    ari_nmi(&truth, &pred)
+}
+
+/// One-line progress summary for CLI logs.
+pub fn summarize_shard(r: &ShardReport) -> String {
+    format!(
+        "snap @batch {:>4}: live={:<7} cores={:<7} clusters={:<5} wall={:.2}s{}",
+        r.seq,
+        r.live_points,
+        r.core_points,
+        r.clusters,
+        r.wall_s,
+        match (r.ari, r.nmi) {
+            (Some(a), Some(n)) => format!(" ARI={a:.3} NMI={n:.3}"),
+            _ => String::new(),
+        }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{make_blobs, BlobsConfig};
+
+    #[test]
+    fn sharded_stream_end_to_end() {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 1200,
+                dim: 4,
+                clusters: 4,
+                std: 0.3,
+                center_box: 20.0,
+                weights: vec![],
+            },
+            7,
+        );
+        let cfg = DbscanConfig { k: 8, t: 10, eps: 0.75, dim: 4, ..Default::default() };
+        let out = stream_dataset_sharded(&ds, cfg, Order::Random, 300, 0, 2, 11, 4)
+            .unwrap();
+        assert_eq!(out.final_labels.len(), 1200);
+        // snapshots at batch 1 (seq=1) and the final one
+        assert_eq!(out.reports.len(), 2);
+        assert!(out.reports.last().unwrap().ari.is_some());
+        let (ari, nmi) = final_quality_sharded(&ds, &out);
+        assert!(ari > 0.95, "ari {ari}");
+        assert!(nmi > 0.9, "nmi {nmi}");
+        assert!(out.updates_per_s() > 0.0);
+    }
+
+    #[test]
+    fn sharded_sliding_window_keeps_window_size() {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 900,
+                dim: 3,
+                clusters: 3,
+                std: 0.4,
+                center_box: 15.0,
+                weights: vec![],
+            },
+            5,
+        );
+        let cfg = DbscanConfig { k: 6, t: 8, eps: 0.75, dim: 3, ..Default::default() };
+        let out = stream_dataset_sharded(&ds, cfg, Order::Random, 200, 300, 0, 3, 3)
+            .unwrap();
+        assert_eq!(out.final_labels.len(), 300);
+        assert_eq!(out.engine.stats.deletes, 600);
+    }
+}

@@ -1,0 +1,358 @@
+//! `ShardedEngine` — the front of the sharded serving path.
+//!
+//! Owns the router, the per-worker bounded channels and the latest
+//! published [`GlobalSnapshot`]. Updates are routed and buffered per shard
+//! (`insert`/`delete`), shipped in batches (`flush`), and made visible to
+//! readers by `publish`, which barriers on every worker (the `Snapshot`
+//! marker rides the op channels) and stitches the replies. Reads
+//! (`cluster_of`, `cluster_sizes`, `snapshot`) only touch the immutable
+//! snapshot — they never contend with the update path.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use rustc_hash::FxHashMap;
+
+use crate::util::stats::LatencyHisto;
+
+use super::router::Router;
+use super::stitch::{stitch, GlobalSnapshot};
+use super::worker::{run_worker, ShardOp, ShardSnapshot, WorkerReport};
+use super::ShardConfig;
+
+/// Engine-side op counters.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    /// primary inserts (= external points inserted)
+    pub inserts: u64,
+    /// ghost replicas created by boundary replication
+    pub ghost_inserts: u64,
+    /// external deletes (each fans out to every holding shard)
+    pub deletes: u64,
+    pub publishes: u64,
+}
+
+impl EngineStats {
+    /// Ghost replicas per primary insert — the replication overhead the
+    /// block geometry costs.
+    pub fn ghost_ratio(&self) -> f64 {
+        if self.inserts == 0 {
+            0.0
+        } else {
+            self.ghost_inserts as f64 / self.inserts as f64
+        }
+    }
+}
+
+/// Everything a finished engine hands back.
+pub struct EngineOutcome {
+    /// final snapshot (published by `finish` after the last op)
+    pub snapshot: Arc<GlobalSnapshot>,
+    pub stats: EngineStats,
+    /// per-shard reports, sorted by shard id
+    pub worker_reports: Vec<WorkerReport>,
+    /// add latency merged across shards (ghost inserts included)
+    pub add_latency: LatencyHisto,
+    pub delete_latency: LatencyHisto,
+}
+
+/// S parallel `DynamicDbscan` instances behind a deterministic spatial
+/// router, with cross-shard cluster stitching. See the [module
+/// docs](super) for the architecture.
+pub struct ShardedEngine {
+    cfg: ShardConfig,
+    router: Router,
+    txs: Vec<SyncSender<Vec<ShardOp>>>,
+    snap_rx: Receiver<ShardSnapshot>,
+    workers: Vec<JoinHandle<WorkerReport>>,
+    /// ext → shards holding a replica (primary first)
+    placement: FxHashMap<u64, Vec<u32>>,
+    /// per-shard op buffer for the batch being assembled
+    pending: Vec<Vec<ShardOp>>,
+    snapshot: Arc<GlobalSnapshot>,
+    next_seq: u64,
+    stats: EngineStats,
+    /// ops accepted since the last publish (lets `finish` skip a
+    /// redundant stitch when the snapshot is already current)
+    dirty: bool,
+}
+
+impl ShardedEngine {
+    pub fn new(cfg: ShardConfig) -> Self {
+        let shards = cfg.shards.max(1);
+        let router = Router::new(&cfg);
+        let (snap_tx, snap_rx) = channel::<ShardSnapshot>();
+        let mut txs = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = sync_channel::<Vec<ShardOp>>(cfg.queue.max(1));
+            let dcfg = cfg.dbscan.clone();
+            let seed = cfg.seed;
+            let stx = snap_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("shard-{shard}"))
+                .spawn(move || run_worker(shard, dcfg, seed, rx, stx))
+                .expect("failed to spawn shard worker");
+            txs.push(tx);
+            workers.push(handle);
+        }
+        drop(snap_tx);
+        ShardedEngine {
+            router,
+            txs,
+            snap_rx,
+            workers,
+            placement: FxHashMap::default(),
+            pending: (0..shards).map(|_| Vec::new()).collect(),
+            snapshot: GlobalSnapshot::empty(),
+            next_seq: 1,
+            stats: EngineStats::default(),
+            dirty: false,
+            cfg,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    pub fn config(&self) -> &ShardConfig {
+        &self.cfg
+    }
+
+    // ------------------------------------------------------------------
+    // update path
+    // ------------------------------------------------------------------
+
+    /// Route and buffer an insert. `ext` is the caller's stable external
+    /// id; it must not be live already.
+    pub fn insert(&mut self, ext: u64, coords: &[f32]) {
+        assert_eq!(coords.len(), self.cfg.dbscan.dim, "bad dim in sharded insert");
+        let decision = self.router.route(coords);
+        let mut held: Vec<u32> = Vec::with_capacity(1 + decision.ghosts.len());
+        held.push(decision.primary as u32);
+        self.pending[decision.primary].push(ShardOp::Insert {
+            ext,
+            coords: coords.to_vec(),
+            primary: true,
+        });
+        self.stats.inserts += 1;
+        for &g in &decision.ghosts {
+            held.push(g as u32);
+            self.pending[g].push(ShardOp::Insert {
+                ext,
+                coords: coords.to_vec(),
+                primary: false,
+            });
+            self.stats.ghost_inserts += 1;
+        }
+        let prev = self.placement.insert(ext, held);
+        assert!(prev.is_none(), "sharded insert of duplicate ext id {ext}");
+        self.dirty = true;
+    }
+
+    /// Buffer a delete for every shard holding a replica of `ext`.
+    pub fn delete(&mut self, ext: u64) {
+        let held = self
+            .placement
+            .remove(&ext)
+            .unwrap_or_else(|| panic!("sharded delete of unknown ext id {ext}"));
+        for s in held {
+            self.pending[s as usize].push(ShardOp::Delete { ext });
+        }
+        self.stats.deletes += 1;
+        self.dirty = true;
+    }
+
+    /// Ship buffered ops to the workers. Blocks only when a worker's
+    /// bounded queue is full (backpressure).
+    pub fn flush(&mut self) {
+        for (s, tx) in self.txs.iter().enumerate() {
+            if !self.pending[s].is_empty() {
+                let batch = std::mem::take(&mut self.pending[s]);
+                tx.send(batch).expect("shard worker terminated");
+            }
+        }
+    }
+
+    /// Flush, barrier on all workers, stitch their local clusterings and
+    /// publish the result as the new immutable snapshot.
+    pub fn publish(&mut self) -> Arc<GlobalSnapshot> {
+        self.flush();
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        for tx in &self.txs {
+            tx.send(vec![ShardOp::Snapshot { seq }]).expect("shard worker terminated");
+        }
+        let mut snaps: Vec<ShardSnapshot> = Vec::with_capacity(self.txs.len());
+        while snaps.len() < self.txs.len() {
+            let s = self.snap_rx.recv().expect("snapshot channel closed");
+            debug_assert_eq!(s.seq, seq, "stale snapshot sequence");
+            snaps.push(s);
+        }
+        let snap = Arc::new(stitch(snaps, seq));
+        self.snapshot = Arc::clone(&snap);
+        self.stats.publishes += 1;
+        self.dirty = false;
+        snap
+    }
+
+    // ------------------------------------------------------------------
+    // read path (snapshot-backed; never blocks on the workers)
+    // ------------------------------------------------------------------
+
+    /// Latest published snapshot. Cheap (`Arc` clone); hand it to reader
+    /// threads.
+    pub fn snapshot(&self) -> Arc<GlobalSnapshot> {
+        Arc::clone(&self.snapshot)
+    }
+
+    /// Global cluster of `ext` as of the latest snapshot (`None`: not
+    /// live, `Some(-1)`: noise).
+    pub fn cluster_of(&self, ext: u64) -> Option<i64> {
+        self.snapshot.cluster_of(ext)
+    }
+
+    /// Global `(label, size)` pairs, largest first, as of the latest
+    /// snapshot.
+    pub fn cluster_sizes(&self) -> &[(i64, usize)] {
+        &self.snapshot.cluster_sizes
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    // ------------------------------------------------------------------
+    // shutdown
+    // ------------------------------------------------------------------
+
+    /// Publish a final snapshot (skipped when the last publish is still
+    /// current), stop the workers and collect their reports.
+    pub fn finish(mut self) -> EngineOutcome {
+        let snapshot = if self.dirty || self.stats.publishes == 0 {
+            self.publish()
+        } else {
+            Arc::clone(&self.snapshot)
+        };
+        self.txs.clear(); // drop senders: workers drain and exit
+        let mut add_latency = LatencyHisto::new();
+        let mut delete_latency = LatencyHisto::new();
+        let mut worker_reports: Vec<WorkerReport> = Vec::with_capacity(self.workers.len());
+        for handle in self.workers.drain(..) {
+            let r = handle.join().expect("shard worker panicked");
+            add_latency.merge(&r.add_latency);
+            delete_latency.merge(&r.delete_latency);
+            worker_reports.push(r);
+        }
+        worker_reports.sort_by_key(|r| r.shard);
+        EngineOutcome {
+            snapshot,
+            stats: self.stats.clone(),
+            worker_reports,
+            add_latency,
+            delete_latency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{make_blobs, BlobsConfig};
+    use crate::dbscan::DbscanConfig;
+
+    fn engine(shards: usize, dim: usize, seed: u64) -> ShardedEngine {
+        let dbscan =
+            DbscanConfig { k: 6, t: 8, eps: 0.75, dim, ..Default::default() };
+        ShardedEngine::new(ShardConfig::new(dbscan, shards, seed))
+    }
+
+    #[test]
+    fn insert_publish_read_roundtrip() {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 600,
+                dim: 4,
+                clusters: 3,
+                std: 0.3,
+                center_box: 20.0,
+                weights: vec![],
+            },
+            3,
+        );
+        let mut eng = engine(3, 4, 17);
+        assert_eq!(eng.cluster_of(0), None, "empty engine has no labels");
+        for i in 0..ds.n() {
+            eng.insert(i as u64, ds.point(i));
+        }
+        let snap = eng.publish();
+        assert_eq!(snap.live_points, 600);
+        assert!(snap.clusters >= 3, "expected >= 3 clusters, got {}", snap.clusters);
+        let sized: usize = snap.cluster_sizes.iter().map(|&(_, s)| s).sum();
+        assert!(sized <= 600);
+        assert!(snap.core_points > 0);
+        // reads come from the snapshot
+        assert_eq!(eng.cluster_of(0), snap.cluster_of(0));
+        let out = eng.finish();
+        assert_eq!(out.stats.inserts, 600);
+        assert_eq!(out.snapshot.live_points, 600);
+        assert_eq!(out.worker_reports.len(), 3);
+        assert_eq!(out.add_latency.count(), 600 + out.stats.ghost_inserts);
+    }
+
+    #[test]
+    fn deletes_fan_out_to_all_replicas() {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 400,
+                dim: 3,
+                clusters: 4,
+                std: 0.4,
+                center_box: 15.0,
+                weights: vec![],
+            },
+            9,
+        );
+        let mut eng = engine(4, 3, 5);
+        for i in 0..ds.n() {
+            eng.insert(i as u64, ds.point(i));
+        }
+        for e in 0..200u64 {
+            eng.delete(e);
+        }
+        let out = eng.finish();
+        assert_eq!(out.snapshot.live_points, 200);
+        assert_eq!(out.stats.deletes, 200);
+        assert_eq!(out.snapshot.cluster_of(0), None);
+        assert!(out.snapshot.cluster_of(250).is_some());
+        // deletes removed ghosts too: total live across shards = surviving
+        // primaries + surviving ghosts = all replicas created − all deleted
+        let live_all: usize = out.snapshot.shard_live.iter().sum();
+        let replicas = out.stats.inserts + out.stats.ghost_inserts;
+        let removed: u64 = out.worker_reports.iter().map(|r| r.deletes).sum();
+        assert_eq!(live_all as u64, replicas - removed);
+        assert_eq!(
+            out.worker_reports.iter().map(|r| r.primary_inserts).sum::<u64>(),
+            400
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate ext id")]
+    fn duplicate_insert_panics() {
+        let mut eng = engine(2, 2, 1);
+        eng.insert(7, &[0.0, 0.0]);
+        eng.insert(7, &[1.0, 1.0]);
+        let _ = eng.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown ext id")]
+    fn unknown_delete_panics() {
+        let mut eng = engine(2, 2, 1);
+        eng.delete(3);
+        let _ = eng.finish();
+    }
+}

@@ -1,0 +1,108 @@
+//! `shard` — the sharded parallel serving engine with cross-shard cluster
+//! stitching.
+//!
+//! The paper's `O(d·log³n + log⁴n)` update bound (Theorem 1) is per-point
+//! and single-threaded; this subsystem scales it across cores the way
+//! Wang–Gu–Shun (arXiv:1912.06255) parallelize static DBSCAN: the grid
+//! decomposition is the partitioning unit. Our grid-LSH buckets
+//! (Definition 3) give that unit for free — the cell of the *first* hash
+//! function spatially partitions the data, so an S-way split by cell block
+//! co-locates density-connected points and makes cross-shard edges rare and
+//! local to block boundaries.
+//!
+//! ```text
+//!            ┌────────┐   per-shard bounded op channels
+//!  updates ─▶│ Router │──┬──▶ [worker 0: DynamicDbscan]──┐
+//!            │ (cell→ │  ├──▶ [worker 1: DynamicDbscan]──┤  snapshots
+//!            │  block │  ├──▶ [worker 2: DynamicDbscan]──┼──▶ [Stitcher] ─▶ Arc<GlobalSnapshot>
+//!            │ →shard)│  └──▶ [worker 3: DynamicDbscan]──┘  (union-find        │
+//!            └────────┘      + ghost replicas               over (shard,   reads: cluster_of /
+//!                              in boundary margin)          local root))   cluster_sizes / stats
+//! ```
+//!
+//! **Routing** ([`router::Router`]): a point's cell is its integer grid
+//! coordinate row under hash function 0; cells are grouped into blocks of
+//! `block_side` cells along the first `routing_dims` axes, and the block is
+//! hashed to a shard. Deterministic in the seed — the same point always
+//! routes identically.
+//!
+//! **Ghost replication**: a grid-LSH collision (any of the `t` hash
+//! functions) implies `‖x−y‖∞ ≤ 2ε`, i.e. the two cells differ by at most
+//! one per axis. Points whose cell lies within `ghost_margin` cells of a
+//! block face are replicated into the neighboring block's shard as *ghost
+//! points*. With the default margin of 2, every bucket containing a primary
+//! point — and every bucket containing a replica that sits within one cell
+//! of the boundary — is complete in that shard, so core flags and
+//! cross-boundary connectivity are exact where it matters (see
+//! `DESIGN.md` §Sharding for the argument).
+//!
+//! **Stitching** ([`stitch::stitch`]): each worker publishes, on demand, its
+//! local `(ext, local cluster root)` assignments; the stitcher runs a
+//! union-find over `(shard, root)` nodes, unioning the nodes of every
+//! replica set (the same external point clustered in several shards), which
+//! glues per-shard components of the same physical cluster into one global
+//! label space.
+//!
+//! **Reads** ([`stitch::GlobalSnapshot`]): `cluster_of`, `cluster_sizes`
+//! and counters are served from the latest published immutable snapshot
+//! behind an `Arc` — readers clone the `Arc` and never block the update
+//! path.
+
+pub mod driver;
+pub mod engine;
+pub mod router;
+pub mod stitch;
+pub mod worker;
+
+pub use engine::{EngineOutcome, EngineStats, ShardedEngine};
+pub use router::{RouteDecision, Router};
+pub use stitch::GlobalSnapshot;
+pub use worker::{ShardOp, ShardSnapshot, WorkerReport};
+
+use crate::dbscan::DbscanConfig;
+
+/// Configuration of the sharded engine. All shards share the DBSCAN
+/// hyper-parameters and the seed, so every worker draws the *same* hash
+/// shifts as the router — the per-shard structures are restrictions of one
+/// global bucket space.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    pub dbscan: DbscanConfig,
+    /// number of shard workers (≥ 1)
+    pub shards: usize,
+    /// cell axes used for block routing; 0 = auto (`min(dim, 2)`), capped
+    /// at 4 to bound the 3^r ghost-neighbor enumeration
+    pub routing_dims: usize,
+    /// block edge length in cells along each routing axis (≥ 1)
+    pub block_side: u32,
+    /// replicate points whose cell is within this many cells of a block
+    /// face; 2 keeps boundary-adjacent buckets complete in both shards
+    pub ghost_margin: u32,
+    /// bounded op-channel capacity per worker, in batches
+    pub queue: usize,
+    pub seed: u64,
+}
+
+impl ShardConfig {
+    pub fn new(dbscan: DbscanConfig, shards: usize, seed: u64) -> Self {
+        ShardConfig {
+            dbscan,
+            shards: shards.max(1),
+            routing_dims: 0,
+            block_side: 8,
+            ghost_margin: 2,
+            queue: 8,
+            seed,
+        }
+    }
+
+    /// Effective number of routing axes.
+    pub fn effective_routing_dims(&self) -> usize {
+        let r = if self.routing_dims == 0 {
+            self.dbscan.dim.min(2)
+        } else {
+            self.routing_dims.min(self.dbscan.dim)
+        };
+        r.clamp(1, 4)
+    }
+}

@@ -1,0 +1,222 @@
+//! Deterministic spatial router: grid cell of hash function 0 → block →
+//! shard, plus ghost-replica targets for boundary cells.
+//!
+//! The cell of a point is its integer grid-coordinate row under the first
+//! grid-LSH hash function — the same quantization every shard's
+//! `DynamicDbscan` applies (identical seed ⇒ identical shifts), so the
+//! router's geometry and the workers' bucket space agree exactly. Cells are
+//! grouped into blocks of `block_side` cells along the first
+//! `routing_dims` axes; the block coordinate row is hashed to a shard id.
+//! Spatially-close points share cells, cells share blocks, blocks pin a
+//! shard: density-connected regions co-locate.
+//!
+//! A collision under *any* of the `t` hash functions implies
+//! `‖x−y‖∞ ≤ 2ε`, which bounds the cell distance by one per axis — so
+//! cross-shard collision edges only involve points within one cell of a
+//! block face. Points within `ghost_margin` cells of a face are replicated
+//! into the neighboring block's shard (diagonal neighbors included via the
+//! offset product), which keeps those edges — and, with margin ≥ 2, the
+//! core status of every replica that carries one — realized inside at
+//! least one shard.
+
+use crate::lsh::GridHasher;
+use crate::util::rng::mix64;
+
+use super::ShardConfig;
+
+/// Where one point lives: its owning shard plus the shards that must hold
+/// a ghost replica.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub primary: usize,
+    /// deduplicated, never contains `primary`
+    pub ghosts: Vec<usize>,
+}
+
+/// Deterministic point → shard router. Cheap (`O(d)` per point) relative
+/// to a structure update; runs on the caller thread ahead of the workers.
+pub struct Router {
+    hasher: GridHasher,
+    shards: usize,
+    routing_dims: usize,
+    block_side: i32,
+    ghost_margin: i32,
+    scratch: Vec<i32>,
+}
+
+impl Router {
+    pub fn new(cfg: &ShardConfig) -> Self {
+        assert!(cfg.block_side >= 1, "block_side must be >= 1");
+        let hasher =
+            GridHasher::new(cfg.dbscan.t, cfg.dbscan.dim, cfg.dbscan.eps, cfg.seed);
+        Router {
+            hasher,
+            shards: cfg.shards.max(1),
+            routing_dims: cfg.effective_routing_dims(),
+            block_side: cfg.block_side as i32,
+            ghost_margin: cfg.ghost_margin as i32,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Grid cell of `x` under hash function 0 (the routing geometry).
+    pub fn cell(&mut self, x: &[f32]) -> Vec<i32> {
+        self.scratch.resize(self.hasher.dim, 0);
+        self.hasher.coords_into(0, x, &mut self.scratch);
+        self.scratch.clone()
+    }
+
+    fn shard_of_blocks(&self, blocks: &[i32]) -> usize {
+        let mut h: u64 = 0x8f3a_55b1_c2d4_e693;
+        for &b in blocks {
+            h = mix64(h ^ (b as u32 as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        }
+        (h % self.shards as u64) as usize
+    }
+
+    /// Route a point: owning shard + ghost shards. Deterministic in
+    /// (seed, config) — identical across runs and across router instances.
+    pub fn route(&mut self, x: &[f32]) -> RouteDecision {
+        assert_eq!(x.len(), self.hasher.dim, "router point dimensionality mismatch");
+        self.scratch.resize(self.hasher.dim, 0);
+        self.hasher.coords_into(0, x, &mut self.scratch);
+        let (b, m, r) = (self.block_side, self.ghost_margin, self.routing_dims);
+        // block coordinates and the ghost offsets each routing axis allows
+        let mut blocks = [0i32; 4];
+        let mut opts = [[0i32; 3]; 4];
+        let mut counts = [1usize; 4];
+        for ax in 0..r {
+            let c = self.scratch[ax];
+            blocks[ax] = c.div_euclid(b);
+            let rem = c.rem_euclid(b);
+            let mut k = 1; // opts[ax][0] = 0 (stay) always present
+            if rem < m {
+                opts[ax][k] = -1;
+                k += 1;
+            }
+            if rem >= b - m {
+                opts[ax][k] = 1;
+                k += 1;
+            }
+            counts[ax] = k;
+        }
+        let primary = self.shard_of_blocks(&blocks[..r]);
+        let mut ghosts: Vec<usize> = Vec::new();
+        if self.shards > 1 {
+            // odometer over the per-axis offset choices, skipping all-zero
+            let mut idx = [0usize; 4];
+            'combos: loop {
+                let mut ax = 0;
+                loop {
+                    if ax == r {
+                        break 'combos;
+                    }
+                    idx[ax] += 1;
+                    if idx[ax] < counts[ax] {
+                        break;
+                    }
+                    idx[ax] = 0;
+                    ax += 1;
+                }
+                let mut nb = [0i32; 4];
+                for ax in 0..r {
+                    nb[ax] = blocks[ax] + opts[ax][idx[ax]];
+                }
+                let s = self.shard_of_blocks(&nb[..r]);
+                if s != primary && !ghosts.contains(&s) {
+                    ghosts.push(s);
+                }
+            }
+        }
+        RouteDecision { primary, ghosts }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbscan::DbscanConfig;
+    use crate::util::rng::Rng;
+
+    fn cfg(shards: usize, block_side: u32, margin: u32) -> ShardConfig {
+        let dbscan = DbscanConfig { k: 5, t: 6, eps: 0.75, dim: 4, ..Default::default() };
+        let mut c = ShardConfig::new(dbscan, shards, 42);
+        c.block_side = block_side;
+        c.ghost_margin = margin;
+        c
+    }
+
+    fn points(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.uniform(-30.0, 30.0) as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn routes_are_deterministic_across_instances() {
+        let c = cfg(4, 8, 2);
+        let mut a = Router::new(&c);
+        let mut b = Router::new(&c);
+        for p in points(500, 4, 9) {
+            assert_eq!(a.route(&p), b.route(&p));
+        }
+    }
+
+    #[test]
+    fn primary_in_range_and_ghosts_exclude_primary() {
+        let c = cfg(4, 4, 2);
+        let mut r = Router::new(&c);
+        let mut saw_ghost = false;
+        for p in points(2000, 4, 3) {
+            let d = r.route(&p);
+            assert!(d.primary < 4);
+            assert!(!d.ghosts.contains(&d.primary));
+            let mut dedup = d.ghosts.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), d.ghosts.len(), "duplicate ghost shard");
+            saw_ghost |= !d.ghosts.is_empty();
+        }
+        assert!(saw_ghost, "small blocks over a wide box must produce ghosts");
+    }
+
+    #[test]
+    fn zero_margin_means_no_ghosts() {
+        let c = cfg(4, 4, 0);
+        let mut r = Router::new(&c);
+        for p in points(300, 4, 5) {
+            assert!(r.route(&p).ghosts.is_empty());
+        }
+    }
+
+    #[test]
+    fn single_shard_routes_everything_to_zero() {
+        let c = cfg(1, 4, 2);
+        let mut r = Router::new(&c);
+        for p in points(100, 4, 7) {
+            let d = r.route(&p);
+            assert_eq!(d.primary, 0);
+            assert!(d.ghosts.is_empty());
+        }
+    }
+
+    #[test]
+    fn close_points_share_a_primary() {
+        // points in the same cell must route identically
+        let c = cfg(8, 8, 2);
+        let mut r = Router::new(&c);
+        let base = vec![3.2f32, -1.1, 0.4, 7.7];
+        let d0 = r.route(&base);
+        let nudged: Vec<f32> = base.iter().map(|v| v + 1e-4).collect();
+        // 1e-4 ≪ cell side 2ε = 1.5: same cell unless astride a boundary
+        let d1 = r.route(&nudged);
+        if r.cell(&base) == r.cell(&nudged) {
+            assert_eq!(d0, d1);
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Cross-shard cluster stitching: per-shard components → global labels.
+//!
+//! Nodes of the stitch graph are `(shard, local cluster root)` pairs; two
+//! nodes are unioned whenever the same external point is clustered in both
+//! shards (a primary and its ghost replicas are the *same physical point*,
+//! so the clusters containing them overlap and belong to one global
+//! cluster). A union-find over the nodes — rebuilt per snapshot, which
+//! sidesteps the un-union problem deletes would otherwise pose — yields the
+//! global partition; primary replicas then carry the labels.
+//!
+//! Soundness: a shard's component is an induced-subgraph component of the
+//! global collision graph, hence a subset of one global cluster — every
+//! union merges subsets of the same global cluster. Completeness rests on
+//! the router's ghost margin: every collision edge, and the core status of
+//! every replica on such an edge, is realized in at least one shard, so
+//! walking a global cluster's edges walks a chain of unions (see
+//! `DESIGN.md` §Sharding).
+
+use std::sync::Arc;
+
+use rustc_hash::FxHashMap;
+
+use crate::baselines::unionfind::UnionFind;
+
+use super::worker::ShardSnapshot;
+
+/// An immutable, globally-consistent view of the sharded clustering.
+/// Published behind an [`Arc`]; readers clone the `Arc` and never touch
+/// the update path.
+#[derive(Clone, Debug)]
+pub struct GlobalSnapshot {
+    pub seq: u64,
+    /// `(ext, global label)` for every live primary point, sorted by ext;
+    /// noise is `-1`, clusters are numbered `0..`
+    pub labels: Vec<(u64, i64)>,
+    /// `(label, size)` sorted by size descending (ties: label ascending);
+    /// noise excluded
+    pub cluster_sizes: Vec<(i64, usize)>,
+    /// number of global clusters (excluding noise)
+    pub clusters: usize,
+    /// live primary points
+    pub live_points: usize,
+    /// live primary core points (exact: a primary's buckets are complete
+    /// in its own shard)
+    pub core_points: usize,
+    /// per-shard live points, ghosts included (index = shard id)
+    pub shard_live: Vec<usize>,
+    label_of: FxHashMap<u64, i64>,
+}
+
+impl GlobalSnapshot {
+    /// Snapshot of an empty engine (published before any ops).
+    pub fn empty() -> Arc<GlobalSnapshot> {
+        Arc::new(GlobalSnapshot {
+            seq: 0,
+            labels: Vec::new(),
+            cluster_sizes: Vec::new(),
+            clusters: 0,
+            live_points: 0,
+            core_points: 0,
+            shard_live: Vec::new(),
+            label_of: FxHashMap::default(),
+        })
+    }
+
+    /// Global cluster of an external id: `None` when the point is not
+    /// live, `Some(-1)` for noise, `Some(l ≥ 0)` for cluster `l`.
+    pub fn cluster_of(&self, ext: u64) -> Option<i64> {
+        self.label_of.get(&ext).copied()
+    }
+}
+
+/// Aggregate per-ext state while scanning shard snapshots.
+struct ExtAgg {
+    primary_seen: bool,
+    core: bool,
+    /// union-find node of the first clustered replica seen
+    node: Option<usize>,
+}
+
+/// Stitch one snapshot round (one `ShardSnapshot` per shard) into a
+/// global label space.
+pub fn stitch(mut snaps: Vec<ShardSnapshot>, seq: u64) -> GlobalSnapshot {
+    snaps.sort_by_key(|s| s.shard);
+    // 1) index the (shard, local root) nodes of all clustered replicas
+    let mut node_ix: FxHashMap<(usize, u64), usize> = FxHashMap::default();
+    for s in &snaps {
+        for p in &s.points {
+            if p.clustered {
+                let next = node_ix.len();
+                node_ix.entry((s.shard, p.root)).or_insert(next);
+            }
+        }
+    }
+    // 2) union the nodes of every replica set
+    let mut uf = UnionFind::new(node_ix.len());
+    let mut by_ext: FxHashMap<u64, ExtAgg> = FxHashMap::default();
+    for s in &snaps {
+        for p in &s.points {
+            let agg = by_ext
+                .entry(p.ext)
+                .or_insert(ExtAgg { primary_seen: false, core: false, node: None });
+            if p.primary {
+                agg.primary_seen = true;
+                if p.core {
+                    agg.core = true;
+                }
+            }
+            if p.clustered {
+                let nd = node_ix[&(s.shard, p.root)];
+                match agg.node {
+                    None => agg.node = Some(nd),
+                    Some(first) => {
+                        uf.union(first, nd);
+                    }
+                }
+            }
+        }
+    }
+    // 3) dense global labels over primary points
+    let mut root_label: FxHashMap<usize, i64> = FxHashMap::default();
+    let mut sizes: FxHashMap<i64, usize> = FxHashMap::default();
+    let mut labels: Vec<(u64, i64)> = Vec::new();
+    let mut core_points = 0usize;
+    for (&ext, agg) in by_ext.iter() {
+        if !agg.primary_seen {
+            // ghost replica whose primary has been deleted mid-stream
+            // cannot occur (deletes fan out to every holder), but stay
+            // defensive: ghosts never carry labels.
+            continue;
+        }
+        if agg.core {
+            core_points += 1;
+        }
+        let label = match agg.node {
+            None => -1,
+            Some(nd) => {
+                let root = uf.find(nd);
+                let next = root_label.len() as i64;
+                *root_label.entry(root).or_insert(next)
+            }
+        };
+        if label >= 0 {
+            *sizes.entry(label).or_insert(0) += 1;
+        }
+        labels.push((ext, label));
+    }
+    labels.sort_unstable_by_key(|&(e, _)| e);
+    let mut cluster_sizes: Vec<(i64, usize)> = sizes.into_iter().collect();
+    cluster_sizes.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let label_of: FxHashMap<u64, i64> = labels.iter().copied().collect();
+    GlobalSnapshot {
+        seq,
+        clusters: root_label.len(),
+        live_points: labels.len(),
+        core_points,
+        shard_live: snaps.iter().map(|s| s.live).collect(),
+        labels,
+        cluster_sizes,
+        label_of,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::worker::SnapPoint;
+
+    fn pt(ext: u64, root: u64, clustered: bool, primary: bool, core: bool) -> SnapPoint {
+        SnapPoint { ext, root, clustered, primary, core }
+    }
+
+    #[test]
+    fn stitches_two_shards_via_shared_ghost() {
+        // shard 0: cluster {1, 2, ghost 3}; shard 1: cluster {3, 4}
+        let s0 = ShardSnapshot {
+            shard: 0,
+            seq: 7,
+            points: vec![
+                pt(1, 100, true, true, true),
+                pt(2, 100, true, true, false),
+                pt(3, 100, true, false, false),
+            ],
+            live: 3,
+        };
+        let s1 = ShardSnapshot {
+            shard: 1,
+            seq: 7,
+            points: vec![pt(3, 200, true, true, true), pt(4, 200, true, true, false)],
+            live: 2,
+        };
+        let g = stitch(vec![s1, s0], 7);
+        assert_eq!(g.seq, 7);
+        assert_eq!(g.live_points, 4); // exts 1,2,3,4 (3's ghost not counted)
+        assert_eq!(g.clusters, 1);
+        let l = g.cluster_of(1).unwrap();
+        assert!(l >= 0);
+        for e in [2u64, 3, 4] {
+            assert_eq!(g.cluster_of(e), Some(l), "ext {e} not stitched");
+        }
+        assert_eq!(g.cluster_sizes, vec![(l, 4)]);
+        assert_eq!(g.core_points, 2);
+        assert_eq!(g.shard_live, vec![3, 2]);
+    }
+
+    #[test]
+    fn unlinked_shards_stay_separate_and_noise_is_minus_one() {
+        let s0 = ShardSnapshot {
+            shard: 0,
+            seq: 1,
+            points: vec![pt(1, 10, true, true, true), pt(5, 11, false, true, false)],
+            live: 2,
+        };
+        let s1 = ShardSnapshot {
+            shard: 1,
+            seq: 1,
+            points: vec![pt(2, 20, true, true, true)],
+            live: 1,
+        };
+        let g = stitch(vec![s0, s1], 1);
+        assert_eq!(g.clusters, 2);
+        assert_ne!(g.cluster_of(1), g.cluster_of(2));
+        assert_eq!(g.cluster_of(5), Some(-1));
+        assert_eq!(g.cluster_of(99), None);
+        assert_eq!(g.live_points, 3);
+    }
+
+    #[test]
+    fn ghost_clustered_where_primary_is_noise_still_labels() {
+        // ext 1 primary-noise in shard 0 but clustered as a ghost in
+        // shard 1 (wrongly-non-core near a boundary): label must come
+        // from the ghost's cluster.
+        let s0 = ShardSnapshot {
+            shard: 0,
+            seq: 2,
+            points: vec![pt(1, 10, false, true, false)],
+            live: 1,
+        };
+        let s1 = ShardSnapshot {
+            shard: 1,
+            seq: 2,
+            points: vec![pt(1, 20, true, false, false), pt(2, 20, true, true, true)],
+            live: 2,
+        };
+        let g = stitch(vec![s0, s1], 2);
+        assert_eq!(g.clusters, 1);
+        assert_eq!(g.cluster_of(1), g.cluster_of(2));
+        assert!(g.cluster_of(1).unwrap() >= 0);
+    }
+}

@@ -1,0 +1,139 @@
+//! Shard worker: one thread owning one private `DynamicDbscan`, draining a
+//! bounded op channel.
+//!
+//! Workers know nothing about routing — they apply the inserts (primary or
+//! ghost) and deletes the engine sends, track per-op latency, and answer
+//! `Snapshot` markers with their current `(ext → local cluster root)`
+//! assignment. Because the marker travels the same channel as the ops,
+//! a snapshot reply reflects exactly the ops sent before it (per-channel
+//! FIFO) — the engine uses this as a barrier.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use rustc_hash::FxHashMap;
+
+use crate::dbscan::{DbscanConfig, DynamicDbscan};
+use crate::lsh::table::PointId;
+use crate::util::stats::LatencyHisto;
+
+/// One operation on a shard's structure.
+#[derive(Clone, Debug)]
+pub enum ShardOp {
+    Insert {
+        ext: u64,
+        coords: Vec<f32>,
+        /// false for ghost replicas of points owned by another shard
+        primary: bool,
+    },
+    Delete {
+        ext: u64,
+    },
+    /// Publish a [`ShardSnapshot`] for all ops received so far.
+    Snapshot {
+        seq: u64,
+    },
+}
+
+/// One point's state inside one shard, as of a snapshot.
+#[derive(Clone, Debug)]
+pub struct SnapPoint {
+    pub ext: u64,
+    /// local cluster root (canonical forest root; meaningful when
+    /// `clustered`)
+    pub root: u64,
+    /// core, or non-core attached to a core — i.e. not noise locally
+    pub clustered: bool,
+    pub primary: bool,
+    pub core: bool,
+}
+
+/// A shard's reply to a `Snapshot` marker.
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    pub shard: usize,
+    pub seq: u64,
+    pub points: Vec<SnapPoint>,
+    /// live points in this shard, ghosts included
+    pub live: usize,
+}
+
+/// Final accounting returned when a worker's channel closes.
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub shard: usize,
+    pub primary_inserts: u64,
+    pub ghost_inserts: u64,
+    pub deletes: u64,
+    pub add_latency: LatencyHisto,
+    pub delete_latency: LatencyHisto,
+    /// wall time spent applying ops (excludes channel waits)
+    pub busy_s: f64,
+}
+
+/// Worker loop: runs until the op channel disconnects. Snapshot sends are
+/// best-effort (a vanished engine just ends the run).
+pub fn run_worker(
+    shard: usize,
+    cfg: DbscanConfig,
+    seed: u64,
+    rx: Receiver<Vec<ShardOp>>,
+    snap_tx: Sender<ShardSnapshot>,
+) -> WorkerReport {
+    let mut db = DynamicDbscan::new(cfg, seed);
+    let mut ext_map: FxHashMap<u64, (PointId, bool)> = FxHashMap::default();
+    let mut report = WorkerReport {
+        shard,
+        primary_inserts: 0,
+        ghost_inserts: 0,
+        deletes: 0,
+        add_latency: LatencyHisto::new(),
+        delete_latency: LatencyHisto::new(),
+        busy_s: 0.0,
+    };
+    for batch in rx.iter() {
+        let t0 = Instant::now();
+        for op in batch {
+            match op {
+                ShardOp::Insert { ext, coords, primary } => {
+                    let o0 = Instant::now();
+                    let pid = db.add_point(&coords);
+                    report.add_latency.record(o0.elapsed().as_nanos() as u64);
+                    if primary {
+                        report.primary_inserts += 1;
+                    } else {
+                        report.ghost_inserts += 1;
+                    }
+                    let prev = ext_map.insert(ext, (pid, primary));
+                    assert!(prev.is_none(), "shard {shard}: duplicate insert of ext {ext}");
+                }
+                ShardOp::Delete { ext } => {
+                    let (pid, _) = ext_map
+                        .remove(&ext)
+                        .unwrap_or_else(|| panic!("shard {shard}: delete of unknown ext {ext}"));
+                    let o0 = Instant::now();
+                    db.delete_point(pid);
+                    report.delete_latency.record(o0.elapsed().as_nanos() as u64);
+                    report.deletes += 1;
+                }
+                ShardOp::Snapshot { seq } => {
+                    let mut points = Vec::with_capacity(ext_map.len());
+                    for (&ext, &(pid, primary)) in ext_map.iter() {
+                        points.push(SnapPoint {
+                            ext,
+                            root: db.get_cluster(pid),
+                            clustered: !db.is_noise(pid),
+                            primary,
+                            core: db.is_core(pid),
+                        });
+                    }
+                    let snap =
+                        ShardSnapshot { shard, seq, points, live: db.num_points() };
+                    let _ = snap_tx.send(snap);
+                }
+            }
+        }
+        report.busy_s += t0.elapsed().as_secs_f64();
+    }
+    report
+}

@@ -1,0 +1,174 @@
+//! Sharded-vs-single equivalence and router determinism.
+//!
+//! The sharded engine must reproduce the single-instance clustering: the
+//! router's ghost margin keeps every cross-boundary collision edge (and
+//! the core status of the replicas carrying it) realized in at least one
+//! shard, and the stitcher's union-find glues the per-shard components
+//! back together. On separable data the two label sets should agree to
+//! ARI ≈ 1; the gate is ≥ 0.95 (border-point attachment is arbitrary in
+//! both paths).
+
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::data::synth::{load, PaperDataset};
+use dyn_dbscan::data::Dataset;
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::shard::{Router, ShardConfig, ShardedEngine};
+use dyn_dbscan::util::rng::Rng;
+
+/// Single-instance labels over a dataset, inserted in index order.
+fn single_instance_labels(ds: &Dataset, cfg: &DbscanConfig, seed: u64) -> Vec<i64> {
+    let mut db = DynamicDbscan::new(cfg.clone(), seed);
+    let ids: Vec<u64> = (0..ds.n()).map(|i| db.add_point(ds.point(i))).collect();
+    db.labels_for(&ids)
+}
+
+/// Sharded labels over the same dataset and seed.
+fn sharded_labels(ds: &Dataset, scfg: ShardConfig) -> (Vec<i64>, u64) {
+    let mut eng = ShardedEngine::new(scfg);
+    for i in 0..ds.n() {
+        eng.insert(i as u64, ds.point(i));
+    }
+    let out = eng.finish();
+    assert_eq!(out.snapshot.live_points, ds.n());
+    let labels = (0..ds.n() as u64)
+        .map(|e| out.snapshot.cluster_of(e).expect("live ext must be labeled"))
+        .collect();
+    (labels, out.stats.ghost_inserts)
+}
+
+#[test]
+fn sharded_matches_single_on_synth_blobs() {
+    // the paper's blobs stand-in (standardized, d = 10), S = 4
+    let ds = load(PaperDataset::Blobs, 0.02, 11);
+    let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: ds.dim, ..Default::default() };
+    let single = single_instance_labels(&ds, &cfg, 5);
+    let (sharded, _) = sharded_labels(&ds, ShardConfig::new(cfg, 4, 5));
+    let ari = adjusted_rand_index(&single, &sharded);
+    assert!(ari >= 0.95, "sharded vs single ARI {ari} < 0.95");
+}
+
+#[test]
+fn sharded_matches_single_under_heavy_stitching() {
+    // tiny blocks force boundaries through every cluster: ghosts and the
+    // stitcher do real work, and the equivalence must still hold
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: 3000,
+            dim: 6,
+            clusters: 8,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        13,
+    );
+    let cfg = DbscanConfig { k: 8, t: 10, eps: 0.75, dim: 6, ..Default::default() };
+    let single = single_instance_labels(&ds, &cfg, 21);
+    let mut scfg = ShardConfig::new(cfg, 4, 21);
+    scfg.block_side = 2;
+    let (sharded, ghosts) = sharded_labels(&ds, scfg);
+    assert!(ghosts > 0, "tiny blocks must produce ghost replicas");
+    let ari = adjusted_rand_index(&single, &sharded);
+    assert!(ari >= 0.95, "heavy-stitch ARI {ari} < 0.95 (ghosts={ghosts})");
+}
+
+#[test]
+fn sharded_matches_single_with_deletes() {
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: 2400,
+            dim: 5,
+            clusters: 6,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        29,
+    );
+    let cfg = DbscanConfig { k: 8, t: 10, eps: 0.75, dim: 5, ..Default::default() };
+    // delete every third point after inserting everything
+    let deleted: Vec<usize> = (0..ds.n()).filter(|i| i % 3 == 0).collect();
+
+    let mut db = DynamicDbscan::new(cfg.clone(), 3);
+    let ids: Vec<u64> = (0..ds.n()).map(|i| db.add_point(ds.point(i))).collect();
+    for &i in &deleted {
+        db.delete_point(ids[i]);
+    }
+    let survivors: Vec<usize> = (0..ds.n()).filter(|i| i % 3 != 0).collect();
+    let single = db.labels_for(&survivors.iter().map(|&i| ids[i]).collect::<Vec<_>>());
+
+    let mut eng = ShardedEngine::new(ShardConfig::new(cfg, 4, 3));
+    for i in 0..ds.n() {
+        eng.insert(i as u64, ds.point(i));
+    }
+    for &i in &deleted {
+        eng.delete(i as u64);
+    }
+    let out = eng.finish();
+    assert_eq!(out.snapshot.live_points, survivors.len());
+    let sharded: Vec<i64> = survivors
+        .iter()
+        .map(|&i| out.snapshot.cluster_of(i as u64).expect("survivor labeled"))
+        .collect();
+    let ari = adjusted_rand_index(&single, &sharded);
+    assert!(ari >= 0.95, "post-delete ARI {ari} < 0.95");
+    for &i in &deleted {
+        assert_eq!(out.snapshot.cluster_of(i as u64), None, "deleted ext {i} labeled");
+    }
+}
+
+#[test]
+fn router_assigns_identical_shards_across_runs() {
+    let dbscan = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: 8, ..Default::default() };
+    let cfg = ShardConfig::new(dbscan, 8, 123);
+    let mut rng = Rng::new(77);
+    let pts: Vec<Vec<f32>> = (0..1000)
+        .map(|_| (0..8).map(|_| rng.uniform(-25.0, 25.0) as f32).collect())
+        .collect();
+    // "two runs" = two independently constructed routers over the same
+    // config; decisions must agree point-for-point, ghosts included
+    let mut run1 = Router::new(&cfg);
+    let mut run2 = Router::new(&cfg);
+    let a: Vec<_> = pts.iter().map(|p| run1.route(p)).collect();
+    let b: Vec<_> = pts.iter().map(|p| run2.route(p)).collect();
+    assert_eq!(a, b, "router decisions differ across runs");
+    // and a different seed moves the geometry (different hash shifts)
+    let mut other_cfg = cfg.clone();
+    other_cfg.seed = 124;
+    let mut run3 = Router::new(&other_cfg);
+    let c: Vec<_> = pts.iter().map(|p| run3.route(p)).collect();
+    assert_ne!(a, c, "routing should depend on the seed");
+}
+
+#[test]
+fn cluster_sizes_are_consistent_with_labels() {
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: 1500,
+            dim: 4,
+            clusters: 5,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        41,
+    );
+    let cfg = DbscanConfig { k: 8, t: 10, eps: 0.75, dim: 4, ..Default::default() };
+    let mut eng = ShardedEngine::new(ShardConfig::new(cfg, 3, 9));
+    for i in 0..ds.n() {
+        eng.insert(i as u64, ds.point(i));
+    }
+    let out = eng.finish();
+    let snap = &out.snapshot;
+    let clustered = snap.labels.iter().filter(|&&(_, l)| l >= 0).count();
+    let sized: usize = snap.cluster_sizes.iter().map(|&(_, s)| s).sum();
+    assert_eq!(clustered, sized);
+    assert_eq!(snap.cluster_sizes.len(), snap.clusters);
+    // sizes sorted descending
+    for w in snap.cluster_sizes.windows(2) {
+        assert!(w[0].1 >= w[1].1);
+    }
+    // dominant clusters should be found on separable blobs
+    assert!(snap.clusters >= 5, "expected >= 5 clusters, got {}", snap.clusters);
+}
