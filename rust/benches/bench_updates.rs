@@ -1,34 +1,43 @@
-//! Ablation A3: per-operation update cost vs n — the empirical check of
-//! Theorem 1's `O(d log³n + log⁴n)` claim, plus the eager-attach extension
-//! and repair-mode overhead.
+//! Update-path benchmarks.
 //!
-//! For each n the structure is pre-filled with n points, then the marginal
-//! cost of 2000 further inserts and 2000 deletes is measured. A polylog
-//! bound predicts near-flat per-op times across decades of n (vs the
-//! linear growth a per-batch static rebuild exhibits).
-//!
-//! Also runs the **shard sweep**: one insert stream through
-//! `ShardedEngine` at S ∈ {1, 2, 4, 8} against the single-instance
-//! baseline, recording wall-clock throughput, speedup and ghost-replication
-//! overhead to `BENCH_shard.json` (the scaling trajectory every later
-//! perf PR appends to).
+//! 1. **Ablation A3**: per-operation update cost vs n — the empirical check
+//!    of Theorem 1's `O(d log³n + log⁴n)` claim, plus the eager-attach
+//!    extension and repair-mode overhead. For each n the structure is
+//!    pre-filled with n points, then the marginal cost of 2000 further
+//!    inserts and 2000 deletes is measured.
+//! 2. **Update throughput** (→ `BENCH_updates.json` at the repo root): the
+//!    standard streaming-blobs churn workload (k=10, t=10, ε=0.75, n=50k,
+//!    20% deletes) through the single-instance per-op path, the batched
+//!    `apply_batch` path, and the sharded engine at S ∈ {1, 2, 4, 8} —
+//!    ops/sec plus p50/p99 add & delete latency. This file is the perf
+//!    trajectory every later PR measures against.
+//! 3. **Shard sweep** (insert-only, → `BENCH_shard.json`): kept from the
+//!    sharding PR for continuity.
 //!
 //! ```bash
-//! cargo bench --bench bench_updates
+//! cargo bench --bench bench_updates            # full run
+//! cargo bench --bench bench_updates -- --smoke # tiny n, validates JSON
 //! ```
 
 use std::time::Instant;
 
-use dyn_dbscan::bench_harness::{write_json, Table};
+use dyn_dbscan::bench_harness::{repo_root_file, write_json, Table};
 use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
 use dyn_dbscan::data::Dataset;
-use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan, PaperConn, RepairConn};
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan, Op, PaperConn, RepairConn};
 use dyn_dbscan::ett::SkipForest;
 use dyn_dbscan::shard::{ShardConfig, ShardedEngine};
 use dyn_dbscan::util::json::Json;
 use dyn_dbscan::util::rng::Rng;
+use dyn_dbscan::util::stats::LatencyHisto;
+use rustc_hash::{FxHashMap, FxHashSet};
 
 const DIM: usize = 10;
+
+/// Pre-arena (PR 1) single-instance per-op throughput on the standard
+/// churn workload (n=50k), recorded in EXPERIMENTS.md §Perf trajectory —
+/// the fixed reference the trajectory's speedup field is computed against.
+const PRE_ARENA_SINGLE_OPS_PER_S: f64 = 31_010.0;
 
 fn gen_point(rng: &mut Rng) -> Vec<f32> {
     let c = rng.below(10) as f64 * 1.2;
@@ -97,6 +106,19 @@ fn probe_mode(n: usize, eager: bool, paper_exact: bool, seed: u64) -> Probe {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        // tiny end-to-end pass: runs the throughput bench and validates the
+        // JSON artifact it writes (the CI gate for the perf trajectory).
+        // Writes to a scratch path so a local smoke run never clobbers the
+        // committed full-scale BENCH_updates.json.
+        let path = std::env::temp_dir().join("BENCH_updates.smoke.json");
+        update_throughput(1_500, &[1, 2], &path);
+        validate_updates_json(&path);
+        println!("smoke OK: {} is valid", path.display());
+        return;
+    }
+
     let mut table = Table::new(
         "A3: per-op update cost vs n (µs/op; polylog ⇒ near-flat)",
         &[
@@ -139,8 +161,352 @@ fn main() {
     table.print();
     dyn_dbscan::bench_harness::export_json(&table.to_json());
 
-    shard_sweep(if quick { 50_000 } else { 200_000 });
+    let n = if quick { 50_000 } else { 200_000 };
+    update_throughput(n, &[1, 2, 4, 8], &repo_root_file("BENCH_updates.json"));
+    shard_sweep(n);
 }
+
+// ---------------------------------------------------------------------
+// update throughput: the standard churn workload → BENCH_updates.json
+// ---------------------------------------------------------------------
+
+/// One op of the churn workload; `ext` is the dataset row.
+#[derive(Clone, Copy, Debug)]
+enum WlOp {
+    Insert(u64),
+    Delete(u64),
+}
+
+/// Streaming-blobs churn: insert every dataset row once, interleaving
+/// deletes of uniformly random live points so that `delete_frac` of all
+/// ops are deletes. Deterministic in the seed.
+fn build_workload(n: usize, delete_frac: f64, seed: u64) -> (Dataset, Vec<WlOp>) {
+    let ds = make_blobs(
+        &BlobsConfig {
+            n,
+            dim: DIM,
+            clusters: 24,
+            std: 0.3,
+            center_box: 60.0,
+            weights: vec![],
+        },
+        seed,
+    );
+    let mut rng = Rng::new(seed ^ 0x51C);
+    let mut ops = Vec::new();
+    let mut live: Vec<u64> = Vec::new();
+    let mut next_row = 0usize;
+    while next_row < n {
+        if !live.is_empty() && rng.coin(delete_frac) {
+            let i = rng.below_usize(live.len());
+            ops.push(WlOp::Delete(live.swap_remove(i)));
+        } else {
+            ops.push(WlOp::Insert(next_row as u64));
+            live.push(next_row as u64);
+            next_row += 1;
+        }
+    }
+    (ds, ops)
+}
+
+struct SingleRun {
+    wall_s: f64,
+    add: LatencyHisto,
+    del: LatencyHisto,
+}
+
+/// Per-op path: one `DynamicDbscan`, one call per op.
+fn run_single(ds: &Dataset, ops: &[WlOp], cfg: &DbscanConfig, seed: u64) -> SingleRun {
+    let mut db = DynamicDbscan::new(cfg.clone(), seed);
+    let mut ext_map: FxHashMap<u64, u64> = FxHashMap::default();
+    let mut add = LatencyHisto::new();
+    let mut del = LatencyHisto::new();
+    let t0 = Instant::now();
+    for op in ops {
+        match *op {
+            WlOp::Insert(ext) => {
+                let o0 = Instant::now();
+                let pid = db.add_point(ds.point(ext as usize));
+                add.record(o0.elapsed().as_nanos() as u64);
+                ext_map.insert(ext, pid);
+            }
+            WlOp::Delete(ext) => {
+                let pid = ext_map.remove(&ext).expect("workload delete of dead ext");
+                let o0 = Instant::now();
+                db.delete_point(pid);
+                del.record(o0.elapsed().as_nanos() as u64);
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    std::hint::black_box(db.num_core_points());
+    SingleRun { wall_s, add, del }
+}
+
+/// Batched path: the same op stream through `apply_batch` in chunks. A
+/// delete of a point added in the still-pending chunk flushes first (its
+/// pid is unknown until the batch applies).
+fn run_single_batched(
+    ds: &Dataset,
+    ops: &[WlOp],
+    cfg: &DbscanConfig,
+    seed: u64,
+    batch: usize,
+) -> f64 {
+    let mut db = DynamicDbscan::new(cfg.clone(), seed);
+    let mut ext_map: FxHashMap<u64, u64> = FxHashMap::default();
+    let mut pending: Vec<Op> = Vec::with_capacity(batch);
+    let mut pending_exts: Vec<u64> = Vec::with_capacity(batch);
+    let mut in_pending: FxHashSet<u64> = FxHashSet::default();
+    let t0 = Instant::now();
+    macro_rules! flush {
+        () => {{
+            let ids = db.apply_batch(&pending);
+            debug_assert_eq!(ids.len(), pending_exts.len());
+            for (&ext, pid) in pending_exts.iter().zip(ids) {
+                ext_map.insert(ext, pid);
+            }
+            pending.clear();
+            pending_exts.clear();
+            in_pending.clear();
+        }};
+    }
+    for op in ops {
+        match *op {
+            WlOp::Insert(ext) => {
+                pending.push(Op::Add(ds.point(ext as usize)));
+                pending_exts.push(ext);
+                in_pending.insert(ext);
+            }
+            WlOp::Delete(ext) => {
+                if in_pending.contains(&ext) {
+                    flush!();
+                }
+                let pid = *ext_map.get(&ext).expect("workload delete of dead ext");
+                ext_map.remove(&ext);
+                pending.push(Op::Delete(pid));
+            }
+        }
+        if pending.len() >= batch {
+            flush!();
+        }
+    }
+    flush!();
+    let wall_s = t0.elapsed().as_secs_f64();
+    std::hint::black_box(db.num_core_points());
+    wall_s
+}
+
+fn histo_json(h: &LatencyHisto) -> Vec<(&'static str, Json)> {
+    vec![
+        ("p50_ns", Json::num(h.quantile(0.5) as f64)),
+        ("p99_ns", Json::num(h.quantile(0.99) as f64)),
+        ("mean_ns", Json::num(h.mean())),
+    ]
+}
+
+/// Run the churn workload on every engine configuration and write the
+/// trajectory record to `out_path` (the repo-root `BENCH_updates.json` in
+/// full runs, a scratch file under `--smoke`).
+fn update_throughput(n: usize, shard_counts: &[usize], out_path: &std::path::Path) {
+    let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: DIM, ..Default::default() };
+    let delete_frac = 0.2;
+    let (ds, ops) = build_workload(n, delete_frac, 7);
+    let total_ops = ops.len();
+    let deletes = ops.iter().filter(|o| matches!(o, WlOp::Delete(_))).count();
+
+    let mut table = Table::new(
+        "update throughput: streaming-blobs churn (20% deletes)",
+        &["engine", "wall s", "ops/s", "add p50/p99 µs", "del p50/p99 µs"],
+    );
+
+    // single-instance, per-op
+    let single = run_single(&ds, &ops, &cfg, 42);
+    let single_ops_s = total_ops as f64 / single.wall_s;
+    table.row(vec![
+        "single".into(),
+        format!("{:.2}", single.wall_s),
+        format!("{single_ops_s:.0}"),
+        format!(
+            "{:.1}/{:.1}",
+            single.add.quantile(0.5) as f64 / 1e3,
+            single.add.quantile(0.99) as f64 / 1e3
+        ),
+        format!(
+            "{:.1}/{:.1}",
+            single.del.quantile(0.5) as f64 / 1e3,
+            single.del.quantile(0.99) as f64 / 1e3
+        ),
+    ]);
+
+    // single-instance, batched ingestion
+    let batch = 512usize;
+    let batched_wall = run_single_batched(&ds, &ops, &cfg, 42, batch);
+    let batched_ops_s = total_ops as f64 / batched_wall;
+    table.row(vec![
+        format!("single (apply_batch {batch})"),
+        format!("{batched_wall:.2}"),
+        format!("{batched_ops_s:.0}"),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    // sharded engine
+    let mut shard_rows: Vec<Json> = Vec::new();
+    for &shards in shard_counts {
+        let scfg = ShardConfig::new(cfg.clone(), shards, 42);
+        let mut eng = ShardedEngine::new(scfg);
+        let t0 = Instant::now();
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                WlOp::Insert(ext) => eng.insert(ext, ds.point(ext as usize)),
+                WlOp::Delete(ext) => eng.delete(ext),
+            }
+            if (i + 1) % 1000 == 0 {
+                eng.flush();
+            }
+        }
+        eng.flush();
+        let snap = eng.publish(); // barrier: every op applied + stitched
+        let wall_s = t0.elapsed().as_secs_f64();
+        let out = eng.finish();
+        let ops_s = total_ops as f64 / wall_s;
+        table.row(vec![
+            format!("sharded S={shards}"),
+            format!("{wall_s:.2}"),
+            format!("{ops_s:.0}"),
+            format!(
+                "{:.1}/{:.1}",
+                out.add_latency.quantile(0.5) as f64 / 1e3,
+                out.add_latency.quantile(0.99) as f64 / 1e3
+            ),
+            format!(
+                "{:.1}/{:.1}",
+                out.delete_latency.quantile(0.5) as f64 / 1e3,
+                out.delete_latency.quantile(0.99) as f64 / 1e3
+            ),
+        ]);
+        let mut fields = vec![
+            ("shards", Json::num(shards as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("ops_per_s", Json::num(ops_s)),
+            ("speedup_vs_single", Json::num(single.wall_s / wall_s)),
+            ("ghost_ratio", Json::num(out.stats.ghost_ratio())),
+            ("clusters", Json::num(snap.clusters as f64)),
+        ];
+        for (k, v) in histo_json(&out.add_latency) {
+            fields.push(match k {
+                "p50_ns" => ("add_p50_ns", v),
+                "p99_ns" => ("add_p99_ns", v),
+                _ => ("add_mean_ns", v),
+            });
+        }
+        for (k, v) in histo_json(&out.delete_latency) {
+            fields.push(match k {
+                "p50_ns" => ("delete_p50_ns", v),
+                "p99_ns" => ("delete_p99_ns", v),
+                _ => ("delete_mean_ns", v),
+            });
+        }
+        shard_rows.push(Json::obj(fields));
+    }
+    table.print();
+
+    let mut single_fields = vec![
+        ("wall_s", Json::num(single.wall_s)),
+        ("ops_per_s", Json::num(single_ops_s)),
+    ];
+    for (k, v) in histo_json(&single.add) {
+        single_fields.push(match k {
+            "p50_ns" => ("add_p50_ns", v),
+            "p99_ns" => ("add_p99_ns", v),
+            _ => ("add_mean_ns", v),
+        });
+    }
+    for (k, v) in histo_json(&single.del) {
+        single_fields.push(match k {
+            "p50_ns" => ("delete_p50_ns", v),
+            "p99_ns" => ("delete_p99_ns", v),
+            _ => ("delete_mean_ns", v),
+        });
+    }
+    let record = Json::obj(vec![
+        ("bench", Json::str("updates_throughput")),
+        (
+            "workload",
+            Json::obj(vec![
+                ("name", Json::str("streaming-blobs-churn")),
+                ("n", Json::num(n as f64)),
+                ("dim", Json::num(DIM as f64)),
+                ("k", Json::num(10.0)),
+                ("t", Json::num(10.0)),
+                ("eps", Json::num(0.75)),
+                ("delete_frac", Json::num(delete_frac)),
+                ("total_ops", Json::num(total_ops as f64)),
+                ("deletes", Json::num(deletes as f64)),
+            ]),
+        ),
+        ("single", Json::obj(single_fields)),
+        (
+            "single_batched",
+            Json::obj(vec![
+                ("batch", Json::num(batch as f64)),
+                ("wall_s", Json::num(batched_wall)),
+                ("ops_per_s", Json::num(batched_ops_s)),
+            ]),
+        ),
+        ("shard_sweep", Json::Arr(shard_rows)),
+        (
+            "baseline",
+            Json::obj(vec![
+                (
+                    "note",
+                    Json::str(
+                        "pre-arena (PR 1) single-instance per-op path on the \
+                         identical workload (EXPERIMENTS.md §Perf trajectory)",
+                    ),
+                ),
+                ("single_ops_per_s", Json::num(PRE_ARENA_SINGLE_OPS_PER_S)),
+                (
+                    "speedup_single_vs_baseline",
+                    Json::num(single_ops_s / PRE_ARENA_SINGLE_OPS_PER_S),
+                ),
+            ]),
+        ),
+    ]);
+    write_json(out_path, &record);
+    dyn_dbscan::bench_harness::export_json(&record);
+    println!("\nwrote {}", out_path.display());
+}
+
+/// Smoke check: the artifact must parse and carry the trajectory fields.
+fn validate_updates_json(path: &std::path::Path) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+    let j = Json::parse(text.trim())
+        .unwrap_or_else(|e| panic!("{} is not valid JSON: {e}", path.display()));
+    let ops_s = j
+        .get("single")
+        .and_then(|s| s.get("ops_per_s"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("missing single.ops_per_s in {}", path.display()));
+    assert!(ops_s > 0.0, "non-positive single-instance throughput");
+    let sweep = j
+        .get("shard_sweep")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("missing shard_sweep in {}", path.display()));
+    assert!(!sweep.is_empty(), "empty shard_sweep");
+    for row in sweep {
+        assert!(
+            row.get("ops_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "sharded row missing throughput"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// insert-only shard sweep (BENCH_shard.json, from the sharding PR)
+// ---------------------------------------------------------------------
 
 /// Insert-stream throughput: single-instance `DynamicDbscan` vs
 /// `ShardedEngine` at S ∈ {1, 2, 4, 8} on the same synthetic stream.
@@ -231,7 +597,8 @@ fn shard_sweep(n: usize) {
         ("single_updates_per_s", Json::num(single_ups)),
         ("sweep", Json::Arr(sweep_rows)),
     ]);
-    write_json("BENCH_shard.json", &record);
+    let path = repo_root_file("BENCH_shard.json");
+    write_json(&path, &record);
     dyn_dbscan::bench_harness::export_json(&record);
-    println!("\nwrote BENCH_shard.json");
+    println!("\nwrote {}", path.display());
 }

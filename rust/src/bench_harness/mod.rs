@@ -202,12 +202,20 @@ pub fn export_json(record: &Json) {
 
 /// Write a JSON record to a named file, replacing any previous contents
 /// (best-effort) — used for standalone machine-readable results like
-/// `BENCH_shard.json`.
-pub fn write_json(path: &str, record: &Json) {
+/// `BENCH_shard.json` / `BENCH_updates.json`.
+pub fn write_json<P: AsRef<std::path::Path>>(path: P, record: &Json) {
     use std::io::Write;
     if let Ok(mut f) = std::fs::File::create(path) {
         let _ = writeln!(f, "{record}");
     }
+}
+
+/// Path of a perf-trajectory artifact at the repository root, regardless of
+/// the invocation cwd (`cargo bench` may run from the workspace root or the
+/// package dir): resolved as the parent of the crate's manifest dir.
+pub fn repo_root_file(name: &str) -> std::path::PathBuf {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join(name)
 }
 
 #[cfg(test)]

@@ -173,6 +173,13 @@ fn cmd_stream(args: &Args) -> Result<()> {
         out.final_labels.len(),
         out.total_apply_s
     );
+    let total_ops = out.add_latency.count() + out.delete_latency.count();
+    if out.total_apply_s > 0.0 {
+        println!(
+            "throughput: {:.0} updates/s over {total_ops} ops (apply stage)",
+            total_ops as f64 / out.total_apply_s
+        );
+    }
     println!("add    latency: {}", out.add_latency.summary());
     println!("delete latency: {}", out.delete_latency.summary());
     Ok(())

@@ -126,7 +126,7 @@ pub fn run_pipeline(
                         StreamOp::Insert { ext, coords } => {
                             let keys = key_it.next().expect("missing keys");
                             let o0 = std::time::Instant::now();
-                            let pid = db.add_point_with_keys(coords, keys);
+                            let pid = db.add_point_with_keys(coords, &keys);
                             add_latency.record(o0.elapsed().as_nanos() as u64);
                             ext_to_pid.insert(*ext, pid);
                         }

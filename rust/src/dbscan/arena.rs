@@ -1,0 +1,474 @@
+//! Flat slab arena for point storage — the allocation-free hot-path
+//! backing store of [`super::DynamicDbscan`].
+//!
+//! Every live point occupies one *slot*; all per-point data lives in
+//! parallel struct-of-arrays vectors indexed by slot:
+//!
+//! ```text
+//!   coords : [ x₀ … x_{d−1} | x₀ … x_{d−1} | … ]   slot × dim, contiguous
+//!   keys   : [ k₀ … k_{t−1} | k₀ … k_{t−1} | … ]   slot × t,   contiguous
+//!   vertex / gen / live / core / attached_to / attached : dense Vecs
+//! ```
+//!
+//! Slots are reused through a free list, so a steady-state workload
+//! (sliding windows, bounded churn) performs **zero heap allocations per
+//! update**: adding a point copies its coordinate and key rows into place,
+//! deleting pushes the slot back on the free list. [`PointId`]s stay unique
+//! forever by encoding `(generation << 32) | slot`: reusing a slot bumps
+//! its generation, so a stale id of a deleted point can never alias a live
+//! one (`get` rejects it, `require` panics).
+//!
+//! The encoding changes the *order* of ids (generation-major rather than
+//! strict insertion order). Algorithm 2 only needs a total order on ids
+//! that is consistent across buckets for its in-bucket core paths — any
+//! injective map into `u64` qualifies — so Theorems 1–2 are unaffected
+//! (machine-checked by [`super::invariants`]; insert-only streams keep the
+//! old `0, 1, 2, …` ids exactly since every generation is 0).
+//!
+//! A core's attached non-core points live in an [`AttachedSet`]: an inline
+//! array of up to [`ATTACH_INLINE`] ids that spills to a heap `FxHashSet`
+//! only past that threshold, and drops the spill allocation again once it
+//! empties.
+
+use rustc_hash::FxHashSet;
+
+use crate::ett::VertexId;
+use crate::lsh::table::PointId;
+use crate::lsh::BucketKey;
+
+/// Attached non-cores stored inline before spilling to a heap set. With the
+/// paper's parameters a non-core attaches to ≤ 1 core and cores adopt only
+/// the orphans of their own buckets, so nearly all sets stay inline.
+pub const ATTACH_INLINE: usize = 6;
+
+const SLOT_BITS: u32 = 32;
+const SLOT_MASK: u64 = (1u64 << SLOT_BITS) - 1;
+
+#[inline]
+fn raw_slot(p: PointId) -> usize {
+    (p & SLOT_MASK) as usize
+}
+
+#[inline]
+fn raw_gen(p: PointId) -> u32 {
+    (p >> SLOT_BITS) as u32
+}
+
+/// Small-set of attached non-core points: inline up to [`ATTACH_INLINE`],
+/// spilled to a `FxHashSet` beyond.
+#[derive(Debug, Default)]
+pub struct AttachedSet {
+    len: u8,
+    inline: [PointId; ATTACH_INLINE],
+    spill: Option<Box<FxHashSet<PointId>>>,
+}
+
+impl AttachedSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match &self.spill {
+            Some(s) => s.len(),
+            None => self.len as usize,
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True once the set has spilled to the heap (introspection for tests).
+    pub fn is_spilled(&self) -> bool {
+        self.spill.is_some()
+    }
+
+    pub fn contains(&self, p: PointId) -> bool {
+        match &self.spill {
+            Some(s) => s.contains(&p),
+            None => self.inline[..self.len as usize].contains(&p),
+        }
+    }
+
+    /// Insert `p` (must not already be present — a non-core attaches to at
+    /// most one core, so duplicates cannot arise in Algorithm 2).
+    pub fn insert(&mut self, p: PointId) {
+        if let Some(s) = &mut self.spill {
+            let fresh = s.insert(p);
+            debug_assert!(fresh, "duplicate attachment of {p}");
+            return;
+        }
+        let n = self.len as usize;
+        debug_assert!(
+            !self.inline[..n].contains(&p),
+            "duplicate attachment of {p}"
+        );
+        if n < ATTACH_INLINE {
+            self.inline[n] = p;
+            self.len += 1;
+        } else {
+            // spill: move the inline elements plus `p` to the heap
+            let mut s = Box::new(FxHashSet::default());
+            s.extend(self.inline.iter().copied());
+            s.insert(p);
+            self.len = 0;
+            self.spill = Some(s);
+        }
+    }
+
+    /// Remove `p`; returns whether it was present. An emptied spill set
+    /// reverts to inline mode, releasing the heap allocation.
+    pub fn remove(&mut self, p: PointId) -> bool {
+        match &mut self.spill {
+            Some(s) => {
+                let had = s.remove(&p);
+                if s.is_empty() {
+                    self.spill = None;
+                }
+                had
+            }
+            None => {
+                let n = self.len as usize;
+                match self.inline[..n].iter().position(|&q| q == p) {
+                    Some(i) => {
+                        self.inline[i] = self.inline[n - 1];
+                        self.len -= 1;
+                        true
+                    }
+                    None => false,
+                }
+            }
+        }
+    }
+
+    /// Move every element into `out`, leaving the set empty and inline.
+    pub fn drain_into(&mut self, out: &mut Vec<PointId>) {
+        match self.spill.take() {
+            Some(s) => out.extend(s.iter().copied()),
+            None => {
+                out.extend(self.inline[..self.len as usize].iter().copied());
+                self.len = 0;
+            }
+        }
+    }
+
+    /// Clear without reporting contents (slot free).
+    pub fn reset(&mut self) {
+        self.len = 0;
+        self.spill = None;
+    }
+}
+
+/// The slab: parallel per-slot arrays plus a free list. See the module
+/// docs for the layout.
+pub struct PointArena {
+    dim: usize,
+    t: usize,
+    coords: Vec<f32>,
+    keys: Vec<BucketKey>,
+    vertex: Vec<VertexId>,
+    gen: Vec<u32>,
+    live: Vec<bool>,
+    core: Vec<bool>,
+    attached_to: Vec<Option<PointId>>,
+    attached: Vec<AttachedSet>,
+    free: Vec<u32>,
+    n_live: usize,
+}
+
+impl PointArena {
+    pub fn new(dim: usize, t: usize) -> Self {
+        assert!(dim > 0 && t > 0);
+        PointArena {
+            dim,
+            t,
+            coords: Vec::new(),
+            keys: Vec::new(),
+            vertex: Vec::new(),
+            gen: Vec::new(),
+            live: Vec::new(),
+            core: Vec::new(),
+            attached_to: Vec::new(),
+            attached: Vec::new(),
+            free: Vec::new(),
+            n_live: 0,
+        }
+    }
+
+    /// Live points.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n_live
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n_live == 0
+    }
+
+    /// Slots ever allocated (live + free-listed).
+    pub fn capacity_slots(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Slots currently on the free list.
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Checked id → slot: `None` for out-of-range, dead, or stale
+    /// (generation-mismatched) ids.
+    #[inline]
+    pub fn get(&self, p: PointId) -> Option<usize> {
+        let slot = raw_slot(p);
+        if slot < self.live.len() && self.live[slot] && self.gen[slot] == raw_gen(p) {
+            Some(slot)
+        } else {
+            None
+        }
+    }
+
+    /// Checked id → slot, panicking on unknown ids (the map-index behavior
+    /// the query API had before the arena).
+    #[inline]
+    pub fn require(&self, p: PointId) -> usize {
+        match self.get(p) {
+            Some(s) => s,
+            None => panic!("unknown point {p}"),
+        }
+    }
+
+    /// Unchecked id → slot for ids read back out of live structures
+    /// (bucket members, attachment lists): a mask in release, validated in
+    /// debug.
+    #[inline]
+    pub fn slot_unchecked(&self, p: PointId) -> usize {
+        debug_assert!(self.get(p).is_some(), "stale point id {p}");
+        raw_slot(p)
+    }
+
+    #[inline]
+    pub fn contains(&self, p: PointId) -> bool {
+        self.get(p).is_some()
+    }
+
+    #[inline]
+    pub fn id_of_slot(&self, slot: usize) -> PointId {
+        debug_assert!(self.live[slot]);
+        ((self.gen[slot] as u64) << SLOT_BITS) | slot as u64
+    }
+
+    /// Allocate a slot for a point, copying its coordinate and key rows in.
+    /// Reuses a free slot when one exists (no allocation); otherwise grows
+    /// every column by one row (amortized).
+    pub fn alloc(&mut self, x: &[f32], keys: &[BucketKey], vertex: VertexId) -> PointId {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert_eq!(keys.len(), self.t);
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let s = s as usize;
+                self.coords[s * self.dim..(s + 1) * self.dim].copy_from_slice(x);
+                self.keys[s * self.t..(s + 1) * self.t].copy_from_slice(keys);
+                s
+            }
+            None => {
+                let s = self.live.len();
+                assert!(s < SLOT_MASK as usize, "arena slot space exhausted");
+                self.coords.extend_from_slice(x);
+                self.keys.extend_from_slice(keys);
+                self.vertex.push(0);
+                self.gen.push(0);
+                self.live.push(false);
+                self.core.push(false);
+                self.attached_to.push(None);
+                self.attached.push(AttachedSet::new());
+                s
+            }
+        };
+        debug_assert!(!self.live[slot]);
+        debug_assert!(self.attached[slot].is_empty());
+        self.live[slot] = true;
+        self.core[slot] = false;
+        self.attached_to[slot] = None;
+        self.vertex[slot] = vertex;
+        self.n_live += 1;
+        self.id_of_slot(slot)
+    }
+
+    /// Release `p`'s slot to the free list, bumping its generation so the
+    /// id can never be resolved again.
+    pub fn free(&mut self, p: PointId) {
+        let slot = self.require(p);
+        debug_assert!(
+            self.attached[slot].is_empty(),
+            "freeing point {p} with live attachments"
+        );
+        self.live[slot] = false;
+        self.core[slot] = false;
+        self.attached_to[slot] = None;
+        self.attached[slot].reset();
+        self.gen[slot] = self.gen[slot].wrapping_add(1);
+        self.free.push(slot as u32);
+        self.n_live -= 1;
+    }
+
+    // -- per-slot accessors (slot from `get`/`require`/`slot_unchecked`) --
+
+    #[inline]
+    pub fn coords_row(&self, slot: usize) -> &[f32] {
+        &self.coords[slot * self.dim..(slot + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn key_row(&self, slot: usize) -> &[BucketKey] {
+        &self.keys[slot * self.t..(slot + 1) * self.t]
+    }
+
+    /// Bucket key of hash function `i` — a 16-byte copy, so callers hold no
+    /// borrow across table/forest mutations (this is what replaced the
+    /// seven `keys.clone()` sites of the pre-arena update path).
+    #[inline]
+    pub fn key(&self, slot: usize, i: usize) -> BucketKey {
+        self.keys[slot * self.t + i]
+    }
+
+    #[inline]
+    pub fn vertex(&self, slot: usize) -> VertexId {
+        self.vertex[slot]
+    }
+
+    #[inline]
+    pub fn is_core(&self, slot: usize) -> bool {
+        self.core[slot]
+    }
+
+    #[inline]
+    pub fn set_core(&mut self, slot: usize, c: bool) {
+        self.core[slot] = c;
+    }
+
+    #[inline]
+    pub fn attached_to(&self, slot: usize) -> Option<PointId> {
+        self.attached_to[slot]
+    }
+
+    #[inline]
+    pub fn set_attached_to(&mut self, slot: usize, v: Option<PointId>) {
+        self.attached_to[slot] = v;
+    }
+
+    #[inline]
+    pub fn take_attached_to(&mut self, slot: usize) -> Option<PointId> {
+        self.attached_to[slot].take()
+    }
+
+    #[inline]
+    pub fn attached(&self, slot: usize) -> &AttachedSet {
+        &self.attached[slot]
+    }
+
+    #[inline]
+    pub fn attached_mut(&mut self, slot: usize) -> &mut AttachedSet {
+        &mut self.attached[slot]
+    }
+
+    /// Live ids, unordered (slot order).
+    pub fn ids(&self) -> impl Iterator<Item = PointId> + '_ {
+        self.live
+            .iter()
+            .enumerate()
+            .filter(|&(_, &l)| l)
+            .map(|(s, _)| ((self.gen[s] as u64) << SLOT_BITS) | s as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_reuses_slots_with_fresh_ids() {
+        let mut a = PointArena::new(2, 3);
+        let p0 = a.alloc(&[0.0, 1.0], &[1, 2, 3], 10);
+        let p1 = a.alloc(&[2.0, 3.0], &[4, 5, 6], 11);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.capacity_slots(), 2);
+        assert_eq!(a.coords_row(a.require(p0)), &[0.0, 1.0]);
+        assert_eq!(a.key_row(a.require(p1)), &[4, 5, 6]);
+        a.free(p0);
+        assert_eq!(a.len(), 1);
+        assert!(!a.contains(p0));
+        let p2 = a.alloc(&[7.0, 8.0], &[7, 8, 9], 12);
+        // slot reused, id fresh
+        assert_eq!(a.capacity_slots(), 2);
+        assert_ne!(p2, p0);
+        assert_eq!(a.require(p2), 0, "freed slot 0 must be reused");
+        assert!(!a.contains(p0), "stale id must not resolve after reuse");
+        assert_eq!(a.coords_row(a.require(p2)), &[7.0, 8.0]);
+        assert_eq!(a.vertex(a.require(p2)), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown point")]
+    fn require_rejects_stale_id() {
+        let mut a = PointArena::new(1, 1);
+        let p = a.alloc(&[0.0], &[0], 0);
+        a.free(p);
+        a.require(p);
+    }
+
+    #[test]
+    fn ids_enumerates_live_points() {
+        let mut a = PointArena::new(1, 1);
+        let p0 = a.alloc(&[0.0], &[0], 0);
+        let p1 = a.alloc(&[1.0], &[1], 1);
+        let p2 = a.alloc(&[2.0], &[2], 2);
+        a.free(p1);
+        let mut ids: Vec<PointId> = a.ids().collect();
+        ids.sort_unstable();
+        let mut want = vec![p0, p2];
+        want.sort_unstable();
+        assert_eq!(ids, want);
+    }
+
+    #[test]
+    fn attached_set_inline_then_spill_then_shrink() {
+        let mut s = AttachedSet::new();
+        assert!(s.is_empty() && !s.is_spilled());
+        for p in 0..ATTACH_INLINE as u64 {
+            s.insert(p);
+        }
+        assert_eq!(s.len(), ATTACH_INLINE);
+        assert!(!s.is_spilled(), "must stay inline up to the threshold");
+        s.insert(99);
+        assert!(s.is_spilled(), "crossing the threshold spills");
+        assert_eq!(s.len(), ATTACH_INLINE + 1);
+        for p in 0..ATTACH_INLINE as u64 {
+            assert!(s.contains(p));
+            assert!(s.remove(p));
+        }
+        assert!(s.contains(99));
+        assert!(s.remove(99));
+        assert!(!s.is_spilled(), "emptied spill reverts to inline");
+        assert!(s.is_empty());
+        // usable again inline
+        s.insert(7);
+        assert!(s.contains(7) && !s.is_spilled());
+    }
+
+    #[test]
+    fn attached_set_drain() {
+        let mut s = AttachedSet::new();
+        for p in [3u64, 1, 4, 11, 5] {
+            s.insert(p);
+        }
+        let mut out = Vec::new();
+        s.drain_into(&mut out);
+        out.sort_unstable();
+        assert_eq!(out, vec![1, 3, 4, 5, 11]);
+        assert!(s.is_empty());
+    }
+}

@@ -72,6 +72,8 @@ pub trait Connectivity {
     fn has_tree_edge(&self, u: VertexId, v: VertexId) -> bool;
     /// Is {u,v} desired at all (tree or non-tree)?
     fn is_desired(&self, u: VertexId, v: VertexId) -> bool;
+    /// Vertices currently live in the forest (leak checks).
+    fn live_vertices(&self) -> usize;
     /// Replacement-search counters (0 for the paper-exact mode).
     fn repair_stats(&self) -> RepairStats;
 }
@@ -150,6 +152,10 @@ impl<F: Forest> Connectivity for PaperConn<F> {
 
     fn is_desired(&self, u: VertexId, v: VertexId) -> bool {
         self.forest.has_edge(u, v)
+    }
+
+    fn live_vertices(&self) -> usize {
+        self.forest.num_vertices()
     }
 
     fn repair_stats(&self) -> RepairStats {
@@ -347,6 +353,10 @@ impl<F: Forest> Connectivity for RepairConn<F> {
 
     fn is_desired(&self, u: VertexId, v: VertexId) -> bool {
         self.mult.contains_key(&ekey(u, v))
+    }
+
+    fn live_vertices(&self) -> usize {
+        self.forest.num_vertices()
     }
 
     fn repair_stats(&self) -> RepairStats {

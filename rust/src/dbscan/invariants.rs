@@ -83,7 +83,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
                     Some(h) => {
                         let (h_core, _, h_att, hv) = self.point_state(h);
                         if !h_core
-                            || !h_att.contains(&p)
+                            || !h_att.contains(p)
                             || !self.conn().has_tree_edge(vertex, hv)
                             || deg != 1
                         {

@@ -4,22 +4,37 @@
 //! (Definition 4: `x` is core iff some bucket containing it has ≥ `k`
 //! members). A spanning forest of the collision graph `H` is maintained in
 //! an Euler-tour dynamic forest: within every bucket the core points form a
-//! path in index order (unless an edge would close a cycle), bounding every
+//! path in id order (unless an edge would close a cycle), bounding every
 //! core's degree by `2t`; each non-core point attaches to at most one core
 //! it collides with. `AddPoint`/`DeletePoint` run in
 //! `O(t²k(d + log n))` = `O(d log³n + log⁴n)` for `t,k = O(log n)`
 //! (Theorem 1) and preserve the spanning-forest invariant (Theorem 2 —
 //! machine-checked by [`invariants`]).
+//!
+//! ## Memory layout
+//!
+//! Point storage is a flat slab arena ([`arena::PointArena`]): coordinates
+//! and bucket keys live in two contiguous struct-of-arrays vectors
+//! (`slot × dim` / `slot × t`), per-point metadata in parallel dense
+//! vectors, and deleted slots are recycled through a free list. The update
+//! hot loop is allocation-free in steady state: keys are hashed into a
+//! reused scratch row, promotion/demotion work lists are reused scratch
+//! vectors, and a core's attached set stays inline below
+//! [`arena::ATTACH_INLINE`]. Batched ingestion ([`DynamicDbscan::add_points`]
+//! / [`DynamicDbscan::apply_batch`]) additionally hashes a whole batch in
+//! one cache-friendly pass per hash function.
 
+pub mod arena;
 pub mod connectivity;
 pub mod invariants;
 
-use rustc_hash::{FxHashMap, FxHashSet};
+use rustc_hash::FxHashMap;
 
 use crate::ett::{SkipForest, TreapForest, VertexId};
 use crate::lsh::table::{LshTable, PointId};
 use crate::lsh::{BucketKey, GridHasher};
 
+pub use arena::{AttachedSet, PointArena, ATTACH_INLINE};
 pub use connectivity::{Connectivity, PaperConn, RepairConn, RepairStats};
 
 /// Default connectivity: repaired spanning forest over skip-list ETT.
@@ -51,21 +66,10 @@ impl Default for DbscanConfig {
     }
 }
 
-struct PointState {
-    x: Vec<f32>,
-    /// bucket key per hash function (length t)
-    keys: Vec<BucketKey>,
-    vertex: VertexId,
-    is_core: bool,
-    /// non-core: the core point this point is attached to (≤ 1)
-    attached_to: Option<PointId>,
-    /// core: non-core points attached to this point
-    attached: FxHashSet<PointId>,
-}
-
 /// Operation counters (exposed for the perf harness and the polylog
-/// update-cost ablation A3).
-#[derive(Clone, Debug, Default)]
+/// update-cost ablation A3). `PartialEq` so the batched and single-op
+/// ingestion paths can be asserted identical.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct OpStats {
     pub adds: u64,
     pub deletes: u64,
@@ -73,6 +77,15 @@ pub struct OpStats {
     pub demotions: u64,
     pub forest_links: u64,
     pub forest_cuts: u64,
+}
+
+/// One update in a batch fed to [`DynamicDbscan::apply_batch`]. `Add`
+/// borrows its coordinates — the batch path never copies them into
+/// per-op allocations.
+#[derive(Clone, Copy, Debug)]
+pub enum Op<'a> {
+    Add(&'a [f32]),
+    Delete(PointId),
 }
 
 /// The dynamic clustering structure. Generic over the connectivity layer
@@ -83,11 +96,19 @@ pub struct DynamicDbscan<C: Connectivity = DefaultConn> {
     pub hasher: GridHasher,
     tables: Vec<LshTable>,
     conn: C,
-    points: FxHashMap<PointId, PointState>,
-    next_idx: PointId,
+    arena: PointArena,
     n_core: usize,
     pub stats: OpStats,
+    /// reused grid-coordinate row for hashing
     scratch: Vec<i32>,
+    /// reused bucket-key rows (1 row for single adds, n for batches)
+    scratch_keys: Vec<BucketKey>,
+    /// reused flat coordinate buffer for `apply_batch`
+    scratch_coords: Vec<f32>,
+    /// reused promotion/demotion work list
+    scratch_ids: Vec<PointId>,
+    /// reused orphan re-attachment work list
+    scratch_orphans: Vec<PointId>,
 }
 
 impl DynamicDbscan<DefaultConn> {
@@ -108,16 +129,20 @@ impl<C: Connectivity> DynamicDbscan<C> {
     pub fn with_conn(cfg: DbscanConfig, seed: u64, conn: C) -> Self {
         let hasher = GridHasher::new(cfg.t, cfg.dim, cfg.eps, seed);
         let tables = (0..cfg.t).map(|_| LshTable::new()).collect();
+        let arena = PointArena::new(cfg.dim, cfg.t);
         DynamicDbscan {
             cfg,
             hasher,
             tables,
             conn,
-            points: FxHashMap::default(),
-            next_idx: 0,
+            arena,
             n_core: 0,
             stats: OpStats::default(),
             scratch: Vec::new(),
+            scratch_keys: Vec::new(),
+            scratch_coords: Vec::new(),
+            scratch_ids: Vec::new(),
+            scratch_orphans: Vec::new(),
         }
     }
 
@@ -132,7 +157,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
     // ------------------------------------------------------------------
 
     pub fn num_points(&self) -> usize {
-        self.points.len()
+        self.arena.len()
     }
 
     pub fn num_core_points(&self) -> usize {
@@ -140,28 +165,28 @@ impl<C: Connectivity> DynamicDbscan<C> {
     }
 
     pub fn is_core(&self, p: PointId) -> bool {
-        self.points.get(&p).map(|s| s.is_core).unwrap_or(false)
+        self.arena.get(p).map(|s| self.arena.is_core(s)).unwrap_or(false)
     }
 
     pub fn contains(&self, p: PointId) -> bool {
-        self.points.contains_key(&p)
+        self.arena.contains(p)
     }
 
     pub fn point_coords(&self, p: PointId) -> Option<&[f32]> {
-        self.points.get(&p).map(|s| s.x.as_slice())
+        self.arena.get(p).map(|s| self.arena.coords_row(s))
     }
 
     /// `GetCluster(x)`: canonical cluster identifier — O(log n). Stable
     /// between updates; noise points (unattached non-cores) are singleton
     /// clusters.
     pub fn get_cluster(&self, p: PointId) -> u64 {
-        let st = &self.points[&p];
-        self.conn.root(st.vertex)
+        let s = self.arena.require(p);
+        self.conn.root(self.arena.vertex(s))
     }
 
     /// Live point ids (unordered).
     pub fn point_ids(&self) -> impl Iterator<Item = PointId> + '_ {
-        self.points.keys().copied()
+        self.arena.ids()
     }
 
     /// True when `p` is currently live noise: non-core and unattached —
@@ -169,10 +194,27 @@ impl<C: Connectivity> DynamicDbscan<C> {
     /// ids, like [`Self::is_core`]). Used by the sharded engine's
     /// stitcher to decide which replicas carry cluster identity.
     pub fn is_noise(&self, p: PointId) -> bool {
-        self.points
-            .get(&p)
-            .map(|st| !st.is_core && st.attached_to.is_none())
+        self.arena
+            .get(p)
+            .map(|s| !self.arena.is_core(s) && self.arena.attached_to(s).is_none())
             .unwrap_or(false)
+    }
+
+    /// Live points (= arena slots in use).
+    pub fn live_slots(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Arena slots ever allocated (live + free-listed for reuse); stable
+    /// under churn once the high-water mark is reached.
+    pub fn capacity_slots(&self) -> usize {
+        self.arena.capacity_slots()
+    }
+
+    /// Vertices currently live in the connectivity forest (one per live
+    /// point; 0 after a full drain — the leak check the churn tests use).
+    pub fn live_vertices(&self) -> usize {
+        self.conn.live_vertices()
     }
 
     /// Dense labels for a set of points: clusters numbered 0.., noise
@@ -182,12 +224,12 @@ impl<C: Connectivity> DynamicDbscan<C> {
         let mut roots: FxHashMap<u64, i64> = FxHashMap::default();
         let mut out = Vec::with_capacity(ids.len());
         for &p in ids {
-            let st = &self.points[&p];
-            if !st.is_core && st.attached_to.is_none() {
+            let s = self.arena.require(p);
+            if !self.arena.is_core(s) && self.arena.attached_to(s).is_none() {
                 out.push(-1);
                 continue;
             }
-            let r = self.conn.root(st.vertex);
+            let r = self.conn.root(self.arena.vertex(s));
             let next = roots.len() as i64;
             out.push(*roots.entry(r).or_insert(next));
         }
@@ -198,55 +240,111 @@ impl<C: Connectivity> DynamicDbscan<C> {
     // AddPoint
     // ------------------------------------------------------------------
 
-    /// `AddPoint(x)` with natively computed hash keys.
+    /// `AddPoint(x)` with natively computed hash keys. Allocation-free in
+    /// steady state: keys land in a reused scratch row, the point in a
+    /// recycled arena slot.
     pub fn add_point(&mut self, x: &[f32]) -> PointId {
-        let keys = {
-            let mut scratch = std::mem::take(&mut self.scratch);
-            let keys = self.hasher.keys(x, &mut scratch);
-            self.scratch = scratch;
-            keys
-        };
-        self.add_point_with_keys(x, keys)
+        let mut kbuf = std::mem::take(&mut self.scratch_keys);
+        kbuf.clear();
+        kbuf.resize(self.cfg.t, 0);
+        let mut sbuf = std::mem::take(&mut self.scratch);
+        self.hasher.keys_into(x, &mut sbuf, &mut kbuf);
+        self.scratch = sbuf;
+        let idx = self.add_point_with_keys(x, &kbuf);
+        self.scratch_keys = kbuf;
+        idx
+    }
+
+    /// Batched `AddPoint`: `xs` is row-major `n × dim`. Hashes the whole
+    /// batch in one pass per hash function (the η shift and multiplier
+    /// stay in registers across the batch) before applying the inserts in
+    /// order. Returns the new ids, in input order.
+    pub fn add_points(&mut self, xs: &[f32], n: usize) -> Vec<PointId> {
+        let (d, t) = (self.cfg.dim, self.cfg.t);
+        assert_eq!(xs.len(), n * d, "flat coords length must be n × dim");
+        let mut kbuf = std::mem::take(&mut self.scratch_keys);
+        kbuf.clear();
+        kbuf.resize(n * t, 0);
+        let mut sbuf = std::mem::take(&mut self.scratch);
+        self.hasher.keys_batch_into(xs, n, &mut sbuf, &mut kbuf);
+        self.scratch = sbuf;
+        let mut ids = Vec::with_capacity(n);
+        for j in 0..n {
+            ids.push(
+                self.add_point_with_keys(&xs[j * d..(j + 1) * d], &kbuf[j * t..(j + 1) * t]),
+            );
+        }
+        self.scratch_keys = kbuf;
+        ids
+    }
+
+    /// Apply a mixed add/delete batch. Adds are batch-hashed up front
+    /// (hashing is pure in the coordinates, so interleaved deletes cannot
+    /// change their keys); ops then apply in order. Returns the ids of the
+    /// added points, in op order — semantically identical to issuing the
+    /// same `add_point`/`delete_point` calls one by one.
+    pub fn apply_batch(&mut self, ops: &[Op]) -> Vec<PointId> {
+        let (d, t) = (self.cfg.dim, self.cfg.t);
+        let mut flat = std::mem::take(&mut self.scratch_coords);
+        flat.clear();
+        let mut n_adds = 0usize;
+        for op in ops {
+            if let Op::Add(x) = *op {
+                assert_eq!(x.len(), d, "point dimensionality mismatch in batch");
+                flat.extend_from_slice(x);
+                n_adds += 1;
+            }
+        }
+        let mut kbuf = std::mem::take(&mut self.scratch_keys);
+        kbuf.clear();
+        kbuf.resize(n_adds * t, 0);
+        let mut sbuf = std::mem::take(&mut self.scratch);
+        self.hasher.keys_batch_into(&flat, n_adds, &mut sbuf, &mut kbuf);
+        self.scratch = sbuf;
+        let mut ids = Vec::with_capacity(n_adds);
+        let mut j = 0usize;
+        for op in ops {
+            match *op {
+                Op::Add(x) => {
+                    ids.push(self.add_point_with_keys(x, &kbuf[j * t..(j + 1) * t]));
+                    j += 1;
+                }
+                Op::Delete(p) => self.delete_point(p),
+            }
+        }
+        self.scratch_keys = kbuf;
+        self.scratch_coords = flat;
+        ids
     }
 
     /// `AddPoint(x)` with precomputed bucket keys (the XLA-artifact hashing
-    /// path; keys must come from the same η/ε as `self.hasher`).
-    pub fn add_point_with_keys(&mut self, x: &[f32], keys: Vec<BucketKey>) -> PointId {
+    /// path and the shard workers' batch path; keys must come from the same
+    /// η/ε as `self.hasher`).
+    pub fn add_point_with_keys(&mut self, x: &[f32], keys: &[BucketKey]) -> PointId {
         assert_eq!(x.len(), self.cfg.dim, "point dimensionality mismatch");
         assert_eq!(keys.len(), self.cfg.t);
         self.stats.adds += 1;
-        let idx = self.next_idx;
-        self.next_idx += 1;
         let vertex = self.conn.add_vertex();
+        let idx = self.arena.alloc(x, keys, vertex);
         // bucket insertion + new-core detection (Algorithm 2 lines 6-11)
-        let mut newly_core: Vec<PointId> = Vec::new();
+        let mut newly_core = std::mem::take(&mut self.scratch_ids);
+        newly_core.clear();
         let mut self_core = false;
-        for i in 0..self.cfg.t {
-            let size = self.tables[i].insert(keys[i], idx);
+        for (i, &key) in keys.iter().enumerate() {
+            let size = self.tables[i].insert(key, idx);
             if size > self.cfg.k {
                 self_core = true;
             } else if size == self.cfg.k {
                 // the whole bucket crosses the threshold
                 self_core = true;
-                let b = self.tables[i].bucket(keys[i]);
+                let b = self.tables[i].bucket(key);
                 for &y in &b.members {
-                    if y != idx && !self.points[&y].is_core {
+                    if y != idx && !self.arena.is_core(self.arena.slot_unchecked(y)) {
                         newly_core.push(y);
                     }
                 }
             }
         }
-        self.points.insert(
-            idx,
-            PointState {
-                x: x.to_vec(),
-                keys,
-                vertex,
-                is_core: false,
-                attached_to: None,
-                attached: FxHashSet::default(),
-            },
-        );
         if self_core {
             newly_core.push(idx);
         }
@@ -256,6 +354,8 @@ impl<C: Connectivity> DynamicDbscan<C> {
         for &c in &newly_core {
             self.promote(c);
         }
+        newly_core.clear();
+        self.scratch_ids = newly_core;
         if !self_core {
             // line 15-16
             self.link_non_core(idx);
@@ -268,31 +368,36 @@ impl<C: Connectivity> DynamicDbscan<C> {
     /// Mark `c` core in all its buckets, then splice it into each bucket's
     /// core path (`LinkCorePoint`, lines 28-35).
     fn promote(&mut self, c: PointId) {
-        debug_assert!(!self.points[&c].is_core);
+        let cs = self.arena.slot_unchecked(c);
+        debug_assert!(!self.arena.is_core(cs));
         self.stats.promotions += 1;
         self.n_core += 1;
-        let keys = self.points[&c].keys.clone();
-        for (i, &key) in keys.iter().enumerate() {
+        for i in 0..self.cfg.t {
+            let key = self.arena.key(cs, i);
             self.tables[i].mark_core(key, c);
         }
-        self.points.get_mut(&c).unwrap().is_core = true;
+        self.arena.set_core(cs, true);
         // line 29: cut any edge incident to c (it was non-core: ≤ 1 edge)
-        if let Some(h) = self.points.get_mut(&c).unwrap().attached_to.take() {
-            let (vc, vh) = (self.points[&c].vertex, self.points[&h].vertex);
+        if let Some(h) = self.arena.take_attached_to(cs) {
+            let hs = self.arena.slot_unchecked(h);
+            let (vc, vh) = (self.arena.vertex(cs), self.arena.vertex(hs));
             self.conn.undesire(vc, vh);
             self.stats.forest_cuts += 1;
-            self.points.get_mut(&h).unwrap().attached.remove(&c);
+            let removed = self.arena.attached_mut(hs).remove(c);
+            debug_assert!(removed);
         }
-        // lines 30-35: splice into the idx-ordered core path of each bucket
-        let vc = self.points[&c].vertex;
-        for (i, &key) in keys.iter().enumerate() {
-            let b = self.tables[i].bucket(key);
-            let c1 = b.core_pred(c);
-            let c2 = b.core_succ(c);
+        // lines 30-35: splice into the id-ordered core path of each bucket
+        let vc = self.arena.vertex(cs);
+        for i in 0..self.cfg.t {
+            let key = self.arena.key(cs, i);
+            let (c1, c2) = {
+                let b = self.tables[i].bucket(key);
+                (b.core_pred(c), b.core_succ(c))
+            };
             // Desire the new path edges before retracting (c1,c2) so the
             // retraction's replacement is found in O(1) via the hint.
-            let v1 = c1.map(|c| self.points[&c].vertex);
-            let v2 = c2.map(|c| self.points[&c].vertex);
+            let v1 = c1.map(|p| self.arena.vertex(self.arena.slot_unchecked(p)));
+            let v2 = c2.map(|p| self.arena.vertex(self.arena.slot_unchecked(p)));
             if let Some(v1) = v1 {
                 self.conn.desire(v1, vc);
                 self.stats.forest_links += 1;
@@ -310,11 +415,12 @@ impl<C: Connectivity> DynamicDbscan<C> {
 
     /// `LinkNonCorePoint` (lines 44-45): attach to one colliding core.
     fn link_non_core(&mut self, p: PointId) {
-        debug_assert!(!self.points[&p].is_core);
-        debug_assert!(self.points[&p].attached_to.is_none());
-        let keys = &self.points[&p].keys;
+        let ps = self.arena.slot_unchecked(p);
+        debug_assert!(!self.arena.is_core(ps));
+        debug_assert!(self.arena.attached_to(ps).is_none());
         let mut target = None;
-        for (i, &key) in keys.iter().enumerate() {
+        for i in 0..self.cfg.t {
+            let key = self.arena.key(ps, i);
             if let Some(b) = self.tables[i].get(key) {
                 if let Some(c) = b.any_core_not(p) {
                     target = Some(c);
@@ -323,25 +429,29 @@ impl<C: Connectivity> DynamicDbscan<C> {
             }
         }
         if let Some(c) = target {
-            let (vp, vc) = (self.points[&p].vertex, self.points[&c].vertex);
+            let cs = self.arena.slot_unchecked(c);
+            let (vp, vc) = (self.arena.vertex(ps), self.arena.vertex(cs));
             self.conn.desire(vp, vc);
             self.stats.forest_links += 1;
-            self.points.get_mut(&p).unwrap().attached_to = Some(c);
-            self.points.get_mut(&c).unwrap().attached.insert(p);
+            self.arena.set_attached_to(ps, Some(c));
+            self.arena.attached_mut(cs).insert(p);
         }
     }
 
     /// Extension: adopt unattached non-core points in the buckets of the
     /// fresh core `c`.
     fn eager_attach(&mut self, c: PointId) {
-        let keys = self.points[&c].keys.clone();
-        let mut orphans: Vec<PointId> = Vec::new();
-        for (i, &key) in keys.iter().enumerate() {
+        let cs = self.arena.slot_unchecked(c);
+        let mut orphans = std::mem::take(&mut self.scratch_orphans);
+        orphans.clear();
+        for i in 0..self.cfg.t {
+            let key = self.arena.key(cs, i);
             if let Some(b) = self.tables[i].get(key) {
                 for &y in &b.members {
                     if y != c {
-                        let st = &self.points[&y];
-                        if !st.is_core && st.attached_to.is_none() {
+                        let ys = self.arena.slot_unchecked(y);
+                        if !self.arena.is_core(ys) && self.arena.attached_to(ys).is_none()
+                        {
                             orphans.push(y);
                         }
                     }
@@ -350,9 +460,11 @@ impl<C: Connectivity> DynamicDbscan<C> {
         }
         orphans.sort_unstable();
         orphans.dedup();
-        for y in orphans {
+        for &y in &orphans {
             self.link_non_core(y);
         }
+        orphans.clear();
+        self.scratch_orphans = orphans;
     }
 
     // ------------------------------------------------------------------
@@ -361,21 +473,23 @@ impl<C: Connectivity> DynamicDbscan<C> {
 
     /// `DeletePoint(x)` (lines 17-27).
     pub fn delete_point(&mut self, p: PointId) {
-        assert!(self.points.contains_key(&p), "delete of unknown point {p}");
+        assert!(self.arena.contains(p), "delete of unknown point {p}");
         self.stats.deletes += 1;
-        let is_core = self.points[&p].is_core;
+        let ps = self.arena.slot_unchecked(p);
+        let is_core = self.arena.is_core(ps);
         if is_core {
             // line 19-22: cores demoted by this removal — y loses core-ness
             // iff after removing x from every bucket, none of y's buckets
             // has ≥ k members.
-            let keys = self.points[&p].keys.clone();
-            let mut demoted: Vec<PointId> = Vec::new();
-            for (i, &key) in keys.iter().enumerate() {
+            let mut demoted = std::mem::take(&mut self.scratch_ids);
+            demoted.clear();
+            for i in 0..self.cfg.t {
+                let key = self.arena.key(ps, i);
                 let b = self.tables[i].bucket(key);
                 if b.len() == self.cfg.k {
                     for &y in &b.members {
                         if y != p
-                            && self.points[&y].is_core
+                            && self.arena.is_core(self.arena.slot_unchecked(y))
                             && !self.still_core_without(y, p)
                         {
                             demoted.push(y);
@@ -391,46 +505,52 @@ impl<C: Connectivity> DynamicDbscan<C> {
             self.demote_marks(p);
             self.reattach_orphans_of(p);
             // drop x from all buckets before processing the demotions
-            let keys_p = self.points[&p].keys.clone();
-            for (i, &key) in keys_p.iter().enumerate() {
+            for i in 0..self.cfg.t {
+                let key = self.arena.key(ps, i);
                 self.tables[i].remove(key, p);
             }
             // lines 23-26
-            for c in demoted {
+            for &c in &demoted {
                 self.unlink_core(c);
                 self.demote_marks(c);
                 self.reattach_orphans_of(c);
                 self.link_non_core(c);
             }
+            demoted.clear();
+            self.scratch_ids = demoted;
         } else {
-            if let Some(h) = self.points.get_mut(&p).unwrap().attached_to.take() {
-                let (vp, vh) = (self.points[&p].vertex, self.points[&h].vertex);
+            if let Some(h) = self.arena.take_attached_to(ps) {
+                let hs = self.arena.slot_unchecked(h);
+                let (vp, vh) = (self.arena.vertex(ps), self.arena.vertex(hs));
                 self.conn.undesire(vp, vh);
                 self.stats.forest_cuts += 1;
-                self.points.get_mut(&h).unwrap().attached.remove(&p);
+                let removed = self.arena.attached_mut(hs).remove(p);
+                debug_assert!(removed);
             }
-            let keys = self.points[&p].keys.clone();
-            for (i, &key) in keys.iter().enumerate() {
+            for i in 0..self.cfg.t {
+                let key = self.arena.key(ps, i);
                 self.tables[i].remove(key, p);
             }
         }
-        // line 27: remove x from G and the point store
-        let st = self.points.remove(&p).unwrap();
+        // line 27: remove x from G and the point store (slot to free list)
+        let vertex = self.arena.vertex(ps);
         debug_assert_eq!(
-            self.conn.tree_degree(st.vertex),
+            self.conn.tree_degree(vertex),
             0,
             "point {p} still has forest edges at removal"
         );
-        self.conn.remove_vertex(st.vertex);
+        self.arena.free(p);
+        self.conn.remove_vertex(vertex);
     }
 
     /// Would `y` still be core after removing `x` from every bucket?
     fn still_core_without(&self, y: PointId, x: PointId) -> bool {
-        let sy = &self.points[&y];
-        let sx = &self.points[&x];
-        for (i, &key) in sy.keys.iter().enumerate() {
+        let ys = self.arena.slot_unchecked(y);
+        let xs = self.arena.slot_unchecked(x);
+        for i in 0..self.cfg.t {
+            let key = self.arena.key(ys, i);
             let len = self.tables[i].bucket(key).len();
-            let contains_x = sx.keys[i] == key;
+            let contains_x = self.arena.key(xs, i) == key;
             if len - usize::from(contains_x) >= self.cfg.k {
                 return true;
             }
@@ -441,29 +561,35 @@ impl<C: Connectivity> DynamicDbscan<C> {
     /// `UnlinkCorePoint` (lines 36-42): remove `c` from every bucket's core
     /// path, bridging its neighbors.
     fn unlink_core(&mut self, c: PointId) {
-        debug_assert!(self.points[&c].is_core);
-        let keys = self.points[&c].keys.clone();
-        let vc = self.points[&c].vertex;
-        for (i, &key) in keys.iter().enumerate() {
-            let b = self.tables[i].bucket(key);
-            let c1 = b.core_pred(c);
-            let c2 = b.core_succ(c);
+        let cs = self.arena.slot_unchecked(c);
+        debug_assert!(self.arena.is_core(cs));
+        let vc = self.arena.vertex(cs);
+        for i in 0..self.cfg.t {
+            let key = self.arena.key(cs, i);
+            let (c1, c2) = {
+                let b = self.tables[i].bucket(key);
+                (b.core_pred(c), b.core_succ(c))
+            };
+            let v1 = c1.map(|p| self.arena.vertex(self.arena.slot_unchecked(p)));
+            let v2 = c2.map(|p| self.arena.vertex(self.arena.slot_unchecked(p)));
             // Bridge (c1,c2) first so the two retractions below repair
             // through the hint instead of a component walk.
-            let v1 = c1.map(|c| self.points[&c].vertex);
-            let v2 = c2.map(|c| self.points[&c].vertex);
-            let mut hints: Vec<(VertexId, VertexId)> = Vec::with_capacity(1);
+            let mut bridge: Option<(VertexId, VertexId)> = None;
             if let (Some(v1), Some(v2)) = (v1, v2) {
                 self.conn.desire(v1, v2);
                 self.stats.forest_links += 1;
-                hints.push((v1, v2));
+                bridge = Some((v1, v2));
             }
+            let hints: &[(VertexId, VertexId)] = match &bridge {
+                Some(b) => std::slice::from_ref(b),
+                None => &[],
+            };
             if let Some(v1) = v1 {
-                self.conn.undesire_hinted(v1, vc, &hints);
+                self.conn.undesire_hinted(v1, vc, hints);
                 self.stats.forest_cuts += 1;
             }
             if let Some(v2) = v2 {
-                self.conn.undesire_hinted(vc, v2, &hints);
+                self.conn.undesire_hinted(vc, v2, hints);
                 self.stats.forest_cuts += 1;
             }
         }
@@ -473,25 +599,31 @@ impl<C: Connectivity> DynamicDbscan<C> {
     fn demote_marks(&mut self, c: PointId) {
         self.stats.demotions += 1;
         self.n_core -= 1;
-        let keys = self.points[&c].keys.clone();
-        for (i, &key) in keys.iter().enumerate() {
+        let cs = self.arena.slot_unchecked(c);
+        for i in 0..self.cfg.t {
+            let key = self.arena.key(cs, i);
             self.tables[i].unmark_core(key, c);
         }
-        self.points.get_mut(&c).unwrap().is_core = false;
+        self.arena.set_core(cs, false);
     }
 
     /// Line 43 / 26: re-link every non-core point that was attached to `c`.
     fn reattach_orphans_of(&mut self, c: PointId) {
-        let orphans: Vec<PointId> =
-            self.points.get_mut(&c).unwrap().attached.drain().collect();
-        let vc = self.points[&c].vertex;
-        for nc in orphans {
-            let vn = self.points[&nc].vertex;
+        let cs = self.arena.slot_unchecked(c);
+        let mut orphans = std::mem::take(&mut self.scratch_orphans);
+        orphans.clear();
+        self.arena.attached_mut(cs).drain_into(&mut orphans);
+        let vc = self.arena.vertex(cs);
+        for &nc in &orphans {
+            let ns = self.arena.slot_unchecked(nc);
+            let vn = self.arena.vertex(ns);
             self.conn.undesire(vc, vn);
             self.stats.forest_cuts += 1;
-            self.points.get_mut(&nc).unwrap().attached_to = None;
+            self.arena.set_attached_to(ns, None);
             self.link_non_core(nc);
         }
+        orphans.clear();
+        self.scratch_orphans = orphans;
     }
 
     // ------------------------------------------------------------------
@@ -514,13 +646,18 @@ impl<C: Connectivity> DynamicDbscan<C> {
     pub(crate) fn point_state(
         &self,
         p: PointId,
-    ) -> (bool, Option<PointId>, &FxHashSet<PointId>, VertexId) {
-        let st = &self.points[&p];
-        (st.is_core, st.attached_to, &st.attached, st.vertex)
+    ) -> (bool, Option<PointId>, &AttachedSet, VertexId) {
+        let s = self.arena.require(p);
+        (
+            self.arena.is_core(s),
+            self.arena.attached_to(s),
+            self.arena.attached(s),
+            self.arena.vertex(s),
+        )
     }
 
     pub(crate) fn point_keys(&self, p: PointId) -> &[BucketKey] {
-        &self.points[&p].keys
+        self.arena.key_row(self.arena.require(p))
     }
 }
 
@@ -672,6 +809,28 @@ mod tests {
         db.delete_point(p);
         db.delete_point(p);
     }
+
+    #[test]
+    fn slot_reuse_keeps_ids_unique() {
+        // delete/re-add churn reuses arena slots but never re-issues an id
+        let cfg = DbscanConfig { k: 3, t: 4, eps: 0.5, dim: 2, ..Default::default() };
+        let mut db = DynamicDbscan::new(cfg, 9);
+        let mut seen = std::collections::HashSet::new();
+        let mut live: Vec<u64> = Vec::new();
+        for round in 0..50 {
+            let p = db.add_point(&[round as f32 * 0.01, 0.0]);
+            assert!(seen.insert(p), "id {p} issued twice");
+            live.push(p);
+            if round % 3 == 2 {
+                let victim = live.remove(0);
+                db.delete_point(victim);
+                assert!(!db.contains(victim), "stale id must not resolve");
+            }
+        }
+        // capacity is bounded by the high-water mark, not total inserts
+        assert!(db.capacity_slots() <= 50);
+        assert!(db.capacity_slots() >= db.live_slots());
+    }
 }
 
 impl<C: Connectivity> DynamicDbscan<C> {
@@ -679,33 +838,41 @@ impl<C: Connectivity> DynamicDbscan<C> {
     /// table the bucket membership, plus forest edge list between points.
     pub fn debug_dump(&self) -> String {
         use std::fmt::Write;
-        let mut s = String::new();
-        let mut ids: Vec<PointId> = self.points.keys().copied().collect();
+        let mut out = String::new();
+        let mut ids: Vec<PointId> = self.arena.ids().collect();
         ids.sort_unstable();
         for &p in &ids {
-            let st = &self.points[&p];
-            write!(s, "p{p}(core={},att={:?}) ", st.is_core, st.attached_to).ok();
+            let s = self.arena.slot_unchecked(p);
+            write!(
+                out,
+                "p{p}(core={},att={:?}) ",
+                self.arena.is_core(s),
+                self.arena.attached_to(s)
+            )
+            .ok();
         }
         for (i, t) in self.tables.iter().enumerate() {
-            write!(s, "| T{i}: ").ok();
+            write!(out, "| T{i}: ").ok();
             for (_, b) in t.iter() {
                 let mut m: Vec<_> = b.members.iter().collect();
                 m.sort();
-                write!(s, "{m:?}c{:?} ", b.cores).ok();
+                write!(out, "{m:?}c{:?} ", b.cores).ok();
             }
         }
-        write!(s, "| edges: ").ok();
+        write!(out, "| edges: ").ok();
         for &a in &ids {
             for &b in &ids {
-                if a < b
-                    && self
-                        .conn
-                        .has_tree_edge(self.points[&a].vertex, self.points[&b].vertex)
-                {
-                    write!(s, "({a},{b}) ").ok();
+                if a < b {
+                    let (va, vb) = (
+                        self.arena.vertex(self.arena.slot_unchecked(a)),
+                        self.arena.vertex(self.arena.slot_unchecked(b)),
+                    );
+                    if self.conn.has_tree_edge(va, vb) {
+                        write!(out, "({a},{b}) ").ok();
+                    }
                 }
             }
         }
-        s
+        out
     }
 }

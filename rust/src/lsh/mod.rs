@@ -78,15 +78,49 @@ impl GridHasher {
         ((h1 as u128) << 64) | h2 as u128
     }
 
+    /// All `t` bucket keys of a point written into `out` (length `t`) —
+    /// the allocation-free form of [`Self::keys`] the update hot loop uses.
+    pub fn keys_into(&self, x: &[f32], scratch: &mut Vec<i32>, out: &mut [BucketKey]) {
+        debug_assert_eq!(out.len(), self.t);
+        scratch.resize(self.dim, 0);
+        for (i, o) in out.iter_mut().enumerate() {
+            self.coords_into(i, x, scratch);
+            *o = Self::key_from_coords(scratch);
+        }
+    }
+
+    /// Batched hashing: `xs` is row-major `n × dim`; writes point-major key
+    /// rows (`out[j*t + i]` = key of point j under function i, `out` length
+    /// `n × t`). One pass per hash function — the η shift and multiplier
+    /// stay hot across the whole batch instead of being reloaded per point.
+    pub fn keys_batch_into(
+        &self,
+        xs: &[f32],
+        n: usize,
+        scratch: &mut Vec<i32>,
+        out: &mut [BucketKey],
+    ) {
+        debug_assert_eq!(xs.len(), n * self.dim);
+        debug_assert_eq!(out.len(), n * self.t);
+        scratch.resize(self.dim, 0);
+        for i in 0..self.t {
+            let eta = self.etas[i];
+            let inv = self.inv_two_eps;
+            for j in 0..n {
+                let row = &xs[j * self.dim..(j + 1) * self.dim];
+                for (o, &v) in scratch.iter_mut().zip(row.iter()) {
+                    *o = ((v + eta) * inv).floor() as i32;
+                }
+                out[j * self.t + i] = Self::key_from_coords(scratch);
+            }
+        }
+    }
+
     /// All `t` bucket keys of a point (native path).
     pub fn keys(&self, x: &[f32], scratch: &mut Vec<i32>) -> Vec<BucketKey> {
-        scratch.resize(self.dim, 0);
-        (0..self.t)
-            .map(|i| {
-                self.coords_into(i, x, scratch);
-                Self::key_from_coords(scratch)
-            })
-            .collect()
+        let mut out = vec![0; self.t];
+        self.keys_into(x, scratch, &mut out);
+        out
     }
 }
 
@@ -171,6 +205,34 @@ mod tests {
         let c = GridHasher::key_from_coords(&[1, 2, 3]);
         assert_ne!(a, b);
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn batched_keys_match_per_point_keys() {
+        // keys_batch_into (t-outer, point-inner) must be bit-identical to
+        // the per-point path on every input
+        run_prop("batched vs per-point keys", 30, |g: &mut Gen| {
+            let dim = g.usize_in(1..=8);
+            let t = g.usize_in(1..=12);
+            let eps = g.f64_in(0.1, 2.0) as f32;
+            let h = GridHasher::new(t, dim, eps, g.rng.next_u64());
+            let n = g.usize_in(1..=40);
+            let mut xs = Vec::with_capacity(n * dim);
+            for _ in 0..n * dim {
+                xs.push(g.f64_in(-10.0, 10.0) as f32);
+            }
+            let mut scratch = Vec::new();
+            let mut batched = vec![0u128; n * t];
+            h.keys_batch_into(&xs, n, &mut scratch, &mut batched);
+            for j in 0..n {
+                let single = h.keys(&xs[j * dim..(j + 1) * dim], &mut scratch);
+                assert_eq!(
+                    &batched[j * t..(j + 1) * t],
+                    single.as_slice(),
+                    "batched keys diverged at point {j}"
+                );
+            }
+        });
     }
 
     #[test]

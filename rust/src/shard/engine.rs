@@ -18,7 +18,7 @@ use crate::util::stats::LatencyHisto;
 
 use super::router::Router;
 use super::stitch::{stitch, GlobalSnapshot};
-use super::worker::{run_worker, ShardOp, ShardSnapshot, WorkerReport};
+use super::worker::{run_worker, ShardBatch, ShardSnapshot, WorkerReport};
 use super::ShardConfig;
 
 /// Engine-side op counters.
@@ -63,13 +63,14 @@ pub struct EngineOutcome {
 pub struct ShardedEngine {
     cfg: ShardConfig,
     router: Router,
-    txs: Vec<SyncSender<Vec<ShardOp>>>,
+    txs: Vec<SyncSender<ShardBatch>>,
     snap_rx: Receiver<ShardSnapshot>,
     workers: Vec<JoinHandle<WorkerReport>>,
     /// ext → shards holding a replica (primary first)
     placement: FxHashMap<u64, Vec<u32>>,
-    /// per-shard op buffer for the batch being assembled
-    pending: Vec<Vec<ShardOp>>,
+    /// per-shard batch being assembled (ops + one shared flat coord buffer
+    /// — no per-op coordinate allocation on the wire)
+    pending: Vec<ShardBatch>,
     snapshot: Arc<GlobalSnapshot>,
     next_seq: u64,
     stats: EngineStats,
@@ -86,7 +87,7 @@ impl ShardedEngine {
         let mut txs = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
         for shard in 0..shards {
-            let (tx, rx) = sync_channel::<Vec<ShardOp>>(cfg.queue.max(1));
+            let (tx, rx) = sync_channel::<ShardBatch>(cfg.queue.max(1));
             let dcfg = cfg.dbscan.clone();
             let seed = cfg.seed;
             let stx = snap_tx.clone();
@@ -104,7 +105,7 @@ impl ShardedEngine {
             snap_rx,
             workers,
             placement: FxHashMap::default(),
-            pending: (0..shards).map(|_| Vec::new()).collect(),
+            pending: (0..shards).map(|_| ShardBatch::new()).collect(),
             snapshot: GlobalSnapshot::empty(),
             next_seq: 1,
             stats: EngineStats::default(),
@@ -132,19 +133,11 @@ impl ShardedEngine {
         let decision = self.router.route(coords);
         let mut held: Vec<u32> = Vec::with_capacity(1 + decision.ghosts.len());
         held.push(decision.primary as u32);
-        self.pending[decision.primary].push(ShardOp::Insert {
-            ext,
-            coords: coords.to_vec(),
-            primary: true,
-        });
+        self.pending[decision.primary].push_insert(ext, coords, true);
         self.stats.inserts += 1;
         for &g in &decision.ghosts {
             held.push(g as u32);
-            self.pending[g].push(ShardOp::Insert {
-                ext,
-                coords: coords.to_vec(),
-                primary: false,
-            });
+            self.pending[g].push_insert(ext, coords, false);
             self.stats.ghost_inserts += 1;
         }
         let prev = self.placement.insert(ext, held);
@@ -159,7 +152,7 @@ impl ShardedEngine {
             .remove(&ext)
             .unwrap_or_else(|| panic!("sharded delete of unknown ext id {ext}"));
         for s in held {
-            self.pending[s as usize].push(ShardOp::Delete { ext });
+            self.pending[s as usize].push_delete(ext);
         }
         self.stats.deletes += 1;
         self.dirty = true;
@@ -183,7 +176,7 @@ impl ShardedEngine {
         let seq = self.next_seq;
         self.next_seq += 1;
         for tx in &self.txs {
-            tx.send(vec![ShardOp::Snapshot { seq }]).expect("shard worker terminated");
+            tx.send(ShardBatch::snapshot(seq)).expect("shard worker terminated");
         }
         let mut snaps: Vec<ShardSnapshot> = Vec::with_capacity(self.txs.len());
         while snaps.len() < self.txs.len() {

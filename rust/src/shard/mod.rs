@@ -57,7 +57,7 @@ pub mod worker;
 pub use engine::{EngineOutcome, EngineStats, ShardedEngine};
 pub use router::{RouteDecision, Router};
 pub use stitch::GlobalSnapshot;
-pub use worker::{ShardOp, ShardSnapshot, WorkerReport};
+pub use worker::{ShardBatch, ShardOp, ShardSnapshot, WorkerReport};
 
 use crate::dbscan::DbscanConfig;
 

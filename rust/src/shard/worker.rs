@@ -1,5 +1,5 @@
 //! Shard worker: one thread owning one private `DynamicDbscan`, draining a
-//! bounded op channel.
+//! bounded channel of [`ShardBatch`]es.
 //!
 //! Workers know nothing about routing — they apply the inserts (primary or
 //! ghost) and deletes the engine sends, track per-op latency, and answer
@@ -7,6 +7,16 @@
 //! assignment. Because the marker travels the same channel as the ops,
 //! a snapshot reply reflects exactly the ops sent before it (per-channel
 //! FIFO) — the engine uses this as a barrier.
+//!
+//! ## Batch wire format
+//!
+//! A [`ShardBatch`] carries its ops plus **one shared flat coordinate
+//! buffer**: the j-th insert of the batch owns row j (`dim` floats) of
+//! `coords`, so shipping a batch of B inserts costs two allocations total
+//! instead of B per-op `Vec<f32>`s. On receipt the worker hashes the whole
+//! buffer in one cache-friendly pass per hash function
+//! (`GridHasher::keys_batch_into`) and feeds the precomputed key rows to
+//! `add_point_with_keys` — the per-op hot loop allocates nothing.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
@@ -15,14 +25,15 @@ use rustc_hash::FxHashMap;
 
 use crate::dbscan::{DbscanConfig, DynamicDbscan};
 use crate::lsh::table::PointId;
+use crate::lsh::BucketKey;
 use crate::util::stats::LatencyHisto;
 
-/// One operation on a shard's structure.
+/// One operation on a shard's structure. Inserts carry no coordinates —
+/// they consume the next row of the owning [`ShardBatch`]'s `coords`.
 #[derive(Clone, Debug)]
 pub enum ShardOp {
     Insert {
         ext: u64,
-        coords: Vec<f32>,
         /// false for ghost replicas of points owned by another shard
         primary: bool,
     },
@@ -33,6 +44,48 @@ pub enum ShardOp {
     Snapshot {
         seq: u64,
     },
+}
+
+/// A batch of ops for one shard, with the flat row-major coordinate buffer
+/// shared by its inserts (insert j ⇒ `coords[j*dim .. (j+1)*dim]`, in op
+/// order).
+#[derive(Clone, Debug, Default)]
+pub struct ShardBatch {
+    pub ops: Vec<ShardOp>,
+    pub coords: Vec<f32>,
+}
+
+impl ShardBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A control batch carrying only a snapshot marker.
+    pub fn snapshot(seq: u64) -> Self {
+        ShardBatch { ops: vec![ShardOp::Snapshot { seq }], coords: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Queue an insert, appending its coordinate row to the shared buffer.
+    pub fn push_insert(&mut self, ext: u64, coords: &[f32], primary: bool) {
+        self.ops.push(ShardOp::Insert { ext, primary });
+        self.coords.extend_from_slice(coords);
+    }
+
+    pub fn push_delete(&mut self, ext: u64) {
+        self.ops.push(ShardOp::Delete { ext });
+    }
+
+    /// Number of inserts (= coordinate rows) in the batch.
+    pub fn inserts(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, ShardOp::Insert { .. }))
+            .count()
+    }
 }
 
 /// One point's state inside one shard, as of a snapshot.
@@ -77,11 +130,14 @@ pub fn run_worker(
     shard: usize,
     cfg: DbscanConfig,
     seed: u64,
-    rx: Receiver<Vec<ShardOp>>,
+    rx: Receiver<ShardBatch>,
     snap_tx: Sender<ShardSnapshot>,
 ) -> WorkerReport {
+    let (dim, t) = (cfg.dim, cfg.t);
     let mut db = DynamicDbscan::new(cfg, seed);
     let mut ext_map: FxHashMap<u64, (PointId, bool)> = FxHashMap::default();
+    let mut keybuf: Vec<BucketKey> = Vec::new();
+    let mut scratch: Vec<i32> = Vec::new();
     let mut report = WorkerReport {
         shard,
         primary_inserts: 0,
@@ -93,12 +149,33 @@ pub fn run_worker(
     };
     for batch in rx.iter() {
         let t0 = Instant::now();
-        for op in batch {
-            match op {
-                ShardOp::Insert { ext, coords, primary } => {
+        // hash every insert row of the batch in one pass per hash function
+        let n_ins = batch.inserts();
+        debug_assert_eq!(batch.coords.len(), n_ins * dim, "batch coords misaligned");
+        keybuf.clear();
+        keybuf.resize(n_ins * t, 0);
+        let hash_ns_per_insert = if n_ins > 0 {
+            let h0 = Instant::now();
+            db.hasher.keys_batch_into(&batch.coords, n_ins, &mut scratch, &mut keybuf);
+            // amortize the batch hash over its inserts so the recorded
+            // per-op add latency stays comparable with the single-instance
+            // path (which hashes inside the timed add_point call)
+            (h0.elapsed().as_nanos() / n_ins as u128) as u64
+        } else {
+            0
+        };
+        let mut row = 0usize;
+        for op in &batch.ops {
+            match *op {
+                ShardOp::Insert { ext, primary } => {
+                    let x = &batch.coords[row * dim..(row + 1) * dim];
+                    let keys = &keybuf[row * t..(row + 1) * t];
+                    row += 1;
                     let o0 = Instant::now();
-                    let pid = db.add_point(&coords);
-                    report.add_latency.record(o0.elapsed().as_nanos() as u64);
+                    let pid = db.add_point_with_keys(x, keys);
+                    report
+                        .add_latency
+                        .record(o0.elapsed().as_nanos() as u64 + hash_ns_per_insert);
                     if primary {
                         report.primary_inserts += 1;
                     } else {

@@ -1,0 +1,155 @@
+//! Batched-ingestion equivalence: `add_points` / `apply_batch` must be
+//! semantically identical to the same sequence of single `add_point` /
+//! `delete_point` calls — same ids, same `OpStats`, same clustering.
+//! (Batching only changes *when* hashing happens, never what is applied.)
+
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan, Op};
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::util::proptest::{run_prop, Gen};
+use dyn_dbscan::util::rng::Rng;
+use rustc_hash::FxHashMap;
+
+#[test]
+fn add_points_matches_single_adds() {
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: 800,
+            dim: 4,
+            clusters: 3,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        21,
+    );
+    let cfg = DbscanConfig { k: 8, t: 10, eps: 0.75, dim: 4, ..Default::default() };
+    // same seed => same hash functions; only the ingestion path differs
+    let mut single = DynamicDbscan::new(cfg.clone(), 5);
+    let mut batched = DynamicDbscan::new(cfg, 5);
+    let ids_s: Vec<u64> = (0..ds.n()).map(|i| single.add_point(ds.point(i))).collect();
+    let ids_b = batched.add_points(&ds.xs, ds.n());
+    assert_eq!(ids_s, ids_b, "batched ids must match the single-add ids");
+    assert_eq!(single.stats, batched.stats, "OpStats diverged");
+    assert_eq!(single.num_core_points(), batched.num_core_points());
+    let ls = single.labels_for(&ids_s);
+    let lb = batched.labels_for(&ids_b);
+    assert_eq!(
+        adjusted_rand_index(&ls, &lb),
+        1.0,
+        "batched ingestion changed the clustering"
+    );
+}
+
+/// Script of add/delete ops over stable point indices, pre-chunked so that
+/// a delete never targets an add of its own chunk (its id would not exist
+/// yet when the batch is built — the coordinator flushes in that case).
+type Script = Vec<Vec<(bool, usize)>>;
+
+fn build_script(g: &mut Gen, rng: &mut Rng, dim: usize) -> (Vec<Vec<f32>>, Script) {
+    let mut pts: Vec<Vec<f32>> = Vec::new();
+    let mut chunks: Script = Vec::new();
+    // points added in earlier chunks and still live (deletable now) vs
+    // added in the current chunk (deletable from the next chunk on)
+    let mut live_old: Vec<usize> = Vec::new();
+    let mut live_new: Vec<usize> = Vec::new();
+    let n_chunks = g.usize_in(2..=8);
+    for _ in 0..n_chunks {
+        let len = g.usize_in(1..=25);
+        let mut ops = Vec::new();
+        for _ in 0..len {
+            if live_old.is_empty() || rng.coin(0.65) {
+                let c = rng.below(3) as f64 * 2.5;
+                let p: Vec<f32> =
+                    (0..dim).map(|_| (c + rng.uniform(-0.5, 0.5)) as f32).collect();
+                ops.push((true, pts.len()));
+                live_new.push(pts.len());
+                pts.push(p);
+            } else {
+                let i = rng.below_usize(live_old.len());
+                let idx = live_old.swap_remove(i);
+                ops.push((false, idx));
+            }
+        }
+        live_old.append(&mut live_new);
+        chunks.push(ops);
+    }
+    (pts, chunks)
+}
+
+#[test]
+fn apply_batch_matches_singles_under_churn() {
+    run_prop("apply_batch vs single ops", 15, |g: &mut Gen| {
+        let dim = g.usize_in(1..=3);
+        let cfg = DbscanConfig {
+            k: g.usize_in(2..=5),
+            t: g.usize_in(2..=6),
+            eps: g.f64_in(0.2, 1.0) as f32,
+            dim,
+            eager_attach: g.rng.coin(0.3),
+        };
+        let seed = g.rng.next_u64();
+        let mut rng = Rng::new(seed ^ 0xBA7C);
+        let (pts, chunks) = build_script(g, &mut rng, dim);
+
+        // one op at a time
+        let mut single = DynamicDbscan::new(cfg.clone(), seed);
+        let mut id_s: FxHashMap<usize, u64> = FxHashMap::default();
+        for chunk in &chunks {
+            for &(is_add, idx) in chunk {
+                if is_add {
+                    id_s.insert(idx, single.add_point(&pts[idx]));
+                } else {
+                    let id = id_s.remove(&idx).expect("script deletes a dead point");
+                    single.delete_point(id);
+                }
+            }
+        }
+
+        // one apply_batch per chunk
+        let mut batched = DynamicDbscan::new(cfg, seed);
+        let mut id_b: FxHashMap<usize, u64> = FxHashMap::default();
+        for chunk in &chunks {
+            let ops: Vec<Op> = chunk
+                .iter()
+                .map(|&(is_add, idx)| {
+                    if is_add {
+                        Op::Add(pts[idx].as_slice())
+                    } else {
+                        Op::Delete(id_b[&idx])
+                    }
+                })
+                .collect();
+            let new_ids = batched.apply_batch(&ops);
+            let mut it = new_ids.into_iter();
+            for &(is_add, idx) in chunk {
+                if is_add {
+                    id_b.insert(idx, it.next().expect("apply_batch returned too few ids"));
+                } else {
+                    id_b.remove(&idx);
+                }
+            }
+            assert!(it.next().is_none(), "apply_batch returned too many ids");
+        }
+
+        // identical structure state
+        assert_eq!(single.stats, batched.stats, "OpStats diverged");
+        assert_eq!(single.num_points(), batched.num_points());
+        assert_eq!(single.num_core_points(), batched.num_core_points());
+        let mut surv_s: Vec<(usize, u64)> = id_s.into_iter().collect();
+        let mut surv_b: Vec<(usize, u64)> = id_b.into_iter().collect();
+        surv_s.sort_unstable();
+        surv_b.sort_unstable();
+        assert_eq!(surv_s, surv_b, "survivor (point, id) sets diverged");
+        if !surv_s.is_empty() {
+            let ids: Vec<u64> = surv_s.iter().map(|&(_, id)| id).collect();
+            let ls = single.labels_for(&ids);
+            let lb = batched.labels_for(&ids);
+            assert_eq!(
+                adjusted_rand_index(&ls, &lb),
+                1.0,
+                "batched churn changed the clustering"
+            );
+        }
+    });
+}

@@ -1,0 +1,170 @@
+//! Churn property tests for the arena-backed point store: heavy
+//! interleaved add/delete streams exercise slot reuse, then the structure
+//! is checked against a from-scratch realization of Definition 4 over the
+//! same hash functions (exact-collision-graph baseline — core partitions
+//! must match with ARI = 1.0), and drained to zero to prove the arena and
+//! the forest leak nothing.
+
+use dyn_dbscan::baselines::unionfind::UnionFind;
+use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+use dyn_dbscan::lsh::GridHasher;
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::util::proptest::{run_prop, Gen};
+use rustc_hash::FxHashMap;
+
+/// Static Definition-4 core set + core components with externally supplied
+/// hash functions (the brute-force oracle on the exact collision graph).
+fn static_def4(hasher: &GridHasher, k: usize, pts: &[Vec<f32>]) -> (Vec<bool>, Vec<i64>) {
+    let n = pts.len();
+    let mut scratch = Vec::new();
+    let keys: Vec<Vec<u128>> =
+        pts.iter().map(|p| hasher.keys(p, &mut scratch)).collect();
+    let mut is_core = vec![false; n];
+    for i in 0..hasher.t {
+        let mut buckets: FxHashMap<u128, Vec<usize>> = FxHashMap::default();
+        for (j, kk) in keys.iter().enumerate() {
+            buckets.entry(kk[i]).or_default().push(j);
+        }
+        for members in buckets.values() {
+            if members.len() >= k {
+                for &m in members {
+                    is_core[m] = true;
+                }
+            }
+        }
+    }
+    let mut uf = UnionFind::new(n);
+    for i in 0..hasher.t {
+        let mut rep: FxHashMap<u128, usize> = FxHashMap::default();
+        for (j, kk) in keys.iter().enumerate() {
+            if !is_core[j] {
+                continue;
+            }
+            match rep.entry(kk[i]) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    uf.union(j, *e.get());
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(j);
+                }
+            }
+        }
+    }
+    let mut labels = vec![-1i64; n];
+    let mut next = 0i64;
+    let mut seen: FxHashMap<usize, i64> = FxHashMap::default();
+    for j in 0..n {
+        if is_core[j] {
+            let r = uf.find(j);
+            labels[j] = *seen.entry(r).or_insert_with(|| {
+                let l = next;
+                next += 1;
+                l
+            });
+        }
+    }
+    (is_core, labels)
+}
+
+/// Compare the live structure against the static oracle: identical core
+/// flags, and ARI = 1.0 between the core partitions.
+fn assert_matches_oracle(
+    db: &DynamicDbscan,
+    pts: &[Vec<f32>],
+    ids: &[u64],
+    alive: &[usize],
+    ctx: &str,
+) {
+    let survivors: Vec<Vec<f32>> = alive.iter().map(|&j| pts[j].clone()).collect();
+    let (ref_core, ref_labels) = static_def4(&db.hasher, db.cfg.k, &survivors);
+    let mut dyn_core_labels: Vec<i64> = Vec::new();
+    let mut ref_core_labels: Vec<i64> = Vec::new();
+    let mut roots: FxHashMap<u64, i64> = FxHashMap::default();
+    for (pos, &j) in alive.iter().enumerate() {
+        assert_eq!(
+            db.is_core(ids[j]),
+            ref_core[pos],
+            "{ctx}: core flag mismatch at live point {pos}"
+        );
+        if ref_core[pos] {
+            let r = db.get_cluster(ids[j]);
+            let next = roots.len() as i64;
+            dyn_core_labels.push(*roots.entry(r).or_insert(next));
+            ref_core_labels.push(ref_labels[pos]);
+        }
+    }
+    if !dyn_core_labels.is_empty() {
+        let ari = adjusted_rand_index(&dyn_core_labels, &ref_core_labels);
+        assert_eq!(ari, 1.0, "{ctx}: core partition ARI {ari} != 1.0");
+    }
+}
+
+/// Heavy add/delete churn with slot reuse, checked against the exact
+/// baseline mid-stream and after the stream, then drained to empty: the
+/// arena's live-slot count and the forest's live-vertex count must both
+/// return to zero, and the slot high-water mark must be reused rather than
+/// grown when the structure refills.
+#[test]
+fn churn_with_slot_reuse_matches_bruteforce_baseline() {
+    run_prop("arena churn vs static def4", 12, |g: &mut Gen| {
+        let dim = g.usize_in(1..=3);
+        let cfg = DbscanConfig {
+            k: g.usize_in(2..=5),
+            t: g.usize_in(2..=6),
+            eps: g.f64_in(0.2, 1.0) as f32,
+            dim,
+            eager_attach: g.rng.coin(0.3),
+        };
+        let seed = g.rng.next_u64();
+        let mut db = DynamicDbscan::new(cfg, seed);
+        let mut pts: Vec<Vec<f32>> = Vec::new();
+        let mut ids: Vec<u64> = Vec::new();
+        let mut alive: Vec<usize> = Vec::new();
+        let ops = g.usize_in(60..=200);
+        for op in 0..ops {
+            if alive.is_empty() || g.rng.coin(0.62) {
+                let c = g.usize_in(0..=2) as f64 * 2.5;
+                let p: Vec<f32> =
+                    (0..dim).map(|_| (c + g.f64_in(-0.5, 0.5)) as f32).collect();
+                ids.push(db.add_point(&p));
+                pts.push(p);
+                alive.push(ids.len() - 1);
+            } else {
+                let i = g.rng.below_usize(alive.len());
+                let j = alive.swap_remove(i);
+                db.delete_point(ids[j]);
+            }
+            if op % 40 == 39 {
+                db.verify().unwrap_or_else(|e| panic!("op {op}: {e}"));
+                assert_matches_oracle(&db, &pts, &ids, &alive, "mid-stream");
+            }
+        }
+        db.verify().unwrap();
+        assert_matches_oracle(&db, &pts, &ids, &alive, "end of stream");
+        assert_eq!(db.live_slots(), alive.len());
+        assert_eq!(db.live_vertices(), alive.len());
+
+        // drain to empty: nothing may leak
+        let high_water = db.capacity_slots();
+        while let Some(j) = alive.pop() {
+            db.delete_point(ids[j]);
+        }
+        assert_eq!(db.num_points(), 0);
+        assert_eq!(db.num_core_points(), 0);
+        assert_eq!(db.live_slots(), 0, "arena slots leaked after full drain");
+        assert_eq!(db.live_vertices(), 0, "forest vertices leaked after full drain");
+        db.verify().unwrap();
+
+        // refill within the old high-water mark: slots must be reused
+        let refill = high_water.min(10);
+        for i in 0..refill {
+            let p: Vec<f32> = (0..dim).map(|_| i as f32 * 0.01).collect();
+            db.add_point(&p);
+        }
+        assert_eq!(
+            db.capacity_slots(),
+            high_water,
+            "refill below the high-water mark must reuse free-listed slots"
+        );
+    });
+}

@@ -1,0 +1,47 @@
+//! Source lints enforced as tests — cheap greps over the hot-path sources
+//! that guard the arena refactor's allocation discipline against
+//! regressions a reviewer could easily miss.
+
+/// The pre-arena update path cloned the per-point key vector at seven call
+/// sites (`promote`, `eager_attach`, `delete_point` ×2, `unlink_core`,
+/// `demote_marks`, plus the non-core delete branch). The arena borrows
+/// 16-byte key copies by slot instead; no `.keys.clone()` may come back.
+#[test]
+fn no_keys_clone_in_update_path() {
+    for (name, src) in [
+        ("dbscan/mod.rs", include_str!("../src/dbscan/mod.rs")),
+        ("dbscan/arena.rs", include_str!("../src/dbscan/arena.rs")),
+        ("dbscan/connectivity.rs", include_str!("../src/dbscan/connectivity.rs")),
+    ] {
+        assert!(
+            !src.contains(".keys.clone()"),
+            "{name} clones a per-point key vector on the update path; \
+             borrow the arena key row (PointArena::key / key_row) instead"
+        );
+    }
+}
+
+/// The update path must not materialize per-op coordinate vectors either:
+/// `x.to_vec()` in dbscan/mod.rs would reintroduce a heap allocation per
+/// add (coordinates are copied straight into the arena's flat row).
+#[test]
+fn no_coord_to_vec_in_update_path() {
+    let src = include_str!("../src/dbscan/mod.rs");
+    assert!(
+        !src.contains("x.to_vec()"),
+        "dbscan/mod.rs copies coordinates into a per-op Vec; \
+         write them into the arena row instead"
+    );
+}
+
+/// The shard wire format ships one flat coord buffer per batch; per-op
+/// `coords.to_vec()` in the engine's insert path would undo that.
+#[test]
+fn shard_insert_path_has_no_per_op_coord_vec() {
+    let src = include_str!("../src/shard/engine.rs");
+    assert!(
+        !src.contains("coords.to_vec()"),
+        "shard/engine.rs allocates a coordinate Vec per op; \
+         append to the pending ShardBatch's flat buffer instead"
+    );
+}

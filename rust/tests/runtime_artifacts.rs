@@ -135,7 +135,7 @@ fn clustering_through_xla_engine_matches_native_engine() {
     for i in 0..n {
         let p = &xs[i * d..(i + 1) * d];
         ids_n.push(via_native.add_point(p));
-        ids_x.push(via_xla.add_point_with_keys(p, keys[i].clone()));
+        ids_x.push(via_xla.add_point_with_keys(p, &keys[i]));
     }
     assert_eq!(via_native.num_core_points(), via_xla.num_core_points());
     let ln = via_native.labels_for(&ids_n);
