@@ -1,17 +1,24 @@
 //! Update-path benchmarks.
 //!
 //! 1. **Ablation A3**: per-operation update cost vs n — the empirical check
-//!    of Theorem 1's `O(d log³n + log⁴n)` claim, plus the eager-attach
-//!    extension and repair-mode overhead. For each n the structure is
-//!    pre-filled with n points, then the marginal cost of 2000 further
-//!    inserts and 2000 deletes is measured.
+//!    of Theorem 1's `O(d log³n + log⁴n)` claim (on the leveled default),
+//!    plus the eager-attach extension and the paper-exact comparison. For
+//!    each n the structure is pre-filled with n points, then the marginal
+//!    cost of 2000 further inserts and 2000 deletes is measured.
 //! 2. **Update throughput** (→ `BENCH_updates.json` at the repo root): the
 //!    standard streaming-blobs churn workload (k=10, t=10, ε=0.75, n=50k,
 //!    20% deletes) through the single-instance per-op path, the batched
 //!    `apply_batch` path, and the sharded engine at S ∈ {1, 2, 4, 8} —
 //!    ops/sec plus p50/p99 add & delete latency. This file is the perf
-//!    trajectory every later PR measures against.
-//! 3. **Shard sweep** (insert-only, → `BENCH_shard.json`): kept from the
+//!    trajectory every later PR measures against. The same workload also
+//!    runs across the **conn ablation axis** (paper / repair / leveled).
+//! 3. **Chain churn** (adversarial, also → `BENCH_updates.json`): a 1-D
+//!    line of bucket chains with repeated mid-chain block deletions —
+//!    every round genuinely splits the path-shaped component, the worst
+//!    case for replacement search. This is where the leveled (HDT)
+//!    connectivity earns its keep over `RepairConn`'s
+//!    `O(min-component)` walk.
+//! 4. **Shard sweep** (insert-only, → `BENCH_shard.json`): kept from the
 //!    sharding PR for continuity.
 //!
 //! ```bash
@@ -24,8 +31,7 @@ use std::time::Instant;
 use dyn_dbscan::bench_harness::{repo_root_file, write_json, Table};
 use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
 use dyn_dbscan::data::Dataset;
-use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan, Op, PaperConn, RepairConn};
-use dyn_dbscan::ett::SkipForest;
+use dyn_dbscan::dbscan::{Connectivity, DbscanConfig, DynamicDbscan, Op, RepairStats};
 use dyn_dbscan::shard::{ShardConfig, ShardedEngine};
 use dyn_dbscan::util::json::Json;
 use dyn_dbscan::util::rng::Rng;
@@ -91,17 +97,9 @@ fn probe_mode(n: usize, eager: bool, paper_exact: bool, seed: u64) -> Probe {
         }};
     }
     if paper_exact {
-        run!(DynamicDbscan::with_conn(
-            cfg,
-            seed,
-            PaperConn::new(SkipForest::new(seed ^ 1))
-        ))
+        run!(DynamicDbscan::paper_exact(cfg, seed))
     } else {
-        run!(DynamicDbscan::with_conn(
-            cfg,
-            seed,
-            RepairConn::new(SkipForest::new(seed ^ 1))
-        ))
+        run!(DynamicDbscan::new(cfg, seed))
     }
 }
 
@@ -113,7 +111,7 @@ fn main() {
         // Writes to a scratch path so a local smoke run never clobbers the
         // committed full-scale BENCH_updates.json.
         let path = std::env::temp_dir().join("BENCH_updates.smoke.json");
-        update_throughput(1_500, &[1, 2], &path);
+        update_throughput(1_500, &[1, 2], (800, 4), &path);
         validate_updates_json(&path);
         println!("smoke OK: {} is valid", path.display());
         return;
@@ -162,7 +160,8 @@ fn main() {
     dyn_dbscan::bench_harness::export_json(&table.to_json());
 
     let n = if quick { 50_000 } else { 200_000 };
-    update_throughput(n, &[1, 2, 4, 8], &repo_root_file("BENCH_updates.json"));
+    let chain = if quick { (50_000, 150) } else { (200_000, 150) };
+    update_throughput(n, &[1, 2, 4, 8], chain, &repo_root_file("BENCH_updates.json"));
     shard_sweep(n);
 }
 
@@ -213,11 +212,16 @@ struct SingleRun {
     wall_s: f64,
     add: LatencyHisto,
     del: LatencyHisto,
+    conn: RepairStats,
 }
 
-/// Per-op path: one `DynamicDbscan`, one call per op.
-fn run_single(ds: &Dataset, ops: &[WlOp], cfg: &DbscanConfig, seed: u64) -> SingleRun {
-    let mut db = DynamicDbscan::new(cfg.clone(), seed);
+/// Per-op path: one `DynamicDbscan` (any connectivity mode), one call per
+/// op.
+fn run_single<C: Connectivity>(
+    mut db: DynamicDbscan<C>,
+    ds: &Dataset,
+    ops: &[WlOp],
+) -> SingleRun {
     let mut ext_map: FxHashMap<u64, u64> = FxHashMap::default();
     let mut add = LatencyHisto::new();
     let mut del = LatencyHisto::new();
@@ -240,7 +244,7 @@ fn run_single(ds: &Dataset, ops: &[WlOp], cfg: &DbscanConfig, seed: u64) -> Sing
     }
     let wall_s = t0.elapsed().as_secs_f64();
     std::hint::black_box(db.num_core_points());
-    SingleRun { wall_s, add, del }
+    SingleRun { wall_s, add, del, conn: db.repair_stats() }
 }
 
 /// Batched path: the same op stream through `apply_batch` in chunks. A
@@ -297,18 +301,146 @@ fn run_single_batched(
     wall_s
 }
 
-fn histo_json(h: &LatencyHisto) -> Vec<(&'static str, Json)> {
-    vec![
-        ("p50_ns", Json::num(h.quantile(0.5) as f64)),
-        ("p99_ns", Json::num(h.quantile(0.99) as f64)),
-        ("mean_ns", Json::num(h.mean())),
-    ]
+/// Append a latency histogram's p50/p99/mean under the given field names
+/// (one shared helper so every JSON section stays schema-consistent).
+fn push_histo_fields(
+    fields: &mut Vec<(&'static str, Json)>,
+    names: [&'static str; 3],
+    h: &LatencyHisto,
+) {
+    let [p50, p99, mean] = names;
+    fields.push((p50, Json::num(h.quantile(0.5) as f64)));
+    fields.push((p99, Json::num(h.quantile(0.99) as f64)));
+    fields.push((mean, Json::num(h.mean())));
 }
 
-/// Run the churn workload on every engine configuration and write the
-/// trajectory record to `out_path` (the repo-root `BENCH_updates.json` in
-/// full runs, a scratch file under `--smoke`).
-fn update_throughput(n: usize, shard_counts: &[usize], out_path: &std::path::Path) {
+const ADD_HISTO: [&str; 3] = ["add_p50_ns", "add_p99_ns", "add_mean_ns"];
+const DEL_HISTO: [&str; 3] = ["delete_p50_ns", "delete_p99_ns", "delete_mean_ns"];
+
+// ---------------------------------------------------------------------
+// adversarial chain churn: the replacement-search worst case
+// ---------------------------------------------------------------------
+
+struct ChainRun {
+    wall_s: f64,
+    add: LatencyHisto,
+    del: LatencyHisto,
+    conn: RepairStats,
+}
+
+/// Mid-chain deletion block (points per round); clamped for tiny smoke
+/// runs. Shared by the workload and its JSON description.
+fn chain_block(n: usize) -> usize {
+    16usize.min(n / 4)
+}
+
+/// 1-D bucket-chain workload: points at spacing 0.1 with ε = 0.4 (bucket
+/// width 0.8) form one long path-shaped component of ~8-point buckets.
+/// Each round deletes a mid-chain block of 16 points (width 1.6 > any
+/// bucket ⇒ a genuine split, so the replacement search runs to
+/// exhaustion) and re-inserts it. `RepairConn` pays `O(component)` per
+/// split; the leveled default amortizes to polylog via edge-level pushes.
+fn chain_churn<C: Connectivity>(
+    mut db: DynamicDbscan<C>,
+    n: usize,
+    rounds: usize,
+    seed: u64,
+) -> ChainRun {
+    let pts: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+    let mut ids: Vec<u64> = pts.iter().map(|&x| db.add_point(&[x])).collect();
+    let mut rng = Rng::new(seed);
+    let block = chain_block(n);
+    let mut add = LatencyHisto::new();
+    let mut del = LatencyHisto::new();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        let start = (n / 4 + rng.below_usize(n / 2)).min(n - block);
+        for i in start..start + block {
+            let o0 = Instant::now();
+            db.delete_point(ids[i]);
+            del.record(o0.elapsed().as_nanos() as u64);
+        }
+        for i in start..start + block {
+            let o0 = Instant::now();
+            ids[i] = db.add_point(&[pts[i]]);
+            add.record(o0.elapsed().as_nanos() as u64);
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    std::hint::black_box(db.num_core_points());
+    ChainRun { wall_s, add, del, conn: db.repair_stats() }
+}
+
+/// Run the chain-churn workload across the conn ablation axis, print the
+/// comparison and return the JSON section for `BENCH_updates.json`.
+fn chain_churn_section(n: usize, rounds: usize) -> Json {
+    let cfg = DbscanConfig { k: 8, t: 4, eps: 0.4, dim: 1, ..Default::default() };
+    let mut table = Table::new(
+        "chain churn: mid-chain block deletions (conn ablation)",
+        &["conn", "wall s", "del p50/p99 µs", "searches", "visited", "pushes", "levels"],
+    );
+    let mut modes: Vec<Json> = Vec::new();
+    for mode in ["leveled", "repair", "paper"] {
+        let run = match mode {
+            "leveled" => chain_churn(DynamicDbscan::new(cfg.clone(), 42), n, rounds, 7),
+            "repair" => {
+                chain_churn(DynamicDbscan::repair_mode(cfg.clone(), 42), n, rounds, 7)
+            }
+            _ => chain_churn(DynamicDbscan::paper_exact(cfg.clone(), 42), n, rounds, 7),
+        };
+        table.row(vec![
+            mode.into(),
+            format!("{:.2}", run.wall_s),
+            format!(
+                "{:.1}/{:.1}",
+                run.del.quantile(0.5) as f64 / 1e3,
+                run.del.quantile(0.99) as f64 / 1e3
+            ),
+            run.conn.searches.to_string(),
+            run.conn.visited.to_string(),
+            run.conn.pushes.to_string(),
+            run.conn.levels.to_string(),
+        ]);
+        let mut fields = vec![
+            ("conn", Json::str(mode)),
+            ("wall_s", Json::num(run.wall_s)),
+        ];
+        push_histo_fields(&mut fields, ADD_HISTO, &run.add);
+        push_histo_fields(&mut fields, DEL_HISTO, &run.del);
+        fields.push(("searches", Json::num(run.conn.searches as f64)));
+        fields.push(("visited", Json::num(run.conn.visited as f64)));
+        fields.push(("pushes", Json::num(run.conn.pushes as f64)));
+        fields.push(("levels", Json::num(run.conn.levels as f64)));
+        modes.push(Json::obj(fields));
+    }
+    table.print();
+    Json::obj(vec![
+        (
+            "workload",
+            Json::obj(vec![
+                ("name", Json::str("chain-block-churn")),
+                ("n", Json::num(n as f64)),
+                ("rounds", Json::num(rounds as f64)),
+                ("block", Json::num(chain_block(n) as f64)),
+                ("k", Json::num(8.0)),
+                ("t", Json::num(4.0)),
+                ("eps", Json::num(0.4)),
+            ]),
+        ),
+        ("modes", Json::Arr(modes)),
+    ])
+}
+
+/// Run the churn workload on every engine configuration (plus the
+/// adversarial chain-churn ablation sized by `chain = (n, rounds)`) and
+/// write the trajectory record to `out_path` (the repo-root
+/// `BENCH_updates.json` in full runs, a scratch file under `--smoke`).
+fn update_throughput(
+    n: usize,
+    shard_counts: &[usize],
+    chain: (usize, usize),
+    out_path: &std::path::Path,
+) {
     let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: DIM, ..Default::default() };
     let delete_frac = 0.2;
     let (ds, ops) = build_workload(n, delete_frac, 7);
@@ -320,24 +452,33 @@ fn update_throughput(n: usize, shard_counts: &[usize], out_path: &std::path::Pat
         &["engine", "wall s", "ops/s", "add p50/p99 µs", "del p50/p99 µs"],
     );
 
-    // single-instance, per-op
-    let single = run_single(&ds, &ops, &cfg, 42);
+    // single-instance, per-op — once per connectivity mode (the conn
+    // ablation axis); "single" rows below refer to the leveled default
+    let single = run_single(DynamicDbscan::new(cfg.clone(), 42), &ds, &ops);
+    let repair = run_single(DynamicDbscan::repair_mode(cfg.clone(), 42), &ds, &ops);
+    let paper = run_single(DynamicDbscan::paper_exact(cfg.clone(), 42), &ds, &ops);
     let single_ops_s = total_ops as f64 / single.wall_s;
-    table.row(vec![
-        "single".into(),
-        format!("{:.2}", single.wall_s),
-        format!("{single_ops_s:.0}"),
-        format!(
-            "{:.1}/{:.1}",
-            single.add.quantile(0.5) as f64 / 1e3,
-            single.add.quantile(0.99) as f64 / 1e3
-        ),
-        format!(
-            "{:.1}/{:.1}",
-            single.del.quantile(0.5) as f64 / 1e3,
-            single.del.quantile(0.99) as f64 / 1e3
-        ),
-    ]);
+    for (name, run) in [
+        ("single (leveled)", &single),
+        ("single (repair)", &repair),
+        ("single (paper)", &paper),
+    ] {
+        table.row(vec![
+            name.into(),
+            format!("{:.2}", run.wall_s),
+            format!("{:.0}", total_ops as f64 / run.wall_s),
+            format!(
+                "{:.1}/{:.1}",
+                run.add.quantile(0.5) as f64 / 1e3,
+                run.add.quantile(0.99) as f64 / 1e3
+            ),
+            format!(
+                "{:.1}/{:.1}",
+                run.del.quantile(0.5) as f64 / 1e3,
+                run.del.quantile(0.99) as f64 / 1e3
+            ),
+        ]);
+    }
 
     // single-instance, batched ingestion
     let batch = 512usize;
@@ -386,6 +527,7 @@ fn update_throughput(n: usize, shard_counts: &[usize], out_path: &std::path::Pat
                 out.delete_latency.quantile(0.99) as f64 / 1e3
             ),
         ]);
+        let conn = out.conn_stats();
         let mut fields = vec![
             ("shards", Json::num(shards as f64)),
             ("wall_s", Json::num(wall_s)),
@@ -393,21 +535,12 @@ fn update_throughput(n: usize, shard_counts: &[usize], out_path: &std::path::Pat
             ("speedup_vs_single", Json::num(single.wall_s / wall_s)),
             ("ghost_ratio", Json::num(out.stats.ghost_ratio())),
             ("clusters", Json::num(snap.clusters as f64)),
+            ("conn_searches", Json::num(conn.searches as f64)),
+            ("conn_pushes", Json::num(conn.pushes as f64)),
+            ("conn_levels", Json::num(conn.levels as f64)),
         ];
-        for (k, v) in histo_json(&out.add_latency) {
-            fields.push(match k {
-                "p50_ns" => ("add_p50_ns", v),
-                "p99_ns" => ("add_p99_ns", v),
-                _ => ("add_mean_ns", v),
-            });
-        }
-        for (k, v) in histo_json(&out.delete_latency) {
-            fields.push(match k {
-                "p50_ns" => ("delete_p50_ns", v),
-                "p99_ns" => ("delete_p99_ns", v),
-                _ => ("delete_mean_ns", v),
-            });
-        }
+        push_histo_fields(&mut fields, ADD_HISTO, &out.add_latency);
+        push_histo_fields(&mut fields, DEL_HISTO, &out.delete_latency);
         shard_rows.push(Json::obj(fields));
     }
     table.print();
@@ -416,20 +549,26 @@ fn update_throughput(n: usize, shard_counts: &[usize], out_path: &std::path::Pat
         ("wall_s", Json::num(single.wall_s)),
         ("ops_per_s", Json::num(single_ops_s)),
     ];
-    for (k, v) in histo_json(&single.add) {
-        single_fields.push(match k {
-            "p50_ns" => ("add_p50_ns", v),
-            "p99_ns" => ("add_p99_ns", v),
-            _ => ("add_mean_ns", v),
-        });
+    push_histo_fields(&mut single_fields, ADD_HISTO, &single.add);
+    push_histo_fields(&mut single_fields, DEL_HISTO, &single.del);
+    // conn ablation axis on the identical uniform-churn workload
+    let mut ablation: Vec<Json> = Vec::new();
+    for (mode, run) in [("leveled", &single), ("repair", &repair), ("paper", &paper)] {
+        ablation.push(Json::obj(vec![
+            ("conn", Json::str(mode)),
+            ("wall_s", Json::num(run.wall_s)),
+            ("ops_per_s", Json::num(total_ops as f64 / run.wall_s)),
+            ("delete_p50_ns", Json::num(run.del.quantile(0.5) as f64)),
+            ("delete_p99_ns", Json::num(run.del.quantile(0.99) as f64)),
+            ("searches", Json::num(run.conn.searches as f64)),
+            ("visited", Json::num(run.conn.visited as f64)),
+            ("pushes", Json::num(run.conn.pushes as f64)),
+            ("levels", Json::num(run.conn.levels as f64)),
+        ]));
     }
-    for (k, v) in histo_json(&single.del) {
-        single_fields.push(match k {
-            "p50_ns" => ("delete_p50_ns", v),
-            "p99_ns" => ("delete_p99_ns", v),
-            _ => ("delete_mean_ns", v),
-        });
-    }
+
+    let chain_section = chain_churn_section(chain.0, chain.1);
+
     let record = Json::obj(vec![
         ("bench", Json::str("updates_throughput")),
         (
@@ -447,6 +586,8 @@ fn update_throughput(n: usize, shard_counts: &[usize], out_path: &std::path::Pat
             ]),
         ),
         ("single", Json::obj(single_fields)),
+        ("conn_ablation", Json::Arr(ablation)),
+        ("chain_churn", chain_section),
         (
             "single_batched",
             Json::obj(vec![
@@ -500,6 +641,23 @@ fn validate_updates_json(path: &std::path::Path) {
         assert!(
             row.get("ops_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
             "sharded row missing throughput"
+        );
+    }
+    let ablation = j
+        .get("conn_ablation")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("missing conn_ablation in {}", path.display()));
+    assert_eq!(ablation.len(), 3, "conn ablation must cover all three modes");
+    let chain_modes = j
+        .get("chain_churn")
+        .and_then(|c| c.get("modes"))
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("missing chain_churn.modes in {}", path.display()));
+    assert_eq!(chain_modes.len(), 3, "chain churn must cover all three modes");
+    for row in chain_modes {
+        assert!(
+            row.get("delete_p99_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "chain-churn row missing delete p99"
         );
     }
 }

@@ -37,6 +37,15 @@
 //! in the paper's workloads replacement searches are rare and small (the
 //! A3 ablation measures this). [`PaperConn`] reproduces the paper's
 //! verbatim behaviour for comparison benches.
+//!
+//! ## The default mode lives elsewhere
+//!
+//! The production default is [`super::leveled::LeveledConn`]: it keeps
+//! `RepairConn`'s exact desired-edge semantics but replaces the
+//! `O(min-component)` walk with Holm–de Lichtenberg–Thorup edge levels,
+//! restoring the polylogarithmic bound the paper assumes. `RepairConn`
+//! stays as the flat ablation reference (the chain-churn bench measures
+//! the gap), and this module keeps the shared [`Connectivity`] trait.
 
 use rustc_hash::{FxHashMap, FxHashSet};
 
@@ -74,6 +83,12 @@ pub trait Connectivity {
     fn is_desired(&self, u: VertexId, v: VertexId) -> bool;
     /// Vertices currently live in the forest (leak checks).
     fn live_vertices(&self) -> usize;
+    /// Live forest vertices per internal level — flat structures report a
+    /// single entry; the leveled structure one per forest. The churn leak
+    /// checks assert every entry drains to zero.
+    fn live_vertices_per_level(&self) -> Vec<usize> {
+        vec![self.live_vertices()]
+    }
     /// Replacement-search counters (0 for the paper-exact mode).
     fn repair_stats(&self) -> RepairStats;
 }
@@ -84,10 +99,15 @@ pub struct RepairStats {
     pub searches: u64,
     pub replacements: u64,
     pub visited: u64,
+    /// HDT level promotions: tree or non-tree edges pushed up one level
+    /// during replacement search (0 for the flat modes).
+    pub pushes: u64,
+    /// Live forest levels (1 for the flat modes).
+    pub levels: usize,
 }
 
 #[inline]
-fn ekey(u: VertexId, v: VertexId) -> (VertexId, VertexId) {
+pub(crate) fn ekey(u: VertexId, v: VertexId) -> (VertexId, VertexId) {
     if u < v {
         (u, v)
     } else {
@@ -159,7 +179,7 @@ impl<F: Forest> Connectivity for PaperConn<F> {
     }
 
     fn repair_stats(&self) -> RepairStats {
-        RepairStats::default()
+        RepairStats { levels: 1, ..RepairStats::default() }
     }
 }
 
@@ -360,32 +380,30 @@ impl<F: Forest> Connectivity for RepairConn<F> {
     }
 
     fn repair_stats(&self) -> RepairStats {
-        RepairStats { nt_edges: self.nt_count, ..self.stats }
+        RepairStats { nt_edges: self.nt_count, levels: 1, ..self.stats }
     }
 }
 
+/// Shared connectivity test oracle: plain undirected multigraph + BFS.
 #[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::ett::TreapForest;
-    use crate::util::proptest::{run_prop, Gen};
+pub(crate) mod testoracle {
+    use rustc_hash::FxHashMap;
 
-    /// Oracle: plain undirected multigraph + BFS connectivity.
-    struct GraphOracle {
+    pub(crate) struct GraphOracle {
         adj: Vec<FxHashMap<usize, u32>>,
     }
 
     impl GraphOracle {
-        fn new(n: usize) -> Self {
+        pub(crate) fn new(n: usize) -> Self {
             GraphOracle { adj: vec![FxHashMap::default(); n] }
         }
 
-        fn desire(&mut self, u: usize, v: usize) {
+        pub(crate) fn desire(&mut self, u: usize, v: usize) {
             *self.adj[u].entry(v).or_insert(0) += 1;
             *self.adj[v].entry(u).or_insert(0) += 1;
         }
 
-        fn undesire(&mut self, u: usize, v: usize) {
+        pub(crate) fn undesire(&mut self, u: usize, v: usize) {
             let m = self.adj[u].get_mut(&v).unwrap();
             *m -= 1;
             let zero = *m == 0;
@@ -398,7 +416,7 @@ mod tests {
             }
         }
 
-        fn connected(&self, u: usize, v: usize) -> bool {
+        pub(crate) fn connected(&self, u: usize, v: usize) -> bool {
             let mut seen = vec![false; self.adj.len()];
             let mut stack = vec![u];
             seen[u] = true;
@@ -416,6 +434,14 @@ mod tests {
             u == v
         }
     }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testoracle::GraphOracle;
+    use super::*;
+    use crate::ett::TreapForest;
+    use crate::util::proptest::{run_prop, Gen};
 
     /// RepairConn must track multigraph connectivity exactly under random
     /// desire/undesire churn — the property the paper-exact mode fails.

@@ -149,22 +149,58 @@ impl<C: Connectivity> DynamicDbscan<C> {
 mod tests {
     use super::super::{DbscanConfig, DynamicDbscan};
     use crate::dbscan::connectivity::RepairConn;
+    use crate::dbscan::leveled::LeveledConn;
+    use crate::ett::treap::TreapSeq;
     use crate::ett::TreapForest;
     use crate::util::proptest::{run_prop, Gen};
 
+    /// Which connectivity layer a Theorem-2 scenario drives.
+    #[derive(Clone, Copy)]
+    enum Mode {
+        /// the default: leveled over skip lists
+        LeveledSkip,
+        /// leveled over the treap backend (cross-check)
+        LeveledTreap,
+        /// the flat repair ablation over the treap backend
+        RepairTreap,
+        /// the flat repair ablation over skip lists (the pre-leveled
+        /// default, still shipped via `DynamicDbscan::repair_mode` and
+        /// benched on the conn ablation axis)
+        RepairSkip,
+    }
+
     /// Theorem 2 as a property: invariants hold after EVERY update in a
-    /// random interleaving of adds and deletes, on both forest backends.
+    /// random interleaving of adds and deletes, on every connectivity
+    /// mode × forest backend combination.
     #[test]
-    fn theorem2_random_updates_skiplist() {
-        run_prop("theorem 2 skiplist", 25, |g| theorem2_scenario(g, false));
+    fn theorem2_random_updates_leveled_skiplist() {
+        run_prop("theorem 2 leveled skiplist", 25, |g| {
+            theorem2_scenario(g, Mode::LeveledSkip)
+        });
     }
 
     #[test]
-    fn theorem2_random_updates_treap() {
-        run_prop("theorem 2 treap", 25, |g| theorem2_scenario(g, true));
+    fn theorem2_random_updates_leveled_treap() {
+        run_prop("theorem 2 leveled treap", 25, |g| {
+            theorem2_scenario(g, Mode::LeveledTreap)
+        });
     }
 
-    fn theorem2_scenario(g: &mut Gen, treap: bool) {
+    #[test]
+    fn theorem2_random_updates_repair_treap() {
+        run_prop("theorem 2 repair treap", 25, |g| {
+            theorem2_scenario(g, Mode::RepairTreap)
+        });
+    }
+
+    #[test]
+    fn theorem2_random_updates_repair_skiplist() {
+        run_prop("theorem 2 repair skiplist", 25, |g| {
+            theorem2_scenario(g, Mode::RepairSkip)
+        });
+    }
+
+    fn theorem2_scenario(g: &mut Gen, mode: Mode) {
         let dim = g.usize_in(1..=3);
         let cfg = DbscanConfig {
             k: g.usize_in(2..=5),
@@ -197,27 +233,42 @@ mod tests {
                 }
             }};
         }
-        if treap {
-            let mut db = DynamicDbscan::with_conn(
-                cfg,
-                seed,
-                RepairConn::new(TreapForest::new(seed ^ 1)),
-            );
-            drive!(db);
-        } else {
-            let mut db = DynamicDbscan::new(cfg, seed);
-            drive!(db);
+        match mode {
+            Mode::LeveledSkip => {
+                let mut db = DynamicDbscan::new(cfg, seed);
+                drive!(db);
+            }
+            Mode::LeveledTreap => {
+                let mut db = DynamicDbscan::with_conn(
+                    cfg,
+                    seed,
+                    LeveledConn::<TreapSeq>::new(seed ^ 1),
+                );
+                drive!(db);
+            }
+            Mode::RepairTreap => {
+                let mut db = DynamicDbscan::with_conn(
+                    cfg,
+                    seed,
+                    RepairConn::new(TreapForest::new(seed ^ 1)),
+                );
+                drive!(db);
+            }
+            Mode::RepairSkip => {
+                let mut db = DynamicDbscan::repair_mode(cfg, seed);
+                drive!(db);
+            }
         }
     }
 
     /// Documents the soundness gap in the paper's verbatim Algorithm 2
     /// (see `connectivity` module docs): the minimal 4-op counterexample
-    /// violates Theorem 2 in paper-exact mode, while the default repair
+    /// violates Theorem 2 in paper-exact mode, while the default leveled
     /// mode maintains it. The exact counterexample depends on the drawn η
     /// shifts, so we search nearby workloads for a violating run; the
-    /// repair-mode structure must stay clean on every one of them.
+    /// default structure must stay clean on every one of them.
     #[test]
-    fn paper_exact_violates_theorem2_repair_does_not() {
+    fn paper_exact_violates_theorem2_leveled_does_not() {
         let cfg = DbscanConfig {
             k: 2,
             t: 2,
@@ -242,7 +293,7 @@ mod tests {
                     paper.delete_point(pp);
                     fixed.delete_point(pf);
                 }
-                fixed.verify().expect("repair mode must satisfy Theorem 2");
+                fixed.verify().expect("leveled mode must satisfy Theorem 2");
                 if paper.verify().is_err() {
                     violated = true;
                 }

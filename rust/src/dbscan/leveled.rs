@@ -1,0 +1,518 @@
+//! Leveled dynamic connectivity — Holm–de Lichtenberg–Thorup edge levels
+//! over Euler tour forests. The production default [`Connectivity`].
+//!
+//! ## Why
+//!
+//! [`super::connectivity::RepairConn`] keeps the spanning forest of the
+//! desired-edge multigraph correct, but its replacement search after a
+//! tree-edge cut walks the smaller component — `O(min-component)`, i.e.
+//! `O(n)` on adversarial path-shaped workloads (see the chain-churn bench
+//! in `bench_updates`). The paper's `O(d log³n + log⁴n)` update bound
+//! (Theorem 1) presupposes polylogarithmic dynamic connectivity. HDT edge
+//! levels (Holm, de Lichtenberg & Thorup, J.ACM '01 — also the backbone of
+//! the Tseng–Dhulipala–Blelloch '19 batch-parallel forests our skip-list
+//! backend follows) close that gap: `O(log² n)` amortized per edge update.
+//!
+//! ## Structure
+//!
+//! Every distinct desired edge carries a **level** `ℓ(e) ∈ 0..⌈log₂ n⌉`,
+//! starting at 0 and only ever increasing. The structure keeps a hierarchy
+//! of Euler-tour forests `F0 ⊇ F1 ⊇ …` where `Fℓ` contains exactly the
+//! tree edges of level ≥ ℓ; `F0` is the spanning forest all queries read.
+//! Two invariants:
+//!
+//! 1. a level-ℓ non-tree edge has both endpoints in one `Fℓ` tree;
+//! 2. every `Fℓ` tree has ≤ `n/2^ℓ` vertices — so levels stay `O(log n)`.
+//!
+//! Cutting a tree edge of level ℓ removes it from `F0..=Fℓ` and searches
+//! for a replacement from level ℓ **down** to 0. At level `l` the smaller
+//! of the two separated `Fl` trees is processed: its level-`l` tree edges
+//! move to `l+1` (allowed by invariant 2 — the smaller side is at most
+//! half), then its level-`l` non-tree edges are scanned; one that crosses
+//! the cut is promoted to a tree edge at level `l` (relinking `F0..=Fl`),
+//! and each one that does not is pushed to level `l+1`. Every scanned edge
+//! either ends the search or rises a level it can never descend from, so
+//! each edge is charged `O(log n)` times — `O(log² n)` amortized.
+//!
+//! ## Why the aggregates live in the `Sequence` trait
+//!
+//! "The level-`l` tree edges of this tree" and "a vertex of this tree with
+//! a level-`l` non-tree edge" must be enumerable in `O(log n)` per item —
+//! walking the tour would reintroduce the `O(component)` cost this module
+//! exists to remove. Both are per-node facts about tour elements (edge
+//! arcs and loop arcs), so the tour containers themselves maintain them as
+//! OR-aggregates bubbled through every join/split: [`MARK_EDGE`] on the
+//! canonical arc of a level-`l` tree edge in `Fl`, [`MARK_VERTEX`] on the
+//! loop arc of a vertex with level-`l` non-tree edges in `Fl`
+//! ([`Sequence::find_marked`]). All three backends (treap, skip list,
+//! naive oracle) implement the augmented API, so the leveled structure is
+//! backend-generic exactly like [`EulerForest`].
+//!
+//! [`MARK_EDGE`]: crate::ett::MARK_EDGE
+//! [`MARK_VERTEX`]: crate::ett::MARK_VERTEX
+//! [`Sequence::find_marked`]: crate::ett::Sequence::find_marked
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+use crate::ett::{EulerForest, Forest, SeedableSequence, VertexId};
+
+use super::connectivity::{ekey, Connectivity, RepairStats};
+
+/// Per distinct desired edge: reference count, HDT level, tree/non-tree.
+struct EdgeInfo {
+    mult: u32,
+    level: u8,
+    tree: bool,
+}
+
+/// One level's non-tree adjacency: endpoint → peer set.
+type NtAdj = FxHashMap<VertexId, FxHashSet<VertexId>>;
+
+/// HDT-leveled spanning forests of the desired-edge multigraph. Drop-in
+/// [`Connectivity`] with the same desire/undesire semantics as
+/// `RepairConn` and `O(log² n)` amortized replacement search.
+pub struct LeveledConn<S: SeedableSequence> {
+    /// `F0..=F_L`; `Fℓ` holds the tree edges of level ≥ ℓ. Forests above 0
+    /// mirror vertex ids allocated by `F0` (lazily, on first touch).
+    levels: Vec<EulerForest<S>>,
+    /// per level: non-tree desired edges by endpoint (mirrored into the
+    /// `MARK_VERTEX` aggregates of that level's forest)
+    nt_at: Vec<NtAdj>,
+    edges: FxHashMap<(VertexId, VertexId), EdgeInfo>,
+    nt_count: usize,
+    seed: u64,
+    stats: RepairStats,
+}
+
+impl<S: SeedableSequence> LeveledConn<S> {
+    pub fn new(seed: u64) -> Self {
+        LeveledConn {
+            levels: vec![EulerForest::with_backend(S::from_seed(seed))],
+            nt_at: vec![FxHashMap::default()],
+            edges: FxHashMap::default(),
+            nt_count: 0,
+            seed,
+            stats: RepairStats::default(),
+        }
+    }
+
+    fn ensure_level(&mut self, l: usize) {
+        while self.levels.len() <= l {
+            let i = self.levels.len() as u64;
+            let seed = self.seed ^ i.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            self.levels.push(EulerForest::with_backend(S::from_seed(seed)));
+            self.nt_at.push(FxHashMap::default());
+        }
+    }
+
+    /// Record {u,v} as a level-`l` non-tree edge, keeping the vertex marks
+    /// of `Fl` in sync.
+    fn nt_insert(&mut self, l: usize, u: VertexId, v: VertexId) {
+        self.ensure_level(l);
+        self.levels[l].ensure_vertex(u);
+        self.levels[l].ensure_vertex(v);
+        for (a, b) in [(u, v), (v, u)] {
+            let s = self.nt_at[l].entry(a).or_default();
+            s.insert(b);
+            if s.len() == 1 {
+                self.levels[l].set_vertex_mark(a, true);
+            }
+        }
+        self.nt_count += 1;
+    }
+
+    fn nt_remove(&mut self, l: usize, u: VertexId, v: VertexId) {
+        for (a, b) in [(u, v), (v, u)] {
+            let s = self.nt_at[l].get_mut(&a).expect("nt_remove: missing endpoint");
+            let had = s.remove(&b);
+            debug_assert!(had, "nt_remove: edge ({u},{v}) not at level {l}");
+            if s.is_empty() {
+                self.nt_at[l].remove(&a);
+                self.levels[l].set_vertex_mark(a, false);
+            }
+        }
+        self.nt_count -= 1;
+    }
+
+    /// Make {u,v} a tree edge at `level`: linked into `F0..=level`, with
+    /// its search mark set in `F_level`.
+    fn tree_link_at(&mut self, level: usize, u: VertexId, v: VertexId) {
+        self.ensure_level(level);
+        for l in 0..=level {
+            let f = &mut self.levels[l];
+            if l > 0 {
+                f.ensure_vertex(u);
+                f.ensure_vertex(v);
+            }
+            let linked = f.link(u, v);
+            debug_assert!(linked, "cycle while linking ({u},{v}) into F{l}");
+        }
+        self.levels[level].set_edge_mark(u, v, true);
+    }
+
+    /// O(log n) fast path: if hinted edge {a,b} is a non-tree desire **at
+    /// the cut edge's level** that the cut disconnected, promote it.
+    /// Ending up in different `F0` trees means it crosses exactly this cut
+    /// (its endpoints were `F0`-connected before). The level-equality
+    /// requirement is what makes the shortcut sound: a level-`cut` NT edge
+    /// shares an `F_cut` tree (invariant 1), that tree must contain the
+    /// cut edge (else a–b would still be `F_cut` ⊆ `F0` connected), so a
+    /// and b sit in the two cut halves of **every** `Fℓ`, ℓ ≤ cut — the
+    /// promotion reconnects exactly what the cut split, restoring both
+    /// invariants at all levels. A lower-level hint has no such guarantee
+    /// (its endpoints need not lie in the two halves of the still-split
+    /// intermediate forests), so it falls through to the descending
+    /// search, which clears those levels properly and will reach it.
+    fn try_promote_hint(&mut self, a: VertexId, b: VertexId, cut_level: usize) -> bool {
+        let key = ekey(a, b);
+        let Some(e) = self.edges.get(&key) else { return false };
+        if e.tree
+            || e.level as usize != cut_level
+            || self.levels[0].connected(a, b)
+        {
+            return false;
+        }
+        self.nt_remove(cut_level, a, b);
+        self.tree_link_at(cut_level, a, b);
+        self.edges.get_mut(&key).unwrap().tree = true;
+        self.stats.replacements += 1;
+        true
+    }
+
+    /// After cutting tree edge (u,v) of level `level` out of
+    /// `F0..=F_level`: find a replacement. Hints first (Algorithm 2's
+    /// local rewiring patterns — the common case, O(log n)), then the HDT
+    /// search from `level` down to 0.
+    fn replace(
+        &mut self,
+        u: VertexId,
+        v: VertexId,
+        level: usize,
+        hints: &[(VertexId, VertexId)],
+    ) {
+        self.stats.searches += 1;
+        for &(a, b) in hints {
+            if self.try_promote_hint(a, b, level) {
+                return;
+            }
+        }
+        for l in (0..=level).rev() {
+            if self.search_level(l, u, v) {
+                return;
+            }
+        }
+    }
+
+    /// One level of the HDT replacement search. Returns true when a
+    /// replacement was promoted (search over).
+    fn search_level(&mut self, l: usize, u: VertexId, v: VertexId) -> bool {
+        let (su, sv) = (
+            self.levels[l].component_size(u),
+            self.levels[l].component_size(v),
+        );
+        let (small, other) = if su <= sv { (u, v) } else { (v, u) };
+        // 1. level-l tree edges of the smaller side rise to l+1 (invariant
+        // 2 allows it: the smaller side is at most half the old tree).
+        // Tree edges first, so the whole side is F_{l+1}-connected before
+        // any non-tree edge follows it up.
+        while let Some((a, b)) = self.levels[l].find_marked_edge(small) {
+            self.levels[l].set_edge_mark(a, b, false);
+            self.ensure_level(l + 1);
+            self.levels[l + 1].ensure_vertex(a);
+            self.levels[l + 1].ensure_vertex(b);
+            let linked = self.levels[l + 1].link(a, b);
+            debug_assert!(linked, "push of tree edge ({a},{b}) closed a cycle");
+            self.levels[l + 1].set_edge_mark(a, b, true);
+            self.edges.get_mut(&ekey(a, b)).unwrap().level = (l + 1) as u8;
+            self.stats.pushes += 1;
+        }
+        // 2. scan the level-l non-tree edges hanging off the smaller side:
+        // promote the first that crosses, push the rest up.
+        let other_root = self.levels[l].root(other);
+        while let Some(x) = self.levels[l].find_marked_vertex(small) {
+            let Some(set) = self.nt_at[l].get(&x) else {
+                debug_assert!(false, "marked vertex {x} has no level-{l} NT edges");
+                break;
+            };
+            let cands: Vec<VertexId> = set.iter().copied().collect();
+            for y in cands {
+                self.stats.visited += 1;
+                if self.levels[l].root(y) == other_root {
+                    // replacement: reconnects F0..=Fl (the forests above l
+                    // legitimately stay split)
+                    self.nt_remove(l, x, y);
+                    self.tree_link_at(l, x, y);
+                    self.edges.get_mut(&ekey(x, y)).unwrap().tree = true;
+                    self.stats.replacements += 1;
+                    return true;
+                }
+                // both endpoints in the smaller side: rises to l+1 (its
+                // tree there is connected — step 1 ran first)
+                self.nt_remove(l, x, y);
+                self.nt_insert(l + 1, x, y);
+                self.edges.get_mut(&ekey(x, y)).unwrap().level = (l + 1) as u8;
+                self.stats.pushes += 1;
+            }
+        }
+        false
+    }
+}
+
+impl<S: SeedableSequence> Connectivity for LeveledConn<S> {
+    fn add_vertex(&mut self) -> VertexId {
+        self.levels[0].add_vertex()
+    }
+
+    fn remove_vertex(&mut self, v: VertexId) {
+        debug_assert!(
+            self.nt_at.iter().all(|m| !m.contains_key(&v)),
+            "removing vertex {v} with live non-tree edges"
+        );
+        // mirrors first (they never recycle ids), then the allocator
+        for f in self.levels.iter_mut().skip(1) {
+            if f.has_vertex(v) {
+                f.retire_vertex(v);
+            }
+        }
+        self.levels[0].remove_vertex(v);
+    }
+
+    fn desire(&mut self, u: VertexId, v: VertexId) {
+        debug_assert_ne!(u, v);
+        let key = ekey(u, v);
+        if let Some(e) = self.edges.get_mut(&key) {
+            e.mult += 1;
+            return;
+        }
+        // fresh desires enter at level 0: tree if they connect, else NT
+        let tree = self.levels[0].link(u, v);
+        if tree {
+            self.levels[0].set_edge_mark(u, v, true);
+        } else {
+            self.nt_insert(0, u, v);
+        }
+        self.edges.insert(key, EdgeInfo { mult: 1, level: 0, tree });
+    }
+
+    fn undesire_hinted(
+        &mut self,
+        u: VertexId,
+        v: VertexId,
+        hints: &[(VertexId, VertexId)],
+    ) {
+        let key = ekey(u, v);
+        let Some(e) = self.edges.get_mut(&key) else {
+            debug_assert!(false, "undesire of non-desired edge ({u},{v})");
+            return;
+        };
+        e.mult -= 1;
+        if e.mult > 0 {
+            return;
+        }
+        let info = self.edges.remove(&key).unwrap();
+        let level = info.level as usize;
+        if !info.tree {
+            self.nt_remove(level, u, v);
+            return;
+        }
+        self.levels[level].set_edge_mark(u, v, false);
+        for l in (0..=level).rev() {
+            let cut = self.levels[l].cut(u, v);
+            debug_assert!(cut, "tree edge ({u},{v}) missing from F{l}");
+        }
+        self.replace(u, v, level, hints);
+    }
+
+    fn root(&self, v: VertexId) -> u64 {
+        self.levels[0].root(v)
+    }
+
+    fn component_size(&self, v: VertexId) -> usize {
+        self.levels[0].component_size(v)
+    }
+
+    fn tree_degree(&self, v: VertexId) -> usize {
+        self.levels[0].degree(v)
+    }
+
+    fn has_tree_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.levels[0].has_edge(u, v)
+    }
+
+    fn is_desired(&self, u: VertexId, v: VertexId) -> bool {
+        self.edges.contains_key(&ekey(u, v))
+    }
+
+    fn live_vertices(&self) -> usize {
+        self.levels[0].num_vertices()
+    }
+
+    fn live_vertices_per_level(&self) -> Vec<usize> {
+        self.levels.iter().map(|f| f.live_vertex_count()).collect()
+    }
+
+    fn repair_stats(&self) -> RepairStats {
+        RepairStats {
+            nt_edges: self.nt_count,
+            levels: self.levels.len(),
+            ..self.stats
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::connectivity::testoracle::GraphOracle;
+    use super::*;
+    use crate::ett::skiplist::SkipSeq;
+    use crate::ett::treap::TreapSeq;
+    use crate::util::proptest::{run_prop, Gen};
+
+    /// LeveledConn must track multigraph connectivity exactly under random
+    /// desire/undesire churn — on both sequence backends.
+    fn leveled_matches_graph_oracle<S: SeedableSequence>() {
+        run_prop("leveled conn vs graph oracle", 60, |g: &mut Gen| {
+            let n = g.usize_in(2..=16);
+            let mut c = LeveledConn::<S>::new(g.rng.next_u64());
+            let vs: Vec<VertexId> = (0..n).map(|_| c.add_vertex()).collect();
+            let mut o = GraphOracle::new(n);
+            let mut desired: Vec<(usize, usize)> = Vec::new();
+            for _ in 0..g.usize_in(1..=120) {
+                if desired.is_empty() || g.rng.coin(0.6) {
+                    let a = g.usize_in(0..=n - 1);
+                    let mut b = g.usize_in(0..=n - 1);
+                    if a == b {
+                        b = (b + 1) % n;
+                    }
+                    c.desire(vs[a], vs[b]);
+                    o.desire(a, b);
+                    desired.push((a, b));
+                } else {
+                    let i = g.usize_in(0..=desired.len() - 1);
+                    let (a, b) = desired.swap_remove(i);
+                    c.undesire(vs[a], vs[b]);
+                    o.undesire(a, b);
+                }
+                for a in 0..n {
+                    for b in 0..n {
+                        assert_eq!(
+                            c.connected(vs[a], vs[b]),
+                            o.connected(a, b),
+                            "connectivity({a},{b}) diverged"
+                        );
+                    }
+                }
+            }
+            // retract everything: every level must drain completely
+            while let Some((a, b)) = desired.pop() {
+                c.undesire(vs[a], vs[b]);
+            }
+            assert_eq!(c.repair_stats().nt_edges, 0);
+            for &v in &vs {
+                c.remove_vertex(v);
+            }
+            let per_level = c.live_vertices_per_level();
+            assert!(
+                per_level.iter().all(|&x| x == 0),
+                "leaked level vertices: {per_level:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn leveled_skiplist_matches_graph_oracle() {
+        leveled_matches_graph_oracle::<SkipSeq>();
+    }
+
+    #[test]
+    fn leveled_treap_matches_graph_oracle() {
+        leveled_matches_graph_oracle::<TreapSeq>();
+    }
+
+    #[test]
+    fn multiplicity_keeps_edge_alive() {
+        let mut c = LeveledConn::<TreapSeq>::new(1);
+        let a = c.add_vertex();
+        let b = c.add_vertex();
+        c.desire(a, b);
+        c.desire(a, b);
+        c.undesire(a, b);
+        assert!(c.connected(a, b), "edge must survive one undesire");
+        c.undesire(a, b);
+        assert!(!c.connected(a, b));
+    }
+
+    #[test]
+    fn replacement_promotes_nt_edge() {
+        // triangle: a-b, b-x tree; a-x non-tree. Cutting a-b promotes a-x.
+        let mut c = LeveledConn::<TreapSeq>::new(2);
+        let a = c.add_vertex();
+        let b = c.add_vertex();
+        let x = c.add_vertex();
+        c.desire(a, b);
+        c.desire(b, x);
+        c.desire(a, x);
+        assert_eq!(c.repair_stats().nt_edges, 1);
+        c.undesire(a, b);
+        assert!(c.connected(a, b), "replacement search must reconnect");
+        let st = c.repair_stats();
+        assert_eq!(st.nt_edges, 0);
+        assert_eq!(st.replacements, 1);
+    }
+
+    #[test]
+    fn hint_short_circuits_the_search() {
+        let mut c = LeveledConn::<SkipSeq>::new(3);
+        let a = c.add_vertex();
+        let b = c.add_vertex();
+        let x = c.add_vertex();
+        c.desire(a, b);
+        c.desire(b, x);
+        c.desire(a, x); // NT
+        c.undesire_hinted(a, b, &[(a, x)]);
+        let st = c.repair_stats();
+        assert!(c.connected(a, b));
+        assert_eq!(st.replacements, 1);
+        assert_eq!(st.visited, 0, "hint must preempt the level scan");
+    }
+
+    /// A failed search on a path pushes the smaller side's tree edges up a
+    /// level; the hierarchy grows and later drains to nothing.
+    #[test]
+    fn failed_search_pushes_edges_up_and_drains() {
+        let mut c = LeveledConn::<SkipSeq>::new(4);
+        let n = 6;
+        let vs: Vec<VertexId> = (0..n).map(|_| c.add_vertex()).collect();
+        for w in vs.windows(2) {
+            c.desire(w[0], w[1]);
+        }
+        // cut the middle: no replacement exists; the 3-vertex side's two
+        // level-0 tree edges rise to level 1
+        c.undesire(vs[2], vs[3]);
+        assert!(!c.connected(vs[0], vs[5]));
+        let st = c.repair_stats();
+        assert_eq!(st.replacements, 0);
+        assert!(st.pushes >= 2, "expected ≥2 tree-edge pushes, got {}", st.pushes);
+        assert!(st.levels >= 2, "hierarchy should have grown");
+        // relink and re-cut: the pushed edges are no longer level-0 work
+        let pushes_before = st.pushes;
+        c.desire(vs[2], vs[3]);
+        c.undesire(vs[2], vs[3]);
+        let st = c.repair_stats();
+        assert!(
+            st.pushes <= pushes_before + 2,
+            "re-cut must not rescan already-pushed edges"
+        );
+        // drain
+        for w in vs.windows(2) {
+            if c.is_desired(w[0], w[1]) {
+                c.undesire(w[0], w[1]);
+            }
+        }
+        for &v in &vs {
+            c.remove_vertex(v);
+        }
+        let per_level = c.live_vertices_per_level();
+        assert!(per_level.iter().all(|&x| x == 0), "leak: {per_level:?}");
+    }
+}

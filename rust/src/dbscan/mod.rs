@@ -27,22 +27,31 @@
 pub mod arena;
 pub mod connectivity;
 pub mod invariants;
+pub mod leveled;
 
 use rustc_hash::FxHashMap;
 
-use crate::ett::{SkipForest, TreapForest, VertexId};
+use crate::ett::{skiplist::SkipSeq, treap::TreapSeq, SkipForest, TreapForest, VertexId};
 use crate::lsh::table::{LshTable, PointId};
 use crate::lsh::{BucketKey, GridHasher};
 
 pub use arena::{AttachedSet, PointArena, ATTACH_INLINE};
 pub use connectivity::{Connectivity, PaperConn, RepairConn, RepairStats};
+pub use leveled::LeveledConn;
 
-/// Default connectivity: repaired spanning forest over skip-list ETT.
-pub type DefaultConn = RepairConn<SkipForest>;
+/// Default connectivity: HDT-leveled spanning forests over skip-list
+/// Euler tour sequences — `O(log² n)` amortized per edge update (see
+/// [`leveled`]).
+pub type DefaultConn = LeveledConn<SkipSeq>;
+/// The pre-leveled default, kept for ablation: repaired flat spanning
+/// forest with `O(min-component)` replacement search.
+pub type RepairSkipConn = RepairConn<SkipForest>;
 /// The paper's verbatim (unsound — see [`connectivity`]) behaviour.
 pub type PaperExactConn = PaperConn<SkipForest>;
 /// Repair mode over the treap (Henzinger–King) backend.
 pub type TreapConn = RepairConn<TreapForest>;
+/// Leveled mode over the treap backend (cross-check).
+pub type LeveledTreapConn = LeveledConn<TreapSeq>;
 
 /// Hyper-parameters (paper §5 uses k = 10, t = 10, ε = 0.75 throughout).
 #[derive(Clone, Debug)]
@@ -89,8 +98,10 @@ pub enum Op<'a> {
 }
 
 /// The dynamic clustering structure. Generic over the connectivity layer
-/// (default: repaired spanning forest over the paper's skip-list Euler tour
-/// sequences — see [`connectivity`] for why repair is needed).
+/// (default: HDT-leveled spanning forests over the paper's skip-list Euler
+/// tour sequences — see [`connectivity`] for why the paper's verbatim
+/// forest needs repairing and [`leveled`] for the polylog replacement
+/// search).
 pub struct DynamicDbscan<C: Connectivity = DefaultConn> {
     pub cfg: DbscanConfig,
     pub hasher: GridHasher,
@@ -114,6 +125,15 @@ pub struct DynamicDbscan<C: Connectivity = DefaultConn> {
 impl DynamicDbscan<DefaultConn> {
     /// `Initialise(k, t, ε)` — O(t·d): draw the t hash shifts.
     pub fn new(cfg: DbscanConfig, seed: u64) -> Self {
+        Self::with_conn(cfg, seed, LeveledConn::new(seed ^ 0xF0E57))
+    }
+}
+
+impl DynamicDbscan<RepairSkipConn> {
+    /// Ablation mode: the flat repaired spanning forest that was the
+    /// default before HDT edge levels (`O(min-component)` replacement
+    /// search — the chain-churn bench measures the gap).
+    pub fn repair_mode(cfg: DbscanConfig, seed: u64) -> Self {
         Self::with_conn(cfg, seed, RepairConn::new(SkipForest::new(seed ^ 0xF0E57)))
     }
 }
@@ -215,6 +235,13 @@ impl<C: Connectivity> DynamicDbscan<C> {
     /// point; 0 after a full drain — the leak check the churn tests use).
     pub fn live_vertices(&self) -> usize {
         self.conn.live_vertices()
+    }
+
+    /// Live forest vertices per connectivity level (a single entry for
+    /// the flat modes, one per HDT forest for the leveled default). The
+    /// churn leak checks assert every level drains to zero.
+    pub fn conn_level_live(&self) -> Vec<usize> {
+        self.conn.live_vertices_per_level()
     }
 
     /// Dense labels for a set of points: clusters numbered 0.., noise

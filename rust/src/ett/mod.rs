@@ -40,6 +40,17 @@ pub const NIL: Node = u32::MAX;
 /// Vertex identifier within a forest.
 pub type VertexId = u32;
 
+/// Bitmask of per-node marks, maintained by every [`Sequence`] backend as
+/// OR-combined subtree aggregates so that "does this sequence contain a
+/// marked node, and where?" is answerable in `O(log n)`. The leveled
+/// connectivity structure ([`crate::dbscan::leveled`]) stores two kinds per
+/// Euler tour: [`MARK_VERTEX`] on loop arcs and [`MARK_EDGE`] on edge arcs.
+pub type MarkSet = u8;
+/// Loop-arc mark: this vertex owns a level-ℓ non-tree edge.
+pub const MARK_VERTEX: MarkSet = 1;
+/// Edge-arc mark: this arc realizes a level-ℓ tree edge.
+pub const MARK_EDGE: MarkSet = 2;
+
 /// A splittable, joinable sequence of elements with canonical per-sequence
 /// identifiers. This is the exact interface Euler tour trees need; both the
 /// treap and the skip-list provide it in `O(log n)` expected per call.
@@ -72,6 +83,22 @@ pub trait Sequence {
     fn concat(&mut self, a: Node, b: Node);
     /// Number of live elements (for leak tests).
     fn live_nodes(&self) -> usize;
+    /// Node-local marks of `x` (not aggregated).
+    fn marks(&self, x: Node) -> MarkSet;
+    /// Replace `x`'s node-local marks, repairing the subtree aggregates
+    /// along `x`'s access path so [`Sequence::seq_marks`] and
+    /// [`Sequence::find_marked`] stay `O(log n)`.
+    fn set_marks(&mut self, x: Node, marks: MarkSet);
+    /// OR of the marks of every node in `x`'s sequence.
+    fn seq_marks(&self, x: Node) -> MarkSet;
+    /// First node in sequence order whose marks intersect `kind`, if any.
+    fn find_marked(&self, x: Node, kind: MarkSet) -> Option<Node>;
+}
+
+/// Backends constructible from a bare seed — lets generic containers (the
+/// leveled connectivity hierarchy) spawn per-level forests on demand.
+pub trait SeedableSequence: Sequence {
+    fn from_seed(seed: u64) -> Self;
 }
 
 /// Dynamic forest interface consumed by the DBSCAN layer (and by the test
@@ -113,6 +140,9 @@ pub struct EulerForest<S: Sequence> {
     edges: FxHashMap<(VertexId, VertexId), (Node, Node)>,
     /// loop arc → vertex (inverse of `verts`; used by tour traversal)
     loop_of: FxHashMap<Node, VertexId>,
+    /// canonical (min→max) edge arc → edge (inverse of `edges`; resolves
+    /// the arcs found by the marked-edge search back to vertex pairs)
+    edge_of: FxHashMap<Node, (VertexId, VertexId)>,
     live: usize,
 }
 
@@ -134,6 +164,7 @@ impl<S: Sequence> EulerForest<S> {
             free_verts: Vec::new(),
             edges: FxHashMap::default(),
             loop_of: FxHashMap::default(),
+            edge_of: FxHashMap::default(),
             live: 0,
         }
     }
@@ -154,6 +185,99 @@ impl<S: Sequence> EulerForest<S> {
             // tour = B(starting at lv) ++ A(starting at old first)
             self.seq.concat(lv, first);
         }
+    }
+
+    // ------------------------------------------------------------------
+    // mark aggregates (the leveled-connectivity API)
+    // ------------------------------------------------------------------
+
+    /// Set/clear the vertex mark on v's loop arc.
+    pub fn set_vertex_mark(&mut self, v: VertexId, on: bool) {
+        let n = self.loop_node(v);
+        let m = self.seq.marks(n);
+        let want = if on { m | MARK_VERTEX } else { m & !MARK_VERTEX };
+        if want != m {
+            self.seq.set_marks(n, want);
+        }
+    }
+
+    pub fn vertex_mark(&self, v: VertexId) -> bool {
+        self.seq.marks(self.loop_node(v)) & MARK_VERTEX != 0
+    }
+
+    /// Set/clear the edge mark on the canonical arc of tree edge {u,v}.
+    /// Panics if the edge is not in the forest.
+    pub fn set_edge_mark(&mut self, u: VertexId, v: VertexId, on: bool) {
+        let (a, _) = self.edges[&ekey(u, v)];
+        let m = self.seq.marks(a);
+        let want = if on { m | MARK_EDGE } else { m & !MARK_EDGE };
+        if want != m {
+            self.seq.set_marks(a, want);
+        }
+    }
+
+    /// First marked vertex in v's tree (tour order), if any — `O(log n)`.
+    pub fn find_marked_vertex(&self, v: VertexId) -> Option<VertexId> {
+        let n = self.seq.find_marked(self.loop_node(v), MARK_VERTEX)?;
+        Some(self.loop_of[&n])
+    }
+
+    /// First marked tree edge in v's tree (tour order), if any —
+    /// `O(log n)`.
+    pub fn find_marked_edge(&self, v: VertexId) -> Option<(VertexId, VertexId)> {
+        let n = self.seq.find_marked(self.loop_node(v), MARK_EDGE)?;
+        Some(self.edge_of[&n])
+    }
+
+    // ------------------------------------------------------------------
+    // mirrored vertex ids (the per-level forests of the leveled
+    // connectivity structure share the ids allocated by its level-0
+    // forest rather than running their own allocators)
+    // ------------------------------------------------------------------
+
+    /// Is `v` live in this forest?
+    pub fn has_vertex(&self, v: VertexId) -> bool {
+        (v as usize) < self.verts.len() && self.verts[v as usize] != NIL
+    }
+
+    /// Materialize externally allocated vertex id `v` in this forest
+    /// (no-op when already live). Never touches the forest's own free
+    /// list — pair with [`EulerForest::retire_vertex`].
+    pub fn ensure_vertex(&mut self, v: VertexId) {
+        let idx = v as usize;
+        if idx >= self.verts.len() {
+            self.verts.resize(idx + 1, NIL);
+            self.degree.resize(idx + 1, 0);
+        }
+        if self.verts[idx] != NIL {
+            return;
+        }
+        let n = self.seq.new_node();
+        self.live += 1;
+        self.verts[idx] = n;
+        self.degree[idx] = 0;
+        self.loop_of.insert(n, v);
+    }
+
+    /// Free `v`'s loop arc WITHOUT recycling the id (the id allocator is
+    /// elsewhere). `v` must be isolated (degree 0).
+    pub fn retire_vertex(&mut self, v: VertexId) {
+        assert_eq!(
+            self.degree[v as usize], 0,
+            "retire_vertex: vertex {v} still has incident edges"
+        );
+        let n = self.loop_node(v);
+        debug_assert_eq!(self.seq.seq_len(n), 1);
+        self.seq.free_node(n);
+        self.loop_of.remove(&n);
+        self.live -= 1;
+        self.verts[v as usize] = NIL;
+    }
+
+    /// Live vertices in this forest (mirror forests included — unlike
+    /// [`Forest::num_vertices`] this ignores the free list).
+    pub fn live_vertex_count(&self) -> usize {
+        self.loop_of.len()
     }
 }
 
@@ -206,6 +330,7 @@ impl<S: Sequence> Forest for EulerForest<S> {
         self.seq.concat(lu, avu);
         let (a, b) = if u < v { (auv, avu) } else { (avu, auv) };
         self.edges.insert(ekey(u, v), (a, b));
+        self.edge_of.insert(a, ekey(u, v));
         self.degree[u as usize] += 1;
         self.degree[v as usize] += 1;
         true
@@ -215,6 +340,7 @@ impl<S: Sequence> Forest for EulerForest<S> {
         let Some((a, b)) = self.edges.remove(&ekey(u, v)) else {
             return false;
         };
+        self.edge_of.remove(&a);
         // The tour is S = A ⧺ [n1] ⧺ M ⧺ [n2] ⧺ C where {n1,n2} = {a,b} in
         // unknown order; M is the inner subtree's tour, A ⧺ C the outer's.
         // Capture the boundary neighbors before any splits.
@@ -304,8 +430,8 @@ impl TreapForest {
 }
 
 /// Shared test scenario: drive a [`Sequence`] implementation against a
-/// `Vec<Vec<Node>>` oracle under random split/concat churn, auditing order,
-/// ids, lengths and neighbors after every op.
+/// `Vec<Vec<Node>>` oracle under random split/concat/mark churn, auditing
+/// order, ids, lengths, neighbors and mark aggregates after every op.
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
@@ -314,9 +440,10 @@ pub(crate) mod testutil {
     pub(crate) fn sequence_oracle_scenario<S: Sequence>(s: &mut S, g: &mut Gen) {
         let n = g.usize_in(1..=20);
         let mut seqs: Vec<Vec<Node>> = (0..n).map(|_| vec![s.new_node()]).collect();
+        let mut marks: FxHashMap<Node, MarkSet> = FxHashMap::default();
         let ops = g.usize_in(0..=80);
         for _ in 0..ops {
-            match g.usize_in(0..=2) {
+            match g.usize_in(0..=3) {
                 0 => {
                     // concat two random distinct sequences
                     if seqs.len() >= 2 {
@@ -343,7 +470,7 @@ pub(crate) mod testutil {
                         seqs.push(right);
                     }
                 }
-                _ => {
+                2 => {
                     // split after
                     let i = g.usize_in(0..=seqs.len() - 1);
                     let at = g.usize_in(0..=seqs[i].len() - 1);
@@ -353,12 +480,21 @@ pub(crate) mod testutil {
                         seqs.push(right);
                     }
                 }
+                _ => {
+                    // re-mark a random element
+                    let i = g.usize_in(0..=seqs.len() - 1);
+                    let x = *g.choose(&seqs[i]);
+                    let m = g.usize_in(0..=3) as MarkSet;
+                    s.set_marks(x, m);
+                    marks.insert(x, m);
+                }
             }
             // audit everything
             for seq in &seqs {
                 let id = s.seq_id(seq[0]);
                 assert_eq!(s.seq_len(seq[0]), seq.len());
                 assert_eq!(s.first_of_seq(*seq.last().unwrap()), seq[0]);
+                let mut agg: MarkSet = 0;
                 for (k, &x) in seq.iter().enumerate() {
                     assert_eq!(s.seq_id(x), id, "consistent id within seq");
                     let want_prev = if k > 0 { Some(seq[k - 1]) } else { None };
@@ -366,6 +502,22 @@ pub(crate) mod testutil {
                         if k + 1 < seq.len() { Some(seq[k + 1]) } else { None };
                     assert_eq!(s.prev(x), want_prev, "prev of pos {k}");
                     assert_eq!(s.next(x), want_next, "next of pos {k}");
+                    let m = marks.get(&x).copied().unwrap_or(0);
+                    assert_eq!(s.marks(x), m, "node marks of pos {k}");
+                    agg |= m;
+                }
+                assert_eq!(s.seq_marks(seq[0]), agg, "sequence mark aggregate");
+                for kind in [MARK_VERTEX, MARK_EDGE] {
+                    let want = seq
+                        .iter()
+                        .copied()
+                        .find(|x| marks.get(x).copied().unwrap_or(0) & kind != 0);
+                    let probe = *g.choose(seq);
+                    assert_eq!(
+                        s.find_marked(probe, kind),
+                        want,
+                        "first marked node for kind {kind}"
+                    );
                 }
             }
             // distinct sequences must have distinct ids
@@ -542,6 +694,150 @@ mod tests {
         let b = f.add_vertex();
         f.link(a, b);
         f.remove_vertex(a);
+    }
+
+    /// Satellite differential test: the treap and skip-list aggregate
+    /// marks are checked against `naive::NaiveSeq` (which implements the
+    /// augmented API by linear scan) across randomized join/split/mark
+    /// schedules — every backend sees the identical logical schedule.
+    #[test]
+    fn aggregate_marks_agree_with_naive_oracle() {
+        use super::naive::NaiveSeq;
+        use super::skiplist::SkipSeq;
+        use super::treap::TreapSeq;
+        run_prop("aggregate marks vs NaiveSeq", 40, |g: &mut Gen| {
+            let n = g.usize_in(1..=16);
+            let mut tr = TreapSeq::from_seed(g.rng.next_u64());
+            let mut sk = SkipSeq::from_seed(g.rng.next_u64());
+            let mut na = NaiveSeq::from_seed(0);
+            let tn: Vec<Node> = (0..n).map(|_| tr.new_node()).collect();
+            let sn: Vec<Node> = (0..n).map(|_| sk.new_node()).collect();
+            let nn: Vec<Node> = (0..n).map(|_| na.new_node()).collect();
+            // logical sequences hold indices into tn/sn/nn
+            let mut seqs: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+            for _ in 0..g.usize_in(0..=60) {
+                match g.usize_in(0..=3) {
+                    0 => {
+                        if seqs.len() >= 2 {
+                            let i = g.usize_in(0..=seqs.len() - 1);
+                            let mut j = g.usize_in(0..=seqs.len() - 1);
+                            if i == j {
+                                j = (j + 1) % seqs.len();
+                            }
+                            let (i, j) = (i.min(j), i.max(j));
+                            let b = seqs.remove(j);
+                            let (pa, pb) = (seqs[i][0], b[0]);
+                            tr.concat(tn[pa], tn[pb]);
+                            sk.concat(sn[pa], sn[pb]);
+                            na.concat(nn[pa], nn[pb]);
+                            seqs[i].extend(b);
+                        }
+                    }
+                    1 => {
+                        let i = g.usize_in(0..=seqs.len() - 1);
+                        let at = g.usize_in(0..=seqs[i].len() - 1);
+                        let x = seqs[i][at];
+                        tr.split_before(tn[x]);
+                        sk.split_before(sn[x]);
+                        na.split_before(nn[x]);
+                        if at > 0 {
+                            let right = seqs[i].split_off(at);
+                            seqs.push(right);
+                        }
+                    }
+                    2 => {
+                        let i = g.usize_in(0..=seqs.len() - 1);
+                        let at = g.usize_in(0..=seqs[i].len() - 1);
+                        let x = seqs[i][at];
+                        tr.split_after(tn[x]);
+                        sk.split_after(sn[x]);
+                        na.split_after(nn[x]);
+                        if at + 1 < seqs[i].len() {
+                            let right = seqs[i].split_off(at + 1);
+                            seqs.push(right);
+                        }
+                    }
+                    _ => {
+                        let i = g.usize_in(0..=seqs.len() - 1);
+                        let x = *g.choose(&seqs[i]);
+                        let m = g.usize_in(0..=3) as MarkSet;
+                        tr.set_marks(tn[x], m);
+                        sk.set_marks(sn[x], m);
+                        na.set_marks(nn[x], m);
+                    }
+                }
+                // the naive backend is the ground truth for every query
+                for q in &seqs {
+                    let probe = *g.choose(q);
+                    let want = na.seq_marks(nn[probe]);
+                    assert_eq!(tr.seq_marks(tn[probe]), want, "treap seq_marks");
+                    assert_eq!(sk.seq_marks(sn[probe]), want, "skiplist seq_marks");
+                    for kind in [MARK_VERTEX, MARK_EDGE] {
+                        let pos = |v: &[Node], x: Node| {
+                            v.iter().position(|&y| y == x).unwrap()
+                        };
+                        let want =
+                            na.find_marked(nn[probe], kind).map(|x| pos(&nn, x));
+                        let got_t =
+                            tr.find_marked(tn[probe], kind).map(|x| pos(&tn, x));
+                        let got_s =
+                            sk.find_marked(sn[probe], kind).map(|x| pos(&sn, x));
+                        assert_eq!(got_t, want, "treap find_marked kind {kind}");
+                        assert_eq!(got_s, want, "skiplist find_marked kind {kind}");
+                    }
+                }
+            }
+        });
+    }
+
+    /// Forest-level mark plumbing: vertex and edge marks survive link/cut
+    /// churn and the marked searches resolve back to vertices/edges.
+    #[test]
+    fn forest_marks_follow_links_and_cuts() {
+        let mut f = SkipForest::new(5);
+        let vs: Vec<_> = (0..8).map(|_| f.add_vertex()).collect();
+        for w in vs.windows(2) {
+            assert!(f.link(w[0], w[1]));
+        }
+        assert_eq!(f.find_marked_vertex(vs[0]), None);
+        assert_eq!(f.find_marked_edge(vs[0]), None);
+        f.set_vertex_mark(vs[5], true);
+        f.set_edge_mark(vs[2], vs[3], true);
+        assert!(f.vertex_mark(vs[5]));
+        assert_eq!(f.find_marked_vertex(vs[0]), Some(vs[5]));
+        assert_eq!(f.find_marked_edge(vs[0]), Some((vs[2], vs[3])));
+        // cut between the marks: each side sees only its own mark
+        assert!(f.cut(vs[3], vs[4]));
+        assert_eq!(f.find_marked_vertex(vs[0]), None);
+        assert_eq!(f.find_marked_edge(vs[0]), Some((vs[2], vs[3])));
+        assert_eq!(f.find_marked_vertex(vs[7]), Some(vs[5]));
+        assert_eq!(f.find_marked_edge(vs[7]), None);
+        // relink: the tree sees both again; clearing hides them
+        assert!(f.link(vs[3], vs[4]));
+        assert_eq!(f.find_marked_vertex(vs[0]), Some(vs[5]));
+        f.set_vertex_mark(vs[5], false);
+        f.set_edge_mark(vs[2], vs[3], false);
+        assert_eq!(f.find_marked_vertex(vs[0]), None);
+        assert_eq!(f.find_marked_edge(vs[0]), None);
+    }
+
+    /// Mirrored-id lifecycle: `ensure_vertex`/`retire_vertex` manage
+    /// externally allocated ids without touching the free list.
+    #[test]
+    fn ensure_and_retire_mirror_vertices() {
+        let mut f = TreapForest::new(11);
+        f.ensure_vertex(4);
+        f.ensure_vertex(1);
+        f.ensure_vertex(4); // no-op
+        assert!(f.has_vertex(4) && f.has_vertex(1) && !f.has_vertex(0));
+        assert_eq!(f.live_vertex_count(), 2);
+        assert!(f.link(1, 4));
+        assert!(f.connected(1, 4));
+        assert!(f.cut(1, 4));
+        f.retire_vertex(4);
+        f.retire_vertex(1);
+        assert_eq!(f.live_vertex_count(), 0);
+        assert_eq!(f.seq.live_nodes(), 0);
     }
 
     #[test]

@@ -1,10 +1,15 @@
-//! Naive dynamic forest: adjacency sets + DFS. `O(n)` per query — the test
-//! oracle for the Euler-tour backends and a baseline in the `bench_ett`
-//! ablation.
+//! Naive reference implementations: `O(n)`-per-query oracles for the real
+//! backends.
+//!
+//! * [`NaiveForest`] — adjacency sets + DFS, the [`Forest`] oracle and a
+//!   baseline in the `bench_ett` ablation;
+//! * [`NaiveSeq`] — Vec-of-Vecs sequences with linear scans, the
+//!   differential oracle for the augmented aggregate API ([`Sequence`]
+//!   marks) of the treap and skip-list backends.
 
 use std::collections::{BTreeSet, HashMap};
 
-use super::{Forest, VertexId};
+use super::{Forest, MarkSet, Node, SeedableSequence, Sequence, VertexId};
 
 #[derive(Default)]
 pub struct NaiveForest {
@@ -108,9 +113,174 @@ impl Forest for NaiveForest {
     }
 }
 
+/// Naive splittable sequence: every sequence is a `Vec<Node>`, every query
+/// a linear scan. Implements the full augmented [`Sequence`] API including
+/// mark aggregates, which makes it the ground truth the balanced backends
+/// are property-tested against.
+#[derive(Default)]
+pub struct NaiveSeq {
+    /// node → index into `seqs` (usize::MAX when free)
+    seq_of: Vec<usize>,
+    seqs: Vec<Vec<Node>>,
+    mk: Vec<MarkSet>,
+    free: Vec<Node>,
+}
+
+impl NaiveSeq {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn pos(&self, x: Node) -> (usize, usize) {
+        let si = self.seq_of[x as usize];
+        let at = self.seqs[si].iter().position(|&y| y == x).unwrap();
+        (si, at)
+    }
+
+    /// Drop sequence slot `si`, keeping `seqs` dense.
+    fn remove_seq(&mut self, si: usize) {
+        self.seqs.swap_remove(si);
+        if si < self.seqs.len() {
+            for &y in &self.seqs[si] {
+                self.seq_of[y as usize] = si;
+            }
+        }
+    }
+}
+
+impl Sequence for NaiveSeq {
+    fn new_node(&mut self) -> Node {
+        let x = if let Some(x) = self.free.pop() {
+            self.mk[x as usize] = 0;
+            x
+        } else {
+            self.seq_of.push(usize::MAX);
+            self.mk.push(0);
+            (self.seq_of.len() - 1) as Node
+        };
+        self.seq_of[x as usize] = self.seqs.len();
+        self.seqs.push(vec![x]);
+        x
+    }
+
+    fn free_node(&mut self, x: Node) {
+        let si = self.seq_of[x as usize];
+        assert_eq!(self.seqs[si].len(), 1, "free_node: node {x} is not a singleton");
+        self.remove_seq(si);
+        self.seq_of[x as usize] = usize::MAX;
+        self.free.push(x);
+    }
+
+    fn seq_id(&self, x: Node) -> u64 {
+        // canonical: the current first element (stable between mutations)
+        self.seqs[self.seq_of[x as usize]][0] as u64
+    }
+
+    fn seq_len(&self, x: Node) -> usize {
+        self.seqs[self.seq_of[x as usize]].len()
+    }
+
+    fn first_of_seq(&self, x: Node) -> Node {
+        self.seqs[self.seq_of[x as usize]][0]
+    }
+
+    fn prev(&self, x: Node) -> Option<Node> {
+        let (si, at) = self.pos(x);
+        if at == 0 {
+            None
+        } else {
+            Some(self.seqs[si][at - 1])
+        }
+    }
+
+    fn next(&self, x: Node) -> Option<Node> {
+        let (si, at) = self.pos(x);
+        self.seqs[si].get(at + 1).copied()
+    }
+
+    fn split_before(&mut self, x: Node) {
+        let (si, at) = self.pos(x);
+        if at == 0 {
+            return;
+        }
+        let right = self.seqs[si].split_off(at);
+        let ni = self.seqs.len();
+        for &y in &right {
+            self.seq_of[y as usize] = ni;
+        }
+        self.seqs.push(right);
+    }
+
+    fn split_after(&mut self, x: Node) {
+        let (si, at) = self.pos(x);
+        if at + 1 == self.seqs[si].len() {
+            return;
+        }
+        let right = self.seqs[si].split_off(at + 1);
+        let ni = self.seqs.len();
+        for &y in &right {
+            self.seq_of[y as usize] = ni;
+        }
+        self.seqs.push(right);
+    }
+
+    fn concat(&mut self, a: Node, b: Node) {
+        let sb = self.seq_of[b as usize];
+        assert_ne!(self.seq_of[a as usize], sb, "concat within one sequence");
+        let bs = std::mem::take(&mut self.seqs[sb]);
+        self.remove_seq(sb);
+        // re-read: the removal may have moved a's sequence slot
+        let sa = self.seq_of[a as usize];
+        for &y in &bs {
+            self.seq_of[y as usize] = sa;
+        }
+        self.seqs[sa].extend(bs);
+    }
+
+    fn live_nodes(&self) -> usize {
+        self.seq_of.len() - self.free.len()
+    }
+
+    fn marks(&self, x: Node) -> MarkSet {
+        self.mk[x as usize]
+    }
+
+    fn set_marks(&mut self, x: Node, marks: MarkSet) {
+        self.mk[x as usize] = marks;
+    }
+
+    fn seq_marks(&self, x: Node) -> MarkSet {
+        self.seqs[self.seq_of[x as usize]]
+            .iter()
+            .fold(0, |a, &y| a | self.mk[y as usize])
+    }
+
+    fn find_marked(&self, x: Node, kind: MarkSet) -> Option<Node> {
+        self.seqs[self.seq_of[x as usize]]
+            .iter()
+            .copied()
+            .find(|&y| self.mk[y as usize] & kind != 0)
+    }
+}
+
+impl SeedableSequence for NaiveSeq {
+    fn from_seed(_seed: u64) -> Self {
+        NaiveSeq::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn naive_seq_matches_vec_oracle() {
+        use crate::util::proptest::{run_prop, Gen};
+        run_prop("naive seq oracle", 60, |g: &mut Gen| {
+            let mut s = NaiveSeq::new();
+            crate::ett::testutil::sequence_oracle_scenario(&mut s, g);
+        });
+    }
 
     #[test]
     fn naive_basics() {

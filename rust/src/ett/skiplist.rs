@@ -15,10 +15,17 @@
 //!                       sentinel with recomputed widths.
 //! * `concat(a, b)`    — a top-down right walk from A's sentinel finds the
 //!                       per-level tails; B's sentinel is spliced out.
+//!
+//! Mark aggregates: every forward link also carries the OR of node marks
+//! over its span (the node plus everything up to its successor at that
+//! level), so the per-level spans partition the sequence and
+//! `seq_marks`/`find_marked` run along the same walks as ids and widths.
+//! Split/concat repair exactly the boundary spans, bottom-up (`O(log n)`);
+//! a mark-free sequence (`any_marks == false`) skips the repair entirely.
 
 use crate::util::rng::Rng;
 
-use super::{Node, Sequence, NIL};
+use super::{MarkSet, Node, SeedableSequence, Sequence, NIL};
 
 /// Maximum tower height (supports sequences of ~2²⁶ elements; tours are
 /// 3v−2 elements so this covers ~2·10⁷ vertices per tree).
@@ -30,9 +37,15 @@ struct Lvl {
     next: Node,
     /// level-0 steps spanned by the `next` link (0 when next == NIL).
     width: u32,
+    /// OR of node marks over this link's **span**: the node itself plus
+    /// every element strictly between it and its level-ℓ successor (to the
+    /// end of the sequence when `next == NIL`). Per level, the spans of
+    /// the nodes present at that level partition the sequence, so the
+    /// sequence aggregate is the OR along the sentinel's top-level chain.
+    agg: MarkSet,
 }
 
-const EMPTY_LVL: Lvl = Lvl { prev: NIL, next: NIL, width: 0 };
+const EMPTY_LVL: Lvl = Lvl { prev: NIL, next: NIL, width: 0, agg: 0 };
 
 /// Node header; the tower's `h` levels live contiguously in the arena at
 /// `[base, base + h)`. Flat storage removes a pointer indirection per level
@@ -43,6 +56,8 @@ struct SNode {
     base: u32,
     h: u8,
     sentinel: bool,
+    /// node-local marks (aggregated into the tower spans above)
+    marks: MarkSet,
 }
 
 pub struct SkipSeq {
@@ -53,6 +68,10 @@ pub struct SkipSeq {
     free_by_h: Vec<Vec<Node>>,
     rng: Rng,
     live: usize,
+    /// false until the first nonzero mark: while unset, every span
+    /// aggregate is trivially 0 and split/concat skip the repair pass, so
+    /// mark-free users (the flat connectivity modes) pay nothing.
+    any_marks: bool,
 }
 
 impl SkipSeq {
@@ -63,6 +82,7 @@ impl SkipSeq {
             free_by_h: vec![Vec::new(); MAX_H + 1],
             rng: Rng::new(seed),
             live: 0,
+            any_marks: false,
         }
     }
 
@@ -92,12 +112,36 @@ impl SkipSeq {
             let base = self.n[x as usize].base as usize;
             self.lvs[base..base + height].fill(EMPTY_LVL);
             self.n[x as usize].sentinel = sentinel;
+            self.n[x as usize].marks = 0;
             return x;
         }
         let base = self.lvs.len() as u32;
         self.lvs.extend(std::iter::repeat(EMPTY_LVL).take(height));
-        self.n.push(SNode { base, h: height as u8, sentinel });
+        self.n.push(SNode { base, h: height as u8, sentinel, marks: 0 });
         (self.n.len() - 1) as Node
+    }
+
+    /// Recompute the aggregate of x's level-`l` link from the level below
+    /// (level 0 reads the node marks). Expected O(1): the level-(l−1)
+    /// sub-chain inside one level-l span has geometric length.
+    fn recompute_agg(&mut self, x: Node, l: usize) {
+        let agg = if l == 0 {
+            self.n[x as usize].marks
+        } else {
+            let stop = self.lv(x, l).next;
+            let mut a: MarkSet = 0;
+            let mut y = x;
+            loop {
+                let lvl = self.lv(y, l - 1);
+                a |= lvl.agg;
+                if lvl.next == stop || lvl.next == NIL {
+                    break;
+                }
+                y = lvl.next;
+            }
+            a
+        };
+        self.lv_mut(x, l).agg = agg;
     }
 
     fn release(&mut self, x: Node) {
@@ -177,8 +221,8 @@ impl Sequence for SkipSeq {
         let x = self.alloc(height, false);
         let s = self.alloc(MAX_H, true);
         for l in 0..height {
-            *self.lv_mut(s, l) = Lvl { prev: NIL, next: x, width: 1 };
-            *self.lv_mut(x, l) = Lvl { prev: s, next: NIL, width: 0 };
+            *self.lv_mut(s, l) = Lvl { prev: NIL, next: x, width: 1, agg: 0 };
+            *self.lv_mut(x, l) = Lvl { prev: s, next: NIL, width: 0, agg: 0 };
         }
         self.live += 1;
         x
@@ -246,7 +290,7 @@ impl Sequence for SkipSeq {
                 let plv = self.lv_mut(p, l);
                 plv.next = NIL;
                 plv.width = 0;
-                *self.lv_mut(s2, l) = Lvl { prev: NIL, next: x, width: 1 };
+                *self.lv_mut(s2, l) = Lvl { prev: NIL, next: x, width: 1, agg: 0 };
                 self.lv_mut(x, l).prev = s2;
             } else {
                 let (a, da) = anchors[l];
@@ -262,8 +306,22 @@ impl Sequence for SkipSeq {
                 let alv = self.lv_mut(a, l);
                 alv.next = NIL;
                 alv.width = 0;
-                *self.lv_mut(s2, l) = Lvl { prev: NIL, next: c, width: w_right };
+                *self.lv_mut(s2, l) =
+                    Lvl { prev: NIL, next: c, width: w_right, agg: 0 };
                 self.lv_mut(c, l).prev = s2;
+            }
+        }
+        if self.any_marks {
+            // Repair the span aggregates bottom-up. On the left side only
+            // the per-level anchors changed spans (they now run to the end
+            // of the left sequence; links below x's height kept their span
+            // [p, x) = [p, end-of-left) verbatim). On the right side the
+            // fresh sentinel's tower is rebuilt from the levels below.
+            for l in 0..MAX_H {
+                if l >= hx {
+                    self.recompute_agg(anchors[l].0, l);
+                }
+                self.recompute_agg(s2, l);
             }
         }
         let _ = pos_x;
@@ -295,10 +353,87 @@ impl Sequence for SkipSeq {
             self.lv_mut(f, l).prev = t;
         }
         self.release(sb);
+        if self.any_marks {
+            // Every per-level tail of A changed span (it now extends into
+            // B, whether or not a link was spliced at that level); B-side
+            // spans are untouched. Bottom-up, as each level reads the one
+            // below.
+            for l in 0..MAX_H {
+                self.recompute_agg(tails[l].0, l);
+            }
+        }
     }
 
     fn live_nodes(&self) -> usize {
         self.live
+    }
+
+    fn marks(&self, x: Node) -> MarkSet {
+        self.n[x as usize].marks
+    }
+
+    fn set_marks(&mut self, x: Node, marks: MarkSet) {
+        debug_assert!(!self.n[x as usize].sentinel);
+        if self.n[x as usize].marks == marks {
+            return;
+        }
+        self.n[x as usize].marks = marks;
+        if marks != 0 {
+            self.any_marks = true;
+        }
+        if !self.any_marks {
+            return;
+        }
+        // the spans containing x are exactly the per-level anchors of the
+        // up-left walk; repair them bottom-up
+        let mut anchors = [(NIL, 0u32); MAX_H];
+        self.walk_up_left(x, Some(&mut anchors));
+        for l in 0..MAX_H {
+            self.recompute_agg(anchors[l].0, l);
+        }
+    }
+
+    fn seq_marks(&self, x: Node) -> MarkSet {
+        let s = self.sentinel_of(x);
+        let mut a: MarkSet = 0;
+        let mut y = s;
+        loop {
+            let lvl = self.lv(y, MAX_H - 1);
+            a |= lvl.agg;
+            if lvl.next == NIL {
+                return a;
+            }
+            y = lvl.next;
+        }
+    }
+
+    fn find_marked(&self, x: Node, kind: MarkSet) -> Option<Node> {
+        let mut cur = self.sentinel_of(x);
+        let mut l = MAX_H - 1;
+        loop {
+            // scan right for the first span whose aggregate carries `kind`
+            while cur != NIL && self.lv(cur, l).agg & kind == 0 {
+                cur = self.lv(cur, l).next;
+            }
+            if cur == NIL {
+                return None; // only reachable from the top level
+            }
+            // `cur` opens its span, so if it is marked it is the first hit
+            // (the sentinel itself never carries marks)
+            if self.n[cur as usize].marks & kind != 0 {
+                return Some(cur);
+            }
+            debug_assert!(l > 0, "level-0 aggregate equals the node marks");
+            l -= 1;
+            // descend: the hit lies inside cur's span, so the level-(l−1)
+            // rescan from cur stops before leaving it
+        }
+    }
+}
+
+impl SeedableSequence for SkipSeq {
+    fn from_seed(seed: u64) -> Self {
+        SkipSeq::new(seed)
     }
 }
 

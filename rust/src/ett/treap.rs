@@ -6,11 +6,14 @@
 //! sequence id) in `O(log n)` expected, and a subtree size so sequence
 //! lengths are `O(1)` at the root. `split_before`/`split_after` are "finger"
 //! splits that walk from the element up to the root, accumulating left and
-//! right fragments; `concat` is a standard priority merge.
+//! right fragments; `concat` is a standard priority merge. Mark aggregates
+//! piggyback on the same `update` discipline as `size`: every node carries
+//! an OR of its subtree's marks, so `find_marked` is a plain root-to-leaf
+//! descent.
 
 use crate::util::rng::Rng;
 
-use super::{Node, Sequence, NIL};
+use super::{MarkSet, Node, SeedableSequence, Sequence, NIL};
 
 struct TNode {
     left: Node,
@@ -18,6 +21,11 @@ struct TNode {
     parent: Node,
     pri: u64,
     size: u32,
+    /// node-local marks
+    marks: MarkSet,
+    /// OR of marks over this node's subtree (maintained by `update`,
+    /// exactly like `size`)
+    agg: MarkSet,
 }
 
 pub struct TreapSeq {
@@ -42,10 +50,23 @@ impl TreapSeq {
     }
 
     #[inline]
+    fn subagg(&self, x: Node) -> MarkSet {
+        if x == NIL {
+            0
+        } else {
+            self.n[x as usize].agg
+        }
+    }
+
+    #[inline]
     fn update(&mut self, x: Node) {
         let l = self.n[x as usize].left;
         let r = self.n[x as usize].right;
-        self.n[x as usize].size = 1 + self.size(l) + self.size(r);
+        let size = 1 + self.size(l) + self.size(r);
+        let agg = self.n[x as usize].marks | self.subagg(l) | self.subagg(r);
+        let nd = &mut self.n[x as usize];
+        nd.size = size;
+        nd.agg = agg;
     }
 
     fn root_of(&self, mut x: Node) -> Node {
@@ -108,12 +129,20 @@ impl Sequence for TreapSeq {
     fn new_node(&mut self) -> Node {
         let pri = self.rng.next_u64();
         self.live += 1;
+        let fresh = TNode {
+            left: NIL,
+            right: NIL,
+            parent: NIL,
+            pri,
+            size: 1,
+            marks: 0,
+            agg: 0,
+        };
         if let Some(x) = self.free.pop() {
-            self.n[x as usize] =
-                TNode { left: NIL, right: NIL, parent: NIL, pri, size: 1 };
+            self.n[x as usize] = fresh;
             x
         } else {
-            self.n.push(TNode { left: NIL, right: NIL, parent: NIL, pri, size: 1 });
+            self.n.push(fresh);
             (self.n.len() - 1) as Node
         }
     }
@@ -247,6 +276,53 @@ impl Sequence for TreapSeq {
 
     fn live_nodes(&self) -> usize {
         self.live
+    }
+
+    fn marks(&self, x: Node) -> MarkSet {
+        self.n[x as usize].marks
+    }
+
+    fn set_marks(&mut self, x: Node, marks: MarkSet) {
+        self.n[x as usize].marks = marks;
+        let mut cur = x;
+        loop {
+            self.update(cur);
+            let p = self.n[cur as usize].parent;
+            if p == NIL {
+                break;
+            }
+            cur = p;
+        }
+    }
+
+    fn seq_marks(&self, x: Node) -> MarkSet {
+        self.n[self.root_of(x) as usize].agg
+    }
+
+    fn find_marked(&self, x: Node, kind: MarkSet) -> Option<Node> {
+        let mut cur = self.root_of(x);
+        if self.n[cur as usize].agg & kind == 0 {
+            return None;
+        }
+        // descend left-first: the result is the first marked node in
+        // sequence order
+        loop {
+            let nd = &self.n[cur as usize];
+            if nd.left != NIL && self.n[nd.left as usize].agg & kind != 0 {
+                cur = nd.left;
+            } else if nd.marks & kind != 0 {
+                return Some(cur);
+            } else {
+                debug_assert_ne!(nd.right, NIL, "aggregate promised a marked node");
+                cur = nd.right;
+            }
+        }
+    }
+}
+
+impl SeedableSequence for TreapSeq {
+    fn from_seed(seed: u64) -> Self {
+        TreapSeq::new(seed)
     }
 }
 

@@ -14,6 +14,7 @@ use std::thread::JoinHandle;
 
 use rustc_hash::FxHashMap;
 
+use crate::dbscan::RepairStats;
 use crate::util::stats::LatencyHisto;
 
 use super::router::Router;
@@ -55,6 +56,23 @@ pub struct EngineOutcome {
     /// add latency merged across shards (ghost inserts included)
     pub add_latency: LatencyHisto,
     pub delete_latency: LatencyHisto,
+}
+
+impl EngineOutcome {
+    /// Connectivity-layer counters aggregated across shards (counters
+    /// summed; `levels` is the deepest per-shard HDT hierarchy).
+    pub fn conn_stats(&self) -> RepairStats {
+        let mut total = RepairStats::default();
+        for r in &self.worker_reports {
+            total.nt_edges += r.conn.nt_edges;
+            total.searches += r.conn.searches;
+            total.replacements += r.conn.replacements;
+            total.visited += r.conn.visited;
+            total.pushes += r.conn.pushes;
+            total.levels = total.levels.max(r.conn.levels);
+        }
+        total
+    }
 }
 
 /// S parallel `DynamicDbscan` instances behind a deterministic spatial

@@ -23,7 +23,7 @@ use std::time::Instant;
 
 use rustc_hash::FxHashMap;
 
-use crate::dbscan::{DbscanConfig, DynamicDbscan};
+use crate::dbscan::{DbscanConfig, DynamicDbscan, RepairStats};
 use crate::lsh::table::PointId;
 use crate::lsh::BucketKey;
 use crate::util::stats::LatencyHisto;
@@ -122,6 +122,9 @@ pub struct WorkerReport {
     pub delete_latency: LatencyHisto,
     /// wall time spent applying ops (excludes channel waits)
     pub busy_s: f64,
+    /// this shard's connectivity-layer counters (replacement searches,
+    /// HDT level pushes, live levels — see `dbscan::RepairStats`)
+    pub conn: RepairStats,
 }
 
 /// Worker loop: runs until the op channel disconnects. Snapshot sends are
@@ -146,6 +149,7 @@ pub fn run_worker(
         add_latency: LatencyHisto::new(),
         delete_latency: LatencyHisto::new(),
         busy_s: 0.0,
+        conn: RepairStats::default(),
     };
     for batch in rx.iter() {
         let t0 = Instant::now();
@@ -212,5 +216,6 @@ pub fn run_worker(
         }
         report.busy_s += t0.elapsed().as_secs_f64();
     }
+    report.conn = db.repair_stats();
     report
 }

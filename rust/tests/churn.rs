@@ -1,15 +1,18 @@
-//! Churn property tests for the arena-backed point store: heavy
-//! interleaved add/delete streams exercise slot reuse, then the structure
-//! is checked against a from-scratch realization of Definition 4 over the
+//! Churn property tests for the arena-backed point store and the leveled
+//! connectivity default: heavy interleaved add/delete streams exercise
+//! slot reuse, the Theorem-2 counterexample class and deep-chain deletion
+//! schedules exercise the HDT replacement search, then the structure is
+//! checked against a from-scratch realization of Definition 4 over the
 //! same hash functions (exact-collision-graph baseline — core partitions
-//! must match with ARI = 1.0), and drained to zero to prove the arena and
-//! the forest leak nothing.
+//! must match with ARI = 1.0), and drained to zero to prove the arena,
+//! the forest AND every per-level HDT forest leak nothing.
 
 use dyn_dbscan::baselines::unionfind::UnionFind;
 use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
 use dyn_dbscan::lsh::GridHasher;
 use dyn_dbscan::metrics::adjusted_rand_index;
 use dyn_dbscan::util::proptest::{run_prop, Gen};
+use dyn_dbscan::util::rng::Rng;
 use rustc_hash::FxHashMap;
 
 /// Static Definition-4 core set + core components with externally supplied
@@ -153,6 +156,11 @@ fn churn_with_slot_reuse_matches_bruteforce_baseline() {
         assert_eq!(db.num_core_points(), 0);
         assert_eq!(db.live_slots(), 0, "arena slots leaked after full drain");
         assert_eq!(db.live_vertices(), 0, "forest vertices leaked after full drain");
+        let per_level = db.conn_level_live();
+        assert!(
+            per_level.iter().all(|&c| c == 0),
+            "per-level forest leak after full drain: {per_level:?}"
+        );
         db.verify().unwrap();
 
         // refill within the old high-water mark: slots must be reused
@@ -167,4 +175,104 @@ fn churn_with_slot_reuse_matches_bruteforce_baseline() {
             "refill below the high-water mark must reuse free-listed slots"
         );
     });
+}
+
+/// The Theorem-2 counterexample workload class (k = 2, t = 2, 1-D — the
+/// family in which the paper's verbatim Algorithm 2 provably violates
+/// Theorem 2, see `dbscan::connectivity`) driven against the default
+/// `LeveledConn`: the brute-force Definition-4 oracle must agree after
+/// every burst, the machine-checked invariants must hold after every op,
+/// and the full drain must empty every per-level HDT forest.
+#[test]
+fn theorem2_counterexample_class_on_leveled_default() {
+    let cfg = DbscanConfig { k: 2, t: 2, eps: 0.4, dim: 1, eager_attach: false };
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let mut db = DynamicDbscan::new(cfg.clone(), seed);
+        let mut pts: Vec<Vec<f32>> = Vec::new();
+        let mut ids: Vec<u64> = Vec::new();
+        let mut alive: Vec<usize> = Vec::new();
+        for op in 0..60 {
+            if alive.is_empty() || rng.coin(0.65) {
+                let c = rng.below(3) as f64 * 3.0;
+                let p = vec![(c + rng.uniform(-0.5, 0.5)) as f32];
+                ids.push(db.add_point(&p));
+                pts.push(p);
+                alive.push(ids.len() - 1);
+            } else {
+                let i = rng.below_usize(alive.len());
+                let j = alive.swap_remove(i);
+                db.delete_point(ids[j]);
+            }
+            db.verify()
+                .unwrap_or_else(|e| panic!("seed {seed} op {op}: {e}"));
+        }
+        assert_matches_oracle(&db, &pts, &ids, &alive, "counterexample class");
+        while let Some(j) = alive.pop() {
+            db.delete_point(ids[j]);
+        }
+        let per_level = db.conn_level_live();
+        assert!(
+            per_level.iter().all(|&c| c == 0),
+            "seed {seed}: per-level forest leak after drain: {per_level:?}"
+        );
+        db.verify().unwrap();
+    }
+}
+
+/// Deep-chain deletion schedule: a 1-D bucket chain (spacing 0.1, bucket
+/// width 2ε = 0.8 ⇒ ~8 consecutive points per bucket, all core, chained
+/// into one long path-shaped component) with repeated mid-chain **block**
+/// deletions. Each block (width 1.2 > any bucket) genuinely splits the
+/// component — the replacement-search worst case that drives the HDT
+/// hierarchy. The Definition-4 oracle must agree after every round and
+/// the final drain must empty every per-level forest.
+#[test]
+fn deep_chain_block_deletions_match_oracle_and_drain() {
+    let cfg = DbscanConfig { k: 6, t: 3, eps: 0.4, dim: 1, eager_attach: false };
+    for seed in [1u64, 7, 23] {
+        let mut db = DynamicDbscan::new(cfg.clone(), seed);
+        let n = 320usize;
+        let pts: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32 * 0.1]).collect();
+        let mut ids: Vec<u64> = pts.iter().map(|p| db.add_point(p)).collect();
+        let mut rng = Rng::new(seed ^ 0xC4A1);
+        let block = 12usize;
+        for round in 0..12 {
+            let start = 40 + rng.below_usize(n - 80 - block);
+            for i in start..start + block {
+                db.delete_point(ids[i]);
+            }
+            db.verify()
+                .unwrap_or_else(|e| panic!("seed {seed} round {round}: {e}"));
+            let alive: Vec<usize> =
+                (0..n).filter(|i| !(start..start + block).contains(i)).collect();
+            assert_matches_oracle(&db, &pts, &ids, &alive, "chain gap");
+            for i in start..start + block {
+                ids[i] = db.add_point(&pts[i]);
+            }
+            db.verify()
+                .unwrap_or_else(|e| panic!("seed {seed} round {round} refill: {e}"));
+        }
+        // the schedule must actually have exercised the level hierarchy
+        let st = db.repair_stats();
+        assert!(
+            st.levels >= 2,
+            "seed {seed}: chain churn should grow ≥ 2 levels, got {}",
+            st.levels
+        );
+        assert!(st.pushes > 0, "seed {seed}: no edges were ever pushed up");
+        // drain: the arena, the spanning forest and every per-level
+        // forest must all empty
+        for &id in &ids {
+            db.delete_point(id);
+        }
+        assert_eq!(db.num_points(), 0);
+        assert_eq!(db.live_slots(), 0);
+        let per_level = db.conn_level_live();
+        assert!(
+            per_level.iter().all(|&c| c == 0),
+            "seed {seed}: per-level forest leak after drain: {per_level:?}"
+        );
+        db.verify().unwrap();
+    }
 }

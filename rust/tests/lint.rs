@@ -45,3 +45,33 @@ fn shard_insert_path_has_no_per_op_coord_vec() {
          append to the pending ShardBatch's flat buffer instead"
     );
 }
+
+/// The connectivity hot path must never fall back to an unbounded
+/// full-component tour walk: `Forest::component_vertices` is
+/// `O(component size)` and exists solely for the legacy `RepairConn`
+/// ablation. The leveled default and the DBSCAN core must reach
+/// replacement candidates through the `O(log n)` mark aggregates
+/// (`find_marked_vertex` / `find_marked_edge`) instead.
+#[test]
+fn no_component_walk_outside_the_repair_ablation() {
+    for (name, src) in [
+        ("dbscan/leveled.rs", include_str!("../src/dbscan/leveled.rs")),
+        ("dbscan/mod.rs", include_str!("../src/dbscan/mod.rs")),
+        ("dbscan/arena.rs", include_str!("../src/dbscan/arena.rs")),
+        ("shard/worker.rs", include_str!("../src/shard/worker.rs")),
+    ] {
+        assert!(
+            !src.contains("component_vertices"),
+            "{name} walks a full component tour on the hot path; \
+             use the mark-aggregate searches instead"
+        );
+    }
+    // connectivity.rs keeps exactly one call site: RepairConn::replace
+    let conn = include_str!("../src/dbscan/connectivity.rs");
+    assert_eq!(
+        conn.matches("component_vertices").count(),
+        1,
+        "connectivity.rs must keep component_vertices confined to the \
+         single legacy RepairConn::replace call site"
+    );
+}
