@@ -67,6 +67,8 @@ fn main() {
         out.engine.snapshot.shard_live
     );
     println!("         add latency: {}", out.engine.add_latency.summary());
+    // delta publishes: O(changed points) each, not O(live points)
+    println!("         publish latency: {}", out.engine.publish_latency.summary());
     let snap = &out.engine.snapshot;
     let top: Vec<String> = snap
         .cluster_sizes

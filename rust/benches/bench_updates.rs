@@ -32,7 +32,8 @@ use dyn_dbscan::bench_harness::{repo_root_file, write_json, Table};
 use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
 use dyn_dbscan::data::Dataset;
 use dyn_dbscan::dbscan::{Connectivity, DbscanConfig, DynamicDbscan, Op, RepairStats};
-use dyn_dbscan::shard::{ShardConfig, ShardedEngine};
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::shard::{ShardConfig, ShardedEngine, StitchMode};
 use dyn_dbscan::util::json::Json;
 use dyn_dbscan::util::rng::Rng;
 use dyn_dbscan::util::stats::LatencyHisto;
@@ -107,12 +108,15 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
         // tiny end-to-end pass: runs the throughput bench and validates the
-        // JSON artifact it writes (the CI gate for the perf trajectory).
-        // Writes to a scratch path so a local smoke run never clobbers the
-        // committed full-scale BENCH_updates.json.
+        // JSON artifact it writes (the CI gate for the perf trajectory),
+        // plus the shards=1 bypass parity gate. Writes to a scratch path so
+        // a local smoke run never clobbers the committed full-scale
+        // BENCH_updates.json.
         let path = std::env::temp_dir().join("BENCH_updates.smoke.json");
-        update_throughput(1_500, &[1, 2], (800, 4), &path);
+        let publish = (&[400usize, 1_200][..], 5, 80);
+        update_throughput(1_500, &[1, 2], (800, 4), publish, &path);
         validate_updates_json(&path);
+        assert_shards1_parity();
         println!("smoke OK: {} is valid", path.display());
         return;
     }
@@ -161,8 +165,52 @@ fn main() {
 
     let n = if quick { 50_000 } else { 200_000 };
     let chain = if quick { (50_000, 150) } else { (200_000, 150) };
-    update_throughput(n, &[1, 2, 4, 8], chain, &repo_root_file("BENCH_updates.json"));
+    // publish-latency axis always spans 50k→500k live points: delta
+    // publishes must stay flat while the full rebuild grows linearly
+    // (the acceptance gate of the delta-snapshot PR)
+    let publish = (&[50_000usize, 200_000, 500_000][..], 40, 2_000);
+    update_throughput(
+        n,
+        &[1, 2, 4, 8],
+        chain,
+        publish,
+        &repo_root_file("BENCH_updates.json"),
+    );
     shard_sweep(n);
+}
+
+/// shards=1 bypass parity gate: the inline single-shard engine must
+/// reproduce the single-instance clustering exactly (same seed, same
+/// hashing, no ghosts) — the regression this PR fixes was S=1 paying
+/// pipeline tax for identical output.
+fn assert_shards1_parity() {
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: 800,
+            dim: 4,
+            clusters: 4,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        3,
+    );
+    let cfg = DbscanConfig { k: 8, t: 8, eps: 0.75, dim: 4, ..Default::default() };
+    let mut db = DynamicDbscan::new(cfg.clone(), 42);
+    let ids: Vec<u64> = (0..ds.n()).map(|i| db.add_point(ds.point(i))).collect();
+    let single = db.labels_for(&ids);
+    let mut eng = ShardedEngine::new(ShardConfig::new(cfg, 1, 42));
+    for i in 0..ds.n() {
+        eng.insert(i as u64, ds.point(i));
+    }
+    let out = eng.finish();
+    assert_eq!(out.stats.ghost_inserts, 0, "S=1 must not replicate");
+    let sharded: Vec<i64> = (0..ds.n() as u64)
+        .map(|e| out.snapshot.cluster_of(e).expect("live ext labeled"))
+        .collect();
+    let ari = adjusted_rand_index(&single, &sharded);
+    assert!((ari - 1.0).abs() < 1e-9, "shards=1 parity broken: ARI {ari}");
+    println!("smoke OK: shards=1 inline path matches single instance (ARI {ari:.3})");
 }
 
 // ---------------------------------------------------------------------
@@ -431,14 +479,123 @@ fn chain_churn_section(n: usize, rounds: usize) -> Json {
     ])
 }
 
+// ---------------------------------------------------------------------
+// snapshot publish latency: delta vs full rebuild, vs live-set size
+// ---------------------------------------------------------------------
+
+/// Publish-latency axis: at each live size, build one engine per
+/// [`StitchMode`], then measure `publish` over `rounds` rounds of a
+/// fixed-size churn batch (`churn` ops, half deletes half inserts, live
+/// size constant). `quiesce` barriers before each timing so op
+/// application is excluded — what's measured is exactly the
+/// snapshot-emission cost: `O(Δ·log²n)` for delta (flat in live points at
+/// fixed Δ), `O(n log n)` for the rebuild fallback (linear).
+fn snapshot_publish_section(sizes: &[usize], rounds: usize, churn: usize) -> Json {
+    let shards = 4usize;
+    let mut table = Table::new(
+        "snapshot publish: delta vs full rebuild (µs per publish, fixed Δ)",
+        &["live", "delta p50", "delta p99", "rebuild p50", "rebuild p99"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in sizes {
+        let total = n + rounds * churn.div_ceil(2);
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: total,
+                dim: DIM,
+                clusters: 24,
+                std: 0.3,
+                center_box: 60.0,
+                weights: vec![],
+            },
+            7,
+        );
+        let cfg =
+            DbscanConfig { k: 10, t: 10, eps: 0.75, dim: DIM, ..Default::default() };
+        let mut histos: Vec<LatencyHisto> = Vec::new();
+        for mode in [StitchMode::Delta, StitchMode::FullRebuild] {
+            let mut scfg = ShardConfig::new(cfg.clone(), shards, 42);
+            scfg.stitch = mode;
+            let mut eng = ShardedEngine::new(scfg);
+            let mut rng = Rng::new(0x5EED ^ n as u64);
+            let mut live: Vec<u64> = Vec::with_capacity(n);
+            for i in 0..n {
+                eng.insert(i as u64, ds.point(i));
+                live.push(i as u64);
+                if (i + 1) % 1000 == 0 {
+                    eng.flush();
+                }
+            }
+            eng.quiesce();
+            eng.publish(); // prime: the first delta report ships full state
+            let mut histo = LatencyHisto::new();
+            let mut next = n;
+            for _ in 0..rounds {
+                let half = churn / 2;
+                for _ in 0..half {
+                    let i = rng.below_usize(live.len());
+                    let e = live.swap_remove(i);
+                    eng.delete(e);
+                }
+                for _ in 0..half {
+                    eng.insert(next as u64, ds.point(next));
+                    live.push(next as u64);
+                    next += 1;
+                }
+                // barrier so the timing below is publication only
+                eng.quiesce();
+                let t0 = Instant::now();
+                let snap = eng.publish();
+                histo.record(t0.elapsed().as_nanos() as u64);
+                std::hint::black_box(snap.clusters);
+            }
+            histos.push(histo);
+            let _ = eng.finish();
+        }
+        let (delta, rebuild) = (&histos[0], &histos[1]);
+        table.row(vec![
+            n.to_string(),
+            format!("{:.0}", delta.quantile(0.5) as f64 / 1e3),
+            format!("{:.0}", delta.quantile(0.99) as f64 / 1e3),
+            format!("{:.0}", rebuild.quantile(0.5) as f64 / 1e3),
+            format!("{:.0}", rebuild.quantile(0.99) as f64 / 1e3),
+        ]);
+        let mut fields = vec![("live", Json::num(n as f64))];
+        push_histo_fields(
+            &mut fields,
+            ["delta_publish_p50_ns", "delta_publish_p99_ns", "delta_publish_mean_ns"],
+            delta,
+        );
+        push_histo_fields(
+            &mut fields,
+            [
+                "rebuild_publish_p50_ns",
+                "rebuild_publish_p99_ns",
+                "rebuild_publish_mean_ns",
+            ],
+            rebuild,
+        );
+        rows.push(Json::obj(fields));
+    }
+    table.print();
+    Json::obj(vec![
+        ("shards", Json::num(shards as f64)),
+        ("rounds", Json::num(rounds as f64)),
+        ("churn_ops", Json::num(churn as f64)),
+        ("sizes", Json::Arr(rows)),
+    ])
+}
+
 /// Run the churn workload on every engine configuration (plus the
-/// adversarial chain-churn ablation sized by `chain = (n, rounds)`) and
-/// write the trajectory record to `out_path` (the repo-root
+/// adversarial chain-churn ablation sized by `chain = (n, rounds)` and
+/// the publish-latency axis sized by `publish = (sizes, rounds, churn)`)
+/// and write the trajectory record to `out_path` (the repo-root
 /// `BENCH_updates.json` in full runs, a scratch file under `--smoke`).
 fn update_throughput(
     n: usize,
     shard_counts: &[usize],
     chain: (usize, usize),
+    publish: (&[usize], usize, usize),
     out_path: &std::path::Path,
 ) {
     let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: DIM, ..Default::default() };
@@ -568,6 +725,7 @@ fn update_throughput(
     }
 
     let chain_section = chain_churn_section(chain.0, chain.1);
+    let publish_section = snapshot_publish_section(publish.0, publish.1, publish.2);
 
     let record = Json::obj(vec![
         ("bench", Json::str("updates_throughput")),
@@ -588,6 +746,7 @@ fn update_throughput(
         ("single", Json::obj(single_fields)),
         ("conn_ablation", Json::Arr(ablation)),
         ("chain_churn", chain_section),
+        ("snapshot_publish", publish_section),
         (
             "single_batched",
             Json::obj(vec![
@@ -658,6 +817,50 @@ fn validate_updates_json(path: &std::path::Path) {
         assert!(
             row.get("delete_p99_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
             "chain-churn row missing delete p99"
+        );
+    }
+    // publish-latency axis: both stitch modes at every live size
+    let pub_rows = j
+        .get("snapshot_publish")
+        .and_then(|p| p.get("sizes"))
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| {
+            panic!("missing snapshot_publish.sizes in {}", path.display())
+        });
+    assert!(pub_rows.len() >= 2, "publish axis needs >= 2 live sizes");
+    let mut lives = Vec::new();
+    let mut delta_p99 = Vec::new();
+    let mut rebuild_p99 = Vec::new();
+    for row in pub_rows {
+        for field in ["delta_publish_p99_ns", "rebuild_publish_p99_ns"] {
+            assert!(
+                row.get(field).and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+                "snapshot_publish row missing {field}"
+            );
+        }
+        lives.push(row.get("live").and_then(|v| v.as_f64()).unwrap_or(0.0));
+        delta_p99
+            .push(row.get("delta_publish_p99_ns").and_then(|v| v.as_f64()).unwrap());
+        rebuild_p99
+            .push(row.get("rebuild_publish_p99_ns").and_then(|v| v.as_f64()).unwrap());
+    }
+    // The delta-snapshot acceptance gate, on full-scale axes only (smoke
+    // sizes are scheduler-jitter-dominated): delta p99 stays inside a
+    // ±20% band across live sizes (max/min ≤ 1.5) while the rebuild p99
+    // grows with the live set (≥ 3× over a ≥ 4× size span).
+    let full_scale = lives.iter().all(|&l| l >= 50_000.0);
+    let size_span = lives.last().unwrap() / lives.first().unwrap();
+    if full_scale && size_span >= 4.0 {
+        let (lo, hi) = delta_p99
+            .iter()
+            .fold((f64::MAX, 0.0f64), |(lo, hi), &x| (lo.min(x), hi.max(x)));
+        assert!(
+            hi <= lo * 1.5,
+            "delta publish p99 not flat across live sizes: {delta_p99:?}"
+        );
+        assert!(
+            *rebuild_p99.last().unwrap() >= rebuild_p99[0] * 3.0,
+            "full rebuild p99 should grow with live points: {rebuild_p99:?}"
         );
     }
 }

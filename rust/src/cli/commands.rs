@@ -15,7 +15,7 @@ use crate::experiments::table2::run_table2;
 use crate::experiments::{env_runs, env_scale, PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
 use crate::runtime::Runtime;
 use crate::shard::driver::{final_quality_sharded, run_sharded, summarize_shard};
-use crate::shard::ShardConfig;
+use crate::shard::{ShardConfig, StitchMode};
 use crate::util::rng::Rng;
 
 use super::Args;
@@ -122,10 +122,15 @@ fn cmd_stream(args: &Args) -> Result<()> {
                  hash stage; sharded workers hash natively"
             );
         }
-        let scfg = ShardConfig::new(cfg, shards, seed);
+        let mut scfg = ShardConfig::new(cfg, shards, seed);
+        scfg.stitch = match args.get("stitch").unwrap_or("delta") {
+            "delta" => StitchMode::Delta,
+            "full-rebuild" | "full" => StitchMode::FullRebuild,
+            s => return Err(anyhow!("unknown stitch mode '{s}' (delta|full-rebuild)")),
+        };
         println!(
-            "apply stage: {shards} shards (block_side={}, ghost_margin={})",
-            scfg.block_side, scfg.ghost_margin
+            "apply stage: {shards} shards (block_side={}, ghost_margin={}, stitch={:?})",
+            scfg.block_side, scfg.ghost_margin, scfg.stitch
         );
         let labels = ds.labels.clone();
         let truth = move |e: u64| labels[e as usize];
@@ -149,8 +154,9 @@ fn cmd_stream(args: &Args) -> Result<()> {
             stats.deletes
         );
         println!("per-shard live (ghosts incl.): {:?}", out.engine.snapshot.shard_live);
-        println!("add    latency: {}", out.engine.add_latency.summary());
-        println!("delete latency: {}", out.engine.delete_latency.summary());
+        println!("add     latency: {}", out.engine.add_latency.summary());
+        println!("delete  latency: {}", out.engine.delete_latency.summary());
+        println!("publish latency: {}", out.engine.publish_latency.summary());
         return Ok(());
     }
     let mut engine = make_engine(&cfg, seed, kind)?;

@@ -103,8 +103,10 @@ COMMANDS:
                  --dataset blobs --scale 0.05 --batch 1000
                  --order random|clustered --engine native|xla
                  --snapshot-every 5 --window N (sliding-window deletes)
-                 --shards N (sharded parallel engine with cross-shard
-                 cluster stitching; reads served from published snapshots)
+                 --shards N (sharded parallel engine with incremental
+                 cross-shard stitching; reads served from published
+                 snapshots) --stitch delta|full-rebuild (delta: O(Δ)
+                 publishes, the default; full-rebuild: legacy O(n log n))
     verify     Run the Theorem-2 invariant checker on a random workload
                  --ops 2000 --seed 7
     info       List compiled AOT artifacts and their shapes

@@ -91,6 +91,32 @@ pub trait Connectivity {
     }
     /// Replacement-search counters (0 for the paper-exact mode).
     fn repair_stats(&self) -> RepairStats;
+
+    // ------------------------------------------------------------------
+    // stable component ids (delta-snapshot plumbing)
+    // ------------------------------------------------------------------
+
+    /// Enable stable-component tracking on an empty structure. Flat modes
+    /// ignore the request (they serve only the ablation benches);
+    /// [`super::leveled::LeveledConn`] implements it — the sharded
+    /// serving path's delta reports depend on it.
+    fn set_comp_tracking(&mut self, _on: bool) {}
+
+    /// Stable component identifier of `v`'s component. Unlike
+    /// [`Connectivity::root`] — which changes whenever the underlying
+    /// Euler tour restructures, even when no membership changed — this id
+    /// changes only on genuine component merges/splits, and only for the
+    /// vertices reported through [`Connectivity::drain_comp_changes`]
+    /// (merges keep the larger side's id, splits mint a fresh id for the
+    /// smaller side). Falls back to `root` when tracking is off.
+    fn comp_id(&self, v: VertexId) -> u64 {
+        self.root(v)
+    }
+
+    /// Drain the vertices whose stable component id changed since the
+    /// last drain (may repeat vertices and include since-removed ones —
+    /// consumers filter). No-op without tracking.
+    fn drain_comp_changes(&mut self, _f: &mut dyn FnMut(VertexId)) {}
 }
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

@@ -82,6 +82,18 @@ pub struct LeveledConn<S: SeedableSequence> {
     nt_count: usize,
     seed: u64,
     stats: RepairStats,
+    /// stable-component tracking (see [`Connectivity::comp_id`]): off by
+    /// default so the single-instance path pays nothing; the sharded
+    /// serving workers and the cross-shard stitch graph enable it
+    track_comps: bool,
+    /// stable component id per F0 vertex (valid only while tracking; slots
+    /// are overwritten on vertex-id reuse)
+    comp: Vec<u64>,
+    next_comp: u64,
+    /// vertices whose comp id changed since the last drain (duplicates and
+    /// since-removed vertices possible — consumers filter)
+    comp_changed: Vec<VertexId>,
+    comp_scratch: Vec<VertexId>,
 }
 
 impl<S: SeedableSequence> LeveledConn<S> {
@@ -93,7 +105,41 @@ impl<S: SeedableSequence> LeveledConn<S> {
             nt_count: 0,
             seed,
             stats: RepairStats::default(),
+            track_comps: false,
+            comp: Vec::new(),
+            next_comp: 0,
+            comp_changed: Vec::new(),
+            comp_scratch: Vec::new(),
         }
+    }
+
+    fn fresh_comp(&mut self) -> u64 {
+        self.next_comp += 1;
+        self.next_comp
+    }
+
+    fn comp_set(&mut self, v: VertexId, c: u64) {
+        let i = v as usize;
+        if i >= self.comp.len() {
+            self.comp.resize(i + 1, 0);
+        }
+        self.comp[i] = c;
+    }
+
+    /// Move every vertex of `loser`'s F0 tree to component `to`, recording
+    /// the changes. O(loser-side size) — charged to the vertices whose
+    /// cluster identity genuinely changed (they must be relabeled by any
+    /// consumer regardless).
+    fn comp_absorb(&mut self, loser: VertexId, to: u64) {
+        let mut buf = std::mem::take(&mut self.comp_scratch);
+        buf.clear();
+        self.levels[0].for_each_tree_vertex(loser, &mut |w| buf.push(w));
+        for &w in &buf {
+            self.comp_set(w, to);
+            self.comp_changed.push(w);
+        }
+        buf.clear();
+        self.comp_scratch = buf;
     }
 
     fn ensure_level(&mut self, l: usize) {
@@ -260,7 +306,12 @@ impl<S: SeedableSequence> LeveledConn<S> {
 
 impl<S: SeedableSequence> Connectivity for LeveledConn<S> {
     fn add_vertex(&mut self) -> VertexId {
-        self.levels[0].add_vertex()
+        let v = self.levels[0].add_vertex();
+        if self.track_comps {
+            let c = self.fresh_comp();
+            self.comp_set(v, c);
+        }
+        v
     }
 
     fn remove_vertex(&mut self, v: VertexId) {
@@ -283,6 +334,18 @@ impl<S: SeedableSequence> Connectivity for LeveledConn<S> {
         if let Some(e) = self.edges.get_mut(&key) {
             e.mult += 1;
             return;
+        }
+        if self.track_comps && !self.levels[0].connected(u, v) {
+            // genuine component merge: the smaller side adopts the larger
+            // side's stable id, so relabel cost lands on the side that
+            // actually changed cluster identity
+            let (su, sv) = (
+                self.levels[0].component_size(u),
+                self.levels[0].component_size(v),
+            );
+            let (winner, loser) = if su >= sv { (u, v) } else { (v, u) };
+            let to = self.comp[winner as usize];
+            self.comp_absorb(loser, to);
         }
         // fresh desires enter at level 0: tree if they connect, else NT
         let tree = self.levels[0].link(u, v);
@@ -321,6 +384,19 @@ impl<S: SeedableSequence> Connectivity for LeveledConn<S> {
             debug_assert!(cut, "tree edge ({u},{v}) missing from F{l}");
         }
         self.replace(u, v, level, hints);
+        if self.track_comps && !self.levels[0].connected(u, v) {
+            // genuine split (no replacement existed): the smaller side
+            // becomes a fresh component; transient cut-and-relink
+            // patterns (Algorithm 2's rewiring) reconnect above and never
+            // reach this point
+            let (su, sv) = (
+                self.levels[0].component_size(u),
+                self.levels[0].component_size(v),
+            );
+            let small = if su <= sv { u } else { v };
+            let c = self.fresh_comp();
+            self.comp_absorb(small, c);
+        }
     }
 
     fn root(&self, v: VertexId) -> u64 {
@@ -356,6 +432,29 @@ impl<S: SeedableSequence> Connectivity for LeveledConn<S> {
             nt_edges: self.nt_count,
             levels: self.levels.len(),
             ..self.stats
+        }
+    }
+
+    fn set_comp_tracking(&mut self, on: bool) {
+        assert_eq!(
+            self.levels[0].num_vertices(),
+            0,
+            "comp tracking must be toggled on an empty structure"
+        );
+        self.track_comps = on;
+    }
+
+    fn comp_id(&self, v: VertexId) -> u64 {
+        if self.track_comps {
+            self.comp[v as usize]
+        } else {
+            self.levels[0].root(v)
+        }
+    }
+
+    fn drain_comp_changes(&mut self, f: &mut dyn FnMut(VertexId)) {
+        for v in self.comp_changed.drain(..) {
+            f(v);
         }
     }
 }
@@ -474,6 +573,96 @@ mod tests {
         assert!(c.connected(a, b));
         assert_eq!(st.replacements, 1);
         assert_eq!(st.visited, 0, "hint must preempt the level scan");
+    }
+
+    /// Stable component ids: merges keep the larger side's id, splits mint
+    /// a fresh id for the smaller side, transient cut-and-relink emits no
+    /// events, and `comp_id` agrees with connectivity throughout — checked
+    /// against the graph oracle under random churn.
+    #[test]
+    fn comp_tracking_matches_connectivity_and_is_stable() {
+        run_prop("comp tracking vs oracle", 40, |g: &mut Gen| {
+            let n = g.usize_in(2..=14);
+            let mut c = LeveledConn::<SkipSeq>::new(g.rng.next_u64());
+            c.set_comp_tracking(true);
+            let vs: Vec<VertexId> = (0..n).map(|_| c.add_vertex()).collect();
+            let mut o = GraphOracle::new(n);
+            let mut desired: Vec<(usize, usize)> = Vec::new();
+            for _ in 0..g.usize_in(1..=80) {
+                if desired.is_empty() || g.rng.coin(0.6) {
+                    let a = g.usize_in(0..=n - 1);
+                    let mut b = g.usize_in(0..=n - 1);
+                    if a == b {
+                        b = (b + 1) % n;
+                    }
+                    c.desire(vs[a], vs[b]);
+                    o.desire(a, b);
+                    desired.push((a, b));
+                } else {
+                    let i = g.usize_in(0..=desired.len() - 1);
+                    let (a, b) = desired.swap_remove(i);
+                    c.undesire(vs[a], vs[b]);
+                    o.undesire(a, b);
+                }
+                // comp ids must induce exactly the oracle's partition
+                for a in 0..n {
+                    for b in 0..n {
+                        assert_eq!(
+                            c.comp_id(vs[a]) == c.comp_id(vs[b]),
+                            o.connected(a, b),
+                            "comp partition diverged at ({a},{b})"
+                        );
+                    }
+                }
+            }
+            c.drain_comp_changes(&mut |_| {});
+        });
+    }
+
+    /// Directed check of the change-event contract: the side that adopts
+    /// a new id is reported; the surviving (larger) side is not.
+    #[test]
+    fn comp_events_cover_exactly_the_relabeled_side() {
+        let mut c = LeveledConn::<SkipSeq>::new(9);
+        c.set_comp_tracking(true);
+        let a = c.add_vertex();
+        let b = c.add_vertex();
+        let z = c.add_vertex();
+        let x = c.add_vertex();
+        let y = c.add_vertex();
+        c.desire(a, b);
+        c.desire(a, z); // {a,b,z}
+        c.desire(x, y); // {x,y}
+        c.drain_comp_changes(&mut |_| {});
+        let big = c.comp_id(a);
+        assert_eq!(c.comp_id(b), big);
+        assert_eq!(c.comp_id(z), big);
+        let small = c.comp_id(x);
+        assert_eq!(c.comp_id(y), small);
+        assert_ne!(small, big);
+        // merge: {x,y} is the smaller side — exactly x and y are
+        // reported, and the merged comp keeps the larger side's id
+        c.desire(a, x);
+        let mut changed = Vec::new();
+        c.drain_comp_changes(&mut |v| changed.push(v));
+        changed.sort_unstable();
+        let mut want = vec![x, y];
+        want.sort_unstable();
+        assert_eq!(changed, want);
+        assert_eq!(c.comp_id(x), big);
+        assert_eq!(c.comp_id(y), big);
+        // genuine split (no replacement exists): the smaller side {x,y}
+        // gets a fresh id; {a,b,z} keeps `big`
+        c.undesire(a, x);
+        let mut changed = Vec::new();
+        c.drain_comp_changes(&mut |v| changed.push(v));
+        changed.sort_unstable();
+        assert_eq!(changed, want);
+        assert_eq!(c.comp_id(a), big);
+        assert_eq!(c.comp_id(b), big);
+        assert_eq!(c.comp_id(z), big);
+        assert_eq!(c.comp_id(x), c.comp_id(y));
+        assert_ne!(c.comp_id(x), big);
     }
 
     /// A failed search on a path pushes the smaller side's tree edges up a

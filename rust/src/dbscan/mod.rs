@@ -120,6 +120,14 @@ pub struct DynamicDbscan<C: Connectivity = DefaultConn> {
     scratch_ids: Vec<PointId>,
     /// reused orphan re-attachment work list
     scratch_orphans: Vec<PointId>,
+    /// owning point per forest vertex (delta-snapshot plumbing; stale
+    /// entries are guarded by the arena's generation check)
+    vertex_owner: Vec<PointId>,
+    /// points whose stitch-visible flags (core / clustered) may have
+    /// changed since the last drain; recorded only while `track_stitch`
+    stitch_dirty: Vec<PointId>,
+    /// see [`DynamicDbscan::enable_stitch_tracking`]
+    track_stitch: bool,
 }
 
 impl DynamicDbscan<DefaultConn> {
@@ -163,7 +171,26 @@ impl<C: Connectivity> DynamicDbscan<C> {
             scratch_coords: Vec::new(),
             scratch_ids: Vec::new(),
             scratch_orphans: Vec::new(),
+            vertex_owner: Vec::new(),
+            stitch_dirty: Vec::new(),
+            track_stitch: false,
         }
+    }
+
+    /// Enable delta-snapshot change tracking: stable component ids in the
+    /// connectivity layer plus dirty-point recording on every core /
+    /// attachment flip. Must be called before any point is added. The
+    /// sharded serving workers use this to ship `(ext, local-root)`
+    /// *changes* instead of full state dumps; the single-instance path
+    /// leaves it off and pays nothing.
+    pub fn enable_stitch_tracking(&mut self) {
+        assert_eq!(
+            self.num_points(),
+            0,
+            "enable_stitch_tracking on a non-empty structure"
+        );
+        self.track_stitch = true;
+        self.conn.set_comp_tracking(true);
     }
 
     /// Construct with externally computed hash shifts (used when the XLA
@@ -242,6 +269,42 @@ impl<C: Connectivity> DynamicDbscan<C> {
     /// churn leak checks assert every level drains to zero.
     pub fn conn_level_live(&self) -> Vec<usize> {
         self.conn.live_vertices_per_level()
+    }
+
+    /// Stable cluster identifier of `p` — like [`Self::get_cluster`] but
+    /// backed by the connectivity layer's stable component ids (see
+    /// [`Connectivity::comp_id`]): the id changes only when the cluster's
+    /// *membership* changes, and every point whose id changed is reported
+    /// through [`Self::drain_stitch_changes`]. Requires
+    /// [`Self::enable_stitch_tracking`] for stability; falls back to the
+    /// (restructure-sensitive) forest root otherwise.
+    pub fn stable_cluster(&self, p: PointId) -> u64 {
+        let s = self.arena.require(p);
+        self.conn.comp_id(self.arena.vertex(s))
+    }
+
+    /// Drain the live points whose stitch-visible state — core flag,
+    /// clustered flag or stable cluster id — may have changed since the
+    /// last drain. May report false positives (unchanged points), never
+    /// false negatives. Requires [`Self::enable_stitch_tracking`].
+    pub fn drain_stitch_changes(&mut self, f: &mut dyn FnMut(PointId)) {
+        debug_assert!(self.track_stitch, "stitch tracking is not enabled");
+        // component-membership changes surfaced by the connectivity layer
+        let owner = &self.vertex_owner;
+        let arena = &self.arena;
+        self.conn.drain_comp_changes(&mut |v| {
+            if let Some(&pid) = owner.get(v as usize) {
+                if arena.contains(pid) {
+                    f(pid);
+                }
+            }
+        });
+        // direct flag flips recorded by the update path
+        for pid in self.stitch_dirty.drain(..) {
+            if self.arena.contains(pid) {
+                f(pid);
+            }
+        }
     }
 
     /// Dense labels for a set of points: clusters numbered 0.., noise
@@ -353,6 +416,14 @@ impl<C: Connectivity> DynamicDbscan<C> {
         self.stats.adds += 1;
         let vertex = self.conn.add_vertex();
         let idx = self.arena.alloc(x, keys, vertex);
+        let vi = vertex as usize;
+        if vi >= self.vertex_owner.len() {
+            self.vertex_owner.resize(vi + 1, u64::MAX);
+        }
+        self.vertex_owner[vi] = idx;
+        if self.track_stitch {
+            self.stitch_dirty.push(idx);
+        }
         // bucket insertion + new-core detection (Algorithm 2 lines 6-11)
         let mut newly_core = std::mem::take(&mut self.scratch_ids);
         newly_core.clear();
@@ -399,6 +470,9 @@ impl<C: Connectivity> DynamicDbscan<C> {
         debug_assert!(!self.arena.is_core(cs));
         self.stats.promotions += 1;
         self.n_core += 1;
+        if self.track_stitch {
+            self.stitch_dirty.push(c);
+        }
         for i in 0..self.cfg.t {
             let key = self.arena.key(cs, i);
             self.tables[i].mark_core(key, c);
@@ -462,6 +536,9 @@ impl<C: Connectivity> DynamicDbscan<C> {
             self.stats.forest_links += 1;
             self.arena.set_attached_to(ps, Some(c));
             self.arena.attached_mut(cs).insert(p);
+            if self.track_stitch {
+                self.stitch_dirty.push(p);
+            }
         }
     }
 
@@ -568,6 +645,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
         );
         self.arena.free(p);
         self.conn.remove_vertex(vertex);
+        self.vertex_owner[vertex as usize] = u64::MAX;
     }
 
     /// Would `y` still be core after removing `x` from every bucket?
@@ -626,6 +704,9 @@ impl<C: Connectivity> DynamicDbscan<C> {
     fn demote_marks(&mut self, c: PointId) {
         self.stats.demotions += 1;
         self.n_core -= 1;
+        if self.track_stitch {
+            self.stitch_dirty.push(c);
+        }
         let cs = self.arena.slot_unchecked(c);
         for i in 0..self.cfg.t {
             let key = self.arena.key(cs, i);
@@ -647,6 +728,11 @@ impl<C: Connectivity> DynamicDbscan<C> {
             self.conn.undesire(vc, vn);
             self.stats.forest_cuts += 1;
             self.arena.set_attached_to(ns, None);
+            if self.track_stitch {
+                // re-linking may fail (orphan turns noise) — record the
+                // flip either way; link_non_core re-records on success
+                self.stitch_dirty.push(nc);
+            }
             self.link_non_core(nc);
         }
         orphans.clear();

@@ -279,6 +279,24 @@ impl<S: Sequence> EulerForest<S> {
     pub fn live_vertex_count(&self) -> usize {
         self.loop_of.len()
     }
+
+    /// Visit every vertex of `v`'s tree in tour order — `O(component
+    /// size)`. This is **not** a replacement-search primitive (that cost
+    /// is exactly what the leveled connectivity's mark aggregates remove —
+    /// see `rust/tests/lint.rs`): it backs the stable-component event
+    /// plumbing of `dbscan::leveled`, where the walk only ever covers the
+    /// side of a genuine merge/split whose cluster identity changed, so
+    /// its cost is charged to points that must be relabeled anyway.
+    pub fn for_each_tree_vertex(&self, v: VertexId, f: &mut dyn FnMut(VertexId)) {
+        let lv = self.loop_node(v);
+        let mut cur = Some(self.seq.first_of_seq(lv));
+        while let Some(n) = cur {
+            if let Some(&w) = self.loop_of.get(&n) {
+                f(w);
+            }
+            cur = self.seq.next(n);
+        }
+    }
 }
 
 impl<S: Sequence> Forest for EulerForest<S> {
@@ -788,6 +806,93 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// Satellite audit (skip-list `any_marks` fast path): while a backend
+    /// instance has never carried a nonzero mark, split/concat skip the
+    /// span-aggregate repair entirely. The hazard audited here is a stale
+    /// never-marked state after `concat` of a marked and an unmarked
+    /// sequence — directed schedules drive exactly those transitions
+    /// (first mark late in the instance's life, marked⧺unmarked and
+    /// unmarked⧺marked concats, splits straddling the mark, re-clearing)
+    /// against `NaiveSeq` on both real backends. Audit conclusion: the
+    /// flag is *instance*-global, not per-sequence, so a marked sequence
+    /// always flips repairs on for every sequence in the backend — the
+    /// schedules below pin that behaviour against regressions (e.g. a
+    /// future per-sequence flag that forgets concat can move marks into a
+    /// "never-marked" sequence).
+    #[test]
+    fn concat_after_mark_keeps_aggregates_fresh() {
+        use super::naive::NaiveSeq;
+        use super::skiplist::SkipSeq;
+        use super::treap::TreapSeq;
+
+        fn check<S: Sequence>(s: &S, n: &NaiveSeq, sx: &[Node], nx: &[Node], ctx: &str) {
+            for (i, (&a, &b)) in sx.iter().zip(nx.iter()).enumerate() {
+                assert_eq!(
+                    s.seq_marks(a),
+                    n.seq_marks(b),
+                    "{ctx}: seq_marks via element {i}"
+                );
+                for kind in [MARK_VERTEX, MARK_EDGE] {
+                    let want = n
+                        .find_marked(b, kind)
+                        .map(|x| nx.iter().position(|&y| y == x).unwrap());
+                    let got = s
+                        .find_marked(a, kind)
+                        .map(|x| sx.iter().position(|&y| y == x).unwrap());
+                    assert_eq!(got, want, "{ctx}: find_marked({kind}) via {i}");
+                }
+            }
+        }
+
+        fn run<S: SeedableSequence>(seed: u64) {
+            let mut s = S::from_seed(seed);
+            let mut n = NaiveSeq::from_seed(0);
+            // two sequences of 6: A = x[0..6], B = x[6..12], built while the
+            // instance is still mark-free (fast path active)
+            let sx: Vec<Node> = (0..12).map(|_| s.new_node()).collect();
+            let nx: Vec<Node> = (0..12).map(|_| n.new_node()).collect();
+            for w in 0..5 {
+                s.concat(sx[w], sx[w + 1]);
+                n.concat(nx[w], nx[w + 1]);
+                s.concat(sx[6 + w], sx[6 + w + 1]);
+                n.concat(nx[6 + w], nx[6 + w + 1]);
+            }
+            check(&s, &n, &sx, &nx, "pre-mark");
+            // first mark ever, deep inside A — the never-marked state ends
+            s.set_marks(sx[3], MARK_VERTEX);
+            n.set_marks(nx[3], MARK_VERTEX);
+            check(&s, &n, &sx, &nx, "first mark");
+            // marked ⧺ unmarked: B's spans were never repaired before
+            s.concat(sx[0], sx[6]);
+            n.concat(nx[0], nx[6]);
+            check(&s, &n, &sx, &nx, "marked++unmarked");
+            // split the mark back out and re-concat the other way around
+            s.split_before(sx[6]);
+            n.split_before(nx[6]);
+            check(&s, &n, &sx, &nx, "split at old boundary");
+            s.concat(sx[6], sx[0]);
+            n.concat(nx[6], nx[0]);
+            check(&s, &n, &sx, &nx, "unmarked++marked");
+            // split right of the mark: the mark stays in the left part
+            s.split_before(sx[4]);
+            n.split_before(nx[4]);
+            check(&s, &n, &sx, &nx, "split right of mark");
+            // clear the only mark: aggregates must drain to zero everywhere
+            s.set_marks(sx[3], 0);
+            n.set_marks(nx[3], 0);
+            check(&s, &n, &sx, &nx, "cleared");
+            // a *different* sequence marked next (edge kind this time)
+            s.set_marks(sx[8], MARK_EDGE);
+            n.set_marks(nx[8], MARK_EDGE);
+            check(&s, &n, &sx, &nx, "re-marked elsewhere");
+        }
+
+        for seed in [1u64, 7, 42, 1234] {
+            run::<SkipSeq>(seed);
+            run::<TreapSeq>(seed);
+        }
     }
 
     /// Forest-level mark plumbing: vertex and edge marks survive link/cut

@@ -30,6 +30,24 @@ pub struct GridHasher {
     pub etas: Vec<f32>,
 }
 
+/// One scaled-and-floored grid coordinate. The f32→i32 `as` cast
+/// **saturates** at the type bounds, so a coordinate further than ~2³¹
+/// cells from the origin (relative to `eps`) would silently alias into
+/// one of the two extreme grid rows — corrupting density estimates with
+/// no error anywhere downstream. Debug builds reject such inputs here
+/// (NaN included); release builds keep the documented saturating
+/// behaviour, which callers must treat as out-of-contract input.
+#[inline]
+fn grid_coord(v: f32, eta: f32, inv: f32) -> i32 {
+    let scaled = ((v + eta) * inv).floor();
+    debug_assert!(
+        // 2_147_483_520 is the largest f32 below 2³¹; −2³¹ is exact
+        (-2_147_483_648.0f32..=2_147_483_520.0).contains(&scaled),
+        "grid coordinate {scaled} overflows i32 (|x| too large for eps)"
+    );
+    scaled as i32
+}
+
 impl GridHasher {
     pub fn new(t: usize, dim: usize, eps: f32, seed: u64) -> Self {
         assert!(eps > 0.0 && t > 0 && dim > 0);
@@ -47,14 +65,16 @@ impl GridHasher {
 
     /// Integer grid coordinates of `x` under hash function `i`.
     /// Exactly `floor((x + eta_i) * inv_two_eps)` in f32 — matching the
-    /// Pallas kernel bit-for-bit.
+    /// Pallas kernel bit-for-bit. Coordinates must scale into i32 range
+    /// (|x| ≲ 2³¹·2ε): debug builds assert this, release builds saturate
+    /// (see [`grid_coord`]).
     #[inline]
     pub fn coords_into(&self, i: usize, x: &[f32], out: &mut [i32]) {
         debug_assert_eq!(x.len(), self.dim);
         let eta = self.etas[i];
         let inv = self.inv_two_eps;
         for (o, &v) in out.iter_mut().zip(x.iter()) {
-            *o = ((v + eta) * inv).floor() as i32;
+            *o = grid_coord(v, eta, inv);
         }
     }
 
@@ -109,7 +129,7 @@ impl GridHasher {
             for j in 0..n {
                 let row = &xs[j * self.dim..(j + 1) * self.dim];
                 for (o, &v) in scratch.iter_mut().zip(row.iter()) {
-                    *o = ((v + eta) * inv).floor() as i32;
+                    *o = grid_coord(v, eta, inv);
                 }
                 out[j * self.t + i] = Self::key_from_coords(scratch);
             }
@@ -231,6 +251,41 @@ mod tests {
                     single.as_slice(),
                     "batched keys diverged at point {j}"
                 );
+            }
+        });
+    }
+
+    /// Regression (saturation bug): coordinates with |x| ≫ eps used to
+    /// silently saturate the f32→i32 cast, aliasing every out-of-range
+    /// point into the two extreme grid rows. Debug builds now reject the
+    /// input at the cast site instead of corrupting density estimates.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "overflows i32")]
+    fn far_from_origin_coordinates_are_rejected_in_debug() {
+        let h = GridHasher::new(1, 2, 0.75, 1);
+        let mut out = [0i32; 2];
+        // 1e13 / (2·0.75) ≈ 6.7e12 ≫ 2³¹: would saturate
+        h.coords_into(0, &[1.0e13, 0.0], &mut out);
+    }
+
+    /// The guarded cast is bit-identical to the old unchecked expression
+    /// on every in-range input (the Pallas-kernel parity contract).
+    #[test]
+    fn guarded_cast_matches_unchecked_in_range() {
+        run_prop("grid_coord parity", 40, |g: &mut Gen| {
+            let dim = g.usize_in(1..=6);
+            let eps = g.f64_in(0.05, 3.0) as f32;
+            let h = GridHasher::new(3, dim, eps, g.rng.next_u64());
+            let x: Vec<f32> =
+                (0..dim).map(|_| g.f64_in(-1e6, 1e6) as f32).collect();
+            for i in 0..h.t {
+                let got = h.coords(i, &x);
+                let eta = h.etas[i];
+                let inv = h.inv_two_eps();
+                let want: Vec<i32> =
+                    x.iter().map(|&v| ((v + eta) * inv).floor() as i32).collect();
+                assert_eq!(got, want, "hash fn {i} diverged");
             }
         });
     }

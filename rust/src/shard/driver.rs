@@ -80,7 +80,10 @@ pub fn run_sharded(
             snapshot_every > 0 && (seq + 1) % snapshot_every == 0 && seq != last;
         if snap_due {
             let snap = engine.publish();
-            let (ari, nmi) = quality_vs_truth(&snap.labels, truth);
+            // materialized on demand: the publish path itself no longer
+            // builds the full label vector
+            let labels = snap.labels();
+            let (ari, nmi) = quality_vs_truth(&labels, truth);
             reports.push(ShardReport {
                 seq,
                 ops: n_ops,
@@ -97,7 +100,8 @@ pub fn run_sharded(
     let outcome = engine.finish();
     let total_wall_s = t0.elapsed().as_secs_f64();
     let snap = &outcome.snapshot;
-    let (ari, nmi) = quality_vs_truth(&snap.labels, truth);
+    let final_labels = snap.labels();
+    let (ari, nmi) = quality_vs_truth(&final_labels, truth);
     reports.push(ShardReport {
         seq: last,
         ops: 0,
@@ -110,7 +114,7 @@ pub fn run_sharded(
     });
     Ok(ShardedRunOutcome {
         reports,
-        final_labels: outcome.snapshot.labels.clone(),
+        final_labels,
         engine: outcome,
         total_wall_s,
     })

@@ -1,16 +1,25 @@
 //! `ShardedEngine` — the front of the sharded serving path.
 //!
-//! Owns the router, the per-worker bounded channels and the latest
-//! published [`GlobalSnapshot`]. Updates are routed and buffered per shard
-//! (`insert`/`delete`), shipped in batches (`flush`), and made visible to
-//! readers by `publish`, which barriers on every worker (the `Snapshot`
-//! marker rides the op channels) and stitches the replies. Reads
-//! (`cluster_of`, `cluster_sizes`, `snapshot`) only touch the immutable
-//! snapshot — they never contend with the update path.
+//! Owns the router, the per-worker bounded channels (or, at `shards == 1`,
+//! a single **inline** [`ShardCore`] — no router, no ghost replication, no
+//! channel hop, so the one-shard configuration degenerates to the direct
+//! path instead of paying pipeline tax), the persistent cross-shard
+//! [`Stitcher`] and the latest published [`GlobalSnapshot`].
+//!
+//! Updates are routed and buffered per shard (`insert`/`delete`), shipped
+//! in batches (`flush`), and made visible to readers by `publish`, which
+//! barriers on every worker (a marker op rides the op channels) and folds
+//! their **delta reports** into the persistent stitch graph — `O(Δ·log²n)`
+//! in changed points per publish ([`StitchMode::Delta`], the default). The
+//! from-scratch `O(n log n)` path survives as the explicit
+//! [`StitchMode::FullRebuild`] fallback. Reads (`cluster_of`,
+//! `cluster_sizes`, `snapshot`) only touch the immutable snapshot — they
+//! never contend with the update path.
 
 use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use rustc_hash::FxHashMap;
 
@@ -18,9 +27,12 @@ use crate::dbscan::RepairStats;
 use crate::util::stats::LatencyHisto;
 
 use super::router::Router;
-use super::stitch::{stitch, GlobalSnapshot};
-use super::worker::{run_worker, ShardBatch, ShardSnapshot, WorkerReport};
-use super::ShardConfig;
+use super::stitch::{stitch_full, GlobalSnapshot, Stitcher};
+use super::worker::{
+    run_worker, ShardBatch, ShardCore, ShardDelta, ShardReply, ShardSnapshot,
+    WorkerReport,
+};
+use super::{ShardConfig, StitchMode};
 
 /// Engine-side op counters.
 #[derive(Clone, Debug, Default)]
@@ -56,6 +68,8 @@ pub struct EngineOutcome {
     /// add latency merged across shards (ghost inserts included)
     pub add_latency: LatencyHisto,
     pub delete_latency: LatencyHisto,
+    /// end-to-end publish (snapshot-emission) latency
+    pub publish_latency: LatencyHisto,
 }
 
 impl EngineOutcome {
@@ -75,23 +89,36 @@ impl EngineOutcome {
     }
 }
 
+/// Where the per-shard structures live: worker threads behind bounded
+/// channels (S ≥ 2), or one inline core (S == 1 — the `shards=1`
+/// regression fix: no channel hop, no marker round-trip).
+enum Backend {
+    Inline(Box<ShardCore>),
+    Threads {
+        txs: Vec<SyncSender<ShardBatch>>,
+        reply_rx: Receiver<ShardReply>,
+        workers: Vec<JoinHandle<WorkerReport>>,
+    },
+}
+
 /// S parallel `DynamicDbscan` instances behind a deterministic spatial
-/// router, with cross-shard cluster stitching. See the [module
-/// docs](super) for the architecture.
+/// router, with incremental cross-shard cluster stitching. See the
+/// [module docs](super) for the architecture.
 pub struct ShardedEngine {
     cfg: ShardConfig,
-    router: Router,
-    txs: Vec<SyncSender<ShardBatch>>,
-    snap_rx: Receiver<ShardSnapshot>,
-    workers: Vec<JoinHandle<WorkerReport>>,
-    /// ext → shards holding a replica (primary first)
+    /// `None` at S == 1: everything is primary on shard 0, no ghosts
+    router: Option<Router>,
+    backend: Backend,
+    /// ext → shards holding a replica (primary first); unused at S == 1
     placement: FxHashMap<u64, Vec<u32>>,
     /// per-shard batch being assembled (ops + one shared flat coord buffer
     /// — no per-op coordinate allocation on the wire)
     pending: Vec<ShardBatch>,
+    stitcher: Stitcher,
     snapshot: Arc<GlobalSnapshot>,
     next_seq: u64,
     stats: EngineStats,
+    publish_latency: LatencyHisto,
     /// ops accepted since the last publish (lets `finish` skip a
     /// redundant stitch when the snapshot is already current)
     dirty: bool,
@@ -100,40 +127,55 @@ pub struct ShardedEngine {
 impl ShardedEngine {
     pub fn new(cfg: ShardConfig) -> Self {
         let shards = cfg.shards.max(1);
-        let router = Router::new(&cfg);
-        let (snap_tx, snap_rx) = channel::<ShardSnapshot>();
-        let mut txs = Vec::with_capacity(shards);
-        let mut workers = Vec::with_capacity(shards);
-        for shard in 0..shards {
-            let (tx, rx) = sync_channel::<ShardBatch>(cfg.queue.max(1));
-            let dcfg = cfg.dbscan.clone();
-            let seed = cfg.seed;
-            let stx = snap_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("shard-{shard}"))
-                .spawn(move || run_worker(shard, dcfg, seed, rx, stx))
-                .expect("failed to spawn shard worker");
-            txs.push(tx);
-            workers.push(handle);
-        }
-        drop(snap_tx);
+        // delta tracking only pays off when deltas are consumed
+        let track = cfg.stitch == StitchMode::Delta;
+        let (router, backend) = if shards == 1 {
+            (
+                None,
+                Backend::Inline(Box::new(ShardCore::new(
+                    0,
+                    cfg.dbscan.clone(),
+                    cfg.seed,
+                    track,
+                ))),
+            )
+        } else {
+            let router = Router::new(&cfg);
+            let (reply_tx, reply_rx) = channel::<ShardReply>();
+            let mut txs = Vec::with_capacity(shards);
+            let mut workers = Vec::with_capacity(shards);
+            for shard in 0..shards {
+                let (tx, rx) = sync_channel::<ShardBatch>(cfg.queue.max(1));
+                let dcfg = cfg.dbscan.clone();
+                let seed = cfg.seed;
+                let rtx = reply_tx.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("shard-{shard}"))
+                    .spawn(move || run_worker(shard, dcfg, seed, track, rx, rtx))
+                    .expect("failed to spawn shard worker");
+                txs.push(tx);
+                workers.push(handle);
+            }
+            drop(reply_tx);
+            (Some(router), Backend::Threads { txs, reply_rx, workers })
+        };
         ShardedEngine {
             router,
-            txs,
-            snap_rx,
-            workers,
+            backend,
             placement: FxHashMap::default(),
             pending: (0..shards).map(|_| ShardBatch::new()).collect(),
+            stitcher: Stitcher::new(shards, cfg.seed),
             snapshot: GlobalSnapshot::empty(),
             next_seq: 1,
             stats: EngineStats::default(),
+            publish_latency: LatencyHisto::new(),
             dirty: false,
             cfg,
         }
     }
 
     pub fn shards(&self) -> usize {
-        self.txs.len()
+        self.pending.len()
     }
 
     pub fn config(&self) -> &ShardConfig {
@@ -148,11 +190,18 @@ impl ShardedEngine {
     /// id; it must not be live already.
     pub fn insert(&mut self, ext: u64, coords: &[f32]) {
         assert_eq!(coords.len(), self.cfg.dbscan.dim, "bad dim in sharded insert");
-        let decision = self.router.route(coords);
+        self.stats.inserts += 1;
+        self.dirty = true;
+        let Some(router) = &mut self.router else {
+            // S == 1: no routing, no ghosts, no placement bookkeeping
+            // (the core's own ext map enforces id uniqueness)
+            self.pending[0].push_insert(ext, coords, true);
+            return;
+        };
+        let decision = router.route(coords);
         let mut held: Vec<u32> = Vec::with_capacity(1 + decision.ghosts.len());
         held.push(decision.primary as u32);
         self.pending[decision.primary].push_insert(ext, coords, true);
-        self.stats.inserts += 1;
         for &g in &decision.ghosts {
             held.push(g as u32);
             self.pending[g].push_insert(ext, coords, false);
@@ -160,11 +209,16 @@ impl ShardedEngine {
         }
         let prev = self.placement.insert(ext, held);
         assert!(prev.is_none(), "sharded insert of duplicate ext id {ext}");
-        self.dirty = true;
     }
 
     /// Buffer a delete for every shard holding a replica of `ext`.
     pub fn delete(&mut self, ext: u64) {
+        self.stats.deletes += 1;
+        self.dirty = true;
+        if self.router.is_none() {
+            self.pending[0].push_delete(ext);
+            return;
+        }
         let held = self
             .placement
             .remove(&ext)
@@ -172,37 +226,129 @@ impl ShardedEngine {
         for s in held {
             self.pending[s as usize].push_delete(ext);
         }
-        self.stats.deletes += 1;
-        self.dirty = true;
     }
 
-    /// Ship buffered ops to the workers. Blocks only when a worker's
-    /// bounded queue is full (backpressure).
+    /// Ship buffered ops to the workers. Threads: blocks only when a
+    /// worker's bounded queue is full (backpressure). Inline: applies the
+    /// batch directly.
     pub fn flush(&mut self) {
-        for (s, tx) in self.txs.iter().enumerate() {
-            if !self.pending[s].is_empty() {
-                let batch = std::mem::take(&mut self.pending[s]);
-                tx.send(batch).expect("shard worker terminated");
+        match &mut self.backend {
+            Backend::Inline(core) => {
+                if !self.pending[0].is_empty() {
+                    let batch = std::mem::take(&mut self.pending[0]);
+                    core.apply(&batch, &mut |_| {});
+                }
+            }
+            Backend::Threads { txs, .. } => {
+                for (s, tx) in txs.iter().enumerate() {
+                    if !self.pending[s].is_empty() {
+                        let batch = std::mem::take(&mut self.pending[s]);
+                        tx.send(batch).expect("shard worker terminated");
+                    }
+                }
             }
         }
     }
 
-    /// Flush, barrier on all workers, stitch their local clusterings and
-    /// publish the result as the new immutable snapshot.
-    pub fn publish(&mut self) -> Arc<GlobalSnapshot> {
+    /// Flush and barrier on every worker **without** publishing: the
+    /// delta-tracking state is left untouched. Lets callers (benches)
+    /// separate op-application cost from snapshot-publication cost.
+    pub fn quiesce(&mut self) {
         self.flush();
         let seq = self.next_seq;
         self.next_seq += 1;
-        for tx in &self.txs {
-            tx.send(ShardBatch::snapshot(seq)).expect("shard worker terminated");
+        if let Backend::Threads { txs, reply_rx, .. } = &mut self.backend {
+            for tx in txs.iter() {
+                tx.send(ShardBatch::sync(seq)).expect("shard worker terminated");
+            }
+            let mut acks = 0usize;
+            while acks < txs.len() {
+                match reply_rx.recv().expect("reply channel closed") {
+                    ShardReply::Sync { seq: s, .. } => {
+                        debug_assert_eq!(s, seq, "stale sync sequence");
+                        acks += 1;
+                    }
+                    other => panic!("unexpected shard reply to sync: {other:?}"),
+                }
+            }
         }
-        let mut snaps: Vec<ShardSnapshot> = Vec::with_capacity(self.txs.len());
-        while snaps.len() < self.txs.len() {
-            let s = self.snap_rx.recv().expect("snapshot channel closed");
-            debug_assert_eq!(s.seq, seq, "stale snapshot sequence");
-            snaps.push(s);
+    }
+
+    /// Collect one delta report per shard (barrier via the op channels).
+    fn collect_deltas(&mut self, seq: u64) -> Vec<ShardDelta> {
+        match &mut self.backend {
+            Backend::Inline(core) => vec![core.delta(seq)],
+            Backend::Threads { txs, reply_rx, .. } => {
+                for tx in txs.iter() {
+                    tx.send(ShardBatch::delta(seq)).expect("shard worker terminated");
+                }
+                let mut out = Vec::with_capacity(txs.len());
+                while out.len() < txs.len() {
+                    match reply_rx.recv().expect("reply channel closed") {
+                        ShardReply::Delta(d) => {
+                            debug_assert_eq!(d.seq, seq, "stale delta sequence");
+                            out.push(d);
+                        }
+                        other => panic!("unexpected shard reply to delta: {other:?}"),
+                    }
+                }
+                out
+            }
         }
-        let snap = Arc::new(stitch(snaps, seq));
+    }
+
+    /// Collect one **full** state dump per shard — the `O(n)` path. Kept
+    /// for the `FullRebuild` fallback mode and as the oracle feed of the
+    /// delta-vs-rebuild differential tests; the serving path never calls
+    /// it in `Delta` mode.
+    pub fn full_dump(&mut self) -> Vec<ShardSnapshot> {
+        self.flush();
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        match &mut self.backend {
+            Backend::Inline(core) => vec![core.full_snapshot(seq)],
+            Backend::Threads { txs, reply_rx, .. } => {
+                for tx in txs.iter() {
+                    tx.send(ShardBatch::snapshot(seq)).expect("shard worker terminated");
+                }
+                let mut out = Vec::with_capacity(txs.len());
+                while out.len() < txs.len() {
+                    match reply_rx.recv().expect("reply channel closed") {
+                        ShardReply::Full(s) => {
+                            debug_assert_eq!(s.seq, seq, "stale snapshot sequence");
+                            out.push(s);
+                        }
+                        other => {
+                            panic!("unexpected shard reply to snapshot: {other:?}")
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Flush, barrier on all workers, fold their reports into the global
+    /// clustering and publish the result as the new immutable snapshot.
+    /// `Delta` mode (default): `O(Δ·log²n)` in changed points.
+    /// `FullRebuild` mode: the old `O(n log n)` from-scratch stitch.
+    pub fn publish(&mut self) -> Arc<GlobalSnapshot> {
+        let t0 = Instant::now();
+        self.flush();
+        let snap = match self.cfg.stitch {
+            StitchMode::Delta => {
+                let seq = self.next_seq;
+                self.next_seq += 1;
+                let deltas = self.collect_deltas(seq);
+                Arc::new(self.stitcher.apply(&deltas, seq))
+            }
+            StitchMode::FullRebuild => {
+                let snaps = self.full_dump();
+                let seq = snaps[0].seq;
+                Arc::new(stitch_full(snaps, seq))
+            }
+        };
+        self.publish_latency.record(t0.elapsed().as_nanos() as u64);
         self.snapshot = Arc::clone(&snap);
         self.stats.publishes += 1;
         self.dirty = false;
@@ -235,6 +381,11 @@ impl ShardedEngine {
         &self.stats
     }
 
+    /// Publish-latency histogram so far (p50/p99 of `publish` calls).
+    pub fn publish_latency(&self) -> &LatencyHisto {
+        &self.publish_latency
+    }
+
     // ------------------------------------------------------------------
     // shutdown
     // ------------------------------------------------------------------
@@ -247,15 +398,22 @@ impl ShardedEngine {
         } else {
             Arc::clone(&self.snapshot)
         };
-        self.txs.clear(); // drop senders: workers drain and exit
         let mut add_latency = LatencyHisto::new();
         let mut delete_latency = LatencyHisto::new();
-        let mut worker_reports: Vec<WorkerReport> = Vec::with_capacity(self.workers.len());
-        for handle in self.workers.drain(..) {
-            let r = handle.join().expect("shard worker panicked");
+        let mut worker_reports: Vec<WorkerReport> = Vec::new();
+        match self.backend {
+            Backend::Inline(core) => worker_reports.push(core.into_report()),
+            Backend::Threads { txs, workers, .. } => {
+                drop(txs); // drop senders: workers drain and exit
+                for handle in workers {
+                    let r = handle.join().expect("shard worker panicked");
+                    worker_reports.push(r);
+                }
+            }
+        }
+        for r in &worker_reports {
             add_latency.merge(&r.add_latency);
             delete_latency.merge(&r.delete_latency);
-            worker_reports.push(r);
         }
         worker_reports.sort_by_key(|r| r.shard);
         EngineOutcome {
@@ -264,6 +422,7 @@ impl ShardedEngine {
             worker_reports,
             add_latency,
             delete_latency,
+            publish_latency: self.publish_latency.clone(),
         }
     }
 }
@@ -272,7 +431,8 @@ impl ShardedEngine {
 mod tests {
     use super::*;
     use crate::data::blobs::{make_blobs, BlobsConfig};
-    use crate::dbscan::DbscanConfig;
+    use crate::dbscan::{DbscanConfig, DynamicDbscan};
+    use crate::metrics::adjusted_rand_index;
 
     fn engine(shards: usize, dim: usize, seed: u64) -> ShardedEngine {
         let dbscan =
@@ -311,6 +471,7 @@ mod tests {
         assert_eq!(out.snapshot.live_points, 600);
         assert_eq!(out.worker_reports.len(), 3);
         assert_eq!(out.add_latency.count(), 600 + out.stats.ghost_inserts);
+        assert!(out.publish_latency.count() >= 1);
     }
 
     #[test]
@@ -350,6 +511,99 @@ mod tests {
         );
     }
 
+    /// The S == 1 inline path must reproduce the single-instance
+    /// clustering exactly (same config and seed ⇒ identical structures)
+    /// while skipping router, ghosts and channels entirely.
+    #[test]
+    fn single_shard_inline_path_matches_single_instance() {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 500,
+                dim: 3,
+                clusters: 4,
+                std: 0.3,
+                center_box: 15.0,
+                weights: vec![],
+            },
+            21,
+        );
+        let cfg = DbscanConfig { k: 6, t: 8, eps: 0.75, dim: 3, ..Default::default() };
+        let mut db = DynamicDbscan::new(cfg.clone(), 11);
+        let ids: Vec<u64> = (0..ds.n()).map(|i| db.add_point(ds.point(i))).collect();
+        for i in (0..200).rev() {
+            db.delete_point(ids[i]);
+        }
+        let survivors: Vec<u64> = ids[200..].to_vec();
+        let single = db.labels_for(&survivors);
+
+        let mut eng = engine(1, 3, 11);
+        for i in 0..ds.n() {
+            eng.insert(i as u64, ds.point(i));
+        }
+        for e in (0..200u64).rev() {
+            eng.delete(e);
+        }
+        let out = eng.finish();
+        assert_eq!(out.stats.ghost_inserts, 0, "S=1 must not replicate");
+        assert_eq!(out.snapshot.live_points, 300);
+        assert_eq!(out.worker_reports.len(), 1);
+        let sharded: Vec<i64> = (200..ds.n() as u64)
+            .map(|e| out.snapshot.cluster_of(e).expect("live ext labeled"))
+            .collect();
+        let ari = adjusted_rand_index(&single, &sharded);
+        assert!(
+            (ari - 1.0).abs() < 1e-9,
+            "inline S=1 must match single instance exactly, ARI {ari}"
+        );
+    }
+
+    /// Delta publishes across rounds must agree with the full-rebuild
+    /// fallback on the same engine state.
+    #[test]
+    fn delta_publish_matches_full_rebuild_fallback() {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 800,
+                dim: 4,
+                clusters: 4,
+                std: 0.35,
+                center_box: 18.0,
+                weights: vec![],
+            },
+            5,
+        );
+        let mut eng = engine(3, 4, 7);
+        for round in 0..4 {
+            for i in (round * 200)..((round + 1) * 200) {
+                eng.insert(i as u64, ds.point(i));
+            }
+            if round == 2 {
+                for e in 0..100u64 {
+                    eng.delete(e);
+                }
+            }
+            let snap = eng.publish();
+            let reference = stitch_full(eng.full_dump(), snap.seq);
+            assert_eq!(snap.live_points, reference.live_points);
+            assert_eq!(snap.clusters, reference.clusters);
+            assert_eq!(snap.core_points, reference.core_points);
+            let a = snap.labels();
+            let b = reference.labels();
+            assert_eq!(a.len(), b.len());
+            let mut fwd: FxHashMap<i64, i64> = FxHashMap::default();
+            let mut bwd: FxHashMap<i64, i64> = FxHashMap::default();
+            for (&(ea, la), &(eb, lb)) in a.iter().zip(b.iter()) {
+                assert_eq!(ea, eb, "live ext sets diverged");
+                assert_eq!(la < 0, lb < 0, "noise flag diverged at ext {ea}");
+                if la >= 0 {
+                    assert_eq!(*fwd.entry(la).or_insert(lb), lb, "split label");
+                    assert_eq!(*bwd.entry(lb).or_insert(la), la, "merged label");
+                }
+            }
+        }
+        let _ = eng.finish();
+    }
+
     #[test]
     #[should_panic(expected = "duplicate ext id")]
     fn duplicate_insert_panics() {
@@ -360,10 +614,27 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "duplicate insert of ext")]
+    fn duplicate_insert_panics_inline() {
+        let mut eng = engine(1, 2, 1);
+        eng.insert(7, &[0.0, 0.0]);
+        eng.insert(7, &[1.0, 1.0]);
+        eng.flush();
+    }
+
+    #[test]
     #[should_panic(expected = "unknown ext id")]
     fn unknown_delete_panics() {
         let mut eng = engine(2, 2, 1);
         eng.delete(3);
         let _ = eng.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "delete of unknown ext")]
+    fn unknown_delete_panics_inline() {
+        let mut eng = engine(1, 2, 1);
+        eng.delete(3);
+        eng.flush();
     }
 }

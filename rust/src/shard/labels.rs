@@ -1,0 +1,178 @@
+//! Copy-on-write label store backing delta-published [`GlobalSnapshot`]s.
+//!
+//! A [`LabelMap`] is the `ext → global label` relation, sharded into
+//! `Arc`-wrapped hash-map chunks keyed by a 64-bit mix of the external id.
+//! Publishing a snapshot clones the chunk *pointer* vector (cheap) and
+//! shares every chunk with the previous snapshot; the stitcher then
+//! mutates its working copy through [`Arc::make_mut`], which deep-copies
+//! only the chunks that actually receive changed labels. Publication cost
+//! is therefore `O(Δ · chunk)` in changed points plus an `O(#chunks)`
+//! pointer clone — never `O(n)` re-emission of the full label set the
+//! pre-delta stitcher paid.
+//!
+//! The chunk count doubles (a full `O(n)` re-shard, amortized over the
+//! doublings) whenever mean occupancy exceeds `2 × TARGET_PER_CHUNK`, so
+//! per-publish deep-copy work stays bounded as the live set grows.
+//!
+//! [`GlobalSnapshot`]: super::stitch::GlobalSnapshot
+
+use std::sync::Arc;
+
+use rustc_hash::FxHashMap;
+
+use crate::util::rng::mix64;
+
+/// Target mean entries per chunk; growth triggers at twice this.
+const TARGET_PER_CHUNK: usize = 48;
+/// Initial chunk count (power of two).
+const MIN_CHUNKS: usize = 64;
+
+/// CoW `ext → label` map (−1 = noise; absent = not live). Cloning is
+/// `O(#chunks)` pointer copies — that clone *is* the published snapshot's
+/// label state.
+#[derive(Clone, Debug)]
+pub struct LabelMap {
+    chunks: Vec<Arc<FxHashMap<u64, i64>>>,
+    len: usize,
+}
+
+impl LabelMap {
+    pub fn new() -> Self {
+        LabelMap {
+            chunks: (0..MIN_CHUNKS).map(|_| Arc::new(FxHashMap::default())).collect(),
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn chunk_ix(&self, ext: u64) -> usize {
+        // chunk count is always a power of two
+        (mix64(ext) as usize) & (self.chunks.len() - 1)
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, ext: u64) -> Option<i64> {
+        self.chunks[self.chunk_ix(ext)].get(&ext).copied()
+    }
+
+    /// Insert or update; returns the previous label. Deep-copies the
+    /// target chunk iff it is shared with a published snapshot.
+    pub fn set(&mut self, ext: u64, label: i64) -> Option<i64> {
+        let i = self.chunk_ix(ext);
+        let prev = Arc::make_mut(&mut self.chunks[i]).insert(ext, label);
+        if prev.is_none() {
+            self.len += 1;
+        }
+        prev
+    }
+
+    /// Remove; returns the previous label if present.
+    pub fn remove(&mut self, ext: u64) -> Option<i64> {
+        let i = self.chunk_ix(ext);
+        let prev = Arc::make_mut(&mut self.chunks[i]).remove(&ext);
+        if prev.is_some() {
+            self.len -= 1;
+        }
+        prev
+    }
+
+    /// Unordered iteration over `(ext, label)`.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, i64)> + '_ {
+        self.chunks.iter().flat_map(|c| c.iter().map(|(&e, &l)| (e, l)))
+    }
+
+    /// Sorted `(ext, label)` pairs — `O(n log n)`; for quality evaluation
+    /// and tests, never on the publish path.
+    pub fn sorted(&self) -> Vec<(u64, i64)> {
+        let mut v: Vec<(u64, i64)> = self.iter().collect();
+        v.sort_unstable_by_key(|&(e, _)| e);
+        v
+    }
+
+    /// Double the chunk count when mean occupancy exceeds the target —
+    /// called by the stitcher between publishes (`O(n)` then, amortized
+    /// `O(1)` per insertion over the doublings).
+    pub fn maybe_grow(&mut self) {
+        if self.len <= self.chunks.len() * TARGET_PER_CHUNK * 2 {
+            return;
+        }
+        let new_n = self.chunks.len() * 2;
+        let mut fresh: Vec<FxHashMap<u64, i64>> =
+            (0..new_n).map(|_| FxHashMap::default()).collect();
+        for (e, l) in self.iter() {
+            fresh[(mix64(e) as usize) & (new_n - 1)].insert(e, l);
+        }
+        self.chunks = fresh.into_iter().map(Arc::new).collect();
+    }
+
+    /// How many chunks are *not* shared with any snapshot — i.e. were
+    /// deep-copied since the last clone (introspection for the delta
+    /// publication tests and benches).
+    pub fn unshared_chunks(&self) -> usize {
+        self.chunks.iter().filter(|c| Arc::strong_count(c) == 1).count()
+    }
+}
+
+impl Default for LabelMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_remove_roundtrip() {
+        let mut m = LabelMap::new();
+        assert_eq!(m.get(7), None);
+        assert_eq!(m.set(7, 3), None);
+        assert_eq!(m.set(8, -1), None);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get(7), Some(3));
+        assert_eq!(m.set(7, 4), Some(3));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.remove(7), Some(4));
+        assert_eq!(m.remove(7), None);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.sorted(), vec![(8, -1)]);
+    }
+
+    #[test]
+    fn cow_shares_unchanged_chunks() {
+        let mut m = LabelMap::new();
+        for e in 0..2000u64 {
+            m.set(e, (e % 5) as i64);
+        }
+        let snap = m.clone(); // "publish"
+        // a single change must deep-copy exactly one chunk
+        m.set(42, 99);
+        assert_eq!(m.unshared_chunks(), 1, "one chunk deep-copied");
+        // the snapshot still sees the old value
+        assert_eq!(snap.get(42), Some(2));
+        assert_eq!(m.get(42), Some(99));
+    }
+
+    #[test]
+    fn growth_preserves_content() {
+        let mut m = LabelMap::new();
+        for e in 0..20_000u64 {
+            m.set(e * 13, (e % 7) as i64 - 1);
+        }
+        m.maybe_grow();
+        assert_eq!(m.len(), 20_000);
+        for e in 0..20_000u64 {
+            assert_eq!(m.get(e * 13), Some((e % 7) as i64 - 1));
+        }
+        assert_eq!(m.get(1), None);
+    }
+}

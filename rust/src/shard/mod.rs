@@ -1,5 +1,5 @@
-//! `shard` — the sharded parallel serving engine with cross-shard cluster
-//! stitching.
+//! `shard` — the sharded parallel serving engine with incremental
+//! cross-shard cluster stitching.
 //!
 //! The paper's `O(d·log³n + log⁴n)` update bound (Theorem 1) is per-point
 //! and single-threaded; this subsystem scales it across cores the way
@@ -12,19 +12,23 @@
 //!
 //! ```text
 //!            ┌────────┐   per-shard bounded op channels
-//!  updates ─▶│ Router │──┬──▶ [worker 0: DynamicDbscan]──┐
-//!            │ (cell→ │  ├──▶ [worker 1: DynamicDbscan]──┤  snapshots
+//!  updates ─▶│ Router │──┬──▶ [worker 0: DynamicDbscan]──┐  delta reports
+//!            │ (cell→ │  ├──▶ [worker 1: DynamicDbscan]──┤  (changed (ext,
 //!            │  block │  ├──▶ [worker 2: DynamicDbscan]──┼──▶ [Stitcher] ─▶ Arc<GlobalSnapshot>
-//!            │ →shard)│  └──▶ [worker 3: DynamicDbscan]──┘  (union-find        │
-//!            └────────┘      + ghost replicas               over (shard,   reads: cluster_of /
-//!                              in boundary margin)          local root))   cluster_sizes / stats
+//!            │ →shard)│  └──▶ [worker 3: DynamicDbscan]──┘  local-root)s)      │
+//!            └────────┘      + ghost replicas    persistent stitch graph   reads: cluster_of /
+//!                              in boundary margin  over (shard, root) on   cluster_sizes / stats
+//!                                                  LeveledConn (HDT)
 //! ```
 //!
 //! **Routing** ([`router::Router`]): a point's cell is its integer grid
 //! coordinate row under hash function 0; cells are grouped into blocks of
 //! `block_side` cells along the first `routing_dims` axes, and the block is
 //! hashed to a shard. Deterministic in the seed — the same point always
-//! routes identically.
+//! routes identically. At `shards == 1` the router (and ghost replication,
+//! and the worker channel) is bypassed entirely: the engine drives one
+//! inline [`worker::ShardCore`], so the one-shard configuration is the
+//! direct path plus delta bookkeeping instead of a slower pipeline.
 //!
 //! **Ghost replication**: a grid-LSH collision (any of the `t` hash
 //! functions) implies `‖x−y‖∞ ≤ 2ε`, i.e. the two cells differ by at most
@@ -36,30 +40,52 @@
 //! cross-boundary connectivity are exact where it matters (see
 //! `DESIGN.md` §Sharding for the argument).
 //!
-//! **Stitching** ([`stitch::stitch`]): each worker publishes, on demand, its
-//! local `(ext, local cluster root)` assignments; the stitcher runs a
-//! union-find over `(shard, root)` nodes, unioning the nodes of every
-//! replica set (the same external point clustered in several shards), which
-//! glues per-shard components of the same physical cluster into one global
-//! label space.
+//! **Stitching** ([`stitch::Stitcher`]): a **persistent dynamic stitch
+//! graph** over `(shard, local cluster root)` nodes, maintained by the
+//! same HDT-leveled connectivity ([`crate::dbscan::LeveledConn`]) the
+//! per-shard instances use — which makes cross-shard *un-unions* (cluster
+//! splits under deletes) as cheap as unions. On publish each worker ships
+//! a [`worker::ShardDelta`] — only the `(ext, local-root)` assignments
+//! that changed since its previous report — and the stitcher folds it in
+//! at `O(Δ·log²n)`. The old from-scratch union-find rebuild survives as
+//! the explicit [`StitchMode::FullRebuild`] fallback ([`stitch::stitch_full`]).
 //!
 //! **Reads** ([`stitch::GlobalSnapshot`]): `cluster_of`, `cluster_sizes`
 //! and counters are served from the latest published immutable snapshot
 //! behind an `Arc` — readers clone the `Arc` and never block the update
-//! path.
+//! path. Successive snapshots CoW-share their label state
+//! ([`labels::LabelMap`]), so publication allocates in changed points,
+//! not live points.
 
 pub mod driver;
 pub mod engine;
+pub mod labels;
 pub mod router;
 pub mod stitch;
 pub mod worker;
 
 pub use engine::{EngineOutcome, EngineStats, ShardedEngine};
+pub use labels::LabelMap;
 pub use router::{RouteDecision, Router};
-pub use stitch::GlobalSnapshot;
-pub use worker::{ShardBatch, ShardOp, ShardSnapshot, WorkerReport};
+pub use stitch::{stitch_full, GlobalSnapshot, Stitcher};
+pub use worker::{
+    ShardBatch, ShardCore, ShardDelta, ShardOp, ShardReply, ShardSnapshot,
+    WorkerReport,
+};
 
 use crate::dbscan::DbscanConfig;
+
+/// How `publish` turns per-shard state into a [`GlobalSnapshot`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StitchMode {
+    /// Incremental (default): per-shard delta reports folded into the
+    /// persistent stitch graph — `O(Δ·log²n)` per publish in changed
+    /// points.
+    Delta,
+    /// From-scratch union-find rebuild over full state dumps —
+    /// `O(n log n)` per publish. Explicit fallback + differential oracle.
+    FullRebuild,
+}
 
 /// Configuration of the sharded engine. All shards share the DBSCAN
 /// hyper-parameters and the seed, so every worker draws the *same* hash
@@ -80,6 +106,8 @@ pub struct ShardConfig {
     pub ghost_margin: u32,
     /// bounded op-channel capacity per worker, in batches
     pub queue: usize,
+    /// snapshot publication strategy (delta = incremental, the default)
+    pub stitch: StitchMode,
     pub seed: u64,
 }
 
@@ -92,6 +120,7 @@ impl ShardConfig {
             block_side: 8,
             ghost_margin: 2,
             queue: 8,
+            stitch: StitchMode::Delta,
             seed,
         }
     }

@@ -1,38 +1,65 @@
 //! Cross-shard cluster stitching: per-shard components → global labels.
 //!
-//! Nodes of the stitch graph are `(shard, local cluster root)` pairs; two
-//! nodes are unioned whenever the same external point is clustered in both
-//! shards (a primary and its ghost replicas are the *same physical point*,
-//! so the clusters containing them overlap and belong to one global
-//! cluster). A union-find over the nodes — rebuilt per snapshot, which
-//! sidesteps the un-union problem deletes would otherwise pose — yields the
-//! global partition; primary replicas then carry the labels.
+//! Nodes of the **stitch graph** are `(shard, local cluster root)` pairs;
+//! two nodes are joined whenever the same external point is clustered in
+//! both shards (a primary and its ghost replicas are the *same physical
+//! point*, so the clusters containing them overlap and belong to one
+//! global cluster). The connected components of that graph are exactly
+//! the global clusters.
+//!
+//! Since this PR the graph is **persistent and incremental**
+//! ([`Stitcher`]): it is maintained by the same HDT-leveled dynamic
+//! connectivity the per-shard instances use ([`LeveledConn`] — dogfooded
+//! here outside `DynamicDbscan`), which handles *un-unions* (cluster
+//! splits on delete) in `O(log² n)` amortized per edge — the operation
+//! the old per-snapshot union-find rebuild existed to sidestep. Workers
+//! feed it [`ShardDelta`]s — only the `(ext, local-root)` assignments
+//! that changed since their previous report — and every publish emits a
+//! [`GlobalSnapshot`] whose label state is CoW-shared with its
+//! predecessor ([`LabelMap`]), so publication costs `O(Δ·log²n)` in
+//! changed points instead of the old `O(n log n)` full re-emission.
+//!
+//! Label identity: a stitch component carries a **stable** id from the
+//! connectivity layer (merges keep the larger side's id, splits mint a
+//! fresh id for the smaller side — [`Connectivity::comp_id`]), and each
+//! component id maps to a global label minted once. Labels are therefore
+//! stable across snapshots for points whose cluster did not change —
+//! unlike the old dense per-snapshot renumbering.
 //!
 //! Soundness: a shard's component is an induced-subgraph component of the
 //! global collision graph, hence a subset of one global cluster — every
-//! union merges subsets of the same global cluster. Completeness rests on
-//! the router's ghost margin: every collision edge, and the core status of
-//! every replica on such an edge, is realized in at least one shard, so
-//! walking a global cluster's edges walks a chain of unions (see
-//! `DESIGN.md` §Sharding).
+//! stitch edge joins subsets of the same global cluster. Completeness
+//! rests on the router's ghost margin: every collision edge, and the core
+//! status of every replica on such an edge, is realized in at least one
+//! shard, so walking a global cluster's edges walks a chain of stitch
+//! edges (see `DESIGN.md` §Sharding).
+//!
+//! The from-scratch rebuild ([`stitch_full`]) is kept as the explicit
+//! fallback path (`StitchMode::FullRebuild`) and as the differential
+//! oracle for the delta path (`rust/tests/delta_snapshots.rs`); a
+//! grep-lint confines its call sites (`rust/tests/lint.rs`).
+//!
+//! [`Connectivity::comp_id`]: crate::dbscan::Connectivity
+//! [`LeveledConn`]: crate::dbscan::LeveledConn
 
 use std::sync::Arc;
 
-use rustc_hash::FxHashMap;
+use rustc_hash::{FxHashMap, FxHashSet};
 
 use crate::baselines::unionfind::UnionFind;
+use crate::dbscan::{Connectivity, LeveledConn};
+use crate::ett::skiplist::SkipSeq;
+use crate::ett::VertexId;
 
-use super::worker::ShardSnapshot;
+use super::labels::LabelMap;
+use super::worker::{ShardDelta, ShardSnapshot, SnapPoint};
 
 /// An immutable, globally-consistent view of the sharded clustering.
 /// Published behind an [`Arc`]; readers clone the `Arc` and never touch
-/// the update path.
+/// the update path. Label state is CoW-shared with neighboring snapshots.
 #[derive(Clone, Debug)]
 pub struct GlobalSnapshot {
     pub seq: u64,
-    /// `(ext, global label)` for every live primary point, sorted by ext;
-    /// noise is `-1`, clusters are numbered `0..`
-    pub labels: Vec<(u64, i64)>,
     /// `(label, size)` sorted by size descending (ties: label ascending);
     /// noise excluded
     pub cluster_sizes: Vec<(i64, usize)>,
@@ -45,7 +72,7 @@ pub struct GlobalSnapshot {
     pub core_points: usize,
     /// per-shard live points, ghosts included (index = shard id)
     pub shard_live: Vec<usize>,
-    label_of: FxHashMap<u64, i64>,
+    label_of: LabelMap,
 }
 
 impl GlobalSnapshot {
@@ -53,22 +80,326 @@ impl GlobalSnapshot {
     pub fn empty() -> Arc<GlobalSnapshot> {
         Arc::new(GlobalSnapshot {
             seq: 0,
-            labels: Vec::new(),
             cluster_sizes: Vec::new(),
             clusters: 0,
             live_points: 0,
             core_points: 0,
             shard_live: Vec::new(),
-            label_of: FxHashMap::default(),
+            label_of: LabelMap::new(),
         })
     }
 
     /// Global cluster of an external id: `None` when the point is not
     /// live, `Some(-1)` for noise, `Some(l ≥ 0)` for cluster `l`.
     pub fn cluster_of(&self, ext: u64) -> Option<i64> {
-        self.label_of.get(&ext).copied()
+        self.label_of.get(ext)
+    }
+
+    /// `(ext, global label)` for every live primary point, sorted by ext —
+    /// materialized on demand in `O(n log n)` (quality evaluation, tests);
+    /// the publish path never builds it.
+    pub fn labels(&self) -> Vec<(u64, i64)> {
+        self.label_of.sorted()
     }
 }
+
+// ---------------------------------------------------------------------
+// incremental stitcher (the default read path)
+// ---------------------------------------------------------------------
+
+/// One replica's stitch-relevant state, as last reported by its shard.
+#[derive(Clone, Copy, Debug)]
+struct Rep {
+    shard: u32,
+    root: u64,
+    clustered: bool,
+    primary: bool,
+    core: bool,
+}
+
+/// Per stitch-graph vertex: its `(shard, root)` key and the exts
+/// clustered under that local root (needed to fan component-id changes
+/// out to labels).
+#[derive(Debug)]
+struct NodeMeta {
+    key: (u32, u64),
+    members: FxHashSet<u64>,
+}
+
+/// Persistent cross-shard stitcher. Feed one [`ShardDelta`] per shard per
+/// round through [`Stitcher::apply`]; each call returns the next
+/// [`GlobalSnapshot`] in `O(Δ·log²n)` for Δ changed replicas.
+pub struct Stitcher {
+    /// dynamic connectivity over the stitch graph, with stable component
+    /// ids (the HDT layer makes cluster *splits* as cheap as merges)
+    conn: LeveledConn<SkipSeq>,
+    node_of: FxHashMap<(u32, u64), VertexId>,
+    /// vertex → metadata (None for retired vertex-id slots)
+    nodes: Vec<Option<NodeMeta>>,
+    /// ext → replica states (every shard currently holding it)
+    exts: FxHashMap<u64, Vec<Rep>>,
+    /// CoW label state shared with published snapshots
+    labels: LabelMap,
+    /// stable component id → minted global label
+    comp_label: FxHashMap<u64, i64>,
+    /// label → clustered-ext count (noise excluded)
+    sizes: FxHashMap<i64, usize>,
+    next_label: i64,
+    core_points: usize,
+    shard_live: Vec<usize>,
+    /// exts whose label must be recomputed this round
+    label_dirty: FxHashSet<u64>,
+    rounds: u64,
+}
+
+impl Stitcher {
+    pub fn new(shards: usize, seed: u64) -> Self {
+        let mut conn = LeveledConn::new(seed ^ 0x5717C4);
+        conn.set_comp_tracking(true);
+        Stitcher {
+            conn,
+            node_of: FxHashMap::default(),
+            nodes: Vec::new(),
+            exts: FxHashMap::default(),
+            labels: LabelMap::new(),
+            comp_label: FxHashMap::default(),
+            sizes: FxHashMap::default(),
+            next_label: 0,
+            core_points: 0,
+            shard_live: vec![0; shards],
+            label_dirty: FxHashSet::default(),
+            rounds: 0,
+        }
+    }
+
+    fn node_for(&mut self, key: (u32, u64)) -> VertexId {
+        if let Some(&v) = self.node_of.get(&key) {
+            return v;
+        }
+        let v = self.conn.add_vertex();
+        let i = v as usize;
+        if i >= self.nodes.len() {
+            self.nodes.resize_with(i + 1, || None);
+        }
+        self.nodes[i] = Some(NodeMeta { key, members: FxHashSet::default() });
+        self.node_of.insert(key, v);
+        v
+    }
+
+    /// Retire a stitch node once its last member ext left (all its star
+    /// edges are gone by then — each edge is refcounted by member exts).
+    fn retire_if_empty(&mut self, v: VertexId) {
+        let empty = self.nodes[v as usize]
+            .as_ref()
+            .map(|m| m.members.is_empty())
+            .unwrap_or(false);
+        if empty {
+            let meta = self.nodes[v as usize].take().unwrap();
+            self.node_of.remove(&meta.key);
+            self.conn.remove_vertex(v);
+        }
+    }
+
+    /// Does this replica set make the ext a live core primary?
+    fn is_core_primary(reps: &[Rep]) -> bool {
+        reps.iter().any(|r| r.primary && r.core)
+    }
+
+    /// Transform ext `e`'s stored replica set via `update`, keeping node
+    /// membership, star edges and the core counter in sync. Star edges are
+    /// desired-new-first so unchanged connectivity never transiently
+    /// splits (which would cause spurious relabel work).
+    fn rewire_ext(&mut self, e: u64, update: impl FnOnce(&mut Vec<Rep>)) {
+        let old_reps: Vec<Rep> = self.exts.get(&e).cloned().unwrap_or_default();
+        let old_nodes: Vec<VertexId> = old_reps
+            .iter()
+            .filter(|r| r.clustered)
+            .map(|r| self.node_of[&(r.shard, r.root)])
+            .collect();
+        let had_core = Self::is_core_primary(&old_reps);
+
+        let mut reps = old_reps;
+        update(&mut reps);
+
+        let mut new_nodes: Vec<VertexId> = Vec::with_capacity(reps.len());
+        for r in reps.iter().filter(|r| r.clustered) {
+            let key = (r.shard, r.root);
+            new_nodes.push(self.node_for(key));
+        }
+        if Self::is_core_primary(&reps) != had_core {
+            if had_core {
+                self.core_points -= 1;
+            } else {
+                self.core_points += 1;
+            }
+        }
+        // membership: drop old, then add new (shared nodes net out)
+        for &v in &old_nodes {
+            self.nodes[v as usize].as_mut().unwrap().members.remove(&e);
+        }
+        for &v in &new_nodes {
+            self.nodes[v as usize].as_mut().unwrap().members.insert(e);
+        }
+        // star edges: desire new before undesiring old
+        if let Some((&anchor, rest)) = new_nodes.split_first() {
+            for &n in rest {
+                self.conn.desire(anchor, n);
+            }
+        }
+        if let Some((&anchor, rest)) = old_nodes.split_first() {
+            for &n in rest {
+                self.conn.undesire(anchor, n);
+            }
+        }
+        for &v in &old_nodes {
+            self.retire_if_empty(v);
+        }
+        if reps.is_empty() {
+            self.exts.remove(&e);
+        } else {
+            self.exts.insert(e, reps);
+        }
+        self.label_dirty.insert(e);
+    }
+
+    fn apply_upsert(&mut self, shard: u32, p: SnapPoint) {
+        let rep = Rep {
+            shard,
+            root: p.root,
+            clustered: p.clustered,
+            primary: p.primary,
+            core: p.core,
+        };
+        self.rewire_ext(p.ext, |reps| {
+            match reps.iter().position(|r| r.shard == shard) {
+                Some(i) => reps[i] = rep,
+                None => reps.push(rep),
+            }
+        });
+    }
+
+    fn apply_removal(&mut self, shard: u32, ext: u64) {
+        self.rewire_ext(ext, |reps| {
+            if let Some(i) = reps.iter().position(|r| r.shard == shard) {
+                reps.remove(i);
+            }
+        });
+    }
+
+    /// Recompute labels for every ext whose own replicas or whose stitch
+    /// component changed this round — `O(relabeled)`.
+    fn relabel(&mut self) {
+        // component-id changes fan out to the member exts of every
+        // changed node
+        let nodes = &self.nodes;
+        let dirty = &mut self.label_dirty;
+        self.conn.drain_comp_changes(&mut |v| {
+            if let Some(Some(meta)) = nodes.get(v as usize) {
+                for &e in &meta.members {
+                    dirty.insert(e);
+                }
+            }
+        });
+        let dirty: Vec<u64> = self.label_dirty.drain().collect();
+        for ext in dirty {
+            let new_label: Option<i64> = match self.exts.get(&ext) {
+                None => None, // deleted
+                Some(reps) => {
+                    if !reps.iter().any(|r| r.primary) {
+                        // ghost-only replica set: deletes fan out to every
+                        // holder within the round, so this cannot survive
+                        // a round — stay defensive like the old stitcher
+                        None
+                    } else if let Some(r) = reps.iter().find(|r| r.clustered) {
+                        let v = self.node_of[&(r.shard, r.root)];
+                        let comp = self.conn.comp_id(v);
+                        let l = match self.comp_label.get(&comp) {
+                            Some(&l) => l,
+                            None => {
+                                let l = self.next_label;
+                                self.next_label += 1;
+                                self.comp_label.insert(comp, l);
+                                l
+                            }
+                        };
+                        Some(l)
+                    } else {
+                        Some(-1)
+                    }
+                }
+            };
+            let old = self.labels.get(ext);
+            if old == new_label {
+                continue;
+            }
+            if let Some(o) = old {
+                if o >= 0 {
+                    let c = self.sizes.get_mut(&o).expect("size of live label");
+                    *c -= 1;
+                    if *c == 0 {
+                        self.sizes.remove(&o);
+                    }
+                }
+            }
+            match new_label {
+                Some(l) => {
+                    self.labels.set(ext, l);
+                    if l >= 0 {
+                        *self.sizes.entry(l).or_insert(0) += 1;
+                    }
+                }
+                None => {
+                    self.labels.remove(ext);
+                }
+            }
+        }
+    }
+
+    /// Fold one round of per-shard deltas into the persistent state and
+    /// emit the next snapshot.
+    pub fn apply(&mut self, deltas: &[ShardDelta], seq: u64) -> GlobalSnapshot {
+        self.rounds += 1;
+        for d in deltas {
+            if d.shard < self.shard_live.len() {
+                self.shard_live[d.shard] = d.live;
+            }
+            let shard = d.shard as u32;
+            for &ext in &d.removals {
+                self.apply_removal(shard, ext);
+            }
+            for p in &d.upserts {
+                self.apply_upsert(shard, *p);
+            }
+        }
+        self.relabel();
+        // housekeeping off the per-round critical Δ path: occasional
+        // comp→label pruning (stale merged-away comps) and label-map
+        // re-sharding (amortized)
+        if self.rounds % 64 == 0 {
+            let conn = &self.conn;
+            let live: FxHashSet<u64> =
+                self.node_of.values().map(|&v| conn.comp_id(v)).collect();
+            self.comp_label.retain(|c, _| live.contains(c));
+        }
+        self.labels.maybe_grow();
+        let mut cluster_sizes: Vec<(i64, usize)> =
+            self.sizes.iter().map(|(&l, &s)| (l, s)).collect();
+        cluster_sizes.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        GlobalSnapshot {
+            seq,
+            clusters: self.sizes.len(),
+            live_points: self.labels.len(),
+            core_points: self.core_points,
+            shard_live: self.shard_live.clone(),
+            cluster_sizes,
+            label_of: self.labels.clone(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// from-scratch rebuild (explicit fallback + differential oracle)
+// ---------------------------------------------------------------------
 
 /// Aggregate per-ext state while scanning shard snapshots.
 struct ExtAgg {
@@ -78,9 +409,12 @@ struct ExtAgg {
     node: Option<usize>,
 }
 
-/// Stitch one snapshot round (one `ShardSnapshot` per shard) into a
-/// global label space.
-pub fn stitch(mut snaps: Vec<ShardSnapshot>, seq: u64) -> GlobalSnapshot {
+/// Stitch one full-snapshot round (one [`ShardSnapshot`] per shard) into
+/// a global label space from scratch — `O(n log n)` in live points. This
+/// is the `StitchMode::FullRebuild` fallback and the oracle the delta
+/// path is differentially tested against; the serving default is the
+/// incremental [`Stitcher`].
+pub fn stitch_full(mut snaps: Vec<ShardSnapshot>, seq: u64) -> GlobalSnapshot {
     snaps.sort_by_key(|s| s.shard);
     // 1) index the (shard, local root) nodes of all clustered replicas
     let mut node_ix: FxHashMap<(usize, u64), usize> = FxHashMap::default();
@@ -120,7 +454,7 @@ pub fn stitch(mut snaps: Vec<ShardSnapshot>, seq: u64) -> GlobalSnapshot {
     // 3) dense global labels over primary points
     let mut root_label: FxHashMap<usize, i64> = FxHashMap::default();
     let mut sizes: FxHashMap<i64, usize> = FxHashMap::default();
-    let mut labels: Vec<(u64, i64)> = Vec::new();
+    let mut label_of = LabelMap::new();
     let mut core_points = 0usize;
     for (&ext, agg) in by_ext.iter() {
         if !agg.primary_seen {
@@ -143,19 +477,16 @@ pub fn stitch(mut snaps: Vec<ShardSnapshot>, seq: u64) -> GlobalSnapshot {
         if label >= 0 {
             *sizes.entry(label).or_insert(0) += 1;
         }
-        labels.push((ext, label));
+        label_of.set(ext, label);
     }
-    labels.sort_unstable_by_key(|&(e, _)| e);
     let mut cluster_sizes: Vec<(i64, usize)> = sizes.into_iter().collect();
     cluster_sizes.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-    let label_of: FxHashMap<u64, i64> = labels.iter().copied().collect();
     GlobalSnapshot {
         seq,
         clusters: root_label.len(),
-        live_points: labels.len(),
+        live_points: label_of.len(),
         core_points,
         shard_live: snaps.iter().map(|s| s.live).collect(),
-        labels,
         cluster_sizes,
         label_of,
     }
@@ -189,7 +520,7 @@ mod tests {
             points: vec![pt(3, 200, true, true, true), pt(4, 200, true, true, false)],
             live: 2,
         };
-        let g = stitch(vec![s1, s0], 7);
+        let g = stitch_full(vec![s1, s0], 7);
         assert_eq!(g.seq, 7);
         assert_eq!(g.live_points, 4); // exts 1,2,3,4 (3's ghost not counted)
         assert_eq!(g.clusters, 1);
@@ -217,7 +548,7 @@ mod tests {
             points: vec![pt(2, 20, true, true, true)],
             live: 1,
         };
-        let g = stitch(vec![s0, s1], 1);
+        let g = stitch_full(vec![s0, s1], 1);
         assert_eq!(g.clusters, 2);
         assert_ne!(g.cluster_of(1), g.cluster_of(2));
         assert_eq!(g.cluster_of(5), Some(-1));
@@ -242,9 +573,146 @@ mod tests {
             points: vec![pt(1, 20, true, false, false), pt(2, 20, true, true, true)],
             live: 2,
         };
-        let g = stitch(vec![s0, s1], 2);
+        let g = stitch_full(vec![s0, s1], 2);
         assert_eq!(g.clusters, 1);
         assert_eq!(g.cluster_of(1), g.cluster_of(2));
         assert!(g.cluster_of(1).unwrap() >= 0);
+    }
+
+    // -----------------------------------------------------------------
+    // incremental stitcher
+    // -----------------------------------------------------------------
+
+    fn delta(
+        shard: usize,
+        seq: u64,
+        upserts: Vec<SnapPoint>,
+        removals: Vec<u64>,
+        live: usize,
+    ) -> ShardDelta {
+        ShardDelta { shard, seq, upserts, removals, live }
+    }
+
+    #[test]
+    fn incremental_stitch_merges_and_unmerges_across_shards() {
+        let mut st = Stitcher::new(2, 1);
+        // round 1: two clusters joined by shared ext 3
+        let g = st.apply(
+            &[
+                delta(
+                    0,
+                    1,
+                    vec![
+                        pt(1, 100, true, true, true),
+                        pt(2, 100, true, true, false),
+                        pt(3, 100, true, false, false),
+                    ],
+                    vec![],
+                    3,
+                ),
+                delta(
+                    1,
+                    1,
+                    vec![pt(3, 200, true, true, true), pt(4, 200, true, true, false)],
+                    vec![],
+                    2,
+                ),
+            ],
+            1,
+        );
+        assert_eq!(g.clusters, 1);
+        assert_eq!(g.live_points, 4);
+        assert_eq!(g.core_points, 2);
+        let l = g.cluster_of(1).unwrap();
+        for e in [2u64, 3, 4] {
+            assert_eq!(g.cluster_of(e), Some(l), "ext {e} not stitched");
+        }
+        assert_eq!(g.cluster_sizes, vec![(l, 4)]);
+        assert_eq!(g.shard_live, vec![3, 2]);
+
+        // round 2: the bridge ext 3 is deleted everywhere — the global
+        // cluster must split (the un-union the old rebuild sidestepped)
+        let g2 = st.apply(
+            &[
+                delta(0, 2, vec![], vec![3], 2),
+                delta(1, 2, vec![pt(4, 201, true, true, true)], vec![3], 1),
+            ],
+            2,
+        );
+        assert_eq!(g2.clusters, 2);
+        assert_eq!(g2.live_points, 3);
+        assert_eq!(g2.cluster_of(3), None);
+        assert_ne!(g2.cluster_of(1), g2.cluster_of(4));
+        // exts 1 and 2 stay co-clustered through the split
+        assert_eq!(g2.cluster_of(1), g2.cluster_of(2));
+
+        // round 3: re-bridge — one cluster again, labels stay stable for
+        // the larger (surviving) side
+        let g3 = st.apply(
+            &[
+                delta(0, 3, vec![pt(3, 100, true, false, false)], vec![], 3),
+                delta(1, 3, vec![pt(3, 201, true, true, true)], vec![], 2),
+            ],
+            3,
+        );
+        assert_eq!(g3.clusters, 1);
+        assert_eq!(g3.live_points, 4);
+        assert_eq!(g3.cluster_of(1), g3.cluster_of(4));
+    }
+
+    #[test]
+    fn incremental_matches_full_rebuild_on_the_same_state() {
+        // identical rounds fed both ways must agree on the partition
+        let ups0 = vec![
+            pt(1, 10, true, true, true),
+            pt(5, 11, false, true, false),
+            pt(7, 10, true, true, false),
+        ];
+        let ups1 = vec![pt(2, 20, true, true, true), pt(7, 21, true, false, true)];
+        let mut st = Stitcher::new(2, 3);
+        let inc = st.apply(
+            &[
+                delta(0, 1, ups0.clone(), vec![], 3),
+                delta(1, 1, ups1.clone(), vec![], 2),
+            ],
+            1,
+        );
+        let full = stitch_full(
+            vec![
+                ShardSnapshot { shard: 0, seq: 1, points: ups0, live: 3 },
+                ShardSnapshot { shard: 1, seq: 1, points: ups1, live: 2 },
+            ],
+            1,
+        );
+        assert_eq!(inc.clusters, full.clusters);
+        assert_eq!(inc.live_points, full.live_points);
+        assert_eq!(inc.core_points, full.core_points);
+        assert_eq!(inc.cluster_of(5), Some(-1));
+        // same partition up to label renaming
+        let a = inc.labels();
+        let b = full.labels();
+        assert_eq!(a.len(), b.len());
+        let mut rename: FxHashMap<i64, i64> = FxHashMap::default();
+        for (&(ea, la), &(eb, lb)) in a.iter().zip(b.iter()) {
+            assert_eq!(ea, eb);
+            if la < 0 || lb < 0 {
+                assert_eq!(la < 0, lb < 0, "noise disagreement at ext {ea}");
+                continue;
+            }
+            assert_eq!(*rename.entry(la).or_insert(lb), lb, "partition mismatch");
+        }
+    }
+
+    #[test]
+    fn label_state_is_cow_shared_between_snapshots() {
+        let mut st = Stitcher::new(1, 9);
+        let ups: Vec<SnapPoint> =
+            (0..500).map(|e| pt(e, 5, true, true, true)).collect();
+        let _g1 = st.apply(&[delta(0, 1, ups, vec![], 500)], 1);
+        // one changed ext → at most a couple of label chunks deep-copied
+        let g2 =
+            st.apply(&[delta(0, 2, vec![pt(7, 5, false, true, false)], vec![], 500)], 2);
+        assert_eq!(g2.cluster_of(7), Some(-1));
+        assert_eq!(g2.live_points, 500);
     }
 }

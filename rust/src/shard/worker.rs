@@ -1,12 +1,22 @@
 //! Shard worker: one thread owning one private `DynamicDbscan`, draining a
-//! bounded channel of [`ShardBatch`]es.
+//! bounded channel of [`ShardBatch`]es. The same per-shard state
+//! ([`ShardCore`]) also runs **inline** in the engine thread when
+//! `shards == 1`, so the single-shard configuration degenerates to the
+//! direct path with no channel hop (see `shard::engine`).
 //!
 //! Workers know nothing about routing — they apply the inserts (primary or
 //! ghost) and deletes the engine sends, track per-op latency, and answer
-//! `Snapshot` markers with their current `(ext → local cluster root)`
-//! assignment. Because the marker travels the same channel as the ops,
-//! a snapshot reply reflects exactly the ops sent before it (per-channel
-//! FIFO) — the engine uses this as a barrier.
+//! marker ops riding the same channel (per-channel FIFO makes every reply
+//! a barrier over the ops sent before it):
+//!
+//! * [`ShardOp::Delta`] — the serving default: reply with the
+//!   `(ext, local-root)` assignments that **changed** since the previous
+//!   delta report (`O(Δ)`, driven by `DynamicDbscan`'s stitch-change
+//!   tracking), plus the exts no longer held;
+//! * [`ShardOp::Snapshot`] — full `(ext → local root)` dump (`O(live)`),
+//!   kept for the full-rebuild fallback and the differential tests;
+//! * [`ShardOp::Sync`] — bare ack: barrier without consuming the
+//!   delta-tracking state (benches use it to isolate publish latency).
 //!
 //! ## Batch wire format
 //!
@@ -21,7 +31,7 @@
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
-use rustc_hash::FxHashMap;
+use rustc_hash::{FxHashMap, FxHashSet};
 
 use crate::dbscan::{DbscanConfig, DynamicDbscan, RepairStats};
 use crate::lsh::table::PointId;
@@ -40,8 +50,19 @@ pub enum ShardOp {
     Delete {
         ext: u64,
     },
-    /// Publish a [`ShardSnapshot`] for all ops received so far.
+    /// Publish a full [`ShardSnapshot`] for all ops received so far
+    /// (fallback / differential-testing path).
     Snapshot {
+        seq: u64,
+    },
+    /// Publish a [`ShardDelta`] of changes since the previous delta
+    /// report (the serving default).
+    Delta {
+        seq: u64,
+    },
+    /// Reply [`ShardReply::Sync`] once every prior op has been applied —
+    /// a barrier that leaves the delta-tracking state untouched.
+    Sync {
         seq: u64,
     },
 }
@@ -60,9 +81,24 @@ impl ShardBatch {
         Self::default()
     }
 
-    /// A control batch carrying only a snapshot marker.
+    /// A control batch carrying a single marker op.
+    pub fn marker(op: ShardOp) -> Self {
+        ShardBatch { ops: vec![op], coords: Vec::new() }
+    }
+
+    /// A control batch carrying only a full-snapshot marker.
     pub fn snapshot(seq: u64) -> Self {
-        ShardBatch { ops: vec![ShardOp::Snapshot { seq }], coords: Vec::new() }
+        Self::marker(ShardOp::Snapshot { seq })
+    }
+
+    /// A control batch carrying only a delta marker.
+    pub fn delta(seq: u64) -> Self {
+        Self::marker(ShardOp::Delta { seq })
+    }
+
+    /// A control batch carrying only a sync barrier.
+    pub fn sync(seq: u64) -> Self {
+        Self::marker(ShardOp::Sync { seq })
     }
 
     pub fn is_empty(&self) -> bool {
@@ -88,12 +124,12 @@ impl ShardBatch {
     }
 }
 
-/// One point's state inside one shard, as of a snapshot.
-#[derive(Clone, Debug)]
+/// One point's state inside one shard, as of a snapshot or delta upsert.
+#[derive(Clone, Copy, Debug)]
 pub struct SnapPoint {
     pub ext: u64,
-    /// local cluster root (canonical forest root; meaningful when
-    /// `clustered`)
+    /// local cluster root (**stable** across restructures — see
+    /// `DynamicDbscan::stable_cluster`; meaningful when `clustered`)
     pub root: u64,
     /// core, or non-core attached to a core — i.e. not noise locally
     pub clustered: bool,
@@ -101,7 +137,7 @@ pub struct SnapPoint {
     pub core: bool,
 }
 
-/// A shard's reply to a `Snapshot` marker.
+/// A shard's reply to a `Snapshot` marker: its full state.
 #[derive(Clone, Debug)]
 pub struct ShardSnapshot {
     pub shard: usize,
@@ -109,6 +145,28 @@ pub struct ShardSnapshot {
     pub points: Vec<SnapPoint>,
     /// live points in this shard, ghosts included
     pub live: usize,
+}
+
+/// A shard's reply to a `Delta` marker: only what changed since its
+/// previous delta report.
+#[derive(Clone, Debug)]
+pub struct ShardDelta {
+    pub shard: usize,
+    pub seq: u64,
+    /// replicas whose stitch-visible state changed (or appeared)
+    pub upserts: Vec<SnapPoint>,
+    /// exts this shard no longer holds
+    pub removals: Vec<u64>,
+    /// live points in this shard, ghosts included
+    pub live: usize,
+}
+
+/// Worker → engine replies (all marker kinds share one channel).
+#[derive(Clone, Debug)]
+pub enum ShardReply {
+    Full(ShardSnapshot),
+    Delta(ShardDelta),
+    Sync { shard: usize, seq: u64 },
 }
 
 /// Final accounting returned when a worker's channel closes.
@@ -127,40 +185,100 @@ pub struct WorkerReport {
     pub conn: RepairStats,
 }
 
-/// Worker loop: runs until the op channel disconnects. Snapshot sends are
-/// best-effort (a vanished engine just ends the run).
-pub fn run_worker(
+/// Replica state as last reported to the stitcher:
+/// `(root, clustered, primary, core)`.
+type RepState = (u64, bool, bool, bool);
+
+/// The per-shard engine state: a private `DynamicDbscan` with
+/// ext-id bookkeeping, latency accounting and delta-report tracking.
+/// Driven either by a worker thread ([`run_worker`]) or inline by the
+/// engine when `shards == 1`.
+pub struct ShardCore {
     shard: usize,
-    cfg: DbscanConfig,
-    seed: u64,
-    rx: Receiver<ShardBatch>,
-    snap_tx: Sender<ShardSnapshot>,
-) -> WorkerReport {
-    let (dim, t) = (cfg.dim, cfg.t);
-    let mut db = DynamicDbscan::new(cfg, seed);
-    let mut ext_map: FxHashMap<u64, (PointId, bool)> = FxHashMap::default();
-    let mut keybuf: Vec<BucketKey> = Vec::new();
-    let mut scratch: Vec<i32> = Vec::new();
-    let mut report = WorkerReport {
-        shard,
-        primary_inserts: 0,
-        ghost_inserts: 0,
-        deletes: 0,
-        add_latency: LatencyHisto::new(),
-        delete_latency: LatencyHisto::new(),
-        busy_s: 0.0,
-        conn: RepairStats::default(),
-    };
-    for batch in rx.iter() {
+    dim: usize,
+    t: usize,
+    /// delta-report tracking on? Off in `StitchMode::FullRebuild` engines:
+    /// nothing ever drains the dirty set there, so recording into it would
+    /// grow it without bound (and the comp-event bookkeeping would be pure
+    /// overhead).
+    track: bool,
+    db: DynamicDbscan,
+    /// ext → (pid, primary)
+    ext_map: FxHashMap<u64, (PointId, bool)>,
+    /// pid → ext (resolves the dbscan layer's dirty points)
+    ext_of: FxHashMap<PointId, u64>,
+    /// state as last shipped in a delta (absent = never reported)
+    reported: FxHashMap<u64, RepState>,
+    /// exts touched since the last delta report
+    dirty: FxHashSet<u64>,
+    keybuf: Vec<BucketKey>,
+    scratch: Vec<i32>,
+    pub report: WorkerReport,
+}
+
+impl ShardCore {
+    pub fn new(shard: usize, cfg: DbscanConfig, seed: u64, track: bool) -> Self {
+        let (dim, t) = (cfg.dim, cfg.t);
+        let mut db = DynamicDbscan::new(cfg, seed);
+        if track {
+            db.enable_stitch_tracking();
+        }
+        ShardCore {
+            shard,
+            dim,
+            t,
+            track,
+            db,
+            ext_map: FxHashMap::default(),
+            ext_of: FxHashMap::default(),
+            reported: FxHashMap::default(),
+            dirty: FxHashSet::default(),
+            keybuf: Vec::new(),
+            scratch: Vec::new(),
+            report: WorkerReport {
+                shard,
+                primary_inserts: 0,
+                ghost_inserts: 0,
+                deletes: 0,
+                add_latency: LatencyHisto::new(),
+                delete_latency: LatencyHisto::new(),
+                busy_s: 0.0,
+                conn: RepairStats::default(),
+            },
+        }
+    }
+
+    /// Fold the dbscan layer's dirty points into the dirty-ext set.
+    fn drain_dirty(&mut self) {
+        let ext_of = &self.ext_of;
+        let dirty = &mut self.dirty;
+        self.db.drain_stitch_changes(&mut |pid| {
+            if let Some(&e) = ext_of.get(&pid) {
+                dirty.insert(e);
+            }
+        });
+    }
+
+    /// Apply one batch — ops plus any marker replies (via `reply`).
+    pub fn apply(&mut self, batch: &ShardBatch, reply: &mut dyn FnMut(ShardReply)) {
         let t0 = Instant::now();
         // hash every insert row of the batch in one pass per hash function
         let n_ins = batch.inserts();
-        debug_assert_eq!(batch.coords.len(), n_ins * dim, "batch coords misaligned");
-        keybuf.clear();
-        keybuf.resize(n_ins * t, 0);
+        debug_assert_eq!(
+            batch.coords.len(),
+            n_ins * self.dim,
+            "batch coords misaligned"
+        );
+        self.keybuf.clear();
+        self.keybuf.resize(n_ins * self.t, 0);
         let hash_ns_per_insert = if n_ins > 0 {
             let h0 = Instant::now();
-            db.hasher.keys_batch_into(&batch.coords, n_ins, &mut scratch, &mut keybuf);
+            self.db.hasher.keys_batch_into(
+                &batch.coords,
+                n_ins,
+                &mut self.scratch,
+                &mut self.keybuf,
+            );
             // amortize the batch hash over its inserts so the recorded
             // per-op add latency stays comparable with the single-instance
             // path (which hashes inside the timed add_point call)
@@ -172,50 +290,136 @@ pub fn run_worker(
         for op in &batch.ops {
             match *op {
                 ShardOp::Insert { ext, primary } => {
-                    let x = &batch.coords[row * dim..(row + 1) * dim];
-                    let keys = &keybuf[row * t..(row + 1) * t];
+                    let x = &batch.coords[row * self.dim..(row + 1) * self.dim];
+                    let keys = &self.keybuf[row * self.t..(row + 1) * self.t];
                     row += 1;
                     let o0 = Instant::now();
-                    let pid = db.add_point_with_keys(x, keys);
-                    report
+                    let pid = self.db.add_point_with_keys(x, keys);
+                    self.report
                         .add_latency
                         .record(o0.elapsed().as_nanos() as u64 + hash_ns_per_insert);
                     if primary {
-                        report.primary_inserts += 1;
+                        self.report.primary_inserts += 1;
                     } else {
-                        report.ghost_inserts += 1;
+                        self.report.ghost_inserts += 1;
                     }
-                    let prev = ext_map.insert(ext, (pid, primary));
-                    assert!(prev.is_none(), "shard {shard}: duplicate insert of ext {ext}");
+                    let prev = self.ext_map.insert(ext, (pid, primary));
+                    assert!(
+                        prev.is_none(),
+                        "shard {}: duplicate insert of ext {ext}",
+                        self.shard
+                    );
+                    self.ext_of.insert(pid, ext);
+                    if self.track {
+                        self.dirty.insert(ext);
+                        self.drain_dirty();
+                    }
                 }
                 ShardOp::Delete { ext } => {
-                    let (pid, _) = ext_map
-                        .remove(&ext)
-                        .unwrap_or_else(|| panic!("shard {shard}: delete of unknown ext {ext}"));
+                    let (pid, _) = self.ext_map.remove(&ext).unwrap_or_else(|| {
+                        panic!("shard {}: delete of unknown ext {ext}", self.shard)
+                    });
+                    self.ext_of.remove(&pid);
+                    if self.track {
+                        self.dirty.insert(ext);
+                    }
                     let o0 = Instant::now();
-                    db.delete_point(pid);
-                    report.delete_latency.record(o0.elapsed().as_nanos() as u64);
-                    report.deletes += 1;
+                    self.db.delete_point(pid);
+                    self.report
+                        .delete_latency
+                        .record(o0.elapsed().as_nanos() as u64);
+                    self.report.deletes += 1;
+                    if self.track {
+                        self.drain_dirty();
+                    }
                 }
                 ShardOp::Snapshot { seq } => {
-                    let mut points = Vec::with_capacity(ext_map.len());
-                    for (&ext, &(pid, primary)) in ext_map.iter() {
-                        points.push(SnapPoint {
-                            ext,
-                            root: db.get_cluster(pid),
-                            clustered: !db.is_noise(pid),
-                            primary,
-                            core: db.is_core(pid),
-                        });
-                    }
-                    let snap =
-                        ShardSnapshot { shard, seq, points, live: db.num_points() };
-                    let _ = snap_tx.send(snap);
+                    reply(ShardReply::Full(self.full_snapshot(seq)))
+                }
+                ShardOp::Delta { seq } => reply(ShardReply::Delta(self.delta(seq))),
+                ShardOp::Sync { seq } => {
+                    reply(ShardReply::Sync { shard: self.shard, seq })
                 }
             }
         }
-        report.busy_s += t0.elapsed().as_secs_f64();
+        self.report.busy_s += t0.elapsed().as_secs_f64();
     }
-    report.conn = db.repair_stats();
-    report
+
+    /// Current stitch-visible state of a live ext.
+    fn state_of(&self, pid: PointId, primary: bool) -> RepState {
+        let clustered = !self.db.is_noise(pid);
+        let root = if clustered { self.db.stable_cluster(pid) } else { 0 };
+        (root, clustered, primary, self.db.is_core(pid))
+    }
+
+    /// Build the delta report: scan only the exts touched since the last
+    /// report and ship the ones whose state actually changed — `O(Δ)`.
+    pub fn delta(&mut self, seq: u64) -> ShardDelta {
+        debug_assert!(self.track, "delta report from a non-tracking core");
+        let mut upserts = Vec::new();
+        let mut removals = Vec::new();
+        let touched: Vec<u64> = self.dirty.drain().collect();
+        for ext in touched {
+            match self.ext_map.get(&ext) {
+                Some(&(pid, primary)) => {
+                    let state = self.state_of(pid, primary);
+                    if self.reported.get(&ext) != Some(&state) {
+                        self.reported.insert(ext, state);
+                        let (root, clustered, primary, core) = state;
+                        upserts.push(SnapPoint { ext, root, clustered, primary, core });
+                    }
+                }
+                None => {
+                    if self.reported.remove(&ext).is_some() {
+                        removals.push(ext);
+                    }
+                }
+            }
+        }
+        ShardDelta {
+            shard: self.shard,
+            seq,
+            upserts,
+            removals,
+            live: self.db.num_points(),
+        }
+    }
+
+    /// Full `(ext → local root)` dump — the `O(live)` fallback path; does
+    /// not disturb the delta-tracking state.
+    pub fn full_snapshot(&self, seq: u64) -> ShardSnapshot {
+        let mut points = Vec::with_capacity(self.ext_map.len());
+        for (&ext, &(pid, primary)) in self.ext_map.iter() {
+            let (root, clustered, primary, core) = self.state_of(pid, primary);
+            points.push(SnapPoint { ext, root, clustered, primary, core });
+        }
+        ShardSnapshot { shard: self.shard, seq, points, live: self.db.num_points() }
+    }
+
+    /// Final accounting (fills in the connectivity counters).
+    pub fn into_report(self) -> WorkerReport {
+        let mut report = self.report;
+        report.conn = self.db.repair_stats();
+        report
+    }
+}
+
+/// Worker loop: runs until the op channel disconnects. Marker replies are
+/// best-effort (a vanished engine just ends the run). `track` enables the
+/// delta-report plumbing (off for `StitchMode::FullRebuild` engines).
+pub fn run_worker(
+    shard: usize,
+    cfg: DbscanConfig,
+    seed: u64,
+    track: bool,
+    rx: Receiver<ShardBatch>,
+    reply_tx: Sender<ShardReply>,
+) -> WorkerReport {
+    let mut core = ShardCore::new(shard, cfg, seed, track);
+    for batch in rx.iter() {
+        core.apply(&batch, &mut |r| {
+            let _ = reply_tx.send(r);
+        });
+    }
+    core.into_report()
 }

@@ -1,0 +1,175 @@
+//! Delta-snapshot differential property tests: a chain of delta-published
+//! `GlobalSnapshot`s must stay **label-isomorphic** to a from-scratch
+//! stitch rebuild of the same engine state after every batch — the same
+//! oracle discipline `tests/churn.rs` applies to the single-instance
+//! structure (its Definition-4 ground truth is the per-shard worker here;
+//! the stitch layer's oracle is the old union-find rebuild, now kept as
+//! the explicit `stitch_full` fallback).
+//!
+//! The schedules deliberately include delete-heavy phases that carve
+//! bridges out of clusters, forcing cross-shard cluster **splits** — the
+//! un-union case the old per-snapshot rebuild existed to sidestep and the
+//! HDT-backed stitch graph must now handle incrementally.
+
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::dbscan::DbscanConfig;
+use dyn_dbscan::shard::{stitch_full, GlobalSnapshot, ShardConfig, ShardedEngine};
+use dyn_dbscan::util::proptest::{run_prop, Gen};
+use rustc_hash::FxHashMap;
+
+/// Assert the two snapshots describe the same clustering: identical live
+/// ext sets, identical noise sets, and a label bijection between the
+/// clustered partitions (plus equal aggregate counters).
+fn assert_label_isomorphic(delta: &GlobalSnapshot, full: &GlobalSnapshot, ctx: &str) {
+    assert_eq!(delta.live_points, full.live_points, "{ctx}: live_points");
+    assert_eq!(delta.clusters, full.clusters, "{ctx}: clusters");
+    assert_eq!(delta.core_points, full.core_points, "{ctx}: core_points");
+    assert_eq!(delta.shard_live, full.shard_live, "{ctx}: shard_live");
+    let a = delta.labels();
+    let b = full.labels();
+    assert_eq!(a.len(), b.len(), "{ctx}: label count");
+    let mut fwd: FxHashMap<i64, i64> = FxHashMap::default();
+    let mut bwd: FxHashMap<i64, i64> = FxHashMap::default();
+    for (&(ea, la), &(eb, lb)) in a.iter().zip(b.iter()) {
+        assert_eq!(ea, eb, "{ctx}: live ext sets diverge at {ea} vs {eb}");
+        assert_eq!(la < 0, lb < 0, "{ctx}: noise flag diverges at ext {ea}");
+        if la < 0 {
+            continue;
+        }
+        assert_eq!(
+            *fwd.entry(la).or_insert(lb),
+            lb,
+            "{ctx}: delta label {la} maps to two rebuild labels (ext {ea})"
+        );
+        assert_eq!(
+            *bwd.entry(lb).or_insert(la),
+            la,
+            "{ctx}: rebuild label {lb} maps to two delta labels (ext {ea})"
+        );
+    }
+    // size multisets must agree too
+    let mut sa: Vec<usize> = delta.cluster_sizes.iter().map(|&(_, s)| s).collect();
+    let mut sb: Vec<usize> = full.cluster_sizes.iter().map(|&(_, s)| s).collect();
+    sa.sort_unstable();
+    sb.sort_unstable();
+    assert_eq!(sa, sb, "{ctx}: cluster size multisets");
+}
+
+/// Randomized insert/delete schedules over a sharded engine in delta
+/// mode; after every batch the published delta snapshot is checked
+/// against `stitch_full` of a fresh full dump of the same workers.
+#[test]
+fn delta_snapshot_chain_matches_full_rebuild() {
+    run_prop("delta snapshots vs full rebuild", 8, |g: &mut Gen| {
+        let dim = g.usize_in(2..=4);
+        let shards = *g.choose(&[1usize, 2, 3, 4]);
+        let n = g.usize_in(300..=700);
+        let ds = make_blobs(
+            &BlobsConfig {
+                n,
+                dim,
+                clusters: g.usize_in(2..=5),
+                std: 0.35,
+                center_box: 16.0,
+                weights: vec![],
+            },
+            g.rng.next_u64(),
+        );
+        let cfg = DbscanConfig {
+            k: g.usize_in(4..=8),
+            t: 8,
+            eps: 0.75,
+            dim,
+            ..Default::default()
+        };
+        let mut scfg = ShardConfig::new(cfg, shards, g.rng.next_u64());
+        if g.rng.coin(0.5) {
+            // small blocks force real cross-shard stitching
+            scfg.block_side = 2;
+        }
+        let mut eng = ShardedEngine::new(scfg);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next = 0usize;
+        let mut round = 0usize;
+        while next < n || !live.is_empty() {
+            round += 1;
+            // insert phase, then (every other round) a delete-heavy phase
+            let ins = (g.usize_in(20..=80)).min(n - next);
+            for _ in 0..ins {
+                eng.insert(next as u64, ds.point(next));
+                live.push(next as u64);
+                next += 1;
+            }
+            let delete_heavy = round % 2 == 0 || next >= n;
+            if delete_heavy && !live.is_empty() {
+                let dels = g.usize_in(1..=live.len().min(60));
+                for _ in 0..dels {
+                    let i = g.rng.below_usize(live.len());
+                    let e = live.swap_remove(i);
+                    eng.delete(e);
+                }
+            }
+            let snap = eng.publish();
+            let reference = stitch_full(eng.full_dump(), snap.seq);
+            assert_label_isomorphic(&snap, &reference, &format!("round {round}"));
+            if next >= n && live.len() < 30 {
+                // drain the tail and stop
+                while let Some(e) = live.pop() {
+                    eng.delete(e);
+                }
+                let snap = eng.publish();
+                assert_eq!(snap.live_points, 0, "drained engine must be empty");
+                assert_eq!(snap.clusters, 0);
+                let reference = stitch_full(eng.full_dump(), snap.seq);
+                assert_label_isomorphic(&snap, &reference, "drained");
+                break;
+            }
+        }
+        let _ = eng.finish();
+    });
+}
+
+/// Deterministic split-forcing schedule: a 1-D bucket chain spanning
+/// every shard boundary, with mid-chain block deletions that split one
+/// global cluster into two — repeatedly, at different cut points — then
+/// re-insertions that re-merge it. The delta chain must track every
+/// split/merge exactly.
+#[test]
+fn cross_shard_splits_and_remerges_match_rebuild() {
+    let cfg = DbscanConfig { k: 6, t: 4, eps: 0.4, dim: 1, ..Default::default() };
+    let mut scfg = ShardConfig::new(cfg, 3, 11);
+    scfg.block_side = 4; // many boundaries along the chain
+    let mut eng = ShardedEngine::new(scfg);
+    let n = 400usize;
+    let pts: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+    for (i, &x) in pts.iter().enumerate() {
+        eng.insert(i as u64, &[x]);
+    }
+    let first = eng.publish();
+    let reference = stitch_full(eng.full_dump(), first.seq);
+    assert_label_isomorphic(&first, &reference, "chain built");
+    assert!(
+        first.clusters >= 1,
+        "chain should cluster, got {}",
+        first.clusters
+    );
+    let mut rng = dyn_dbscan::util::rng::Rng::new(17);
+    let block = 16usize;
+    for round in 0..10 {
+        let start = 40 + rng.below_usize(n - 80 - block);
+        for i in start..start + block {
+            eng.delete(i as u64);
+        }
+        let snap = eng.publish();
+        let reference = stitch_full(eng.full_dump(), snap.seq);
+        assert_label_isomorphic(&snap, &reference, &format!("round {round} split"));
+        for i in start..start + block {
+            eng.insert(i as u64, &[pts[i]]);
+        }
+        let snap = eng.publish();
+        let reference = stitch_full(eng.full_dump(), snap.seq);
+        assert_label_isomorphic(&snap, &reference, &format!("round {round} merge"));
+    }
+    let out = eng.finish();
+    assert_eq!(out.snapshot.live_points, n);
+}

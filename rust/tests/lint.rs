@@ -75,3 +75,68 @@ fn no_component_walk_outside_the_repair_ablation() {
          single legacy RepairConn::replace call site"
     );
 }
+
+/// The Δ-charged tour walk (`for_each_tree_vertex`) exists solely for the
+/// stable-component event plumbing — one call site in the leveled
+/// structure's `comp_absorb`. It must never leak into the replacement
+/// search, the DBSCAN core or the shard layer, where it would reintroduce
+/// the `O(component)` walks this architecture removes.
+#[test]
+fn tree_walk_confined_to_comp_event_plumbing() {
+    let leveled = include_str!("../src/dbscan/leveled.rs");
+    assert_eq!(
+        leveled.matches("for_each_tree_vertex").count(),
+        1,
+        "leveled.rs must call for_each_tree_vertex only from comp_absorb"
+    );
+    for (name, src) in [
+        ("dbscan/mod.rs", include_str!("../src/dbscan/mod.rs")),
+        ("dbscan/connectivity.rs", include_str!("../src/dbscan/connectivity.rs")),
+        ("shard/stitch.rs", include_str!("../src/shard/stitch.rs")),
+        ("shard/worker.rs", include_str!("../src/shard/worker.rs")),
+        ("shard/engine.rs", include_str!("../src/shard/engine.rs")),
+    ] {
+        assert!(
+            !src.contains("for_each_tree_vertex"),
+            "{name} walks a full tree tour; only the comp-event plumbing \
+             in dbscan/leveled.rs may do that"
+        );
+    }
+}
+
+/// Full-rebuild stitching (`stitch_full` + full `ShardSnapshot` dumps) is
+/// the explicit fallback path, not the serving default: the engine may
+/// call it only from the `StitchMode::FullRebuild` publish arm (plus its
+/// own differential test), and the delta plumbing must never fall back to
+/// it silently.
+#[test]
+fn full_rebuild_stitching_confined_to_fallback_path() {
+    let engine = include_str!("../src/shard/engine.rs");
+    // one call in publish's FullRebuild arm + one in the in-file
+    // differential test (imports excluded by matching the call form)
+    assert_eq!(
+        engine.matches("stitch_full(").count(),
+        2,
+        "engine.rs must call stitch_full only from the FullRebuild \
+         publish arm and its differential test"
+    );
+    for (name, src) in [
+        ("shard/worker.rs", include_str!("../src/shard/worker.rs")),
+        ("shard/driver.rs", include_str!("../src/shard/driver.rs")),
+        ("shard/labels.rs", include_str!("../src/shard/labels.rs")),
+    ] {
+        assert!(
+            !src.contains("stitch_full"),
+            "{name} reaches for the full-rebuild stitcher; the serving \
+             path must stay incremental"
+        );
+    }
+    // the incremental stitcher must not materialize the full sorted label
+    // vector anywhere but the on-demand GlobalSnapshot::labels accessor
+    let stitch = include_str!("../src/shard/stitch.rs");
+    assert_eq!(
+        stitch.matches(".sorted()").count(),
+        1,
+        "stitch.rs must materialize sorted labels only in GlobalSnapshot::labels"
+    );
+}

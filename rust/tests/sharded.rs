@@ -161,7 +161,7 @@ fn cluster_sizes_are_consistent_with_labels() {
     }
     let out = eng.finish();
     let snap = &out.snapshot;
-    let clustered = snap.labels.iter().filter(|&&(_, l)| l >= 0).count();
+    let clustered = snap.labels().iter().filter(|&&(_, l)| l >= 0).count();
     let sized: usize = snap.cluster_sizes.iter().map(|&(_, s)| s).sum();
     assert_eq!(clustered, sized);
     assert_eq!(snap.cluster_sizes.len(), snap.clusters);
