@@ -1,17 +1,17 @@
-//! Batched ingestion: the allocation-free bulk API of `DynamicDbscan`.
+//! Batched ingestion through the serve façade's `apply` API.
 //!
 //! ```bash
 //! cargo run --release --example batched_ingest
 //! ```
 //!
-//! `add_points` hashes a whole flat batch in one cache-friendly pass per
-//! hash function; `apply_batch` mixes adds and deletes in a single call.
-//! Both are exactly equivalent to the per-op calls — only faster.
+//! `apply` hashes a whole batch in one cache-friendly pass per hash
+//! function and mixes upserts and removes in a single call. It is exactly
+//! equivalent to the per-op calls — only faster.
 
 use std::time::Instant;
 
 use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
-use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan, Op};
+use dyn_dbscan::serve::{ClusterEngine, EngineBuilder, Update};
 
 fn main() {
     let n = 20_000;
@@ -26,21 +26,24 @@ fn main() {
         },
         3,
     );
-    let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: 8, ..Default::default() };
 
-    // 1. bulk load: one flat row-major buffer, one call
-    let mut db = DynamicDbscan::new(cfg.clone(), 42);
+    // 1. bulk load: one Update batch, one call
+    let mut engine = EngineBuilder::new(8).seed(42).build().expect("engine");
+    let bulk: Vec<Update> = (0..n)
+        .map(|i| Update::Upsert { ext: i as u64, coords: ds.point(i) })
+        .collect();
     let t0 = Instant::now();
-    let ids = db.add_points(&ds.xs, n);
+    engine.apply(&bulk);
     let bulk_s = t0.elapsed().as_secs_f64();
+    let view = engine.publish();
     println!(
-        "add_points: {n} points in {bulk_s:.3}s ({:.0} adds/s), {} cores",
+        "apply (bulk): {n} points in {bulk_s:.3}s ({:.0} adds/s), {} cores",
         n as f64 / bulk_s,
-        db.num_core_points()
+        view.core_points()
     );
 
-    // 2. mixed batch: retire the first 1000 points while adding 1000 fresh
-    //    ones, in one apply_batch call
+    // 2. mixed batch: retire the first 1000 points while adding 1000
+    //    fresh ones, in one apply call
     let fresh = make_blobs(
         &BlobsConfig {
             n: 1000,
@@ -52,36 +55,38 @@ fn main() {
         },
         9,
     );
-    let mut ops: Vec<Op> = Vec::with_capacity(2000);
-    for &id in &ids[..1000] {
-        ops.push(Op::Delete(id));
+    let mut ops: Vec<Update> = Vec::with_capacity(2000);
+    for ext in 0..1000u64 {
+        ops.push(Update::Remove { ext });
     }
     for i in 0..fresh.n() {
-        ops.push(Op::Add(fresh.point(i)));
+        ops.push(Update::Upsert { ext: (n + i) as u64, coords: fresh.point(i) });
     }
     let t0 = Instant::now();
-    let new_ids = db.apply_batch(&ops);
+    engine.apply(&ops);
+    let view = engine.publish();
     println!(
-        "apply_batch: {} ops in {:.3}s; live={} (+{} fresh ids)",
+        "apply (mixed): {} ops in {:.3}s; live={}",
         ops.len(),
         t0.elapsed().as_secs_f64(),
-        db.num_points(),
-        new_ids.len()
+        view.live_points(),
     );
 
-    // 3. the per-op and batched paths agree exactly (same seed, same keys)
-    let mut reference = DynamicDbscan::new(cfg.clone(), 42);
+    // 3. the per-op and batched paths agree exactly (same seed ⇒ same
+    //    hashing ⇒ identical structures and labels)
+    let mut per_op = EngineBuilder::new(8).seed(42).build().expect("engine");
     for i in 0..n {
-        reference.add_point(ds.point(i));
+        per_op.upsert(i as u64, ds.point(i));
     }
-    let mut bulk = DynamicDbscan::new(cfg, 42);
-    bulk.add_points(&ds.xs, n);
+    let mut batched = EngineBuilder::new(8).seed(42).build().expect("engine");
+    batched.apply(&bulk);
+    let a = per_op.publish();
+    let b = batched.publish();
     println!(
         "per-op vs batched bulk load agree: {}",
-        reference.num_core_points() == bulk.num_core_points()
-            && reference.stats == bulk.stats
+        a.labels() == b.labels() && a.core_points() == b.core_points()
     );
 
-    db.verify().expect("invariants hold after batched churn");
+    engine.verify().expect("invariants hold after batched churn");
     println!("invariants OK — batched ingest done");
 }

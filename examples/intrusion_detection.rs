@@ -4,18 +4,20 @@
 //! quickly the dynamic structure surfaces them.
 //!
 //! The stream interleaves background traffic with a burst of "smurf-like"
-//! attack records injected midway; a static or fixed-core clustering would
-//! need a full recompute to see the new cluster — `DynamicDbscan` exposes
-//! it within one batch.
+//! attack records injected midway. Detection runs on the serve façade's
+//! read surface: publish after each batch, then probe the snapshot —
+//! label coherence of the attack records, cluster sizes, and the
+//! `watch()` event stream announcing the freshly formed cluster.
 //!
 //! ```bash
 //! cargo run --release --example intrusion_detection
 //! ```
 
 use dyn_dbscan::data::synth::{load, PaperDataset};
-use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
 use dyn_dbscan::experiments::{PAPER_EPS, PAPER_K, PAPER_T};
+use dyn_dbscan::serve::{ClusterEngine, ClusterEvent, EngineBuilder};
 use dyn_dbscan::util::rng::Rng;
+use rustc_hash::FxHashMap;
 
 fn main() {
     let seed = 7;
@@ -27,19 +29,21 @@ fn main() {
         ds.dim,
         ds.num_clusters()
     );
-    let cfg = DbscanConfig {
-        k: PAPER_K,
-        t: PAPER_T,
-        eps: PAPER_EPS,
-        dim: ds.dim,
-        eager_attach: true, // serving mode: adopt stragglers immediately
-    };
-    let mut db = DynamicDbscan::new(cfg, seed);
+    let mut engine = EngineBuilder::new(ds.dim)
+        .k(PAPER_K)
+        .t(PAPER_T)
+        .eps(PAPER_EPS)
+        .eager_attach(true) // serving mode: adopt stragglers immediately
+        .seed(seed)
+        .build()
+        .expect("engine");
+    let events = engine.watch();
     let mut rng = Rng::new(seed ^ 0xFEED);
 
     // a previously unseen attack signature: tight cluster far from data
     let attack_center: Vec<f32> = (0..ds.dim).map(|j| 6.0 + (j % 3) as f32).collect();
     let mut attack_ids: Vec<u64> = Vec::new();
+    let attack_base = ds.n() as u64; // ext key space above the dataset rows
 
     let batch = 500;
     let inject_at = ds.n() / 2;
@@ -49,37 +53,54 @@ fn main() {
     while inserted < ds.n() {
         let end = (inserted + batch).min(ds.n());
         for i in inserted..end {
-            db.add_point(ds.point(i));
+            engine.upsert(i as u64, ds.point(i));
         }
         // injection: a burst of 80 attack records in one batch
         if inserted < inject_at && end >= inject_at {
-            for _ in 0..80 {
+            for r in 0..80u64 {
                 let p: Vec<f32> = attack_center
                     .iter()
                     .map(|&c| c + 0.05 * rng.normal() as f32)
                     .collect();
-                attack_ids.push(db.add_point(&p));
+                let ext = attack_base + r;
+                engine.upsert(ext, &p);
+                attack_ids.push(ext);
             }
-            println!(
-                "batch {batches}: >>> injected attack burst (80 records) <<<"
-            );
+            println!("batch {batches}: >>> injected attack burst (80 records) <<<");
         }
         inserted = end;
         batches += 1;
+        let view = engine.publish();
 
         // detection probe: is the attack burst a coherent dense cluster?
         if !attack_ids.is_empty() {
-            let cores = attack_ids.iter().filter(|&&p| db.is_core(p)).count();
-            let same = {
-                let c0 = db.get_cluster(attack_ids[0]);
-                attack_ids.iter().filter(|&&p| db.get_cluster(p) == c0).count()
-            };
+            let cores = attack_ids.iter().filter(|&&a| view.is_core(a)).count();
+            let mut by_label: FxHashMap<i64, usize> = FxHashMap::default();
+            for &a in &attack_ids {
+                if let Some(l) = view.label(a) {
+                    if l >= 0 {
+                        *by_label.entry(l).or_insert(0) += 1;
+                    }
+                }
+            }
+            let (modal, same) = by_label
+                .iter()
+                .max_by_key(|&(_, &c)| c)
+                .map(|(&l, &c)| (Some(l), c))
+                .unwrap_or((None, 0));
             println!(
-                "batch {batches}: live={} attack cores={cores}/80, largest-attack-cluster={same}/80",
-                db.num_points()
+                "batch {batches}: v{} live={} attack cores={cores}/80, \
+                 largest-attack-cluster={same}/80",
+                view.version(),
+                view.live_points()
             );
-            if cores >= 60 && same >= 70 && batches % 4 == 0 {
-                println!("batch {batches}: ALERT — dense novel cluster stable");
+            if let Some(l) = modal {
+                if cores >= 60 && same >= 70 && view.cluster_members(l).len() <= 100
+                {
+                    println!(
+                        "batch {batches}: ALERT — dense novel cluster #{l} stable"
+                    );
+                }
             }
         }
     }
@@ -89,15 +110,37 @@ fn main() {
         t0.elapsed().as_secs_f64(),
         (ds.n() + 80) as f64 / t0.elapsed().as_secs_f64()
     );
-    // the attack cluster must be detected as core + coherent
-    let cores = attack_ids.iter().filter(|&&p| db.is_core(p)).count();
+    // the attack burst must be detected as dense (core points) and
+    // coherent (≥ 70/80 sharing one cluster label) in the final snapshot
+    let view = engine.snapshot();
+    let cores = attack_ids.iter().filter(|&&a| view.is_core(a)).count();
     assert!(cores > 60, "attack burst not detected as dense ({cores}/80 cores)");
-    println!("attack burst detected: {cores}/80 records are core points");
+    let mut by_label: FxHashMap<i64, usize> = FxHashMap::default();
+    for &a in &attack_ids {
+        if let Some(l) = view.label(a) {
+            if l >= 0 {
+                *by_label.entry(l).or_insert(0) += 1;
+            }
+        }
+    }
+    let same = by_label.values().copied().max().unwrap_or(0);
+    assert!(same >= 70, "attack burst not coherent ({same}/80 in one cluster)");
+    println!(
+        "attack burst detected: {cores}/80 core, {same}/80 in one dense cluster"
+    );
+    // the event stream announced new clusters as they formed
+    let formed = events
+        .drain()
+        .iter()
+        .filter(|e| matches!(e, ClusterEvent::Formed { .. }))
+        .count();
+    println!("cluster events: {formed} Formed since stream start");
 
     // forensic cleanup: retract the attack records (e.g. after mitigation)
-    for p in attack_ids {
-        db.delete_point(p);
+    for a in attack_ids {
+        engine.remove(a);
     }
-    db.verify().expect("structure healthy after cleanup");
-    println!("post-cleanup invariants OK ({} live points)", db.num_points());
+    engine.verify().expect("structure healthy after cleanup");
+    let view = engine.publish();
+    println!("post-cleanup invariants OK ({} live points)", view.live_points());
 }

@@ -1,57 +1,82 @@
-//! Quickstart: the 60-second tour of the public API.
+//! Quickstart: the 60-second tour of the serving API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Builds a `DynamicDbscan`, streams points in, queries clusters, deletes
-//! points, and checks the structure against the Theorem-2 invariant
-//! checker.
+//! Builds an engine through `serve::EngineBuilder`, streams points in,
+//! publishes versioned snapshots, queries them (labels, members, sizes,
+//! ε-neighborhoods), subscribes to cluster events, deletes points, and
+//! machine-checks the Theorem-2 invariants.
 
-use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+use dyn_dbscan::serve::{Backend, ClusterEngine, ClusterEvent, EngineBuilder};
 
 fn main() {
-    // 1. Initialise(k, t, eps): k-point buckets confer core-ness, t
-    //    independent grid hashes, bucket side 2*eps.
-    let cfg = DbscanConfig { k: 5, t: 8, eps: 0.5, dim: 2, ..Default::default() };
-    let mut db = DynamicDbscan::new(cfg, /*seed=*/ 42);
+    // 1. One builder for every backend: swap Backend::Single for
+    //    Backend::Sharded(8) and nothing else changes.
+    let mut engine = EngineBuilder::new(2) // dim = 2
+        .k(5)
+        .t(8)
+        .eps(0.5)
+        .backend(Backend::Single)
+        .seed(42)
+        .build()
+        .expect("engine");
 
-    // 2. AddPoint: two dense blobs plus an outlier.
-    let mut left = Vec::new();
-    let mut right = Vec::new();
-    for i in 0..20 {
+    // 2. Subscribe to cluster events before writing.
+    let events = engine.watch();
+
+    // 3. Upserts: two dense blobs plus an outlier (external u64 keys).
+    for i in 0..20u64 {
         let j = (i % 5) as f32 * 0.05;
-        left.push(db.add_point(&[0.0 + j, 0.0 + j]));
-        right.push(db.add_point(&[8.0 + j, 8.0 - j]));
+        engine.upsert(i, &[0.0 + j, 0.0 + j]); // left blob: exts 0..20
+        engine.upsert(100 + i, &[8.0 + j, 8.0 - j]); // right: exts 100..120
     }
-    let outlier = db.add_point(&[100.0, -100.0]);
+    engine.upsert(999, &[100.0, -100.0]); // outlier
 
-    // 3. GetCluster: O(log n) canonical cluster ids.
-    println!("points: {}  cores: {}", db.num_points(), db.num_core_points());
+    // 4. Freshness is explicit: nothing is readable until a publish.
+    assert_eq!(engine.snapshot().pending_writes(), 41);
+    assert_eq!(engine.snapshot().label(0), None);
+    let view = engine.publish(); // version 1, pending 0
     println!(
-        "left[0] ~ left[19]?   {}",
-        db.get_cluster(left[0]) == db.get_cluster(left[19])
+        "v{}: {} live, {} cores, {} clusters",
+        view.version(),
+        view.live_points(),
+        view.core_points(),
+        view.clusters()
     );
-    println!(
-        "left[0] ~ right[0]?   {}",
-        db.get_cluster(left[0]) == db.get_cluster(right[0])
-    );
-    println!("outlier is core?      {}", db.is_core(outlier));
 
-    // 4. Dense labels (noise = -1) for downstream metrics.
-    let mut ids = left.clone();
-    ids.extend(&right);
-    ids.push(outlier);
-    let labels = db.labels_for(&ids);
-    println!("labels: {labels:?}");
+    // 5. Snapshot queries: labels, members, sizes, ε-neighborhoods.
+    println!("0 ~ 19?    {}", view.label(0) == view.label(19));
+    println!("0 ~ 100?   {}", view.label(0) == view.label(100));
+    println!("outlier:   {:?} (−1 = noise)", view.label(999));
+    println!("0 core?    {}   outlier core? {}", view.is_core(0), view.is_core(999));
+    println!("sizes:     {:?}", view.cluster_sizes());
+    let near = view.epsilon_neighbors(&[0.05, 0.05]);
+    println!("ε-neighbors of (0.05, 0.05): {} points", near.len());
+    let members = view.cluster_members(view.label(0).unwrap());
+    assert!(members.contains(&0) && members.contains(&19));
 
-    // 5. DeletePoint: remove the left blob entirely.
-    for p in left {
-        db.delete_point(p);
+    // 6. Deletes: retire the left blob, publish, watch the events.
+    for i in 0..20u64 {
+        engine.remove(i);
     }
-    println!("after deletes: points={} cores={}", db.num_points(), db.num_core_points());
+    let view2 = engine.publish(); // version 2
+    println!(
+        "v{}: {} live, {} clusters",
+        view2.version(),
+        view2.live_points(),
+        view2.clusters()
+    );
+    // the old view is immutable — it still sees the deleted blob
+    assert_eq!(view.live_points(), 41);
+    for e in events.drain() {
+        if !matches!(e, ClusterEvent::Moved { .. }) {
+            println!("event: {e:?}");
+        }
+    }
 
-    // 6. Machine-checked Theorem 2: G[C] is a spanning forest of H.
-    db.verify().expect("invariants hold");
+    // 7. Machine-checked Theorem 2: G[C] is a spanning forest of H.
+    engine.verify().expect("invariants hold");
     println!("invariants OK — quickstart done");
 }

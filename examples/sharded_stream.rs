@@ -1,8 +1,8 @@
-//! Sharded serving demo: the blobs workload through `ShardedEngine` — S
-//! parallel `DynamicDbscan` workers behind the deterministic grid-cell
-//! router, ghost replication at block boundaries, cross-shard cluster
-//! stitching, and snapshot-backed reads — compared against the
-//! single-instance path on the same stream.
+//! Sharded serving demo: the blobs workload through the serve façade's
+//! sharded backend — S parallel workers behind the deterministic
+//! grid-cell router, ghost replication at block boundaries, incremental
+//! cross-shard stitching, snapshot-backed reads — compared against the
+//! single backend on the identical stream, through the *same* API.
 //!
 //! ```bash
 //! cargo run --release --example sharded_stream [-- scale shards seed]
@@ -10,16 +10,14 @@
 //! cargo run --release --example sharded_stream -- 1.0 8
 //! ```
 
-use std::time::Instant;
-
-use dyn_dbscan::data::stream::Order;
+use dyn_dbscan::coordinator::driver::to_stream_ops;
+use dyn_dbscan::data::stream::{insert_stream, Order};
 use dyn_dbscan::data::synth::{load, PaperDataset};
-use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+use dyn_dbscan::dbscan::DbscanConfig;
 use dyn_dbscan::experiments::{PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
 use dyn_dbscan::metrics::adjusted_rand_index;
-use dyn_dbscan::shard::driver::{
-    final_quality_sharded, stream_dataset_sharded, summarize_shard,
-};
+use dyn_dbscan::serve::driver::{final_quality, run_stream, summarize};
+use dyn_dbscan::serve::{Backend, EngineBuilder};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -41,63 +39,59 @@ fn main() {
         dim: ds.dim,
         ..Default::default()
     };
+    let batches = to_stream_ops(&ds, &insert_stream(&ds, Order::Random, PAPER_BATCH, seed));
+    let truth_labels = ds.labels.clone();
+    let truth = move |e: u64| truth_labels[e as usize];
 
-    // sharded run with periodic snapshots
-    let out = stream_dataset_sharded(
-        &ds,
-        cfg.clone(),
-        Order::Random,
-        PAPER_BATCH,
-        /*window=*/ 0,
-        /*snapshot_every=*/ 5,
-        seed,
-        shards,
-    )
-    .expect("sharded stream failed");
+    // sharded backend with periodic snapshots
+    let engine = EngineBuilder::from_config(cfg.clone())
+        .backend(Backend::Sharded(shards))
+        .seed(seed)
+        .build()
+        .expect("sharded engine");
+    let out = run_stream(engine, batches.clone(), 5, Some(&truth))
+        .expect("sharded stream failed");
     for r in &out.reports {
-        println!("{}", summarize_shard(r));
+        println!("{}", summarize(r));
     }
-    let (ari, nmi) = final_quality_sharded(&ds, &out);
-    let stats = &out.engine.stats;
+    let (ari, nmi) = final_quality(&ds, &out);
+    let stats = &out.outcome.stats;
     println!("\nsharded: ARI={ari:.3} NMI={nmi:.3} wall={:.2}s", out.total_wall_s);
     println!(
-        "         {:.0} updates/s, ghost ratio {:.2}, per-shard live {:?}",
+        "         {:.0} updates/s, ghost ratio {:.2}",
         out.updates_per_s(),
         stats.ghost_ratio(),
-        out.engine.snapshot.shard_live
     );
-    println!("         add latency: {}", out.engine.add_latency.summary());
+    println!("         add latency: {}", stats.add_latency.summary());
     // delta publishes: O(changed points) each, not O(live points)
-    println!("         publish latency: {}", out.engine.publish_latency.summary());
-    let snap = &out.engine.snapshot;
+    println!("         publish latency: {}", stats.publish_latency.summary());
+    let snap = &out.outcome.snapshot;
     let top: Vec<String> = snap
-        .cluster_sizes
+        .cluster_sizes()
         .iter()
         .take(5)
         .map(|&(l, s)| format!("#{l}:{s}"))
         .collect();
-    println!("         {} clusters, largest: {}", snap.clusters, top.join(" "));
+    println!("         {} clusters, largest: {}", snap.clusters(), top.join(" "));
 
-    // single-instance reference on the identical point set
-    let t0 = Instant::now();
-    let mut db = DynamicDbscan::new(cfg, seed);
-    let ids: Vec<u64> = (0..ds.n()).map(|i| db.add_point(ds.point(i))).collect();
-    let single_s = t0.elapsed().as_secs_f64();
-    let single = db.labels_for(&ids);
-    let sharded: Vec<i64> = out
-        .final_labels
-        .iter()
-        .map(|&(_, l)| l)
-        .collect();
-    // final_labels is sorted by ext = insertion index, aligning with `ids`
-    let agreement = adjusted_rand_index(&single, &sharded);
+    // single backend on the identical stream — same builder, same driver
+    let engine = EngineBuilder::from_config(cfg)
+        .backend(Backend::Single)
+        .seed(seed)
+        .build()
+        .expect("single engine");
+    let single = run_stream(engine, batches, 0, None).expect("single stream failed");
+    let single_labels: Vec<i64> = single.final_labels.iter().map(|&(_, l)| l).collect();
+    let sharded_labels: Vec<i64> = out.final_labels.iter().map(|&(_, l)| l).collect();
+    // both label vectors are sorted by ext, so they align index-by-index
+    let agreement = adjusted_rand_index(&single_labels, &sharded_labels);
     println!(
         "\nsingle:  {:.2}s ({:.0} updates/s)",
-        single_s,
-        ds.n() as f64 / single_s
+        single.total_wall_s,
+        single.updates_per_s()
     );
     println!(
         "         sharded-vs-single ARI {agreement:.3}, speedup {:.2}x",
-        single_s / out.total_wall_s
+        single.total_wall_s / out.total_wall_s
     );
 }

@@ -5,14 +5,16 @@
 //!
 //! The generating distribution drifts: cluster centers move over time, and
 //! the report shows the window's clustering tracking the drift while a
-//! whole-history clustering would smear.
+//! whole-history clustering would smear. Driven entirely through the
+//! serve façade: upsert/remove with external keys, periodic publishes,
+//! snapshot-backed quality probes.
 //!
 //! ```bash
 //! cargo run --release --example sliding_window
 //! ```
 
-use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
 use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::serve::{ClusterEngine, EngineBuilder};
 use dyn_dbscan::util::rng::Rng;
 use std::collections::VecDeque;
 
@@ -21,19 +23,18 @@ fn main() {
     let clusters = 3;
     let window = 3000;
     let total = 30_000;
-    let cfg = DbscanConfig {
-        k: 8,
-        t: 10,
-        eps: 0.6,
-        dim,
-        ..Default::default()
-    };
-    let mut db = DynamicDbscan::new(cfg, 11);
+    let mut engine = EngineBuilder::new(dim)
+        .k(8)
+        .t(10)
+        .eps(0.6)
+        .seed(11)
+        .build()
+        .expect("engine");
     let mut rng = Rng::new(4);
-    let mut live: VecDeque<(u64, i64)> = VecDeque::new(); // (id, truth)
+    let mut live: VecDeque<(u64, i64)> = VecDeque::new(); // (ext, truth)
 
     let t0 = std::time::Instant::now();
-    for step in 0..total {
+    for step in 0..total as u64 {
         // drifting centers: rotate slowly with time
         let phase = step as f64 / total as f64 * std::f64::consts::PI;
         let c = rng.below(clusters) as usize;
@@ -44,23 +45,27 @@ fn main() {
             .iter()
             .map(|&x| (x + 0.25 * rng.normal()) as f32)
             .collect();
-        let id = db.add_point(&p);
-        live.push_back((id, c as i64));
+        engine.upsert(step, &p);
+        live.push_back((step, c as i64));
         if live.len() > window {
             let (old, _) = live.pop_front().unwrap();
-            db.delete_point(old);
+            engine.remove(old);
         }
 
         if step % 5000 == 4999 {
-            let ids: Vec<u64> = live.iter().map(|&(i, _)| i).collect();
+            let view = engine.publish();
             let truth: Vec<i64> = live.iter().map(|&(_, t)| t).collect();
-            let pred = db.labels_for(&ids);
+            let pred: Vec<i64> = live
+                .iter()
+                .map(|&(e, _)| view.label(e).expect("live ext labeled"))
+                .collect();
             let ari = adjusted_rand_index(&truth, &pred);
             println!(
-                "step {:>6}: live={} cores={} window-ARI={:.3}",
+                "step {:>6}: v{} live={} cores={} window-ARI={:.3}",
                 step + 1,
-                db.num_points(),
-                db.num_core_points(),
+                view.version(),
+                view.live_points(),
+                view.core_points(),
                 ari
             );
             assert!(ari > 0.5, "window clustering lost the drifting clusters");
@@ -75,11 +80,11 @@ fn main() {
         secs,
         (total * 2 - window) as f64 / secs
     );
-    let st = db.repair_stats();
+    let st = engine.stats();
     println!(
         "replacement searches: {} (promoted {}, visited {} vertices)",
-        st.searches, st.replacements, st.visited
+        st.conn.searches, st.conn.replacements, st.conn.visited
     );
-    db.verify().expect("invariants hold at end");
+    engine.verify().expect("invariants hold at end");
     println!("invariants OK");
 }

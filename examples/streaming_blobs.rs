@@ -1,20 +1,19 @@
-//! Figure-2-style streaming run: the blobs workload through the full L3
-//! coordinator (hash stage → apply stage, bounded channels), with per-batch
-//! ARI/NMI snapshots and latency histograms — the paper's §5 experiment as
-//! a runnable example.
+//! Figure-2-style streaming run: the blobs workload streamed through the
+//! serve façade with per-batch ARI/NMI snapshots and latency histograms —
+//! the paper's §5 experiment as a runnable example.
 //!
 //! ```bash
 //! cargo run --release --example streaming_blobs [-- scale seed]
 //! # paper size: cargo run --release --example streaming_blobs -- 1.0
 //! ```
 
-use dyn_dbscan::coordinator::driver::{
-    final_quality, stream_dataset, summarize, EngineKind,
-};
+use dyn_dbscan::coordinator::driver::stream_dataset;
 use dyn_dbscan::data::stream::Order;
 use dyn_dbscan::data::synth::{load, PaperDataset};
 use dyn_dbscan::dbscan::DbscanConfig;
 use dyn_dbscan::experiments::{PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
+use dyn_dbscan::serve::driver::{final_quality, summarize};
+use dyn_dbscan::serve::EngineKind;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -51,10 +50,7 @@ fn main() {
     }
     let (ari, nmi) = final_quality(&ds, &out);
     println!("\nfinal ARI={ari:.3} NMI={nmi:.3}");
-    println!("total apply time: {:.2}s", out.total_apply_s);
-    println!(
-        "throughput: {:.0} updates/s",
-        out.add_latency.count() as f64 / out.total_apply_s
-    );
-    println!("add latency:    {}", out.add_latency.summary());
+    println!("total wall time: {:.2}s", out.total_wall_s);
+    println!("throughput: {:.0} updates/s", out.updates_per_s());
+    println!("add latency:    {}", out.outcome.stats.add_latency.summary());
 }

@@ -33,6 +33,7 @@ use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
 use dyn_dbscan::data::Dataset;
 use dyn_dbscan::dbscan::{Connectivity, DbscanConfig, DynamicDbscan, Op, RepairStats};
 use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::serve::{ClusterEngine, EngineBuilder};
 use dyn_dbscan::shard::{ShardConfig, ShardedEngine, StitchMode};
 use dyn_dbscan::util::json::Json;
 use dyn_dbscan::util::rng::Rng;
@@ -45,6 +46,25 @@ const DIM: usize = 10;
 /// churn workload (n=50k), recorded in EXPERIMENTS.md §Perf trajectory —
 /// the fixed reference the trajectory's speedup field is computed against.
 const PRE_ARENA_SINGLE_OPS_PER_S: f64 = 31_010.0;
+
+/// Budgeted serve-façade per-op tax (wall-time fraction over the direct
+/// engine, min-of-reps), enforced at full scale where the measurement is
+/// stable.
+const FACADE_OVERHEAD_GATE_FULL: f64 = 0.02;
+/// Looser backstop for smoke-scale workloads, where single runs are
+/// scheduler-jitter-dominated and the fixed stitch-tracking cost weighs
+/// more against a tiny structure.
+const FACADE_OVERHEAD_GATE_SMOKE: f64 = 0.10;
+
+/// The gate that applies to a façade-overhead measurement at workload
+/// size `n` (shared by the recorder and the JSON validator).
+fn facade_gate(n: f64) -> f64 {
+    if n >= 10_000.0 {
+        FACADE_OVERHEAD_GATE_FULL
+    } else {
+        FACADE_OVERHEAD_GATE_SMOKE
+    }
+}
 
 fn gen_point(rng: &mut Rng) -> Vec<f32> {
     let c = rng.below(10) as f64 * 1.2;
@@ -364,6 +384,70 @@ fn push_histo_fields(
 
 const ADD_HISTO: [&str; 3] = ["add_p50_ns", "add_p99_ns", "add_mean_ns"];
 const DEL_HISTO: [&str; 3] = ["delete_p50_ns", "delete_p99_ns", "delete_mean_ns"];
+
+// ---------------------------------------------------------------------
+// façade overhead: serve vs direct engine on the identical workload
+// ---------------------------------------------------------------------
+
+/// Measure the serving façade's per-op tax: the same churn workload
+/// through the direct structure (`run_single`'s ext map only) and
+/// through `serve::EngineBuilder`'s single backend (ext↔pid maps, CoW
+/// coordinate store, stitch-change tracking). Paths alternate across
+/// `reps` rounds and the per-path minimum is the noise-robust estimate.
+/// Returns `(direct_ops_s, facade_ops_s, overhead_frac)`.
+fn facade_overhead(n: usize, reps: usize) -> (f64, f64, f64) {
+    let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: DIM, ..Default::default() };
+    let (ds, ops) = build_workload(n, 0.2, 13);
+    let total_ops = ops.len() as f64;
+    let mut direct_best = f64::MAX;
+    let mut facade_best = f64::MAX;
+    for _ in 0..reps {
+        let run = run_single(DynamicDbscan::new(cfg.clone(), 42), &ds, &ops);
+        direct_best = direct_best.min(run.wall_s);
+
+        let mut eng = EngineBuilder::from_config(cfg.clone())
+            .seed(42)
+            .build()
+            .expect("façade engine");
+        let t0 = Instant::now();
+        for op in &ops {
+            match *op {
+                WlOp::Insert(ext) => eng.upsert(ext, ds.point(ext as usize)),
+                WlOp::Delete(ext) => eng.remove(ext),
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let view = eng.publish();
+        std::hint::black_box(view.clusters());
+        facade_best = facade_best.min(wall);
+    }
+    let overhead = facade_best / direct_best - 1.0;
+    (total_ops / direct_best, total_ops / facade_best, overhead)
+}
+
+/// Run the façade-overhead axis, print the comparison and return the
+/// JSON section for `BENCH_updates.json`.
+fn facade_overhead_section(n: usize, reps: usize) -> Json {
+    let (direct_ops_s, facade_ops_s, overhead) = facade_overhead(n, reps);
+    let mut table = Table::new(
+        "façade overhead: serve single backend vs direct engine (per-op)",
+        &["path", "ops/s"],
+    );
+    table.row(vec!["direct".into(), format!("{direct_ops_s:.0}")]);
+    table.row(vec![
+        format!("serve façade ({:+.2}%)", overhead * 100.0),
+        format!("{facade_ops_s:.0}"),
+    ]);
+    table.print();
+    Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("direct_ops_per_s", Json::num(direct_ops_s)),
+        ("facade_ops_per_s", Json::num(facade_ops_s)),
+        ("overhead_frac", Json::num(overhead)),
+        ("gate_frac", Json::num(facade_gate(n as f64))),
+    ])
+}
 
 // ---------------------------------------------------------------------
 // adversarial chain churn: the replacement-search worst case
@@ -726,6 +810,8 @@ fn update_throughput(
 
     let chain_section = chain_churn_section(chain.0, chain.1);
     let publish_section = snapshot_publish_section(publish.0, publish.1, publish.2);
+    // more reps at small n: single runs are jitter-dominated there
+    let facade_section = facade_overhead_section(n, if n < 10_000 { 5 } else { 3 });
 
     let record = Json::obj(vec![
         ("bench", Json::str("updates_throughput")),
@@ -747,6 +833,7 @@ fn update_throughput(
         ("conn_ablation", Json::Arr(ablation)),
         ("chain_churn", chain_section),
         ("snapshot_publish", publish_section),
+        ("facade_overhead", facade_section),
         (
             "single_batched",
             Json::obj(vec![
@@ -819,6 +906,30 @@ fn validate_updates_json(path: &std::path::Path) {
             "chain-churn row missing delete p99"
         );
     }
+    // façade-overhead axis: both throughputs recorded, tax under the gate
+    let fac = j
+        .get("facade_overhead")
+        .unwrap_or_else(|| panic!("missing facade_overhead in {}", path.display()));
+    for field in ["direct_ops_per_s", "facade_ops_per_s"] {
+        assert!(
+            fac.get(field).and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "facade_overhead missing {field}"
+        );
+    }
+    let overhead = fac
+        .get("overhead_frac")
+        .and_then(|v| v.as_f64())
+        .expect("facade_overhead missing overhead_frac");
+    // recompute the gate from the recorded n — the ≤2% budget applies
+    // at full scale, the jitter backstop at smoke scale
+    let gate = facade_gate(fac.get("n").and_then(|v| v.as_f64()).unwrap_or(0.0));
+    assert!(
+        overhead <= gate,
+        "serve façade per-op overhead {:.1}% exceeds the {:.0}% gate",
+        overhead * 100.0,
+        gate * 100.0
+    );
+
     // publish-latency axis: both stitch modes at every live size
     let pub_rows = j
         .get("snapshot_publish")

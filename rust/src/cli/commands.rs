@@ -3,19 +3,18 @@
 use anyhow::{anyhow, Result};
 
 use crate::bench_harness::export_json;
-use crate::coordinator::driver::{
-    final_quality, make_engine, summarize, to_stream_ops, EngineKind,
-};
-use crate::coordinator::{run_pipeline, CoordinatorConfig};
+use crate::coordinator::driver::to_stream_ops;
 use crate::data::stream::{self, Order};
 use crate::data::synth::{load, PaperDataset};
-use crate::dbscan::{DbscanConfig, DynamicDbscan};
+use crate::dbscan::DbscanConfig;
 use crate::experiments::fig2::{run_fig2, Panel};
 use crate::experiments::table2::run_table2;
 use crate::experiments::{env_runs, env_scale, PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
 use crate::runtime::Runtime;
-use crate::shard::driver::{final_quality_sharded, run_sharded, summarize_shard};
-use crate::shard::{ShardConfig, StitchMode};
+use crate::serve::driver::{final_quality, run_stream, summarize};
+use crate::serve::{
+    Backend, ClusterEngine, ConnKind, EngineBuilder, EngineKind, StitchMode,
+};
 use crate::util::rng::Rng;
 
 use super::Args;
@@ -92,6 +91,20 @@ fn cmd_stream(args: &Args) -> Result<()> {
         o => return Err(anyhow!("unknown order '{o}'")),
     };
     let kind = engine_kind(args)?;
+    let shards = args.get_usize("shards", 1)?;
+    let conn = {
+        let name = args.get("conn").unwrap_or("leveled");
+        ConnKind::from_name(name)
+            .ok_or_else(|| anyhow!("unknown conn '{name}' (leveled|repair|paper)"))?
+    };
+    let stitch = match args.get("stitch") {
+        None => None,
+        Some("delta") => Some(StitchMode::Delta),
+        Some("full-rebuild") | Some("full") => Some(StitchMode::FullRebuild),
+        Some(s) => {
+            return Err(anyhow!("unknown stitch mode '{s}' (delta|full-rebuild)"))
+        }
+    };
 
     let ds = load(which, scale, seed);
     let cfg = DbscanConfig {
@@ -106,46 +119,48 @@ fn cmd_stream(args: &Args) -> Result<()> {
     } else {
         stream::insert_stream(&ds, order, batch, seed)
     };
+    let ops = to_stream_ops(&ds, &batches);
+
+    if shards > 1 && kind != EngineKind::Native {
+        eprintln!(
+            "[stream] note: --engine {kind:?} applies to the single-backend \
+             hash stage; sharded workers hash natively"
+        );
+    }
+    let mut builder = EngineBuilder::from_config(cfg)
+        .seed(seed)
+        .hashing(kind)
+        .conn(conn)
+        .backend(if shards > 1 { Backend::Sharded(shards) } else { Backend::Single });
+    if let Some(s) = stitch {
+        builder = builder.stitch(s);
+    }
     println!(
-        "streaming {} (n={}, d={}) in {} batches; engine={kind:?}",
+        "streaming {} (n={}, d={}) in {} batches; backend={} conn={conn:?} \
+         stitch={:?} hashing={kind:?}",
         ds.name,
         ds.n(),
         ds.dim,
-        batches.len()
+        ops.len(),
+        if shards > 1 { format!("sharded({shards})") } else { "single".into() },
+        builder.effective_stitch(),
     );
-    let ops = to_stream_ops(&ds, &batches);
-    let shards = args.get_usize("shards", 1)?;
-    if shards > 1 {
-        if kind != EngineKind::Native {
-            eprintln!(
-                "[stream] note: --engine {kind:?} applies to the single-instance \
-                 hash stage; sharded workers hash natively"
-            );
-        }
-        let mut scfg = ShardConfig::new(cfg, shards, seed);
-        scfg.stitch = match args.get("stitch").unwrap_or("delta") {
-            "delta" => StitchMode::Delta,
-            "full-rebuild" | "full" => StitchMode::FullRebuild,
-            s => return Err(anyhow!("unknown stitch mode '{s}' (delta|full-rebuild)")),
-        };
-        println!(
-            "apply stage: {shards} shards (block_side={}, ghost_margin={}, stitch={:?})",
-            scfg.block_side, scfg.ghost_margin, scfg.stitch
-        );
-        let labels = ds.labels.clone();
-        let truth = move |e: u64| labels[e as usize];
-        let out = run_sharded(scfg, ops, snapshot, Some(&truth))?;
-        for r in &out.reports {
-            println!("{}", summarize_shard(r));
-        }
-        let (ari, nmi) = final_quality_sharded(&ds, &out);
-        let stats = &out.engine.stats;
-        println!(
-            "\nfinal: live={} ARI={ari:.3} NMI={nmi:.3} wall={:.2}s ({:.0} updates/s)",
-            out.final_labels.len(),
-            out.total_wall_s,
-            out.updates_per_s()
-        );
+    let engine = builder.build()?;
+    let labels = ds.labels.clone();
+    let truth = move |e: u64| labels[e as usize];
+    let out = run_stream(engine, ops, snapshot, Some(&truth))?;
+    for r in &out.reports {
+        println!("{}", summarize(r));
+    }
+    let (ari, nmi) = final_quality(&ds, &out);
+    let stats = &out.outcome.stats;
+    println!(
+        "\nfinal: live={} ARI={ari:.3} NMI={nmi:.3} wall={:.2}s ({:.0} updates/s)",
+        out.final_labels.len(),
+        out.total_wall_s,
+        out.updates_per_s()
+    );
+    if stats.shards > 1 {
         println!(
             "sharding: {} primary + {} ghost inserts (ghost ratio {:.2}), {} deletes",
             stats.inserts,
@@ -153,41 +168,10 @@ fn cmd_stream(args: &Args) -> Result<()> {
             stats.ghost_ratio(),
             stats.deletes
         );
-        println!("per-shard live (ghosts incl.): {:?}", out.engine.snapshot.shard_live);
-        println!("add     latency: {}", out.engine.add_latency.summary());
-        println!("delete  latency: {}", out.engine.delete_latency.summary());
-        println!("publish latency: {}", out.engine.publish_latency.summary());
-        return Ok(());
     }
-    let mut engine = make_engine(&cfg, seed, kind)?;
-    println!("hash stage: {}", engine.describe());
-    let ccfg = CoordinatorConfig {
-        dbscan: cfg,
-        queue: 4,
-        snapshot_every: snapshot,
-        seed,
-    };
-    let labels = ds.labels.clone();
-    let truth = move |e: u64| labels[e as usize];
-    let out = run_pipeline(ccfg, engine.as_mut(), ops, Some(&truth))?;
-    for r in &out.reports {
-        println!("{}", summarize(r));
-    }
-    let (ari, nmi) = final_quality(&ds, &out);
-    println!(
-        "\nfinal: live={} ARI={ari:.3} NMI={nmi:.3} total_apply={:.2}s",
-        out.final_labels.len(),
-        out.total_apply_s
-    );
-    let total_ops = out.add_latency.count() + out.delete_latency.count();
-    if out.total_apply_s > 0.0 {
-        println!(
-            "throughput: {:.0} updates/s over {total_ops} ops (apply stage)",
-            total_ops as f64 / out.total_apply_s
-        );
-    }
-    println!("add    latency: {}", out.add_latency.summary());
-    println!("delete latency: {}", out.delete_latency.summary());
+    println!("add     latency: {}", stats.add_latency.summary());
+    println!("delete  latency: {}", stats.delete_latency.summary());
+    println!("publish latency: {}", stats.publish_latency.summary());
     Ok(())
 }
 
@@ -195,32 +179,35 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let ops = args.get_usize("ops", 2000)?;
     let seed = args.get_u64("seed", 7)?;
     let mut rng = Rng::new(seed);
-    let cfg = DbscanConfig { k: 4, t: 6, eps: 0.5, dim: 3, ..Default::default() };
-    let mut db = DynamicDbscan::new(cfg, seed);
+    let mut eng = EngineBuilder::new(3).k(4).t(6).eps(0.5).seed(seed).build()?;
     let mut live: Vec<u64> = Vec::new();
+    let mut next_ext = 0u64;
     let mut checked = 0;
     for op in 0..ops {
         if live.is_empty() || rng.coin(0.7) {
             let c = rng.below(3) as f64 * 3.0;
             let p: Vec<f32> =
                 (0..3).map(|_| (c + rng.uniform(-0.5, 0.5)) as f32).collect();
-            live.push(db.add_point(&p));
+            eng.upsert(next_ext, &p);
+            live.push(next_ext);
+            next_ext += 1;
         } else {
             let i = rng.below_usize(live.len());
-            let p = live.swap_remove(i);
-            db.delete_point(p);
+            eng.remove(live.swap_remove(i));
         }
         // full invariant check is O(n²); sample it
         if op % 50 == 0 {
-            db.verify().map_err(|e| anyhow!("invariant violated at op {op}: {e}"))?;
+            eng.verify()
+                .map_err(|e| anyhow!("invariant violated at op {op}: {e}"))?;
             checked += 1;
         }
     }
-    db.verify().map_err(|e| anyhow!("final invariant violated: {e}"))?;
+    eng.verify().map_err(|e| anyhow!("final invariant violated: {e}"))?;
+    let view = eng.publish();
     println!(
         "verify OK: {ops} ops, {} live points, {} cores, {} full checks",
-        db.num_points(),
-        db.num_core_points(),
+        view.live_points(),
+        view.core_points(),
         checked + 1
     );
     Ok(())

@@ -99,15 +99,19 @@ COMMANDS:
                  --scale 0.05  --runs 3  --engine native|xla
     fig2       Reproduce Figure 2, panel a|b|c
                  --panel a  --scale 0.05  --seed 42  --exact
-    stream     Stream a dataset through the coordinator, printing reports
+    stream     Stream a dataset through the serve facade, printing
+               per-snapshot reports (one engine API for every backend)
                  --dataset blobs --scale 0.05 --batch 1000
                  --order random|clustered --engine native|xla
                  --snapshot-every 5 --window N (sliding-window deletes)
-                 --shards N (sharded parallel engine with incremental
-                 cross-shard stitching; reads served from published
-                 snapshots) --stitch delta|full-rebuild (delta: O(Δ)
-                 publishes, the default; full-rebuild: legacy O(n log n))
+                 --shards N (N > 1: sharded backend with incremental
+                 cross-shard stitching; otherwise the single backend)
+                 --conn leveled|repair|paper (connectivity ablation;
+                 flat modes force full-rebuild publishing)
+                 --stitch delta|full-rebuild (delta: O(Δ) publishes,
+                 the default; full-rebuild: legacy O(n log n))
     verify     Run the Theorem-2 invariant checker on a random workload
+               driven through the serve facade
                  --ops 2000 --seed 7
     info       List compiled AOT artifacts and their shapes
 

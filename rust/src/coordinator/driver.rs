@@ -1,11 +1,12 @@
-//! Convenience drivers gluing datasets, streams, engines and the pipeline —
-//! shared by the CLI, the examples and the bench harness.
+//! Convenience drivers gluing datasets, streams and engines — shared by
+//! the CLI, the examples and the bench harness.
 //!
-//! The single-instance apply stage here has a sharded alternative: the
-//! same `StreamOp` batches can be fed to [`crate::shard::ShardedEngine`]
-//! via the re-exported [`run_sharded`] / [`stream_dataset_sharded`]
-//! drivers (S parallel `DynamicDbscan` workers with cross-shard cluster
-//! stitching — see [`crate::shard`]).
+//! Since the serve façade landed, the clustering engines themselves are
+//! built and driven through [`crate::serve`] (`EngineBuilder` +
+//! `run_stream`); this module keeps the *hash-stage* engine selection
+//! ([`make_engine`]: native vs AOT-Pallas-artifact hashing), the
+//! dataset-to-stream plumbing ([`to_stream_ops`]) and the dataset
+//! convenience wrapper ([`stream_dataset`]).
 
 use anyhow::Result;
 
@@ -15,13 +16,12 @@ use crate::dbscan::DbscanConfig;
 use crate::lsh::GridHasher;
 use crate::runtime::engines::{HashingEngine, NativeHashing, XlaHashing};
 use crate::runtime::Runtime;
+use crate::serve::driver::{run_stream, ServeRunOutcome};
+use crate::serve::EngineBuilder;
 
-use super::{run_pipeline, BatchReport, CoordinatorConfig, RunOutcome, StreamOp};
+use super::{BatchReport, StreamOp};
 
-pub use crate::shard::driver::{
-    final_quality_sharded, run_sharded, stream_dataset_sharded, summarize_shard,
-    ShardReport, ShardedRunOutcome,
-};
+pub use crate::serve::driver::final_quality;
 
 /// Which hashing engine the hash stage should use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -42,8 +42,9 @@ impl EngineKind {
     }
 }
 
-/// Build a hashing engine whose η/ε match what `DynamicDbscan::new(cfg,
-/// seed)` will draw internally (same seed ⇒ same GridHasher).
+/// Build a hashing engine whose η/ε match what a clustering structure
+/// built from `(cfg, seed)` draws internally (same seed ⇒ same
+/// GridHasher).
 pub fn make_engine(
     cfg: &DbscanConfig,
     seed: u64,
@@ -86,8 +87,8 @@ pub fn to_stream_ops(ds: &Dataset, batches: &[Vec<UpdateOp>]) -> Vec<Vec<StreamO
         .collect()
 }
 
-/// Stream a dataset (insert-only) through the pipeline with ground-truth
-/// snapshots every `snapshot_every` batches.
+/// Stream a dataset (insert-only) through the serve façade's single
+/// backend with ground-truth snapshots every `snapshot_every` batches.
 pub fn stream_dataset(
     ds: &Dataset,
     cfg: DbscanConfig,
@@ -96,24 +97,15 @@ pub fn stream_dataset(
     snapshot_every: usize,
     seed: u64,
     kind: EngineKind,
-) -> Result<RunOutcome> {
+) -> Result<ServeRunOutcome> {
     let batches = to_stream_ops(ds, &stream::insert_stream(ds, order, batch, seed));
-    let mut engine = make_engine(&cfg, seed, kind)?;
-    let ccfg = CoordinatorConfig { dbscan: cfg, queue: 4, snapshot_every, seed };
+    let engine = EngineBuilder::from_config(cfg).seed(seed).hashing(kind).build()?;
     let labels = &ds.labels;
     let truth = move |e: u64| labels[e as usize];
-    run_pipeline(ccfg, engine.as_mut(), batches, Some(&truth))
+    run_stream(engine, batches, snapshot_every, Some(&truth))
 }
 
-/// Final-state quality of a run (ARI/NMI over the live points).
-pub fn final_quality(ds: &Dataset, out: &RunOutcome) -> (f64, f64) {
-    let truth: Vec<i64> =
-        out.final_labels.iter().map(|&(e, _)| ds.labels[e as usize]).collect();
-    let pred: Vec<i64> = out.final_labels.iter().map(|&(_, l)| l).collect();
-    crate::metrics::ari_nmi(&truth, &pred)
-}
-
-/// Pretty one-line summary for progress logs.
+/// Pretty one-line summary for [`super::run_pipeline`] progress logs.
 pub fn summarize(r: &BatchReport) -> String {
     format!(
         "batch {:>4}: ops={:<5} live={:<7} cores={:<7} t={:.3}s (cum {:.2}s){}",

@@ -53,6 +53,39 @@ pub type TreapConn = RepairConn<TreapForest>;
 /// Leveled mode over the treap backend (cross-check).
 pub type LeveledTreapConn = LeveledConn<TreapSeq>;
 
+/// Which connectivity layer a clustering structure runs on — the serving
+/// façade's ablation axis ([`crate::serve::EngineBuilder::conn`]). Only
+/// [`ConnKind::Leveled`] supports the stable component ids the delta
+/// publishing path needs; the flat modes are kept for ablation and require
+/// full-rebuild publishing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConnKind {
+    /// HDT-leveled spanning forests — the production default ([`leveled`]).
+    Leveled,
+    /// Flat repaired forest with `O(min-component)` replacement search.
+    Repair,
+    /// The paper's verbatim (unsound corner — see [`connectivity`]) mode.
+    Paper,
+}
+
+impl ConnKind {
+    pub fn from_name(s: &str) -> Option<ConnKind> {
+        match s {
+            "leveled" => Some(ConnKind::Leveled),
+            "repair" => Some(ConnKind::Repair),
+            "paper" => Some(ConnKind::Paper),
+            _ => None,
+        }
+    }
+
+    /// Stable component ids ([`Connectivity::comp_id`]) are implemented
+    /// only by the leveled structure; everything downstream of delta
+    /// publishing requires this.
+    pub fn supports_comp_tracking(self) -> bool {
+        matches!(self, ConnKind::Leveled)
+    }
+}
+
 /// Hyper-parameters (paper §5 uses k = 10, t = 10, ε = 0.75 throughout).
 #[derive(Clone, Debug)]
 pub struct DbscanConfig {
@@ -771,6 +804,112 @@ impl<C: Connectivity> DynamicDbscan<C> {
 
     pub(crate) fn point_keys(&self, p: PointId) -> &[BucketKey] {
         self.arena.key_row(self.arena.require(p))
+    }
+}
+
+/// Dispatch an [`AnyDbscan`] method to whichever connectivity mode it
+/// wraps.
+macro_rules! with_db {
+    ($self:expr, $db:ident => $e:expr) => {
+        match $self {
+            AnyDbscan::Leveled($db) => $e,
+            AnyDbscan::Repair($db) => $e,
+            AnyDbscan::Paper($db) => $e,
+        }
+    };
+}
+
+/// A [`DynamicDbscan`] over any of the three connectivity modes behind one
+/// concrete type — the handle the serving layer ([`crate::serve`] and the
+/// shard workers) holds, so the connectivity ablation runs through the
+/// production engines instead of only through hand-rolled bench loops.
+/// Delegates the update/query surface the serving path uses; everything
+/// else stays on the typed structure.
+pub enum AnyDbscan {
+    Leveled(DynamicDbscan<DefaultConn>),
+    Repair(DynamicDbscan<RepairSkipConn>),
+    Paper(DynamicDbscan<PaperExactConn>),
+}
+
+impl AnyDbscan {
+    pub fn new(kind: ConnKind, cfg: DbscanConfig, seed: u64) -> AnyDbscan {
+        match kind {
+            ConnKind::Leveled => AnyDbscan::Leveled(DynamicDbscan::new(cfg, seed)),
+            ConnKind::Repair => {
+                AnyDbscan::Repair(DynamicDbscan::repair_mode(cfg, seed))
+            }
+            ConnKind::Paper => AnyDbscan::Paper(DynamicDbscan::paper_exact(cfg, seed)),
+        }
+    }
+
+    pub fn kind(&self) -> ConnKind {
+        match self {
+            AnyDbscan::Leveled(_) => ConnKind::Leveled,
+            AnyDbscan::Repair(_) => ConnKind::Repair,
+            AnyDbscan::Paper(_) => ConnKind::Paper,
+        }
+    }
+
+    pub fn hasher(&self) -> &GridHasher {
+        with_db!(self, db => &db.hasher)
+    }
+
+    /// See [`DynamicDbscan::enable_stitch_tracking`]. Requires a mode
+    /// whose connectivity supports stable component ids.
+    pub fn enable_stitch_tracking(&mut self) {
+        debug_assert!(
+            self.kind().supports_comp_tracking(),
+            "stitch tracking needs stable component ids (ConnKind::Leveled)"
+        );
+        with_db!(self, db => db.enable_stitch_tracking())
+    }
+
+    pub fn add_point(&mut self, x: &[f32]) -> PointId {
+        with_db!(self, db => db.add_point(x))
+    }
+
+    pub fn add_point_with_keys(&mut self, x: &[f32], keys: &[BucketKey]) -> PointId {
+        with_db!(self, db => db.add_point_with_keys(x, keys))
+    }
+
+    pub fn delete_point(&mut self, p: PointId) {
+        with_db!(self, db => db.delete_point(p))
+    }
+
+    pub fn num_points(&self) -> usize {
+        with_db!(self, db => db.num_points())
+    }
+
+    pub fn num_core_points(&self) -> usize {
+        with_db!(self, db => db.num_core_points())
+    }
+
+    pub fn is_core(&self, p: PointId) -> bool {
+        with_db!(self, db => db.is_core(p))
+    }
+
+    pub fn is_noise(&self, p: PointId) -> bool {
+        with_db!(self, db => db.is_noise(p))
+    }
+
+    pub fn contains(&self, p: PointId) -> bool {
+        with_db!(self, db => db.contains(p))
+    }
+
+    pub fn stable_cluster(&self, p: PointId) -> u64 {
+        with_db!(self, db => db.stable_cluster(p))
+    }
+
+    pub fn drain_stitch_changes(&mut self, f: &mut dyn FnMut(PointId)) {
+        with_db!(self, db => db.drain_stitch_changes(f))
+    }
+
+    pub fn repair_stats(&self) -> RepairStats {
+        with_db!(self, db => db.repair_stats())
+    }
+
+    pub fn verify(&self) -> Result<(), invariants::InvariantError> {
+        with_db!(self, db => db.verify())
     }
 }
 

@@ -8,7 +8,9 @@
 //!
 //! The library is the L3 (Rust) layer of a three-layer stack:
 //!
-//! * **L3 (this crate)** — the dynamic clustering structure
+//! * **L3 (this crate)** — the unified serving API ([`serve`]: one typed
+//!   engine façade, versioned snapshot reads, cluster-event
+//!   subscriptions), the dynamic clustering structure
 //!   ([`dbscan::DynamicDbscan`]), the Euler-tour dynamic forest ([`ett`]),
 //!   grid-LSH bucket tables ([`lsh`]), baselines ([`baselines`]), metrics
 //!   ([`metrics`]), datasets ([`data`]), the streaming coordinator
@@ -22,19 +24,43 @@
 //!
 //! ## Quick start
 //!
-//! ```no_run
-//! use dyn_dbscan::dbscan::{DbscanConfig, DynamicDbscan};
+//! Everything goes through [`serve::EngineBuilder`]; the same code drives
+//! the single-instance and the S-way sharded backend:
 //!
-//! let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: 2, ..Default::default() };
-//! let mut db = DynamicDbscan::new(cfg, 42);
-//! let a = db.add_point(&[0.0, 0.0]);
-//! let b = db.add_point(&[0.1, 0.1]);
-//! let _ = db.get_cluster(a) == db.get_cluster(b);
-//! db.delete_point(a);
+//! ```no_run
+//! use dyn_dbscan::serve::{Backend, ClusterEngine, EngineBuilder};
+//!
+//! let mut engine = EngineBuilder::new(2) // dim = 2
+//!     .k(10)
+//!     .t(10)
+//!     .eps(0.75)
+//!     .backend(Backend::Single) // or Backend::Sharded(8)
+//!     .seed(42)
+//!     .build()
+//!     .unwrap();
+//!
+//! // writes: external keys, buffered until an explicit publish
+//! let events = engine.watch(); // merge/split/moved, per publish
+//! engine.upsert(1, &[0.0, 0.0]);
+//! engine.upsert(2, &[0.1, 0.1]);
+//!
+//! // reads: versioned immutable snapshots with a visible freshness gap
+//! assert_eq!(engine.snapshot().pending_writes(), 2);
+//! let view = engine.publish(); // read-your-publishes
+//! let _ = view.label(1) == view.label(2);
+//! let _near = view.epsilon_neighbors(&[0.0, 0.0]);
+//!
+//! engine.remove(1);
+//! let view = engine.publish();
+//! let _ = events.drain(); // cluster events of both publishes
+//! assert_eq!(view.version(), 2);
 //! ```
 //!
-//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
-//! the paper-vs-measured reproduction of every table and figure.
+//! The structure-level API ([`dbscan::DynamicDbscan`]: `add_point` /
+//! `delete_point` / `get_cluster` over internal `PointId`s) remains for
+//! embedding and ablation; see `DESIGN.md` §Serving API for when to use
+//! which. `EXPERIMENTS.md` holds the paper-vs-measured reproduction of
+//! every table and figure.
 
 pub mod baselines;
 pub mod bench_harness;
@@ -47,5 +73,6 @@ pub mod experiments;
 pub mod lsh;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod shard;
 pub mod util;

@@ -19,6 +19,18 @@ use super::Runtime;
 pub trait HashingEngine {
     /// `xs` is row-major `n × dim`; returns `n` key vectors of length `t`.
     fn keys_batch(&mut self, xs: &[f32], n: usize) -> Result<Vec<Vec<BucketKey>>>;
+
+    /// Keys of a single point written into a reusable row (length `t` on
+    /// return). Default routes through [`Self::keys_batch`] (allocates);
+    /// the native engine overrides with the scratch-buffer path so the
+    /// serve façade's per-op writes stay allocation-free.
+    fn key_row_into(&mut self, x: &[f32], out: &mut Vec<BucketKey>) -> Result<()> {
+        let keys = self.keys_batch(x, 1)?;
+        out.clear();
+        out.extend_from_slice(&keys[0]);
+        Ok(())
+    }
+
     fn describe(&self) -> String;
 }
 
@@ -41,6 +53,13 @@ impl HashingEngine for NativeHashing {
         Ok((0..n)
             .map(|i| self.hasher.keys(&xs[i * d..(i + 1) * d], &mut self.scratch))
             .collect())
+    }
+
+    fn key_row_into(&mut self, x: &[f32], out: &mut Vec<BucketKey>) -> Result<()> {
+        out.clear();
+        out.resize(self.hasher.t, 0);
+        self.hasher.keys_into(x, &mut self.scratch, out);
+        Ok(())
     }
 
     fn describe(&self) -> String {

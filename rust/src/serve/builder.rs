@@ -1,0 +1,258 @@
+//! [`EngineBuilder`] — fluent construction of any serve backend,
+//! replacing the old `DbscanConfig` / `ShardConfig` / `EngineKind`
+//! triplet every consumer had to wire up by hand.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::driver::{make_engine, EngineKind};
+use crate::dbscan::{ConnKind, DbscanConfig};
+use crate::shard::{ShardConfig, StitchMode};
+
+use super::inline::InlineEngine;
+use super::sharded::ShardedServe;
+use super::ClusterEngine;
+
+/// Where the clustering structure lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// One in-process `DynamicDbscan` behind the façade — lowest latency,
+    /// exact Algorithm-2 semantics.
+    Single,
+    /// S parallel shard workers with ghost replication and incremental
+    /// cross-shard stitching. `Sharded(1)` degenerates to an inline core
+    /// (no router/channels) but keeps the sharded publish plumbing.
+    Sharded(usize),
+}
+
+/// Fluent configuration for a [`ClusterEngine`].
+///
+/// ```no_run
+/// use dyn_dbscan::serve::{Backend, ClusterEngine, EngineBuilder};
+///
+/// let mut engine = EngineBuilder::new(8)
+///     .k(10)
+///     .t(10)
+///     .eps(0.75)
+///     .backend(Backend::Sharded(4))
+///     .seed(42)
+///     .build()
+///     .unwrap();
+/// engine.upsert(1, &[0.0; 8]);
+/// let view = engine.publish();
+/// assert_eq!(view.pending_writes(), 0);
+/// ```
+#[derive(Clone, Debug)]
+pub struct EngineBuilder {
+    dbscan: DbscanConfig,
+    backend: Backend,
+    conn: ConnKind,
+    stitch: Option<StitchMode>,
+    hashing: EngineKind,
+    seed: u64,
+    queue: usize,
+    block_side: u32,
+    ghost_margin: u32,
+    routing_dims: usize,
+}
+
+impl EngineBuilder {
+    /// Start from the paper's default hyper-parameters (k=10, t=10,
+    /// ε=0.75) at the given dimensionality.
+    pub fn new(dim: usize) -> Self {
+        Self::from_config(DbscanConfig { dim, ..Default::default() })
+    }
+
+    /// Start from an existing [`DbscanConfig`].
+    pub fn from_config(dbscan: DbscanConfig) -> Self {
+        EngineBuilder {
+            dbscan,
+            backend: Backend::Single,
+            conn: ConnKind::Leveled,
+            stitch: None,
+            hashing: EngineKind::Native,
+            seed: 42,
+            queue: 8,
+            block_side: 8,
+            ghost_margin: 2,
+            routing_dims: 0,
+        }
+    }
+
+    /// Core threshold (bucket size conferring core-ness).
+    pub fn k(mut self, k: usize) -> Self {
+        self.dbscan.k = k;
+        self
+    }
+
+    /// Number of grid-LSH hash functions.
+    pub fn t(mut self, t: usize) -> Self {
+        self.dbscan.t = t;
+        self
+    }
+
+    /// Neighborhood radius (bucket side = 2ε).
+    pub fn eps(mut self, eps: f32) -> Self {
+        self.dbscan.eps = eps;
+        self
+    }
+
+    /// Adopt unattached non-core points when a fresh core arrives
+    /// (serving-mode extension; off = exact Algorithm 2).
+    pub fn eager_attach(mut self, on: bool) -> Self {
+        self.dbscan.eager_attach = on;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Single in-process structure or S shard workers.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Connectivity layer (default [`ConnKind::Leveled`]; the flat modes
+    /// are ablations and force full-rebuild publishing).
+    pub fn conn(mut self, conn: ConnKind) -> Self {
+        self.conn = conn;
+        self
+    }
+
+    /// Publish strategy. Defaults to [`StitchMode::Delta`] on the leveled
+    /// connectivity and [`StitchMode::FullRebuild`] on the flat modes.
+    pub fn stitch(mut self, stitch: StitchMode) -> Self {
+        self.stitch = Some(stitch);
+        self
+    }
+
+    /// Hash-stage engine for the single backend (`Xla` routes insert
+    /// hashing through the AOT Pallas artifact, falling back to native
+    /// when no artifact matches). Shard workers always hash natively.
+    pub fn hashing(mut self, hashing: EngineKind) -> Self {
+        self.hashing = hashing;
+        self
+    }
+
+    /// Bounded op-channel capacity per shard worker, in batches.
+    pub fn queue(mut self, queue: usize) -> Self {
+        self.queue = queue;
+        self
+    }
+
+    /// Router block edge length, in grid cells (sharded backend).
+    pub fn block_side(mut self, block_side: u32) -> Self {
+        self.block_side = block_side;
+        self
+    }
+
+    /// Ghost-replication margin, in grid cells (sharded backend).
+    pub fn ghost_margin(mut self, ghost_margin: u32) -> Self {
+        self.ghost_margin = ghost_margin;
+        self
+    }
+
+    /// Cell axes used for block routing (sharded backend; 0 = auto).
+    pub fn routing_dims(mut self, routing_dims: usize) -> Self {
+        self.routing_dims = routing_dims;
+        self
+    }
+
+    /// The publish strategy `build` will use (explicit choice, or the
+    /// connectivity-dependent default).
+    pub fn effective_stitch(&self) -> StitchMode {
+        self.stitch.unwrap_or(if self.conn.supports_comp_tracking() {
+            StitchMode::Delta
+        } else {
+            StitchMode::FullRebuild
+        })
+    }
+
+    /// Construct the engine. Errors on contradictory configuration
+    /// (delta publishing on a connectivity without stable component ids)
+    /// or a failed hash-stage setup.
+    pub fn build(self) -> Result<Box<dyn ClusterEngine>> {
+        let stitch = self.effective_stitch();
+        if stitch == StitchMode::Delta && !self.conn.supports_comp_tracking() {
+            return Err(anyhow!(
+                "StitchMode::Delta needs stable component ids, which only \
+                 ConnKind::Leveled provides; drop .stitch(Delta) or use \
+                 .conn(ConnKind::Leveled)"
+            ));
+        }
+        match self.backend {
+            Backend::Single => {
+                let hashing = make_engine(&self.dbscan, self.seed, self.hashing)?;
+                Ok(Box::new(InlineEngine::new(
+                    self.dbscan,
+                    self.conn,
+                    stitch,
+                    self.seed,
+                    hashing,
+                )))
+            }
+            Backend::Sharded(shards) => {
+                // note: shard workers always hash natively; a non-native
+                // `hashing` choice applies to the single backend only
+                // (the CLI surfaces this to the user — library consumers
+                // get silent, documented behaviour instead of stderr)
+                let mut scfg = ShardConfig::new(self.dbscan, shards, self.seed);
+                scfg.conn = self.conn;
+                scfg.stitch = stitch;
+                scfg.queue = self.queue;
+                scfg.block_side = self.block_side;
+                scfg.ghost_margin = self.ghost_margin;
+                scfg.routing_dims = self.routing_dims;
+                Ok(Box::new(ShardedServe::new(scfg)))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stitch_defaults_follow_the_connectivity() {
+        let b = EngineBuilder::new(2);
+        assert_eq!(b.effective_stitch(), StitchMode::Delta);
+        let b = EngineBuilder::new(2).conn(ConnKind::Repair);
+        assert_eq!(b.effective_stitch(), StitchMode::FullRebuild);
+        let b = EngineBuilder::new(2).conn(ConnKind::Paper).stitch(StitchMode::Delta);
+        assert_eq!(b.effective_stitch(), StitchMode::Delta);
+    }
+
+    #[test]
+    fn delta_on_flat_connectivity_is_rejected() {
+        let err = EngineBuilder::new(2)
+            .conn(ConnKind::Repair)
+            .stitch(StitchMode::Delta)
+            .build();
+        assert!(err.is_err());
+        // the connectivity-dependent default resolves the conflict
+        assert!(EngineBuilder::new(2).conn(ConnKind::Repair).build().is_ok());
+    }
+
+    #[test]
+    fn builds_every_backend() {
+        for backend in [Backend::Single, Backend::Sharded(1), Backend::Sharded(3)] {
+            let mut eng = EngineBuilder::new(3)
+                .k(4)
+                .t(6)
+                .eps(0.5)
+                .backend(backend)
+                .seed(7)
+                .build()
+                .unwrap();
+            assert_eq!(eng.dim(), 3);
+            eng.upsert(1, &[0.0, 0.0, 0.0]);
+            let view = eng.publish();
+            assert_eq!(view.live_points(), 1);
+            assert_eq!(view.label(1), Some(-1));
+            let _ = eng.finish();
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Stream drivers over the serve façade — the one glue layer the CLI,
+//! the examples and the coordinator's dataset helpers share, for every
+//! backend.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::{StreamOp, TruthFn};
+use crate::data::Dataset;
+use crate::metrics::ari_nmi;
+
+use super::{ClusterEngine, ServeOutcome, Update};
+
+/// Per-published-snapshot progress report.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// index of the last batch folded into this snapshot
+    pub seq: usize,
+    /// ops in that batch
+    pub ops: usize,
+    pub live_points: usize,
+    pub core_points: usize,
+    pub clusters: usize,
+    /// snapshot version ([`super::SnapshotView::version`])
+    pub version: u64,
+    /// wall-clock seconds since stream start
+    pub wall_s: f64,
+    pub ari: Option<f64>,
+    pub nmi: Option<f64>,
+}
+
+/// Outcome of a full stream run through any serve backend.
+pub struct ServeRunOutcome {
+    pub reports: Vec<ServeReport>,
+    /// final labels per live ext id (sorted by ext)
+    pub final_labels: Vec<(u64, i64)>,
+    pub outcome: ServeOutcome,
+    /// end-to-end wall time: first op applied → final publish
+    pub total_wall_s: f64,
+}
+
+impl ServeRunOutcome {
+    /// Primary updates applied per wall-clock second.
+    pub fn updates_per_s(&self) -> f64 {
+        let ops = self.outcome.stats.inserts + self.outcome.stats.deletes;
+        if self.total_wall_s > 0.0 {
+            ops as f64 / self.total_wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run batched stream ops through a serve engine, publishing a snapshot
+/// (and a report) every `snapshot_every` batches plus once at the end.
+/// `truth` adds ARI/NMI against ground-truth labels to each report.
+pub fn run_stream(
+    mut engine: Box<dyn ClusterEngine>,
+    batches: Vec<Vec<StreamOp>>,
+    snapshot_every: usize,
+    truth: Option<&TruthFn>,
+) -> Result<ServeRunOutcome> {
+    let mut reports = Vec::new();
+    let t0 = Instant::now();
+    let last = batches.len().saturating_sub(1);
+    for (seq, ops) in batches.iter().enumerate() {
+        let updates: Vec<Update<'_>> = ops
+            .iter()
+            .map(|op| match op {
+                StreamOp::Insert { ext, coords } => {
+                    Update::Upsert { ext: *ext, coords }
+                }
+                StreamOp::Delete { ext } => Update::Remove { ext: *ext },
+            })
+            .collect();
+        engine.apply(&updates);
+        let snap_due =
+            snapshot_every > 0 && (seq + 1) % snapshot_every == 0 && seq != last;
+        if snap_due {
+            let snap = engine.publish();
+            let labels = snap.labels();
+            let (ari, nmi) = quality_vs_truth(&labels, truth);
+            reports.push(ServeReport {
+                seq,
+                ops: ops.len(),
+                live_points: snap.live_points(),
+                core_points: snap.core_points(),
+                clusters: snap.clusters(),
+                version: snap.version(),
+                wall_s: t0.elapsed().as_secs_f64(),
+                ari,
+                nmi,
+            });
+        }
+    }
+    // final publish + teardown (finish publishes anything pending)
+    let outcome = engine.finish();
+    let total_wall_s = t0.elapsed().as_secs_f64();
+    let final_labels = outcome.snapshot.labels();
+    let (ari, nmi) = quality_vs_truth(&final_labels, truth);
+    reports.push(ServeReport {
+        seq: last,
+        ops: 0,
+        live_points: outcome.snapshot.live_points(),
+        core_points: outcome.snapshot.core_points(),
+        clusters: outcome.snapshot.clusters(),
+        version: outcome.snapshot.version(),
+        wall_s: total_wall_s,
+        ari,
+        nmi,
+    });
+    Ok(ServeRunOutcome { reports, final_labels, outcome, total_wall_s })
+}
+
+fn quality_vs_truth(
+    labels: &[(u64, i64)],
+    truth: Option<&TruthFn>,
+) -> (Option<f64>, Option<f64>) {
+    match truth {
+        None => (None, None),
+        Some(t) => {
+            if labels.is_empty() {
+                return (None, None);
+            }
+            let want: Vec<i64> = labels.iter().map(|&(e, _)| t(e)).collect();
+            let pred: Vec<i64> = labels.iter().map(|&(_, l)| l).collect();
+            let (a, n) = ari_nmi(&want, &pred);
+            (Some(a), Some(n))
+        }
+    }
+}
+
+/// Final-state quality of a run (ARI/NMI over the live points).
+pub fn final_quality(ds: &Dataset, out: &ServeRunOutcome) -> (f64, f64) {
+    let truth: Vec<i64> =
+        out.final_labels.iter().map(|&(e, _)| ds.labels[e as usize]).collect();
+    let pred: Vec<i64> = out.final_labels.iter().map(|&(_, l)| l).collect();
+    ari_nmi(&truth, &pred)
+}
+
+/// One-line progress summary for CLI logs.
+pub fn summarize(r: &ServeReport) -> String {
+    format!(
+        "snap v{:<4} @batch {:>4}: live={:<7} cores={:<7} clusters={:<5} \
+         wall={:.2}s{}",
+        r.version,
+        r.seq,
+        r.live_points,
+        r.core_points,
+        r.clusters,
+        r.wall_s,
+        match (r.ari, r.nmi) {
+            (Some(a), Some(n)) => format!(" ARI={a:.3} NMI={n:.3}"),
+            _ => String::new(),
+        }
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{make_blobs, BlobsConfig};
+    use crate::serve::{Backend, EngineBuilder};
+
+    fn blob_batches(n: usize, seed: u64) -> (Dataset, Vec<Vec<StreamOp>>) {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n,
+                dim: 4,
+                clusters: 3,
+                std: 0.3,
+                center_box: 20.0,
+                weights: vec![],
+            },
+            seed,
+        );
+        let ops: Vec<StreamOp> = (0..n)
+            .map(|i| StreamOp::Insert { ext: i as u64, coords: ds.point(i).to_vec() })
+            .collect();
+        let batches = ops.chunks(200).map(|c| c.to_vec()).collect();
+        (ds, batches)
+    }
+
+    #[test]
+    fn run_stream_reports_and_quality_single_backend() {
+        let (ds, batches) = blob_batches(800, 3);
+        let engine = EngineBuilder::new(4).k(8).eps(0.75).seed(9).build().unwrap();
+        let labels = ds.labels.clone();
+        let truth = move |e: u64| labels[e as usize];
+        let out = run_stream(engine, batches, 2, Some(&truth)).unwrap();
+        // one mid-stream snapshot (seq 1; seq 3 is the last batch and
+        // folds into the final publish) plus the final report
+        assert_eq!(out.reports.len(), 2);
+        assert_eq!(out.final_labels.len(), 800);
+        let last = out.reports.last().unwrap();
+        assert!(last.ari.unwrap() > 0.95, "ari={:?}", last.ari);
+        let (ari, nmi) = final_quality(&ds, &out);
+        assert!(ari > 0.95 && nmi > 0.9, "ari={ari} nmi={nmi}");
+        assert!(out.updates_per_s() > 0.0);
+        // versions increase monotonically across reports
+        let versions: Vec<u64> = out.reports.iter().map(|r| r.version).collect();
+        assert!(versions.windows(2).all(|w| w[0] < w[1]), "{versions:?}");
+    }
+
+    #[test]
+    fn run_stream_sharded_backend_handles_deletes() {
+        let (ds, mut batches) = blob_batches(600, 5);
+        let dels: Vec<StreamOp> =
+            (0..200).map(|e| StreamOp::Delete { ext: e as u64 }).collect();
+        batches.push(dels);
+        let engine = EngineBuilder::new(4)
+            .k(8)
+            .eps(0.75)
+            .backend(Backend::Sharded(3))
+            .seed(9)
+            .build()
+            .unwrap();
+        let labels = ds.labels.clone();
+        let truth = move |e: u64| labels[e as usize];
+        let out = run_stream(engine, batches, 0, Some(&truth)).unwrap();
+        assert_eq!(out.reports.len(), 1);
+        assert_eq!(out.final_labels.len(), 400);
+        assert_eq!(out.outcome.stats.deletes, 200);
+        assert_eq!(out.outcome.snapshot.live_points(), 400);
+    }
+}

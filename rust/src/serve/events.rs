@@ -1,0 +1,289 @@
+//! Cluster-event subscriptions — the push counterpart of snapshot reads.
+//!
+//! [`super::ClusterEngine::watch`] returns a [`ClusterEvents`] handle;
+//! at every publish the engine derives cluster-level events from the
+//! per-ext label transitions the stitch/stable-component plumbing already
+//! tracks ([`LabelChange`]) and fans them out to every live handle, so
+//! downstream consumers react to merges and splits instead of polling
+//! and diffing full snapshots.
+//!
+//! ## Event semantics (per publish, labels as of the two snapshots)
+//!
+//! * [`ClusterEvent::Formed`] — a label was minted whose members carried
+//!   no cluster label before (fresh or noise points condensed).
+//! * [`ClusterEvent::Dissolved`] — a label vanished and none of its
+//!   members moved to another cluster (all became noise or were deleted).
+//! * [`ClusterEvent::Merged`] — a label vanished and (some of) its
+//!   members now carry another label. Under delta publishing the
+//!   surviving label is the larger side's, so a merge reads
+//!   "smaller `from` absorbed into larger `into`".
+//! * [`ClusterEvent::Split`] — a fresh label was minted for members that
+//!   previously carried a label that **survives**: the smaller side of a
+//!   genuine cluster split (delta publishing mints fresh ids for the
+//!   smaller side).
+//! * [`ClusterEvent::Moved`] — one point's label changed; the raw feed
+//!   the aggregate events are derived from.
+//!
+//! Label **stability** (and therefore meaningful merge/split events)
+//! needs [`crate::shard::StitchMode::Delta`]; the full-rebuild fallback
+//! renumbers labels wholesale every publish, so its event stream is
+//! dominated by renames and is useful mostly for `Moved`-level auditing.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+pub use crate::shard::LabelChange;
+
+/// A cluster-level change observed at one publish; `version` is the
+/// publishing snapshot's [`super::SnapshotView::version`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClusterEvent {
+    /// `label` minted from fresh/noise points only
+    Formed { version: u64, label: i64 },
+    /// `label` vanished without survivors joining another cluster
+    Dissolved { version: u64, label: i64 },
+    /// `from` vanished; its members now carry `into`
+    Merged { version: u64, from: i64, into: i64 },
+    /// fresh `new` split out of the surviving `from`
+    Split { version: u64, from: i64, new: i64 },
+    /// one point's label changed (`None`: not live on that side)
+    Moved { version: u64, ext: u64, from: Option<i64>, to: Option<i64> },
+}
+
+impl ClusterEvent {
+    /// The publish that produced this event.
+    pub fn version(&self) -> u64 {
+        match *self {
+            ClusterEvent::Formed { version, .. }
+            | ClusterEvent::Dissolved { version, .. }
+            | ClusterEvent::Merged { version, .. }
+            | ClusterEvent::Split { version, .. }
+            | ClusterEvent::Moved { version, .. } => version,
+        }
+    }
+}
+
+/// Subscription handle returned by [`super::ClusterEngine::watch`]. Each
+/// publish delivers one batch (possibly empty — a publish with no label
+/// changes), so batches align 1:1 with versions.
+///
+/// Delivery is buffered and unbounded: a live handle accumulates one
+/// batch per publish until drained, so a subscriber that stops consuming
+/// should **drop the handle** (the engine prunes disconnected watchers
+/// at the next publish and stops recording changes once none remain)
+/// rather than letting the backlog grow.
+pub struct ClusterEvents {
+    rx: Receiver<Vec<ClusterEvent>>,
+}
+
+impl ClusterEvents {
+    /// Everything delivered so far, without blocking.
+    pub fn drain(&self) -> Vec<ClusterEvent> {
+        let mut out = Vec::new();
+        while let Ok(mut batch) = self.rx.try_recv() {
+            out.append(&mut batch);
+        }
+        out
+    }
+
+    /// Block for the next publish's batch (`None`: the engine is gone).
+    pub fn next_publish(&self) -> Option<Vec<ClusterEvent>> {
+        self.rx.recv().ok()
+    }
+}
+
+/// Engine-side fan-out: one sender per live watcher; disconnected
+/// watchers are dropped at the next emit.
+#[derive(Default)]
+pub(crate) struct EventHub {
+    txs: Vec<Sender<Vec<ClusterEvent>>>,
+}
+
+impl EventHub {
+    pub fn subscribe(&mut self) -> ClusterEvents {
+        let (tx, rx) = channel();
+        self.txs.push(tx);
+        ClusterEvents { rx }
+    }
+
+    pub fn has_watchers(&self) -> bool {
+        !self.txs.is_empty()
+    }
+
+    pub fn emit(&mut self, events: Vec<ClusterEvent>) {
+        self.txs.retain(|tx| tx.send(events.clone()).is_ok());
+    }
+}
+
+/// Derive the cluster-level events of one publish from its per-ext label
+/// transitions. `prev`/`now` are the cluster-label sets alive on each
+/// side of the publish. Deterministic: aggregate events are sorted by
+/// label, `Moved` events by ext.
+pub(crate) fn derive_events(
+    version: u64,
+    changes: &[LabelChange],
+    prev: &FxHashSet<i64>,
+    now: &FxHashSet<i64>,
+) -> Vec<ClusterEvent> {
+    // flows: vanished label → labeled destinations; new label → sources
+    let mut vanished_dests: FxHashMap<i64, FxHashSet<i64>> = FxHashMap::default();
+    let mut new_sources: FxHashMap<i64, FxHashSet<i64>> = FxHashMap::default();
+    for c in changes {
+        if let Some(f) = c.from {
+            if f >= 0 && !now.contains(&f) {
+                let dests = vanished_dests.entry(f).or_default();
+                if let Some(t) = c.to {
+                    if t >= 0 {
+                        dests.insert(t);
+                    }
+                }
+            }
+        }
+        if let Some(t) = c.to {
+            if t >= 0 && !prev.contains(&t) {
+                let sources = new_sources.entry(t).or_default();
+                if let Some(f) = c.from {
+                    if f >= 0 {
+                        sources.insert(f);
+                    }
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    let mut vanished: Vec<(i64, Vec<i64>)> = vanished_dests
+        .into_iter()
+        .map(|(f, d)| {
+            let mut d: Vec<i64> = d.into_iter().collect();
+            d.sort_unstable();
+            (f, d)
+        })
+        .collect();
+    vanished.sort_unstable_by_key(|&(f, _)| f);
+    for (from, dests) in vanished {
+        if dests.is_empty() {
+            out.push(ClusterEvent::Dissolved { version, label: from });
+        } else {
+            for into in dests {
+                out.push(ClusterEvent::Merged { version, from, into });
+            }
+        }
+    }
+    let mut minted: Vec<(i64, Vec<i64>)> = new_sources
+        .into_iter()
+        .map(|(n, s)| {
+            let mut s: Vec<i64> = s.into_iter().collect();
+            s.sort_unstable();
+            (n, s)
+        })
+        .collect();
+    minted.sort_unstable_by_key(|&(n, _)| n);
+    for (new, sources) in minted {
+        if sources.is_empty() {
+            out.push(ClusterEvent::Formed { version, label: new });
+        } else {
+            // vanished sources already reported as Merged into `new`
+            for from in sources.into_iter().filter(|s| now.contains(s)) {
+                out.push(ClusterEvent::Split { version, from, new });
+            }
+        }
+    }
+    let mut moved: Vec<&LabelChange> = changes.iter().collect();
+    moved.sort_unstable_by_key(|c| c.ext);
+    out.extend(moved.into_iter().map(|c| ClusterEvent::Moved {
+        version,
+        ext: c.ext,
+        from: c.from,
+        to: c.to,
+    }));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sets(v: &[i64]) -> FxHashSet<i64> {
+        v.iter().copied().collect()
+    }
+
+    fn ch(ext: u64, from: Option<i64>, to: Option<i64>) -> LabelChange {
+        LabelChange { ext, from, to }
+    }
+
+    #[test]
+    fn merge_is_reported_for_the_vanished_side() {
+        // cluster 2 absorbed into surviving cluster 1
+        let events = derive_events(
+            5,
+            &[ch(10, Some(2), Some(1)), ch(11, Some(2), Some(1))],
+            &sets(&[1, 2]),
+            &sets(&[1]),
+        );
+        assert!(events
+            .contains(&ClusterEvent::Merged { version: 5, from: 2, into: 1 }));
+        let moved = events
+            .iter()
+            .filter(|e| matches!(e, ClusterEvent::Moved { .. }))
+            .count();
+        assert_eq!(moved, 2);
+    }
+
+    #[test]
+    fn split_mints_fresh_label_from_survivor() {
+        let events = derive_events(
+            7,
+            &[ch(3, Some(0), Some(4)), ch(4, Some(0), Some(4))],
+            &sets(&[0]),
+            &sets(&[0, 4]),
+        );
+        assert!(events.contains(&ClusterEvent::Split { version: 7, from: 0, new: 4 }));
+        assert!(!events.iter().any(|e| matches!(e, ClusterEvent::Merged { .. })));
+    }
+
+    #[test]
+    fn formed_and_dissolved() {
+        let events = derive_events(
+            2,
+            &[
+                ch(1, None, Some(3)),
+                ch(2, Some(-1), Some(3)),
+                ch(7, Some(5), Some(-1)),
+                ch(8, Some(5), None),
+            ],
+            &sets(&[5]),
+            &sets(&[3]),
+        );
+        assert!(events.contains(&ClusterEvent::Formed { version: 2, label: 3 }));
+        assert!(events.contains(&ClusterEvent::Dissolved { version: 2, label: 5 }));
+    }
+
+    #[test]
+    fn rename_reads_as_merge_into_the_new_label_not_split() {
+        // label 6 vanished wholesale into fresh label 9
+        let events = derive_events(
+            4,
+            &[ch(1, Some(6), Some(9)), ch(2, Some(6), Some(9))],
+            &sets(&[6]),
+            &sets(&[9]),
+        );
+        assert!(events.contains(&ClusterEvent::Merged { version: 4, from: 6, into: 9 }));
+        assert!(!events.iter().any(|e| matches!(e, ClusterEvent::Split { .. })));
+        assert!(!events.iter().any(|e| matches!(e, ClusterEvent::Formed { .. })));
+    }
+
+    #[test]
+    fn hub_fans_out_and_drops_dead_watchers() {
+        let mut hub = EventHub::default();
+        assert!(!hub.has_watchers());
+        let a = hub.subscribe();
+        let b = hub.subscribe();
+        hub.emit(vec![ClusterEvent::Formed { version: 1, label: 0 }]);
+        assert_eq!(a.drain().len(), 1);
+        drop(b);
+        hub.emit(vec![]);
+        assert!(hub.has_watchers());
+        assert_eq!(a.next_publish().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,413 @@
+//! [`InlineEngine`] — the single-instance backend of the serve façade:
+//! one `DynamicDbscan` (any connectivity mode) plus the ext ↔ `PointId`
+//! bookkeeping, incremental label maintenance and CoW snapshot state that
+//! every consumer used to hand-roll.
+//!
+//! Publishing is incremental by default: the structure's stitch-change
+//! tracking (stable component ids, dirty-point recording) yields the set
+//! of points whose label may have changed, and only those are relabeled —
+//! `O(Δ·log n)` per publish, the single-instance analogue of the sharded
+//! delta stitch. The flat connectivity ablations lack stable component
+//! ids, so they publish by full relabel (`StitchMode::FullRebuild`),
+//! mirroring the sharded fallback.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+use crate::dbscan::{AnyDbscan, ConnKind, DbscanConfig};
+use crate::lsh::table::PointId;
+use crate::lsh::BucketKey;
+use crate::runtime::engines::HashingEngine;
+use crate::shard::{LabelChange, LabelMap, StitchMode};
+use crate::util::stats::LatencyHisto;
+
+use super::events::{derive_events, ClusterEvents, EventHub};
+use super::snapshot::{CoordMap, SnapshotView};
+use super::{ClusterEngine, ServeOutcome, Stats, Update};
+
+pub(crate) struct InlineEngine {
+    db: AnyDbscan,
+    hashing: Box<dyn HashingEngine>,
+    stitch: StitchMode,
+    dim: usize,
+    eps: f32,
+    ext_pid: FxHashMap<u64, PointId>,
+    pid_ext: FxHashMap<PointId, u64>,
+    /// label state as of the last publish
+    labels: LabelMap,
+    /// core-primary set as of the last publish (LabelMap used as a set)
+    cores: LabelMap,
+    /// label → clustered-ext count (noise excluded)
+    sizes: FxHashMap<i64, usize>,
+    /// stable component id → minted label (delta publishing)
+    comp_label: FxHashMap<u64, i64>,
+    next_label: i64,
+    /// exts touched since the last publish
+    dirty: FxHashSet<u64>,
+    /// reused per-op key row (the single-op upsert path allocates
+    /// nothing for hashing, matching the direct engine)
+    key_row: Vec<BucketKey>,
+    /// live coordinates (CoW-shared with published views)
+    coords: CoordMap,
+    /// the latest published view
+    view: SnapshotView,
+    version: u64,
+    pending: u64,
+    hub: EventHub,
+    inserts: u64,
+    deletes: u64,
+    publishes: u64,
+    add_latency: LatencyHisto,
+    delete_latency: LatencyHisto,
+    publish_latency: LatencyHisto,
+}
+
+impl InlineEngine {
+    pub fn new(
+        cfg: DbscanConfig,
+        conn: ConnKind,
+        stitch: StitchMode,
+        seed: u64,
+        hashing: Box<dyn HashingEngine>,
+    ) -> Self {
+        let (dim, eps) = (cfg.dim, cfg.eps);
+        let mut db = AnyDbscan::new(conn, cfg, seed);
+        if stitch == StitchMode::Delta {
+            db.enable_stitch_tracking();
+        }
+        InlineEngine {
+            db,
+            hashing,
+            stitch,
+            dim,
+            eps,
+            ext_pid: FxHashMap::default(),
+            pid_ext: FxHashMap::default(),
+            labels: LabelMap::new(),
+            cores: LabelMap::new(),
+            sizes: FxHashMap::default(),
+            comp_label: FxHashMap::default(),
+            next_label: 0,
+            dirty: FxHashSet::default(),
+            key_row: Vec::new(),
+            coords: CoordMap::new(),
+            view: SnapshotView::empty(eps, dim),
+            version: 0,
+            pending: 0,
+            hub: EventHub::default(),
+            inserts: 0,
+            deletes: 0,
+            publishes: 0,
+            add_latency: LatencyHisto::new(),
+            delete_latency: LatencyHisto::new(),
+            publish_latency: LatencyHisto::new(),
+        }
+    }
+
+    /// Insert with precomputed keys (shared by `upsert` and `apply`).
+    /// `hash_ns` is the hashing cost attributed to this op so the
+    /// recorded add latency stays comparable with backends that hash
+    /// inside the timed region. A replace (live `ext`) counts as **one**
+    /// accepted write.
+    fn insert_inner(&mut self, ext: u64, coords: &[f32], keys: &[u128], hash_ns: u64) {
+        if let Some(pid) = self.ext_pid.get(&ext).copied() {
+            self.drop_point(ext, pid);
+        }
+        let o0 = Instant::now();
+        let pid = self.db.add_point_with_keys(coords, keys);
+        self.add_latency.record(o0.elapsed().as_nanos() as u64 + hash_ns);
+        self.ext_pid.insert(ext, pid);
+        self.pid_ext.insert(pid, ext);
+        self.coords.set(ext, coords);
+        self.dirty.insert(ext);
+        self.inserts += 1;
+        self.pending += 1;
+    }
+
+    /// Structure-level deletion behind a remove or an upsert-replace —
+    /// bookkeeping only; the callers account the accepted write.
+    fn drop_point(&mut self, ext: u64, pid: PointId) {
+        self.ext_pid.remove(&ext);
+        self.pid_ext.remove(&pid);
+        let o0 = Instant::now();
+        self.db.delete_point(pid);
+        self.delete_latency.record(o0.elapsed().as_nanos() as u64);
+        self.coords.remove(ext);
+        self.dirty.insert(ext);
+    }
+
+    /// Delta publish: relabel only the exts whose stitch-visible state
+    /// changed — `O(Δ·log n)`.
+    fn publish_delta(&mut self) -> Vec<LabelChange> {
+        // membership changes surfaced by the structure's change tracking
+        let pid_ext = &self.pid_ext;
+        let dirty = &mut self.dirty;
+        self.db.drain_stitch_changes(&mut |pid| {
+            if let Some(&e) = pid_ext.get(&pid) {
+                dirty.insert(e);
+            }
+        });
+        let mut changes = Vec::new();
+        let touched: Vec<u64> = self.dirty.drain().collect();
+        for ext in touched {
+            // core set maintenance — flips happen with or without a
+            // label change, so this runs before the label short-circuit
+            match self.ext_pid.get(&ext) {
+                Some(&pid) if self.db.is_core(pid) => {
+                    self.cores.set(ext, 1);
+                }
+                _ => {
+                    self.cores.remove(ext);
+                }
+            }
+            let new_label: Option<i64> = match self.ext_pid.get(&ext) {
+                None => None, // deleted
+                Some(&pid) => {
+                    if self.db.is_noise(pid) {
+                        Some(-1)
+                    } else {
+                        let comp = self.db.stable_cluster(pid);
+                        let next = &mut self.next_label;
+                        let l = *self.comp_label.entry(comp).or_insert_with(|| {
+                            let l = *next;
+                            *next += 1;
+                            l
+                        });
+                        Some(l)
+                    }
+                }
+            };
+            let old = self.labels.get(ext);
+            if old == new_label {
+                continue;
+            }
+            if let Some(o) = old {
+                if o >= 0 {
+                    let c = self.sizes.get_mut(&o).expect("size of live label");
+                    *c -= 1;
+                    if *c == 0 {
+                        self.sizes.remove(&o);
+                    }
+                }
+            }
+            match new_label {
+                Some(l) => {
+                    self.labels.set(ext, l);
+                    if l >= 0 {
+                        *self.sizes.entry(l).or_insert(0) += 1;
+                    }
+                }
+                None => {
+                    self.labels.remove(ext);
+                }
+            }
+            changes.push(LabelChange { ext, from: old, to: new_label });
+        }
+        debug_assert_eq!(
+            self.cores.len(),
+            self.db.num_core_points(),
+            "core set out of sync with the structure"
+        );
+        // occasional comp→label pruning (stale merged-away comps), off
+        // the per-publish Δ path
+        if self.publishes % 64 == 63 {
+            let db = &self.db;
+            let live: FxHashSet<u64> = self
+                .ext_pid
+                .values()
+                .map(|&pid| db.stable_cluster(pid))
+                .collect();
+            self.comp_label.retain(|c, _| live.contains(c));
+        }
+        changes
+    }
+
+    /// Full relabel — the fallback for connectivity modes without stable
+    /// component ids. Labels renumber densely every publish (mirroring
+    /// the sharded `FullRebuild` stitch); `O(n log n)`.
+    fn publish_rebuild(&mut self) -> Vec<LabelChange> {
+        self.dirty.clear();
+        let mut root_label: FxHashMap<u64, i64> = FxHashMap::default();
+        let mut fresh = LabelMap::new();
+        let mut fresh_cores = LabelMap::new();
+        let mut sizes: FxHashMap<i64, usize> = FxHashMap::default();
+        let mut exts: Vec<(u64, PointId)> =
+            self.ext_pid.iter().map(|(&e, &p)| (e, p)).collect();
+        exts.sort_unstable(); // deterministic label numbering
+        let db = &self.db;
+        for (ext, pid) in exts {
+            let l = if db.is_noise(pid) {
+                -1
+            } else {
+                let root = db.stable_cluster(pid);
+                let next = root_label.len() as i64;
+                *root_label.entry(root).or_insert(next)
+            };
+            fresh.set(ext, l);
+            if l >= 0 {
+                *sizes.entry(l).or_insert(0) += 1;
+            }
+            if db.is_core(pid) {
+                fresh_cores.set(ext, 1);
+            }
+        }
+        let changes = fresh.diff_from(&self.labels);
+        self.labels = fresh;
+        self.cores = fresh_cores;
+        self.sizes = sizes;
+        changes
+    }
+}
+
+impl ClusterEngine for InlineEngine {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn upsert(&mut self, ext: u64, coords: &[f32]) {
+        assert_eq!(coords.len(), self.dim, "bad dim in upsert");
+        let mut row = std::mem::take(&mut self.key_row);
+        let h0 = Instant::now();
+        self.hashing.key_row_into(coords, &mut row).expect("hash stage failed");
+        let hash_ns = h0.elapsed().as_nanos() as u64;
+        self.insert_inner(ext, coords, &row, hash_ns);
+        self.key_row = row;
+    }
+
+    fn remove(&mut self, ext: u64) {
+        let pid = self
+            .ext_pid
+            .get(&ext)
+            .copied()
+            .unwrap_or_else(|| panic!("serve: remove of unknown ext {ext}"));
+        self.drop_point(ext, pid);
+        self.deletes += 1;
+        self.pending += 1;
+    }
+
+    fn apply(&mut self, batch: &[Update<'_>]) {
+        // hash every upsert in one pass (hashing is pure in the
+        // coordinates, so interleaved removes cannot change keys), then
+        // apply in order — semantically identical to the per-op calls
+        let mut flat: Vec<f32> = Vec::new();
+        let mut n = 0usize;
+        for u in batch {
+            if let Update::Upsert { coords, .. } = *u {
+                assert_eq!(coords.len(), self.dim, "bad dim in batch upsert");
+                flat.extend_from_slice(coords);
+                n += 1;
+            }
+        }
+        let (keys, hash_ns_per_insert) = if n > 0 {
+            let h0 = Instant::now();
+            let keys = self.hashing.keys_batch(&flat, n).expect("hash stage failed");
+            // amortize the batch hash over its inserts (same accounting
+            // as the shard workers' batch path)
+            (keys, (h0.elapsed().as_nanos() / n as u128) as u64)
+        } else {
+            (Vec::new(), 0)
+        };
+        let mut j = 0usize;
+        for u in batch {
+            match *u {
+                Update::Upsert { ext, coords } => {
+                    self.insert_inner(ext, coords, &keys[j], hash_ns_per_insert);
+                    j += 1;
+                }
+                Update::Remove { ext } => self.remove(ext),
+            }
+        }
+    }
+
+    fn contains(&self, ext: u64) -> bool {
+        self.ext_pid.contains_key(&ext)
+    }
+
+    fn publish(&mut self) -> SnapshotView {
+        let t0 = Instant::now();
+        let changes = match self.stitch {
+            StitchMode::Delta => self.publish_delta(),
+            StitchMode::FullRebuild => self.publish_rebuild(),
+        };
+        self.version += 1;
+        self.publishes += 1;
+        self.pending = 0;
+        self.labels.maybe_grow();
+        self.cores.maybe_grow();
+        self.coords.maybe_grow();
+        debug_assert_eq!(
+            self.coords.len(),
+            self.db.num_points(),
+            "coordinate store out of sync with the structure"
+        );
+        let mut cs: Vec<(i64, usize)> =
+            self.sizes.iter().map(|(&l, &s)| (l, s)).collect();
+        cs.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let view = SnapshotView::new(
+            self.version,
+            0,
+            self.db.num_points(),
+            self.db.num_core_points(),
+            Arc::new(cs),
+            self.labels.clone(),
+            self.cores.clone(),
+            self.coords.clone(),
+            self.eps,
+            self.dim,
+        );
+        if self.hub.has_watchers() {
+            let prev: FxHashSet<i64> =
+                self.view.cluster_sizes().iter().map(|&(l, _)| l).collect();
+            let now: FxHashSet<i64> =
+                view.cluster_sizes().iter().map(|&(l, _)| l).collect();
+            let events = derive_events(self.version, &changes, &prev, &now);
+            self.hub.emit(events);
+        }
+        self.publish_latency.record(t0.elapsed().as_nanos() as u64);
+        self.view = view.clone();
+        view
+    }
+
+    fn snapshot(&self) -> SnapshotView {
+        let mut view = self.view.clone();
+        view.set_pending(self.pending);
+        view
+    }
+
+    fn watch(&mut self) -> ClusterEvents {
+        self.hub.subscribe()
+    }
+
+    fn pending_writes(&self) -> u64 {
+        self.pending
+    }
+
+    fn stats(&self) -> Stats {
+        Stats {
+            shards: 1,
+            inserts: self.inserts,
+            deletes: self.deletes,
+            ghost_inserts: 0,
+            publishes: self.publishes,
+            pending_writes: self.pending,
+            add_latency: self.add_latency.clone(),
+            delete_latency: self.delete_latency.clone(),
+            publish_latency: self.publish_latency.clone(),
+            conn: self.db.repair_stats(),
+        }
+    }
+
+    fn verify(&self) -> Result<(), String> {
+        self.db.verify().map_err(|e| e.to_string())
+    }
+
+    fn finish(mut self: Box<Self>) -> ServeOutcome {
+        if self.pending > 0 || self.publishes == 0 {
+            self.publish();
+        }
+        let stats = self.stats();
+        ServeOutcome { snapshot: self.view.clone(), stats }
+    }
+}

@@ -1,0 +1,187 @@
+//! `serve` — the unified serving API: one typed engine façade over every
+//! clustering backend.
+//!
+//! Before this module the repo had two incompatible front doors —
+//! `DynamicDbscan` (internal `PointId`s, mutable synchronous reads) and
+//! `ShardedEngine` (external keys, snapshot reads) — and every consumer
+//! re-implemented its own glue. `serve` replaces that with one surface:
+//!
+//! ```text
+//!            EngineBuilder ───────────── build() ──────────────┐
+//!   .backend(Single | Sharded(S))  .conn(Leveled|Repair|Paper) │
+//!   .stitch(Delta | FullRebuild)   .hashing(Native | Xla)      ▼
+//!                                             Box<dyn ClusterEngine>
+//!                                    ┌──────────────┴──────────────┐
+//!                              InlineEngine                  ShardedServe
+//!                        (DynamicDbscan + ext map)      (ShardedEngine wrapper)
+//!                                    └──────────────┬──────────────┘
+//!        writes:  upsert / remove / apply(batch)    │ explicit publish()
+//!        reads:   SnapshotView (versioned, immutable, CoW)
+//!                   label · cluster_members · cluster_sizes ·
+//!                   epsilon_neighbors · stats · version · pending_writes
+//!        events:  watch() → ClusterEvents (merge / split / moved per publish)
+//! ```
+//!
+//! **Write model.** All writes are external-key-first (`ext: u64`, the
+//! caller's stable id) and buffered; nothing becomes visible to readers
+//! until an explicit [`ClusterEngine::publish`], which barriers the
+//! backend and emits the next [`SnapshotView`]. `upsert` replaces a live
+//! point (delete + insert); `remove` panics on an unknown key — the same
+//! contract on every backend.
+//!
+//! **Read model / freshness.** Reads go through [`SnapshotView`] — an
+//! immutable CoW handle pinned to one publish. `version()` identifies the
+//! publish; `pending_writes()` reports how many accepted writes the view
+//! does *not* reflect (0 on a view returned by `publish` —
+//! read-your-publishes). This fixes the historical `cluster_of` staleness
+//! trap: freshness is now visible in the type you read from. See
+//! [`snapshot`] for the full contract.
+//!
+//! **Events.** [`ClusterEngine::watch`] subscribes to per-publish
+//! [`ClusterEvent`]s (merges, splits, formed/dissolved clusters, per-point
+//! moves) derived from the stable-component change plumbing — no snapshot
+//! polling. See [`events`] for semantics.
+//!
+//! **Metrics.** One [`Stats`] struct — op counters, pending writes, and
+//! the add/delete/publish latency histograms — replaces the previously
+//! duplicated per-backend accessors.
+
+pub mod builder;
+pub mod driver;
+pub mod events;
+mod inline;
+mod sharded;
+pub mod snapshot;
+
+pub use builder::{Backend, EngineBuilder};
+pub use events::{ClusterEvent, ClusterEvents};
+pub use snapshot::{SnapshotStats, SnapshotView};
+
+pub use crate::coordinator::driver::EngineKind;
+pub use crate::dbscan::ConnKind;
+pub use crate::shard::StitchMode;
+
+use crate::dbscan::RepairStats;
+use crate::util::stats::LatencyHisto;
+
+/// One buffered update in a [`ClusterEngine::apply`] batch. `Upsert`
+/// borrows its coordinates — the batch path copies them at most once
+/// (into the engine's wire/arena storage).
+#[derive(Clone, Copy, Debug)]
+pub enum Update<'a> {
+    Upsert { ext: u64, coords: &'a [f32] },
+    Remove { ext: u64 },
+}
+
+/// The unified metrics surface of a serve engine — op counters plus the
+/// latency histograms that were previously scattered across
+/// `EngineOutcome` fields and per-engine accessors.
+///
+/// `inserts`/`deletes`/`pending_writes` count **accepted façade writes**:
+/// an upsert that replaces a live point is one write (the sharded
+/// engine's internal delete + re-insert fan-out is not surfaced here,
+/// except through `ghost_inserts`, which stays an engine-level counter).
+///
+/// For the sharded backend, `add_latency`/`delete_latency` and `conn` are
+/// owned by the worker threads and merge in at [`ClusterEngine::finish`];
+/// mid-run [`ClusterEngine::stats`] reports them empty. The inline
+/// backend tracks everything live.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    /// shard workers (1 = the inline/single backend)
+    pub shards: usize,
+    /// primary inserts accepted
+    pub inserts: u64,
+    /// deletes accepted
+    pub deletes: u64,
+    /// ghost replicas created by boundary replication (sharded only)
+    pub ghost_inserts: u64,
+    pub publishes: u64,
+    /// writes accepted since the last publish (not yet readable)
+    pub pending_writes: u64,
+    pub add_latency: LatencyHisto,
+    pub delete_latency: LatencyHisto,
+    /// end-to-end publish latency as seen through the façade
+    pub publish_latency: LatencyHisto,
+    /// connectivity-layer counters (summed across shards at finish)
+    pub conn: RepairStats,
+}
+
+impl Stats {
+    /// Ghost replicas per primary insert (0 on the single backend).
+    pub fn ghost_ratio(&self) -> f64 {
+        if self.inserts == 0 {
+            0.0
+        } else {
+            self.ghost_inserts as f64 / self.inserts as f64
+        }
+    }
+}
+
+/// Everything a finished engine hands back: the final published view and
+/// the complete [`Stats`] (worker latencies merged).
+pub struct ServeOutcome {
+    pub snapshot: SnapshotView,
+    pub stats: Stats,
+}
+
+/// The unified serving engine: external-key writes, explicit publication,
+/// versioned snapshot reads and cluster-event subscriptions — one
+/// contract for the single-instance and sharded backends. Construct via
+/// [`EngineBuilder`].
+pub trait ClusterEngine {
+    /// Data dimensionality the engine was built with.
+    fn dim(&self) -> usize;
+
+    /// Insert — or, when `ext` is live, replace — a point. Buffered;
+    /// visible to readers after the next [`Self::publish`].
+    fn upsert(&mut self, ext: u64, coords: &[f32]);
+
+    /// Remove a live point. Panics when `ext` is unknown (a remove that
+    /// silently no-ops would hide double-delete bugs).
+    fn remove(&mut self, ext: u64);
+
+    /// Apply a mixed batch in order — semantically identical to the
+    /// per-op calls, but lets the backend hash/ship the batch in bulk.
+    fn apply(&mut self, batch: &[Update<'_>]) {
+        for u in batch {
+            match *u {
+                Update::Upsert { ext, coords } => self.upsert(ext, coords),
+                Update::Remove { ext } => self.remove(ext),
+            }
+        }
+    }
+
+    /// Is `ext` live in the engine's **write** state (pending writes
+    /// included — unlike [`SnapshotView::contains`])?
+    fn contains(&self, ext: u64) -> bool;
+
+    /// Barrier on every buffered write, fold the changes into the global
+    /// clustering and return the next [`SnapshotView`] (version + 1,
+    /// `pending_writes() == 0` — read-your-publishes).
+    fn publish(&mut self) -> SnapshotView;
+
+    /// The latest published view, with `pending_writes()` counted at this
+    /// call. Cheap (CoW clone); never blocks the update path.
+    fn snapshot(&self) -> SnapshotView;
+
+    /// Subscribe to per-publish cluster events (merge/split/moved — see
+    /// [`events`]). Any number of watchers; each publish delivers one
+    /// batch per live watcher.
+    fn watch(&mut self) -> ClusterEvents;
+
+    /// Writes accepted since the last publish.
+    fn pending_writes(&self) -> u64;
+
+    /// Current metrics (see [`Stats`] for sharded-backend caveats).
+    fn stats(&self) -> Stats;
+
+    /// Machine-check the Theorem-2 structural invariants. Supported on
+    /// the single backend; the sharded backend returns `Err` (workers own
+    /// their structures).
+    fn verify(&self) -> Result<(), String>;
+
+    /// Publish any pending writes, stop the backend and hand back the
+    /// final view plus complete stats.
+    fn finish(self: Box<Self>) -> ServeOutcome;
+}

@@ -1,0 +1,207 @@
+//! [`ShardedServe`] — the serve façade over [`ShardedEngine`]: external
+//! keys in, versioned [`SnapshotView`]s out, with the engine's delta
+//! publish plumbing surfaced as cluster events. Adds the upsert/liveness
+//! bookkeeping and publish-pinned coordinate state the raw engine does
+//! not keep.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rustc_hash::FxHashSet;
+
+use crate::dbscan::RepairStats;
+use crate::shard::{ShardConfig, ShardedEngine};
+use crate::util::stats::LatencyHisto;
+
+use super::events::{derive_events, ClusterEvents, EventHub};
+use super::snapshot::{CoordMap, SnapshotView};
+use super::{ClusterEngine, ServeOutcome, Stats, Update};
+
+pub(crate) struct ShardedServe {
+    eng: ShardedEngine,
+    dim: usize,
+    eps: f32,
+    /// live coordinates (CoW-shared with published views); also the
+    /// liveness set backing `upsert`'s replace semantics
+    coords: CoordMap,
+    /// the latest published view
+    view: SnapshotView,
+    hub: EventHub,
+    publish_latency: LatencyHisto,
+    /// façade-level write accounting: an upsert-replace is **one**
+    /// accepted write even though the engine sees a delete + an insert
+    pending: u64,
+    inserts: u64,
+    deletes: u64,
+}
+
+impl ShardedServe {
+    pub fn new(cfg: ShardConfig) -> Self {
+        let (dim, eps) = (cfg.dbscan.dim, cfg.dbscan.eps);
+        ShardedServe {
+            eng: ShardedEngine::new(cfg),
+            dim,
+            eps,
+            coords: CoordMap::new(),
+            view: SnapshotView::empty(eps, dim),
+            hub: EventHub::default(),
+            publish_latency: LatencyHisto::new(),
+            pending: 0,
+            inserts: 0,
+            deletes: 0,
+        }
+    }
+
+    fn publish_inner(&mut self) -> SnapshotView {
+        let t0 = Instant::now();
+        let snap = self.eng.publish();
+        let changes = self.eng.drain_label_changes();
+        self.coords.maybe_grow();
+        debug_assert_eq!(
+            self.coords.len(),
+            snap.live_points,
+            "coordinate store out of sync with the published snapshot"
+        );
+        let view = SnapshotView::new(
+            snap.seq,
+            0,
+            snap.live_points,
+            snap.core_points,
+            Arc::new(snap.cluster_sizes.clone()),
+            snap.label_map().clone(),
+            snap.core_map().clone(),
+            self.coords.clone(),
+            self.eps,
+            self.dim,
+        );
+        if self.hub.has_watchers() {
+            let prev: FxHashSet<i64> =
+                self.view.cluster_sizes().iter().map(|&(l, _)| l).collect();
+            let now: FxHashSet<i64> =
+                view.cluster_sizes().iter().map(|&(l, _)| l).collect();
+            let events = derive_events(view.version(), &changes, &prev, &now);
+            self.hub.emit(events);
+        } else {
+            // the last watcher is gone (emit pruned it): stop paying for
+            // engine-level change recording until the next watch()
+            self.eng.set_change_log(false);
+        }
+        self.publish_latency.record(t0.elapsed().as_nanos() as u64);
+        self.pending = 0;
+        self.view = view.clone();
+        view
+    }
+}
+
+impl ClusterEngine for ShardedServe {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn upsert(&mut self, ext: u64, coords: &[f32]) {
+        assert_eq!(coords.len(), self.dim, "bad dim in upsert");
+        if self.coords.get(ext).is_some() {
+            // replace: one accepted write, two engine ops
+            self.eng.delete(ext);
+        }
+        self.eng.insert(ext, coords);
+        self.coords.set(ext, coords);
+        self.inserts += 1;
+        self.pending += 1;
+    }
+
+    fn remove(&mut self, ext: u64) {
+        assert!(
+            self.coords.get(ext).is_some(),
+            "serve: remove of unknown ext {ext}"
+        );
+        self.eng.delete(ext);
+        self.coords.remove(ext);
+        self.deletes += 1;
+        self.pending += 1;
+    }
+
+    fn apply(&mut self, batch: &[Update<'_>]) {
+        for u in batch {
+            match *u {
+                Update::Upsert { ext, coords } => self.upsert(ext, coords),
+                Update::Remove { ext } => self.remove(ext),
+            }
+        }
+        // ship the batch now so the workers overlap with the caller's
+        // next batch instead of waiting for the publish barrier
+        self.eng.flush();
+    }
+
+    fn contains(&self, ext: u64) -> bool {
+        self.coords.get(ext).is_some()
+    }
+
+    fn publish(&mut self) -> SnapshotView {
+        self.publish_inner()
+    }
+
+    fn snapshot(&self) -> SnapshotView {
+        let mut view = self.view.clone();
+        view.set_pending(self.pending);
+        view
+    }
+
+    fn watch(&mut self) -> ClusterEvents {
+        // start recording label transitions from the next publish on
+        self.eng.set_change_log(true);
+        self.hub.subscribe()
+    }
+
+    fn pending_writes(&self) -> u64 {
+        self.pending
+    }
+
+    fn stats(&self) -> Stats {
+        let es = self.eng.stats();
+        Stats {
+            shards: self.eng.shards(),
+            inserts: self.inserts,
+            deletes: self.deletes,
+            ghost_inserts: es.ghost_inserts,
+            publishes: es.publishes,
+            pending_writes: self.pending,
+            // per-op latencies live in the worker threads until finish
+            add_latency: LatencyHisto::new(),
+            delete_latency: LatencyHisto::new(),
+            publish_latency: self.publish_latency.clone(),
+            conn: RepairStats::default(),
+        }
+    }
+
+    fn verify(&self) -> Result<(), String> {
+        Err("invariant verification runs on the single backend only \
+             (shard workers own their structures)"
+            .to_string())
+    }
+
+    fn finish(mut self: Box<Self>) -> ServeOutcome {
+        if self.pending > 0 || self.eng.stats().publishes == 0 {
+            // publish through the façade so the view and watchers update
+            self.publish_inner();
+        }
+        let this = *self;
+        let ShardedServe { eng, view, publish_latency, inserts, deletes, .. } = this;
+        let shards = eng.shards();
+        let out = eng.finish();
+        let conn = out.conn_stats();
+        let stats = Stats {
+            shards,
+            inserts,
+            deletes,
+            ghost_inserts: out.stats.ghost_inserts,
+            publishes: out.stats.publishes,
+            pending_writes: 0,
+            add_latency: out.add_latency,
+            delete_latency: out.delete_latency,
+            publish_latency,
+            conn,
+        };
+        ServeOutcome { snapshot: view, stats }
+    }
+}

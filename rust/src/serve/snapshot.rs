@@ -1,0 +1,391 @@
+//! Versioned immutable read handles.
+//!
+//! A [`SnapshotView`] is the uniform read surface of every
+//! [`super::ClusterEngine`] backend: label lookups, cluster membership and
+//! sizes, ε-neighborhoods and summary stats, all answered from state
+//! frozen at one publish. Internally it is a bundle of CoW structures —
+//! the [`crate::shard::LabelMap`] label state plus a `CoordMap` of
+//! point coordinates — so cloning a view (and publishing the next one)
+//! costs `O(#chunks)` pointer copies, never `O(n)`.
+//!
+//! ## Freshness contract
+//!
+//! * [`SnapshotView::version`] increases by one publish; two views with
+//!   the same version answer every query identically.
+//! * A view reflects **exactly** the writes accepted before the publish
+//!   that produced it. Writes accepted later are invisible to it —
+//!   [`SnapshotView::pending_writes`] (captured when the handle was
+//!   obtained) says how many such writes the engine had buffered.
+//! * For read-your-writes, call [`super::ClusterEngine::publish`] and use
+//!   the view it returns (its `pending_writes` is 0 by construction).
+
+use std::sync::Arc;
+
+use rustc_hash::FxHashMap;
+
+use crate::shard::LabelMap;
+use crate::util::rng::mix64;
+
+/// Target mean entries per chunk; growth triggers at twice this.
+const TARGET_PER_CHUNK: usize = 32;
+/// Initial chunk count (power of two).
+const MIN_CHUNKS: usize = 64;
+
+/// CoW `ext → coordinates` map, chunked like [`LabelMap`]: publishing
+/// clones the chunk-pointer vector, later upserts deep-copy only the
+/// touched chunks (each entry is an `Arc<[f32]>`, so a chunk copy clones
+/// pointers, not coordinate data).
+#[derive(Clone, Debug)]
+pub(crate) struct CoordMap {
+    chunks: Vec<Arc<FxHashMap<u64, Arc<[f32]>>>>,
+    len: usize,
+}
+
+impl CoordMap {
+    pub fn new() -> Self {
+        CoordMap {
+            chunks: (0..MIN_CHUNKS).map(|_| Arc::new(FxHashMap::default())).collect(),
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn chunk_ix(&self, ext: u64) -> usize {
+        // chunk count is always a power of two
+        (mix64(ext) as usize) & (self.chunks.len() - 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn get(&self, ext: u64) -> Option<&[f32]> {
+        self.chunks[self.chunk_ix(ext)].get(&ext).map(|a| a.as_ref())
+    }
+
+    /// Insert or replace; deep-copies the target chunk iff a published
+    /// view still shares it.
+    pub fn set(&mut self, ext: u64, coords: &[f32]) {
+        let i = self.chunk_ix(ext);
+        let prev = Arc::make_mut(&mut self.chunks[i]).insert(ext, Arc::from(coords));
+        if prev.is_none() {
+            self.len += 1;
+        }
+    }
+
+    /// Remove, checking membership before `Arc::make_mut` so removing an
+    /// absent key never deep-copies a view-shared chunk.
+    pub fn remove(&mut self, ext: u64) {
+        let i = self.chunk_ix(ext);
+        if !self.chunks[i].contains_key(&ext) {
+            return;
+        }
+        if Arc::make_mut(&mut self.chunks[i]).remove(&ext).is_some() {
+            self.len -= 1;
+        }
+    }
+
+    /// Unordered iteration over `(ext, coords)`.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &[f32])> + '_ {
+        self.chunks
+            .iter()
+            .flat_map(|c| c.iter().map(|(&e, a)| (e, a.as_ref())))
+    }
+
+    /// Double the chunk count once mean occupancy exceeds the target —
+    /// amortized `O(1)` per insertion, called between publishes.
+    pub fn maybe_grow(&mut self) {
+        if self.len <= self.chunks.len() * TARGET_PER_CHUNK * 2 {
+            return;
+        }
+        let new_n = self.chunks.len() * 2;
+        let mut fresh: Vec<FxHashMap<u64, Arc<[f32]>>> =
+            (0..new_n).map(|_| FxHashMap::default()).collect();
+        for c in &self.chunks {
+            for (&e, a) in c.iter() {
+                fresh[(mix64(e) as usize) & (new_n - 1)].insert(e, Arc::clone(a));
+            }
+        }
+        self.chunks = fresh.into_iter().map(Arc::new).collect();
+    }
+}
+
+impl Default for CoordMap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Summary counters of one view (see [`SnapshotView::stats`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SnapshotStats {
+    pub version: u64,
+    /// writes the engine had accepted but not published when this handle
+    /// was obtained — 0 on a view returned by `publish`
+    pub pending_writes: u64,
+    pub live_points: usize,
+    pub core_points: usize,
+    pub clusters: usize,
+}
+
+/// An immutable, versioned view of the clustering — the uniform read
+/// handle of every serve backend. Cheap to clone and safe to hand to
+/// other threads; it never blocks (or observes) the update path. See the
+/// [module docs](self) for the freshness contract.
+#[derive(Clone, Debug)]
+pub struct SnapshotView {
+    version: u64,
+    pending: u64,
+    live_points: usize,
+    core_points: usize,
+    cluster_sizes: Arc<Vec<(i64, usize)>>,
+    labels: LabelMap,
+    /// core-primary set ([`LabelMap`] used as a CoW set)
+    cores: LabelMap,
+    coords: CoordMap,
+    eps: f32,
+    dim: usize,
+}
+
+impl SnapshotView {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        version: u64,
+        pending: u64,
+        live_points: usize,
+        core_points: usize,
+        cluster_sizes: Arc<Vec<(i64, usize)>>,
+        labels: LabelMap,
+        cores: LabelMap,
+        coords: CoordMap,
+        eps: f32,
+        dim: usize,
+    ) -> Self {
+        SnapshotView {
+            version,
+            pending,
+            live_points,
+            core_points,
+            cluster_sizes,
+            labels,
+            cores,
+            coords,
+            eps,
+            dim,
+        }
+    }
+
+    /// The view of an engine that has never published (version 0, empty).
+    pub(crate) fn empty(eps: f32, dim: usize) -> Self {
+        SnapshotView {
+            version: 0,
+            pending: 0,
+            live_points: 0,
+            core_points: 0,
+            cluster_sizes: Arc::new(Vec::new()),
+            labels: LabelMap::new(),
+            cores: LabelMap::new(),
+            coords: CoordMap::new(),
+            eps,
+            dim,
+        }
+    }
+
+    pub(crate) fn set_pending(&mut self, pending: u64) {
+        self.pending = pending;
+    }
+
+    /// Publish counter of the producing engine; strictly increasing, and
+    /// equal versions answer identically.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Writes accepted by the engine but **not** reflected here, counted
+    /// when this handle was obtained. 0 on views returned by `publish`.
+    pub fn pending_writes(&self) -> u64 {
+        self.pending
+    }
+
+    /// Global cluster of an external id: `None` when not live (as of this
+    /// view), `Some(-1)` for noise, `Some(l ≥ 0)` for cluster `l`.
+    pub fn label(&self, ext: u64) -> Option<i64> {
+        self.labels.get(ext)
+    }
+
+    /// Is `ext` live in this view?
+    pub fn contains(&self, ext: u64) -> bool {
+        self.labels.get(ext).is_some()
+    }
+
+    /// Is `ext` a core point (Definition 4) as of this view? `false` for
+    /// non-core and unknown ids alike, matching the structure-level
+    /// convention.
+    pub fn is_core(&self, ext: u64) -> bool {
+        self.cores.get(ext).is_some()
+    }
+
+    /// Coordinates of a live point, pinned at publish time.
+    pub fn coords_of(&self, ext: u64) -> Option<&[f32]> {
+        self.coords.get(ext)
+    }
+
+    /// `(label, size)` sorted by size descending (ties: label ascending);
+    /// noise excluded.
+    pub fn cluster_sizes(&self) -> &[(i64, usize)] {
+        &self.cluster_sizes
+    }
+
+    /// Number of clusters (noise excluded).
+    pub fn clusters(&self) -> usize {
+        self.cluster_sizes.len()
+    }
+
+    pub fn live_points(&self) -> usize {
+        self.live_points
+    }
+
+    pub fn core_points(&self) -> usize {
+        self.core_points
+    }
+
+    /// Members of a cluster (`-1`: the noise set), sorted by ext —
+    /// materialized on demand in `O(n)`; never built on the publish path.
+    pub fn cluster_members(&self, label: i64) -> Vec<u64> {
+        let mut out: Vec<u64> = self
+            .labels
+            .iter()
+            .filter(|&(_, l)| l == label)
+            .map(|(e, _)| e)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Data dimensionality of the producing engine.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Live points within Euclidean distance ε of `x` (the classical
+    /// DBSCAN ε-neighborhood), sorted by ext. Answered from the
+    /// publish-pinned coordinates — `O(n·d)` scan; an indexed read path
+    /// is an open item (ROADMAP). Panics on a wrong-dimensionality probe
+    /// (a truncated zip would silently inflate the neighborhood).
+    pub fn epsilon_neighbors(&self, x: &[f32]) -> Vec<u64> {
+        assert_eq!(x.len(), self.dim, "bad dim in epsilon_neighbors");
+        let eps2 = (self.eps as f64) * (self.eps as f64);
+        let mut out: Vec<u64> = self
+            .coords
+            .iter()
+            .filter(|(_, c)| {
+                let d2: f64 = c
+                    .iter()
+                    .zip(x.iter())
+                    .map(|(&a, &b)| {
+                        let d = (a - b) as f64;
+                        d * d
+                    })
+                    .sum();
+                d2 <= eps2
+            })
+            .map(|(e, _)| e)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// `(ext, label)` for every live point, sorted by ext — `O(n log n)`,
+    /// for quality evaluation and tests.
+    pub fn labels(&self) -> Vec<(u64, i64)> {
+        self.labels.sorted()
+    }
+
+    /// Summary counters of this view.
+    pub fn stats(&self) -> SnapshotStats {
+        SnapshotStats {
+            version: self.version,
+            pending_writes: self.pending,
+            live_points: self.live_points,
+            core_points: self.core_points,
+            clusters: self.cluster_sizes.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coord_map_roundtrip_and_cow() {
+        let mut m = CoordMap::new();
+        for e in 0..500u64 {
+            m.set(e, &[e as f32, -(e as f32)]);
+        }
+        assert_eq!(m.len(), 500);
+        let snap = m.clone(); // "publish"
+        m.set(7, &[9.0, 9.0]);
+        m.remove(8);
+        assert_eq!(snap.get(7), Some(&[7.0, -7.0][..]));
+        assert!(snap.get(8).is_some());
+        assert_eq!(m.get(7), Some(&[9.0, 9.0][..]));
+        assert!(m.get(8).is_none());
+        assert_eq!(m.len(), 499);
+    }
+
+    #[test]
+    fn coord_map_growth_preserves_content() {
+        let mut m = CoordMap::new();
+        for e in 0..10_000u64 {
+            m.set(e * 3, &[e as f32]);
+        }
+        m.maybe_grow();
+        assert_eq!(m.len(), 10_000);
+        for e in 0..10_000u64 {
+            assert_eq!(m.get(e * 3), Some(&[e as f32][..]));
+        }
+        assert!(m.get(1).is_none());
+    }
+
+    #[test]
+    fn view_queries_on_manual_state() {
+        let mut labels = LabelMap::new();
+        let mut cores = LabelMap::new();
+        let mut coords = CoordMap::new();
+        for (e, l, x) in
+            [(1u64, 0i64, 0.0f32), (2, 0, 0.1), (3, -1, 5.0), (9, 1, 10.0)]
+        {
+            labels.set(e, l);
+            coords.set(e, &[x, 0.0]);
+        }
+        cores.set(1, 1);
+        cores.set(9, 1);
+        let view = SnapshotView::new(
+            3,
+            2,
+            4,
+            2,
+            Arc::new(vec![(0, 2), (1, 1)]),
+            labels,
+            cores,
+            coords,
+            0.5,
+            2,
+        );
+        assert_eq!(view.dim(), 2);
+        assert_eq!(view.version(), 3);
+        assert_eq!(view.pending_writes(), 2);
+        assert_eq!(view.label(1), Some(0));
+        assert_eq!(view.label(3), Some(-1));
+        assert_eq!(view.label(4), None);
+        assert!(view.is_core(1) && view.is_core(9));
+        assert!(!view.is_core(2) && !view.is_core(404));
+        assert_eq!(view.cluster_members(0), vec![1, 2]);
+        assert_eq!(view.cluster_members(-1), vec![3]);
+        assert_eq!(view.epsilon_neighbors(&[0.0, 0.0]), vec![1, 2]);
+        assert_eq!(view.clusters(), 2);
+        assert_eq!(view.stats().live_points, 4);
+        assert_eq!(view.labels(), vec![(1, 0), (2, 0), (3, -1), (9, 1)]);
+    }
+}

@@ -27,7 +27,7 @@ use crate::dbscan::RepairStats;
 use crate::util::stats::LatencyHisto;
 
 use super::router::Router;
-use super::stitch::{stitch_full, GlobalSnapshot, Stitcher};
+use super::stitch::{stitch_full, GlobalSnapshot, LabelChange, Stitcher};
 use super::worker::{
     run_worker, ShardBatch, ShardCore, ShardDelta, ShardReply, ShardSnapshot,
     WorkerReport,
@@ -122,6 +122,14 @@ pub struct ShardedEngine {
     /// ops accepted since the last publish (lets `finish` skip a
     /// redundant stitch when the snapshot is already current)
     dirty: bool,
+    /// ops accepted since the last publish — the freshness gap between
+    /// the engine's write state and the published read snapshot
+    pending_writes: u64,
+    /// record per-ext label transitions at publish (the serve façade's
+    /// `watch()` plumbing); off by default
+    log_changes: bool,
+    /// transitions of the latest publish, drained by `drain_label_changes`
+    last_changes: Vec<LabelChange>,
 }
 
 impl ShardedEngine {
@@ -129,12 +137,19 @@ impl ShardedEngine {
         let shards = cfg.shards.max(1);
         // delta tracking only pays off when deltas are consumed
         let track = cfg.stitch == StitchMode::Delta;
+        assert!(
+            !track || cfg.conn.supports_comp_tracking(),
+            "StitchMode::Delta needs stable component ids — only \
+             ConnKind::Leveled provides them; use StitchMode::FullRebuild \
+             for the flat ablation modes"
+        );
         let (router, backend) = if shards == 1 {
             (
                 None,
                 Backend::Inline(Box::new(ShardCore::new(
                     0,
                     cfg.dbscan.clone(),
+                    cfg.conn,
                     cfg.seed,
                     track,
                 ))),
@@ -147,11 +162,12 @@ impl ShardedEngine {
             for shard in 0..shards {
                 let (tx, rx) = sync_channel::<ShardBatch>(cfg.queue.max(1));
                 let dcfg = cfg.dbscan.clone();
+                let conn = cfg.conn;
                 let seed = cfg.seed;
                 let rtx = reply_tx.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("shard-{shard}"))
-                    .spawn(move || run_worker(shard, dcfg, seed, track, rx, rtx))
+                    .spawn(move || run_worker(shard, dcfg, conn, seed, track, rx, rtx))
                     .expect("failed to spawn shard worker");
                 txs.push(tx);
                 workers.push(handle);
@@ -170,6 +186,9 @@ impl ShardedEngine {
             stats: EngineStats::default(),
             publish_latency: LatencyHisto::new(),
             dirty: false,
+            pending_writes: 0,
+            log_changes: false,
+            last_changes: Vec::new(),
             cfg,
         }
     }
@@ -192,6 +211,7 @@ impl ShardedEngine {
         assert_eq!(coords.len(), self.cfg.dbscan.dim, "bad dim in sharded insert");
         self.stats.inserts += 1;
         self.dirty = true;
+        self.pending_writes += 1;
         let Some(router) = &mut self.router else {
             // S == 1: no routing, no ghosts, no placement bookkeeping
             // (the core's own ext map enforces id uniqueness)
@@ -215,6 +235,7 @@ impl ShardedEngine {
     pub fn delete(&mut self, ext: u64) {
         self.stats.deletes += 1;
         self.dirty = true;
+        self.pending_writes += 1;
         if self.router.is_none() {
             self.pending[0].push_delete(ext);
             return;
@@ -340,18 +361,30 @@ impl ShardedEngine {
                 let seq = self.next_seq;
                 self.next_seq += 1;
                 let deltas = self.collect_deltas(seq);
-                Arc::new(self.stitcher.apply(&deltas, seq))
+                let snap = Arc::new(self.stitcher.apply(&deltas, seq));
+                if self.log_changes {
+                    self.last_changes = self.stitcher.drain_changes();
+                }
+                snap
             }
             StitchMode::FullRebuild => {
                 let snaps = self.full_dump();
                 let seq = snaps[0].seq;
-                Arc::new(stitch_full(snaps, seq))
+                let snap = Arc::new(stitch_full(snaps, seq));
+                if self.log_changes {
+                    // no per-ext plumbing on this path: diff the label
+                    // maps — O(n), same order as the rebuild itself
+                    self.last_changes =
+                        snap.label_map().diff_from(self.snapshot.label_map());
+                }
+                snap
             }
         };
         self.publish_latency.record(t0.elapsed().as_nanos() as u64);
         self.snapshot = Arc::clone(&snap);
         self.stats.publishes += 1;
         self.dirty = false;
+        self.pending_writes = 0;
         snap
     }
 
@@ -365,10 +398,23 @@ impl ShardedEngine {
         Arc::clone(&self.snapshot)
     }
 
-    /// Global cluster of `ext` as of the latest snapshot (`None`: not
-    /// live, `Some(-1)`: noise).
+    /// Global cluster of `ext` **as of the latest published snapshot**
+    /// (`None`: not live, `Some(-1)`: noise).
+    ///
+    /// Freshness: this answers from the last [`Self::publish`] even when
+    /// unflushed or unpublished writes are pending — a point inserted
+    /// after that publish reads as `None` here. Check
+    /// [`Self::pending_writes`] (surfaced as
+    /// `serve::SnapshotView::pending_writes` on the façade) to reason
+    /// about the gap, and call `publish` for read-your-writes.
     pub fn cluster_of(&self, ext: u64) -> Option<i64> {
         self.snapshot.cluster_of(ext)
+    }
+
+    /// Ops accepted since the last publish — the number of writes the
+    /// snapshot-backed reads do **not** yet reflect.
+    pub fn pending_writes(&self) -> u64 {
+        self.pending_writes
     }
 
     /// Global `(label, size)` pairs, largest first, as of the latest
@@ -381,9 +427,22 @@ impl ShardedEngine {
         &self.stats
     }
 
-    /// Publish-latency histogram so far (p50/p99 of `publish` calls).
-    pub fn publish_latency(&self) -> &LatencyHisto {
-        &self.publish_latency
+    /// Record per-ext label transitions at every publish, drained via
+    /// [`Self::drain_label_changes`] — the plumbing behind the serve
+    /// façade's `watch()` events. Off by default (the buffer would grow
+    /// unbounded with nobody draining it).
+    pub fn set_change_log(&mut self, on: bool) {
+        self.log_changes = on;
+        self.stitcher.set_change_log(on);
+        if !on {
+            self.last_changes.clear();
+        }
+    }
+
+    /// Take the label transitions of the most recent publish (empty when
+    /// the change log is off).
+    pub fn drain_label_changes(&mut self) -> Vec<LabelChange> {
+        std::mem::take(&mut self.last_changes)
     }
 
     // ------------------------------------------------------------------

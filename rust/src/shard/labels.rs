@@ -22,6 +22,8 @@ use rustc_hash::FxHashMap;
 
 use crate::util::rng::mix64;
 
+use super::stitch::LabelChange;
+
 /// Target mean entries per chunk; growth triggers at twice this.
 const TARGET_PER_CHUNK: usize = 48;
 /// Initial chunk count (power of two).
@@ -74,9 +76,14 @@ impl LabelMap {
         prev
     }
 
-    /// Remove; returns the previous label if present.
+    /// Remove; returns the previous label if present. Checks membership
+    /// before `Arc::make_mut` so removing an absent key never deep-copies
+    /// a snapshot-shared chunk.
     pub fn remove(&mut self, ext: u64) -> Option<i64> {
         let i = self.chunk_ix(ext);
+        if !self.chunks[i].contains_key(&ext) {
+            return None;
+        }
         let prev = Arc::make_mut(&mut self.chunks[i]).remove(&ext);
         if prev.is_some() {
             self.len -= 1;
@@ -118,6 +125,25 @@ impl LabelMap {
     /// publication tests and benches).
     pub fn unshared_chunks(&self) -> usize {
         self.chunks.iter().filter(|c| Arc::strong_count(c) == 1).count()
+    }
+
+    /// Per-ext transitions turning `prev` into `self` — the shared
+    /// full-rebuild event diff (`O(n)` over both maps; the delta publish
+    /// paths record transitions inline instead). Unordered.
+    pub fn diff_from(&self, prev: &LabelMap) -> Vec<LabelChange> {
+        let mut changes = Vec::new();
+        for (ext, l) in self.iter() {
+            let from = prev.get(ext);
+            if from != Some(l) {
+                changes.push(LabelChange { ext, from, to: Some(l) });
+            }
+        }
+        for (ext, l) in prev.iter() {
+            if self.get(ext).is_none() {
+                changes.push(LabelChange { ext, from: Some(l), to: None });
+            }
+        }
+        changes
     }
 }
 

@@ -57,7 +57,6 @@
 //! ([`labels::LabelMap`]), so publication allocates in changed points,
 //! not live points.
 
-pub mod driver;
 pub mod engine;
 pub mod labels;
 pub mod router;
@@ -67,13 +66,13 @@ pub mod worker;
 pub use engine::{EngineOutcome, EngineStats, ShardedEngine};
 pub use labels::LabelMap;
 pub use router::{RouteDecision, Router};
-pub use stitch::{stitch_full, GlobalSnapshot, Stitcher};
+pub use stitch::{stitch_full, GlobalSnapshot, LabelChange, Stitcher};
 pub use worker::{
     ShardBatch, ShardCore, ShardDelta, ShardOp, ShardReply, ShardSnapshot,
     WorkerReport,
 };
 
-use crate::dbscan::DbscanConfig;
+use crate::dbscan::{ConnKind, DbscanConfig};
 
 /// How `publish` turns per-shard state into a [`GlobalSnapshot`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -108,6 +107,10 @@ pub struct ShardConfig {
     pub queue: usize,
     /// snapshot publication strategy (delta = incremental, the default)
     pub stitch: StitchMode,
+    /// connectivity layer of every worker's `DynamicDbscan`. The flat
+    /// ablation modes lack stable component ids, so they require
+    /// [`StitchMode::FullRebuild`] (enforced by `ShardedEngine::new`).
+    pub conn: ConnKind,
     pub seed: u64,
 }
 
@@ -121,6 +124,7 @@ impl ShardConfig {
             ghost_margin: 2,
             queue: 8,
             stitch: StitchMode::Delta,
+            conn: ConnKind::Leveled,
             seed,
         }
     }

@@ -73,6 +73,8 @@ pub struct GlobalSnapshot {
     /// per-shard live points, ghosts included (index = shard id)
     pub shard_live: Vec<usize>,
     label_of: LabelMap,
+    /// CoW set of the live core primaries (LabelMap used as a set)
+    core_of: LabelMap,
 }
 
 impl GlobalSnapshot {
@@ -86,6 +88,7 @@ impl GlobalSnapshot {
             core_points: 0,
             shard_live: Vec::new(),
             label_of: LabelMap::new(),
+            core_of: LabelMap::new(),
         })
     }
 
@@ -101,6 +104,33 @@ impl GlobalSnapshot {
     pub fn labels(&self) -> Vec<(u64, i64)> {
         self.label_of.sorted()
     }
+
+    /// The CoW label state backing this snapshot (cheap to clone — the
+    /// serve façade wraps it in its `SnapshotView`).
+    pub fn label_map(&self) -> &LabelMap {
+        &self.label_of
+    }
+
+    /// Is `ext` a live core (primary) point as of this snapshot?
+    pub fn is_core(&self, ext: u64) -> bool {
+        self.core_of.get(ext).is_some()
+    }
+
+    /// The CoW core set backing [`Self::is_core`].
+    pub fn core_map(&self) -> &LabelMap {
+        &self.core_of
+    }
+}
+
+/// One external point's label transition across a publish — the raw
+/// feed the serve façade turns into merge/split/moved cluster events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LabelChange {
+    pub ext: u64,
+    /// label before the publish (`None`: was not live)
+    pub from: Option<i64>,
+    /// label after the publish (`None`: deleted)
+    pub to: Option<i64>,
 }
 
 // ---------------------------------------------------------------------
@@ -140,6 +170,8 @@ pub struct Stitcher {
     exts: FxHashMap<u64, Vec<Rep>>,
     /// CoW label state shared with published snapshots
     labels: LabelMap,
+    /// CoW core-primary set shared with published snapshots
+    cores: LabelMap,
     /// stable component id → minted global label
     comp_label: FxHashMap<u64, i64>,
     /// label → clustered-ext count (noise excluded)
@@ -149,6 +181,9 @@ pub struct Stitcher {
     shard_live: Vec<usize>,
     /// exts whose label must be recomputed this round
     label_dirty: FxHashSet<u64>,
+    /// record label transitions into `changes` (serve `watch()` plumbing)
+    log_changes: bool,
+    changes: Vec<LabelChange>,
     rounds: u64,
 }
 
@@ -162,14 +197,32 @@ impl Stitcher {
             nodes: Vec::new(),
             exts: FxHashMap::default(),
             labels: LabelMap::new(),
+            cores: LabelMap::new(),
             comp_label: FxHashMap::default(),
             sizes: FxHashMap::default(),
             next_label: 0,
             core_points: 0,
             shard_live: vec![0; shards],
             label_dirty: FxHashSet::default(),
+            log_changes: false,
+            changes: Vec::new(),
             rounds: 0,
         }
+    }
+
+    /// Toggle per-ext transition recording (drained by
+    /// [`Self::drain_changes`]); off by default so an unwatched engine
+    /// never grows the buffer.
+    pub fn set_change_log(&mut self, on: bool) {
+        self.log_changes = on;
+        if !on {
+            self.changes.clear();
+        }
+    }
+
+    /// Take every transition recorded since the last drain.
+    pub fn drain_changes(&mut self) -> Vec<LabelChange> {
+        std::mem::take(&mut self.changes)
     }
 
     fn node_for(&mut self, key: (u32, u64)) -> VertexId {
@@ -302,14 +355,18 @@ impl Stitcher {
         });
         let dirty: Vec<u64> = self.label_dirty.drain().collect();
         for ext in dirty {
-            let new_label: Option<i64> = match self.exts.get(&ext) {
-                None => None, // deleted
+            let (new_label, new_core): (Option<i64>, bool) = match self
+                .exts
+                .get(&ext)
+            {
+                None => (None, false), // deleted
                 Some(reps) => {
+                    let core = Self::is_core_primary(reps);
                     if !reps.iter().any(|r| r.primary) {
                         // ghost-only replica set: deletes fan out to every
                         // holder within the round, so this cannot survive
                         // a round — stay defensive like the old stitcher
-                        None
+                        (None, false)
                     } else if let Some(r) = reps.iter().find(|r| r.clustered) {
                         let v = self.node_of[&(r.shard, r.root)];
                         let comp = self.conn.comp_id(v);
@@ -322,15 +379,24 @@ impl Stitcher {
                                 l
                             }
                         };
-                        Some(l)
+                        (Some(l), core)
                     } else {
-                        Some(-1)
+                        (Some(-1), core)
                     }
                 }
             };
+            // the core set updates on every flip, label change or not
+            if new_core {
+                self.cores.set(ext, 1);
+            } else {
+                self.cores.remove(ext);
+            }
             let old = self.labels.get(ext);
             if old == new_label {
                 continue;
+            }
+            if self.log_changes {
+                self.changes.push(LabelChange { ext, from: old, to: new_label });
             }
             if let Some(o) = old {
                 if o >= 0 {
@@ -382,6 +448,12 @@ impl Stitcher {
             self.comp_label.retain(|c, _| live.contains(c));
         }
         self.labels.maybe_grow();
+        self.cores.maybe_grow();
+        debug_assert_eq!(
+            self.cores.len(),
+            self.core_points,
+            "core set out of sync with the core counter"
+        );
         let mut cluster_sizes: Vec<(i64, usize)> =
             self.sizes.iter().map(|(&l, &s)| (l, s)).collect();
         cluster_sizes.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
@@ -393,6 +465,7 @@ impl Stitcher {
             shard_live: self.shard_live.clone(),
             cluster_sizes,
             label_of: self.labels.clone(),
+            core_of: self.cores.clone(),
         }
     }
 }
@@ -455,6 +528,7 @@ pub fn stitch_full(mut snaps: Vec<ShardSnapshot>, seq: u64) -> GlobalSnapshot {
     let mut root_label: FxHashMap<usize, i64> = FxHashMap::default();
     let mut sizes: FxHashMap<i64, usize> = FxHashMap::default();
     let mut label_of = LabelMap::new();
+    let mut core_of = LabelMap::new();
     let mut core_points = 0usize;
     for (&ext, agg) in by_ext.iter() {
         if !agg.primary_seen {
@@ -465,6 +539,7 @@ pub fn stitch_full(mut snaps: Vec<ShardSnapshot>, seq: u64) -> GlobalSnapshot {
         }
         if agg.core {
             core_points += 1;
+            core_of.set(ext, 1);
         }
         let label = match agg.node {
             None => -1,
@@ -489,6 +564,7 @@ pub fn stitch_full(mut snaps: Vec<ShardSnapshot>, seq: u64) -> GlobalSnapshot {
         shard_live: snaps.iter().map(|s| s.live).collect(),
         cluster_sizes,
         label_of,
+        core_of,
     }
 }
 

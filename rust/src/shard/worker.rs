@@ -33,7 +33,7 @@ use std::time::Instant;
 
 use rustc_hash::{FxHashMap, FxHashSet};
 
-use crate::dbscan::{DbscanConfig, DynamicDbscan, RepairStats};
+use crate::dbscan::{AnyDbscan, ConnKind, DbscanConfig, RepairStats};
 use crate::lsh::table::PointId;
 use crate::lsh::BucketKey;
 use crate::util::stats::LatencyHisto;
@@ -202,7 +202,7 @@ pub struct ShardCore {
     /// grow it without bound (and the comp-event bookkeeping would be pure
     /// overhead).
     track: bool,
-    db: DynamicDbscan,
+    db: AnyDbscan,
     /// ext → (pid, primary)
     ext_map: FxHashMap<u64, (PointId, bool)>,
     /// pid → ext (resolves the dbscan layer's dirty points)
@@ -217,9 +217,15 @@ pub struct ShardCore {
 }
 
 impl ShardCore {
-    pub fn new(shard: usize, cfg: DbscanConfig, seed: u64, track: bool) -> Self {
+    pub fn new(
+        shard: usize,
+        cfg: DbscanConfig,
+        conn: ConnKind,
+        seed: u64,
+        track: bool,
+    ) -> Self {
         let (dim, t) = (cfg.dim, cfg.t);
-        let mut db = DynamicDbscan::new(cfg, seed);
+        let mut db = AnyDbscan::new(conn, cfg, seed);
         if track {
             db.enable_stitch_tracking();
         }
@@ -273,7 +279,7 @@ impl ShardCore {
         self.keybuf.resize(n_ins * self.t, 0);
         let hash_ns_per_insert = if n_ins > 0 {
             let h0 = Instant::now();
-            self.db.hasher.keys_batch_into(
+            self.db.hasher().keys_batch_into(
                 &batch.coords,
                 n_ins,
                 &mut self.scratch,
@@ -410,12 +416,13 @@ impl ShardCore {
 pub fn run_worker(
     shard: usize,
     cfg: DbscanConfig,
+    conn: ConnKind,
     seed: u64,
     track: bool,
     rx: Receiver<ShardBatch>,
     reply_tx: Sender<ShardReply>,
 ) -> WorkerReport {
-    let mut core = ShardCore::new(shard, cfg, seed, track);
+    let mut core = ShardCore::new(shard, cfg, conn, seed, track);
     for batch in rx.iter() {
         core.apply(&batch, &mut |r| {
             let _ = reply_tx.send(r);

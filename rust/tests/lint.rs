@@ -104,6 +104,60 @@ fn tree_walk_confined_to_comp_event_plumbing() {
     }
 }
 
+/// Every consumer-facing layer goes through the serve façade: direct
+/// engine construction (`DynamicDbscan::…` / `ShardedEngine::…` /
+/// `ShardConfig::…`) and raw `PointId` mutation (`.add_point(…)` /
+/// `.delete_point(…)`) are confined to `serve/` itself, the shard/dbscan
+/// internals, the benches and the ablation/experiment code. The CLI, the
+/// coordinator driver and every example must compile against
+/// `serve::{EngineBuilder, ClusterEngine, SnapshotView}` only.
+#[test]
+fn consumers_go_through_the_serve_facade() {
+    for (name, src) in [
+        ("cli/commands.rs", include_str!("../src/cli/commands.rs")),
+        ("cli/mod.rs", include_str!("../src/cli/mod.rs")),
+        ("coordinator/driver.rs", include_str!("../src/coordinator/driver.rs")),
+        ("examples/quickstart.rs", include_str!("../../examples/quickstart.rs")),
+        (
+            "examples/streaming_blobs.rs",
+            include_str!("../../examples/streaming_blobs.rs"),
+        ),
+        (
+            "examples/sliding_window.rs",
+            include_str!("../../examples/sliding_window.rs"),
+        ),
+        (
+            "examples/intrusion_detection.rs",
+            include_str!("../../examples/intrusion_detection.rs"),
+        ),
+        (
+            "examples/sharded_stream.rs",
+            include_str!("../../examples/sharded_stream.rs"),
+        ),
+        (
+            "examples/batched_ingest.rs",
+            include_str!("../../examples/batched_ingest.rs"),
+        ),
+    ] {
+        for pat in [
+            "DynamicDbscan::",
+            "ShardedEngine::",
+            "ShardConfig::",
+            ".add_point(",
+            ".add_points(",
+            ".apply_batch(",
+            ".delete_point(",
+        ] {
+            assert!(
+                !src.contains(pat),
+                "{name} bypasses the serve façade ({pat}); construct engines \
+                 through serve::EngineBuilder and drive them through \
+                 serve::ClusterEngine"
+            );
+        }
+    }
+}
+
 /// Full-rebuild stitching (`stitch_full` + full `ShardSnapshot` dumps) is
 /// the explicit fallback path, not the serving default: the engine may
 /// call it only from the `StitchMode::FullRebuild` publish arm (plus its

@@ -1,0 +1,391 @@
+//! The serve façade's acceptance tests: backend equivalence (Inline vs
+//! Sharded answering every `SnapshotView` query identically on shared
+//! churn schedules, deletes included), the `watch()` event stream
+//! matching observed label diffs across publishes, and the
+//! freshness/versioning contract.
+
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::serve::{
+    Backend, ClusterEngine, ClusterEvent, ConnKind, EngineBuilder, SnapshotView,
+    StitchMode,
+};
+use dyn_dbscan::util::proptest::{run_prop, Gen};
+use rustc_hash::FxHashMap;
+
+fn builder(dim: usize, seed: u64) -> EngineBuilder {
+    EngineBuilder::new(dim).k(4).t(6).eps(0.5).seed(seed)
+}
+
+/// Assert two views answer every query surface identically (labels up to
+/// a bijection — the backends mint label values independently).
+fn assert_views_equivalent(a: &SnapshotView, b: &SnapshotView, probes: &[Vec<f32>]) {
+    assert_eq!(a.live_points(), b.live_points(), "live diverged");
+    assert_eq!(a.core_points(), b.core_points(), "cores diverged");
+    assert_eq!(a.clusters(), b.clusters(), "cluster count diverged");
+    let sizes_a: Vec<usize> = a.cluster_sizes().iter().map(|&(_, s)| s).collect();
+    let sizes_b: Vec<usize> = b.cluster_sizes().iter().map(|&(_, s)| s).collect();
+    assert_eq!(sizes_a, sizes_b, "cluster sizes diverged");
+    let la = a.labels();
+    let lb = b.labels();
+    assert_eq!(la.len(), lb.len());
+    let mut fwd: FxHashMap<i64, i64> = FxHashMap::default();
+    let mut bwd: FxHashMap<i64, i64> = FxHashMap::default();
+    for (&(ea, va), &(eb, vb)) in la.iter().zip(lb.iter()) {
+        assert_eq!(ea, eb, "live ext sets diverged");
+        assert_eq!(va < 0, vb < 0, "noise flag diverged at ext {ea}");
+        assert_eq!(a.is_core(ea), b.is_core(ea), "core flag diverged at {ea}");
+        if va >= 0 {
+            assert_eq!(*fwd.entry(va).or_insert(vb), vb, "label split at {ea}");
+            assert_eq!(*bwd.entry(vb).or_insert(va), va, "label merge at {ea}");
+        }
+    }
+    // members agree under the bijection
+    for (&va, &vb) in fwd.iter() {
+        assert_eq!(a.cluster_members(va), b.cluster_members(vb));
+    }
+    assert_eq!(a.cluster_members(-1), b.cluster_members(-1), "noise sets");
+    for p in probes {
+        assert_eq!(a.epsilon_neighbors(p), b.epsilon_neighbors(p), "ε at {p:?}");
+    }
+}
+
+/// Inline vs Sharded(1): same seed ⇒ identical structures, so every
+/// query must agree exactly — on random churn schedules with deletes.
+#[test]
+fn inline_vs_sharded1_answer_identically_under_churn() {
+    run_prop("serve backend equivalence", 8, |g: &mut Gen| {
+        let dim = 3;
+        let mut inline = builder(dim, 11).build().unwrap();
+        let mut sharded =
+            builder(dim, 11).backend(Backend::Sharded(1)).build().unwrap();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next = 0u64;
+        let n_ops = g.usize_in(120..=240);
+        let mut probes: Vec<Vec<f32>> = Vec::new();
+        for step in 0..n_ops {
+            // delete-heavy: 45% of ops remove a live point
+            if live.is_empty() || g.f64_in(0.0, 1.0) < 0.55 {
+                let c = g.usize_in(0..=2) as f64 * 2.0;
+                let p: Vec<f32> =
+                    (0..dim).map(|_| (c + g.f64_in(-0.5, 0.5)) as f32).collect();
+                if probes.len() < 8 {
+                    probes.push(p.clone());
+                }
+                inline.upsert(next, &p);
+                sharded.upsert(next, &p);
+                live.push(next);
+                next += 1;
+            } else {
+                let i = g.usize_in(0..=live.len() - 1);
+                let e = live.swap_remove(i);
+                inline.remove(e);
+                sharded.remove(e);
+            }
+            if step % 48 == 47 {
+                let va = inline.publish();
+                let vb = sharded.publish();
+                assert_views_equivalent(&va, &vb, &probes);
+            }
+        }
+        let va = inline.publish();
+        let vb = sharded.publish();
+        assert_eq!(va.pending_writes(), 0);
+        assert_eq!(vb.pending_writes(), 0);
+        assert_views_equivalent(&va, &vb, &probes);
+        let _ = inline.finish();
+        let _ = sharded.finish();
+    });
+}
+
+/// Inline vs Sharded(4) on a realistic blobs churn: the multi-shard
+/// clustering is allowed boundary-attachment differences (ARI gate), but
+/// the façade-level surfaces — liveness, coordinates, ε-neighborhoods —
+/// must agree exactly.
+#[test]
+fn inline_vs_sharded4_blobs_churn() {
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: 1200,
+            dim: 4,
+            clusters: 4,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        7,
+    );
+    let mut inline = EngineBuilder::new(4).k(8).eps(0.75).seed(21).build().unwrap();
+    let mut sharded = EngineBuilder::new(4)
+        .k(8)
+        .eps(0.75)
+        .seed(21)
+        .backend(Backend::Sharded(4))
+        .build()
+        .unwrap();
+    for i in 0..ds.n() {
+        inline.upsert(i as u64, ds.point(i));
+        sharded.upsert(i as u64, ds.point(i));
+    }
+    // delete a third, including whole-cluster chunks
+    for e in 0..400u64 {
+        inline.remove(e);
+        sharded.remove(e);
+    }
+    let va = inline.publish();
+    let vb = sharded.publish();
+    assert_eq!(va.live_points(), 800);
+    assert_eq!(vb.live_points(), 800);
+    for i in [450usize, 700, 999] {
+        assert_eq!(
+            va.epsilon_neighbors(ds.point(i)),
+            vb.epsilon_neighbors(ds.point(i))
+        );
+    }
+    let pa: Vec<i64> = va.labels().iter().map(|&(_, l)| l).collect();
+    let pb: Vec<i64> = vb.labels().iter().map(|&(_, l)| l).collect();
+    let ari = adjusted_rand_index(&pa, &pb);
+    assert!(ari > 0.95, "inline vs sharded(4) ARI {ari}");
+    let _ = inline.finish();
+    let _ = sharded.finish();
+}
+
+/// Per-publish event batches must match the label diffs observable from
+/// consecutive snapshots, on both backends.
+#[test]
+fn watch_events_match_label_diffs() {
+    for backend in [Backend::Single, Backend::Sharded(2)] {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 600,
+                dim: 3,
+                clusters: 3,
+                std: 0.35,
+                center_box: 15.0,
+                weights: vec![],
+            },
+            13,
+        );
+        let mut eng = EngineBuilder::new(3)
+            .k(6)
+            .eps(0.75)
+            .seed(5)
+            .backend(backend)
+            .build()
+            .unwrap();
+        let events = eng.watch();
+        let mut prev: FxHashMap<u64, i64> = FxHashMap::default();
+        let mut live: Vec<u64> = Vec::new();
+        for round in 0..6 {
+            for i in (round * 100)..((round + 1) * 100) {
+                eng.upsert(i as u64, ds.point(i));
+                live.push(i as u64);
+            }
+            if round >= 2 {
+                // delete 60 of the oldest per round — forces splits
+                for e in live.drain(..60) {
+                    eng.remove(e);
+                }
+            }
+            let view = eng.publish();
+            let batch = events.next_publish().expect("engine alive");
+            for e in &batch {
+                assert_eq!(e.version(), view.version(), "event from wrong publish");
+            }
+            // Moved events == the exact label diff between snapshots
+            let cur: FxHashMap<u64, i64> = view.labels().into_iter().collect();
+            let mut expected: Vec<(u64, Option<i64>, Option<i64>)> = Vec::new();
+            for (&e, &l) in cur.iter() {
+                let from = prev.get(&e).copied();
+                if from != Some(l) {
+                    expected.push((e, from, Some(l)));
+                }
+            }
+            for (&e, &l) in prev.iter() {
+                if !cur.contains_key(&e) {
+                    expected.push((e, Some(l), None));
+                }
+            }
+            expected.sort_unstable();
+            let mut moved: Vec<(u64, Option<i64>, Option<i64>)> = batch
+                .iter()
+                .filter_map(|e| match *e {
+                    ClusterEvent::Moved { ext, from, to, .. } => {
+                        Some((ext, from, to))
+                    }
+                    _ => None,
+                })
+                .collect();
+            moved.sort_unstable();
+            assert_eq!(moved, expected, "round {round}: moved ≠ label diff");
+            // aggregate events are consistent with the label sets
+            let prev_set: Vec<i64> =
+                prev.values().copied().filter(|&l| l >= 0).collect();
+            let now_set: Vec<i64> =
+                cur.values().copied().filter(|&l| l >= 0).collect();
+            for e in &batch {
+                match *e {
+                    ClusterEvent::Merged { from, into, .. } => {
+                        assert!(prev_set.contains(&from));
+                        assert!(!now_set.contains(&from));
+                        assert!(
+                            prev_set.contains(&into) || now_set.contains(&into)
+                        );
+                    }
+                    ClusterEvent::Split { from, new, .. } => {
+                        assert!(!prev_set.contains(&new));
+                        assert!(now_set.contains(&new));
+                        assert!(prev_set.contains(&from));
+                        assert!(now_set.contains(&from));
+                    }
+                    ClusterEvent::Formed { label, .. } => {
+                        assert!(!prev_set.contains(&label));
+                        assert!(now_set.contains(&label));
+                    }
+                    ClusterEvent::Dissolved { label, .. } => {
+                        assert!(prev_set.contains(&label));
+                        assert!(!now_set.contains(&label));
+                    }
+                    ClusterEvent::Moved { .. } => {}
+                }
+            }
+            prev = cur;
+        }
+        let _ = eng.finish();
+    }
+}
+
+/// A genuine cross-publish merge and split must surface as events (1-D
+/// bridge construction, mirroring the stitcher unit tests).
+#[test]
+fn watch_reports_bridge_split_and_merge() {
+    let mut eng =
+        EngineBuilder::new(1).k(3).t(10).eps(0.6).seed(11).build().unwrap();
+    let events = eng.watch();
+    let mut ext = 0u64;
+    let mut add_blob = |eng: &mut Box<dyn ClusterEngine>, base: f32| -> Vec<u64> {
+        (0..6)
+            .map(|i| {
+                let e = ext;
+                ext += 1;
+                eng.upsert(e, &[base + 0.01 * i as f32]);
+                e
+            })
+            .collect()
+    };
+    let left = add_blob(&mut eng, 0.0);
+    let right = add_blob(&mut eng, 2.0);
+    let bridge = add_blob(&mut eng, 1.0);
+    let v1 = eng.publish();
+    let _ = events.next_publish();
+    if v1.label(left[0]) != v1.label(right[0]) {
+        // hash draw didn't connect the blobs; nothing to assert
+        return;
+    }
+    // delete the bridge: the cluster must split, and the watcher must
+    // hear about it
+    for e in bridge {
+        eng.remove(e);
+    }
+    let v2 = eng.publish();
+    let batch = events.next_publish().unwrap();
+    if v2.label(left[0]) != v2.label(right[0]) {
+        assert!(
+            batch.iter().any(|e| matches!(e, ClusterEvent::Split { .. })),
+            "split happened but no Split event: {batch:?}"
+        );
+        // re-bridge: merge back, with a Merged event
+        let _ = add_blob(&mut eng, 1.0);
+        let v3 = eng.publish();
+        let batch = events.next_publish().unwrap();
+        if v3.label(left[0]) == v3.label(right[0]) {
+            assert!(
+                batch.iter().any(|e| matches!(e, ClusterEvent::Merged { .. })),
+                "merge happened but no Merged event: {batch:?}"
+            );
+        }
+    }
+    let _ = eng.finish();
+}
+
+/// The freshness contract: snapshots carry version + pending_writes, and
+/// publish gives read-your-publishes.
+#[test]
+fn snapshot_freshness_and_versioning() {
+    for backend in [Backend::Single, Backend::Sharded(2)] {
+        let mut eng = builder(2, 3).backend(backend).build().unwrap();
+        assert_eq!(eng.snapshot().version(), 0);
+        assert_eq!(eng.pending_writes(), 0);
+        eng.upsert(7, &[0.0, 0.0]);
+        eng.upsert(8, &[0.1, 0.1]);
+        // the write state knows ext 7; the published view does not yet
+        assert!(eng.contains(7));
+        let stale = eng.snapshot();
+        assert_eq!(stale.pending_writes(), 2);
+        assert_eq!(stale.label(7), None);
+        assert_eq!(eng.stats().pending_writes, 2);
+        let v1 = eng.publish();
+        assert_eq!(v1.pending_writes(), 0);
+        assert!(v1.label(7).is_some());
+        eng.remove(8);
+        assert_eq!(eng.snapshot().pending_writes(), 1);
+        // the published view is immutable: 8 is still visible there
+        assert!(v1.label(8).is_some());
+        let v2 = eng.publish();
+        assert!(v2.version() > v1.version(), "versions must increase");
+        assert_eq!(v2.label(8), None);
+        assert_eq!(v2.live_points(), 1);
+        // upsert replaces: same ext, new coordinates
+        eng.upsert(7, &[5.0, 5.0]);
+        let v3 = eng.publish();
+        assert_eq!(v3.live_points(), 1);
+        assert_eq!(v3.coords_of(7), Some(&[5.0, 5.0][..]));
+        assert_eq!(v3.epsilon_neighbors(&[5.0, 5.0]), vec![7]);
+        assert!(v3.epsilon_neighbors(&[0.0, 0.0]).is_empty());
+        let _ = eng.finish();
+    }
+}
+
+/// The connectivity ablation runs through the façade: flat conn modes
+/// publish by full rebuild and still cluster correctly.
+#[test]
+fn flat_conn_modes_serve_via_full_rebuild() {
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: 500,
+            dim: 3,
+            clusters: 3,
+            std: 0.3,
+            center_box: 15.0,
+            weights: vec![],
+        },
+        3,
+    );
+    for conn in [ConnKind::Repair, ConnKind::Paper] {
+        let b = EngineBuilder::new(3).k(6).eps(0.75).seed(9).conn(conn);
+        assert_eq!(b.effective_stitch(), StitchMode::FullRebuild);
+        let mut eng = b.build().unwrap();
+        for i in 0..ds.n() {
+            eng.upsert(i as u64, ds.point(i));
+        }
+        let view = eng.publish();
+        let pred: Vec<i64> = view.labels().iter().map(|&(_, l)| l).collect();
+        let ari = adjusted_rand_index(&ds.labels, &pred);
+        assert!(ari > 0.95, "{conn:?} ARI {ari}");
+        let _ = eng.finish();
+    }
+}
+
+#[test]
+#[should_panic(expected = "remove of unknown ext")]
+fn unknown_remove_panics_single() {
+    let mut eng = builder(2, 1).build().unwrap();
+    eng.remove(3);
+}
+
+#[test]
+#[should_panic(expected = "remove of unknown ext")]
+fn unknown_remove_panics_sharded() {
+    let mut eng = builder(2, 1).backend(Backend::Sharded(2)).build().unwrap();
+    eng.remove(3);
+}
