@@ -11,7 +11,10 @@
 //!    `apply_batch` path, and the sharded engine at S ∈ {1, 2, 4, 8} —
 //!    ops/sec plus p50/p99 add & delete latency. This file is the perf
 //!    trajectory every later PR measures against. The same workload also
-//!    runs across the **conn ablation axis** (paper / repair / leveled).
+//!    runs across the **conn ablation axis** (paper / repair / leveled),
+//!    the **façade-overhead axis** (serve vs direct engine) and the
+//!    **obs-overhead axis** (live metrics registry vs no-op recorder),
+//!    both gated at ≤2% per-op tax at full scale.
 //! 3. **Chain churn** (adversarial, also → `BENCH_updates.json`): a 1-D
 //!    line of bucket chains with repeated mid-chain block deletions —
 //!    every round genuinely splits the path-shaped component, the worst
@@ -450,6 +453,76 @@ fn facade_overhead_section(n: usize, reps: usize) -> Json {
 }
 
 // ---------------------------------------------------------------------
+// obs overhead: live metrics registry vs no-op recorder
+// ---------------------------------------------------------------------
+
+/// Measure the observability tax: the identical churn workload through
+/// the serve single backend with the metrics registry live
+/// (`.metrics(true)`, the default) and with the no-op recorder
+/// (`.metrics(false)`). Paths alternate across `reps` rounds,
+/// min-of-reps per path. The registry's per-op cost is two `Instant`
+/// reads plus striped relaxed atomic increments, so the tax must stay
+/// inside the same ≤2% budget as the façade itself. Returns
+/// `(on_ops_s, off_ops_s, overhead_frac)`.
+fn obs_overhead(n: usize, reps: usize) -> (f64, f64, f64) {
+    let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: DIM, ..Default::default() };
+    let (ds, ops) = build_workload(n, 0.2, 17);
+    let total_ops = ops.len() as f64;
+    let mut on_best = f64::MAX;
+    let mut off_best = f64::MAX;
+    for _ in 0..reps {
+        for metrics in [true, false] {
+            let mut eng = EngineBuilder::from_config(cfg.clone())
+                .seed(42)
+                .metrics(metrics)
+                .build()
+                .expect("obs-overhead engine");
+            let t0 = Instant::now();
+            for op in &ops {
+                match *op {
+                    WlOp::Insert(ext) => eng.upsert(ext, ds.point(ext as usize)),
+                    WlOp::Delete(ext) => eng.remove(ext),
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let view = eng.publish();
+            std::hint::black_box(view.clusters());
+            if metrics {
+                on_best = on_best.min(wall);
+            } else {
+                off_best = off_best.min(wall);
+            }
+        }
+    }
+    let overhead = on_best / off_best - 1.0;
+    (total_ops / on_best, total_ops / off_best, overhead)
+}
+
+/// Run the obs-overhead axis, print the comparison and return the JSON
+/// section for `BENCH_updates.json`.
+fn obs_overhead_section(n: usize, reps: usize) -> Json {
+    let (on_ops_s, off_ops_s, overhead) = obs_overhead(n, reps);
+    let mut table = Table::new(
+        "obs overhead: live metrics registry vs no-op recorder (per-op)",
+        &["recorder", "ops/s"],
+    );
+    table.row(vec!["metrics off".into(), format!("{off_ops_s:.0}")]);
+    table.row(vec![
+        format!("metrics on ({:+.2}%)", overhead * 100.0),
+        format!("{on_ops_s:.0}"),
+    ]);
+    table.print();
+    Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("metrics_on_ops_per_s", Json::num(on_ops_s)),
+        ("metrics_off_ops_per_s", Json::num(off_ops_s)),
+        ("overhead_frac", Json::num(overhead)),
+        ("gate_frac", Json::num(facade_gate(n as f64))),
+    ])
+}
+
+// ---------------------------------------------------------------------
 // adversarial chain churn: the replacement-search worst case
 // ---------------------------------------------------------------------
 
@@ -811,7 +884,9 @@ fn update_throughput(
     let chain_section = chain_churn_section(chain.0, chain.1);
     let publish_section = snapshot_publish_section(publish.0, publish.1, publish.2);
     // more reps at small n: single runs are jitter-dominated there
-    let facade_section = facade_overhead_section(n, if n < 10_000 { 5 } else { 3 });
+    let reps = if n < 10_000 { 5 } else { 3 };
+    let facade_section = facade_overhead_section(n, reps);
+    let obs_section = obs_overhead_section(n, reps);
 
     let record = Json::obj(vec![
         ("bench", Json::str("updates_throughput")),
@@ -834,6 +909,7 @@ fn update_throughput(
         ("chain_churn", chain_section),
         ("snapshot_publish", publish_section),
         ("facade_overhead", facade_section),
+        ("obs_overhead", obs_section),
         (
             "single_batched",
             Json::obj(vec![
@@ -928,6 +1004,29 @@ fn validate_updates_json(path: &std::path::Path) {
         "serve façade per-op overhead {:.1}% exceeds the {:.0}% gate",
         overhead * 100.0,
         gate * 100.0
+    );
+
+    // obs-overhead axis: same shape — the metrics registry must be
+    // effectively free relative to the no-op recorder
+    let obs = j
+        .get("obs_overhead")
+        .unwrap_or_else(|| panic!("missing obs_overhead in {}", path.display()));
+    for field in ["metrics_on_ops_per_s", "metrics_off_ops_per_s"] {
+        assert!(
+            obs.get(field).and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "obs_overhead missing {field}"
+        );
+    }
+    let obs_frac = obs
+        .get("overhead_frac")
+        .and_then(|v| v.as_f64())
+        .expect("obs_overhead missing overhead_frac");
+    let obs_gate = facade_gate(obs.get("n").and_then(|v| v.as_f64()).unwrap_or(0.0));
+    assert!(
+        obs_frac <= obs_gate,
+        "metrics registry per-op overhead {:.1}% exceeds the {:.0}% gate",
+        obs_frac * 100.0,
+        obs_gate * 100.0
     );
 
     // publish-latency axis: both stitch modes at every live size

@@ -11,7 +11,7 @@ use crate::experiments::fig2::{run_fig2, Panel};
 use crate::experiments::table2::run_table2;
 use crate::experiments::{env_runs, env_scale, PAPER_BATCH, PAPER_EPS, PAPER_K, PAPER_T};
 use crate::runtime::Runtime;
-use crate::serve::driver::{final_quality, run_stream, summarize};
+use crate::serve::driver::{final_quality, run_stream_with, summarize};
 use crate::serve::{
     Backend, ClusterEngine, ConnKind, EngineBuilder, EngineKind, StitchMode,
 };
@@ -84,6 +84,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 42)?;
     let batch = args.get_usize("batch", PAPER_BATCH)?;
     let snapshot = args.get_usize("snapshot-every", 5)?;
+    let metrics_every = args.get_usize("metrics-every", 0)?;
     let window = args.get_usize("window", 0)?;
     let order = match args.get("order").unwrap_or("random") {
         "random" => Order::Random,
@@ -148,7 +149,15 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let engine = builder.build()?;
     let labels = ds.labels.clone();
     let truth = move |e: u64| labels[e as usize];
-    let out = run_stream(engine, ops, snapshot, Some(&truth))?;
+    let mut emit = |text: &str| print!("{text}");
+    let out = run_stream_with(
+        engine,
+        ops,
+        snapshot,
+        Some(&truth),
+        metrics_every,
+        &mut emit,
+    )?;
     for r in &out.reports {
         println!("{}", summarize(r));
     }

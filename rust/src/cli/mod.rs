@@ -110,6 +110,10 @@ COMMANDS:
                  flat modes force full-rebuild publishing)
                  --stitch delta|full-rebuild (delta: O(Δ) publishes,
                  the default; full-rebuild: legacy O(n log n))
+                 --metrics-every N (every N batches, print the live
+                 metrics registry as Prometheus text exposition:
+                 latency quantiles, per-stage publish/update spans,
+                 structural gauges)
     verify     Run the Theorem-2 invariant checker on a random workload
                driven through the serve facade
                  --ops 2000 --seed 7

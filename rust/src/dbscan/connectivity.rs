@@ -117,6 +117,27 @@ pub trait Connectivity {
     /// last drain (may repeat vertices and include since-removed ones —
     /// consumers filter). No-op without tracking.
     fn drain_comp_changes(&mut self, _f: &mut dyn FnMut(VertexId)) {}
+
+    // ------------------------------------------------------------------
+    // observability hooks
+    // ------------------------------------------------------------------
+
+    /// Live (multi-)edges currently stored — the `ett_edges` structural
+    /// gauge. Flat modes may report 0.
+    fn edge_count(&self) -> usize {
+        0
+    }
+
+    /// Toggle replacement-search stage timing (the `level_promotion`
+    /// update-stage span). Off by default; flat modes ignore it.
+    fn set_stage_timing(&mut self, _on: bool) {}
+
+    /// Nanoseconds spent in replacement search (incl. level promotion
+    /// sweeps) since the last call; resets to 0. Always 0 when stage
+    /// timing is off or unimplemented.
+    fn take_search_ns(&mut self) -> u64 {
+        0
+    }
 }
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

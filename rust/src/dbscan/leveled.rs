@@ -94,6 +94,12 @@ pub struct LeveledConn<S: SeedableSequence> {
     /// since-removed vertices possible — consumers filter)
     comp_changed: Vec<VertexId>,
     comp_scratch: Vec<VertexId>,
+    /// time the replacement search into `search_ns` (obs `level_promotion`
+    /// stage); off by default so the untimed path never reads a clock
+    time_stages: bool,
+    /// accumulated replacement-search nanoseconds since the last
+    /// [`Connectivity::take_search_ns`]
+    search_ns: u64,
 }
 
 impl<S: SeedableSequence> LeveledConn<S> {
@@ -110,6 +116,8 @@ impl<S: SeedableSequence> LeveledConn<S> {
             next_comp: 0,
             comp_changed: Vec::new(),
             comp_scratch: Vec::new(),
+            time_stages: false,
+            search_ns: 0,
         }
     }
 
@@ -237,15 +245,22 @@ impl<S: SeedableSequence> LeveledConn<S> {
         hints: &[(VertexId, VertexId)],
     ) {
         self.stats.searches += 1;
+        let sw = crate::obs::PhaseClock::maybe(self.time_stages);
         for &(a, b) in hints {
             if self.try_promote_hint(a, b, level) {
+                if let Some(mut sw) = sw {
+                    self.search_ns += sw.lap();
+                }
                 return;
             }
         }
         for l in (0..=level).rev() {
             if self.search_level(l, u, v) {
-                return;
+                break;
             }
+        }
+        if let Some(mut sw) = sw {
+            self.search_ns += sw.lap();
         }
     }
 
@@ -456,6 +471,18 @@ impl<S: SeedableSequence> Connectivity for LeveledConn<S> {
         for v in self.comp_changed.drain(..) {
             f(v);
         }
+    }
+
+    fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    fn set_stage_timing(&mut self, on: bool) {
+        self.time_stages = on;
+    }
+
+    fn take_search_ns(&mut self) -> u64 {
+        std::mem::take(&mut self.search_ns)
     }
 }
 

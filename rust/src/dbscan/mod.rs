@@ -29,11 +29,14 @@ pub mod connectivity;
 pub mod invariants;
 pub mod leveled;
 
+use std::sync::Arc;
+
 use rustc_hash::FxHashMap;
 
 use crate::ett::{skiplist::SkipSeq, treap::TreapSeq, SkipForest, TreapForest, VertexId};
 use crate::lsh::table::{LshTable, PointId};
 use crate::lsh::{BucketKey, GridHasher};
+use crate::obs::{Metrics, PhaseClock, UpdateStage};
 
 pub use arena::{AttachedSet, PointArena, ATTACH_INLINE};
 pub use connectivity::{Connectivity, PaperConn, RepairConn, RepairStats};
@@ -161,6 +164,10 @@ pub struct DynamicDbscan<C: Connectivity = DefaultConn> {
     stitch_dirty: Vec<PointId>,
     /// see [`DynamicDbscan::enable_stitch_tracking`]
     track_stitch: bool,
+    /// update-stage recorder (see [`DynamicDbscan::set_metrics`]) —
+    /// `None` unless an *enabled* registry was attached, so the untimed
+    /// path never reads a clock
+    obs: Option<Arc<Metrics>>,
 }
 
 impl DynamicDbscan<DefaultConn> {
@@ -207,6 +214,22 @@ impl<C: Connectivity> DynamicDbscan<C> {
             vertex_owner: Vec::new(),
             stitch_dirty: Vec::new(),
             track_stitch: false,
+            obs: None,
+        }
+    }
+
+    /// Attach the engine's shared metrics registry: per-update stage spans
+    /// (`hash` / `neighbor_query` / `ett_link_cut` / `level_promotion`)
+    /// are recorded into it, and the connectivity layer starts timing its
+    /// replacement search. A disabled registry detaches instead, so the
+    /// hot path pays nothing when observation is off.
+    pub fn set_metrics(&mut self, m: Arc<Metrics>) {
+        if m.enabled() {
+            self.conn.set_stage_timing(true);
+            self.obs = Some(m);
+        } else {
+            self.conn.set_stage_timing(false);
+            self.obs = None;
         }
     }
 
@@ -458,6 +481,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
             self.stitch_dirty.push(idx);
         }
         // bucket insertion + new-core detection (Algorithm 2 lines 6-11)
+        let mut clk = PhaseClock::maybe(self.obs.is_some());
         let mut newly_core = std::mem::take(&mut self.scratch_ids);
         newly_core.clear();
         let mut self_core = false;
@@ -481,6 +505,9 @@ impl<C: Connectivity> DynamicDbscan<C> {
         }
         newly_core.sort_unstable();
         newly_core.dedup();
+        if let (Some(clk), Some(m)) = (clk.as_mut(), self.obs.as_deref()) {
+            m.record_update_stage(UpdateStage::NeighborQuery, clk.lap());
+        }
         // promote + link each new core (lines 12-14)
         for &c in &newly_core {
             self.promote(c);
@@ -492,6 +519,14 @@ impl<C: Connectivity> DynamicDbscan<C> {
             self.link_non_core(idx);
         } else if self.cfg.eager_attach {
             self.eager_attach(idx);
+        }
+        if let (Some(clk), Some(m)) = (clk.as_mut(), self.obs.as_deref()) {
+            // the forest work splits into splice time and the connectivity
+            // layer's replacement-search share (timed inside the HDT search)
+            let search = self.conn.take_search_ns();
+            let forest = clk.lap();
+            m.record_update_stage(UpdateStage::EttLinkCut, forest.saturating_sub(search));
+            m.record_update_stage(UpdateStage::LevelPromotion, search);
         }
         idx
     }
@@ -612,6 +647,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
     pub fn delete_point(&mut self, p: PointId) {
         assert!(self.arena.contains(p), "delete of unknown point {p}");
         self.stats.deletes += 1;
+        let mut clk = PhaseClock::maybe(self.obs.is_some());
         let ps = self.arena.slot_unchecked(p);
         let is_core = self.arena.is_core(ps);
         if is_core {
@@ -636,6 +672,9 @@ impl<C: Connectivity> DynamicDbscan<C> {
             }
             demoted.sort_unstable();
             demoted.dedup();
+            if let (Some(clk), Some(m)) = (clk.as_mut(), self.obs.as_deref()) {
+                m.record_update_stage(UpdateStage::NeighborQuery, clk.lap());
+            }
             // unlink x itself first (its pred/succ computed while it is
             // still marked), re-link its attached non-cores elsewhere
             self.unlink_core(p);
@@ -668,6 +707,12 @@ impl<C: Connectivity> DynamicDbscan<C> {
                 let key = self.arena.key(ps, i);
                 self.tables[i].remove(key, p);
             }
+        }
+        if let (Some(clk), Some(m)) = (clk.as_mut(), self.obs.as_deref()) {
+            let search = self.conn.take_search_ns();
+            let forest = clk.lap();
+            m.record_update_stage(UpdateStage::EttLinkCut, forest.saturating_sub(search));
+            m.record_update_stage(UpdateStage::LevelPromotion, search);
         }
         // line 27: remove x from G and the point store (slot to free list)
         let vertex = self.arena.vertex(ps);
@@ -783,6 +828,12 @@ impl<C: Connectivity> DynamicDbscan<C> {
     /// Replacement-search counters from the connectivity layer.
     pub fn repair_stats(&self) -> RepairStats {
         self.conn.repair_stats()
+    }
+
+    /// Live (multi-)edges in the connectivity layer — the `ett_edges`
+    /// structural gauge (0 for modes that don't track it).
+    pub fn conn_edge_count(&self) -> usize {
+        self.conn.edge_count()
     }
 
     pub(crate) fn tables(&self) -> &[LshTable] {
@@ -906,6 +957,26 @@ impl AnyDbscan {
 
     pub fn repair_stats(&self) -> RepairStats {
         with_db!(self, db => db.repair_stats())
+    }
+
+    /// See [`DynamicDbscan::set_metrics`].
+    pub fn set_metrics(&mut self, m: Arc<Metrics>) {
+        with_db!(self, db => db.set_metrics(m))
+    }
+
+    /// See [`DynamicDbscan::live_vertices`].
+    pub fn live_vertices(&self) -> usize {
+        with_db!(self, db => db.live_vertices())
+    }
+
+    /// See [`DynamicDbscan::conn_level_live`].
+    pub fn conn_level_live(&self) -> Vec<usize> {
+        with_db!(self, db => db.conn_level_live())
+    }
+
+    /// See [`DynamicDbscan::conn_edge_count`].
+    pub fn conn_edge_count(&self) -> usize {
+        with_db!(self, db => db.conn_edge_count())
     }
 
     pub fn verify(&self) -> Result<(), invariants::InvariantError> {

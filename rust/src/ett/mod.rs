@@ -280,6 +280,14 @@ impl<S: Sequence> EulerForest<S> {
         self.loop_of.len()
     }
 
+    /// Live tree edges in this forest — half the total degree (every
+    /// `link` adds one to both endpoints). `O(verts)`; sampled by the
+    /// observability layer's structural gauges at publish, never on the
+    /// per-op path.
+    pub fn tree_edge_count(&self) -> usize {
+        self.degree.iter().map(|&d| d as usize).sum::<usize>() / 2
+    }
+
     /// Visit every vertex of `v`'s tree in tour order — `O(component
     /// size)`. This is **not** a replacement-search primitive (that cost
     /// is exactly what the leveled connectivity's mark aggregates remove —
@@ -587,6 +595,20 @@ mod tests {
     #[test]
     fn treap_smoke() {
         forest_smoke(TreapForest::new(1));
+    }
+
+    #[test]
+    fn tree_edge_count_tracks_links_and_cuts() {
+        let mut f = TreapForest::new(3);
+        let a = f.add_vertex();
+        let b = f.add_vertex();
+        let c = f.add_vertex();
+        assert_eq!(f.tree_edge_count(), 0);
+        assert!(f.link(a, b));
+        assert!(f.link(b, c));
+        assert_eq!(f.tree_edge_count(), 2);
+        assert!(f.cut(a, b));
+        assert_eq!(f.tree_edge_count(), 1);
     }
 
     #[test]

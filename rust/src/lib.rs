@@ -10,7 +10,10 @@
 //!
 //! * **L3 (this crate)** — the unified serving API ([`serve`]: one typed
 //!   engine façade, versioned snapshot reads, cluster-event
-//!   subscriptions), the dynamic clustering structure
+//!   subscriptions), the observability layer ([`obs`]: lock-free live
+//!   metrics, publish-stage tracing, Prometheus-style exposition through
+//!   `serve::MetricsSnapshot::render_prometheus`), the dynamic clustering
+//!   structure
 //!   ([`dbscan::DynamicDbscan`]), the Euler-tour dynamic forest ([`ett`]),
 //!   grid-LSH bucket tables ([`lsh`]), baselines ([`baselines`]), metrics
 //!   ([`metrics`]), datasets ([`data`]), the streaming coordinator
@@ -54,6 +57,12 @@
 //! let view = engine.publish();
 //! let _ = events.drain(); // cluster events of both publishes
 //! assert_eq!(view.version(), 2);
+//!
+//! // live observability: merged per-op latencies mid-run (sharded too),
+//! // per-stage publish traces and Prometheus text exposition — the CLI
+//! // streams the same output with `stream … --metrics-every N`
+//! let m = engine.metrics();
+//! println!("{}", m.render_prometheus());
 //! ```
 //!
 //! The structure-level API ([`dbscan::DynamicDbscan`]: `add_point` /
@@ -72,6 +81,7 @@ pub mod ett;
 pub mod experiments;
 pub mod lsh;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod shard;

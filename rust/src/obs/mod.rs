@@ -1,0 +1,639 @@
+//! Observability: the lock-free metrics registry, stage-level span timing
+//! and the per-publish trace plumbing threaded through every layer of the
+//! pipeline (router → ghosts → ETT/HDT connectivity → delta stitch →
+//! snapshot publish).
+//!
+//! Design rules:
+//!
+//! * **One registry per engine.** [`Metrics`] is shared as an
+//!   `Arc<Metrics>` between the engine, its shard workers and the DBSCAN
+//!   cores; every mutation is a `Relaxed` atomic op on a striped counter
+//!   ([`AtomicHisto`]), so workers never contend and readers merge live.
+//! * **All timing goes through this module.** `serve`, `shard` and
+//!   `dbscan` code uses [`Stopwatch`], [`PhaseClock`] or the [`span!`]
+//!   macro — never ad-hoc `Instant::now()` (enforced by a grep-lint in
+//!   `tests/lint.rs`), so instrumentation stays centralized and the
+//!   overhead budget auditable.
+//! * **Disabled means free.** A registry built with `Metrics::new(false)`
+//!   turns every record into a branch on a plain `bool`; the
+//!   `obs_overhead` bench axis gates the enabled cost at ≤ 2%.
+//!
+//! Metric naming follows the Prometheus convention: `dyndbscan_` prefix,
+//! `_total` suffix on counters, `_ns` unit suffix on durations (see
+//! `serve::MetricsSnapshot::render_prometheus`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::stats::{AtomicHisto, LatencyHisto};
+
+// ---------------------------------------------------------------------
+// stages
+// ---------------------------------------------------------------------
+
+/// One stage of a publish round, in pipeline order. `Route`, `DeltaFold`
+/// and `Stitch` are timed inside the sharded engine; `SnapshotCow` and
+/// `Events` are the serve façade's share (view construction and cluster
+/// event derivation) and are folded into the same trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PublishStage {
+    /// flushing pending batches through the router to the workers
+    /// (includes ghost replication — ghosts are routed, not re-sent)
+    Route,
+    /// draining per-shard deltas at the publish barrier
+    DeltaFold,
+    /// folding deltas into the cross-shard stitch graph
+    Stitch,
+    /// CoW snapshot-view construction (label/coord chunk clones)
+    SnapshotCow,
+    /// cluster-event derivation for `watch()` subscribers
+    Events,
+}
+
+impl PublishStage {
+    pub const COUNT: usize = 5;
+    pub const ALL: [PublishStage; Self::COUNT] = [
+        PublishStage::Route,
+        PublishStage::DeltaFold,
+        PublishStage::Stitch,
+        PublishStage::SnapshotCow,
+        PublishStage::Events,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PublishStage::Route => "route",
+            PublishStage::DeltaFold => "delta_fold",
+            PublishStage::Stitch => "stitch",
+            PublishStage::SnapshotCow => "snapshot_cow",
+            PublishStage::Events => "events",
+        }
+    }
+
+    #[inline]
+    pub fn ix(self) -> usize {
+        self as usize
+    }
+}
+
+/// One stage of a single point update inside the DBSCAN core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateStage {
+    /// grid-LSH key hashing (amortized per batch)
+    Hash,
+    /// bucket probes: core threshold checks and neighbor collection
+    NeighborQuery,
+    /// ETT splice work: links, cuts, attach/detach of non-core points
+    EttLinkCut,
+    /// HDT replacement search incl. level promotion sweeps
+    LevelPromotion,
+}
+
+impl UpdateStage {
+    pub const COUNT: usize = 4;
+    pub const ALL: [UpdateStage; Self::COUNT] = [
+        UpdateStage::Hash,
+        UpdateStage::NeighborQuery,
+        UpdateStage::EttLinkCut,
+        UpdateStage::LevelPromotion,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            UpdateStage::Hash => "hash",
+            UpdateStage::NeighborQuery => "neighbor_query",
+            UpdateStage::EttLinkCut => "ett_link_cut",
+            UpdateStage::LevelPromotion => "level_promotion",
+        }
+    }
+
+    #[inline]
+    pub fn ix(self) -> usize {
+        self as usize
+    }
+}
+
+/// A stage identifier the [`span!`] macro can record through — implemented
+/// by both stage enums so one macro serves the publish and update paths.
+pub trait Stage: Copy {
+    fn record_into(self, m: &Metrics, ns: u64);
+}
+
+impl Stage for PublishStage {
+    #[inline]
+    fn record_into(self, m: &Metrics, ns: u64) {
+        m.record_publish_stage(self, ns);
+    }
+}
+
+impl Stage for UpdateStage {
+    #[inline]
+    fn record_into(self, m: &Metrics, ns: u64) {
+        m.record_update_stage(self, ns);
+    }
+}
+
+// ---------------------------------------------------------------------
+// clocks
+// ---------------------------------------------------------------------
+
+/// The sanctioned wall-clock handle for `serve`/`shard`/`dbscan` code —
+/// thin wrapper over `Instant` so all timing flows through one API.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    #[inline]
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    #[inline]
+    pub fn elapsed_ns(&self) -> u64 {
+        self.0.elapsed().as_nanos() as u64
+    }
+
+    #[inline]
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Sequential stage timer: each [`PhaseClock::lap`] returns the
+/// nanoseconds since the previous lap (or construction) and restarts, so
+/// consecutive laps partition an interval without re-reading the clock
+/// twice per boundary.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseClock {
+    last: Instant,
+}
+
+impl PhaseClock {
+    #[inline]
+    pub fn new() -> Self {
+        PhaseClock { last: Instant::now() }
+    }
+
+    /// A clock only when `on` — the update hot path's way to skip the
+    /// clock reads entirely when metrics are disabled.
+    #[inline]
+    pub fn maybe(on: bool) -> Option<PhaseClock> {
+        if on {
+            Some(PhaseClock::new())
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    pub fn lap(&mut self) -> u64 {
+        let now = Instant::now();
+        let ns = now.duration_since(self.last).as_nanos() as u64;
+        self.last = now;
+        ns
+    }
+}
+
+impl Default for PhaseClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Time a body expression and record it against a stage:
+///
+/// ```ignore
+/// let keys = span!(self.obs, UpdateStage::Hash, {
+///     self.hasher.keys_for(&coords)
+/// });
+/// ```
+///
+/// Evaluates to the body's value. The registry reference may be anything
+/// that derefs to [`Metrics`] (e.g. an `Arc<Metrics>`); with the registry
+/// disabled the cost is two clock reads and a predictable branch.
+#[macro_export]
+macro_rules! span {
+    ($metrics:expr, $stage:expr, $body:expr) => {{
+        let __span_sw = $crate::obs::Stopwatch::start();
+        let __span_out = $body;
+        $crate::obs::Stage::record_into($stage, &$metrics, __span_sw.elapsed_ns());
+        __span_out
+    }};
+}
+
+// ---------------------------------------------------------------------
+// publish trace
+// ---------------------------------------------------------------------
+
+/// Per-stage breakdown of the most recent publish. The engine fills
+/// `Route`/`DeltaFold`/`Stitch` and sets the engine-side total; the serve
+/// façade extends it with its `SnapshotCow`/`Events` share, so the
+/// invariant `stage_sum_ns() ≤ total_ns()` holds at every layer.
+#[derive(Clone, Debug, Default)]
+pub struct PublishTrace {
+    stage_ns: [u64; PublishStage::COUNT],
+    total_ns: u64,
+}
+
+impl PublishTrace {
+    pub fn record(&mut self, stage: PublishStage, ns: u64) {
+        self.stage_ns[stage.ix()] += ns;
+    }
+
+    pub fn set_total(&mut self, ns: u64) {
+        self.total_ns = ns;
+    }
+
+    /// Grow the total by a façade-side addition (the façade stages run
+    /// after the engine's own total was taken).
+    pub fn extend_total(&mut self, ns: u64) {
+        self.total_ns += ns;
+    }
+
+    pub fn get(&self, stage: PublishStage) -> u64 {
+        self.stage_ns[stage.ix()]
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.total_ns
+    }
+
+    pub fn stage_sum_ns(&self) -> u64 {
+        self.stage_ns.iter().sum()
+    }
+
+    pub fn stages(&self) -> impl Iterator<Item = (PublishStage, u64)> + '_ {
+        PublishStage::ALL.iter().map(move |&s| (s, self.stage_ns[s.ix()]))
+    }
+
+    /// `route=…ns delta_fold=…ns … total=…ns` one-liner for logs.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (s, ns) in self.stages() {
+            out.push_str(&format!("{}={}ns ", s.name(), ns));
+        }
+        out.push_str(&format!("total={}ns", self.total_ns));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// gauges
+// ---------------------------------------------------------------------
+
+/// Structural gauges sampled cheaply at publish. Integer gauges hold the
+/// raw value; ratio gauges (`is_ratio`) hold `f64` bits — [`Metrics::gauge`]
+/// decodes either into an `f64`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// live primary points in the published snapshot
+    LivePoints,
+    /// ghost inserts / primary inserts (replication overhead)
+    GhostRatio,
+    /// live ETT vertices summed over every HDT level forest
+    EttVertices,
+    /// live (multi-)edges in the connectivity structures
+    EttEdges,
+    /// deepest HDT level currently materialized across shards
+    HdtLevels,
+    /// cumulative HDT edge promotions (level pushes)
+    EdgePromotions,
+    /// stitch-graph vertices ((shard, root) nodes)
+    StitchNodes,
+    /// stitch-graph edges
+    StitchEdges,
+    /// label-map chunk-sharing ratio at last publish (1.0 = all shared)
+    CowLabelSharing,
+    /// coord-map chunk-sharing ratio at last publish
+    CowCoordSharing,
+}
+
+impl Gauge {
+    pub const COUNT: usize = 10;
+    pub const ALL: [Gauge; Self::COUNT] = [
+        Gauge::LivePoints,
+        Gauge::GhostRatio,
+        Gauge::EttVertices,
+        Gauge::EttEdges,
+        Gauge::HdtLevels,
+        Gauge::EdgePromotions,
+        Gauge::StitchNodes,
+        Gauge::StitchEdges,
+        Gauge::CowLabelSharing,
+        Gauge::CowCoordSharing,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::LivePoints => "live_points",
+            Gauge::GhostRatio => "ghost_ratio",
+            Gauge::EttVertices => "ett_vertices",
+            Gauge::EttEdges => "ett_edges",
+            Gauge::HdtLevels => "hdt_levels",
+            Gauge::EdgePromotions => "edge_promotions",
+            Gauge::StitchNodes => "stitch_nodes",
+            Gauge::StitchEdges => "stitch_edges",
+            Gauge::CowLabelSharing => "cow_label_sharing",
+            Gauge::CowCoordSharing => "cow_coord_sharing",
+        }
+    }
+
+    /// Stored as `f64` bits rather than an integer count.
+    pub fn is_ratio(self) -> bool {
+        matches!(
+            self,
+            Gauge::GhostRatio | Gauge::CowLabelSharing | Gauge::CowCoordSharing
+        )
+    }
+
+    #[inline]
+    fn ix(self) -> usize {
+        self as usize
+    }
+}
+
+// ---------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------
+
+/// The shared, lock-free metrics registry. One per engine, shared as an
+/// `Arc<Metrics>` with every worker thread and DBSCAN core; all mutators
+/// take `&self` and reduce to `Relaxed` atomic ops (or an early return
+/// when disabled), so the hot paths never block on observation.
+pub struct Metrics {
+    enabled: bool,
+    /// per-op insert latency (worker-recorded, striped)
+    add: AtomicHisto,
+    /// per-op delete latency
+    delete: AtomicHisto,
+    /// whole-publish latency
+    publish: AtomicHisto,
+    /// cumulative per-stage publish breakdowns
+    publish_stages: [AtomicHisto; PublishStage::COUNT],
+    /// cumulative per-stage update breakdowns
+    update_stages: [AtomicHisto; UpdateStage::COUNT],
+    gauges: [AtomicU64; Gauge::COUNT],
+    /// live ETT vertices per HDT level (deeper levels fold into the last)
+    hdt_level_verts: [AtomicU64; Self::MAX_LEVELS],
+}
+
+impl Metrics {
+    /// Tracked HDT levels; `O(log n)` levels means 8 covers every
+    /// realistic shard size, and deeper levels fold into the last slot.
+    pub const MAX_LEVELS: usize = 8;
+
+    pub fn new(enabled: bool) -> Self {
+        Metrics {
+            enabled,
+            add: AtomicHisto::new(),
+            delete: AtomicHisto::new(),
+            publish: AtomicHisto::new(),
+            publish_stages: std::array::from_fn(|_| AtomicHisto::new()),
+            update_stages: std::array::from_fn(|_| AtomicHisto::new()),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+            hdt_level_verts: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// A registry whose every record is a no-op — the `metrics(false)`
+    /// baseline the `obs_overhead` bench compares against.
+    pub fn disabled() -> Self {
+        Self::new(false)
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    // ---- histograms -------------------------------------------------
+
+    #[inline]
+    pub fn record_add(&self, ns: u64) {
+        if self.enabled {
+            self.add.record(ns);
+        }
+    }
+
+    #[inline]
+    pub fn record_delete(&self, ns: u64) {
+        if self.enabled {
+            self.delete.record(ns);
+        }
+    }
+
+    #[inline]
+    pub fn record_publish(&self, ns: u64) {
+        if self.enabled {
+            self.publish.record(ns);
+        }
+    }
+
+    #[inline]
+    pub fn record_publish_stage(&self, stage: PublishStage, ns: u64) {
+        if self.enabled {
+            self.publish_stages[stage.ix()].record(ns);
+        }
+    }
+
+    #[inline]
+    pub fn record_update_stage(&self, stage: UpdateStage, ns: u64) {
+        if self.enabled {
+            self.update_stages[stage.ix()].record(ns);
+        }
+    }
+
+    /// Live merged view of the per-op insert latencies.
+    pub fn add_histo(&self) -> LatencyHisto {
+        self.add.snapshot()
+    }
+
+    pub fn delete_histo(&self) -> LatencyHisto {
+        self.delete.snapshot()
+    }
+
+    pub fn publish_histo(&self) -> LatencyHisto {
+        self.publish.snapshot()
+    }
+
+    pub fn publish_stage_histos(&self) -> Vec<(&'static str, LatencyHisto)> {
+        PublishStage::ALL
+            .iter()
+            .map(|&s| (s.name(), self.publish_stages[s.ix()].snapshot()))
+            .collect()
+    }
+
+    pub fn update_stage_histos(&self) -> Vec<(&'static str, LatencyHisto)> {
+        UpdateStage::ALL
+            .iter()
+            .map(|&s| (s.name(), self.update_stages[s.ix()].snapshot()))
+            .collect()
+    }
+
+    // ---- gauges -----------------------------------------------------
+
+    pub fn set_gauge(&self, g: Gauge, v: u64) {
+        if self.enabled {
+            debug_assert!(!g.is_ratio());
+            self.gauges[g.ix()].store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Accumulate into an integer gauge — how workers fold their share of
+    /// a structural sample in at a publish barrier.
+    pub fn add_gauge(&self, g: Gauge, v: u64) {
+        if self.enabled {
+            debug_assert!(!g.is_ratio());
+            self.gauges[g.ix()].fetch_add(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Max-fold into an integer gauge (e.g. deepest HDT level).
+    pub fn max_gauge(&self, g: Gauge, v: u64) {
+        if self.enabled {
+            debug_assert!(!g.is_ratio());
+            self.gauges[g.ix()].fetch_max(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn set_ratio(&self, g: Gauge, v: f64) {
+        if self.enabled {
+            debug_assert!(g.is_ratio());
+            self.gauges[g.ix()].store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Read any gauge as `f64` (decoding ratio bits where needed).
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        let raw = self.gauges[g.ix()].load(Ordering::Relaxed);
+        if g.is_ratio() {
+            f64::from_bits(raw)
+        } else {
+            raw as f64
+        }
+    }
+
+    pub fn gauge_values(&self) -> Vec<(&'static str, f64)> {
+        Gauge::ALL.iter().map(|&g| (g.name(), self.gauge(g))).collect()
+    }
+
+    pub fn add_level_verts(&self, level: usize, v: u64) {
+        if self.enabled {
+            self.hdt_level_verts[level.min(Self::MAX_LEVELS - 1)]
+                .fetch_add(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn level_verts(&self) -> [u64; Self::MAX_LEVELS] {
+        std::array::from_fn(|i| self.hdt_level_verts[i].load(Ordering::Relaxed))
+    }
+
+    /// Zero the worker-accumulated structural gauges before a publish
+    /// barrier; every worker then `add_gauge`s its share back in while
+    /// handling the barrier marker, so the engine reads a consistent
+    /// whole-fleet sample after the barrier completes.
+    pub fn zero_structural(&self) {
+        if !self.enabled {
+            return;
+        }
+        for g in [
+            Gauge::EttVertices,
+            Gauge::EttEdges,
+            Gauge::HdtLevels,
+            Gauge::EdgePromotions,
+        ] {
+            self.gauges[g.ix()].store(0, Ordering::Relaxed);
+        }
+        for c in &self.hdt_level_verts {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl std::fmt::Debug for Metrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Metrics")
+            .field("enabled", &self.enabled)
+            .field("adds", &self.add.count())
+            .field("deletes", &self.delete.count())
+            .field("publishes", &self.publish.count())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let m = Metrics::disabled();
+        m.record_add(10);
+        m.record_publish_stage(PublishStage::Stitch, 10);
+        m.set_gauge(Gauge::LivePoints, 5);
+        assert_eq!(m.add_histo().count(), 0);
+        assert_eq!(m.publish_stage_histos()[PublishStage::Stitch.ix()].1.count(), 0);
+        assert_eq!(m.gauge(Gauge::LivePoints), 0.0);
+    }
+
+    #[test]
+    fn span_macro_records_and_returns() {
+        let m = Metrics::new(true);
+        let v = crate::span!(m, UpdateStage::Hash, { 40 + 2 });
+        assert_eq!(v, 42);
+        let h = &m.update_stage_histos()[UpdateStage::Hash.ix()];
+        assert_eq!(h.0, "hash");
+        assert_eq!(h.1.count(), 1);
+    }
+
+    #[test]
+    fn phase_clock_laps_partition_the_interval() {
+        let sw = Stopwatch::start();
+        let mut clk = PhaseClock::new();
+        let mut acc = 0u64;
+        for _ in 0..3 {
+            std::hint::black_box((0..1000).sum::<u64>());
+            acc += clk.lap();
+        }
+        assert!(acc <= sw.elapsed_ns(), "laps exceed enclosing interval");
+    }
+
+    #[test]
+    fn publish_trace_invariants() {
+        let mut t = PublishTrace::default();
+        t.record(PublishStage::Route, 10);
+        t.record(PublishStage::Stitch, 30);
+        t.set_total(50);
+        t.record(PublishStage::SnapshotCow, 7);
+        t.extend_total(7);
+        assert_eq!(t.get(PublishStage::Stitch), 30);
+        assert_eq!(t.stage_sum_ns(), 47);
+        assert_eq!(t.total_ns(), 57);
+        assert!(t.stage_sum_ns() <= t.total_ns());
+        assert!(t.summary().contains("stitch=30ns"));
+    }
+
+    #[test]
+    fn gauges_roundtrip_and_zero() {
+        let m = Metrics::new(true);
+        m.set_gauge(Gauge::LivePoints, 123);
+        m.set_ratio(Gauge::GhostRatio, 0.25);
+        m.add_gauge(Gauge::EttVertices, 10);
+        m.add_gauge(Gauge::EttVertices, 5);
+        m.max_gauge(Gauge::HdtLevels, 3);
+        m.max_gauge(Gauge::HdtLevels, 2);
+        m.add_level_verts(0, 10);
+        m.add_level_verts(99, 1); // folds into the last slot
+        assert_eq!(m.gauge(Gauge::LivePoints), 123.0);
+        assert!((m.gauge(Gauge::GhostRatio) - 0.25).abs() < 1e-12);
+        assert_eq!(m.gauge(Gauge::EttVertices), 15.0);
+        assert_eq!(m.gauge(Gauge::HdtLevels), 3.0);
+        assert_eq!(m.level_verts()[0], 10);
+        assert_eq!(m.level_verts()[Metrics::MAX_LEVELS - 1], 1);
+        m.zero_structural();
+        assert_eq!(m.gauge(Gauge::EttVertices), 0.0);
+        assert_eq!(m.level_verts()[0], 0);
+        // non-structural gauges survive the barrier zeroing
+        assert_eq!(m.gauge(Gauge::LivePoints), 123.0);
+    }
+}

@@ -53,6 +53,7 @@ pub struct EngineBuilder {
     block_side: u32,
     ghost_margin: u32,
     routing_dims: usize,
+    metrics: bool,
 }
 
 impl EngineBuilder {
@@ -75,6 +76,7 @@ impl EngineBuilder {
             block_side: 8,
             ghost_margin: 2,
             routing_dims: 0,
+            metrics: true,
         }
     }
 
@@ -160,6 +162,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Live metrics recording (default on): per-op latency histograms,
+    /// publish/update stage spans and structural gauges, pulled via
+    /// [`ClusterEngine::metrics`]. Off turns the registry into a no-op
+    /// recorder — the `obs_overhead` bench baseline.
+    pub fn metrics(mut self, on: bool) -> Self {
+        self.metrics = on;
+        self
+    }
+
     /// The publish strategy `build` will use (explicit choice, or the
     /// connectivity-dependent default).
     pub fn effective_stitch(&self) -> StitchMode {
@@ -191,6 +202,7 @@ impl EngineBuilder {
                     stitch,
                     self.seed,
                     hashing,
+                    self.metrics,
                 )))
             }
             Backend::Sharded(shards) => {
@@ -205,6 +217,7 @@ impl EngineBuilder {
                 scfg.block_side = self.block_side;
                 scfg.ghost_margin = self.ghost_margin;
                 scfg.routing_dims = self.routing_dims;
+                scfg.metrics = self.metrics;
                 Ok(Box::new(ShardedServe::new(scfg)))
             }
         }

@@ -2,13 +2,12 @@
 //! the examples and the coordinator's dataset helpers share, for every
 //! backend.
 
-use std::time::Instant;
-
 use anyhow::Result;
 
 use crate::coordinator::{StreamOp, TruthFn};
 use crate::data::Dataset;
 use crate::metrics::ari_nmi;
+use crate::obs::Stopwatch;
 
 use super::{ClusterEngine, ServeOutcome, Update};
 
@@ -56,13 +55,28 @@ impl ServeRunOutcome {
 /// (and a report) every `snapshot_every` batches plus once at the end.
 /// `truth` adds ARI/NMI against ground-truth labels to each report.
 pub fn run_stream(
-    mut engine: Box<dyn ClusterEngine>,
+    engine: Box<dyn ClusterEngine>,
     batches: Vec<Vec<StreamOp>>,
     snapshot_every: usize,
     truth: Option<&TruthFn>,
 ) -> Result<ServeRunOutcome> {
+    run_stream_with(engine, batches, snapshot_every, truth, 0, &mut |_| {})
+}
+
+/// [`run_stream`] plus a live metrics feed: every `metrics_every`
+/// batches (0 = never) the engine's [`ClusterEngine::metrics`] snapshot
+/// is rendered as Prometheus text exposition and handed to `sink` — the
+/// plumbing behind the CLI's `stream --metrics-every N` mode.
+pub fn run_stream_with(
+    mut engine: Box<dyn ClusterEngine>,
+    batches: Vec<Vec<StreamOp>>,
+    snapshot_every: usize,
+    truth: Option<&TruthFn>,
+    metrics_every: usize,
+    sink: &mut dyn FnMut(&str),
+) -> Result<ServeRunOutcome> {
     let mut reports = Vec::new();
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
     let last = batches.len().saturating_sub(1);
     for (seq, ops) in batches.iter().enumerate() {
         let updates: Vec<Update<'_>> = ops
@@ -88,15 +102,24 @@ pub fn run_stream(
                 core_points: snap.core_points(),
                 clusters: snap.clusters(),
                 version: snap.version(),
-                wall_s: t0.elapsed().as_secs_f64(),
+                wall_s: t0.elapsed_s(),
                 ari,
                 nmi,
             });
         }
+        if metrics_every > 0 && (seq + 1) % metrics_every == 0 {
+            sink(&engine.metrics().render_prometheus());
+        }
     }
     // final publish + teardown (finish publishes anything pending)
+    if metrics_every > 0 {
+        // one last pull with everything recorded, before the registry
+        // goes away with the engine
+        engine.publish();
+        sink(&engine.metrics().render_prometheus());
+    }
     let outcome = engine.finish();
-    let total_wall_s = t0.elapsed().as_secs_f64();
+    let total_wall_s = t0.elapsed_s();
     let final_labels = outcome.snapshot.labels();
     let (ari, nmi) = quality_vs_truth(&final_labels, truth);
     reports.push(ServeReport {
@@ -201,6 +224,30 @@ mod tests {
         // versions increase monotonically across reports
         let versions: Vec<u64> = out.reports.iter().map(|r| r.version).collect();
         assert!(versions.windows(2).all(|w| w[0] < w[1]), "{versions:?}");
+    }
+
+    #[test]
+    fn run_stream_with_metrics_sink_emits_exposition() {
+        let (_ds, batches) = blob_batches(400, 7);
+        let engine = EngineBuilder::new(4)
+            .k(8)
+            .eps(0.75)
+            .backend(Backend::Sharded(2))
+            .seed(3)
+            .build()
+            .unwrap();
+        let mut dumps: Vec<String> = Vec::new();
+        let out = run_stream_with(engine, batches, 0, None, 1, &mut |s| {
+            dumps.push(s.to_string())
+        })
+        .unwrap();
+        // one dump per batch plus the final pre-finish dump
+        assert_eq!(dumps.len(), 3);
+        let last = dumps.last().unwrap();
+        assert!(last.contains("dyndbscan_inserts_total 400"));
+        assert!(last.contains("dyndbscan_publish_stage_ns"));
+        assert!(last.contains("stage=\"stitch\""));
+        assert_eq!(out.final_labels.len(), 400);
     }
 
     #[test]

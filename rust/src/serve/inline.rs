@@ -12,20 +12,22 @@
 //! mirroring the sharded fallback.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use rustc_hash::{FxHashMap, FxHashSet};
 
 use crate::dbscan::{AnyDbscan, ConnKind, DbscanConfig};
 use crate::lsh::table::PointId;
 use crate::lsh::BucketKey;
+use crate::obs::{
+    Gauge, Metrics, PhaseClock, PublishStage, PublishTrace, Stopwatch, UpdateStage,
+};
 use crate::runtime::engines::HashingEngine;
 use crate::shard::{LabelChange, LabelMap, StitchMode};
 use crate::util::stats::LatencyHisto;
 
 use super::events::{derive_events, ClusterEvents, EventHub};
 use super::snapshot::{CoordMap, SnapshotView};
-use super::{ClusterEngine, ServeOutcome, Stats, Update};
+use super::{ClusterEngine, MetricsSnapshot, ServeOutcome, Stats, Update};
 
 pub(crate) struct InlineEngine {
     db: AnyDbscan,
@@ -62,6 +64,11 @@ pub(crate) struct InlineEngine {
     add_latency: LatencyHisto,
     delete_latency: LatencyHisto,
     publish_latency: LatencyHisto,
+    /// shared lock-free metrics registry (also attached to `db` for the
+    /// update-stage spans)
+    obs: Arc<Metrics>,
+    /// per-stage breakdown of the most recent publish
+    last_trace: PublishTrace,
 }
 
 impl InlineEngine {
@@ -71,12 +78,15 @@ impl InlineEngine {
         stitch: StitchMode,
         seed: u64,
         hashing: Box<dyn HashingEngine>,
+        metrics: bool,
     ) -> Self {
         let (dim, eps) = (cfg.dim, cfg.eps);
         let mut db = AnyDbscan::new(conn, cfg, seed);
         if stitch == StitchMode::Delta {
             db.enable_stitch_tracking();
         }
+        let obs = Arc::new(Metrics::new(metrics));
+        db.set_metrics(Arc::clone(&obs));
         InlineEngine {
             db,
             hashing,
@@ -103,6 +113,8 @@ impl InlineEngine {
             add_latency: LatencyHisto::new(),
             delete_latency: LatencyHisto::new(),
             publish_latency: LatencyHisto::new(),
+            obs,
+            last_trace: PublishTrace::default(),
         }
     }
 
@@ -115,9 +127,11 @@ impl InlineEngine {
         if let Some(pid) = self.ext_pid.get(&ext).copied() {
             self.drop_point(ext, pid);
         }
-        let o0 = Instant::now();
+        let o0 = Stopwatch::start();
         let pid = self.db.add_point_with_keys(coords, keys);
-        self.add_latency.record(o0.elapsed().as_nanos() as u64 + hash_ns);
+        let op_ns = o0.elapsed_ns() + hash_ns;
+        self.add_latency.record(op_ns);
+        self.obs.record_add(op_ns);
         self.ext_pid.insert(ext, pid);
         self.pid_ext.insert(pid, ext);
         self.coords.set(ext, coords);
@@ -131,9 +145,11 @@ impl InlineEngine {
     fn drop_point(&mut self, ext: u64, pid: PointId) {
         self.ext_pid.remove(&ext);
         self.pid_ext.remove(&pid);
-        let o0 = Instant::now();
+        let o0 = Stopwatch::start();
         self.db.delete_point(pid);
-        self.delete_latency.record(o0.elapsed().as_nanos() as u64);
+        let op_ns = o0.elapsed_ns();
+        self.delete_latency.record(op_ns);
+        self.obs.record_delete(op_ns);
         self.coords.remove(ext);
         self.dirty.insert(ext);
     }
@@ -259,6 +275,25 @@ impl InlineEngine {
         self.sizes = sizes;
         changes
     }
+
+    /// Sample the structural gauges from the live structure at publish —
+    /// the inline counterpart of the shard workers' barrier-marker
+    /// sampling (here nothing races, so zero-then-add is trivially
+    /// consistent).
+    fn sample_structural(&self) {
+        self.obs.zero_structural();
+        self.obs.set_gauge(Gauge::LivePoints, self.db.num_points() as u64);
+        let per_level = self.db.conn_level_live();
+        self.obs
+            .add_gauge(Gauge::EttVertices, per_level.iter().sum::<usize>() as u64);
+        for (l, &n) in per_level.iter().enumerate() {
+            self.obs.add_level_verts(l, n as u64);
+        }
+        self.obs.add_gauge(Gauge::EttEdges, self.db.conn_edge_count() as u64);
+        let rs = self.db.repair_stats();
+        self.obs.max_gauge(Gauge::HdtLevels, rs.levels as u64);
+        self.obs.add_gauge(Gauge::EdgePromotions, rs.pushes);
+    }
 }
 
 impl ClusterEngine for InlineEngine {
@@ -269,9 +304,12 @@ impl ClusterEngine for InlineEngine {
     fn upsert(&mut self, ext: u64, coords: &[f32]) {
         assert_eq!(coords.len(), self.dim, "bad dim in upsert");
         let mut row = std::mem::take(&mut self.key_row);
-        let h0 = Instant::now();
-        self.hashing.key_row_into(coords, &mut row).expect("hash stage failed");
-        let hash_ns = h0.elapsed().as_nanos() as u64;
+        let hash_ns = {
+            let h0 = Stopwatch::start();
+            self.hashing.key_row_into(coords, &mut row).expect("hash stage failed");
+            h0.elapsed_ns()
+        };
+        self.obs.record_update_stage(UpdateStage::Hash, hash_ns);
         self.insert_inner(ext, coords, &row, hash_ns);
         self.key_row = row;
     }
@@ -301,11 +339,13 @@ impl ClusterEngine for InlineEngine {
             }
         }
         let (keys, hash_ns_per_insert) = if n > 0 {
-            let h0 = Instant::now();
+            let h0 = Stopwatch::start();
             let keys = self.hashing.keys_batch(&flat, n).expect("hash stage failed");
+            let hash_ns = h0.elapsed_ns();
+            self.obs.record_update_stage(UpdateStage::Hash, hash_ns);
             // amortize the batch hash over its inserts (same accounting
             // as the shard workers' batch path)
-            (keys, (h0.elapsed().as_nanos() / n as u128) as u64)
+            (keys, hash_ns / n as u64)
         } else {
             (Vec::new(), 0)
         };
@@ -326,14 +366,27 @@ impl ClusterEngine for InlineEngine {
     }
 
     fn publish(&mut self) -> SnapshotView {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
+        let mut clk = PhaseClock::maybe(self.obs.enabled());
+        let mut trace = PublishTrace::default();
         let changes = match self.stitch {
             StitchMode::Delta => self.publish_delta(),
             StitchMode::FullRebuild => self.publish_rebuild(),
         };
+        if let Some(c) = clk.as_mut() {
+            // the single-instance analogue of the sharded delta fold
+            trace.record(PublishStage::DeltaFold, c.lap());
+        }
         self.version += 1;
         self.publishes += 1;
         self.pending = 0;
+        if self.obs.enabled() {
+            // chunk sharing is measured before the clones below re-share
+            // everything: unshared chunks are the ones rewritten since
+            // the previous publish
+            self.obs.set_ratio(Gauge::CowLabelSharing, self.labels.sharing_ratio());
+            self.obs.set_ratio(Gauge::CowCoordSharing, self.coords.sharing_ratio());
+        }
         self.labels.maybe_grow();
         self.cores.maybe_grow();
         self.coords.maybe_grow();
@@ -357,6 +410,9 @@ impl ClusterEngine for InlineEngine {
             self.eps,
             self.dim,
         );
+        if let Some(c) = clk.as_mut() {
+            trace.record(PublishStage::SnapshotCow, c.lap());
+        }
         if self.hub.has_watchers() {
             let prev: FxHashSet<i64> =
                 self.view.cluster_sizes().iter().map(|&(l, _)| l).collect();
@@ -365,7 +421,24 @@ impl ClusterEngine for InlineEngine {
             let events = derive_events(self.version, &changes, &prev, &now);
             self.hub.emit(events);
         }
-        self.publish_latency.record(t0.elapsed().as_nanos() as u64);
+        if let Some(c) = clk.as_mut() {
+            trace.record(PublishStage::Events, c.lap());
+        }
+        let total_ns = t0.elapsed_ns();
+        self.publish_latency.record(total_ns);
+        if self.obs.enabled() {
+            trace.set_total(total_ns);
+            self.obs.record_publish(total_ns);
+            for stage in [
+                PublishStage::DeltaFold,
+                PublishStage::SnapshotCow,
+                PublishStage::Events,
+            ] {
+                self.obs.record_publish_stage(stage, trace.get(stage));
+            }
+            self.sample_structural();
+            self.last_trace = trace;
+        }
         self.view = view.clone();
         view
     }
@@ -396,6 +469,17 @@ impl ClusterEngine for InlineEngine {
             delete_latency: self.delete_latency.clone(),
             publish_latency: self.publish_latency.clone(),
             conn: self.db.repair_stats(),
+        }
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            stats: self.stats(),
+            last_publish: self.last_trace.clone(),
+            publish_stages: self.obs.publish_stage_histos(),
+            update_stages: self.obs.update_stage_histos(),
+            gauges: self.obs.gauge_values(),
+            hdt_level_verts: self.obs.level_verts().to_vec(),
         }
     }
 

@@ -44,7 +44,12 @@
 //!
 //! **Metrics.** One [`Stats`] struct — op counters, pending writes, and
 //! the add/delete/publish latency histograms — replaces the previously
-//! duplicated per-backend accessors.
+//! duplicated per-backend accessors. [`ClusterEngine::metrics`] widens it
+//! to a [`MetricsSnapshot`]: per-stage publish/update histograms, the
+//! latest per-publish [`PublishTrace`] and the structural gauges, all
+//! pulled live from the backend's lock-free [`crate::obs::Metrics`]
+//! registry and renderable as Prometheus text exposition
+//! ([`MetricsSnapshot::render_prometheus`]).
 
 pub mod builder;
 pub mod driver;
@@ -62,6 +67,7 @@ pub use crate::dbscan::ConnKind;
 pub use crate::shard::StitchMode;
 
 use crate::dbscan::RepairStats;
+use crate::obs::PublishTrace;
 use crate::util::stats::LatencyHisto;
 
 /// One buffered update in a [`ClusterEngine::apply`] batch. `Upsert`
@@ -82,10 +88,13 @@ pub enum Update<'a> {
 /// engine's internal delete + re-insert fan-out is not surfaced here,
 /// except through `ghost_inserts`, which stays an engine-level counter).
 ///
-/// For the sharded backend, `add_latency`/`delete_latency` and `conn` are
-/// owned by the worker threads and merge in at [`ClusterEngine::finish`];
-/// mid-run [`ClusterEngine::stats`] reports them empty. The inline
-/// backend tracks everything live.
+/// `add_latency`/`delete_latency` are **live on every backend**: sharded
+/// workers record each op into the engine's shared striped-atomic
+/// registry ([`crate::obs::Metrics`]), so a mid-run
+/// [`ClusterEngine::stats`] sees the histograms as of the last recorded
+/// op — no finish barrier needed. Only `conn` (the connectivity-layer
+/// repair counters) still merges at [`ClusterEngine::finish`] on the
+/// sharded backend; mid-run it reads zero there.
 #[derive(Clone, Debug)]
 pub struct Stats {
     /// shard workers (1 = the inline/single backend)
@@ -115,6 +124,228 @@ impl Stats {
         } else {
             self.ghost_inserts as f64 / self.inserts as f64
         }
+    }
+
+    /// Render the op counters and latency histograms as Prometheus text
+    /// exposition (`dyndbscan_` prefix, `_total` counters, `_ns` duration
+    /// summaries). [`MetricsSnapshot::render_prometheus`] extends this
+    /// with the stage breakdowns and structural gauges.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        prom_scalar(
+            &mut out,
+            "dyndbscan_inserts_total",
+            "Primary inserts accepted by the facade",
+            "counter",
+            self.inserts as f64,
+        );
+        prom_scalar(
+            &mut out,
+            "dyndbscan_deletes_total",
+            "Deletes accepted by the facade",
+            "counter",
+            self.deletes as f64,
+        );
+        prom_scalar(
+            &mut out,
+            "dyndbscan_ghost_inserts_total",
+            "Ghost replicas created by boundary replication",
+            "counter",
+            self.ghost_inserts as f64,
+        );
+        prom_scalar(
+            &mut out,
+            "dyndbscan_publishes_total",
+            "Snapshot publishes",
+            "counter",
+            self.publishes as f64,
+        );
+        prom_scalar(
+            &mut out,
+            "dyndbscan_shards",
+            "Shard workers (1 = single backend)",
+            "gauge",
+            self.shards as f64,
+        );
+        prom_scalar(
+            &mut out,
+            "dyndbscan_pending_writes",
+            "Writes accepted since the last publish",
+            "gauge",
+            self.pending_writes as f64,
+        );
+        prom_summary(
+            &mut out,
+            "dyndbscan_add_latency_ns",
+            "Per-op insert latency",
+            None,
+            &self.add_latency,
+        );
+        prom_summary(
+            &mut out,
+            "dyndbscan_delete_latency_ns",
+            "Per-op delete latency",
+            None,
+            &self.delete_latency,
+        );
+        prom_summary(
+            &mut out,
+            "dyndbscan_publish_latency_ns",
+            "End-to-end publish latency",
+            None,
+            &self.publish_latency,
+        );
+        out
+    }
+}
+
+/// One `# HELP`/`# TYPE` header plus a single sample line.
+fn prom_scalar(out: &mut String, name: &str, help: &str, kind: &str, v: f64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    out.push_str(&format!("{name} {v}\n"));
+}
+
+/// Series lines of one summary family: `{quantile=…}` samples plus
+/// `_sum`/`_count`, with an optional extra label (the stage dimension).
+/// Callers emit the `# HELP`/`# TYPE` header once per family.
+fn prom_summary_series(
+    out: &mut String,
+    name: &str,
+    extra: Option<(&str, &str)>,
+    h: &LatencyHisto,
+) {
+    let lbl = |q: Option<f64>| -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some((k, v)) = extra {
+            parts.push(format!("{k}=\"{v}\""));
+        }
+        if let Some(q) = q {
+            parts.push(format!("quantile=\"{q}\""));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", parts.join(","))
+        }
+    };
+    for q in [0.5, 0.9, 0.99] {
+        out.push_str(&format!("{name}{} {}\n", lbl(Some(q)), h.quantile(q)));
+    }
+    let sum = if h.count() == 0 { 0.0 } else { h.mean() * h.count() as f64 };
+    out.push_str(&format!("{name}_sum{} {sum}\n", lbl(None)));
+    out.push_str(&format!("{name}_count{} {}\n", lbl(None), h.count()));
+}
+
+/// A complete single-series summary family (header + series).
+fn prom_summary(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    extra: Option<(&str, &str)>,
+    h: &LatencyHisto,
+) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} summary\n"));
+    prom_summary_series(out, name, extra, h);
+}
+
+/// A pull-model snapshot of everything the backend's lock-free
+/// [`crate::obs::Metrics`] registry holds: the [`Stats`] counters and
+/// latency histograms, cumulative per-stage publish/update breakdowns,
+/// the latest per-publish [`PublishTrace`] and the structural gauges.
+/// Obtained from [`ClusterEngine::metrics`]; render with
+/// [`Self::render_prometheus`].
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub stats: Stats,
+    /// per-stage breakdown of the most recent publish
+    pub last_publish: PublishTrace,
+    /// cumulative `(stage, histogram)` publish breakdowns, pipeline order
+    pub publish_stages: Vec<(&'static str, LatencyHisto)>,
+    /// cumulative `(stage, histogram)` update breakdowns
+    pub update_stages: Vec<(&'static str, LatencyHisto)>,
+    /// structural `(name, value)` gauges sampled at the last publish
+    pub gauges: Vec<(&'static str, f64)>,
+    /// live ETT vertices per HDT level (deeper levels fold into the last)
+    pub hdt_level_verts: Vec<u64>,
+}
+
+impl MetricsSnapshot {
+    /// Degrade to counters-and-latencies only — the default for backends
+    /// without a registry.
+    pub fn from_stats(stats: Stats) -> Self {
+        MetricsSnapshot {
+            stats,
+            last_publish: PublishTrace::default(),
+            publish_stages: Vec::new(),
+            update_stages: Vec::new(),
+            gauges: Vec::new(),
+            hdt_level_verts: Vec::new(),
+        }
+    }
+
+    /// Prometheus text exposition of the full snapshot.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = self.stats.render_prometheus();
+        if self.last_publish.total_ns() > 0 {
+            let name = "dyndbscan_last_publish_stage_ns";
+            out.push_str(&format!(
+                "# HELP {name} Stage share of the most recent publish\n\
+                 # TYPE {name} gauge\n"
+            ));
+            for (stage, ns) in self.last_publish.stages() {
+                out.push_str(&format!(
+                    "{name}{{stage=\"{}\"}} {ns}\n",
+                    stage.name()
+                ));
+            }
+            prom_scalar(
+                &mut out,
+                "dyndbscan_last_publish_total_ns",
+                "Total duration of the most recent publish",
+                "gauge",
+                self.last_publish.total_ns() as f64,
+            );
+        }
+        if !self.publish_stages.is_empty() {
+            let name = "dyndbscan_publish_stage_ns";
+            out.push_str(&format!(
+                "# HELP {name} Cumulative per-stage publish latency\n\
+                 # TYPE {name} summary\n"
+            ));
+            for (stage, h) in &self.publish_stages {
+                prom_summary_series(&mut out, name, Some(("stage", stage)), h);
+            }
+        }
+        if !self.update_stages.is_empty() {
+            let name = "dyndbscan_update_stage_ns";
+            out.push_str(&format!(
+                "# HELP {name} Cumulative per-stage update latency\n\
+                 # TYPE {name} summary\n"
+            ));
+            for (stage, h) in &self.update_stages {
+                prom_summary_series(&mut out, name, Some(("stage", stage)), h);
+            }
+        }
+        for (g, v) in &self.gauges {
+            prom_scalar(
+                &mut out,
+                &format!("dyndbscan_{g}"),
+                "Structural gauge sampled at the last publish",
+                "gauge",
+                *v,
+            );
+        }
+        if !self.hdt_level_verts.is_empty() {
+            let name = "dyndbscan_hdt_level_vertices";
+            out.push_str(&format!(
+                "# HELP {name} Live ETT vertices per HDT level\n\
+                 # TYPE {name} gauge\n"
+            ));
+            for (level, v) in self.hdt_level_verts.iter().enumerate() {
+                out.push_str(&format!("{name}{{level=\"{level}\"}} {v}\n"));
+            }
+        }
+        out
     }
 }
 
@@ -175,6 +406,14 @@ pub trait ClusterEngine {
 
     /// Current metrics (see [`Stats`] for sharded-backend caveats).
     fn stats(&self) -> Stats;
+
+    /// Everything the backend's live metrics registry holds: [`Stats`]
+    /// plus stage histograms, the latest publish trace and structural
+    /// gauges. The default degrades to [`Self::stats`] only; both built-in
+    /// backends override it with the full registry pull.
+    fn metrics(&self) -> MetricsSnapshot {
+        MetricsSnapshot::from_stats(self.stats())
+    }
 
     /// Machine-check the Theorem-2 structural invariants. Supported on
     /// the single backend; the sharded backend returns `Err` (workers own

@@ -5,17 +5,17 @@
 //! not keep.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use rustc_hash::FxHashSet;
 
 use crate::dbscan::RepairStats;
+use crate::obs::{Gauge, PhaseClock, Stopwatch};
 use crate::shard::{ShardConfig, ShardedEngine};
 use crate::util::stats::LatencyHisto;
 
 use super::events::{derive_events, ClusterEvents, EventHub};
 use super::snapshot::{CoordMap, SnapshotView};
-use super::{ClusterEngine, ServeOutcome, Stats, Update};
+use super::{ClusterEngine, MetricsSnapshot, ServeOutcome, Stats, Update};
 
 pub(crate) struct ShardedServe {
     eng: ShardedEngine,
@@ -53,9 +53,21 @@ impl ShardedServe {
     }
 
     fn publish_inner(&mut self) -> SnapshotView {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
+        let obs_on = self.eng.metrics().enabled();
         let snap = self.eng.publish();
         let changes = self.eng.drain_label_changes();
+        // façade share of the publish: CoW view construction, then event
+        // derivation — folded into the engine's trace via
+        // `note_facade_stages` below
+        let mut clk = PhaseClock::maybe(obs_on);
+        if obs_on {
+            // measured before the clone below re-shares everything:
+            // chunks rewritten since the last publish are the unshared ones
+            self.eng
+                .metrics()
+                .set_ratio(Gauge::CowCoordSharing, self.coords.sharing_ratio());
+        }
         self.coords.maybe_grow();
         debug_assert_eq!(
             self.coords.len(),
@@ -74,6 +86,7 @@ impl ShardedServe {
             self.eps,
             self.dim,
         );
+        let cow_ns = clk.as_mut().map_or(0, |c| c.lap());
         if self.hub.has_watchers() {
             let prev: FxHashSet<i64> =
                 self.view.cluster_sizes().iter().map(|&(l, _)| l).collect();
@@ -86,7 +99,11 @@ impl ShardedServe {
             // engine-level change recording until the next watch()
             self.eng.set_change_log(false);
         }
-        self.publish_latency.record(t0.elapsed().as_nanos() as u64);
+        let events_ns = clk.as_mut().map_or(0, |c| c.lap());
+        if obs_on {
+            self.eng.note_facade_stages(cow_ns, events_ns);
+        }
+        self.publish_latency.record(t0.elapsed_ns());
         self.pending = 0;
         self.view = view.clone();
         view
@@ -159,6 +176,7 @@ impl ClusterEngine for ShardedServe {
 
     fn stats(&self) -> Stats {
         let es = self.eng.stats();
+        let m = self.eng.metrics();
         Stats {
             shards: self.eng.shards(),
             inserts: self.inserts,
@@ -166,11 +184,27 @@ impl ClusterEngine for ShardedServe {
             ghost_inserts: es.ghost_inserts,
             publishes: es.publishes,
             pending_writes: self.pending,
-            // per-op latencies live in the worker threads until finish
-            add_latency: LatencyHisto::new(),
-            delete_latency: LatencyHisto::new(),
+            // live mid-run: workers record every op into the engine's
+            // shared striped-atomic registry; merging a snapshot here
+            // never blocks them (closes the old workers-own-their-
+            // histograms-until-finish gap)
+            add_latency: m.add_histo(),
+            delete_latency: m.delete_histo(),
             publish_latency: self.publish_latency.clone(),
+            // conn repair counters still merge at finish
             conn: RepairStats::default(),
+        }
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        let m = self.eng.metrics();
+        MetricsSnapshot {
+            stats: self.stats(),
+            last_publish: self.eng.last_trace().clone(),
+            publish_stages: m.publish_stage_histos(),
+            update_stages: m.update_stage_histos(),
+            gauges: m.gauge_values(),
+            hdt_level_verts: m.level_verts().to_vec(),
         }
     }
 

@@ -21,92 +21,62 @@
 
 use std::sync::Arc;
 
-use rustc_hash::FxHashMap;
-
 use crate::shard::LabelMap;
-use crate::util::rng::mix64;
+use crate::util::cow_map::ChunkedCowMap;
 
 /// Target mean entries per chunk; growth triggers at twice this.
 const TARGET_PER_CHUNK: usize = 32;
-/// Initial chunk count (power of two).
-const MIN_CHUNKS: usize = 64;
 
-/// CoW `ext → coordinates` map, chunked like [`LabelMap`]: publishing
-/// clones the chunk-pointer vector, later upserts deep-copy only the
-/// touched chunks (each entry is an `Arc<[f32]>`, so a chunk copy clones
-/// pointers, not coordinate data).
+/// CoW `ext → coordinates` map, a thin wrapper over the generic
+/// [`ChunkedCowMap`] (chunked like [`LabelMap`]): publishing clones the
+/// chunk-pointer vector, later upserts deep-copy only the touched chunks
+/// (each entry is an `Arc<[f32]>`, so a chunk copy clones pointers, not
+/// coordinate data).
 #[derive(Clone, Debug)]
 pub(crate) struct CoordMap {
-    chunks: Vec<Arc<FxHashMap<u64, Arc<[f32]>>>>,
-    len: usize,
+    inner: ChunkedCowMap<Arc<[f32]>>,
 }
 
 impl CoordMap {
     pub fn new() -> Self {
-        CoordMap {
-            chunks: (0..MIN_CHUNKS).map(|_| Arc::new(FxHashMap::default())).collect(),
-            len: 0,
-        }
-    }
-
-    #[inline]
-    fn chunk_ix(&self, ext: u64) -> usize {
-        // chunk count is always a power of two
-        (mix64(ext) as usize) & (self.chunks.len() - 1)
+        CoordMap { inner: ChunkedCowMap::new(TARGET_PER_CHUNK) }
     }
 
     pub fn len(&self) -> usize {
-        self.len
+        self.inner.len()
     }
 
     pub fn get(&self, ext: u64) -> Option<&[f32]> {
-        self.chunks[self.chunk_ix(ext)].get(&ext).map(|a| a.as_ref())
+        self.inner.get(ext).map(|a| a.as_ref())
     }
 
     /// Insert or replace; deep-copies the target chunk iff a published
     /// view still shares it.
     pub fn set(&mut self, ext: u64, coords: &[f32]) {
-        let i = self.chunk_ix(ext);
-        let prev = Arc::make_mut(&mut self.chunks[i]).insert(ext, Arc::from(coords));
-        if prev.is_none() {
-            self.len += 1;
-        }
+        self.inner.set(ext, Arc::from(coords));
     }
 
-    /// Remove, checking membership before `Arc::make_mut` so removing an
-    /// absent key never deep-copies a view-shared chunk.
+    /// Remove; removing an absent key never deep-copies a view-shared
+    /// chunk.
     pub fn remove(&mut self, ext: u64) {
-        let i = self.chunk_ix(ext);
-        if !self.chunks[i].contains_key(&ext) {
-            return;
-        }
-        if Arc::make_mut(&mut self.chunks[i]).remove(&ext).is_some() {
-            self.len -= 1;
-        }
+        self.inner.remove(ext);
     }
 
     /// Unordered iteration over `(ext, coords)`.
     pub fn iter(&self) -> impl Iterator<Item = (u64, &[f32])> + '_ {
-        self.chunks
-            .iter()
-            .flat_map(|c| c.iter().map(|(&e, a)| (e, a.as_ref())))
+        self.inner.iter().map(|(e, a)| (e, a.as_ref()))
     }
 
     /// Double the chunk count once mean occupancy exceeds the target —
     /// amortized `O(1)` per insertion, called between publishes.
     pub fn maybe_grow(&mut self) {
-        if self.len <= self.chunks.len() * TARGET_PER_CHUNK * 2 {
-            return;
-        }
-        let new_n = self.chunks.len() * 2;
-        let mut fresh: Vec<FxHashMap<u64, Arc<[f32]>>> =
-            (0..new_n).map(|_| FxHashMap::default()).collect();
-        for c in &self.chunks {
-            for (&e, a) in c.iter() {
-                fresh[(mix64(e) as usize) & (new_n - 1)].insert(e, Arc::clone(a));
-            }
-        }
-        self.chunks = fresh.into_iter().map(Arc::new).collect();
+        self.inner.maybe_grow();
+    }
+
+    /// Fraction of chunks still shared with a published view — the
+    /// `cow_coord_sharing` gauge.
+    pub fn sharing_ratio(&self) -> f64 {
+        self.inner.sharing_ratio()
     }
 }
 

@@ -19,11 +19,11 @@
 use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 use rustc_hash::FxHashMap;
 
 use crate::dbscan::RepairStats;
+use crate::obs::{Gauge, Metrics, PhaseClock, PublishStage, PublishTrace, Stopwatch};
 use crate::util::stats::LatencyHisto;
 
 use super::router::Router;
@@ -70,6 +70,10 @@ pub struct EngineOutcome {
     pub delete_latency: LatencyHisto,
     /// end-to-end publish (snapshot-emission) latency
     pub publish_latency: LatencyHisto,
+    /// per-stage breakdown of the final publish (route / delta-fold /
+    /// stitch, plus the façade's snapshot-CoW / events share when driven
+    /// through `serve`)
+    pub last_trace: PublishTrace,
 }
 
 impl EngineOutcome {
@@ -130,6 +134,11 @@ pub struct ShardedEngine {
     log_changes: bool,
     /// transitions of the latest publish, drained by `drain_label_changes`
     last_changes: Vec<LabelChange>,
+    /// shared lock-free metrics registry (one per engine; every worker and
+    /// DBSCAN core records into it)
+    obs: Arc<Metrics>,
+    /// per-stage breakdown of the most recent publish
+    last_trace: PublishTrace,
 }
 
 impl ShardedEngine {
@@ -143,6 +152,7 @@ impl ShardedEngine {
              ConnKind::Leveled provides them; use StitchMode::FullRebuild \
              for the flat ablation modes"
         );
+        let obs = Arc::new(Metrics::new(cfg.metrics));
         let (router, backend) = if shards == 1 {
             (
                 None,
@@ -152,6 +162,7 @@ impl ShardedEngine {
                     cfg.conn,
                     cfg.seed,
                     track,
+                    Arc::clone(&obs),
                 ))),
             )
         } else {
@@ -165,9 +176,12 @@ impl ShardedEngine {
                 let conn = cfg.conn;
                 let seed = cfg.seed;
                 let rtx = reply_tx.clone();
+                let wobs = Arc::clone(&obs);
                 let handle = std::thread::Builder::new()
                     .name(format!("shard-{shard}"))
-                    .spawn(move || run_worker(shard, dcfg, conn, seed, track, rx, rtx))
+                    .spawn(move || {
+                        run_worker(shard, dcfg, conn, seed, track, wobs, rx, rtx)
+                    })
                     .expect("failed to spawn shard worker");
                 txs.push(tx);
                 workers.push(handle);
@@ -189,6 +203,8 @@ impl ShardedEngine {
             pending_writes: 0,
             log_changes: false,
             last_changes: Vec::new(),
+            obs,
+            last_trace: PublishTrace::default(),
             cfg,
         }
     }
@@ -354,13 +370,25 @@ impl ShardedEngine {
     /// `Delta` mode (default): `O(Δ·log²n)` in changed points.
     /// `FullRebuild` mode: the old `O(n log n)` from-scratch stitch.
     pub fn publish(&mut self) -> Arc<GlobalSnapshot> {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
+        let mut clk = PhaseClock::maybe(self.obs.enabled());
+        let mut trace = PublishTrace::default();
         self.flush();
+        if let Some(c) = clk.as_mut() {
+            trace.record(PublishStage::Route, c.lap());
+        }
+        // workers re-accumulate the structural gauges while handling the
+        // barrier marker below; FIFO order makes the post-barrier read a
+        // consistent whole-fleet sample
+        self.obs.zero_structural();
         let snap = match self.cfg.stitch {
             StitchMode::Delta => {
                 let seq = self.next_seq;
                 self.next_seq += 1;
                 let deltas = self.collect_deltas(seq);
+                if let Some(c) = clk.as_mut() {
+                    trace.record(PublishStage::DeltaFold, c.lap());
+                }
                 let snap = Arc::new(self.stitcher.apply(&deltas, seq));
                 if self.log_changes {
                     self.last_changes = self.stitcher.drain_changes();
@@ -369,6 +397,9 @@ impl ShardedEngine {
             }
             StitchMode::FullRebuild => {
                 let snaps = self.full_dump();
+                if let Some(c) = clk.as_mut() {
+                    trace.record(PublishStage::DeltaFold, c.lap());
+                }
                 let seq = snaps[0].seq;
                 let snap = Arc::new(stitch_full(snaps, seq));
                 if self.log_changes {
@@ -380,7 +411,28 @@ impl ShardedEngine {
                 snap
             }
         };
-        self.publish_latency.record(t0.elapsed().as_nanos() as u64);
+        if let Some(c) = clk.as_mut() {
+            trace.record(PublishStage::Stitch, c.lap());
+        }
+        let total_ns = t0.elapsed_ns();
+        self.publish_latency.record(total_ns);
+        if self.obs.enabled() {
+            trace.set_total(total_ns);
+            self.obs.record_publish(total_ns);
+            for stage in
+                [PublishStage::Route, PublishStage::DeltaFold, PublishStage::Stitch]
+            {
+                self.obs.record_publish_stage(stage, trace.get(stage));
+            }
+            self.obs.set_gauge(Gauge::LivePoints, snap.live_points as u64);
+            self.obs.set_ratio(Gauge::GhostRatio, self.stats.ghost_ratio());
+            let (nodes, edges) = self.stitcher.graph_size();
+            self.obs.set_gauge(Gauge::StitchNodes, nodes as u64);
+            self.obs.set_gauge(Gauge::StitchEdges, edges as u64);
+            self.obs
+                .set_ratio(Gauge::CowLabelSharing, self.stitcher.last_label_sharing());
+            self.last_trace = trace;
+        }
         self.snapshot = Arc::clone(&snap);
         self.stats.publishes += 1;
         self.dirty = false;
@@ -425,6 +477,35 @@ impl ShardedEngine {
 
     pub fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    /// The engine's shared lock-free metrics registry — live mid-run
+    /// (workers record into it through the striped atomic histograms).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.obs
+    }
+
+    /// Per-stage breakdown of the most recent publish (zeroed until the
+    /// first publish, or when metrics are disabled).
+    pub fn last_trace(&self) -> &PublishTrace {
+        &self.last_trace
+    }
+
+    /// Fold the serve façade's post-publish share — CoW snapshot-view
+    /// construction and cluster-event derivation — into the latest trace
+    /// and the cumulative stage histograms. These stages run after the
+    /// engine's own total was taken, so they extend both the stage vector
+    /// and the total (keeping `stage_sum_ns ≤ total_ns`); they are never
+    /// counted against the engine's `publish` histogram.
+    pub fn note_facade_stages(&mut self, cow_ns: u64, events_ns: u64) {
+        if !self.obs.enabled() {
+            return;
+        }
+        self.last_trace.record(PublishStage::SnapshotCow, cow_ns);
+        self.last_trace.record(PublishStage::Events, events_ns);
+        self.last_trace.extend_total(cow_ns + events_ns);
+        self.obs.record_publish_stage(PublishStage::SnapshotCow, cow_ns);
+        self.obs.record_publish_stage(PublishStage::Events, events_ns);
     }
 
     /// Record per-ext label transitions at every publish, drained via
@@ -482,6 +563,7 @@ impl ShardedEngine {
             add_latency,
             delete_latency,
             publish_latency: self.publish_latency.clone(),
+            last_trace: self.last_trace.clone(),
         }
     }
 }
@@ -531,6 +613,9 @@ mod tests {
         assert_eq!(out.worker_reports.len(), 3);
         assert_eq!(out.add_latency.count(), 600 + out.stats.ghost_inserts);
         assert!(out.publish_latency.count() >= 1);
+        // metrics default on: the final trace partitions the publish
+        assert!(out.last_trace.total_ns() > 0);
+        assert!(out.last_trace.stage_sum_ns() <= out.last_trace.total_ns());
     }
 
     #[test]

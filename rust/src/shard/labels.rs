@@ -1,14 +1,14 @@
 //! Copy-on-write label store backing delta-published [`GlobalSnapshot`]s.
 //!
-//! A [`LabelMap`] is the `ext → global label` relation, sharded into
-//! `Arc`-wrapped hash-map chunks keyed by a 64-bit mix of the external id.
-//! Publishing a snapshot clones the chunk *pointer* vector (cheap) and
-//! shares every chunk with the previous snapshot; the stitcher then
-//! mutates its working copy through [`Arc::make_mut`], which deep-copies
-//! only the chunks that actually receive changed labels. Publication cost
-//! is therefore `O(Δ · chunk)` in changed points plus an `O(#chunks)`
-//! pointer clone — never `O(n)` re-emission of the full label set the
-//! pre-delta stitcher paid.
+//! A [`LabelMap`] is the `ext → global label` relation, a thin wrapper
+//! over the generic [`ChunkedCowMap`] (`Arc`-chunked hash maps keyed by a
+//! 64-bit mix of the external id). Publishing a snapshot clones the chunk
+//! *pointer* vector (cheap) and shares every chunk with the previous
+//! snapshot; the stitcher then mutates its working copy through
+//! `Arc::make_mut`, which deep-copies only the chunks that actually
+//! receive changed labels. Publication cost is therefore `O(Δ · chunk)`
+//! in changed points plus an `O(#chunks)` pointer clone — never `O(n)`
+//! re-emission of the full label set the pre-delta stitcher paid.
 //!
 //! The chunk count doubles (a full `O(n)` re-shard, amortized over the
 //! doublings) whenever mean occupancy exceeds `2 × TARGET_PER_CHUNK`, so
@@ -16,84 +16,54 @@
 //!
 //! [`GlobalSnapshot`]: super::stitch::GlobalSnapshot
 
-use std::sync::Arc;
-
-use rustc_hash::FxHashMap;
-
-use crate::util::rng::mix64;
+use crate::util::cow_map::ChunkedCowMap;
 
 use super::stitch::LabelChange;
 
 /// Target mean entries per chunk; growth triggers at twice this.
 const TARGET_PER_CHUNK: usize = 48;
-/// Initial chunk count (power of two).
-const MIN_CHUNKS: usize = 64;
 
 /// CoW `ext → label` map (−1 = noise; absent = not live). Cloning is
 /// `O(#chunks)` pointer copies — that clone *is* the published snapshot's
 /// label state.
 #[derive(Clone, Debug)]
 pub struct LabelMap {
-    chunks: Vec<Arc<FxHashMap<u64, i64>>>,
-    len: usize,
+    inner: ChunkedCowMap<i64>,
 }
 
 impl LabelMap {
     pub fn new() -> Self {
-        LabelMap {
-            chunks: (0..MIN_CHUNKS).map(|_| Arc::new(FxHashMap::default())).collect(),
-            len: 0,
-        }
-    }
-
-    #[inline]
-    fn chunk_ix(&self, ext: u64) -> usize {
-        // chunk count is always a power of two
-        (mix64(ext) as usize) & (self.chunks.len() - 1)
+        LabelMap { inner: ChunkedCowMap::new(TARGET_PER_CHUNK) }
     }
 
     /// Live entries.
     pub fn len(&self) -> usize {
-        self.len
+        self.inner.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.inner.is_empty()
     }
 
     pub fn get(&self, ext: u64) -> Option<i64> {
-        self.chunks[self.chunk_ix(ext)].get(&ext).copied()
+        self.inner.get(ext).copied()
     }
 
     /// Insert or update; returns the previous label. Deep-copies the
     /// target chunk iff it is shared with a published snapshot.
     pub fn set(&mut self, ext: u64, label: i64) -> Option<i64> {
-        let i = self.chunk_ix(ext);
-        let prev = Arc::make_mut(&mut self.chunks[i]).insert(ext, label);
-        if prev.is_none() {
-            self.len += 1;
-        }
-        prev
+        self.inner.set(ext, label)
     }
 
-    /// Remove; returns the previous label if present. Checks membership
-    /// before `Arc::make_mut` so removing an absent key never deep-copies
-    /// a snapshot-shared chunk.
+    /// Remove; returns the previous label if present. Removing an absent
+    /// key never deep-copies a snapshot-shared chunk.
     pub fn remove(&mut self, ext: u64) -> Option<i64> {
-        let i = self.chunk_ix(ext);
-        if !self.chunks[i].contains_key(&ext) {
-            return None;
-        }
-        let prev = Arc::make_mut(&mut self.chunks[i]).remove(&ext);
-        if prev.is_some() {
-            self.len -= 1;
-        }
-        prev
+        self.inner.remove(ext)
     }
 
     /// Unordered iteration over `(ext, label)`.
     pub fn iter(&self) -> impl Iterator<Item = (u64, i64)> + '_ {
-        self.chunks.iter().flat_map(|c| c.iter().map(|(&e, &l)| (e, l)))
+        self.inner.iter().map(|(e, &l)| (e, l))
     }
 
     /// Sorted `(ext, label)` pairs — `O(n log n)`; for quality evaluation
@@ -108,23 +78,25 @@ impl LabelMap {
     /// called by the stitcher between publishes (`O(n)` then, amortized
     /// `O(1)` per insertion over the doublings).
     pub fn maybe_grow(&mut self) {
-        if self.len <= self.chunks.len() * TARGET_PER_CHUNK * 2 {
-            return;
-        }
-        let new_n = self.chunks.len() * 2;
-        let mut fresh: Vec<FxHashMap<u64, i64>> =
-            (0..new_n).map(|_| FxHashMap::default()).collect();
-        for (e, l) in self.iter() {
-            fresh[(mix64(e) as usize) & (new_n - 1)].insert(e, l);
-        }
-        self.chunks = fresh.into_iter().map(Arc::new).collect();
+        self.inner.maybe_grow();
     }
 
     /// How many chunks are *not* shared with any snapshot — i.e. were
     /// deep-copied since the last clone (introspection for the delta
     /// publication tests and benches).
     pub fn unshared_chunks(&self) -> usize {
-        self.chunks.iter().filter(|c| Arc::strong_count(c) == 1).count()
+        self.inner.unshared_chunks()
+    }
+
+    /// Current chunk count (power of two).
+    pub fn num_chunks(&self) -> usize {
+        self.inner.num_chunks()
+    }
+
+    /// Fraction of chunks still shared with an earlier snapshot — the
+    /// `cow_label_sharing` gauge.
+    pub fn sharing_ratio(&self) -> f64 {
+        self.inner.sharing_ratio()
     }
 
     /// Per-ext transitions turning `prev` into `self` — the shared
@@ -180,9 +152,11 @@ mod tests {
             m.set(e, (e % 5) as i64);
         }
         let snap = m.clone(); // "publish"
+        assert!((m.sharing_ratio() - 1.0).abs() < 1e-12);
         // a single change must deep-copy exactly one chunk
         m.set(42, 99);
         assert_eq!(m.unshared_chunks(), 1, "one chunk deep-copied");
+        assert!(m.sharing_ratio() < 1.0);
         // the snapshot still sees the old value
         assert_eq!(snap.get(42), Some(2));
         assert_eq!(m.get(42), Some(99));

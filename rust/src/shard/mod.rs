@@ -112,6 +112,11 @@ pub struct ShardConfig {
     /// [`StitchMode::FullRebuild`] (enforced by `ShardedEngine::new`).
     pub conn: ConnKind,
     pub seed: u64,
+    /// live metrics (default on): workers record per-op latencies, stage
+    /// spans and structural gauges into the engine's shared
+    /// [`crate::obs::Metrics`] registry. Off = a no-op recorder (the
+    /// `obs_overhead` bench baseline).
+    pub metrics: bool,
 }
 
 impl ShardConfig {
@@ -126,6 +131,7 @@ impl ShardConfig {
             stitch: StitchMode::Delta,
             conn: ConnKind::Leveled,
             seed,
+            metrics: true,
         }
     }
 

@@ -185,6 +185,9 @@ pub struct Stitcher {
     log_changes: bool,
     changes: Vec<LabelChange>,
     rounds: u64,
+    /// label-map chunk-sharing ratio measured at the last publish, just
+    /// before the snapshot clone (the `cow_label_sharing` gauge)
+    last_label_sharing: f64,
 }
 
 impl Stitcher {
@@ -207,7 +210,21 @@ impl Stitcher {
             log_changes: false,
             changes: Vec::new(),
             rounds: 0,
+            last_label_sharing: 0.0,
         }
+    }
+
+    /// `(vertices, edges)` of the persistent stitch graph — the
+    /// `stitch_nodes` / `stitch_edges` structural gauges.
+    pub fn graph_size(&self) -> (usize, usize) {
+        (self.node_of.len(), self.conn.edge_count())
+    }
+
+    /// Fraction of label-map chunks still CoW-shared with previously
+    /// published snapshots, as measured at the last [`Self::apply`]
+    /// (1.0 = nothing was rewritten this round).
+    pub fn last_label_sharing(&self) -> f64 {
+        self.last_label_sharing
     }
 
     /// Toggle per-ext transition recording (drained by
@@ -457,6 +474,9 @@ impl Stitcher {
         let mut cluster_sizes: Vec<(i64, usize)> =
             self.sizes.iter().map(|(&l, &s)| (l, s)).collect();
         cluster_sizes.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        // measured before the clone below re-shares everything: chunks
+        // rewritten this round are the unshared ones
+        self.last_label_sharing = self.labels.sharing_ratio();
         GlobalSnapshot {
             seq,
             clusters: self.sizes.len(),

@@ -29,13 +29,14 @@
 //! `add_point_with_keys` — the per-op hot loop allocates nothing.
 
 use std::sync::mpsc::{Receiver, Sender};
-use std::time::Instant;
+use std::sync::Arc;
 
 use rustc_hash::{FxHashMap, FxHashSet};
 
 use crate::dbscan::{AnyDbscan, ConnKind, DbscanConfig, RepairStats};
 use crate::lsh::table::PointId;
 use crate::lsh::BucketKey;
+use crate::obs::{Gauge, Metrics, Stopwatch, UpdateStage};
 use crate::util::stats::LatencyHisto;
 
 /// One operation on a shard's structure. Inserts carry no coordinates —
@@ -214,6 +215,10 @@ pub struct ShardCore {
     keybuf: Vec<BucketKey>,
     scratch: Vec<i32>,
     pub report: WorkerReport,
+    /// the engine's shared live-metrics registry: per-op latencies are
+    /// mirrored here so `stats()` reads them **mid-run**, and structural
+    /// gauges are accumulated while answering publish-barrier markers
+    obs: Arc<Metrics>,
 }
 
 impl ShardCore {
@@ -223,12 +228,14 @@ impl ShardCore {
         conn: ConnKind,
         seed: u64,
         track: bool,
+        obs: Arc<Metrics>,
     ) -> Self {
         let (dim, t) = (cfg.dim, cfg.t);
         let mut db = AnyDbscan::new(conn, cfg, seed);
         if track {
             db.enable_stitch_tracking();
         }
+        db.set_metrics(obs.clone());
         ShardCore {
             shard,
             dim,
@@ -251,6 +258,7 @@ impl ShardCore {
                 busy_s: 0.0,
                 conn: RepairStats::default(),
             },
+            obs,
         }
     }
 
@@ -267,7 +275,7 @@ impl ShardCore {
 
     /// Apply one batch — ops plus any marker replies (via `reply`).
     pub fn apply(&mut self, batch: &ShardBatch, reply: &mut dyn FnMut(ShardReply)) {
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         // hash every insert row of the batch in one pass per hash function
         let n_ins = batch.inserts();
         debug_assert_eq!(
@@ -278,17 +286,19 @@ impl ShardCore {
         self.keybuf.clear();
         self.keybuf.resize(n_ins * self.t, 0);
         let hash_ns_per_insert = if n_ins > 0 {
-            let h0 = Instant::now();
+            let h0 = Stopwatch::start();
             self.db.hasher().keys_batch_into(
                 &batch.coords,
                 n_ins,
                 &mut self.scratch,
                 &mut self.keybuf,
             );
+            let hash_ns = h0.elapsed_ns();
+            self.obs.record_update_stage(UpdateStage::Hash, hash_ns);
             // amortize the batch hash over its inserts so the recorded
             // per-op add latency stays comparable with the single-instance
             // path (which hashes inside the timed add_point call)
-            (h0.elapsed().as_nanos() / n_ins as u128) as u64
+            hash_ns / n_ins as u64
         } else {
             0
         };
@@ -299,11 +309,11 @@ impl ShardCore {
                     let x = &batch.coords[row * self.dim..(row + 1) * self.dim];
                     let keys = &self.keybuf[row * self.t..(row + 1) * self.t];
                     row += 1;
-                    let o0 = Instant::now();
+                    let o0 = Stopwatch::start();
                     let pid = self.db.add_point_with_keys(x, keys);
-                    self.report
-                        .add_latency
-                        .record(o0.elapsed().as_nanos() as u64 + hash_ns_per_insert);
+                    let op_ns = o0.elapsed_ns() + hash_ns_per_insert;
+                    self.report.add_latency.record(op_ns);
+                    self.obs.record_add(op_ns);
                     if primary {
                         self.report.primary_inserts += 1;
                     } else {
@@ -329,26 +339,51 @@ impl ShardCore {
                     if self.track {
                         self.dirty.insert(ext);
                     }
-                    let o0 = Instant::now();
+                    let o0 = Stopwatch::start();
                     self.db.delete_point(pid);
-                    self.report
-                        .delete_latency
-                        .record(o0.elapsed().as_nanos() as u64);
+                    let op_ns = o0.elapsed_ns();
+                    self.report.delete_latency.record(op_ns);
+                    self.obs.record_delete(op_ns);
                     self.report.deletes += 1;
                     if self.track {
                         self.drain_dirty();
                     }
                 }
                 ShardOp::Snapshot { seq } => {
+                    self.sample_structural();
                     reply(ShardReply::Full(self.full_snapshot(seq)))
                 }
-                ShardOp::Delta { seq } => reply(ShardReply::Delta(self.delta(seq))),
+                ShardOp::Delta { seq } => {
+                    self.sample_structural();
+                    reply(ShardReply::Delta(self.delta(seq)))
+                }
                 ShardOp::Sync { seq } => {
                     reply(ShardReply::Sync { shard: self.shard, seq })
                 }
             }
         }
-        self.report.busy_s += t0.elapsed().as_secs_f64();
+        self.report.busy_s += t0.elapsed_s();
+    }
+
+    /// Accumulate this shard's structural gauges into the shared registry
+    /// — called while answering a publish-barrier marker, after the engine
+    /// zeroed the accumulators (`Metrics::zero_structural`). The barrier
+    /// semantics of the marker channel guarantee every worker's share is
+    /// in before the engine reads the merged sample.
+    fn sample_structural(&self) {
+        if !self.obs.enabled() {
+            return;
+        }
+        let per_level = self.db.conn_level_live();
+        self.obs
+            .add_gauge(Gauge::EttVertices, per_level.iter().sum::<usize>() as u64);
+        for (l, &n) in per_level.iter().enumerate() {
+            self.obs.add_level_verts(l, n as u64);
+        }
+        self.obs.add_gauge(Gauge::EttEdges, self.db.conn_edge_count() as u64);
+        let rs = self.db.repair_stats();
+        self.obs.max_gauge(Gauge::HdtLevels, rs.levels as u64);
+        self.obs.add_gauge(Gauge::EdgePromotions, rs.pushes);
     }
 
     /// Current stitch-visible state of a live ext.
@@ -419,10 +454,11 @@ pub fn run_worker(
     conn: ConnKind,
     seed: u64,
     track: bool,
+    obs: Arc<Metrics>,
     rx: Receiver<ShardBatch>,
     reply_tx: Sender<ShardReply>,
 ) -> WorkerReport {
-    let mut core = ShardCore::new(shard, cfg, conn, seed, track);
+    let mut core = ShardCore::new(shard, cfg, conn, seed, track, obs);
     for batch in rx.iter() {
         core.apply(&batch, &mut |r| {
             let _ = reply_tx.send(r);

@@ -1,0 +1,185 @@
+//! Generic chunked copy-on-write map — the shared machinery behind the
+//! stitcher's label store (`shard::labels::LabelMap`) and the serve
+//! façade's coordinate store (`serve::snapshot::CoordMap`).
+//!
+//! A [`ChunkedCowMap`] shards a `u64 → V` relation into `Arc`-wrapped
+//! hash-map chunks keyed by a 64-bit mix of the key. Cloning the map
+//! clones the chunk *pointer* vector (cheap) and shares every chunk with
+//! the clone; subsequent writes go through [`Arc::make_mut`], which
+//! deep-copies only the chunks that actually receive changes. That clone
+//! *is* a published snapshot's state: publication cost is `O(Δ · chunk)`
+//! in changed keys plus an `O(#chunks)` pointer copy — never `O(n)`.
+//!
+//! The chunk count doubles (a full `O(n)` re-shard, amortized over the
+//! doublings) whenever mean occupancy exceeds twice the configured
+//! target, so per-publish deep-copy work stays bounded as the live set
+//! grows. [`ChunkedCowMap::sharing_ratio`] reports the fraction of chunks
+//! still shared with an earlier clone — the CoW-sharing gauge exported by
+//! the observability layer.
+
+use std::sync::Arc;
+
+use rustc_hash::FxHashMap;
+
+use crate::util::rng::mix64;
+
+/// Initial chunk count (power of two).
+const MIN_CHUNKS: usize = 64;
+
+/// Chunked CoW `u64 → V` map. Cloning is `O(#chunks)` pointer copies.
+#[derive(Clone, Debug)]
+pub struct ChunkedCowMap<V> {
+    chunks: Vec<Arc<FxHashMap<u64, V>>>,
+    len: usize,
+    /// target mean entries per chunk; growth triggers at twice this
+    target_per_chunk: usize,
+}
+
+impl<V: Clone> ChunkedCowMap<V> {
+    pub fn new(target_per_chunk: usize) -> Self {
+        debug_assert!(target_per_chunk > 0);
+        ChunkedCowMap {
+            chunks: (0..MIN_CHUNKS).map(|_| Arc::new(FxHashMap::default())).collect(),
+            len: 0,
+            target_per_chunk,
+        }
+    }
+
+    #[inline]
+    fn chunk_ix(&self, key: u64) -> usize {
+        // chunk count is always a power of two
+        (mix64(key) as usize) & (self.chunks.len() - 1)
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, key: u64) -> Option<&V> {
+        self.chunks[self.chunk_ix(key)].get(&key)
+    }
+
+    /// Insert or update; returns the previous value. Deep-copies the
+    /// target chunk iff it is shared with a clone.
+    pub fn set(&mut self, key: u64, value: V) -> Option<V> {
+        let i = self.chunk_ix(key);
+        let prev = Arc::make_mut(&mut self.chunks[i]).insert(key, value);
+        if prev.is_none() {
+            self.len += 1;
+        }
+        prev
+    }
+
+    /// Remove; returns the previous value if present. Checks membership
+    /// before `Arc::make_mut` so removing an absent key never deep-copies
+    /// a snapshot-shared chunk.
+    pub fn remove(&mut self, key: u64) -> Option<V> {
+        let i = self.chunk_ix(key);
+        if !self.chunks[i].contains_key(&key) {
+            return None;
+        }
+        let prev = Arc::make_mut(&mut self.chunks[i]).remove(&key);
+        if prev.is_some() {
+            self.len -= 1;
+        }
+        prev
+    }
+
+    /// Unordered iteration over `(key, &value)`.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &V)> + '_ {
+        self.chunks.iter().flat_map(|c| c.iter().map(|(&k, v)| (k, v)))
+    }
+
+    /// Double the chunk count when mean occupancy exceeds the target —
+    /// call between publishes (`O(n)` then, amortized `O(1)` per
+    /// insertion over the doublings).
+    pub fn maybe_grow(&mut self) {
+        if self.len <= self.chunks.len() * self.target_per_chunk * 2 {
+            return;
+        }
+        let new_n = self.chunks.len() * 2;
+        let mut fresh: Vec<FxHashMap<u64, V>> =
+            (0..new_n).map(|_| FxHashMap::default()).collect();
+        for (k, v) in self.iter() {
+            fresh[(mix64(k) as usize) & (new_n - 1)].insert(k, v.clone());
+        }
+        self.chunks = fresh.into_iter().map(Arc::new).collect();
+    }
+
+    /// How many chunks are *not* shared with any clone — i.e. were
+    /// deep-copied since the last clone (introspection for the delta
+    /// publication tests, benches and the CoW gauges).
+    pub fn unshared_chunks(&self) -> usize {
+        self.chunks.iter().filter(|c| Arc::strong_count(c) == 1).count()
+    }
+
+    /// Current chunk count (always a power of two).
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Fraction of chunks still structurally shared with an earlier clone
+    /// — 1.0 right after a publish clone, dropping as writes deep-copy
+    /// chunks. This is the value behind the `cow_*_sharing` gauges.
+    pub fn sharing_ratio(&self) -> f64 {
+        1.0 - self.unshared_chunks() as f64 / self.num_chunks().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_remove_roundtrip() {
+        let mut m: ChunkedCowMap<i64> = ChunkedCowMap::new(48);
+        assert_eq!(m.get(7), None);
+        assert_eq!(m.set(7, 3), None);
+        assert_eq!(m.set(8, -1), None);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get(7), Some(&3));
+        assert_eq!(m.set(7, 4), Some(3));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.remove(7), Some(4));
+        assert_eq!(m.remove(7), None);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn clone_shares_until_written() {
+        let mut m: ChunkedCowMap<i64> = ChunkedCowMap::new(48);
+        for k in 0..2000u64 {
+            m.set(k, (k % 5) as i64);
+        }
+        let snap = m.clone(); // "publish"
+        assert_eq!(m.unshared_chunks(), 0);
+        assert!((m.sharing_ratio() - 1.0).abs() < 1e-12);
+        // a single change deep-copies exactly one chunk
+        m.set(42, 99);
+        assert_eq!(m.unshared_chunks(), 1);
+        assert!(m.sharing_ratio() < 1.0);
+        assert_eq!(snap.get(42), Some(&2));
+        assert_eq!(m.get(42), Some(&99));
+    }
+
+    #[test]
+    fn growth_preserves_content() {
+        let mut m: ChunkedCowMap<i64> = ChunkedCowMap::new(32);
+        for k in 0..20_000u64 {
+            m.set(k * 13, (k % 7) as i64 - 1);
+        }
+        let before = m.num_chunks();
+        m.maybe_grow();
+        assert!(m.num_chunks() > before);
+        assert_eq!(m.len(), 20_000);
+        for k in 0..20_000u64 {
+            assert_eq!(m.get(k * 13), Some(&((k % 7) as i64 - 1)));
+        }
+        assert_eq!(m.get(1), None);
+    }
+}

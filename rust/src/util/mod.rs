@@ -11,12 +11,17 @@
 //! * [`stats`] — streaming mean/variance, percentile sketches and latency
 //!   histograms for the coordinator and the bench harness;
 //! * [`proptest`] — a tiny property-testing harness (random case generation
-//!   with seed reporting and bounded shrinking).
+//!   with seed reporting and bounded shrinking);
+//! * [`cow_map`] — the generic chunked copy-on-write map behind the
+//!   stitcher's label store and the serve façade's coordinate store.
 
+pub mod cow_map;
 pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+
+pub use cow_map::ChunkedCowMap;
 
 /// Round `n` up to the next multiple of `m` (m > 0).
 pub fn round_up(n: usize, m: usize) -> usize {

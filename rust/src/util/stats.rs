@@ -1,7 +1,11 @@
 //! Streaming statistics: Welford mean/variance, log-bucketed latency
-//! histograms (HdrHistogram-lite) and simple run summaries with standard
-//! errors — shared by the coordinator's metrics endpoint and the bench
-//! harness.
+//! histograms (HdrHistogram-lite, plus a lock-free striped variant for
+//! concurrent recorders) and simple run summaries with standard errors —
+//! shared by the coordinator's metrics endpoint, the live `obs` metrics
+//! registry and the bench harness.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Streaming mean / variance (Welford).
 #[derive(Clone, Debug, Default)]
@@ -190,6 +194,123 @@ impl LatencyHisto {
     }
 }
 
+/// Write stripes in [`AtomicHisto`] — enough that a handful of shard
+/// worker threads rarely share a counter cache line.
+const STRIPES: usize = 8;
+
+/// One stripe of atomic bucket counters. Each stripe's counter block is a
+/// separate heap allocation, so writers pinned to different stripes never
+/// touch the same cache lines.
+struct Stripe {
+    /// flattened `[bucket][sub]` counts (see [`LatencyHisto`])
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    /// nanosecond sum; `u64` holds > 500 years of accumulated latency
+    sum: AtomicU64,
+}
+
+impl Stripe {
+    fn new() -> Self {
+        Stripe {
+            counts: (0..LatencyHisto::BUCKETS * LatencyHisto::SUB)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Lock-free multi-producer latency histogram with the exact bucket layout
+/// of [`LatencyHisto`], striped so concurrent recorders (shard workers)
+/// spread across independent counter blocks. All updates are `Relaxed`
+/// single-counter increments; [`AtomicHisto::snapshot`] folds the stripes
+/// into a plain [`LatencyHisto`] for quantile/summary queries, so a
+/// mid-run reader sees live per-op p50/p99 without stopping the writers.
+pub struct AtomicHisto {
+    stripes: Vec<Stripe>,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHisto {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHisto {
+    pub fn new() -> Self {
+        AtomicHisto {
+            stripes: (0..STRIPES).map(|_| Stripe::new()).collect(),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Stable per-thread stripe assignment (round-robin over first use),
+    /// so a worker thread always writes the same counter block.
+    #[inline]
+    fn stripe_ix() -> usize {
+        thread_local! {
+            static STRIPE: Cell<usize> = Cell::new(usize::MAX);
+        }
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        STRIPE.with(|s| {
+            let mut ix = s.get();
+            if ix == usize::MAX {
+                ix = NEXT.fetch_add(1, Ordering::Relaxed) % STRIPES;
+                s.set(ix);
+            }
+            ix
+        })
+    }
+
+    /// Record a nanosecond value — `O(1)`, wait-free, callable from any
+    /// thread through a shared reference.
+    pub fn record(&self, v: u64) {
+        let (b, s) = LatencyHisto::slot(v);
+        let st = &self.stripes[Self::stripe_ix()];
+        st.counts[b * LatencyHisto::SUB + s].fetch_add(1, Ordering::Relaxed);
+        st.total.fetch_add(1, Ordering::Relaxed);
+        st.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Total recorded samples across every stripe.
+    pub fn count(&self) -> u64 {
+        self.stripes.iter().map(|s| s.total.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Merge every stripe into a plain [`LatencyHisto`]. Recorders may
+    /// land counts mid-merge; the result is a point-in-time view whose
+    /// per-slot counts are each individually exact, which is all the
+    /// quantile reporting needs. With no concurrent writers the snapshot
+    /// is bit-identical to recording the same values into a single
+    /// [`LatencyHisto`].
+    pub fn snapshot(&self) -> LatencyHisto {
+        let mut h = LatencyHisto::new();
+        for st in &self.stripes {
+            for b in 0..LatencyHisto::BUCKETS {
+                for s in 0..LatencyHisto::SUB {
+                    h.counts[b][s] +=
+                        st.counts[b * LatencyHisto::SUB + s].load(Ordering::Relaxed);
+                }
+            }
+            h.total += st.total.load(Ordering::Relaxed);
+            h.sum += st.sum.load(Ordering::Relaxed) as u128;
+        }
+        h.min = self.min.load(Ordering::Relaxed);
+        h.max = self.max.load(Ordering::Relaxed);
+        h
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +354,36 @@ mod tests {
         assert_eq!(h.min(), 3);
         assert_eq!(h.max(), 10);
         assert_eq!(h.quantile(0.5), 3);
+    }
+
+    #[test]
+    fn atomic_histo_snapshot_matches_sequential() {
+        let a = AtomicHisto::new();
+        let mut h = LatencyHisto::new();
+        let mut r = Rng::new(7);
+        for _ in 0..50_000 {
+            let v = r.below(2_000_000);
+            a.record(v);
+            h.record(v);
+        }
+        let snap = a.snapshot();
+        assert_eq!(snap.count(), h.count());
+        assert_eq!(snap.min(), h.min());
+        assert_eq!(snap.max(), h.max());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(snap.quantile(q), h.quantile(q), "q={q}");
+        }
+        assert!((snap.mean() - h.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn atomic_histo_empty_snapshot() {
+        let a = AtomicHisto::new();
+        assert!(a.is_empty());
+        let snap = a.snapshot();
+        assert_eq!(snap.count(), 0);
+        assert_eq!(snap.min(), 0);
+        assert_eq!(snap.quantile(0.5), 0);
     }
 
     #[test]

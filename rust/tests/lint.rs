@@ -176,8 +176,8 @@ fn full_rebuild_stitching_confined_to_fallback_path() {
     );
     for (name, src) in [
         ("shard/worker.rs", include_str!("../src/shard/worker.rs")),
-        ("shard/driver.rs", include_str!("../src/shard/driver.rs")),
         ("shard/labels.rs", include_str!("../src/shard/labels.rs")),
+        ("serve/sharded.rs", include_str!("../src/serve/sharded.rs")),
     ] {
         assert!(
             !src.contains("stitch_full"),
@@ -193,4 +193,42 @@ fn full_rebuild_stitching_confined_to_fallback_path() {
         1,
         "stitch.rs must materialize sorted labels only in GlobalSnapshot::labels"
     );
+}
+
+/// All wall-clock timing in the serving and clustering layers goes
+/// through the obs span API (`obs::Stopwatch` / `obs::PhaseClock` /
+/// `span!`) — never ad-hoc `Instant::now()`. This keeps instrumentation
+/// centralized (one place to audit the overhead budget, one switch to
+/// disable it) and is what makes the `obs_overhead` bench gate
+/// meaningful. Bench harness and experiment drivers time themselves and
+/// are exempt.
+#[test]
+fn timing_goes_through_the_obs_span_api() {
+    for (name, src) in [
+        ("serve/mod.rs", include_str!("../src/serve/mod.rs")),
+        ("serve/builder.rs", include_str!("../src/serve/builder.rs")),
+        ("serve/driver.rs", include_str!("../src/serve/driver.rs")),
+        ("serve/events.rs", include_str!("../src/serve/events.rs")),
+        ("serve/inline.rs", include_str!("../src/serve/inline.rs")),
+        ("serve/sharded.rs", include_str!("../src/serve/sharded.rs")),
+        ("serve/snapshot.rs", include_str!("../src/serve/snapshot.rs")),
+        ("shard/engine.rs", include_str!("../src/shard/engine.rs")),
+        ("shard/labels.rs", include_str!("../src/shard/labels.rs")),
+        ("shard/mod.rs", include_str!("../src/shard/mod.rs")),
+        ("shard/router.rs", include_str!("../src/shard/router.rs")),
+        ("shard/stitch.rs", include_str!("../src/shard/stitch.rs")),
+        ("shard/worker.rs", include_str!("../src/shard/worker.rs")),
+        ("dbscan/arena.rs", include_str!("../src/dbscan/arena.rs")),
+        ("dbscan/connectivity.rs", include_str!("../src/dbscan/connectivity.rs")),
+        ("dbscan/invariants.rs", include_str!("../src/dbscan/invariants.rs")),
+        ("dbscan/leveled.rs", include_str!("../src/dbscan/leveled.rs")),
+        ("dbscan/mod.rs", include_str!("../src/dbscan/mod.rs")),
+    ] {
+        assert!(
+            !src.contains("Instant::now("),
+            "{name} reads the wall clock directly; time through \
+             obs::Stopwatch / obs::PhaseClock / span! so the overhead \
+             stays auditable and the metrics switch stays total"
+        );
+    }
 }
