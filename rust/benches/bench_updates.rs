@@ -523,6 +523,161 @@ fn obs_overhead_section(n: usize, reps: usize) -> Json {
 }
 
 // ---------------------------------------------------------------------
+// durability: steady-state WAL overhead + crash-recovery time
+// ---------------------------------------------------------------------
+
+/// Budgeted steady-state WAL tax (wall-time fraction of a persistent
+/// engine over persist-off on the identical churn workload, min-of-reps),
+/// asserted at full scale.
+const WAL_OVERHEAD_GATE_FULL: f64 = 0.05;
+/// Smoke backstop: tiny runs are fsync-latency- and jitter-dominated
+/// (one publish amortizes its group fsync over very few ops).
+const WAL_OVERHEAD_GATE_SMOKE: f64 = 0.50;
+
+/// The gate that applies to a WAL-overhead measurement at workload size
+/// `n` (shared by the recorder and the JSON validator).
+fn wal_gate(n: f64) -> f64 {
+    if n >= 10_000.0 {
+        WAL_OVERHEAD_GATE_FULL
+    } else {
+        WAL_OVERHEAD_GATE_SMOKE
+    }
+}
+
+/// Fresh persist scratch directory under the system temp root.
+fn persist_scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dyn-dbscan-bench-recovery-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Stream the churn workload through the serve façade (publish every
+/// 2000 ops — each publish is a WAL group-fsync barrier on persistent
+/// engines) and return the wall time plus the still-open engine.
+fn facade_churn_run(
+    ds: &Dataset,
+    ops: &[WlOp],
+    persist: Option<(&std::path::Path, u64)>,
+) -> (f64, Box<dyn ClusterEngine>) {
+    let mut b = EngineBuilder::new(DIM).seed(42);
+    if let Some((dir, every)) = persist {
+        b = b.persist(dir).persist_every(every);
+    }
+    let mut eng = b.build().unwrap();
+    let t0 = Instant::now();
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            WlOp::Insert(ext) => eng.upsert(ext, ds.point(ext as usize)),
+            WlOp::Delete(ext) => eng.remove(ext),
+        }
+        if (i + 1) % 2000 == 0 {
+            eng.publish();
+        }
+    }
+    eng.publish();
+    (t0.elapsed().as_secs_f64(), eng)
+}
+
+/// Crash a persistent run (`mem::forget` — no flush, no shutdown
+/// checkpoint) and time how long an identically-configured `build()`
+/// takes to recover. Returns (reopen wall s, replayed record count).
+fn timed_recovery(
+    ds: &Dataset,
+    ops: &[WlOp],
+    dir: &std::path::Path,
+    checkpoint_every: u64,
+) -> (f64, u64) {
+    let (_, eng) = facade_churn_run(ds, ops, Some((dir, checkpoint_every)));
+    std::mem::forget(eng);
+    let t0 = Instant::now();
+    let recovered = EngineBuilder::new(DIM)
+        .seed(42)
+        .persist(dir)
+        .build()
+        .unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let replayed = recovered.metrics().wal.replay_records;
+    let _ = recovered.finish();
+    let _ = std::fs::remove_dir_all(dir);
+    (wall_s, replayed)
+}
+
+/// The durability axis: steady-state WAL overhead (persist on vs off on
+/// the main workload, min-of-reps) and recovery wall time — cold full-log
+/// replay vs checkpoint + WAL-tail — at each live size in `sizes`.
+fn recovery_section(
+    ds: &Dataset,
+    ops: &[WlOp],
+    n: usize,
+    reps: usize,
+    sizes: &[usize],
+) -> Json {
+    let mut off_best = f64::MAX;
+    let mut on_best = f64::MAX;
+    for rep in 0..reps {
+        let (off_s, eng) = facade_churn_run(ds, ops, None);
+        let _ = eng.finish();
+        off_best = off_best.min(off_s);
+        let dir = persist_scratch(&format!("overhead-{rep}"));
+        let (on_s, eng) = facade_churn_run(ds, ops, Some((&dir, 8)));
+        let _ = eng.finish();
+        let _ = std::fs::remove_dir_all(&dir);
+        on_best = on_best.min(on_s);
+    }
+    let total_ops = ops.len() as f64;
+    let overhead = (on_best - off_best) / off_best;
+    let mut table = Table::new(
+        "durability: WAL overhead (churn, publish every 2000 ops)",
+        &["engine", "ops/s"],
+    );
+    table.row(vec!["persist off".into(), format!("{:.0}", total_ops / off_best)]);
+    table.row(vec![
+        format!("persist on ({:+.2}%)", overhead * 100.0),
+        format!("{:.0}", total_ops / on_best),
+    ]);
+    table.print();
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rec_table = Table::new(
+        "durability: crash-recovery wall time",
+        &["live", "cold replay s", "ckpt+tail s"],
+    );
+    for &live in sizes {
+        let (rds, rops) = build_workload(live, 0.2, 7);
+        let cold_dir = persist_scratch(&format!("cold-{live}"));
+        // checkpoint cadence pushed out of reach ⇒ recovery replays the
+        // full op log
+        let (cold_s, cold_records) = timed_recovery(&rds, &rops, &cold_dir, u64::MAX);
+        let ckpt_dir = persist_scratch(&format!("ckpt-{live}"));
+        let (ckpt_s, ckpt_records) = timed_recovery(&rds, &rops, &ckpt_dir, 8);
+        rec_table.row(vec![
+            live.to_string(),
+            format!("{cold_s:.3}"),
+            format!("{ckpt_s:.3}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("live", Json::num(live as f64)),
+            ("cold_replay_s", Json::num(cold_s)),
+            ("cold_replay_records", Json::num(cold_records as f64)),
+            ("ckpt_tail_replay_s", Json::num(ckpt_s)),
+            ("ckpt_tail_replay_records", Json::num(ckpt_records as f64)),
+        ]));
+    }
+    rec_table.print();
+
+    Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("persist_off_ops_per_s", Json::num(total_ops / off_best)),
+        ("persist_on_ops_per_s", Json::num(total_ops / on_best)),
+        ("overhead_frac", Json::num(overhead)),
+        ("gate_frac", Json::num(wal_gate(n as f64))),
+        ("recovery", Json::Arr(rows)),
+    ])
+}
+
+// ---------------------------------------------------------------------
 // adversarial chain churn: the replacement-search worst case
 // ---------------------------------------------------------------------
 
@@ -887,6 +1042,10 @@ fn update_throughput(
     let reps = if n < 10_000 { 5 } else { 3 };
     let facade_section = facade_overhead_section(n, reps);
     let obs_section = obs_overhead_section(n, reps);
+    // recovery time at the ends of the publish-axis size span (50k/500k
+    // live at full scale, tiny stand-ins under --smoke)
+    let recovery_sizes = [publish.0[0], *publish.0.last().unwrap()];
+    let durability_section = recovery_section(&ds, &ops, n, reps, &recovery_sizes);
 
     let record = Json::obj(vec![
         ("bench", Json::str("updates_throughput")),
@@ -910,6 +1069,7 @@ fn update_throughput(
         ("snapshot_publish", publish_section),
         ("facade_overhead", facade_section),
         ("obs_overhead", obs_section),
+        ("durability", durability_section),
         (
             "single_batched",
             Json::obj(vec![
@@ -1028,6 +1188,52 @@ fn validate_updates_json(path: &std::path::Path) {
         obs_frac * 100.0,
         obs_gate * 100.0
     );
+
+    // durability axis: steady-state WAL tax under the gate, recovery
+    // rows present with real replay work behind them
+    let dur = j
+        .get("durability")
+        .unwrap_or_else(|| panic!("missing durability in {}", path.display()));
+    for field in ["persist_off_ops_per_s", "persist_on_ops_per_s"] {
+        assert!(
+            dur.get(field).and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "durability missing {field}"
+        );
+    }
+    let wal_frac = dur
+        .get("overhead_frac")
+        .and_then(|v| v.as_f64())
+        .expect("durability missing overhead_frac");
+    let wal_gate_frac = wal_gate(dur.get("n").and_then(|v| v.as_f64()).unwrap_or(0.0));
+    assert!(
+        wal_frac <= wal_gate_frac,
+        "steady-state WAL overhead {:.1}% exceeds the {:.0}% gate",
+        wal_frac * 100.0,
+        wal_gate_frac * 100.0
+    );
+    let rec_rows = dur
+        .get("recovery")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("missing durability.recovery in {}", path.display()));
+    assert!(rec_rows.len() >= 2, "recovery axis needs >= 2 live sizes");
+    for row in rec_rows {
+        // cold replay re-executes every logged op; checkpoint recovery
+        // replays only the tail past the last spill
+        let cold = row
+            .get("cold_replay_records")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        let tail = row
+            .get("ckpt_tail_replay_records")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::MAX);
+        assert!(cold > 0.0, "cold recovery row replayed nothing");
+        assert!(
+            tail <= cold,
+            "checkpoint recovery should replay no more records than cold \
+             ({tail} vs {cold})"
+        );
+    }
 
     // publish-latency axis: both stitch modes at every live size
     let pub_rows = j

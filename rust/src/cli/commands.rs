@@ -136,6 +136,10 @@ fn cmd_stream(args: &Args) -> Result<()> {
     if let Some(s) = stitch {
         builder = builder.stitch(s);
     }
+    if let Some(dir) = args.get("persist") {
+        builder = builder.persist(dir);
+        println!("persisting into {dir} (WAL + periodic checkpoint; recovers on reopen)");
+    }
     println!(
         "streaming {} (n={}, d={}) in {} batches; backend={} conn={conn:?} \
          stitch={:?} hashing={kind:?}",

@@ -114,6 +114,9 @@ COMMANDS:
                  metrics registry as Prometheus text exposition:
                  latency quantiles, per-stage publish/update spans,
                  structural gauges)
+                 --persist DIR (durable engine: op-log WAL + periodic
+                 checkpoint in DIR; a rerun recovers the persisted
+                 state before streaming)
     verify     Run the Theorem-2 invariant checker on a random workload
                driven through the serve facade
                  --ops 2000 --seed 7

@@ -36,7 +36,7 @@ use rustc_hash::FxHashMap;
 use crate::ett::{skiplist::SkipSeq, treap::TreapSeq, SkipForest, TreapForest, VertexId};
 use crate::lsh::table::{LshTable, PointId};
 use crate::lsh::{BucketKey, GridHasher};
-use crate::obs::{Metrics, PhaseClock, UpdateStage};
+use crate::obs::{Metrics, PhaseClock, Stopwatch, UpdateStage};
 
 pub use arena::{AttachedSet, PointArena, ATTACH_INLINE};
 pub use connectivity::{Connectivity, PaperConn, RepairConn, RepairStats};
@@ -133,6 +133,14 @@ pub enum Op<'a> {
     Delete(PointId),
 }
 
+/// Every Nth update op (add or delete) has its individual ETT `link`/`cut`
+/// calls timed into the `ett_link_cut` stage histogram. Sampling keeps the
+/// two extra clock reads per forest edge off the common path while still
+/// feeding the histogram true per-splice spans (a cut's span includes any
+/// replacement search it triggers; the search share is *also* accumulated
+/// separately into `level_promotion`, timed inside the HDT layer).
+const SPAN_SAMPLE_EVERY: u32 = 32;
+
 /// The dynamic clustering structure. Generic over the connectivity layer
 /// (default: HDT-leveled spanning forests over the paper's skip-list Euler
 /// tour sequences — see [`connectivity`] for why the paper's verbatim
@@ -168,6 +176,10 @@ pub struct DynamicDbscan<C: Connectivity = DefaultConn> {
     /// `None` unless an *enabled* registry was attached, so the untimed
     /// path never reads a clock
     obs: Option<Arc<Metrics>>,
+    /// rolling update-op counter driving [`SPAN_SAMPLE_EVERY`]
+    op_tick: u32,
+    /// true while the current op's link/cut spans are being timed
+    span_ops: bool,
 }
 
 impl DynamicDbscan<DefaultConn> {
@@ -215,6 +227,8 @@ impl<C: Connectivity> DynamicDbscan<C> {
             stitch_dirty: Vec::new(),
             track_stitch: false,
             obs: None,
+            op_tick: 0,
+            span_ops: false,
         }
     }
 
@@ -469,6 +483,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
     pub fn add_point_with_keys(&mut self, x: &[f32], keys: &[BucketKey]) -> PointId {
         assert_eq!(x.len(), self.cfg.dim, "point dimensionality mismatch");
         assert_eq!(keys.len(), self.cfg.t);
+        self.tick_span_sampling();
         self.stats.adds += 1;
         let vertex = self.conn.add_vertex();
         let idx = self.arena.alloc(x, keys, vertex);
@@ -521,14 +536,66 @@ impl<C: Connectivity> DynamicDbscan<C> {
             self.eager_attach(idx);
         }
         if let (Some(clk), Some(m)) = (clk.as_mut(), self.obs.as_deref()) {
-            // the forest work splits into splice time and the connectivity
-            // layer's replacement-search share (timed inside the HDT search)
+            // per-splice `ett_link_cut` spans are sampled at the call sites
+            // (every SPAN_SAMPLE_EVERY-th op); the replacement-search share
+            // is timed inside the HDT search and drained here
             let search = self.conn.take_search_ns();
-            let forest = clk.lap();
-            m.record_update_stage(UpdateStage::EttLinkCut, forest.saturating_sub(search));
+            let _ = clk.lap();
             m.record_update_stage(UpdateStage::LevelPromotion, search);
         }
         idx
+    }
+
+    /// Arm per-splice span timing for every [`SPAN_SAMPLE_EVERY`]-th
+    /// update op (no-op, and no clock reads, while metrics are detached).
+    fn tick_span_sampling(&mut self) {
+        self.span_ops = if self.obs.is_some() {
+            self.op_tick = self.op_tick.wrapping_add(1);
+            self.op_tick % SPAN_SAMPLE_EVERY == 0
+        } else {
+            false
+        };
+    }
+
+    fn record_span(&self, sw: Stopwatch) {
+        if let Some(m) = self.obs.as_deref() {
+            m.record_update_stage(UpdateStage::EttLinkCut, sw.elapsed_ns());
+        }
+    }
+
+    fn timed_desire(&mut self, u: VertexId, v: VertexId) {
+        if self.span_ops {
+            let sw = Stopwatch::start();
+            self.conn.desire(u, v);
+            self.record_span(sw);
+        } else {
+            self.conn.desire(u, v);
+        }
+    }
+
+    fn timed_undesire(&mut self, u: VertexId, v: VertexId) {
+        if self.span_ops {
+            let sw = Stopwatch::start();
+            self.conn.undesire(u, v);
+            self.record_span(sw);
+        } else {
+            self.conn.undesire(u, v);
+        }
+    }
+
+    fn timed_undesire_hinted(
+        &mut self,
+        u: VertexId,
+        v: VertexId,
+        hints: &[(VertexId, VertexId)],
+    ) {
+        if self.span_ops {
+            let sw = Stopwatch::start();
+            self.conn.undesire_hinted(u, v, hints);
+            self.record_span(sw);
+        } else {
+            self.conn.undesire_hinted(u, v, hints);
+        }
     }
 
     /// Mark `c` core in all its buckets, then splice it into each bucket's
@@ -550,7 +617,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
         if let Some(h) = self.arena.take_attached_to(cs) {
             let hs = self.arena.slot_unchecked(h);
             let (vc, vh) = (self.arena.vertex(cs), self.arena.vertex(hs));
-            self.conn.undesire(vc, vh);
+            self.timed_undesire(vc, vh);
             self.stats.forest_cuts += 1;
             let removed = self.arena.attached_mut(hs).remove(c);
             debug_assert!(removed);
@@ -568,15 +635,15 @@ impl<C: Connectivity> DynamicDbscan<C> {
             let v1 = c1.map(|p| self.arena.vertex(self.arena.slot_unchecked(p)));
             let v2 = c2.map(|p| self.arena.vertex(self.arena.slot_unchecked(p)));
             if let Some(v1) = v1 {
-                self.conn.desire(v1, vc);
+                self.timed_desire(v1, vc);
                 self.stats.forest_links += 1;
             }
             if let Some(v2) = v2 {
-                self.conn.desire(vc, v2);
+                self.timed_desire(vc, v2);
                 self.stats.forest_links += 1;
             }
             if let (Some(v1), Some(v2)) = (v1, v2) {
-                self.conn.undesire_hinted(v1, v2, &[(v1, vc), (vc, v2)]);
+                self.timed_undesire_hinted(v1, v2, &[(v1, vc), (vc, v2)]);
                 self.stats.forest_cuts += 1;
             }
         }
@@ -600,7 +667,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
         if let Some(c) = target {
             let cs = self.arena.slot_unchecked(c);
             let (vp, vc) = (self.arena.vertex(ps), self.arena.vertex(cs));
-            self.conn.desire(vp, vc);
+            self.timed_desire(vp, vc);
             self.stats.forest_links += 1;
             self.arena.set_attached_to(ps, Some(c));
             self.arena.attached_mut(cs).insert(p);
@@ -646,6 +713,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
     /// `DeletePoint(x)` (lines 17-27).
     pub fn delete_point(&mut self, p: PointId) {
         assert!(self.arena.contains(p), "delete of unknown point {p}");
+        self.tick_span_sampling();
         self.stats.deletes += 1;
         let mut clk = PhaseClock::maybe(self.obs.is_some());
         let ps = self.arena.slot_unchecked(p);
@@ -698,7 +766,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
             if let Some(h) = self.arena.take_attached_to(ps) {
                 let hs = self.arena.slot_unchecked(h);
                 let (vp, vh) = (self.arena.vertex(ps), self.arena.vertex(hs));
-                self.conn.undesire(vp, vh);
+                self.timed_undesire(vp, vh);
                 self.stats.forest_cuts += 1;
                 let removed = self.arena.attached_mut(hs).remove(p);
                 debug_assert!(removed);
@@ -709,9 +777,10 @@ impl<C: Connectivity> DynamicDbscan<C> {
             }
         }
         if let (Some(clk), Some(m)) = (clk.as_mut(), self.obs.as_deref()) {
+            // as in `add_point_with_keys`: sampled spans feed
+            // `ett_link_cut`, the search share feeds `level_promotion`
             let search = self.conn.take_search_ns();
-            let forest = clk.lap();
-            m.record_update_stage(UpdateStage::EttLinkCut, forest.saturating_sub(search));
+            let _ = clk.lap();
             m.record_update_stage(UpdateStage::LevelPromotion, search);
         }
         // line 27: remove x from G and the point store (slot to free list)
@@ -759,7 +828,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
             // through the hint instead of a component walk.
             let mut bridge: Option<(VertexId, VertexId)> = None;
             if let (Some(v1), Some(v2)) = (v1, v2) {
-                self.conn.desire(v1, v2);
+                self.timed_desire(v1, v2);
                 self.stats.forest_links += 1;
                 bridge = Some((v1, v2));
             }
@@ -768,11 +837,11 @@ impl<C: Connectivity> DynamicDbscan<C> {
                 None => &[],
             };
             if let Some(v1) = v1 {
-                self.conn.undesire_hinted(v1, vc, hints);
+                self.timed_undesire_hinted(v1, vc, hints);
                 self.stats.forest_cuts += 1;
             }
             if let Some(v2) = v2 {
-                self.conn.undesire_hinted(vc, v2, hints);
+                self.timed_undesire_hinted(vc, v2, hints);
                 self.stats.forest_cuts += 1;
             }
         }
@@ -803,7 +872,7 @@ impl<C: Connectivity> DynamicDbscan<C> {
         for &nc in &orphans {
             let ns = self.arena.slot_unchecked(nc);
             let vn = self.arena.vertex(ns);
-            self.conn.undesire(vc, vn);
+            self.timed_undesire(vc, vn);
             self.stats.forest_cuts += 1;
             self.arena.set_attached_to(ns, None);
             if self.track_stitch {

@@ -18,8 +18,9 @@
 //!   grid-LSH bucket tables ([`lsh`]), baselines ([`baselines`]), metrics
 //!   ([`metrics`]), datasets ([`data`]), the streaming coordinator
 //!   ([`coordinator`]), the sharded parallel serving engine with
-//!   cross-shard cluster stitching ([`shard`]) and the benchmark harness
-//!   ([`bench_harness`]).
+//!   cross-shard cluster stitching ([`shard`]), the durability primitives
+//!   behind `EngineBuilder::persist` ([`persist`]: CRC-framed op-log WAL +
+//!   checkpoint spill) and the benchmark harness ([`bench_harness`]).
 //! * **L2/L1 (python, build-time only)** — JAX/Pallas compute graphs
 //!   (batched grid-hash quantizer, pairwise-distance tiles, PCA projection)
 //!   AOT-lowered to HLO text and executed through [`runtime`] on the PJRT
@@ -65,6 +66,26 @@
 //! println!("{}", m.render_prometheus());
 //! ```
 //!
+//! Add `.persist(dir)` and the same engine survives crashes: every write
+//! is op-logged before it is applied, publishes group-fsync the log, and
+//! reopening the directory recovers checkpoint + WAL tail back to the
+//! last published version:
+//!
+//! ```no_run
+//! use dyn_dbscan::serve::{Backend, ClusterEngine, EngineBuilder};
+//!
+//! let mut engine = EngineBuilder::new(2)
+//!     .backend(Backend::Sharded(4))
+//!     .persist("/var/lib/dyn-dbscan") // WAL + checkpoint live here
+//!     .build()
+//!     .unwrap();
+//! engine.upsert(1, &[0.0, 0.0]);
+//! let view = engine.publish(); // durable once this returns
+//! // …crash, restart: an identically-configured build() resumes at
+//! // `view.version()` with the same labels.
+//! # let _ = view;
+//! ```
+//!
 //! The structure-level API ([`dbscan::DynamicDbscan`]: `add_point` /
 //! `delete_point` / `get_cluster` over internal `PointId`s) remains for
 //! embedding and ablation; see `DESIGN.md` §Serving API for when to use
@@ -82,6 +103,7 @@ pub mod experiments;
 pub mod lsh;
 pub mod metrics;
 pub mod obs;
+pub mod persist;
 pub mod runtime;
 pub mod serve;
 pub mod shard;

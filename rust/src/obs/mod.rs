@@ -306,10 +306,13 @@ pub enum Gauge {
     CowLabelSharing,
     /// coord-map chunk-sharing ratio at last publish
     CowCoordSharing,
+    /// WAL records appended but not yet group-fsynced (durability lag in
+    /// ops; zeroed at every publish barrier by the fsync)
+    WalLag,
 }
 
 impl Gauge {
-    pub const COUNT: usize = 10;
+    pub const COUNT: usize = 11;
     pub const ALL: [Gauge; Self::COUNT] = [
         Gauge::LivePoints,
         Gauge::GhostRatio,
@@ -321,6 +324,7 @@ impl Gauge {
         Gauge::StitchEdges,
         Gauge::CowLabelSharing,
         Gauge::CowCoordSharing,
+        Gauge::WalLag,
     ];
 
     pub fn name(self) -> &'static str {
@@ -335,6 +339,7 @@ impl Gauge {
             Gauge::StitchEdges => "stitch_edges",
             Gauge::CowLabelSharing => "cow_label_sharing",
             Gauge::CowCoordSharing => "cow_coord_sharing",
+            Gauge::WalLag => "wal_lag",
         }
     }
 
@@ -375,6 +380,18 @@ pub struct Metrics {
     gauges: [AtomicU64; Gauge::COUNT],
     /// live ETT vertices per HDT level (deeper levels fold into the last)
     hdt_level_verts: [AtomicU64; Self::MAX_LEVELS],
+    /// WAL records appended (durable-layer throughput counter)
+    wal_records: AtomicU64,
+    /// framed WAL bytes appended
+    wal_bytes: AtomicU64,
+    /// group fsync barriers completed
+    wal_fsyncs: AtomicU64,
+    /// per-barrier fsync latency
+    fsync: AtomicHisto,
+    /// wall time of the last crash recovery (checkpoint load + WAL replay)
+    replay_ns: AtomicU64,
+    /// WAL records replayed by the last crash recovery
+    replay_records: AtomicU64,
 }
 
 impl Metrics {
@@ -392,6 +409,12 @@ impl Metrics {
             update_stages: std::array::from_fn(|_| AtomicHisto::new()),
             gauges: std::array::from_fn(|_| AtomicU64::new(0)),
             hdt_level_verts: std::array::from_fn(|_| AtomicU64::new(0)),
+            wal_records: AtomicU64::new(0),
+            wal_bytes: AtomicU64::new(0),
+            wal_fsyncs: AtomicU64::new(0),
+            fsync: AtomicHisto::new(),
+            replay_ns: AtomicU64::new(0),
+            replay_records: AtomicU64::new(0),
         }
     }
 
@@ -468,6 +491,59 @@ impl Metrics {
             .iter()
             .map(|&s| (s.name(), self.update_stages[s.ix()].snapshot()))
             .collect()
+    }
+
+    // ---- durability -------------------------------------------------
+
+    /// One WAL record appended (`bytes` = framed size). The unsynced
+    /// backlog is tracked separately via [`Gauge::WalLag`].
+    #[inline]
+    pub fn record_wal_append(&self, bytes: u64) {
+        if self.enabled {
+            self.wal_records.fetch_add(1, Ordering::Relaxed);
+            self.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// One group fsync barrier completed in `ns`, making `records` ops
+    /// durable.
+    #[inline]
+    pub fn record_wal_fsync(&self, ns: u64) {
+        if self.enabled {
+            self.wal_fsyncs.fetch_add(1, Ordering::Relaxed);
+            self.fsync.record(ns);
+        }
+    }
+
+    /// Crash recovery completed: `ns` of wall time to load the checkpoint
+    /// and replay `records` WAL records.
+    pub fn record_recovery(&self, ns: u64, records: u64) {
+        if self.enabled {
+            self.replay_ns.store(ns, Ordering::Relaxed);
+            self.replay_records.store(records, Ordering::Relaxed);
+        }
+    }
+
+    /// `(records appended, framed bytes, fsync barriers)`.
+    pub fn wal_counters(&self) -> (u64, u64, u64) {
+        (
+            self.wal_records.load(Ordering::Relaxed),
+            self.wal_bytes.load(Ordering::Relaxed),
+            self.wal_fsyncs.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Live merged view of the per-barrier fsync latencies.
+    pub fn fsync_histo(&self) -> LatencyHisto {
+        self.fsync.snapshot()
+    }
+
+    /// `(replay wall ns, records replayed)` of the last crash recovery.
+    pub fn recovery_stats(&self) -> (u64, u64) {
+        (
+            self.replay_ns.load(Ordering::Relaxed),
+            self.replay_records.load(Ordering::Relaxed),
+        )
     }
 
     // ---- gauges -----------------------------------------------------

@@ -1,0 +1,170 @@
+//! Periodic snapshot spill.
+//!
+//! A checkpoint serializes one *published* snapshot — the live point set
+//! with coordinates, the label and core assignments, the snapshot version
+//! and the WAL sequence floor it folds in — so recovery can rebuild the
+//! engine from the checkpoint and replay only the WAL tail past
+//! [`Checkpoint::wal_seq`] instead of the whole history.
+//!
+//! ## File format
+//!
+//! ```text
+//! [magic "DDCKPT01"][u64 body_len][body][u32 crc32(body)]
+//! ```
+//!
+//! body (all little-endian):
+//!
+//! ```text
+//! version u64 · wal_seq u64 · eps f32 · dim u32
+//! · n_points u32 · n×(ext u64 · label i64 · core u8 · dim×f32)
+//! ```
+//!
+//! Writes go to a temp file that is fsynced and atomically renamed over
+//! `checkpoint.ckpt`, so readers only ever observe the previous complete
+//! checkpoint or the new complete one. The loader verifies magic, length
+//! and CRC and returns `None` on any damage — the engine then falls back
+//! to a cold replay of the full WAL, which is always correct (the WAL is
+//! only truncated *after* a checkpoint rename succeeds).
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use super::crc32;
+
+/// Checkpoint file name inside a persist directory.
+pub const CHECKPOINT_FILE: &str = "checkpoint.ckpt";
+
+const MAGIC: &[u8; 8] = b"DDCKPT01";
+
+/// One serialized published snapshot. `labels[i]`/`cores[i]` describe
+/// `points[i]`: the row order is the only coupling between the three.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// `SnapshotView::version` of the spilled snapshot; recovery resumes
+    /// version numbering from here.
+    pub version: u64,
+    /// Last WAL sequence number folded into this snapshot; replay skips
+    /// records at or below it.
+    pub wal_seq: u64,
+    /// Engine ε, persisted for a sanity check at recovery.
+    pub eps: f32,
+    /// Point dimensionality.
+    pub dim: u32,
+    /// Live points as `(ext, coords)`.
+    pub points: Vec<(u64, Vec<f32>)>,
+    /// Cluster label per live point (same order as `points`).
+    pub labels: Vec<i64>,
+    /// Core flag per live point (same order as `points`).
+    pub cores: Vec<bool>,
+}
+
+impl Checkpoint {
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(32 + self.points.len() * (17 + self.dim as usize * 4));
+        b.extend_from_slice(&self.version.to_le_bytes());
+        b.extend_from_slice(&self.wal_seq.to_le_bytes());
+        b.extend_from_slice(&self.eps.to_le_bytes());
+        b.extend_from_slice(&self.dim.to_le_bytes());
+        b.extend_from_slice(&(self.points.len() as u32).to_le_bytes());
+        for (i, (ext, coords)) in self.points.iter().enumerate() {
+            b.extend_from_slice(&ext.to_le_bytes());
+            b.extend_from_slice(&self.labels[i].to_le_bytes());
+            b.push(self.cores[i] as u8);
+            for &x in coords {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    fn decode(body: &[u8]) -> Option<Checkpoint> {
+        let mut at = 0usize;
+        let take = |at: &mut usize, n: usize| -> Option<&[u8]> {
+            let end = at.checked_add(n)?;
+            if end > body.len() {
+                return None;
+            }
+            let s = &body[*at..end];
+            *at = end;
+            Some(s)
+        };
+        let version = u64::from_le_bytes(take(&mut at, 8)?.try_into().ok()?);
+        let wal_seq = u64::from_le_bytes(take(&mut at, 8)?.try_into().ok()?);
+        let eps = f32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?);
+        let dim = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?);
+        let n = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?) as usize;
+        let mut points = Vec::with_capacity(n.min(1 << 20));
+        let mut labels = Vec::with_capacity(n.min(1 << 20));
+        let mut cores = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            let ext = u64::from_le_bytes(take(&mut at, 8)?.try_into().ok()?);
+            let label = i64::from_le_bytes(take(&mut at, 8)?.try_into().ok()?);
+            let core = take(&mut at, 1)?[0] != 0;
+            let row = take(&mut at, dim as usize * 4)?;
+            let coords: Vec<f32> = row
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            points.push((ext, coords));
+            labels.push(label);
+            cores.push(core);
+        }
+        if at != body.len() {
+            return None;
+        }
+        Some(Checkpoint { version, wal_seq, eps, dim, points, labels, cores })
+    }
+}
+
+/// Atomically replace `<dir>/checkpoint.ckpt` with `ckpt`: write a temp
+/// file, fsync it, rename over the target, then fsync the directory so the
+/// rename itself is durable.
+pub fn write_checkpoint(dir: &Path, ckpt: &Checkpoint) -> io::Result<()> {
+    fs::create_dir_all(dir)?;
+    let body = ckpt.encode();
+    let tmp = dir.join("checkpoint.tmp");
+    {
+        let mut f = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&tmp)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(body.len() as u64).to_le_bytes())?;
+        f.write_all(&body)?;
+        f.write_all(&crc32(&body).to_le_bytes())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, dir.join(CHECKPOINT_FILE))?;
+    // fsync the directory entry; best-effort on platforms where opening a
+    // directory for sync is not supported
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Load `<dir>/checkpoint.ckpt` if it exists and is intact; any damage
+/// (missing file, bad magic, short body, CRC mismatch, trailing garbage)
+/// yields `None` and the caller falls back to cold WAL replay.
+pub fn load_checkpoint(dir: &Path) -> Option<Checkpoint> {
+    let mut buf = Vec::new();
+    File::open(dir.join(CHECKPOINT_FILE)).ok()?.read_to_end(&mut buf).ok()?;
+    if buf.len() < MAGIC.len() + 12 || &buf[..MAGIC.len()] != MAGIC {
+        return None;
+    }
+    let body_len =
+        u64::from_le_bytes(buf[MAGIC.len()..MAGIC.len() + 8].try_into().ok()?) as usize;
+    let start = MAGIC.len() + 8;
+    let end = start.checked_add(body_len)?;
+    if end + 4 != buf.len() {
+        return None;
+    }
+    let body = &buf[start..end];
+    let crc = u32::from_le_bytes(buf[end..end + 4].try_into().ok()?);
+    if crc32(body) != crc {
+        return None;
+    }
+    Checkpoint::decode(body)
+}

@@ -1,0 +1,334 @@
+//! Append-only op-log WAL.
+//!
+//! Every mutation that goes through a persistent engine is framed and
+//! appended *before* it is applied in memory (write-ahead), and the log is
+//! group-fsynced once per `publish()` — the publish is the durability
+//! barrier, matching the read-side freshness contract (state you could
+//! observe through a published snapshot is state that survives a crash).
+//!
+//! ## Frame format
+//!
+//! ```text
+//! [u32 len][u32 crc32(payload)][payload: len bytes]
+//! ```
+//!
+//! all little-endian. The payload starts with a one-byte record tag:
+//!
+//! | tag | record    | payload after tag                                  |
+//! |-----|-----------|----------------------------------------------------|
+//! | 1   | `Upsert`  | seq u64 · ext u64 · dim u32 · dim×f32              |
+//! | 2   | `Remove`  | seq u64 · ext u64                                  |
+//! | 3   | `Apply`   | seq u64 · n u32 · n ops, each `kind u8` then the `Upsert`/`Remove` body above (without seq) |
+//! | 4   | `Publish` | seq u64 · version u64                              |
+//!
+//! `Upsert`/`Remove`/`Apply` mirror the three `serve::ClusterEngine` write
+//! entry points one-to-one; `Publish` is the commit marker that records the
+//! snapshot version minted at each publish so recovery can resume with
+//! `SnapshotView::version` continuity (it is appended immediately before
+//! the group fsync, so a fully-recovered log replays to exactly the
+//! published state).
+//!
+//! The reader stops at the first torn or corrupt frame and reports the log
+//! as not clean — a crash mid-append damages at most the final record, and
+//! recovery proceeds from the longest valid prefix.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::crc32;
+
+/// WAL file name inside a persist directory.
+pub const WAL_FILE: &str = "wal.log";
+
+const TAG_UPSERT: u8 = 1;
+const TAG_REMOVE: u8 = 2;
+const TAG_APPLY: u8 = 3;
+const TAG_PUBLISH: u8 = 4;
+
+/// One op inside an [`WalRecord::Apply`] batch. Kept in batch order —
+/// a remove-then-upsert of the same ext is a replace, upsert-then-remove
+/// is a delete; splitting the batch into two lists would lose that.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalOp {
+    Upsert { ext: u64, coords: Vec<f32> },
+    Remove { ext: u64 },
+}
+
+/// One durable op-log entry. Sequence numbers are assigned by the engine,
+/// strictly increasing across the life of a persist directory; a
+/// checkpoint records the last sequence number it folds in, and replay
+/// skips records at or below that floor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// Single-point upsert (`ClusterEngine::upsert`).
+    Upsert { seq: u64, ext: u64, coords: Vec<f32> },
+    /// Single-point removal (`ClusterEngine::remove`).
+    Remove { seq: u64, ext: u64 },
+    /// One atomic batch (`ClusterEngine::apply`), kept whole and in op
+    /// order so replay preserves both the semantics and the batch
+    /// boundary (flush points) of the original run.
+    Apply { seq: u64, ops: Vec<WalOp> },
+    /// Commit marker: a publish happened here and minted `version`.
+    Publish { seq: u64, version: u64 },
+}
+
+impl WalRecord {
+    /// The record's sequence number.
+    pub fn seq(&self) -> u64 {
+        match self {
+            WalRecord::Upsert { seq, .. }
+            | WalRecord::Remove { seq, .. }
+            | WalRecord::Apply { seq, .. }
+            | WalRecord::Publish { seq, .. } => *seq,
+        }
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            WalRecord::Upsert { seq, ext, coords } => {
+                out.push(TAG_UPSERT);
+                put_u64(out, *seq);
+                put_u64(out, *ext);
+                put_coords(out, coords);
+            }
+            WalRecord::Remove { seq, ext } => {
+                out.push(TAG_REMOVE);
+                put_u64(out, *seq);
+                put_u64(out, *ext);
+            }
+            WalRecord::Apply { seq, ops } => {
+                out.push(TAG_APPLY);
+                put_u64(out, *seq);
+                put_u32(out, ops.len() as u32);
+                for op in ops {
+                    match op {
+                        WalOp::Upsert { ext, coords } => {
+                            out.push(TAG_UPSERT);
+                            put_u64(out, *ext);
+                            put_coords(out, coords);
+                        }
+                        WalOp::Remove { ext } => {
+                            out.push(TAG_REMOVE);
+                            put_u64(out, *ext);
+                        }
+                    }
+                }
+            }
+            WalRecord::Publish { seq, version } => {
+                out.push(TAG_PUBLISH);
+                put_u64(out, *seq);
+                put_u64(out, *version);
+            }
+        }
+    }
+
+    fn decode(payload: &[u8]) -> Option<WalRecord> {
+        let mut c = Cursor { buf: payload, at: 0 };
+        let rec = match c.u8()? {
+            TAG_UPSERT => WalRecord::Upsert {
+                seq: c.u64()?,
+                ext: c.u64()?,
+                coords: c.coords()?,
+            },
+            TAG_REMOVE => WalRecord::Remove { seq: c.u64()?, ext: c.u64()? },
+            TAG_APPLY => {
+                let seq = c.u64()?;
+                let n = c.u32()? as usize;
+                let mut ops = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    let op = match c.u8()? {
+                        TAG_UPSERT => {
+                            WalOp::Upsert { ext: c.u64()?, coords: c.coords()? }
+                        }
+                        TAG_REMOVE => WalOp::Remove { ext: c.u64()? },
+                        _ => return None,
+                    };
+                    ops.push(op);
+                }
+                WalRecord::Apply { seq, ops }
+            }
+            TAG_PUBLISH => WalRecord::Publish { seq: c.u64()?, version: c.u64()? },
+            _ => return None,
+        };
+        // trailing garbage means a framing bug, not a valid record
+        if c.at == payload.len() {
+            Some(rec)
+        } else {
+            None
+        }
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_coords(out: &mut Vec<u8>, coords: &[f32]) {
+    put_u32(out, coords.len() as u32);
+    for &x in coords {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Option<&[u8]> {
+        let end = self.at.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn coords(&mut self) -> Option<Vec<f32>> {
+        let dim = self.u32()? as usize;
+        // an absurd dim means a corrupt frame; don't let it drive a huge
+        // allocation before the bounds check in take() catches it
+        let bytes = self.take(dim.checked_mul(4)?)?;
+        Some(
+            bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect(),
+        )
+    }
+}
+
+/// Appending writer over `<dir>/wal.log`. Records buffer in user space
+/// until [`WalWriter::sync`] (the group fsync at publish); the number of
+/// appended-but-unsynced records is exposed as [`WalWriter::pending`] so
+/// the engine can surface it as the `wal_lag` gauge.
+pub struct WalWriter {
+    file: BufWriter<File>,
+    path: PathBuf,
+    pending: u64,
+    frame: Vec<u8>,
+}
+
+impl WalWriter {
+    /// Open (creating if needed) the WAL inside `dir` for appending.
+    pub fn open(dir: &Path) -> io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(WAL_FILE);
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(WalWriter {
+            file: BufWriter::new(file),
+            path,
+            pending: 0,
+            frame: Vec::new(),
+        })
+    }
+
+    /// Path of the underlying log file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Frame and append one record; returns the framed byte count. The
+    /// record is buffered — call [`sync`](WalWriter::sync) to make it
+    /// durable.
+    pub fn append(&mut self, rec: &WalRecord) -> io::Result<usize> {
+        self.frame.clear();
+        rec.encode(&mut self.frame);
+        let len = self.frame.len() as u32;
+        let crc = crc32(&self.frame);
+        self.file.write_all(&len.to_le_bytes())?;
+        self.file.write_all(&crc.to_le_bytes())?;
+        self.file.write_all(&self.frame)?;
+        self.pending += 1;
+        Ok(self.frame.len() + 8)
+    }
+
+    /// Appended-but-unsynced record count (the `wal_lag` gauge).
+    pub fn pending(&self) -> u64 {
+        self.pending
+    }
+
+    /// Group fsync: flush buffered frames and force them to stable
+    /// storage. Returns how many records this barrier made durable.
+    pub fn sync(&mut self) -> io::Result<u64> {
+        self.file.flush()?;
+        self.file.get_ref().sync_data()?;
+        let n = self.pending;
+        self.pending = 0;
+        Ok(n)
+    }
+
+    /// Drop every record (after a checkpoint has folded them in). The file
+    /// is truncated in place and the truncation is fsynced, so a crash
+    /// right after leaves an empty (clean) log rather than a stale one.
+    pub fn truncate(&mut self) -> io::Result<()> {
+        self.file.flush()?;
+        let f = self.file.get_mut();
+        f.set_len(0)?;
+        f.seek(SeekFrom::Start(0))?;
+        f.sync_data()?;
+        self.pending = 0;
+        Ok(())
+    }
+}
+
+/// Read every valid record from `<dir>/wal.log`. Returns the records plus
+/// a `clean` flag: `false` means the log ended in a torn or corrupt frame
+/// (expected after a crash mid-append) and recovery proceeds from the
+/// returned prefix. A missing file reads as empty and clean.
+pub fn read_wal(dir: &Path) -> io::Result<(Vec<WalRecord>, bool)> {
+    let path = dir.join(WAL_FILE);
+    let mut buf = Vec::new();
+    match File::open(&path) {
+        Ok(mut f) => {
+            f.read_to_end(&mut buf)?;
+        }
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok((Vec::new(), true)),
+        Err(e) => return Err(e),
+    }
+    let mut records = Vec::new();
+    let mut at = 0usize;
+    while at < buf.len() {
+        if at + 8 > buf.len() {
+            return Ok((records, false)); // torn header
+        }
+        let len = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap());
+        let start = at + 8;
+        let Some(end) = start.checked_add(len) else {
+            return Ok((records, false));
+        };
+        if end > buf.len() {
+            return Ok((records, false)); // torn payload
+        }
+        let payload = &buf[start..end];
+        if crc32(payload) != crc {
+            return Ok((records, false)); // bit rot / torn rewrite
+        }
+        match WalRecord::decode(payload) {
+            Some(rec) => records.push(rec),
+            None => return Ok((records, false)),
+        }
+        at = end;
+    }
+    Ok((records, true))
+}

@@ -2,12 +2,15 @@
 //! replacing the old `DbscanConfig` / `ShardConfig` / `EngineKind`
 //! triplet every consumer had to wire up by hand.
 
-use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::driver::{make_engine, EngineKind};
 use crate::dbscan::{ConnKind, DbscanConfig};
-use crate::shard::{ShardConfig, StitchMode};
+use crate::shard::{FaultPlan, ShardConfig, StitchMode};
 
+use super::durable::{DurableEngine, DEFAULT_CHECKPOINT_EVERY};
 use super::inline::InlineEngine;
 use super::sharded::ShardedServe;
 use super::ClusterEngine;
@@ -54,6 +57,10 @@ pub struct EngineBuilder {
     ghost_margin: u32,
     routing_dims: usize,
     metrics: bool,
+    persist: Option<PathBuf>,
+    checkpoint_every: u64,
+    publish_timeout_ms: u64,
+    faults: Option<FaultPlan>,
 }
 
 impl EngineBuilder {
@@ -77,6 +84,10 @@ impl EngineBuilder {
             ghost_margin: 2,
             routing_dims: 0,
             metrics: true,
+            persist: None,
+            checkpoint_every: DEFAULT_CHECKPOINT_EVERY,
+            publish_timeout_ms: 10_000,
+            faults: None,
         }
     }
 
@@ -171,6 +182,39 @@ impl EngineBuilder {
         self
     }
 
+    /// Make the engine durable: write-ahead-log every mutation into
+    /// `dir/wal.log`, spill periodic checkpoints into
+    /// `dir/checkpoint.ckpt`, and on `build()` **recover** whatever state
+    /// a previous engine persisted there (empty or missing directory =
+    /// fresh start). See [`super::DurableEngine`] for the contract.
+    pub fn persist(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.persist = Some(dir.into());
+        self
+    }
+
+    /// Publishes between checkpoint spills (default 8; persistent engines
+    /// only). Lower = shorter WAL replay after a crash, more spill work.
+    pub fn persist_every(mut self, publishes: u64) -> Self {
+        self.checkpoint_every = publishes.max(1);
+        self
+    }
+
+    /// How long a publish barrier waits per outstanding shard reply
+    /// before quarantining the worker as wedged (sharded backend;
+    /// default 10 s).
+    pub fn publish_timeout_ms(mut self, ms: u64) -> Self {
+        self.publish_timeout_ms = ms.max(1);
+        self
+    }
+
+    /// Test-only fault injection for one shard worker (see
+    /// `shard::FaultPlan`); ignored by the single backend.
+    #[doc(hidden)]
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// The publish strategy `build` will use (explicit choice, or the
     /// connectivity-dependent default).
     pub fn effective_stitch(&self) -> StitchMode {
@@ -193,17 +237,17 @@ impl EngineBuilder {
                  .conn(ConnKind::Leveled)"
             ));
         }
-        match self.backend {
+        let inner: Box<dyn ClusterEngine> = match self.backend {
             Backend::Single => {
                 let hashing = make_engine(&self.dbscan, self.seed, self.hashing)?;
-                Ok(Box::new(InlineEngine::new(
+                Box::new(InlineEngine::new(
                     self.dbscan,
                     self.conn,
                     stitch,
                     self.seed,
                     hashing,
                     self.metrics,
-                )))
+                ))
             }
             Backend::Sharded(shards) => {
                 // note: shard workers always hash natively; a non-native
@@ -218,7 +262,19 @@ impl EngineBuilder {
                 scfg.ghost_margin = self.ghost_margin;
                 scfg.routing_dims = self.routing_dims;
                 scfg.metrics = self.metrics;
-                Ok(Box::new(ShardedServe::new(scfg)))
+                scfg.publish_timeout_ms = self.publish_timeout_ms;
+                scfg.faults = self.faults;
+                Box::new(ShardedServe::new(scfg))
+            }
+        };
+        match self.persist {
+            None => Ok(inner),
+            Some(dir) => {
+                let eng = DurableEngine::open(&dir, inner, self.checkpoint_every)
+                    .with_context(|| {
+                        format!("opening persist directory {}", dir.display())
+                    })?;
+                Ok(Box::new(eng))
             }
         }
     }

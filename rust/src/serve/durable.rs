@@ -1,0 +1,356 @@
+//! [`DurableEngine`] — crash recovery for any serve backend.
+//!
+//! A decorator over `Box<dyn ClusterEngine>` that write-ahead-logs every
+//! mutation into `<dir>/wal.log` ([`crate::persist::wal`]) and
+//! periodically spills the published state into `<dir>/checkpoint.ckpt`
+//! ([`crate::persist::checkpoint`]). `EngineBuilder::persist(dir)` wraps
+//! the chosen backend in this type; nothing else about the engine changes.
+//!
+//! ## Durability contract
+//!
+//! Op records are appended (buffered) *before* the op is applied in
+//! memory; the group fsync runs inside `publish()`, before the published
+//! view is returned. State observable through a returned
+//! [`SnapshotView`] therefore survives a crash; writes accepted after the
+//! last publish may not (they are re-accepted by the caller or lost,
+//! exactly like a process that never got to publish them).
+//!
+//! ## Recovery
+//!
+//! On open, the wrapper loads the latest *valid* checkpoint (corrupt or
+//! truncated ones read as absent), re-ingests its points through the
+//! public write path, then replays the WAL tail past the checkpoint's
+//! sequence floor — `Publish` records replay as real publishes, so the
+//! engine resumes at the recorded [`SnapshotView::version`] (continuity
+//! is kept by re-anchoring the inner engine's fresh counter at the
+//! recovered version). Clustering is *recomputed* from the coordinates
+//! during re-ingestion, which inherits the engine's determinism instead
+//! of trusting serialized labels; with no checkpoint, a cold full-log
+//! replay reproduces the uninterrupted run op-for-op.
+//!
+//! Known limit: cluster events emitted to `watch()` subscribers carry the
+//! inner engine's un-rebased version after a recovery; views are always
+//! rebased.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::obs::{Gauge, Metrics, Stopwatch};
+use crate::persist::{
+    load_checkpoint, read_wal, write_checkpoint, Checkpoint, WalOp, WalRecord,
+    WalWriter,
+};
+
+use super::events::ClusterEvents;
+use super::snapshot::SnapshotView;
+use super::{ClusterEngine, MetricsSnapshot, ServeOutcome, Stats, Update, WalStats};
+
+/// Default publish cadence between checkpoint spills.
+pub(crate) const DEFAULT_CHECKPOINT_EVERY: u64 = 8;
+
+/// How many checkpoint points are re-ingested per `apply` batch during
+/// recovery (bounds peak `Update` buffer size, and on the sharded backend
+/// gives workers batch-level parallelism while replay streams).
+const RECOVER_CHUNK: usize = 2048;
+
+/// Durability decorator: WAL + periodic checkpoint around any backend.
+/// Constructed by `EngineBuilder::persist(dir)`; see the [module
+/// docs](self) for the contract.
+pub struct DurableEngine {
+    inner: Box<dyn ClusterEngine>,
+    wal: WalWriter,
+    dir: PathBuf,
+    /// next WAL sequence number (strictly increasing across restarts)
+    next_seq: u64,
+    /// recovered-version offset: external version = base + inner version
+    version_base: u64,
+    publishes_since_ckpt: u64,
+    checkpoint_every: u64,
+    /// the backend's metrics registry (None when the backend exposes none)
+    obs: Option<Arc<Metrics>>,
+}
+
+impl DurableEngine {
+    /// Open (or create) the persist directory and recover `inner` — a
+    /// **fresh, empty** engine — to the durable state recorded there.
+    pub fn open(
+        dir: &Path,
+        mut inner: Box<dyn ClusterEngine>,
+        checkpoint_every: u64,
+    ) -> io::Result<DurableEngine> {
+        let obs = inner.obs_registry();
+        let sw = Stopwatch::start();
+        let ckpt = load_checkpoint(dir);
+        let (records, _clean) = read_wal(dir)?;
+        let mut replayed: u64 = 0;
+        let mut next_seq: u64 = 1;
+        // version to resume at: the checkpoint's, superseded by any later
+        // Publish record in the tail
+        let mut recovered_version: u64 = 0;
+        let ckpt_floor = match &ckpt {
+            Some(c) => {
+                assert_eq!(
+                    c.dim as usize,
+                    inner.dim(),
+                    "checkpoint dim {} does not match the configured engine \
+                     dim {} — wrong persist directory?",
+                    c.dim,
+                    inner.dim()
+                );
+                for chunk in c.points.chunks(RECOVER_CHUNK) {
+                    let batch: Vec<Update<'_>> = chunk
+                        .iter()
+                        .map(|(ext, coords)| Update::Upsert {
+                            ext: *ext,
+                            coords: coords.as_slice(),
+                        })
+                        .collect();
+                    inner.apply(&batch);
+                }
+                if !c.points.is_empty() || c.version > 0 {
+                    // materialize the checkpoint state as one publish, so
+                    // tail replay starts from the same published baseline
+                    // the original run had when the checkpoint was taken
+                    inner.publish();
+                }
+                recovered_version = c.version;
+                next_seq = c.wal_seq + 1;
+                replayed += c.points.len() as u64;
+                c.wal_seq
+            }
+            None => 0,
+        };
+        for rec in &records {
+            let seq = rec.seq();
+            if seq <= ckpt_floor {
+                continue; // already folded into the checkpoint
+            }
+            next_seq = next_seq.max(seq + 1);
+            replayed += 1;
+            match rec {
+                WalRecord::Upsert { ext, coords, .. } => {
+                    inner.upsert(*ext, coords);
+                }
+                WalRecord::Remove { ext, .. } => inner.remove(*ext),
+                WalRecord::Apply { ops, .. } => {
+                    let batch: Vec<Update<'_>> = ops
+                        .iter()
+                        .map(|op| match op {
+                            WalOp::Upsert { ext, coords } => Update::Upsert {
+                                ext: *ext,
+                                coords: coords.as_slice(),
+                            },
+                            WalOp::Remove { ext } => Update::Remove { ext: *ext },
+                        })
+                        .collect();
+                    inner.apply(&batch);
+                }
+                WalRecord::Publish { version, .. } => {
+                    inner.publish();
+                    recovered_version = *version;
+                }
+            }
+        }
+        // re-anchor: the inner engine restarted its publish counter from
+        // zero; external versions continue where the log left off
+        let inner_version = inner.snapshot().version();
+        let version_base = recovered_version.saturating_sub(inner_version);
+        if let Some(m) = &obs {
+            m.record_recovery(sw.elapsed_ns(), replayed);
+        }
+        let wal = WalWriter::open(dir)?;
+        Ok(DurableEngine {
+            inner,
+            wal,
+            dir: dir.to_path_buf(),
+            next_seq,
+            version_base,
+            publishes_since_ckpt: 0,
+            checkpoint_every: checkpoint_every.max(1),
+            obs,
+        })
+    }
+
+    /// The persist directory this engine recovers from and spills into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn note_append(&self, bytes: usize) {
+        if let Some(m) = &self.obs {
+            m.record_wal_append(bytes as u64);
+            m.set_gauge(Gauge::WalLag, self.wal.pending());
+        }
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// Serialize `view` into `<dir>/checkpoint.ckpt` and (only once the
+    /// atomic rename has landed) drop the WAL records it folds in. A
+    /// failed spill keeps the WAL intact — recovery still works, the log
+    /// is just longer; the spill is retried a cadence later.
+    fn spill_checkpoint(&mut self, view: &SnapshotView, wal_seq: u64) {
+        let mut points = Vec::with_capacity(view.live_points());
+        let mut labels = Vec::with_capacity(view.live_points());
+        let mut cores = Vec::with_capacity(view.live_points());
+        view.for_each_point(&mut |ext, coords, label, core| {
+            points.push((ext, coords.to_vec()));
+            labels.push(label);
+            cores.push(core);
+        });
+        let ckpt = Checkpoint {
+            version: view.version(),
+            wal_seq,
+            eps: view.eps(),
+            dim: view.dim() as u32,
+            points,
+            labels,
+            cores,
+        };
+        if write_checkpoint(&self.dir, &ckpt).is_ok() {
+            // the checkpoint is durable; the log up to wal_seq is now
+            // redundant (everything newer was group-fsynced before it)
+            let _ = self.wal.truncate();
+        }
+        self.publishes_since_ckpt = 0;
+    }
+
+    /// The WAL-framed publish: fsync the op tail, publish, append the
+    /// commit marker with the minted version, fsync again, then maybe
+    /// spill a checkpoint.
+    fn publish_durable(&mut self) -> SnapshotView {
+        let mut view = self.inner.publish();
+        view.rebase_version(self.version_base);
+        let seq = self.next_seq();
+        let marker = WalRecord::Publish { seq, version: view.version() };
+        let bytes = self.wal.append(&marker).expect("WAL append failed");
+        self.note_append(bytes);
+        let sw = Stopwatch::start();
+        self.wal.sync().expect("WAL fsync failed");
+        if let Some(m) = &self.obs {
+            m.record_wal_fsync(sw.elapsed_ns());
+            m.set_gauge(Gauge::WalLag, 0);
+        }
+        self.publishes_since_ckpt += 1;
+        if self.publishes_since_ckpt >= self.checkpoint_every {
+            self.spill_checkpoint(&view, seq);
+        }
+        view
+    }
+}
+
+impl ClusterEngine for DurableEngine {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn upsert(&mut self, ext: u64, coords: &[f32]) {
+        let seq = self.next_seq();
+        let rec = WalRecord::Upsert { seq, ext, coords: coords.to_vec() };
+        let bytes = self.wal.append(&rec).expect("WAL append failed");
+        self.note_append(bytes);
+        self.inner.upsert(ext, coords);
+    }
+
+    fn remove(&mut self, ext: u64) {
+        let seq = self.next_seq();
+        let bytes = self
+            .wal
+            .append(&WalRecord::Remove { seq, ext })
+            .expect("WAL append failed");
+        self.note_append(bytes);
+        self.inner.remove(ext);
+    }
+
+    fn apply(&mut self, batch: &[Update<'_>]) {
+        let seq = self.next_seq();
+        let ops: Vec<WalOp> = batch
+            .iter()
+            .map(|u| match *u {
+                Update::Upsert { ext, coords } => {
+                    WalOp::Upsert { ext, coords: coords.to_vec() }
+                }
+                Update::Remove { ext } => WalOp::Remove { ext },
+            })
+            .collect();
+        let bytes = self
+            .wal
+            .append(&WalRecord::Apply { seq, ops })
+            .expect("WAL append failed");
+        self.note_append(bytes);
+        self.inner.apply(batch);
+    }
+
+    fn contains(&self, ext: u64) -> bool {
+        self.inner.contains(ext)
+    }
+
+    fn publish(&mut self) -> SnapshotView {
+        self.publish_durable()
+    }
+
+    fn snapshot(&self) -> SnapshotView {
+        let mut view = self.inner.snapshot();
+        view.rebase_version(self.version_base);
+        view
+    }
+
+    fn watch(&mut self) -> ClusterEvents {
+        self.inner.watch()
+    }
+
+    fn pending_writes(&self) -> u64 {
+        self.inner.pending_writes()
+    }
+
+    fn stats(&self) -> Stats {
+        self.inner.stats()
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        let mut m = self.inner.metrics();
+        if let Some(reg) = &self.obs {
+            let (records, bytes, fsyncs) = reg.wal_counters();
+            let (replay_ns, replay_records) = reg.recovery_stats();
+            m.wal = WalStats {
+                records,
+                bytes,
+                fsyncs,
+                fsync_latency: reg.fsync_histo(),
+                replay_ns,
+                replay_records,
+            };
+        }
+        m
+    }
+
+    fn verify(&self) -> Result<(), String> {
+        self.inner.verify()
+    }
+
+    fn obs_registry(&self) -> Option<Arc<Metrics>> {
+        self.obs.clone()
+    }
+
+    fn finish(mut self: Box<Self>) -> ServeOutcome {
+        // route the final implicit publish through the WAL path so the
+        // commit marker (and version continuity) reaches the log
+        if self.inner.pending_writes() > 0 || self.inner.stats().publishes == 0 {
+            self.publish_durable();
+        } else {
+            let _ = self.wal.sync();
+        }
+        // a shutdown checkpoint makes the next open replay-free
+        let view = self.snapshot();
+        let last_seq = self.next_seq - 1;
+        self.spill_checkpoint(&view, last_seq);
+        let mut out = self.inner.finish();
+        out.snapshot.rebase_version(self.version_base);
+        out
+    }
+}

@@ -27,7 +27,7 @@ use crate::util::stats::LatencyHisto;
 
 use super::events::{derive_events, ClusterEvents, EventHub};
 use super::snapshot::{CoordMap, SnapshotView};
-use super::{ClusterEngine, MetricsSnapshot, ServeOutcome, Stats, Update};
+use super::{ClusterEngine, Health, MetricsSnapshot, ServeOutcome, Stats, Update};
 
 pub(crate) struct InlineEngine {
     db: AnyDbscan,
@@ -469,6 +469,9 @@ impl ClusterEngine for InlineEngine {
             delete_latency: self.delete_latency.clone(),
             publish_latency: self.publish_latency.clone(),
             conn: self.db.repair_stats(),
+            // no worker threads to lose: the inline backend is healthy
+            // for as long as it exists
+            health: Health::Ok,
         }
     }
 
@@ -485,6 +488,10 @@ impl ClusterEngine for InlineEngine {
 
     fn verify(&self) -> Result<(), String> {
         self.db.verify().map_err(|e| e.to_string())
+    }
+
+    fn obs_registry(&self) -> Option<Arc<Metrics>> {
+        Some(Arc::clone(&self.obs))
     }
 
     fn finish(mut self: Box<Self>) -> ServeOutcome {

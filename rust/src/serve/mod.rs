@@ -52,6 +52,7 @@
 //! ([`MetricsSnapshot::render_prometheus`]).
 
 pub mod builder;
+mod durable;
 pub mod driver;
 pub mod events;
 mod inline;
@@ -59,12 +60,15 @@ mod sharded;
 pub mod snapshot;
 
 pub use builder::{Backend, EngineBuilder};
+pub use durable::DurableEngine;
 pub use events::{ClusterEvent, ClusterEvents};
 pub use snapshot::{SnapshotStats, SnapshotView};
 
 pub use crate::coordinator::driver::EngineKind;
 pub use crate::dbscan::ConnKind;
-pub use crate::shard::StitchMode;
+pub use crate::shard::{EngineError, StitchMode};
+#[doc(hidden)]
+pub use crate::shard::FaultPlan;
 
 use crate::dbscan::RepairStats;
 use crate::obs::PublishTrace;
@@ -77,6 +81,43 @@ use crate::util::stats::LatencyHisto;
 pub enum Update<'a> {
     Upsert { ext: u64, coords: &'a [f32] },
     Remove { ext: u64 },
+}
+
+/// Backend health, reported on [`Stats::health`].
+///
+/// The sharded backend degrades instead of panicking when a worker dies
+/// or wedges (send/recv channel errors, publish-barrier timeout): the
+/// failed shards are quarantined, writes routed to them are dropped, and
+/// reads keep serving the last published snapshot. The engine respawns
+/// quarantined workers at the start of the next publish — re-seeding each
+/// from the façade's authoritative live-point state (itself recovered
+/// from checkpoint + WAL when persistence is on) — after which health
+/// returns to `Ok`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// every shard worker answering
+    Ok,
+    /// these shard workers are down or wedged; their write slice is
+    /// stale until the next publish respawns them
+    Degraded {
+        /// quarantined shard ids, ascending
+        shards: Vec<u32>,
+    },
+}
+
+impl Health {
+    /// `true` when every worker is answering.
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Health::Ok)
+    }
+
+    /// Number of quarantined shards (0 when healthy).
+    pub fn degraded_shards(&self) -> usize {
+        match self {
+            Health::Ok => 0,
+            Health::Degraded { shards } => shards.len(),
+        }
+    }
 }
 
 /// The unified metrics surface of a serve engine — op counters plus the
@@ -114,6 +155,8 @@ pub struct Stats {
     pub publish_latency: LatencyHisto,
     /// connectivity-layer counters (summed across shards at finish)
     pub conn: RepairStats,
+    /// backend health: `Degraded { shards }` while any worker is down
+    pub health: Health,
 }
 
 impl Stats {
@@ -173,6 +216,13 @@ impl Stats {
             "Writes accepted since the last publish",
             "gauge",
             self.pending_writes as f64,
+        );
+        prom_scalar(
+            &mut out,
+            "dyndbscan_degraded_shards",
+            "Quarantined (down or wedged) shard workers",
+            "gauge",
+            self.health.degraded_shards() as f64,
         );
         prom_summary(
             &mut out,
@@ -248,6 +298,24 @@ fn prom_summary(
     prom_summary_series(out, name, extra, h);
 }
 
+/// Durability-layer counters pulled from the registry — all zero unless
+/// the engine was built with [`EngineBuilder::persist`].
+#[derive(Clone, Debug, Default)]
+pub struct WalStats {
+    /// op records appended to the WAL
+    pub records: u64,
+    /// framed WAL bytes appended
+    pub bytes: u64,
+    /// group fsync barriers completed (one per publish)
+    pub fsyncs: u64,
+    /// per-barrier fsync latency
+    pub fsync_latency: LatencyHisto,
+    /// wall time of the last crash recovery (checkpoint load + replay)
+    pub replay_ns: u64,
+    /// WAL records replayed by the last crash recovery
+    pub replay_records: u64,
+}
+
 /// A pull-model snapshot of everything the backend's lock-free
 /// [`crate::obs::Metrics`] registry holds: the [`Stats`] counters and
 /// latency histograms, cumulative per-stage publish/update breakdowns,
@@ -267,6 +335,8 @@ pub struct MetricsSnapshot {
     pub gauges: Vec<(&'static str, f64)>,
     /// live ETT vertices per HDT level (deeper levels fold into the last)
     pub hdt_level_verts: Vec<u64>,
+    /// durability-layer counters (zero without `persist`)
+    pub wal: WalStats,
 }
 
 impl MetricsSnapshot {
@@ -280,6 +350,7 @@ impl MetricsSnapshot {
             update_stages: Vec::new(),
             gauges: Vec::new(),
             hdt_level_verts: Vec::new(),
+            wal: WalStats::default(),
         }
     }
 
@@ -344,6 +415,50 @@ impl MetricsSnapshot {
             for (level, v) in self.hdt_level_verts.iter().enumerate() {
                 out.push_str(&format!("{name}{{level=\"{level}\"}} {v}\n"));
             }
+        }
+        if self.wal.records > 0 || self.wal.replay_records > 0 {
+            prom_scalar(
+                &mut out,
+                "dyndbscan_wal_records_total",
+                "Op records appended to the WAL",
+                "counter",
+                self.wal.records as f64,
+            );
+            prom_scalar(
+                &mut out,
+                "dyndbscan_wal_bytes_total",
+                "Framed WAL bytes appended",
+                "counter",
+                self.wal.bytes as f64,
+            );
+            prom_scalar(
+                &mut out,
+                "dyndbscan_wal_fsyncs_total",
+                "Group fsync barriers completed",
+                "counter",
+                self.wal.fsyncs as f64,
+            );
+            prom_summary(
+                &mut out,
+                "dyndbscan_wal_fsync_ns",
+                "Per-barrier group fsync latency",
+                None,
+                &self.wal.fsync_latency,
+            );
+            prom_scalar(
+                &mut out,
+                "dyndbscan_recovery_replay_ns",
+                "Wall time of the last crash recovery",
+                "gauge",
+                self.wal.replay_ns as f64,
+            );
+            prom_scalar(
+                &mut out,
+                "dyndbscan_recovery_replay_records",
+                "WAL records replayed by the last crash recovery",
+                "gauge",
+                self.wal.replay_records as f64,
+            );
         }
         out
     }
@@ -419,6 +534,14 @@ pub trait ClusterEngine {
     /// the single backend; the sharded backend returns `Err` (workers own
     /// their structures).
     fn verify(&self) -> Result<(), String>;
+
+    /// The backend's shared metrics registry, if it has one — the hook
+    /// the durability wrapper uses to record WAL/fsync/recovery metrics
+    /// into the *same* registry its inner engine reports from.
+    #[doc(hidden)]
+    fn obs_registry(&self) -> Option<std::sync::Arc<crate::obs::Metrics>> {
+        None
+    }
 
     /// Publish any pending writes, stop the backend and hand back the
     /// final view plus complete stats.

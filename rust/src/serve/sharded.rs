@@ -15,7 +15,7 @@ use crate::util::stats::LatencyHisto;
 
 use super::events::{derive_events, ClusterEvents, EventHub};
 use super::snapshot::{CoordMap, SnapshotView};
-use super::{ClusterEngine, MetricsSnapshot, ServeOutcome, Stats, Update};
+use super::{ClusterEngine, Health, MetricsSnapshot, ServeOutcome, Stats, Update};
 
 pub(crate) struct ShardedServe {
     eng: ShardedEngine,
@@ -52,7 +52,38 @@ impl ShardedServe {
         }
     }
 
+    /// Current health: `Degraded` lists the quarantined shards whose
+    /// workers died or wedged (reads still serve the last snapshot).
+    fn health(&self) -> Health {
+        if self.eng.is_degraded() {
+            Health::Degraded { shards: self.eng.down_shards().to_vec() }
+        } else {
+            Health::Ok
+        }
+    }
+
+    /// Respawn every shard quarantined **before** this publish, re-seeding
+    /// each from the façade's coordinate store. A fault detected during
+    /// the barrier of the current publish therefore surfaces as
+    /// `Degraded` at least once; the *next* publish heals it.
+    fn heal_down_shards(&mut self) {
+        let down: Vec<u32> = self.eng.down_shards().to_vec();
+        for s in down {
+            let coords = &self.coords;
+            // a failed respawn leaves the shard quarantined (and the
+            // fault logged in the engine) — retried at the next publish
+            let _ = self.eng.respawn_shard(s, |ext, buf| match coords.get(ext) {
+                Some(row) => {
+                    buf.extend_from_slice(row);
+                    true
+                }
+                None => false,
+            });
+        }
+    }
+
     fn publish_inner(&mut self) -> SnapshotView {
+        self.heal_down_shards();
         let t0 = Stopwatch::start();
         let obs_on = self.eng.metrics().enabled();
         let snap = self.eng.publish();
@@ -193,6 +224,7 @@ impl ClusterEngine for ShardedServe {
             publish_latency: self.publish_latency.clone(),
             // conn repair counters still merge at finish
             conn: RepairStats::default(),
+            health: self.health(),
         }
     }
 
@@ -214,11 +246,16 @@ impl ClusterEngine for ShardedServe {
             .to_string())
     }
 
+    fn obs_registry(&self) -> Option<Arc<crate::obs::Metrics>> {
+        Some(Arc::clone(self.eng.metrics()))
+    }
+
     fn finish(mut self: Box<Self>) -> ServeOutcome {
         if self.pending > 0 || self.eng.stats().publishes == 0 {
             // publish through the façade so the view and watchers update
             self.publish_inner();
         }
+        let health = self.health();
         let this = *self;
         let ShardedServe { eng, view, publish_latency, inserts, deletes, .. } = this;
         let shards = eng.shards();
@@ -235,6 +272,7 @@ impl ClusterEngine for ShardedServe {
             delete_latency: out.delete_latency,
             publish_latency,
             conn,
+            health,
         };
         ServeOutcome { snapshot: view, stats }
     }

@@ -165,6 +165,25 @@ impl SnapshotView {
         self.pending = pending;
     }
 
+    /// Shift the version by a recovered base — the durability wrapper's
+    /// continuity hook: after crash recovery the inner engine restarts its
+    /// publish counter, and the wrapper re-anchors it at the version the
+    /// WAL says was last published.
+    pub(crate) fn rebase_version(&mut self, base: u64) {
+        self.version += base;
+    }
+
+    /// Visit every live point as `(ext, coords, label, is_core)` — the
+    /// checkpoint writer's serialization walk. Unordered.
+    pub(crate) fn for_each_point(&self, f: &mut dyn FnMut(u64, &[f32], i64, bool)) {
+        for (ext, coords) in self.coords.iter() {
+            // labels and coords are published from the same barrier, so a
+            // live coordinate row always has a label
+            let label = self.labels.get(ext).unwrap_or(-1);
+            f(ext, coords, label, self.cores.get(ext).is_some());
+        }
+    }
+
     /// Publish counter of the producing engine; strictly increasing, and
     /// equal versions answer identically.
     pub fn version(&self) -> u64 {
@@ -235,6 +254,11 @@ impl SnapshotView {
     /// Data dimensionality of the producing engine.
     pub fn dim(&self) -> usize {
         self.dim
+    }
+
+    /// Neighborhood radius of the producing engine (checkpoint metadata).
+    pub(crate) fn eps(&self) -> f32 {
+        self.eps
     }
 
     /// Live points within Euclidean distance ε of `x` (the classical

@@ -16,9 +16,10 @@
 //! `cluster_sizes`, `snapshot`) only touch the immutable snapshot — they
 //! never contend with the update path.
 
-use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use rustc_hash::FxHashMap;
 
@@ -29,10 +30,108 @@ use crate::util::stats::LatencyHisto;
 use super::router::Router;
 use super::stitch::{stitch_full, GlobalSnapshot, LabelChange, Stitcher};
 use super::worker::{
-    run_worker, ShardBatch, ShardCore, ShardDelta, ShardReply, ShardSnapshot,
-    WorkerReport,
+    run_worker, ShardBatch, ShardCore, ShardDelta, ShardOp, ShardReply,
+    ShardSnapshot, WorkerReport,
 };
 use super::{ShardConfig, StitchMode};
+
+/// A worker-channel fault, reported instead of the pre-PR-7 `expect`
+/// panics: one dead or wedged shard degrades the engine (its write slice
+/// goes stale, reads keep serving the last published snapshot) rather than
+/// aborting the process. The engine quarantines the shard and respawns it
+/// on request ([`ShardedEngine::respawn_shard`]); the serve façade does so
+/// automatically at the next publish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum EngineError {
+    /// the worker's op channel closed — the thread panicked or exited
+    #[error("shard {shard} worker is down (op channel closed)")]
+    ShardDown { shard: u32 },
+    /// the worker failed to answer a publish barrier in time — wedged,
+    /// or so overloaded it should be treated as such
+    #[error("shard {shard} missed the publish barrier after {ms} ms")]
+    PublishTimeout { shard: u32, ms: u64 },
+}
+
+impl EngineError {
+    /// The shard this fault quarantined.
+    pub fn shard(&self) -> u32 {
+        match *self {
+            EngineError::ShardDown { shard } => shard,
+            EngineError::PublishTimeout { shard, .. } => shard,
+        }
+    }
+}
+
+/// Quarantine `err.shard()` (idempotent) and log the fault.
+fn mark_down(down: &mut Vec<u32>, faults: &mut Vec<EngineError>, err: EngineError) {
+    if !down.contains(&err.shard()) {
+        down.push(err.shard());
+        down.sort_unstable();
+        faults.push(err);
+    }
+}
+
+/// Send one marker batch to every up shard and collect exactly one
+/// matching reply per shard from the shared reply channel. Shards that
+/// fail the send (channel closed) or miss the deadline are quarantined
+/// into `down` instead of panicking; replies that don't satisfy `extract`
+/// (stale barriers from a previously timed-out publish) are discarded.
+fn barrier_collect<T>(
+    txs: &[SyncSender<ShardBatch>],
+    reply_rx: &Receiver<ShardReply>,
+    down: &mut Vec<u32>,
+    faults: &mut Vec<EngineError>,
+    timeout_ms: u64,
+    marker: impl Fn() -> ShardBatch,
+    extract: impl Fn(ShardReply) -> Option<(usize, T)>,
+) -> Vec<T> {
+    let mut expect = vec![false; txs.len()];
+    let mut outstanding = 0usize;
+    for (s, tx) in txs.iter().enumerate() {
+        if down.contains(&(s as u32)) {
+            continue;
+        }
+        if tx.send(marker()).is_err() {
+            mark_down(down, faults, EngineError::ShardDown { shard: s as u32 });
+        } else {
+            expect[s] = true;
+            outstanding += 1;
+        }
+    }
+    let mut out = Vec::with_capacity(outstanding);
+    let timeout_ns = timeout_ms.saturating_mul(1_000_000);
+    let sw = Stopwatch::start();
+    while outstanding > 0 {
+        let elapsed = sw.elapsed_ns();
+        if elapsed >= timeout_ns {
+            break;
+        }
+        match reply_rx.recv_timeout(Duration::from_nanos(timeout_ns - elapsed)) {
+            Ok(reply) => {
+                if let Some((s, val)) = extract(reply) {
+                    if s < expect.len() && expect[s] {
+                        expect[s] = false;
+                        outstanding -= 1;
+                        out.push(val);
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                break
+            }
+        }
+    }
+    for (s, waiting) in expect.iter().enumerate() {
+        if *waiting {
+            mark_down(
+                down,
+                faults,
+                EngineError::PublishTimeout { shard: s as u32, ms: timeout_ms },
+            );
+        }
+    }
+    out
+}
 
 /// Engine-side op counters.
 #[derive(Clone, Debug, Default)]
@@ -101,6 +200,9 @@ enum Backend {
     Threads {
         txs: Vec<SyncSender<ShardBatch>>,
         reply_rx: Receiver<ShardReply>,
+        /// master clone handed to respawned workers; kept alive so the
+        /// reply channel never disconnects while the engine lives
+        reply_tx: Sender<ShardReply>,
         workers: Vec<JoinHandle<WorkerReport>>,
     },
 }
@@ -139,6 +241,12 @@ pub struct ShardedEngine {
     obs: Arc<Metrics>,
     /// per-stage breakdown of the most recent publish
     last_trace: PublishTrace,
+    /// quarantined shard ids, ascending — their workers died or wedged;
+    /// writes to them are dropped (respawn re-seeds from the placement
+    /// map) and barriers skip them
+    down: Vec<u32>,
+    /// every fault observed so far, in detection order
+    faults: Vec<EngineError>,
 }
 
 impl ShardedEngine {
@@ -177,17 +285,17 @@ impl ShardedEngine {
                 let seed = cfg.seed;
                 let rtx = reply_tx.clone();
                 let wobs = Arc::clone(&obs);
+                let plan = cfg.faults.filter(|p| p.shard as usize == shard);
                 let handle = std::thread::Builder::new()
                     .name(format!("shard-{shard}"))
                     .spawn(move || {
-                        run_worker(shard, dcfg, conn, seed, track, wobs, rx, rtx)
+                        run_worker(shard, dcfg, conn, seed, track, wobs, rx, rtx, plan)
                     })
                     .expect("failed to spawn shard worker");
                 txs.push(tx);
                 workers.push(handle);
             }
-            drop(reply_tx);
-            (Some(router), Backend::Threads { txs, reply_rx, workers })
+            (Some(router), Backend::Threads { txs, reply_rx, reply_tx, workers })
         };
         ShardedEngine {
             router,
@@ -205,6 +313,8 @@ impl ShardedEngine {
             last_changes: Vec::new(),
             obs,
             last_trace: PublishTrace::default(),
+            down: Vec::new(),
+            faults: Vec::new(),
             cfg,
         }
     }
@@ -268,6 +378,12 @@ impl ShardedEngine {
     /// Ship buffered ops to the workers. Threads: blocks only when a
     /// worker's bounded queue is full (backpressure). Inline: applies the
     /// batch directly.
+    ///
+    /// A failed send quarantines the shard and **drops** the batch: the
+    /// placement map and the façade's coordinate store already reflect
+    /// those ops, so [`Self::respawn_shard`] rebuilds the shard's slice
+    /// from them exactly — buffering the batch instead would double-apply
+    /// it after the re-seed.
     pub fn flush(&mut self) {
         match &mut self.backend {
             Backend::Inline(core) => {
@@ -278,9 +394,19 @@ impl ShardedEngine {
             }
             Backend::Threads { txs, .. } => {
                 for (s, tx) in txs.iter().enumerate() {
-                    if !self.pending[s].is_empty() {
-                        let batch = std::mem::take(&mut self.pending[s]);
-                        tx.send(batch).expect("shard worker terminated");
+                    if self.pending[s].is_empty() {
+                        continue;
+                    }
+                    let batch = std::mem::take(&mut self.pending[s]);
+                    if self.down.contains(&(s as u32)) {
+                        continue; // dropped: the respawn re-seed covers it
+                    }
+                    if tx.send(batch).is_err() {
+                        mark_down(
+                            &mut self.down,
+                            &mut self.faults,
+                            EngineError::ShardDown { shard: s as u32 },
+                        );
                     }
                 }
             }
@@ -295,42 +421,44 @@ impl ShardedEngine {
         let seq = self.next_seq;
         self.next_seq += 1;
         if let Backend::Threads { txs, reply_rx, .. } = &mut self.backend {
-            for tx in txs.iter() {
-                tx.send(ShardBatch::sync(seq)).expect("shard worker terminated");
-            }
-            let mut acks = 0usize;
-            while acks < txs.len() {
-                match reply_rx.recv().expect("reply channel closed") {
-                    ShardReply::Sync { seq: s, .. } => {
-                        debug_assert_eq!(s, seq, "stale sync sequence");
-                        acks += 1;
+            let _acks = barrier_collect(
+                txs,
+                reply_rx,
+                &mut self.down,
+                &mut self.faults,
+                self.cfg.publish_timeout_ms,
+                || ShardBatch::sync(seq),
+                |reply| match reply {
+                    ShardReply::Sync { shard, seq: s } if s == seq => {
+                        Some((shard, ()))
                     }
-                    other => panic!("unexpected shard reply to sync: {other:?}"),
-                }
-            }
+                    _ => None, // stale barrier from a timed-out publish
+                },
+            );
         }
     }
 
-    /// Collect one delta report per shard (barrier via the op channels).
+    /// Collect one delta report per up shard (barrier via the op
+    /// channels). Quarantined shards contribute nothing — their last
+    /// folded state stays in the stitch graph until a respawn re-seeds
+    /// them.
     fn collect_deltas(&mut self, seq: u64) -> Vec<ShardDelta> {
         match &mut self.backend {
             Backend::Inline(core) => vec![core.delta(seq)],
-            Backend::Threads { txs, reply_rx, .. } => {
-                for tx in txs.iter() {
-                    tx.send(ShardBatch::delta(seq)).expect("shard worker terminated");
-                }
-                let mut out = Vec::with_capacity(txs.len());
-                while out.len() < txs.len() {
-                    match reply_rx.recv().expect("reply channel closed") {
-                        ShardReply::Delta(d) => {
-                            debug_assert_eq!(d.seq, seq, "stale delta sequence");
-                            out.push(d);
-                        }
-                        other => panic!("unexpected shard reply to delta: {other:?}"),
+            Backend::Threads { txs, reply_rx, .. } => barrier_collect(
+                txs,
+                reply_rx,
+                &mut self.down,
+                &mut self.faults,
+                self.cfg.publish_timeout_ms,
+                || ShardBatch::delta(seq),
+                |reply| match reply {
+                    ShardReply::Delta(d) if d.seq == seq => {
+                        Some((d.shard, d))
                     }
-                }
-                out
-            }
+                    _ => None,
+                },
+            ),
         }
     }
 
@@ -344,24 +472,18 @@ impl ShardedEngine {
         self.next_seq += 1;
         match &mut self.backend {
             Backend::Inline(core) => vec![core.full_snapshot(seq)],
-            Backend::Threads { txs, reply_rx, .. } => {
-                for tx in txs.iter() {
-                    tx.send(ShardBatch::snapshot(seq)).expect("shard worker terminated");
-                }
-                let mut out = Vec::with_capacity(txs.len());
-                while out.len() < txs.len() {
-                    match reply_rx.recv().expect("reply channel closed") {
-                        ShardReply::Full(s) => {
-                            debug_assert_eq!(s.seq, seq, "stale snapshot sequence");
-                            out.push(s);
-                        }
-                        other => {
-                            panic!("unexpected shard reply to snapshot: {other:?}")
-                        }
-                    }
-                }
-                out
-            }
+            Backend::Threads { txs, reply_rx, .. } => barrier_collect(
+                txs,
+                reply_rx,
+                &mut self.down,
+                &mut self.faults,
+                self.cfg.publish_timeout_ms,
+                || ShardBatch::snapshot(seq),
+                |reply| match reply {
+                    ShardReply::Full(s) if s.seq == seq => Some((s.shard, s)),
+                    _ => None,
+                },
+            ),
         }
     }
 
@@ -399,6 +521,13 @@ impl ShardedEngine {
                 let snaps = self.full_dump();
                 if let Some(c) = clk.as_mut() {
                     trace.record(PublishStage::DeltaFold, c.lap());
+                }
+                if snaps.is_empty() {
+                    // every shard quarantined: keep serving the last
+                    // published snapshot instead of an empty rebuild
+                    let snap = Arc::clone(&self.snapshot);
+                    self.stats.publishes += 1;
+                    return snap;
                 }
                 let seq = snaps[0].seq;
                 let snap = Arc::new(stitch_full(snaps, seq));
@@ -438,6 +567,96 @@ impl ShardedEngine {
         self.dirty = false;
         self.pending_writes = 0;
         snap
+    }
+
+    // ------------------------------------------------------------------
+    // fault tolerance
+    // ------------------------------------------------------------------
+
+    /// chunk size of the respawn re-seed batches — bounds peak wire
+    /// memory without serializing the whole shard slice at once
+    const RESEED_CHUNK: usize = 4096;
+
+    /// Quarantined shard ids, ascending. Non-empty means the engine is
+    /// degraded: those shards' slices are stale in the published snapshot
+    /// until [`Self::respawn_shard`] heals them. Reads keep serving.
+    pub fn down_shards(&self) -> &[u32] {
+        &self.down
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        !self.down.is_empty()
+    }
+
+    /// Every fault observed so far, in detection order.
+    pub fn fault_log(&self) -> &[EngineError] {
+        &self.faults
+    }
+
+    /// Replace a quarantined shard's worker with a fresh one and rebuild
+    /// its slice from the authoritative engine state: the placement map
+    /// says which exts the shard held (and whether as primary), and
+    /// `coords_of(ext, buf)` appends the point's coordinate row (the
+    /// serve façade keeps every live row; return false for unknown exts).
+    /// The dead worker's stale roots are purged from the stitch graph,
+    /// and the fresh core's empty delta baseline makes its next report
+    /// ship the full assignment — the next publish heals the global
+    /// clustering without a full rebuild. No-op for up shards and the
+    /// inline backend.
+    pub fn respawn_shard(
+        &mut self,
+        shard: u32,
+        mut coords_of: impl FnMut(u64, &mut Vec<f32>) -> bool,
+    ) -> Result<(), EngineError> {
+        if !self.down.contains(&shard) {
+            return Ok(());
+        }
+        let track = self.cfg.stitch == StitchMode::Delta;
+        let Backend::Threads { txs, workers, reply_tx, .. } = &mut self.backend
+        else {
+            return Ok(());
+        };
+        let s = shard as usize;
+        // ops buffered while down are already reflected in the placement
+        // map and the façade's coordinate store — the re-seed below covers
+        // them; shipping the buffered batch too would double-apply
+        self.pending[s] = ShardBatch::new();
+        let (tx, rx) = sync_channel::<ShardBatch>(self.cfg.queue.max(1));
+        let dcfg = self.cfg.dbscan.clone();
+        let conn = self.cfg.conn;
+        let seed = self.cfg.seed;
+        let rtx = reply_tx.clone();
+        let wobs = Arc::clone(&self.obs);
+        let handle = std::thread::Builder::new()
+            .name(format!("shard-{shard}"))
+            .spawn(move || {
+                run_worker(s, dcfg, conn, seed, track, wobs, rx, rtx, None)
+            })
+            .map_err(|_| EngineError::ShardDown { shard })?;
+        txs[s] = tx; // old sender dropped: a still-live old worker exits
+        workers[s] = handle; // old handle dropped: detached
+        self.stitcher.drop_shard(s);
+        let mut batch = ShardBatch::new();
+        for (&ext, held) in self.placement.iter() {
+            let Some(pos) = held.iter().position(|&h| h == shard) else {
+                continue;
+            };
+            if coords_of(ext, &mut batch.coords) {
+                batch.ops.push(ShardOp::Insert { ext, primary: pos == 0 });
+            }
+            if batch.ops.len() >= Self::RESEED_CHUNK {
+                let full = std::mem::take(&mut batch);
+                if txs[s].send(full).is_err() {
+                    return Err(EngineError::ShardDown { shard });
+                }
+            }
+        }
+        if !batch.is_empty() && txs[s].send(batch).is_err() {
+            return Err(EngineError::ShardDown { shard });
+        }
+        self.down.retain(|&d| d != shard);
+        self.dirty = true; // the heal must reach the next snapshot
+        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -543,11 +762,15 @@ impl ShardedEngine {
         let mut worker_reports: Vec<WorkerReport> = Vec::new();
         match self.backend {
             Backend::Inline(core) => worker_reports.push(core.into_report()),
-            Backend::Threads { txs, workers, .. } => {
+            Backend::Threads { txs, workers, reply_tx, .. } => {
                 drop(txs); // drop senders: workers drain and exit
+                drop(reply_tx);
                 for handle in workers {
-                    let r = handle.join().expect("shard worker panicked");
-                    worker_reports.push(r);
+                    // a panicked worker's report died with it — its fault
+                    // is already in `faults`; don't panic the caller too
+                    if let Ok(r) = handle.join() {
+                        worker_reports.push(r);
+                    }
                 }
             }
         }

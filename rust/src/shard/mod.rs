@@ -63,13 +63,13 @@ pub mod router;
 pub mod stitch;
 pub mod worker;
 
-pub use engine::{EngineOutcome, EngineStats, ShardedEngine};
+pub use engine::{EngineError, EngineOutcome, EngineStats, ShardedEngine};
 pub use labels::LabelMap;
 pub use router::{RouteDecision, Router};
 pub use stitch::{stitch_full, GlobalSnapshot, LabelChange, Stitcher};
 pub use worker::{
-    ShardBatch, ShardCore, ShardDelta, ShardOp, ShardReply, ShardSnapshot,
-    WorkerReport,
+    FaultPlan, ShardBatch, ShardCore, ShardDelta, ShardOp, ShardReply,
+    ShardSnapshot, WorkerReport,
 };
 
 use crate::dbscan::{ConnKind, DbscanConfig};
@@ -117,6 +117,13 @@ pub struct ShardConfig {
     /// [`crate::obs::Metrics`] registry. Off = a no-op recorder (the
     /// `obs_overhead` bench baseline).
     pub metrics: bool,
+    /// how long a publish barrier waits for each outstanding worker reply
+    /// before declaring the shard wedged and degrading (see
+    /// [`engine::EngineError`])
+    pub publish_timeout_ms: u64,
+    /// test-only fault injection for one worker (`None` in production)
+    #[doc(hidden)]
+    pub faults: Option<worker::FaultPlan>,
 }
 
 impl ShardConfig {
@@ -132,6 +139,8 @@ impl ShardConfig {
             conn: ConnKind::Leveled,
             seed,
             metrics: true,
+            publish_timeout_ms: 10_000,
+            faults: None,
         }
     }
 

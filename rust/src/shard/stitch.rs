@@ -332,6 +332,28 @@ impl Stitcher {
         self.label_dirty.insert(e);
     }
 
+    /// Purge every replica last reported by shard `s` — the respawn path:
+    /// a fresh worker re-reports its whole slice (its delta baseline is
+    /// empty), so the dead worker's stale roots must not linger in the
+    /// stitch graph where they would contradict the re-seeded assignment.
+    /// The affected exts are left label-dirty; the next [`Self::apply`]
+    /// (which also folds the fresh worker's full report) relabels them.
+    pub fn drop_shard(&mut self, s: usize) {
+        let sh = s as u32;
+        let affected: Vec<u64> = self
+            .exts
+            .iter()
+            .filter(|(_, reps)| reps.iter().any(|r| r.shard == sh))
+            .map(|(&e, _)| e)
+            .collect();
+        for e in affected {
+            self.rewire_ext(e, |reps| reps.retain(|r| r.shard != sh));
+        }
+        if s < self.shard_live.len() {
+            self.shard_live[s] = 0;
+        }
+    }
+
     fn apply_upsert(&mut self, shard: u32, p: SnapPoint) {
         let rep = Rep {
             shard,

@@ -445,9 +445,30 @@ impl ShardCore {
     }
 }
 
+/// Test-only fault injection for one shard worker, wired through
+/// `ShardConfig::faults` by the recovery test matrix. A production engine
+/// never sets it; the plan only *drops* work (an early thread exit or a
+/// swallowed reply) — it cannot corrupt state, so exercising it validates
+/// the engine's detection + respawn path, not the plan itself.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// shard this plan applies to
+    pub shard: u32,
+    /// simulate a worker panic: the thread exits — dropping its op
+    /// channel and any un-applied batches — once it has applied at least
+    /// this many data ops (batch granularity: it dies *before* the batch
+    /// that would cross the budget, i.e. mid-stream)
+    pub kill_after_ops: Option<u64>,
+    /// simulate a wedged worker: silently swallow the next barrier reply
+    /// (Delta/Snapshot/Sync), forcing the engine's publish timeout
+    pub drop_next_reply: bool,
+}
+
 /// Worker loop: runs until the op channel disconnects. Marker replies are
 /// best-effort (a vanished engine just ends the run). `track` enables the
-/// delta-report plumbing (off for `StitchMode::FullRebuild` engines).
+/// delta-report plumbing (off for `StitchMode::FullRebuild` engines);
+/// `faults` is the test-only injection plan (`None` in production).
+#[allow(clippy::too_many_arguments)]
 pub fn run_worker(
     shard: usize,
     cfg: DbscanConfig,
@@ -457,10 +478,32 @@ pub fn run_worker(
     obs: Arc<Metrics>,
     rx: Receiver<ShardBatch>,
     reply_tx: Sender<ShardReply>,
+    faults: Option<FaultPlan>,
 ) -> WorkerReport {
     let mut core = ShardCore::new(shard, cfg, conn, seed, track, obs);
+    let mut kill_budget = faults.and_then(|p| p.kill_after_ops);
+    let mut drop_reply = faults.is_some_and(|p| p.drop_next_reply);
     for batch in rx.iter() {
+        if let Some(left) = kill_budget.as_mut() {
+            let data_ops = batch
+                .ops
+                .iter()
+                .filter(|op| {
+                    matches!(op, ShardOp::Insert { .. } | ShardOp::Delete { .. })
+                })
+                .count() as u64;
+            if data_ops >= *left {
+                // simulated panic: exit without applying the batch, leaving
+                // the engine to discover the closed channel
+                return core.into_report();
+            }
+            *left -= data_ops;
+        }
         core.apply(&batch, &mut |r| {
+            if drop_reply {
+                drop_reply = false; // swallow exactly one barrier reply
+                return;
+            }
             let _ = reply_tx.send(r);
         });
     }

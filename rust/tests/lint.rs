@@ -212,6 +212,10 @@ fn timing_goes_through_the_obs_span_api() {
         ("serve/inline.rs", include_str!("../src/serve/inline.rs")),
         ("serve/sharded.rs", include_str!("../src/serve/sharded.rs")),
         ("serve/snapshot.rs", include_str!("../src/serve/snapshot.rs")),
+        ("serve/durable.rs", include_str!("../src/serve/durable.rs")),
+        ("persist/mod.rs", include_str!("../src/persist/mod.rs")),
+        ("persist/wal.rs", include_str!("../src/persist/wal.rs")),
+        ("persist/checkpoint.rs", include_str!("../src/persist/checkpoint.rs")),
         ("shard/engine.rs", include_str!("../src/shard/engine.rs")),
         ("shard/labels.rs", include_str!("../src/shard/labels.rs")),
         ("shard/mod.rs", include_str!("../src/shard/mod.rs")),
@@ -230,5 +234,41 @@ fn timing_goes_through_the_obs_span_api() {
              obs::Stopwatch / obs::PhaseClock / span! so the overhead \
              stays auditable and the metrics switch stays total"
         );
+    }
+}
+
+/// Channel endpoints and worker joins in the sharded serving path must
+/// never `unwrap`/`expect`: a dead worker is a *recoverable* fault
+/// (`EngineError` → `Health::Degraded` → respawn), not a panic. Every
+/// `send`/`recv`/`join` result is matched; the one allowed `expect` family
+/// is thread *spawn* (resource exhaustion at construction, not a runtime
+/// fault), which these patterns don't cover because spawn isn't a channel
+/// op.
+#[test]
+fn channel_ops_never_unwrap_in_the_serving_path() {
+    for (name, src) in [
+        ("shard/engine.rs", include_str!("../src/shard/engine.rs")),
+        ("shard/worker.rs", include_str!("../src/shard/worker.rs")),
+        ("shard/mod.rs", include_str!("../src/shard/mod.rs")),
+        ("serve/mod.rs", include_str!("../src/serve/mod.rs")),
+        ("serve/builder.rs", include_str!("../src/serve/builder.rs")),
+        ("serve/durable.rs", include_str!("../src/serve/durable.rs")),
+        ("serve/events.rs", include_str!("../src/serve/events.rs")),
+        ("serve/inline.rs", include_str!("../src/serve/inline.rs")),
+        ("serve/sharded.rs", include_str!("../src/serve/sharded.rs")),
+    ] {
+        for (ln, line) in src.lines().enumerate() {
+            let channel_op = line.contains(".send(")
+                || line.contains(".recv(")
+                || line.contains("recv_timeout(")
+                || line.contains(".join()");
+            if channel_op && (line.contains(".expect(") || line.contains(".unwrap(")) {
+                panic!(
+                    "{name}:{}: channel op unwraps instead of degrading \
+                     ({line:?}); surface the failure as EngineError",
+                    ln + 1
+                );
+            }
+        }
     }
 }

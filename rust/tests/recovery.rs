@@ -1,0 +1,515 @@
+//! Durability and fault-tolerance acceptance tests: WAL/checkpoint format
+//! round-trips (including torn-tail damage), crash-recovery differential
+//! checks against uninterrupted reference runs, and the sharded backend's
+//! degrade → respawn → heal cycle under injected worker faults.
+//!
+//! Crash simulation: `std::mem::forget(engine)` skips every destructor —
+//! the WAL's `BufWriter` never flushes and no shutdown checkpoint spills,
+//! exactly like a `kill -9` after the last completed fsync. Forgotten
+//! engines use the inline backend so no worker threads leak.
+
+use std::path::PathBuf;
+
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::data::Dataset;
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::persist::{
+    load_checkpoint, read_wal, write_checkpoint, Checkpoint, WalOp, WalRecord,
+    WalWriter, WAL_FILE,
+};
+use dyn_dbscan::serve::{
+    Backend, ClusterEngine, EngineBuilder, FaultPlan, SnapshotView,
+};
+use rustc_hash::FxHashMap;
+
+/// Fresh scratch directory under the system temp root (std-only: the
+/// container has no tempfile crate). Unique per test name + process so
+/// parallel test binaries never collide; recreated empty on entry.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dyn-dbscan-recovery-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn blobs(n: usize, seed: u64) -> Dataset {
+    // well separated (center_box ≫ std): border attachment is
+    // order-independent up to the cluster label, so recovery re-ingestion
+    // order cannot cost ARI
+    make_blobs(
+        &BlobsConfig {
+            n,
+            dim: 3,
+            clusters: 4,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        seed,
+    )
+}
+
+fn builder(dim: usize) -> EngineBuilder {
+    // eager_attach makes non-core attachment depend on the final point
+    // set, not the insertion order — required by the ARI = 1.0 gates
+    EngineBuilder::new(dim).k(8).t(6).eps(0.75).seed(21).eager_attach(true)
+}
+
+/// Exact label-partition agreement over identical live sets.
+fn ari_of(a: &SnapshotView, b: &SnapshotView) -> f64 {
+    let la = a.labels();
+    let lb: FxHashMap<u64, i64> = b.labels().into_iter().collect();
+    assert_eq!(la.len(), lb.len(), "live sets diverged");
+    let mut pa = Vec::with_capacity(la.len());
+    let mut pb = Vec::with_capacity(la.len());
+    for (ext, va) in la {
+        pa.push(va);
+        pb.push(*lb.get(&ext).unwrap_or_else(|| panic!("{ext} missing in b")));
+    }
+    adjusted_rand_index(&pa, &pb)
+}
+
+// ---------------------------------------------------------------------
+// format round-trips
+// ---------------------------------------------------------------------
+
+#[test]
+fn wal_roundtrip_preserves_records_and_op_order() {
+    let dir = scratch("wal-roundtrip");
+    let records = vec![
+        WalRecord::Upsert { seq: 1, ext: 7, coords: vec![1.0, -2.5] },
+        WalRecord::Remove { seq: 2, ext: 7 },
+        // remove-then-upsert of the same ext is a *replace*; order inside
+        // the batch must survive the round-trip
+        WalRecord::Apply {
+            seq: 3,
+            ops: vec![
+                WalOp::Remove { ext: 9 },
+                WalOp::Upsert { ext: 9, coords: vec![0.5, 0.5] },
+                WalOp::Upsert { ext: 10, coords: vec![f32::MIN, f32::MAX] },
+            ],
+        },
+        WalRecord::Publish { seq: 4, version: 17 },
+    ];
+    let mut w = WalWriter::open(&dir).unwrap();
+    for r in &records {
+        w.append(r).unwrap();
+    }
+    assert_eq!(w.pending(), 4);
+    assert_eq!(w.sync().unwrap(), 4);
+    assert_eq!(w.pending(), 0);
+    let (back, clean) = read_wal(&dir).unwrap();
+    assert!(clean);
+    assert_eq!(back, records);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_wal_tail_truncates_to_the_last_whole_record() {
+    let dir = scratch("wal-torn");
+    let mut w = WalWriter::open(&dir).unwrap();
+    w.append(&WalRecord::Upsert { seq: 1, ext: 1, coords: vec![1.0] }).unwrap();
+    w.append(&WalRecord::Publish { seq: 2, version: 1 }).unwrap();
+    w.sync().unwrap();
+    drop(w);
+    let path = dir.join(WAL_FILE);
+    let full = std::fs::read(&path).unwrap();
+
+    // torn payload: cut the final frame mid-way
+    std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+    let (recs, clean) = read_wal(&dir).unwrap();
+    assert!(!clean);
+    assert_eq!(recs.len(), 1, "only the first whole record survives");
+    assert_eq!(recs[0].seq(), 1);
+
+    // bit rot in the final payload: CRC must reject it, prefix survives
+    let mut rotten = full.clone();
+    let n = rotten.len();
+    rotten[n - 1] ^= 0x40;
+    std::fs::write(&path, &rotten).unwrap();
+    let (recs, clean) = read_wal(&dir).unwrap();
+    assert!(!clean);
+    assert_eq!(recs.len(), 1);
+
+    // torn header after a clean record: prefix survives
+    let mut with_garbage = full.clone();
+    with_garbage.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
+    std::fs::write(&path, &with_garbage).unwrap();
+    let (recs, clean) = read_wal(&dir).unwrap();
+    assert!(!clean);
+    assert_eq!(recs.len(), 2, "the whole-record prefix is intact");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_roundtrip_and_damage_tolerance() {
+    let dir = scratch("ckpt");
+    let ckpt = Checkpoint {
+        version: 11,
+        wal_seq: 42,
+        eps: 0.75,
+        dim: 3,
+        points: vec![(5, vec![1.0, 2.0, 3.0]), (9, vec![-1.0, 0.0, 4.5])],
+        labels: vec![0, -1],
+        cores: vec![true, false],
+    };
+    write_checkpoint(&dir, &ckpt).unwrap();
+    let back = load_checkpoint(&dir).expect("valid checkpoint must load");
+    assert_eq!(back.version, 11);
+    assert_eq!(back.wal_seq, 42);
+    assert_eq!(back.points, ckpt.points);
+    assert_eq!(back.labels, ckpt.labels);
+    assert_eq!(back.cores, ckpt.cores);
+
+    // truncation (crash mid-spill before the atomic rename would normally
+    // prevent this — belt and braces) reads as absent, never as garbage
+    let path = dir.join(dyn_dbscan::persist::CHECKPOINT_FILE);
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    assert!(load_checkpoint(&dir).is_none());
+
+    // CRC damage likewise
+    let mut rotten = full.clone();
+    let n = rotten.len();
+    rotten[n - 3] ^= 0x01;
+    std::fs::write(&path, &rotten).unwrap();
+    assert!(load_checkpoint(&dir).is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// crash recovery, differential against uninterrupted runs
+// ---------------------------------------------------------------------
+
+/// Cold full-log replay (checkpointing pushed out of reach) is bit-exact:
+/// the recovered engine re-executes the identical op sequence, so labels
+/// — not just the partition — match an uninterrupted run, on a
+/// delete-heavy churn schedule.
+#[test]
+fn cold_replay_after_crash_is_bit_exact_on_churn() {
+    let dir = scratch("cold-replay");
+    let ds = blobs(600, 3);
+    let mut durable = builder(3)
+        .persist(&dir)
+        .persist_every(1_000_000) // never checkpoint: pure WAL replay
+        .build()
+        .unwrap();
+    let mut reference = builder(3).build().unwrap();
+
+    let mut last_version = 0;
+    for (i, chunk) in (0..ds.n()).collect::<Vec<_>>().chunks(100).enumerate() {
+        for &j in chunk {
+            durable.upsert(j as u64, ds.point(j));
+            reference.upsert(j as u64, ds.point(j));
+        }
+        // churn: every other chunk deletes half of the previous chunk
+        if i % 2 == 1 {
+            for e in ((i - 1) * 100..(i - 1) * 100 + 50).map(|e| e as u64) {
+                durable.remove(e);
+                reference.remove(e);
+            }
+        }
+        last_version = durable.publish().version();
+        assert_eq!(last_version, reference.publish().version());
+    }
+    // writes after the last publish are buffered, not yet durable — a
+    // crash loses exactly these (the documented contract)
+    durable.upsert(999_999, &[50.0, 50.0, 50.0]);
+    std::mem::forget(durable);
+
+    let recovered = builder(3).persist(&dir).build().unwrap();
+    let rv = recovered.snapshot();
+    let fv = reference.publish();
+    assert_eq!(rv.version(), last_version, "version continuity");
+    assert!(!rv.contains(999_999), "unpublished write must not survive");
+    let mut ra = rv.labels();
+    let mut rb = fv.labels();
+    ra.sort_unstable();
+    rb.sort_unstable();
+    assert_eq!(ra, rb, "cold replay must be bit-exact");
+    let _ = recovered.finish();
+    let _ = reference.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Checkpoint + WAL-tail recovery: re-ingestion order differs from the
+/// original insertion order, so the gate is partition equality (ARI = 1.0
+/// on well-separated blobs) plus exact version continuity — and the next
+/// publish after recovery keeps counting from the recovered version.
+#[test]
+fn checkpoint_plus_tail_recovery_restores_the_published_partition() {
+    let dir = scratch("ckpt-tail");
+    let ds = blobs(900, 5);
+    let mut durable = builder(3)
+        .persist(&dir)
+        .persist_every(2) // force real checkpoints mid-run
+        .build()
+        .unwrap();
+    let mut reference = builder(3).build().unwrap();
+    let mut last_version = 0;
+    for chunk in (0..ds.n()).collect::<Vec<_>>().chunks(150) {
+        for &j in chunk {
+            durable.upsert(j as u64, ds.point(j));
+            reference.upsert(j as u64, ds.point(j));
+        }
+        last_version = durable.publish().version();
+        reference.publish();
+    }
+    // a WAL tail past the last checkpoint: deletes + one publish
+    for e in 0..120u64 {
+        durable.remove(e);
+        reference.remove(e);
+    }
+    last_version = durable.publish().version();
+    let fv = reference.publish();
+    assert!(load_checkpoint(&dir).is_some(), "mid-run checkpoint must exist");
+    std::mem::forget(durable);
+
+    let mut recovered = builder(3).persist(&dir).build().unwrap();
+    let rv = recovered.snapshot();
+    assert_eq!(rv.version(), last_version, "version continuity");
+    assert_eq!(rv.live_points(), fv.live_points());
+    assert_eq!(rv.core_points(), fv.core_points());
+    let ari = ari_of(&rv, &fv);
+    assert_eq!(ari, 1.0, "recovered partition diverged (ARI {ari})");
+    // the engine keeps serving and counting from where it recovered
+    recovered.upsert(1_000_000, ds.point(500));
+    let next = recovered.publish();
+    assert_eq!(next.version(), last_version + 1);
+    assert!(next.contains(1_000_000));
+    let _ = recovered.finish();
+    let _ = reference.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kill mid-stream *between* publishes: recovery must land exactly on the
+/// longest durable prefix — determined here independently via `read_wal` —
+/// and match a reference run fed only that prefix.
+#[test]
+fn kill_between_publishes_recovers_the_durable_prefix() {
+    let dir = scratch("kill-mid");
+    let ds = blobs(400, 9);
+    let mut durable = builder(3)
+        .persist(&dir)
+        .persist_every(1_000_000)
+        .build()
+        .unwrap();
+    for j in 0..300 {
+        durable.upsert(j as u64, ds.point(j));
+        if j % 90 == 89 {
+            durable.publish();
+        }
+    }
+    // 30 more ops that never reach a publish (buffered, not fsynced)
+    for j in 300..330 {
+        durable.upsert(j as u64, ds.point(j));
+    }
+    std::mem::forget(durable);
+
+    // independently decide what should have survived
+    let (records, _clean) = read_wal(&dir).unwrap();
+    let mut reference = builder(3).build().unwrap();
+    let mut expect_version = 0;
+    for rec in &records {
+        match rec {
+            WalRecord::Upsert { ext, coords, .. } => reference.upsert(*ext, coords),
+            WalRecord::Remove { ext, .. } => reference.remove(*ext),
+            WalRecord::Apply { ops, .. } => {
+                for op in ops {
+                    match op {
+                        WalOp::Upsert { ext, coords } => {
+                            reference.upsert(*ext, coords)
+                        }
+                        WalOp::Remove { ext } => reference.remove(*ext),
+                    }
+                }
+            }
+            WalRecord::Publish { version, .. } => {
+                reference.publish();
+                expect_version = *version;
+            }
+        }
+    }
+    assert!(expect_version > 0, "at least one publish must be durable");
+
+    let recovered = builder(3).persist(&dir).build().unwrap();
+    let rv = recovered.snapshot();
+    let fv = reference.publish();
+    assert_eq!(rv.version(), expect_version);
+    assert_eq!(rv.live_points(), 270, "exactly the published prefix is live");
+    let mut ra = rv.labels();
+    let mut rb = fv.labels();
+    ra.sort_unstable();
+    rb.sort_unstable();
+    assert_eq!(ra, rb, "recovered state must equal the durable prefix");
+    let _ = recovered.finish();
+    let _ = reference.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Clean shutdown spills a checkpoint; reopening is replay-free and the
+/// sharded backend recovers through the same path as the inline one.
+#[test]
+fn sharded_persist_shutdown_and_reopen() {
+    let dir = scratch("sharded-reopen");
+    let ds = blobs(600, 13);
+    let mut eng = builder(3)
+        .backend(Backend::Sharded(3))
+        .persist(&dir)
+        .build()
+        .unwrap();
+    for j in 0..ds.n() {
+        eng.upsert(j as u64, ds.point(j));
+    }
+    let before = eng.publish();
+    let out = eng.finish();
+    assert!(out.stats.health.is_ok());
+    // shutdown checkpoint landed and folded the whole log in
+    let ckpt = load_checkpoint(&dir).expect("shutdown checkpoint");
+    assert_eq!(ckpt.points.len(), ds.n());
+
+    let reopened = builder(3)
+        .backend(Backend::Sharded(3))
+        .persist(&dir)
+        .build()
+        .unwrap();
+    let after = reopened.snapshot();
+    assert_eq!(after.version(), before.version());
+    assert_eq!(after.live_points(), before.live_points());
+    let ari = ari_of(&after, &before);
+    assert_eq!(ari, 1.0, "reopened sharded partition diverged (ARI {ari})");
+    let _ = reopened.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// sharded fault tolerance: degrade, keep serving, respawn, heal
+// ---------------------------------------------------------------------
+
+/// A shard worker dying mid-stream must degrade `Stats::health` instead of
+/// aborting, keep reads serving the last published snapshot, and heal on
+/// the next publish via respawn + re-feed — back to ARI = 1.0 against an
+/// uninterrupted run.
+#[test]
+fn killed_worker_degrades_health_then_respawn_heals() {
+    let ds = blobs(900, 17);
+    let plan = FaultPlan { shard: 1, kill_after_ops: Some(40), drop_next_reply: false };
+    let mut faulty = builder(3)
+        .backend(Backend::Sharded(3))
+        .publish_timeout_ms(750)
+        .faults(plan)
+        .build()
+        .unwrap();
+    let mut reference =
+        builder(3).backend(Backend::Sharded(3)).build().unwrap();
+
+    let mut saw_degraded = false;
+    let mut last_good: Option<SnapshotView> = None;
+    for chunk in (0..ds.n()).collect::<Vec<_>>().chunks(150) {
+        for &j in chunk {
+            faulty.upsert(j as u64, ds.point(j));
+            reference.upsert(j as u64, ds.point(j));
+        }
+        let view = faulty.publish();
+        reference.publish();
+        let health = faulty.stats().health;
+        if !health.is_ok() {
+            saw_degraded = true;
+            assert_eq!(health.degraded_shards(), 1);
+            // reads keep working while degraded: the previous published
+            // snapshot is still fully answerable
+            if let Some(prev) = &last_good {
+                assert!(prev.live_points() > 0);
+                let probe = ds.point(0);
+                let _ = prev.epsilon_neighbors(probe);
+            }
+        }
+        last_good = Some(view);
+    }
+    assert!(saw_degraded, "the injected kill was never detected");
+    // one more publish heals: respawn happens at publish start
+    let healed = faulty.publish();
+    assert!(faulty.stats().health.is_ok(), "respawn must clear Degraded");
+    let fv = reference.publish();
+    assert_eq!(healed.live_points(), fv.live_points());
+    let ari = ari_of(&healed, &fv);
+    assert_eq!(ari, 1.0, "post-heal partition diverged (ARI {ari})");
+    let out = faulty.finish();
+    assert!(out.stats.health.is_ok());
+    let _ = reference.finish();
+}
+
+/// A wedged worker (reply swallowed, thread alive) must trip the publish
+/// timeout into `Degraded`, then heal exactly like a dead one — the
+/// respawn replaces the wedged thread wholesale.
+#[test]
+fn dropped_reply_times_out_then_heals() {
+    let ds = blobs(450, 23);
+    let plan = FaultPlan { shard: 0, kill_after_ops: None, drop_next_reply: true };
+    let mut faulty = builder(3)
+        .backend(Backend::Sharded(2))
+        .publish_timeout_ms(400)
+        .faults(plan)
+        .build()
+        .unwrap();
+    let mut reference =
+        builder(3).backend(Backend::Sharded(2)).build().unwrap();
+    for j in 0..ds.n() {
+        faulty.upsert(j as u64, ds.point(j));
+        reference.upsert(j as u64, ds.point(j));
+    }
+    faulty.publish();
+    reference.publish();
+    assert!(
+        !faulty.stats().health.is_ok(),
+        "swallowed barrier reply must surface as a publish timeout"
+    );
+    let healed = faulty.publish();
+    assert!(faulty.stats().health.is_ok());
+    let fv = reference.publish();
+    let ari = ari_of(&healed, &fv);
+    assert_eq!(ari, 1.0, "post-heal partition diverged (ARI {ari})");
+    let _ = faulty.finish();
+    let _ = reference.finish();
+}
+
+/// Durability composes with fault tolerance: a persisted sharded engine
+/// that degrades and heals still recovers its state from disk afterwards.
+#[test]
+fn persisted_sharded_engine_survives_worker_kill_and_reopen() {
+    let dir = scratch("persist-faulty");
+    let ds = blobs(600, 29);
+    let plan = FaultPlan { shard: 0, kill_after_ops: Some(60), drop_next_reply: false };
+    let mut eng = builder(3)
+        .backend(Backend::Sharded(2))
+        .publish_timeout_ms(750)
+        .persist(&dir)
+        .faults(plan)
+        .build()
+        .unwrap();
+    for chunk in (0..ds.n()).collect::<Vec<_>>().chunks(200) {
+        for &j in chunk {
+            eng.upsert(j as u64, ds.point(j));
+        }
+        eng.publish();
+    }
+    let healed = eng.publish();
+    assert!(eng.stats().health.is_ok(), "faulty shard must have healed");
+    let version = healed.version();
+    let out = eng.finish();
+    assert!(out.stats.health.is_ok());
+
+    let reopened = builder(3)
+        .backend(Backend::Sharded(2))
+        .persist(&dir)
+        .build()
+        .unwrap();
+    let rv = reopened.snapshot();
+    assert_eq!(rv.version(), version);
+    assert_eq!(rv.live_points(), ds.n());
+    let ari = ari_of(&rv, &healed);
+    assert_eq!(ari, 1.0, "reopened partition diverged (ARI {ari})");
+    let _ = reopened.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}
