@@ -14,7 +14,11 @@
 //!    runs across the **conn ablation axis** (paper / repair / leveled),
 //!    the **façade-overhead axis** (serve vs direct engine) and the
 //!    **obs-overhead axis** (live metrics registry vs no-op recorder),
-//!    both gated at ≤2% per-op tax at full scale.
+//!    both gated at ≤2% per-op tax at full scale. The **read-path axis**
+//!    measures ε-neighborhood and kNN QPS through the snapshot-pinned
+//!    ε-cell index vs the retained scan oracle at 50k and 500k live
+//!    (≥10× ε speedup gated at full scale) and the index's per-op
+//!    maintenance tax (≤3% at full scale).
 //! 3. **Chain churn** (adversarial, also → `BENCH_updates.json`): a 1-D
 //!    line of bucket chains with repeated mid-chain block deletions —
 //!    every round genuinely splits the path-shaped component, the worst
@@ -678,6 +682,201 @@ fn recovery_section(
 }
 
 // ---------------------------------------------------------------------
+// read path: snapshot-pinned ε-cell index vs retained scan oracle
+// ---------------------------------------------------------------------
+
+/// Budgeted per-op tax of the O(Δ) index maintenance folded into the
+/// update path (index on vs `.spatial_index(false)`, min-of-reps),
+/// enforced at full scale.
+const INDEX_OVERHEAD_GATE_FULL: f64 = 0.03;
+/// Smoke backstop: tiny runs are scheduler-jitter-dominated and the
+/// fixed cell-table cost weighs more against a tiny structure.
+const INDEX_OVERHEAD_GATE_SMOKE: f64 = 0.30;
+
+/// The gate that applies to an index-maintenance measurement at workload
+/// size `n` (shared by the recorder and the JSON validator).
+fn read_gate(n: f64) -> f64 {
+    if n >= 10_000.0 {
+        INDEX_OVERHEAD_GATE_FULL
+    } else {
+        INDEX_OVERHEAD_GATE_SMOKE
+    }
+}
+
+/// Minimum indexed-over-scan ε-query speedup, asserted only when every
+/// live size on the axis is full scale (≥ 50k) — the asymptotic gap
+/// (O(points-in-3^d-cells) vs O(n·d)) is unambiguous there.
+const EPS_SPEEDUP_GATE_FULL: f64 = 10.0;
+
+/// Deterministic probe set: every stride-th live row (dense and sparse
+/// cells alike) plus a few uniform positions (mostly-empty space).
+fn read_probes(ds: &Dataset, live: usize, count: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let stride = (live / count.max(1)).max(1);
+    let mut probes: Vec<Vec<f32>> = (0..live)
+        .step_by(stride)
+        .take(count)
+        .map(|i| ds.point(i).to_vec())
+        .collect();
+    for _ in 0..count / 4 {
+        probes.push((0..DIM).map(|_| rng.uniform(-60.0, 60.0) as f32).collect());
+    }
+    probes
+}
+
+/// Time `f` over every probe, `reps` rounds, min-of-reps; returns QPS.
+fn time_queries(probes: &[Vec<f32>], reps: usize, mut f: impl FnMut(&[f32])) -> f64 {
+    let mut best = f64::MAX;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for p in probes {
+            f(p);
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    probes.len() as f64 / best
+}
+
+/// The read-path axis: ε-neighborhood and kNN QPS through the pinned
+/// ε-cell index vs the retained scan oracle at each live size in `sizes`,
+/// plus the per-op index-maintenance tax on the standard churn workload
+/// (index on vs `.spatial_index(false)`, the obs-overhead alternating
+/// min-of-reps template). Indexed answers are asserted bit-identical to
+/// the oracle's on every probe before any timing starts.
+fn read_path_section(sizes: &[usize], n: usize, reps: usize) -> Json {
+    let knn_k = 10usize;
+    let mut table = Table::new(
+        "read path: indexed vs scan QPS (ε-neighborhood, kNN k=10)",
+        &["live", "ε idx qps", "ε scan qps", "ε speedup", "kNN idx qps", "kNN scan qps"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &live in sizes {
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: live,
+                dim: DIM,
+                clusters: 24,
+                std: 0.3,
+                center_box: 60.0,
+                weights: vec![],
+            },
+            11,
+        );
+        let mut eng = EngineBuilder::new(DIM).seed(42).build().unwrap();
+        for i in 0..live {
+            eng.upsert(i as u64, ds.point(i));
+        }
+        let view = eng.publish();
+        assert!(
+            view.has_spatial_index(),
+            "read-path bench needs the index on (DIM must stay within \
+             IndexPolicy::max_dim)"
+        );
+        let probes = read_probes(&ds, live, 64, 0xBEEF ^ live as u64);
+        // exactness spot check before timing: the indexed path must
+        // reproduce the oracle bit-for-bit on every probe
+        for p in &probes {
+            assert_eq!(
+                view.epsilon_neighbors(p),
+                view.epsilon_neighbors_scan(p),
+                "indexed ε-query diverged from the scan oracle"
+            );
+            assert_eq!(
+                view.k_nearest(p, knn_k),
+                view.k_nearest_scan(p, knn_k),
+                "indexed kNN diverged from the scan oracle"
+            );
+        }
+        let eps_idx = time_queries(&probes, reps, |p| {
+            std::hint::black_box(view.epsilon_neighbors(p));
+        });
+        let eps_scan = time_queries(&probes, reps, |p| {
+            std::hint::black_box(view.epsilon_neighbors_scan(p));
+        });
+        let knn_idx = time_queries(&probes, reps, |p| {
+            std::hint::black_box(view.k_nearest(p, knn_k));
+        });
+        let knn_scan = time_queries(&probes, reps, |p| {
+            std::hint::black_box(view.k_nearest_scan(p, knn_k));
+        });
+        let _ = eng.finish();
+        let eps_speedup = eps_idx / eps_scan;
+        table.row(vec![
+            live.to_string(),
+            format!("{eps_idx:.0}"),
+            format!("{eps_scan:.0}"),
+            format!("{eps_speedup:.1}x"),
+            format!("{knn_idx:.0}"),
+            format!("{knn_scan:.0}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("live", Json::num(live as f64)),
+            ("eps_indexed_qps", Json::num(eps_idx)),
+            ("eps_scan_qps", Json::num(eps_scan)),
+            ("eps_speedup", Json::num(eps_speedup)),
+            ("knn_indexed_qps", Json::num(knn_idx)),
+            ("knn_scan_qps", Json::num(knn_scan)),
+            ("knn_speedup", Json::num(knn_idx / knn_scan)),
+        ]));
+    }
+    table.print();
+
+    // maintenance tax: the identical churn workload with the per-op
+    // index folds on vs off, alternating, min-of-reps per path
+    let (ds, ops) = build_workload(n, 0.2, 19);
+    let total_ops = ops.len() as f64;
+    let mut on_best = f64::MAX;
+    let mut off_best = f64::MAX;
+    for _ in 0..reps {
+        for index_on in [true, false] {
+            let mut eng = EngineBuilder::new(DIM)
+                .seed(42)
+                .spatial_index(index_on)
+                .build()
+                .expect("read-path engine");
+            let t0 = Instant::now();
+            for op in &ops {
+                match *op {
+                    WlOp::Insert(ext) => eng.upsert(ext, ds.point(ext as usize)),
+                    WlOp::Delete(ext) => eng.remove(ext),
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let view = eng.publish();
+            std::hint::black_box(view.clusters());
+            if index_on {
+                on_best = on_best.min(wall);
+            } else {
+                off_best = off_best.min(wall);
+            }
+        }
+    }
+    let overhead = on_best / off_best - 1.0;
+    let mut tax = Table::new(
+        "read path: index maintenance tax (churn per-op, index on vs off)",
+        &["index", "ops/s"],
+    );
+    tax.row(vec!["off".into(), format!("{:.0}", total_ops / off_best)]);
+    tax.row(vec![
+        format!("on ({:+.2}%)", overhead * 100.0),
+        format!("{:.0}", total_ops / on_best),
+    ]);
+    tax.print();
+
+    Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("knn_k", Json::num(knn_k as f64)),
+        ("eps_speedup_gate_full", Json::num(EPS_SPEEDUP_GATE_FULL)),
+        ("sizes", Json::Arr(rows)),
+        ("index_on_ops_per_s", Json::num(total_ops / on_best)),
+        ("index_off_ops_per_s", Json::num(total_ops / off_best)),
+        ("maintenance_overhead_frac", Json::num(overhead)),
+        ("maintenance_gate_frac", Json::num(read_gate(n as f64))),
+    ])
+}
+
+// ---------------------------------------------------------------------
 // adversarial chain churn: the replacement-search worst case
 // ---------------------------------------------------------------------
 
@@ -1046,6 +1245,9 @@ fn update_throughput(
     // live at full scale, tiny stand-ins under --smoke)
     let recovery_sizes = [publish.0[0], *publish.0.last().unwrap()];
     let durability_section = recovery_section(&ds, &ops, n, reps, &recovery_sizes);
+    // read-path QPS at the same ends of the size span as recovery —
+    // the ≥10× ε-speedup gate applies when both ends are full scale
+    let read_section = read_path_section(&recovery_sizes, n, reps);
 
     let record = Json::obj(vec![
         ("bench", Json::str("updates_throughput")),
@@ -1070,6 +1272,7 @@ fn update_throughput(
         ("facade_overhead", facade_section),
         ("obs_overhead", obs_section),
         ("durability", durability_section),
+        ("read_path", read_section),
         (
             "single_batched",
             Json::obj(vec![
@@ -1234,6 +1437,51 @@ fn validate_updates_json(path: &std::path::Path) {
              ({tail} vs {cold})"
         );
     }
+
+    // read-path axis: indexed and scan QPS at both ends of the size
+    // span, the asymptotic ε-speedup gate at full scale, and the
+    // index-maintenance tax under its gate
+    let rp = j
+        .get("read_path")
+        .unwrap_or_else(|| panic!("missing read_path in {}", path.display()));
+    let rp_rows = rp
+        .get("sizes")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("missing read_path.sizes in {}", path.display()));
+    assert!(rp_rows.len() >= 2, "read-path axis needs >= 2 live sizes");
+    let mut rp_lives = Vec::new();
+    for row in rp_rows {
+        for field in
+            ["eps_indexed_qps", "eps_scan_qps", "knn_indexed_qps", "knn_scan_qps"]
+        {
+            assert!(
+                row.get(field).and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+                "read_path row missing {field}"
+            );
+        }
+        rp_lives.push(row.get("live").and_then(|v| v.as_f64()).unwrap_or(0.0));
+    }
+    if rp_lives.iter().all(|&l| l >= 50_000.0) {
+        for row in rp_rows {
+            let sp = row.get("eps_speedup").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            assert!(
+                sp >= EPS_SPEEDUP_GATE_FULL,
+                "indexed ε-query speedup {sp:.1}x below the \
+                 {EPS_SPEEDUP_GATE_FULL}x gate at full scale"
+            );
+        }
+    }
+    let maint = rp
+        .get("maintenance_overhead_frac")
+        .and_then(|v| v.as_f64())
+        .expect("read_path missing maintenance_overhead_frac");
+    let maint_gate = read_gate(rp.get("n").and_then(|v| v.as_f64()).unwrap_or(0.0));
+    assert!(
+        maint <= maint_gate,
+        "index maintenance per-op overhead {:.1}% exceeds the {:.0}% gate",
+        maint * 100.0,
+        maint_gate * 100.0
+    );
 
     // publish-latency axis: both stitch modes at every live size
     let pub_rows = j

@@ -24,6 +24,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("table2") => cmd_table2(args),
         Some("fig2") => cmd_fig2(args),
         Some("stream") => cmd_stream(args),
+        Some("query") => cmd_query(args),
         Some("verify") => cmd_verify(args),
         Some("info") => cmd_info(args),
         Some("help") | None => {
@@ -185,6 +186,128 @@ fn cmd_stream(args: &Args) -> Result<()> {
     println!("add     latency: {}", stats.add_latency.summary());
     println!("delete  latency: {}", stats.delete_latency.summary());
     println!("publish latency: {}", stats.publish_latency.summary());
+    Ok(())
+}
+
+/// Parse a `"X1,X2,..."` flag value into a `dim`-length coordinate row.
+/// Comma-separated form keeps negative coordinates unambiguous to the
+/// flag parser (a bare `-1.5` token would read as a flag).
+fn parse_point(s: &str, dim: usize) -> Result<Vec<f32>> {
+    let p: Vec<f32> = s
+        .split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<f32>()
+                .map_err(|_| anyhow!("bad coordinate '{t}' in '{s}'"))
+        })
+        .collect::<Result<_>>()?;
+    if p.len() != dim {
+        return Err(anyhow!(
+            "probe point has {} coordinates, dataset dim is {dim}",
+            p.len()
+        ));
+    }
+    Ok(p)
+}
+
+/// Point queries against one published snapshot: ε-neighborhood
+/// (`--eps X1,X2,...`) and/or k-nearest (`--knn K --at X1,X2,...`),
+/// answered through the snapshot-pinned ε-cell index *and* the
+/// brute-force scan oracle — timed separately, cross-checked for
+/// bit-identical results.
+fn cmd_query(args: &Args) -> Result<()> {
+    let name = args.get("dataset").unwrap_or("blobs");
+    let which = PaperDataset::from_name(name)
+        .ok_or_else(|| anyhow!("unknown dataset '{name}'"))?;
+    let scale = args.get_f64("scale", env_scale())?;
+    let seed = args.get_u64("seed", 42)?;
+    let ds = load(which, scale, seed);
+    let cfg = DbscanConfig {
+        k: args.get_usize("k", PAPER_K)?,
+        t: args.get_usize("t", PAPER_T)?,
+        eps: args.get_f64("radius", PAPER_EPS as f64)? as f32,
+        dim: ds.dim,
+        eager_attach: false,
+    };
+    let eps_probe = args.get("eps").map(|s| parse_point(s, ds.dim)).transpose()?;
+    let knn_k = args.get_usize("knn", 0)?;
+    let at = args.get("at").map(|s| parse_point(s, ds.dim)).transpose()?;
+    if eps_probe.is_none() && knn_k == 0 {
+        return Err(anyhow!(
+            "nothing to query: pass --eps X1,X2,... and/or --knn K --at X1,X2,..."
+        ));
+    }
+    let mut builder = EngineBuilder::from_config(cfg).seed(seed);
+    if args.get_bool("no-index") {
+        builder = builder.spatial_index(false);
+    }
+    let mut eng = builder.build()?;
+    for i in 0..ds.n() {
+        eng.upsert(i as u64, ds.point(i));
+    }
+    let t0 = std::time::Instant::now();
+    let view = eng.publish();
+    println!(
+        "{}: n={} dim={} published v{} in {:.1} ms — {} (ε={})",
+        ds.name,
+        ds.n(),
+        ds.dim,
+        view.version(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        if view.has_spatial_index() {
+            "ε-cell index pinned to the snapshot"
+        } else {
+            "scan fallback (index off)"
+        },
+        view.eps(),
+    );
+    if let Some(p) = &eps_probe {
+        let t0 = std::time::Instant::now();
+        let hits = view.epsilon_neighbors(p);
+        let idx_us = t0.elapsed().as_secs_f64() * 1e6;
+        let t0 = std::time::Instant::now();
+        let oracle = view.epsilon_neighbors_scan(p);
+        let scan_us = t0.elapsed().as_secs_f64() * 1e6;
+        if hits != oracle {
+            return Err(anyhow!(
+                "indexed ε-query diverged from the scan oracle at {p:?}"
+            ));
+        }
+        let shown = hits.len().min(16);
+        println!(
+            "ε-neighborhood at {:?}: {} points in {idx_us:.0} µs \
+             (scan {scan_us:.0} µs, identical): {:?}{}",
+            p,
+            hits.len(),
+            &hits[..shown],
+            if hits.len() > shown { " …" } else { "" },
+        );
+    }
+    if knn_k > 0 {
+        let p = at.as_ref().or(eps_probe.as_ref()).ok_or_else(|| {
+            anyhow!("--knn needs a probe point: --at X1,X2,...")
+        })?;
+        let t0 = std::time::Instant::now();
+        let hits = view.k_nearest(p, knn_k);
+        let idx_us = t0.elapsed().as_secs_f64() * 1e6;
+        let t0 = std::time::Instant::now();
+        let oracle = view.k_nearest_scan(p, knn_k);
+        let scan_us = t0.elapsed().as_secs_f64() * 1e6;
+        if hits != oracle {
+            return Err(anyhow!("indexed kNN diverged from the scan oracle at {p:?}"));
+        }
+        println!(
+            "{} nearest to {p:?} in {idx_us:.0} µs (scan {scan_us:.0} µs, identical):",
+            hits.len()
+        );
+        for (ext, d) in &hits {
+            println!(
+                "  ext {ext:<10} dist {d:.4}  label {}",
+                view.label(*ext).unwrap_or(-1)
+            );
+        }
+    }
+    let _ = eng.finish();
     Ok(())
 }
 

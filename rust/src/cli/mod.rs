@@ -117,6 +117,14 @@ COMMANDS:
                  --persist DIR (durable engine: op-log WAL + periodic
                  checkpoint in DIR; a rerun recovers the persisted
                  state before streaming)
+    query      Load a dataset, publish one snapshot, then answer point
+               queries through the snapshot-pinned ε-cell index AND the
+               brute-force scan oracle (timed, cross-checked identical)
+                 --eps X1,X2,...   ε-neighborhood probe at that point
+                 --knn K --at X1,X2,...   K nearest neighbors
+                 --dataset blobs --scale 0.05 --seed 42
+                 --k/--t N --radius R (DBSCAN params; R is the ε radius)
+                 --no-index (force the scan fallback everywhere)
     verify     Run the Theorem-2 invariant checker on a random workload
                driven through the serve facade
                  --ops 2000 --seed 7

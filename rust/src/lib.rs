@@ -48,11 +48,14 @@
 //! engine.upsert(1, &[0.0, 0.0]);
 //! engine.upsert(2, &[0.1, 0.1]);
 //!
-//! // reads: versioned immutable snapshots with a visible freshness gap
+//! // reads: versioned immutable snapshots with a visible freshness gap;
+//! // ε-neighborhood and kNN queries answer sublinearly from a pinned
+//! // per-snapshot ε-cell index (see serve::IndexPolicy)
 //! assert_eq!(engine.snapshot().pending_writes(), 2);
 //! let view = engine.publish(); // read-your-publishes
 //! let _ = view.label(1) == view.label(2);
 //! let _near = view.epsilon_neighbors(&[0.0, 0.0]);
+//! let _top3 = view.k_nearest(&[0.0, 0.0], 3);
 //!
 //! engine.remove(1);
 //! let view = engine.publish();

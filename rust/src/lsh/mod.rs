@@ -144,6 +144,21 @@ impl GridHasher {
     }
 }
 
+/// 64-bit key for an integer ε-grid cell row — the read-side sibling of
+/// [`GridHasher::key_from_coords`], used by the snapshot spatial index
+/// (`serve::index`). 64 bits instead of 128 because the index stores keys
+/// in a `ChunkedCowMap<_>` (u64-keyed) and a key collision there merely
+/// merges two cells' candidate lists — the exact distance filter downstream
+/// makes collisions harmless, unlike the write-path LSH buckets.
+#[inline]
+pub fn cell_key(cell: &[i64]) -> u64 {
+    let mut h: u64 = 0x243f_6a88_85a3_08d3; // pi digits — arbitrary
+    for &c in cell {
+        h = mix64(h ^ (c as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

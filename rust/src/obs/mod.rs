@@ -87,15 +87,19 @@ pub enum UpdateStage {
     EttLinkCut,
     /// HDT replacement search incl. level promotion sweeps
     LevelPromotion,
+    /// snapshot spatial-index maintenance folded into the update path:
+    /// ε-cell probe (cell hash + CoW bucket edit) per upsert/remove
+    IndexProbe,
 }
 
 impl UpdateStage {
-    pub const COUNT: usize = 4;
+    pub const COUNT: usize = 5;
     pub const ALL: [UpdateStage; Self::COUNT] = [
         UpdateStage::Hash,
         UpdateStage::NeighborQuery,
         UpdateStage::EttLinkCut,
         UpdateStage::LevelPromotion,
+        UpdateStage::IndexProbe,
     ];
 
     pub fn name(self) -> &'static str {
@@ -104,6 +108,7 @@ impl UpdateStage {
             UpdateStage::NeighborQuery => "neighbor_query",
             UpdateStage::EttLinkCut => "ett_link_cut",
             UpdateStage::LevelPromotion => "level_promotion",
+            UpdateStage::IndexProbe => "index_probe",
         }
     }
 
@@ -309,10 +314,15 @@ pub enum Gauge {
     /// WAL records appended but not yet group-fsynced (durability lag in
     /// ops; zeroed at every publish barrier by the fsync)
     WalLag,
+    /// non-empty ε-cells in the snapshot spatial index at last publish
+    IndexCells,
+    /// spatial-index chunk-sharing ratio at last publish (1.0 = fully
+    /// shared with the previous snapshot's index)
+    CowIndexSharing,
 }
 
 impl Gauge {
-    pub const COUNT: usize = 11;
+    pub const COUNT: usize = 13;
     pub const ALL: [Gauge; Self::COUNT] = [
         Gauge::LivePoints,
         Gauge::GhostRatio,
@@ -325,6 +335,8 @@ impl Gauge {
         Gauge::CowLabelSharing,
         Gauge::CowCoordSharing,
         Gauge::WalLag,
+        Gauge::IndexCells,
+        Gauge::CowIndexSharing,
     ];
 
     pub fn name(self) -> &'static str {
@@ -340,6 +352,8 @@ impl Gauge {
             Gauge::CowLabelSharing => "cow_label_sharing",
             Gauge::CowCoordSharing => "cow_coord_sharing",
             Gauge::WalLag => "wal_lag",
+            Gauge::IndexCells => "index_cells",
+            Gauge::CowIndexSharing => "cow_index_sharing",
         }
     }
 
@@ -347,7 +361,10 @@ impl Gauge {
     pub fn is_ratio(self) -> bool {
         matches!(
             self,
-            Gauge::GhostRatio | Gauge::CowLabelSharing | Gauge::CowCoordSharing
+            Gauge::GhostRatio
+                | Gauge::CowLabelSharing
+                | Gauge::CowCoordSharing
+                | Gauge::CowIndexSharing
         )
     }
 

@@ -11,6 +11,7 @@ use crate::dbscan::{ConnKind, DbscanConfig};
 use crate::shard::{FaultPlan, ShardConfig, StitchMode};
 
 use super::durable::{DurableEngine, DEFAULT_CHECKPOINT_EVERY};
+use super::index::IndexPolicy;
 use super::inline::InlineEngine;
 use super::sharded::ShardedServe;
 use super::ClusterEngine;
@@ -57,6 +58,7 @@ pub struct EngineBuilder {
     ghost_margin: u32,
     routing_dims: usize,
     metrics: bool,
+    index: IndexPolicy,
     persist: Option<PathBuf>,
     checkpoint_every: u64,
     publish_timeout_ms: u64,
@@ -84,6 +86,7 @@ impl EngineBuilder {
             ghost_margin: 2,
             routing_dims: 0,
             metrics: true,
+            index: IndexPolicy::default(),
             persist: None,
             checkpoint_every: DEFAULT_CHECKPOINT_EVERY,
             publish_timeout_ms: 10_000,
@@ -207,6 +210,39 @@ impl EngineBuilder {
         self
     }
 
+    /// Per-snapshot ε-cell spatial index (default on): sublinear
+    /// `epsilon_neighbors`/`k_nearest` on published views, maintained in
+    /// `O(Δ)` across publishes. Off pins every view to the `O(n·d)` scan
+    /// oracle — the indexed-vs-scan bench baseline.
+    pub fn spatial_index(mut self, on: bool) -> Self {
+        self.index.enabled = on;
+        self
+    }
+
+    /// Index cell side as a multiple of ε (default 2.0, the write-path
+    /// grid scale). Smaller cells probe more buckets with fewer points
+    /// each. Must be finite and positive (validated at `build`).
+    pub fn index_cell_factor(mut self, factor: f32) -> Self {
+        self.index.cell_factor = factor;
+        self
+    }
+
+    /// Dimensionality ceiling for the index (default 12): past it the
+    /// `≤3^d` cell-probe fan-out beats the scan, so views fall back to
+    /// the scan oracle.
+    pub fn index_max_dim(mut self, max_dim: usize) -> Self {
+        self.index.max_dim = max_dim;
+        self
+    }
+
+    /// Rebuild the index from scratch at every publish instead of
+    /// delta-maintaining it on the update path — the
+    /// `StitchMode::FullRebuild` analogue, kept as an ablation/fallback.
+    pub fn index_rebuild(mut self, on: bool) -> Self {
+        self.index.rebuild_at_publish = on;
+        self
+    }
+
     /// Test-only fault injection for one shard worker (see
     /// `shard::FaultPlan`); ignored by the single backend.
     #[doc(hidden)]
@@ -237,6 +273,12 @@ impl EngineBuilder {
                  .conn(ConnKind::Leveled)"
             ));
         }
+        if !(self.index.cell_factor.is_finite() && self.index.cell_factor > 0.0) {
+            return Err(anyhow!(
+                "index_cell_factor must be finite and positive, got {}",
+                self.index.cell_factor
+            ));
+        }
         let inner: Box<dyn ClusterEngine> = match self.backend {
             Backend::Single => {
                 let hashing = make_engine(&self.dbscan, self.seed, self.hashing)?;
@@ -247,6 +289,7 @@ impl EngineBuilder {
                     self.seed,
                     hashing,
                     self.metrics,
+                    self.index,
                 ))
             }
             Backend::Sharded(shards) => {
@@ -264,7 +307,7 @@ impl EngineBuilder {
                 scfg.metrics = self.metrics;
                 scfg.publish_timeout_ms = self.publish_timeout_ms;
                 scfg.faults = self.faults;
-                Box::new(ShardedServe::new(scfg))
+                Box::new(ShardedServe::new(scfg, self.index))
             }
         };
         match self.persist {
@@ -303,6 +346,36 @@ mod tests {
         assert!(err.is_err());
         // the connectivity-dependent default resolves the conflict
         assert!(EngineBuilder::new(2).conn(ConnKind::Repair).build().is_ok());
+    }
+
+    #[test]
+    fn index_knobs_and_validation() {
+        // default: index on at modest dims
+        let mut eng = EngineBuilder::new(2).k(3).t(4).build().unwrap();
+        assert!(eng.publish().has_spatial_index());
+        let _ = eng.finish();
+        // off, past the dim ceiling, or rebuild-mode all still build
+        let mut eng = EngineBuilder::new(2).k(3).t(4).spatial_index(false).build().unwrap();
+        assert!(!eng.publish().has_spatial_index());
+        let _ = eng.finish();
+        let mut eng = EngineBuilder::new(2).k(3).t(4).index_max_dim(1).build().unwrap();
+        assert!(!eng.publish().has_spatial_index());
+        let _ = eng.finish();
+        let mut eng = EngineBuilder::new(2)
+            .k(3)
+            .t(4)
+            .index_cell_factor(1.0)
+            .index_rebuild(true)
+            .build()
+            .unwrap();
+        eng.upsert(1, &[0.25, 0.25]);
+        let view = eng.publish();
+        assert!(view.has_spatial_index());
+        assert_eq!(view.epsilon_neighbors(&[0.25, 0.25]), vec![1]);
+        let _ = eng.finish();
+        // invalid cell factor is rejected at build
+        assert!(EngineBuilder::new(2).index_cell_factor(0.0).build().is_err());
+        assert!(EngineBuilder::new(2).index_cell_factor(f32::NAN).build().is_err());
     }
 
     #[test]

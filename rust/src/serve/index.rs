@@ -1,0 +1,652 @@
+//! Snapshot-pinned spatial index: sublinear ε-neighborhood and kNN reads.
+//!
+//! The serving north star is millions of read-QPS, but until this module
+//! the only read path for [`super::SnapshotView::epsilon_neighbors`] was an
+//! `O(n·d)` scan over the CoW coordinate store. Low-dimensional
+//! DBSCAN-style neighborhood queries are answerable in sublinear time from
+//! grid/box decompositions (de Berg et al., arXiv:1702.08607), and the
+//! ε-grid-cell decomposition is exactly what the write-path
+//! [`crate::lsh::GridHasher`] already computes (cf. Wang–Gu–Shun,
+//! arXiv:1912.06255). [`SpatialIndex`] turns those cells into a read-side
+//! structure:
+//!
+//! * **ε-cell bucket table** — `cell key → CellBucket` where a bucket holds
+//!   packed ext-id + row-major coordinate rows for every live point whose
+//!   per-axis cell is `⌊x_i / side⌋` (`side = cell_factor · ε`, default
+//!   `2ε` to match the write-path grid). Stored in a
+//!   [`ChunkedCowMap`] of `Arc<CellBucket>`: publishing clones chunk
+//!   *pointers*, and a delta publish deep-copies only the chunks — and via
+//!   `Arc::make_mut` only the *buckets* — actually touched, so maintenance
+//!   is folded into the delta-publish path in `O(Δ)` extra work.
+//! * **reverse map** — `ext → cell key`, so upserts/removes find the old
+//!   bucket without rehashing stale coordinates.
+//!
+//! Cell keys are 64-bit mixes ([`lsh::cell_key`]); a key collision merges
+//! two cells' candidate lists, which the exact distance filter below makes
+//! harmless (unlike the write-path LSH buckets, which need 128 bits).
+//!
+//! ## Exactness contract
+//!
+//! Indexed results are **bit-identical** to the brute-force scan: both
+//! paths share one distance kernel ([`dist2`] — f32 subtraction widened to
+//! f64, matching the pre-index scan), the probe box is *conservatively*
+//! widened by a `1e-6` relative margin (over-probing is filtered away;
+//! under-probing can never happen), and kNN tie-breaking is the
+//! lexicographic `(d², ext)` order in both the heap and the oracle sort.
+//! The scan oracles themselves live here too ([`scan_epsilon`],
+//! [`scan_k_nearest`]) — `tests/lint.rs` confines raw distance scans to
+//! this module so no new `O(n·d)` read path sneaks into serve.
+//!
+//! ## Dimension threshold
+//!
+//! An ε-probe visits ≤ `(1 + ⌈ε/side⌉·2)^d ≤ 3^d` adjacent cells (exactly
+//! `2^d` box corners at the default `side = 2ε`) and the kNN ring search
+//! `≈ 3^d` per ring, pruned by per-axis slab distance to roughly `1.5^d`
+//! visited on clustered data. Past `max_dim` (ablation: the crossover
+//! sits between the 2^12 = 4096-cell probe box and the scan on the
+//! standard 50k-point workloads) enumeration overhead swamps the scan, so
+//! [`IndexPolicy::build_for`] returns `None` and views fall back to the
+//! scan oracle.
+
+use std::sync::Arc;
+
+use rustc_hash::FxHashSet;
+
+use crate::lsh;
+use crate::util::cow_map::ChunkedCowMap;
+
+/// Target mean *cells* per CoW chunk — coarser than the per-point maps
+/// (cells aggregate many points, and a chunk deep-copy clones only
+/// `Arc<CellBucket>` pointers).
+const TARGET_CELLS_PER_CHUNK: usize = 8;
+
+/// Relative slack applied to probe ranges and prune bounds so f64
+/// rounding can only ever *over*-probe (the exact filter removes the
+/// excess), never miss a true neighbor.
+const PROBE_SLACK: f64 = 1e-6;
+
+/// Index build/maintenance policy — the `EngineBuilder` knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IndexPolicy {
+    /// Build the index at all? `false` pins every view to the scan oracle.
+    pub enabled: bool,
+    /// Cell side length as a multiple of ε. 2.0 matches the write-path
+    /// grid (probe box = `2^d` cells); smaller cells probe more buckets
+    /// with fewer points each.
+    pub cell_factor: f32,
+    /// Above this dimensionality the probe fan-out beats the scan —
+    /// `build_for` returns `None` and reads fall back (see module docs).
+    pub max_dim: usize,
+    /// Rebuild the index from scratch at every publish instead of
+    /// delta-maintaining it — the `StitchMode::FullRebuild` analogue,
+    /// kept as an ablation/fallback.
+    pub rebuild_at_publish: bool,
+}
+
+impl Default for IndexPolicy {
+    fn default() -> Self {
+        IndexPolicy {
+            enabled: true,
+            cell_factor: 2.0,
+            max_dim: 12,
+            rebuild_at_publish: false,
+        }
+    }
+}
+
+impl IndexPolicy {
+    /// The index this policy prescribes for an engine of the given shape —
+    /// `None` when disabled or past the dimension threshold (reads then
+    /// use the scan fallback).
+    pub(crate) fn build_for(&self, eps: f32, dim: usize) -> Option<SpatialIndex> {
+        if !self.enabled || dim > self.max_dim {
+            return None;
+        }
+        Some(SpatialIndex::new(eps, dim, self.cell_factor))
+    }
+}
+
+/// Packed rows of one ε-cell: parallel ext ids and row-major coordinates.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct CellBucket {
+    exts: Vec<u64>,
+    coords: Vec<f32>,
+}
+
+impl CellBucket {
+    fn rows(&self, dim: usize) -> impl Iterator<Item = (u64, &[f32])> + '_ {
+        self.exts.iter().zip(self.coords.chunks_exact(dim)).map(|(&e, c)| (e, c))
+    }
+
+    fn push(&mut self, ext: u64, x: &[f32]) {
+        self.exts.push(ext);
+        self.coords.extend_from_slice(x);
+    }
+
+    /// Swap-remove the row of `ext`; false if absent.
+    fn remove_ext(&mut self, ext: u64, dim: usize) -> bool {
+        let Some(i) = self.exts.iter().position(|&e| e == ext) else {
+            return false;
+        };
+        let last = self.exts.len() - 1;
+        self.exts.swap_remove(i);
+        if i != last {
+            let (head, tail) = self.coords.split_at_mut(last * dim);
+            head[i * dim..(i + 1) * dim].copy_from_slice(&tail[..dim]);
+        }
+        self.coords.truncate(last * dim);
+        true
+    }
+}
+
+/// Immutable-after-publish ε-cell index over the live coordinate set. The
+/// owning engine mutates it in `O(1)` per update op and clones it at
+/// publish (chunk-pointer copies); views share the clone behind an `Arc`.
+#[derive(Clone, Debug)]
+pub(crate) struct SpatialIndex {
+    /// cell key → bucket; `Arc` values so a chunk deep-copy clones bucket
+    /// *pointers* and only the touched bucket is deep-copied
+    cells: ChunkedCowMap<Arc<CellBucket>>,
+    /// ext → current cell key (liveness + relocation bookkeeping)
+    ext_cell: ChunkedCowMap<u64>,
+    eps: f32,
+    dim: usize,
+    cell_factor: f32,
+    /// cell side length, `cell_factor · ε` in f64
+    side: f64,
+}
+
+impl SpatialIndex {
+    pub fn new(eps: f32, dim: usize, cell_factor: f32) -> Self {
+        assert!(eps > 0.0 && dim > 0);
+        assert!(cell_factor.is_finite() && cell_factor > 0.0);
+        SpatialIndex {
+            cells: ChunkedCowMap::new(TARGET_CELLS_PER_CHUNK),
+            ext_cell: ChunkedCowMap::new(TARGET_CELLS_PER_CHUNK * 4),
+            eps,
+            dim,
+            cell_factor,
+            side: cell_factor as f64 * eps as f64,
+        }
+    }
+
+    /// Indexed points.
+    pub fn len(&self) -> usize {
+        self.ext_cell.len()
+    }
+
+    /// Non-empty ε-cells — the `index_cells` gauge.
+    pub fn num_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Fraction of CoW chunks still shared with the last published clone
+    /// (the more conservative of the two underlying maps) — the
+    /// `cow_index_sharing` gauge.
+    pub fn sharing_ratio(&self) -> f64 {
+        self.cells.sharing_ratio().min(self.ext_cell.sharing_ratio())
+    }
+
+    /// Double chunk counts once occupancy exceeds target — between
+    /// publishes, like the label/coord maps.
+    pub fn maybe_grow(&mut self) {
+        self.cells.maybe_grow();
+        self.ext_cell.maybe_grow();
+    }
+
+    #[inline]
+    fn cell_coord(&self, v: f32) -> i64 {
+        (v as f64 / self.side).floor() as i64
+    }
+
+    fn key_of(&self, x: &[f32], scratch: &mut Vec<i64>) -> u64 {
+        scratch.clear();
+        scratch.extend(x.iter().map(|&v| self.cell_coord(v)));
+        lsh::cell_key(scratch)
+    }
+
+    /// Insert or relocate a point. Same-cell coordinate updates rewrite
+    /// the row in place; cross-cell moves detach from the old bucket
+    /// first. `O(bucket)` worst case, `O(1)` amortized on ε-scale cells.
+    pub fn upsert(&mut self, ext: u64, x: &[f32]) {
+        debug_assert_eq!(x.len(), self.dim);
+        let dim = self.dim;
+        let mut scratch = Vec::with_capacity(dim);
+        let key = self.key_of(x, &mut scratch);
+        if let Some(&old) = self.ext_cell.get(ext) {
+            if old == key {
+                if let Some(b) = self.cells.get_mut(old) {
+                    let b = Arc::make_mut(b);
+                    if let Some(i) = b.exts.iter().position(|&e| e == ext) {
+                        b.coords[i * dim..(i + 1) * dim].copy_from_slice(x);
+                        return;
+                    }
+                }
+                debug_assert!(false, "ext_cell points at a bucket without the ext");
+            } else {
+                self.detach(ext, old);
+            }
+        }
+        self.ext_cell.set(ext, key);
+        let b = self.cells.get_or_insert_with(key, || Arc::new(CellBucket::default()));
+        Arc::make_mut(b).push(ext, x);
+    }
+
+    /// Remove a point; absent exts are a no-op (never deep-copies a
+    /// shared chunk).
+    pub fn remove(&mut self, ext: u64) {
+        if let Some(old) = self.ext_cell.remove(ext) {
+            self.detach(ext, old);
+        }
+    }
+
+    fn detach(&mut self, ext: u64, key: u64) {
+        let dim = self.dim;
+        let emptied = match self.cells.get_mut(key) {
+            Some(b) => {
+                let b = Arc::make_mut(b);
+                let found = b.remove_ext(ext, dim);
+                debug_assert!(found, "ext_cell pointed at a bucket without the ext");
+                b.exts.is_empty()
+            }
+            None => {
+                debug_assert!(false, "ext_cell pointed at a missing bucket");
+                false
+            }
+        };
+        if emptied {
+            self.cells.remove(key);
+        }
+    }
+
+    /// Rebuild from scratch off a row iterator — the
+    /// `rebuild_at_publish` fallback and the recovery path.
+    pub fn rebuild<'a>(&mut self, rows: impl Iterator<Item = (u64, &'a [f32])>) {
+        *self = SpatialIndex::new(self.eps, self.dim, self.cell_factor);
+        for (e, x) in rows {
+            self.upsert(e, x);
+        }
+    }
+
+    /// All indexed rows, unordered.
+    fn rows(&self) -> impl Iterator<Item = (u64, &[f32])> + '_ {
+        self.cells.iter().flat_map(move |(_, b)| b.rows(self.dim))
+    }
+
+    /// Enumerate the cells of the axis-aligned box `ranges`, pruning any
+    /// subtree whose accumulated per-axis slab distance² to `x` exceeds
+    /// `bound`. Visits each surviving cell's key once per distinct cell.
+    fn probe_box(
+        &self,
+        x: &[f32],
+        ranges: &[(i64, i64)],
+        bound: f64,
+        cell: &mut Vec<i64>,
+        visit: &mut dyn FnMut(u64),
+    ) {
+        self.probe_rec(x, ranges, bound, 0, 0.0, cell, visit);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn probe_rec(
+        &self,
+        x: &[f32],
+        ranges: &[(i64, i64)],
+        bound: f64,
+        axis: usize,
+        acc: f64,
+        cell: &mut Vec<i64>,
+        visit: &mut dyn FnMut(u64),
+    ) {
+        if axis == ranges.len() {
+            visit(lsh::cell_key(cell));
+            return;
+        }
+        let (lo, hi) = ranges[axis];
+        for c in lo..=hi {
+            let gap = axis_gap(x[axis] as f64, c, self.side);
+            let acc2 = acc + gap * gap;
+            if acc2 > bound {
+                continue;
+            }
+            cell[axis] = c;
+            self.probe_rec(x, ranges, bound, axis + 1, acc2, cell, visit);
+        }
+    }
+
+    /// Live points within Euclidean distance ε of `x`, sorted by ext —
+    /// bit-identical to [`scan_epsilon`] over the same rows. Probes the
+    /// ≤ `3^d` cells overlapping the ε-ball (exactly `2^d` at the default
+    /// `side = 2ε`), slab-pruned.
+    pub fn epsilon_neighbors(&self, x: &[f32]) -> Vec<u64> {
+        debug_assert_eq!(x.len(), self.dim);
+        let eps2 = (self.eps as f64) * (self.eps as f64);
+        let bound = eps2 * (1.0 + PROBE_SLACK);
+        let r = self.eps as f64 * (1.0 + PROBE_SLACK);
+        let ranges: Vec<(i64, i64)> = x
+            .iter()
+            .map(|&v| {
+                let v = v as f64;
+                (
+                    ((v - r) / self.side).floor() as i64,
+                    ((v + r) / self.side).floor() as i64,
+                )
+            })
+            .collect();
+        let mut out = Vec::new();
+        let mut cell = vec![0i64; self.dim];
+        self.probe_box(x, &ranges, bound, &mut cell, &mut |key| {
+            if let Some(b) = self.cells.get(key) {
+                for (ext, row) in b.rows(self.dim) {
+                    if dist2(row, x) <= eps2 {
+                        out.push(ext);
+                    }
+                }
+            }
+        });
+        out.sort_unstable();
+        // a 64-bit key collision inside the probe box would visit one
+        // merged bucket twice — dedup keeps the result set exact
+        out.dedup();
+        out
+    }
+
+    /// The `k` nearest live points to `x` as `(ext, distance)`, ordered by
+    /// `(distance², ext)` ascending — bit-identical to [`scan_k_nearest`].
+    /// Expanding Chebyshev-ring search from `x`'s cell; after finishing
+    /// ring `r` every unvisited cell is ≥ `r·side` away, so the search
+    /// stops once the current kth distance² is strictly below
+    /// `(r·side)²` (with downward slack, so exact-distance ties keep
+    /// probing and resolve by ext like the oracle sort).
+    pub fn k_nearest(&self, x: &[f32], k: usize) -> Vec<(u64, f64)> {
+        debug_assert_eq!(x.len(), self.dim);
+        let total = self.len();
+        if k == 0 || total == 0 {
+            return Vec::new();
+        }
+        // cells enumerated before conceding the data is too spread out
+        // for ring search and falling back to an internal full scan
+        let budget = 4096usize.max(self.num_cells() * 4);
+        let center: Vec<i64> = x.iter().map(|&v| self.cell_coord(v)).collect();
+        // max-heap of (d²-bits, ext): non-negative f64 bits are
+        // order-isomorphic to the values, so the heap keeps the k
+        // lexicographically smallest (d², ext) pairs
+        let mut heap: std::collections::BinaryHeap<(u64, u64)> =
+            std::collections::BinaryHeap::new();
+        let mut visited: FxHashSet<u64> = FxHashSet::default();
+        let mut examined = 0usize;
+        let mut enumerated = 0usize;
+        let mut cell = vec![0i64; self.dim];
+        for ring in 0i64.. {
+            let ranges: Vec<(i64, i64)> =
+                center.iter().map(|&c| (c - ring, c + ring)).collect();
+            let bound = if heap.len() >= k {
+                f64::from_bits(heap.peek().expect("heap has >= k >= 1 entries").0)
+                    * (1.0 + PROBE_SLACK)
+            } else {
+                f64::INFINITY
+            };
+            self.probe_box(x, &ranges, bound, &mut cell, &mut |key| {
+                enumerated += 1;
+                if !visited.insert(key) {
+                    return; // inner cells of previous rings
+                }
+                if let Some(b) = self.cells.get(key) {
+                    for (ext, row) in b.rows(self.dim) {
+                        examined += 1;
+                        let bits = dist2(row, x).to_bits();
+                        if heap.len() < k {
+                            heap.push((bits, ext));
+                        } else if (bits, ext) < *heap.peek().expect("heap is non-empty") {
+                            heap.pop();
+                            heap.push((bits, ext));
+                        }
+                    }
+                }
+            });
+            if examined >= total {
+                break; // every indexed point has been scored
+            }
+            if heap.len() >= k {
+                let kth = f64::from_bits(heap.peek().expect("heap has k entries").0);
+                let ring_lb = ring as f64 * self.side;
+                if kth < ring_lb * ring_lb * (1.0 - PROBE_SLACK) {
+                    break;
+                }
+            }
+            if enumerated > budget {
+                // sparse/far data: ring search degenerates — exact scan
+                // over our own rows (same kernel, same order, same result)
+                return scan_k_nearest(self.rows(), x, k);
+            }
+        }
+        let mut out: Vec<(u64, u64)> = heap.into_iter().collect();
+        out.sort_unstable();
+        out.into_iter().map(|(bits, ext)| (ext, f64::from_bits(bits).sqrt())).collect()
+    }
+}
+
+/// Distance from `x` to the slab `[c·side, (c+1)·side]` on one axis.
+/// Closed interval: boundary points report gap 0, which only ever
+/// *weakens* pruning (conservative).
+#[inline]
+fn axis_gap(x: f64, c: i64, side: f64) -> f64 {
+    let lo = c as f64 * side;
+    let hi = lo + side;
+    if x < lo {
+        lo - x
+    } else if x > hi {
+        x - hi
+    } else {
+        0.0
+    }
+}
+
+/// The one distance kernel both read paths share: f32 subtraction widened
+/// to f64, exactly the arithmetic of the pre-index scan — this is what
+/// makes indexed results bit-identical to the oracle.
+#[inline]
+pub(crate) fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(&p, &q)| {
+            let d = (p - q) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Brute-force ε-neighborhood oracle/fallback: every row within ε of `x`,
+/// sorted by ext. The only sanctioned `O(n·d)` distance scan
+/// (lint-enforced).
+pub(crate) fn scan_epsilon<'a>(
+    rows: impl Iterator<Item = (u64, &'a [f32])>,
+    x: &[f32],
+    eps: f32,
+) -> Vec<u64> {
+    let eps2 = (eps as f64) * (eps as f64);
+    let mut out: Vec<u64> =
+        rows.filter(|(_, c)| dist2(c, x) <= eps2).map(|(e, _)| e).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Brute-force kNN oracle/fallback: all rows scored and sorted by
+/// `(distance², ext)`, truncated to `k`, as `(ext, distance)`.
+pub(crate) fn scan_k_nearest<'a>(
+    rows: impl Iterator<Item = (u64, &'a [f32])>,
+    x: &[f32],
+    k: usize,
+) -> Vec<(u64, f64)> {
+    let mut all: Vec<(u64, u64)> = rows.map(|(e, c)| (dist2(c, x).to_bits(), e)).collect();
+    all.sort_unstable();
+    all.truncate(k);
+    all.into_iter().map(|(bits, e)| (e, f64::from_bits(bits).sqrt())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_points(rng: &mut Rng, n: usize, dim: usize, extent: f64) -> Vec<(u64, Vec<f32>)> {
+        (0..n as u64)
+            .map(|e| {
+                let x: Vec<f32> =
+                    (0..dim).map(|_| ((rng.next_f64() - 0.5) * extent) as f32).collect();
+                (e, x)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn upsert_remove_relocate_roundtrip() {
+        let mut ix = SpatialIndex::new(0.5, 2, 2.0);
+        ix.upsert(1, &[0.1, 0.1]);
+        ix.upsert(2, &[0.2, 0.2]); // same cell
+        ix.upsert(3, &[10.0, 10.0]); // far cell
+        assert_eq!(ix.len(), 3);
+        assert_eq!(ix.num_cells(), 2);
+        // in-place same-cell coordinate update
+        ix.upsert(2, &[0.3, 0.3]);
+        assert_eq!(ix.len(), 3);
+        assert_eq!(ix.num_cells(), 2);
+        assert_eq!(ix.epsilon_neighbors(&[0.3, 0.3]), vec![1, 2]);
+        // cross-cell relocation
+        ix.upsert(1, &[10.0, 10.1]);
+        assert_eq!(ix.epsilon_neighbors(&[10.0, 10.0]), vec![1, 3]);
+        assert_eq!(ix.epsilon_neighbors(&[0.3, 0.3]), vec![2]);
+        // removal prunes emptied cells
+        ix.remove(2);
+        ix.remove(2); // absent: no-op
+        assert_eq!(ix.len(), 2);
+        assert_eq!(ix.num_cells(), 1);
+        assert_eq!(ix.epsilon_neighbors(&[0.3, 0.3]), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn epsilon_matches_scan_randomized() {
+        let mut rng = Rng::new(0xE75);
+        for dim in [1usize, 2, 3, 5] {
+            for _ in 0..20 {
+                let eps = (0.2 + rng.next_f64() * 1.5) as f32;
+                let factor = [0.5f32, 1.0, 2.0][(rng.next_u64() % 3) as usize];
+                let mut ix = SpatialIndex::new(eps, dim, factor);
+                let pts = random_points(&mut rng, 300, dim, 8.0);
+                for (e, x) in &pts {
+                    ix.upsert(*e, x);
+                }
+                for _ in 0..20 {
+                    // half the probes sit exactly on a data point so
+                    // distance-exactly-ε and duplicate cases get exercised
+                    let probe: Vec<f32> = if rng.next_u64() % 2 == 0 {
+                        pts[(rng.next_u64() as usize) % pts.len()].1.clone()
+                    } else {
+                        (0..dim).map(|_| ((rng.next_f64() - 0.5) * 8.0) as f32).collect()
+                    };
+                    let want = scan_epsilon(
+                        pts.iter().map(|(e, x)| (*e, x.as_slice())),
+                        &probe,
+                        eps,
+                    );
+                    assert_eq!(ix.epsilon_neighbors(&probe), want, "dim={dim} eps={eps}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_nearest_matches_scan_randomized() {
+        let mut rng = Rng::new(0x4E4);
+        for dim in [1usize, 2, 4] {
+            for _ in 0..15 {
+                let eps = (0.2 + rng.next_f64()) as f32;
+                let mut ix = SpatialIndex::new(eps, dim, 2.0);
+                let mut pts = random_points(&mut rng, 250, dim, 10.0);
+                // duplicate coordinates: distance ties must break by ext
+                let dup = pts[0].1.clone();
+                pts.push((9_000, dup.clone()));
+                pts.push((9_001, dup));
+                for (e, x) in &pts {
+                    ix.upsert(*e, x);
+                }
+                for &k in &[0usize, 1, 3, 10, 300] {
+                    let probe: Vec<f32> =
+                        (0..dim).map(|_| ((rng.next_f64() - 0.5) * 12.0) as f32).collect();
+                    let want = scan_k_nearest(
+                        pts.iter().map(|(e, x)| (*e, x.as_slice())),
+                        &probe,
+                        k,
+                    );
+                    assert_eq!(ix.k_nearest(&probe, k), want, "dim={dim} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_nearest_far_probe_falls_back_consistently() {
+        let mut rng = Rng::new(7);
+        let mut ix = SpatialIndex::new(0.3, 3, 2.0);
+        let pts = random_points(&mut rng, 100, 3, 2.0);
+        for (e, x) in &pts {
+            ix.upsert(*e, x);
+        }
+        // probe far outside the data extent: many empty rings
+        let probe = [500.0f32, -500.0, 500.0];
+        let want = scan_k_nearest(pts.iter().map(|(e, x)| (*e, x.as_slice())), &probe, 5);
+        assert_eq!(ix.k_nearest(&probe, 5), want);
+    }
+
+    #[test]
+    fn clone_shares_until_touched() {
+        let mut rng = Rng::new(11);
+        let mut ix = SpatialIndex::new(0.5, 2, 2.0);
+        for (e, x) in random_points(&mut rng, 2_000, 2, 50.0) {
+            ix.upsert(e, &x);
+        }
+        let snap = ix.clone(); // "publish"
+        assert!((ix.sharing_ratio() - 1.0).abs() < 1e-12);
+        let before = snap.epsilon_neighbors(&[0.0, 0.0]);
+        ix.upsert(5_000, &[0.0, 0.0]);
+        assert!(ix.sharing_ratio() < 1.0);
+        // the published clone is unaffected
+        assert_eq!(snap.epsilon_neighbors(&[0.0, 0.0]), before);
+        assert!(ix.epsilon_neighbors(&[0.0, 0.0]).contains(&5_000));
+    }
+
+    #[test]
+    fn rebuild_matches_incremental() {
+        let mut rng = Rng::new(23);
+        let mut inc = SpatialIndex::new(0.4, 3, 2.0);
+        let pts = random_points(&mut rng, 500, 3, 6.0);
+        for (e, x) in &pts {
+            inc.upsert(*e, x);
+        }
+        for e in 0..100u64 {
+            inc.remove(e * 3);
+        }
+        let live: Vec<(u64, Vec<f32>)> =
+            pts.iter().filter(|(e, _)| !(*e % 3 == 0 && *e / 3 < 100)).cloned().collect();
+        let mut full = SpatialIndex::new(0.4, 3, 2.0);
+        full.rebuild(live.iter().map(|(e, x)| (*e, x.as_slice())));
+        assert_eq!(inc.len(), full.len());
+        assert_eq!(inc.num_cells(), full.num_cells());
+        for _ in 0..10 {
+            let probe: Vec<f32> =
+                (0..3).map(|_| ((rng.next_f64() - 0.5) * 6.0) as f32).collect();
+            assert_eq!(inc.epsilon_neighbors(&probe), full.epsilon_neighbors(&probe));
+            assert_eq!(inc.k_nearest(&probe, 7), full.k_nearest(&probe, 7));
+        }
+    }
+
+    #[test]
+    fn policy_gates_build() {
+        let p = IndexPolicy::default();
+        assert!(p.build_for(0.5, 2).is_some());
+        assert!(p.build_for(0.5, p.max_dim).is_some());
+        assert!(p.build_for(0.5, p.max_dim + 1).is_none());
+        let off = IndexPolicy { enabled: false, ..IndexPolicy::default() };
+        assert!(off.build_for(0.5, 2).is_none());
+    }
+}

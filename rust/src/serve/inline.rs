@@ -26,8 +26,11 @@ use crate::shard::{LabelChange, LabelMap, StitchMode};
 use crate::util::stats::LatencyHisto;
 
 use super::events::{derive_events, ClusterEvents, EventHub};
+use super::index::{IndexPolicy, SpatialIndex};
 use super::snapshot::{CoordMap, SnapshotView};
-use super::{ClusterEngine, Health, MetricsSnapshot, ServeOutcome, Stats, Update};
+use super::{
+    ClusterEngine, Health, MetricsSnapshot, ServeOutcome, Stats, Update, WalStats,
+};
 
 pub(crate) struct InlineEngine {
     db: AnyDbscan,
@@ -53,6 +56,11 @@ pub(crate) struct InlineEngine {
     key_row: Vec<BucketKey>,
     /// live coordinates (CoW-shared with published views)
     coords: CoordMap,
+    /// ε-cell spatial index (CoW-shared with published views); `None`
+    /// when the policy disables it or `dim` exceeds its threshold
+    index: Option<SpatialIndex>,
+    /// the policy that built `index` (carries the rebuild-fallback flag)
+    index_policy: IndexPolicy,
     /// the latest published view
     view: SnapshotView,
     version: u64,
@@ -79,6 +87,7 @@ impl InlineEngine {
         seed: u64,
         hashing: Box<dyn HashingEngine>,
         metrics: bool,
+        index_policy: IndexPolicy,
     ) -> Self {
         let (dim, eps) = (cfg.dim, cfg.eps);
         let mut db = AnyDbscan::new(conn, cfg, seed);
@@ -103,6 +112,8 @@ impl InlineEngine {
             dirty: FxHashSet::default(),
             key_row: Vec::new(),
             coords: CoordMap::new(),
+            index: index_policy.build_for(eps, dim),
+            index_policy,
             view: SnapshotView::empty(eps, dim),
             version: 0,
             pending: 0,
@@ -135,9 +146,40 @@ impl InlineEngine {
         self.ext_pid.insert(ext, pid);
         self.pid_ext.insert(pid, ext);
         self.coords.set(ext, coords);
+        self.index_upsert(ext, coords);
         self.dirty.insert(ext);
         self.inserts += 1;
         self.pending += 1;
+    }
+
+    /// Fold one index insertion into the update path under the
+    /// `index_probe` span — `O(1)` amortized. Skipped entirely in
+    /// rebuild-at-publish mode (the publish barrier rebuilds instead).
+    fn index_upsert(&mut self, ext: u64, coords: &[f32]) {
+        if self.index_policy.rebuild_at_publish {
+            return;
+        }
+        if let Some(ix) = self.index.as_mut() {
+            let sw = self.obs.enabled().then(Stopwatch::start);
+            ix.upsert(ext, coords);
+            if let Some(sw) = sw {
+                self.obs.record_update_stage(UpdateStage::IndexProbe, sw.elapsed_ns());
+            }
+        }
+    }
+
+    /// Index twin of a structure-level delete (see [`Self::index_upsert`]).
+    fn index_remove(&mut self, ext: u64) {
+        if self.index_policy.rebuild_at_publish {
+            return;
+        }
+        if let Some(ix) = self.index.as_mut() {
+            let sw = self.obs.enabled().then(Stopwatch::start);
+            ix.remove(ext);
+            if let Some(sw) = sw {
+                self.obs.record_update_stage(UpdateStage::IndexProbe, sw.elapsed_ns());
+            }
+        }
     }
 
     /// Structure-level deletion behind a remove or an upsert-replace —
@@ -151,6 +193,7 @@ impl InlineEngine {
         self.delete_latency.record(op_ns);
         self.obs.record_delete(op_ns);
         self.coords.remove(ext);
+        self.index_remove(ext);
         self.dirty.insert(ext);
     }
 
@@ -380,20 +423,38 @@ impl ClusterEngine for InlineEngine {
         self.version += 1;
         self.publishes += 1;
         self.pending = 0;
+        if self.index_policy.rebuild_at_publish {
+            // the StitchMode::FullRebuild analogue: no per-op
+            // maintenance, the barrier rebuilds the index from scratch
+            if let Some(ix) = self.index.as_mut() {
+                ix.rebuild(self.coords.iter());
+            }
+        }
         if self.obs.enabled() {
             // chunk sharing is measured before the clones below re-share
             // everything: unshared chunks are the ones rewritten since
             // the previous publish
             self.obs.set_ratio(Gauge::CowLabelSharing, self.labels.sharing_ratio());
             self.obs.set_ratio(Gauge::CowCoordSharing, self.coords.sharing_ratio());
+            if let Some(ix) = &self.index {
+                self.obs.set_gauge(Gauge::IndexCells, ix.num_cells() as u64);
+                self.obs.set_ratio(Gauge::CowIndexSharing, ix.sharing_ratio());
+            }
         }
         self.labels.maybe_grow();
         self.cores.maybe_grow();
         self.coords.maybe_grow();
+        if let Some(ix) = self.index.as_mut() {
+            ix.maybe_grow();
+        }
         debug_assert_eq!(
             self.coords.len(),
             self.db.num_points(),
             "coordinate store out of sync with the structure"
+        );
+        debug_assert!(
+            self.index.as_ref().map(|ix| ix.len() == self.coords.len()).unwrap_or(true),
+            "spatial index out of sync with the coordinate store"
         );
         let mut cs: Vec<(i64, usize)> =
             self.sizes.iter().map(|(&l, &s)| (l, s)).collect();
@@ -407,6 +468,7 @@ impl ClusterEngine for InlineEngine {
             self.labels.clone(),
             self.cores.clone(),
             self.coords.clone(),
+            self.index.as_ref().map(|ix| Arc::new(ix.clone())),
             self.eps,
             self.dim,
         );
@@ -483,6 +545,7 @@ impl ClusterEngine for InlineEngine {
             update_stages: self.obs.update_stage_histos(),
             gauges: self.obs.gauge_values(),
             hdt_level_verts: self.obs.level_verts().to_vec(),
+            wal: WalStats::default(),
         }
     }
 

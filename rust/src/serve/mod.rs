@@ -16,9 +16,10 @@
 //!                        (DynamicDbscan + ext map)      (ShardedEngine wrapper)
 //!                                    └──────────────┬──────────────┘
 //!        writes:  upsert / remove / apply(batch)    │ explicit publish()
-//!        reads:   SnapshotView (versioned, immutable, CoW)
+//!        reads:   SnapshotView (versioned, immutable, CoW + pinned ε-cell index)
 //!                   label · cluster_members · cluster_sizes ·
-//!                   epsilon_neighbors · stats · version · pending_writes
+//!                   epsilon_neighbors · k_nearest · stats · version ·
+//!                   pending_writes
 //!        events:  watch() → ClusterEvents (merge / split / moved per publish)
 //! ```
 //!
@@ -34,8 +35,12 @@
 //! publish; `pending_writes()` reports how many accepted writes the view
 //! does *not* reflect (0 on a view returned by `publish` —
 //! read-your-publishes). This fixes the historical `cluster_of` staleness
-//! trap: freshness is now visible in the type you read from. See
-//! [`snapshot`] for the full contract.
+//! trap: freshness is now visible in the type you read from. Neighborhood
+//! reads (`epsilon_neighbors`, `k_nearest`) are answered sublinearly from
+//! a per-snapshot ε-cell [`index::SpatialIndex`] delta-maintained across
+//! publishes ([`IndexPolicy`] on the builder governs cell size and
+//! fallback); `cluster_members` reads a lazily built per-view inverted
+//! index. See [`snapshot`] for the full contract.
 //!
 //! **Events.** [`ClusterEngine::watch`] subscribes to per-publish
 //! [`ClusterEvent`]s (merges, splits, formed/dissolved clusters, per-point
@@ -55,6 +60,7 @@ pub mod builder;
 mod durable;
 pub mod driver;
 pub mod events;
+pub mod index;
 mod inline;
 mod sharded;
 pub mod snapshot;
@@ -62,6 +68,7 @@ pub mod snapshot;
 pub use builder::{Backend, EngineBuilder};
 pub use durable::DurableEngine;
 pub use events::{ClusterEvent, ClusterEvents};
+pub use index::IndexPolicy;
 pub use snapshot::{SnapshotStats, SnapshotView};
 
 pub use crate::coordinator::driver::EngineKind;

@@ -9,13 +9,16 @@ use std::sync::Arc;
 use rustc_hash::FxHashSet;
 
 use crate::dbscan::RepairStats;
-use crate::obs::{Gauge, PhaseClock, Stopwatch};
+use crate::obs::{Gauge, PhaseClock, Stopwatch, UpdateStage};
 use crate::shard::{ShardConfig, ShardedEngine};
 use crate::util::stats::LatencyHisto;
 
 use super::events::{derive_events, ClusterEvents, EventHub};
+use super::index::{IndexPolicy, SpatialIndex};
 use super::snapshot::{CoordMap, SnapshotView};
-use super::{ClusterEngine, Health, MetricsSnapshot, ServeOutcome, Stats, Update};
+use super::{
+    ClusterEngine, Health, MetricsSnapshot, ServeOutcome, Stats, Update, WalStats,
+};
 
 pub(crate) struct ShardedServe {
     eng: ShardedEngine,
@@ -24,6 +27,11 @@ pub(crate) struct ShardedServe {
     /// live coordinates (CoW-shared with published views); also the
     /// liveness set backing `upsert`'s replace semantics
     coords: CoordMap,
+    /// ε-cell spatial index over the façade's authoritative live set
+    /// (CoW-shared with published views); `None` when disabled by policy
+    index: Option<SpatialIndex>,
+    /// the policy that built `index` (carries the rebuild-fallback flag)
+    index_policy: IndexPolicy,
     /// the latest published view
     view: SnapshotView,
     hub: EventHub,
@@ -36,13 +44,15 @@ pub(crate) struct ShardedServe {
 }
 
 impl ShardedServe {
-    pub fn new(cfg: ShardConfig) -> Self {
+    pub fn new(cfg: ShardConfig, index_policy: IndexPolicy) -> Self {
         let (dim, eps) = (cfg.dbscan.dim, cfg.dbscan.eps);
         ShardedServe {
             eng: ShardedEngine::new(cfg),
             dim,
             eps,
             coords: CoordMap::new(),
+            index: index_policy.build_for(eps, dim),
+            index_policy,
             view: SnapshotView::empty(eps, dim),
             hub: EventHub::default(),
             publish_latency: LatencyHisto::new(),
@@ -82,6 +92,38 @@ impl ShardedServe {
         }
     }
 
+    /// Fold one index insertion into the update path under the
+    /// `index_probe` span — `O(1)` amortized. Skipped entirely in
+    /// rebuild-at-publish mode (the publish barrier rebuilds instead).
+    fn index_upsert(&mut self, ext: u64, coords: &[f32]) {
+        if self.index_policy.rebuild_at_publish {
+            return;
+        }
+        if let Some(ix) = self.index.as_mut() {
+            let m = self.eng.metrics();
+            let sw = m.enabled().then(Stopwatch::start);
+            ix.upsert(ext, coords);
+            if let Some(sw) = sw {
+                m.record_update_stage(UpdateStage::IndexProbe, sw.elapsed_ns());
+            }
+        }
+    }
+
+    /// Index twin of a façade-level remove (see [`Self::index_upsert`]).
+    fn index_remove(&mut self, ext: u64) {
+        if self.index_policy.rebuild_at_publish {
+            return;
+        }
+        if let Some(ix) = self.index.as_mut() {
+            let m = self.eng.metrics();
+            let sw = m.enabled().then(Stopwatch::start);
+            ix.remove(ext);
+            if let Some(sw) = sw {
+                m.record_update_stage(UpdateStage::IndexProbe, sw.elapsed_ns());
+            }
+        }
+    }
+
     fn publish_inner(&mut self) -> SnapshotView {
         self.heal_down_shards();
         let t0 = Stopwatch::start();
@@ -92,18 +134,37 @@ impl ShardedServe {
         // derivation — folded into the engine's trace via
         // `note_facade_stages` below
         let mut clk = PhaseClock::maybe(obs_on);
+        if self.index_policy.rebuild_at_publish {
+            // the StitchMode::FullRebuild analogue: no per-op
+            // maintenance, the barrier rebuilds the index from scratch
+            if let Some(ix) = self.index.as_mut() {
+                ix.rebuild(self.coords.iter());
+            }
+        }
         if obs_on {
             // measured before the clone below re-shares everything:
             // chunks rewritten since the last publish are the unshared ones
             self.eng
                 .metrics()
                 .set_ratio(Gauge::CowCoordSharing, self.coords.sharing_ratio());
+            if let Some(ix) = &self.index {
+                let m = self.eng.metrics();
+                m.set_gauge(Gauge::IndexCells, ix.num_cells() as u64);
+                m.set_ratio(Gauge::CowIndexSharing, ix.sharing_ratio());
+            }
         }
         self.coords.maybe_grow();
+        if let Some(ix) = self.index.as_mut() {
+            ix.maybe_grow();
+        }
         debug_assert_eq!(
             self.coords.len(),
             snap.live_points,
             "coordinate store out of sync with the published snapshot"
+        );
+        debug_assert!(
+            self.index.as_ref().map(|ix| ix.len() == self.coords.len()).unwrap_or(true),
+            "spatial index out of sync with the coordinate store"
         );
         let view = SnapshotView::new(
             snap.seq,
@@ -114,6 +175,7 @@ impl ShardedServe {
             snap.label_map().clone(),
             snap.core_map().clone(),
             self.coords.clone(),
+            self.index.as_ref().map(|ix| Arc::new(ix.clone())),
             self.eps,
             self.dim,
         );
@@ -154,6 +216,7 @@ impl ClusterEngine for ShardedServe {
         }
         self.eng.insert(ext, coords);
         self.coords.set(ext, coords);
+        self.index_upsert(ext, coords);
         self.inserts += 1;
         self.pending += 1;
     }
@@ -165,6 +228,7 @@ impl ClusterEngine for ShardedServe {
         );
         self.eng.delete(ext);
         self.coords.remove(ext);
+        self.index_remove(ext);
         self.deletes += 1;
         self.pending += 1;
     }
@@ -237,6 +301,7 @@ impl ClusterEngine for ShardedServe {
             update_stages: m.update_stage_histos(),
             gauges: m.gauge_values(),
             hdt_level_verts: m.level_verts().to_vec(),
+            wal: WalStats::default(),
         }
     }
 

@@ -2,16 +2,25 @@
 //!
 //! A [`SnapshotView`] is the uniform read surface of every
 //! [`super::ClusterEngine`] backend: label lookups, cluster membership and
-//! sizes, ε-neighborhoods and summary stats, all answered from state
+//! sizes, ε-neighborhoods, kNN and summary stats, all answered from state
 //! frozen at one publish. Internally it is a bundle of CoW structures —
-//! the [`crate::shard::LabelMap`] label state plus a `CoordMap` of
-//! point coordinates — so cloning a view (and publishing the next one)
-//! costs `O(#chunks)` pointer copies, never `O(n)`.
+//! the [`crate::shard::LabelMap`] label state, a `CoordMap` of point
+//! coordinates, and (when the builder's `IndexPolicy` allows) a pinned
+//! [`super::index::SpatialIndex`] ε-cell table — so cloning a view (and
+//! publishing the next one) costs `O(#chunks)` pointer copies, never
+//! `O(n)`.
 //!
 //! ## Freshness contract
 //!
 //! * [`SnapshotView::version`] increases by one publish; two views with
-//!   the same version answer every query identically.
+//!   the same version answer every query identically. The spatial index
+//!   and the lazily built members index are *derived* state pinned at the
+//!   same publish barrier as the labels and coordinates, so indexed
+//!   answers ([`SnapshotView::epsilon_neighbors`],
+//!   [`SnapshotView::k_nearest`], [`SnapshotView::cluster_members`])
+//!   carry exactly the same freshness as the scans they replace — and are
+//!   bit-identical to the retained scan oracles
+//!   ([`SnapshotView::epsilon_neighbors_scan`] and friends).
 //! * A view reflects **exactly** the writes accepted before the publish
 //!   that produced it. Writes accepted later are invisible to it —
 //!   [`SnapshotView::pending_writes`] (captured when the handle was
@@ -19,8 +28,11 @@
 //! * For read-your-writes, call [`super::ClusterEngine::publish`] and use
 //!   the view it returns (its `pending_writes` is 0 by construction).
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
+use rustc_hash::FxHashMap;
+
+use super::index::{self, SpatialIndex};
 use crate::shard::LabelMap;
 use crate::util::cow_map::ChunkedCowMap;
 
@@ -113,6 +125,12 @@ pub struct SnapshotView {
     /// core-primary set ([`LabelMap`] used as a CoW set)
     cores: LabelMap,
     coords: CoordMap,
+    /// publish-pinned ε-cell index; `None` when disabled or past the
+    /// policy's dimension threshold (reads fall back to the scan oracle)
+    index: Option<Arc<SpatialIndex>>,
+    /// label → sorted members, built lazily on the first
+    /// `cluster_members` call and shared by every clone of this view
+    members: Arc<OnceLock<FxHashMap<i64, Vec<u64>>>>,
     eps: f32,
     dim: usize,
 }
@@ -128,9 +146,14 @@ impl SnapshotView {
         labels: LabelMap,
         cores: LabelMap,
         coords: CoordMap,
+        index: Option<Arc<SpatialIndex>>,
         eps: f32,
         dim: usize,
     ) -> Self {
+        debug_assert!(
+            index.as_ref().map(|ix| ix.len() == coords.len()).unwrap_or(true),
+            "spatial index out of sync with the coordinate store"
+        );
         SnapshotView {
             version,
             pending,
@@ -140,6 +163,8 @@ impl SnapshotView {
             labels,
             cores,
             coords,
+            index,
+            members: Arc::new(OnceLock::new()),
             eps,
             dim,
         }
@@ -156,6 +181,8 @@ impl SnapshotView {
             labels: LabelMap::new(),
             cores: LabelMap::new(),
             coords: CoordMap::new(),
+            index: None,
+            members: Arc::new(OnceLock::new()),
             eps,
             dim,
         }
@@ -238,9 +265,34 @@ impl SnapshotView {
         self.core_points
     }
 
-    /// Members of a cluster (`-1`: the noise set), sorted by ext —
-    /// materialized on demand in `O(n)`; never built on the publish path.
+    /// The lazily built label → sorted-members inverted index. First call
+    /// pays one `O(n log n)` build (noise, key `-1`, included — it is
+    /// *not* re-materialized per call); every later call on this view or
+    /// any clone of it is a lookup. Never built on the publish path.
+    fn members_index(&self) -> &FxHashMap<i64, Vec<u64>> {
+        self.members.get_or_init(|| {
+            let mut m: FxHashMap<i64, Vec<u64>> = FxHashMap::default();
+            for (e, l) in self.labels.iter() {
+                m.entry(l).or_default().push(e);
+            }
+            for v in m.values_mut() {
+                v.sort_unstable();
+            }
+            m
+        })
+    }
+
+    /// Members of a cluster (`-1`: the noise set), sorted by ext.
+    /// `O(|cluster|)` copy off the lazy inverted index (one `O(n log n)`
+    /// build amortized over every query on this snapshot version); an
+    /// unknown label — or any label on an empty snapshot — is `[]`.
     pub fn cluster_members(&self, label: i64) -> Vec<u64> {
+        self.members_index().get(&label).cloned().unwrap_or_default()
+    }
+
+    /// Scan-oracle twin of [`Self::cluster_members`]: one-shot `O(n)`
+    /// label filter, no inverted index (for the differential suite).
+    pub fn cluster_members_scan(&self, label: i64) -> Vec<u64> {
         let mut out: Vec<u64> = self
             .labels
             .iter()
@@ -263,30 +315,54 @@ impl SnapshotView {
 
     /// Live points within Euclidean distance ε of `x` (the classical
     /// DBSCAN ε-neighborhood), sorted by ext. Answered from the
-    /// publish-pinned coordinates — `O(n·d)` scan; an indexed read path
-    /// is an open item (ROADMAP). Panics on a wrong-dimensionality probe
-    /// (a truncated zip would silently inflate the neighborhood).
+    /// publish-pinned spatial index when one is attached — ≤ `3^d`
+    /// cell probes, sublinear in `n` — and bit-identically from the
+    /// `O(n·d)` scan oracle otherwise. Panics on a wrong-dimensionality
+    /// probe (a truncated zip would silently inflate the neighborhood).
     pub fn epsilon_neighbors(&self, x: &[f32]) -> Vec<u64> {
         assert_eq!(x.len(), self.dim, "bad dim in epsilon_neighbors");
-        let eps2 = (self.eps as f64) * (self.eps as f64);
-        let mut out: Vec<u64> = self
-            .coords
-            .iter()
-            .filter(|(_, c)| {
-                let d2: f64 = c
-                    .iter()
-                    .zip(x.iter())
-                    .map(|(&a, &b)| {
-                        let d = (a - b) as f64;
-                        d * d
-                    })
-                    .sum();
-                d2 <= eps2
-            })
-            .map(|(e, _)| e)
-            .collect();
-        out.sort_unstable();
-        out
+        match &self.index {
+            Some(ix) => ix.epsilon_neighbors(x),
+            None => self.epsilon_neighbors_scan(x),
+        }
+    }
+
+    /// Scan-oracle twin of [`Self::epsilon_neighbors`]: always the
+    /// brute-force `O(n·d)` pass over the pinned coordinates, regardless
+    /// of any attached index (for the differential suite and the
+    /// indexed-vs-scan bench axis).
+    pub fn epsilon_neighbors_scan(&self, x: &[f32]) -> Vec<u64> {
+        assert_eq!(x.len(), self.dim, "bad dim in epsilon_neighbors_scan");
+        index::scan_epsilon(self.coords.iter(), x, self.eps)
+    }
+
+    /// The `k` nearest live points to `x` as `(ext, Euclidean distance)`,
+    /// ordered by `(distance², ext)` ascending (fewer than `k` when the
+    /// snapshot is smaller; `[]` on an empty snapshot). Expanding-ring
+    /// search on the pinned index when attached, scan fallback otherwise
+    /// — identical results either way. Panics on a wrong-dimensionality
+    /// probe.
+    pub fn k_nearest(&self, x: &[f32], k: usize) -> Vec<(u64, f64)> {
+        assert_eq!(x.len(), self.dim, "bad dim in k_nearest");
+        match &self.index {
+            Some(ix) => ix.k_nearest(x, k),
+            None => self.k_nearest_scan(x, k),
+        }
+    }
+
+    /// Scan-oracle twin of [`Self::k_nearest`] (for the differential
+    /// suite and the indexed-vs-scan bench axis).
+    pub fn k_nearest_scan(&self, x: &[f32], k: usize) -> Vec<(u64, f64)> {
+        assert_eq!(x.len(), self.dim, "bad dim in k_nearest_scan");
+        index::scan_k_nearest(self.coords.iter(), x, k)
+    }
+
+    /// Is an ε-cell spatial index attached to this view? `false` means
+    /// neighborhood reads use the scan fallback (index disabled via
+    /// `EngineBuilder::spatial_index(false)` or `dim` past the policy
+    /// threshold).
+    pub fn has_spatial_index(&self) -> bool {
+        self.index.is_some()
     }
 
     /// `(ext, label)` for every live point, sorted by ext — `O(n log n)`,
@@ -355,6 +431,10 @@ mod tests {
         }
         cores.set(1, 1);
         cores.set(9, 1);
+        let mut ix = SpatialIndex::new(0.5, 2, 2.0);
+        for (e, c) in coords.iter() {
+            ix.upsert(e, c);
+        }
         let view = SnapshotView::new(
             3,
             2,
@@ -364,6 +444,7 @@ mod tests {
             labels,
             cores,
             coords,
+            Some(Arc::new(ix)),
             0.5,
             2,
         );
@@ -377,9 +458,58 @@ mod tests {
         assert!(!view.is_core(2) && !view.is_core(404));
         assert_eq!(view.cluster_members(0), vec![1, 2]);
         assert_eq!(view.cluster_members(-1), vec![3]);
+        assert!(view.has_spatial_index());
         assert_eq!(view.epsilon_neighbors(&[0.0, 0.0]), vec![1, 2]);
+        assert_eq!(view.epsilon_neighbors_scan(&[0.0, 0.0]), vec![1, 2]);
+        assert_eq!(
+            view.k_nearest(&[0.0, 0.0], 2),
+            view.k_nearest_scan(&[0.0, 0.0], 2)
+        );
+        assert_eq!(view.k_nearest(&[0.0, 0.0], 1)[0].0, 1);
         assert_eq!(view.clusters(), 2);
         assert_eq!(view.stats().live_points, 4);
         assert_eq!(view.labels(), vec![(1, 0), (2, 0), (3, -1), (9, 1)]);
+    }
+
+    #[test]
+    fn noise_members_and_members_scan_agree() {
+        let mut labels = LabelMap::new();
+        let mut coords = CoordMap::new();
+        for (e, l) in [(5u64, -1i64), (2, -1), (8, 0), (1, -1)] {
+            labels.set(e, l);
+            coords.set(e, &[e as f32, 0.0]);
+        }
+        let view = SnapshotView::new(
+            1,
+            0,
+            4,
+            0,
+            Arc::new(vec![(0, 1)]),
+            labels,
+            LabelMap::new(),
+            coords,
+            None,
+            0.5,
+            2,
+        );
+        // noise (-1) comes off the same lazy inverted index as any
+        // cluster — sorted, not re-materialized per call
+        assert_eq!(view.cluster_members(-1), vec![1, 2, 5]);
+        assert_eq!(view.cluster_members(-1), view.cluster_members_scan(-1));
+        assert_eq!(view.cluster_members(0), vec![8]);
+        assert_eq!(view.cluster_members(42), Vec::<u64>::new());
+        assert_eq!(view.cluster_members_scan(42), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn empty_snapshot_edge_cases() {
+        let view = SnapshotView::empty(0.5, 3);
+        assert!(!view.has_spatial_index());
+        assert_eq!(view.cluster_members(-1), Vec::<u64>::new());
+        assert_eq!(view.cluster_members(0), Vec::<u64>::new());
+        assert_eq!(view.epsilon_neighbors(&[0.0; 3]), Vec::<u64>::new());
+        assert_eq!(view.k_nearest(&[0.0; 3], 5), Vec::<(u64, f64)>::new());
+        assert_eq!(view.k_nearest(&[0.0; 3], 0), Vec::<(u64, f64)>::new());
+        assert_eq!(view.stats().live_points, 0);
     }
 }

@@ -90,6 +90,26 @@ impl<V: Clone> ChunkedCowMap<V> {
         prev
     }
 
+    /// Mutable access to an existing entry. Checks membership before
+    /// `Arc::make_mut` so probing an absent key never deep-copies a
+    /// snapshot-shared chunk.
+    pub fn get_mut(&mut self, key: u64) -> Option<&mut V> {
+        let i = self.chunk_ix(key);
+        if !self.chunks[i].contains_key(&key) {
+            return None;
+        }
+        Arc::make_mut(&mut self.chunks[i]).get_mut(&key)
+    }
+
+    /// Mutable access, inserting `make()` when the key is absent.
+    pub fn get_or_insert_with(&mut self, key: u64, make: impl FnOnce() -> V) -> &mut V {
+        let i = self.chunk_ix(key);
+        if !self.chunks[i].contains_key(&key) {
+            self.len += 1;
+        }
+        Arc::make_mut(&mut self.chunks[i]).entry(key).or_insert_with(make)
+    }
+
     /// Unordered iteration over `(key, &value)`.
     pub fn iter(&self) -> impl Iterator<Item = (u64, &V)> + '_ {
         self.chunks.iter().flat_map(|c| c.iter().map(|(&k, v)| (k, v)))

@@ -209,6 +209,7 @@ fn timing_goes_through_the_obs_span_api() {
         ("serve/builder.rs", include_str!("../src/serve/builder.rs")),
         ("serve/driver.rs", include_str!("../src/serve/driver.rs")),
         ("serve/events.rs", include_str!("../src/serve/events.rs")),
+        ("serve/index.rs", include_str!("../src/serve/index.rs")),
         ("serve/inline.rs", include_str!("../src/serve/inline.rs")),
         ("serve/sharded.rs", include_str!("../src/serve/sharded.rs")),
         ("serve/snapshot.rs", include_str!("../src/serve/snapshot.rs")),
@@ -237,6 +238,44 @@ fn timing_goes_through_the_obs_span_api() {
     }
 }
 
+/// Raw `O(n·d)` distance scans over the coordinate store are confined to
+/// the oracle/fallback module (`serve/index.rs`, which owns the shared
+/// `dist2` kernel plus the `scan_epsilon`/`scan_k_nearest` oracles): every
+/// other serve file must answer neighborhood reads through the spatial
+/// index or by *calling* the oracles — re-inlining the distance loop would
+/// quietly reintroduce the scan read path the index replaced.
+#[test]
+fn distance_scans_confined_to_the_oracle_module() {
+    for (name, src) in [
+        ("serve/mod.rs", include_str!("../src/serve/mod.rs")),
+        ("serve/builder.rs", include_str!("../src/serve/builder.rs")),
+        ("serve/driver.rs", include_str!("../src/serve/driver.rs")),
+        ("serve/durable.rs", include_str!("../src/serve/durable.rs")),
+        ("serve/events.rs", include_str!("../src/serve/events.rs")),
+        ("serve/inline.rs", include_str!("../src/serve/inline.rs")),
+        ("serve/sharded.rs", include_str!("../src/serve/sharded.rs")),
+        ("serve/snapshot.rs", include_str!("../src/serve/snapshot.rs")),
+    ] {
+        for pat in ["fn dist2", ".zip(x.iter())", "d * d"] {
+            assert!(
+                !src.contains(pat),
+                "{name} hand-rolls a coordinate distance scan ({pat}); \
+                 route the read through serve::index (SpatialIndex or the \
+                 scan_epsilon/scan_k_nearest oracles) instead"
+            );
+        }
+    }
+    // and the oracles themselves must stay in the sanctioned module
+    let index = include_str!("../src/serve/index.rs");
+    for required in ["fn dist2", "fn scan_epsilon", "fn scan_k_nearest"] {
+        assert!(
+            index.contains(required),
+            "serve/index.rs lost its `{required}` oracle/kernel — the \
+             differential suite and scan fallbacks depend on it"
+        );
+    }
+}
+
 /// Channel endpoints and worker joins in the sharded serving path must
 /// never `unwrap`/`expect`: a dead worker is a *recoverable* fault
 /// (`EngineError` → `Health::Degraded` → respawn), not a panic. Every
@@ -254,6 +293,7 @@ fn channel_ops_never_unwrap_in_the_serving_path() {
         ("serve/builder.rs", include_str!("../src/serve/builder.rs")),
         ("serve/durable.rs", include_str!("../src/serve/durable.rs")),
         ("serve/events.rs", include_str!("../src/serve/events.rs")),
+        ("serve/index.rs", include_str!("../src/serve/index.rs")),
         ("serve/inline.rs", include_str!("../src/serve/inline.rs")),
         ("serve/sharded.rs", include_str!("../src/serve/sharded.rs")),
     ] {

@@ -1,0 +1,286 @@
+//! Differential acceptance suite for the indexed read path: on random
+//! churn snapshots, `epsilon_neighbors` / `k_nearest` / `cluster_members`
+//! answered through the snapshot-pinned spatial index must be
+//! **bit-identical** to the retained brute-force scan oracles
+//! (`*_scan`), on both backends — including boundary-straddling probes,
+//! points at exactly distance ε, and duplicate coordinates. Plus the CoW
+//! contract: a publish that touches nothing must not deep-clone the
+//! index (sharing gauge stays 1.0), and durable recovery rebuilds an
+//! index that answers identically.
+
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::serve::{Backend, ClusterEngine, EngineBuilder, SnapshotView};
+use dyn_dbscan::util::proptest::{run_prop, Gen};
+use dyn_dbscan::util::rng::Rng;
+
+const EPS: f32 = 0.5;
+
+fn builder(dim: usize, seed: u64) -> EngineBuilder {
+    EngineBuilder::new(dim).k(4).t(6).eps(EPS).seed(seed)
+}
+
+/// Indexed vs oracle answers on one view, for a set of probes.
+fn assert_reads_match_oracle(view: &SnapshotView, probes: &[Vec<f32>]) {
+    for p in probes {
+        assert_eq!(
+            view.epsilon_neighbors(p),
+            view.epsilon_neighbors_scan(p),
+            "ε-neighborhood diverged from the scan oracle at {p:?}"
+        );
+        for k in [1usize, 5, 64] {
+            let indexed = view.k_nearest(p, k);
+            let oracle = view.k_nearest_scan(p, k);
+            assert_eq!(indexed, oracle, "kNN(k={k}) diverged at {p:?}");
+        }
+    }
+    let mut labels: Vec<i64> =
+        view.cluster_sizes().iter().map(|&(l, _)| l).collect();
+    labels.push(-1); // noise
+    labels.push(9_999_999); // unknown label
+    for l in labels {
+        assert_eq!(
+            view.cluster_members(l),
+            view.cluster_members_scan(l),
+            "cluster_members({l}) diverged from the scan oracle"
+        );
+    }
+}
+
+/// Probes that stress the cell decomposition: data points themselves
+/// (distance-0 and duplicate hits), points displaced by exactly ε along
+/// an axis (boundary of the ball), points straddling cell boundaries
+/// (displaced by the 2ε cell side), and uniform random positions.
+fn stress_probes(g: &mut Rng, view: &SnapshotView, dim: usize, extent: f64) -> Vec<Vec<f32>> {
+    let mut probes: Vec<Vec<f32>> = Vec::new();
+    let mut exts: Vec<u64> = Vec::new();
+    let mut labels: Vec<i64> =
+        view.cluster_sizes().iter().map(|&(l, _)| l).collect();
+    labels.push(-1);
+    for l in labels {
+        exts.extend(view.cluster_members(l).into_iter().take(1));
+        if exts.len() >= 3 {
+            break;
+        }
+    }
+    for ext in exts {
+        if let Some(row) = view.coords_of(ext) {
+            let base = row.to_vec();
+            probes.push(base.clone());
+            for axis in 0..dim.min(2) {
+                let mut at_eps = base.clone();
+                at_eps[axis] += EPS; // a data point at exactly distance ε
+                probes.push(at_eps);
+                let mut straddle = base.clone();
+                straddle[axis] += 2.0 * EPS; // exactly one cell side away
+                probes.push(straddle);
+            }
+        }
+    }
+    for _ in 0..4 {
+        probes.push(
+            (0..dim).map(|_| ((g.next_f64() - 0.5) * extent) as f32).collect(),
+        );
+    }
+    probes
+}
+
+/// Random churn (insert / upsert-replace / delete, duplicates injected)
+/// across several publishes; every published view must answer indexed
+/// reads identically to the oracles — on both backends.
+#[test]
+fn indexed_reads_match_oracle_under_churn() {
+    run_prop("indexed reads vs scan oracle", 6, |g: &mut Gen| {
+        let dim = *g.choose(&[2usize, 3]);
+        let backend = *g.choose(&[Backend::Single, Backend::Sharded(2)]);
+        let seed = g.rng.next_u64();
+        let ds = make_blobs(
+            &BlobsConfig {
+                n: 400,
+                dim,
+                clusters: 4,
+                std: 0.3,
+                center_box: 6.0,
+                weights: vec![],
+            },
+            seed,
+        );
+        let mut eng = builder(dim, seed).backend(backend).build().unwrap();
+        let n = ds.n();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next = 0usize;
+        for round in 0..4 {
+            // grow: insert a fresh slice, duplicating some coordinates
+            for _ in 0..100 {
+                if next >= n {
+                    break;
+                }
+                let row = &ds.xs[next * dim..(next + 1) * dim];
+                eng.upsert(next as u64, row);
+                live.push(next as u64);
+                if next % 7 == 0 {
+                    // duplicate coordinates under a distinct ext
+                    let dup = (n + next) as u64;
+                    eng.upsert(dup, row);
+                    live.push(dup);
+                }
+                next += 1;
+            }
+            // churn: replace some, delete some
+            for _ in 0..20 {
+                if live.len() < 4 {
+                    break;
+                }
+                let i = g.usize_in(0..=live.len() - 1);
+                let ext = live[i];
+                if g.rng.next_u64() % 2 == 0 {
+                    let j = g.usize_in(0..=n - 1);
+                    eng.upsert(ext, &ds.xs[j * dim..(j + 1) * dim]);
+                } else {
+                    eng.remove(ext);
+                    live.swap_remove(i);
+                }
+            }
+            let view = eng.publish();
+            assert!(view.has_spatial_index(), "index missing on round {round}");
+            let probes = stress_probes(&mut g.rng, &view, dim, 14.0);
+            assert_reads_match_oracle(&view, &probes);
+        }
+        let _ = eng.finish();
+    });
+}
+
+/// The scan-fallback configurations (index off; dim past the policy
+/// ceiling) answer through the same public methods — and still match the
+/// oracles trivially (they *are* the oracles then).
+#[test]
+fn fallback_configurations_answer_identically() {
+    for (label, builder) in [
+        ("disabled", EngineBuilder::new(3).k(3).t(4).eps(EPS).spatial_index(false)),
+        ("past-max-dim", EngineBuilder::new(3).k(3).t(4).eps(EPS).index_max_dim(2)),
+    ] {
+        let mut eng = builder.seed(5).build().unwrap();
+        let mut rng = Rng::new(99);
+        for e in 0..300u64 {
+            let row: Vec<f32> =
+                (0..3).map(|_| ((rng.next_f64() - 0.5) * 8.0) as f32).collect();
+            eng.upsert(e, &row);
+        }
+        let view = eng.publish();
+        assert!(!view.has_spatial_index(), "{label}: expected scan fallback");
+        let probes = stress_probes(&mut rng, &view, 3, 8.0);
+        assert_reads_match_oracle(&view, &probes);
+        let _ = eng.finish();
+    }
+}
+
+/// Rebuild-at-publish (the FullRebuild analogue) must serve the same
+/// answers as delta maintenance.
+#[test]
+fn rebuild_mode_matches_delta_maintenance() {
+    let mut delta = builder(2, 7).build().unwrap();
+    let mut rebuild = builder(2, 7).index_rebuild(true).build().unwrap();
+    let mut rng = Rng::new(31);
+    for e in 0..500u64 {
+        let row: Vec<f32> =
+            (0..2).map(|_| ((rng.next_f64() - 0.5) * 10.0) as f32).collect();
+        delta.upsert(e, &row);
+        rebuild.upsert(e, &row);
+    }
+    for e in 0..100u64 {
+        delta.remove(e * 3);
+        rebuild.remove(e * 3);
+    }
+    let vd = delta.publish();
+    let vr = rebuild.publish();
+    assert!(vd.has_spatial_index() && vr.has_spatial_index());
+    for _ in 0..10 {
+        let p: Vec<f32> =
+            (0..2).map(|_| ((rng.next_f64() - 0.5) * 10.0) as f32).collect();
+        assert_eq!(vd.epsilon_neighbors(&p), vr.epsilon_neighbors(&p));
+        assert_eq!(vd.k_nearest(&p, 9), vr.k_nearest(&p, 9));
+    }
+    let _ = delta.finish();
+    let _ = rebuild.finish();
+}
+
+/// CoW contract: a publish with **no** intervening writes must not
+/// deep-clone any index chunk — the `cow_index_sharing` gauge reads 1.0
+/// — while a touched publish drops below 1.0 only because of the delta.
+/// Also checks `index_cells` is live. Runs on both backends.
+#[test]
+fn untouched_publish_shares_the_whole_index() {
+    for backend in [Backend::Single, Backend::Sharded(2)] {
+        let mut eng = builder(2, 13).backend(backend).build().unwrap();
+        let mut rng = Rng::new(17);
+        for e in 0..2_000u64 {
+            let row: Vec<f32> =
+                (0..2).map(|_| ((rng.next_f64() - 0.5) * 40.0) as f32).collect();
+            eng.upsert(e, &row);
+        }
+        eng.publish();
+        // nothing written since the last publish: every chunk of the
+        // index (and of the coord store) is still snapshot-shared
+        eng.publish();
+        let gauges = eng.metrics().gauges;
+        let get = |name: &str| {
+            gauges
+                .iter()
+                .find(|(g, _)| *g == name)
+                .map(|&(_, v)| v)
+                .unwrap_or_else(|| panic!("gauge {name} missing ({backend:?})"))
+        };
+        assert!(
+            (get("cow_index_sharing") - 1.0).abs() < 1e-12,
+            "untouched publish deep-cloned index chunks ({backend:?}): {}",
+            get("cow_index_sharing")
+        );
+        assert!(get("index_cells") > 0.0, "index_cells gauge dead ({backend:?})");
+        // one write: sharing drops below 1.0 (the delta), not to 0
+        eng.upsert(5_000_000, &[0.0, 0.0]);
+        eng.publish();
+        let gauges = eng.metrics().gauges;
+        let sharing = gauges
+            .iter()
+            .find(|(g, _)| *g == "cow_index_sharing")
+            .map(|&(_, v)| v)
+            .unwrap();
+        assert!(
+            sharing < 1.0 && sharing > 0.5,
+            "single-write publish should deep-clone only touched chunks \
+             ({backend:?}): {sharing}"
+        );
+        let _ = eng.finish();
+    }
+}
+
+/// Durable recovery replays through the public write path, so a reopened
+/// engine serves an index answering identically to the oracle at the
+/// recovered version.
+#[test]
+fn recovered_engine_serves_indexed_reads() {
+    let dir = std::env::temp_dir().join(format!(
+        "dyn-dbscan-read-path-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut rng = Rng::new(41);
+    let rows: Vec<Vec<f32>> = (0..300)
+        .map(|_| (0..2).map(|_| ((rng.next_f64() - 0.5) * 8.0) as f32).collect())
+        .collect();
+    {
+        let mut eng = builder(2, 3).persist(&dir).build().unwrap();
+        for (e, row) in rows.iter().enumerate() {
+            eng.upsert(e as u64, row);
+        }
+        eng.publish();
+        // dropped without finish(): recovery comes from WAL + checkpoint
+    }
+    let mut eng = builder(2, 3).persist(&dir).build().unwrap();
+    let view = eng.snapshot();
+    assert_eq!(view.live_points(), rows.len());
+    assert!(view.has_spatial_index(), "recovered view lost the index");
+    let probes = stress_probes(&mut rng, &view, 2, 8.0);
+    assert_reads_match_oracle(&view, &probes);
+    let _ = eng.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}
