@@ -18,7 +18,11 @@
 //!    measures ε-neighborhood and kNN QPS through the snapshot-pinned
 //!    ε-cell index vs the retained scan oracle at 50k and 500k live
 //!    (≥10× ε speedup gated at full scale) and the index's per-op
-//!    maintenance tax (≤3% at full scale).
+//!    maintenance tax (≤3% at full scale). The **skew-stress axis**
+//!    drives uniform and hot-spot streams through the placement layer
+//!    with resharding off vs auto and records the per-shard load
+//!    spread — auto must end with a lower peak load than the frozen
+//!    assignment (gated at full scale).
 //! 3. **Chain churn** (adversarial, also → `BENCH_updates.json`): a 1-D
 //!    line of bucket chains with repeated mid-chain block deletions —
 //!    every round genuinely splits the path-shaped component, the worst
@@ -41,7 +45,7 @@ use dyn_dbscan::data::Dataset;
 use dyn_dbscan::dbscan::{Connectivity, DbscanConfig, DynamicDbscan, Op, RepairStats};
 use dyn_dbscan::metrics::adjusted_rand_index;
 use dyn_dbscan::serve::{ClusterEngine, EngineBuilder};
-use dyn_dbscan::shard::{ShardConfig, ShardedEngine, StitchMode};
+use dyn_dbscan::shard::{ReshardMode, ShardConfig, ShardedEngine, StitchMode};
 use dyn_dbscan::util::json::Json;
 use dyn_dbscan::util::rng::Rng;
 use dyn_dbscan::util::stats::LatencyHisto;
@@ -1235,6 +1239,11 @@ fn update_throughput(
         ]));
     }
 
+    // skew-stress axis: uniform vs hot-spot streams, reshard off vs auto,
+    // at the sweep's widest shard count
+    let skew_shards = shard_counts.iter().copied().max().unwrap_or(2).max(2);
+    let skew_section = skew_stress_section(n, skew_shards);
+
     let chain_section = chain_churn_section(chain.0, chain.1);
     let publish_section = snapshot_publish_section(publish.0, publish.1, publish.2);
     // more reps at small n: single runs are jitter-dominated there
@@ -1282,6 +1291,7 @@ fn update_throughput(
             ]),
         ),
         ("shard_sweep", Json::Arr(shard_rows)),
+        ("skew_stress", skew_section),
         (
             "baseline",
             Json::obj(vec![
@@ -1303,6 +1313,176 @@ fn update_throughput(
     write_json(out_path, &record);
     dyn_dbscan::bench_harness::export_json(&record);
     println!("\nwrote {}", out_path.display());
+}
+
+// ---------------------------------------------------------------------
+// skew-stress axis: placement under a hot spot, reshard off vs auto
+// ---------------------------------------------------------------------
+
+/// One op of the skew axis: `Some(coords)` = upsert, `None` = delete.
+type SkewOp = (u64, Option<Vec<f32>>);
+
+/// The skew axis stream. `skewed = false`: the standard uniform churn
+/// (build_workload) re-expressed with inline coordinates. `skewed = true`:
+/// a 40% uniform warm-up (establishes the cell→shard assignment), one
+/// point per slot of a 60-step snake far outside the blob box (CellGraph's
+/// adjacency voting gloms the contiguous snake cells onto one owner),
+/// then the remaining 60% of the stream hammers the same snake — every
+/// hot point lands in an already-assigned cell, so sticky first-touch
+/// routes the whole hot spot to one shard unless migration intervenes —
+/// interleaved with uniform deletes that deepen the imbalance.
+fn skew_stress_workload(n: usize, skewed: bool, seed: u64) -> Vec<SkewOp> {
+    let (ds, ops) = build_workload(n, 0.2, seed);
+    if !skewed {
+        return ops
+            .iter()
+            .map(|op| match *op {
+                WlOp::Insert(ext) => (ext, Some(ds.point(ext as usize).to_vec())),
+                WlOp::Delete(ext) => (ext, None),
+            })
+            .collect();
+    }
+    let warm = n * 2 / 5;
+    let snake = |i: usize| -> Vec<f32> {
+        let mut p = vec![0.0f32; DIM];
+        p[0] = 200.0 + (i % 60) as f32 * 0.3;
+        p[1] = 200.0 + ((i / 60) % 7) as f32 * 0.04;
+        p
+    };
+    let mut out: Vec<SkewOp> = Vec::new();
+    for i in 0..warm {
+        out.push((i as u64, Some(ds.point(i).to_vec())));
+    }
+    for i in 0..60 {
+        out.push(((n + i) as u64, Some(snake(i))));
+    }
+    let hot = n.saturating_sub(warm);
+    for i in 0..hot {
+        out.push(((n + 60 + i) as u64, Some(snake(i))));
+        if i % 8 == 0 && i / 8 < warm / 4 {
+            out.push(((i / 8) as u64, None));
+        }
+    }
+    out
+}
+
+/// One cell of the axis: drive `ops` through a direct `ShardedEngine`
+/// (publish every 2000 ops, resharding consulted before each publish
+/// exactly like the serve façade does) and report throughput plus the
+/// final per-shard load spread. Returns `(row, load_max)`.
+fn skew_stress_run(
+    ops: &[SkewOp],
+    shards: usize,
+    mode: ReshardMode,
+    workload: &str,
+    reshard: &str,
+) -> (Json, f64) {
+    let cfg = DbscanConfig { k: 10, t: 10, eps: 0.75, dim: DIM, ..Default::default() };
+    let mut scfg = ShardConfig::new(cfg, shards, 42);
+    scfg.reshard = mode;
+    let mut eng = ShardedEngine::new(scfg);
+    let mut coords: FxHashMap<u64, Vec<f32>> = FxHashMap::default();
+    let t0 = Instant::now();
+    for chunk in ops.chunks(2_000) {
+        for op in chunk {
+            match op {
+                (ext, Some(c)) => {
+                    coords.insert(*ext, c.clone());
+                    eng.insert(*ext, c);
+                }
+                (ext, None) => {
+                    coords.remove(ext);
+                    eng.delete(*ext);
+                }
+            }
+        }
+        eng.maybe_reshard(|ext, buf| match coords.get(&ext) {
+            Some(row) => {
+                buf.extend_from_slice(row);
+                true
+            }
+            None => false,
+        });
+        eng.publish();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut loads = eng.metrics().shard_loads();
+    loads.truncate(shards);
+    let load_max = loads.iter().copied().max().unwrap_or(0) as f64;
+    let load_mean =
+        loads.iter().copied().sum::<u64>() as f64 / shards.max(1) as f64;
+    let epoch = eng.placement_version();
+    let stats = eng.stats();
+    let (ghost_ratio, migrated) = (stats.ghost_ratio(), stats.migrated_points);
+    let _ = eng.finish();
+    let row = Json::obj(vec![
+        ("workload", Json::str(workload)),
+        ("reshard", Json::str(reshard)),
+        ("wall_s", Json::num(wall_s)),
+        ("ops_per_s", Json::num(ops.len() as f64 / wall_s)),
+        ("load_max", Json::num(load_max)),
+        ("load_mean", Json::num(load_mean)),
+        ("reshard_epoch", Json::num(epoch as f64)),
+        ("ghost_ratio", Json::num(ghost_ratio)),
+        ("migrated_points", Json::num(migrated as f64)),
+    ]);
+    (row, load_max)
+}
+
+/// The full axis: {uniform, hot-spot} × {off, auto}. The acceptance
+/// claim of the resharding PR is the `auto_beats_off_on_skew` field —
+/// under the hot-spot stream, migration must end with a lower peak
+/// shard load than the frozen assignment (gated at full scale by
+/// `validate_updates_json`).
+fn skew_stress_section(n: usize, shards: usize) -> Json {
+    let mut table = Table::new(
+        "skew stress: per-shard load under a hot-spot stream (reshard off vs auto)",
+        &["workload", "reshard", "ops/s", "load max", "load mean", "epoch"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut skew_max = [0.0f64; 2]; // [off, auto] on the hot-spot stream
+    for (wname, skewed) in [("uniform", false), ("hot-spot", true)] {
+        let ops = skew_stress_workload(n, skewed, 13);
+        for (mi, (mname, mode)) in [
+            ("off", ReshardMode::Off),
+            ("auto", ReshardMode::Auto { max_cells_per_publish: 16 }),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let (row, load_max) = skew_stress_run(&ops, shards, mode, wname, mname);
+            if skewed {
+                skew_max[mi] = load_max;
+            }
+            table.row(vec![
+                wname.into(),
+                mname.into(),
+                format!("{:.0}", row.get("ops_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                format!("{load_max:.0}"),
+                format!(
+                    "{:.0}",
+                    row.get("load_mean").and_then(|v| v.as_f64()).unwrap_or(0.0)
+                ),
+                format!(
+                    "{:.0}",
+                    row.get("reshard_epoch").and_then(|v| v.as_f64()).unwrap_or(0.0)
+                ),
+            ]);
+            rows.push(row);
+        }
+    }
+    table.print();
+    Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("shards", Json::num(shards as f64)),
+        ("publish_every", Json::num(2_000.0)),
+        ("max_cells_per_publish", Json::num(16.0)),
+        ("rows", Json::Arr(rows)),
+        (
+            "auto_beats_off_on_skew",
+            Json::num(if skew_max[1] < skew_max[0] { 1.0 } else { 0.0 }),
+        ),
+    ])
 }
 
 /// Smoke check: the artifact must parse and carry the trajectory fields.
@@ -1525,6 +1705,43 @@ fn validate_updates_json(path: &std::path::Path) {
         assert!(
             *rebuild_p99.last().unwrap() >= rebuild_p99[0] * 3.0,
             "full rebuild p99 should grow with live points: {rebuild_p99:?}"
+        );
+    }
+
+    // skew-stress axis: all four cells recorded, and at full scale the
+    // acceptance claim of the resharding PR — Auto ends the hot-spot
+    // stream with a lower peak shard load than the frozen assignment
+    let skew = j
+        .get("skew_stress")
+        .unwrap_or_else(|| panic!("missing skew_stress in {}", path.display()));
+    let skew_rows = skew
+        .get("rows")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("missing skew_stress.rows in {}", path.display()));
+    assert_eq!(
+        skew_rows.len(),
+        4,
+        "skew axis must cover uniform/hot-spot x off/auto"
+    );
+    for row in skew_rows {
+        assert!(
+            row.get("ops_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "skew-stress row missing throughput"
+        );
+        let load_max = row.get("load_max").and_then(|v| v.as_f64()).unwrap_or(-1.0);
+        let load_mean = row.get("load_mean").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        assert!(
+            load_max >= load_mean,
+            "skew-stress row has an impossible load spread \
+             (max {load_max} < mean {load_mean})"
+        );
+    }
+    let skew_n = skew.get("n").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    if skew_n >= 10_000.0 {
+        assert_eq!(
+            skew.get("auto_beats_off_on_skew").and_then(|v| v.as_f64()),
+            Some(1.0),
+            "auto resharding failed to beat the frozen assignment under skew"
         );
     }
 }

@@ -319,10 +319,15 @@ pub enum Gauge {
     /// spatial-index chunk-sharing ratio at last publish (1.0 = fully
     /// shared with the previous snapshot's index)
     CowIndexSharing,
+    /// dist-1 adjacent assigned placement cells owned by different shards
+    /// — the quantity cell-graph placement minimizes
+    CutEdges,
+    /// cells migrated by live resharding in the last publish interval
+    MigrationCells,
 }
 
 impl Gauge {
-    pub const COUNT: usize = 13;
+    pub const COUNT: usize = 15;
     pub const ALL: [Gauge; Self::COUNT] = [
         Gauge::LivePoints,
         Gauge::GhostRatio,
@@ -337,6 +342,8 @@ impl Gauge {
         Gauge::WalLag,
         Gauge::IndexCells,
         Gauge::CowIndexSharing,
+        Gauge::CutEdges,
+        Gauge::MigrationCells,
     ];
 
     pub fn name(self) -> &'static str {
@@ -354,6 +361,8 @@ impl Gauge {
             Gauge::WalLag => "wal_lag",
             Gauge::IndexCells => "index_cells",
             Gauge::CowIndexSharing => "cow_index_sharing",
+            Gauge::CutEdges => "cut_edges",
+            Gauge::MigrationCells => "migration_cells",
         }
     }
 
@@ -397,6 +406,9 @@ pub struct Metrics {
     gauges: [AtomicU64; Gauge::COUNT],
     /// live ETT vertices per HDT level (deeper levels fold into the last)
     hdt_level_verts: [AtomicU64; Self::MAX_LEVELS],
+    /// live primary points per shard from the placement map, sampled at
+    /// publish (shards beyond the tracked cap are dropped, not folded)
+    shard_loads: [AtomicU64; Self::MAX_SHARDS_TRACKED],
     /// WAL records appended (durable-layer throughput counter)
     wal_records: AtomicU64,
     /// framed WAL bytes appended
@@ -416,6 +428,10 @@ impl Metrics {
     /// realistic shard size, and deeper levels fold into the last slot.
     pub const MAX_LEVELS: usize = 8;
 
+    /// Per-shard load gauges tracked (shard ids ≥ this are ignored — the
+    /// engine caps at far fewer workers than this on any real box).
+    pub const MAX_SHARDS_TRACKED: usize = 32;
+
     pub fn new(enabled: bool) -> Self {
         Metrics {
             enabled,
@@ -426,6 +442,7 @@ impl Metrics {
             update_stages: std::array::from_fn(|_| AtomicHisto::new()),
             gauges: std::array::from_fn(|_| AtomicU64::new(0)),
             hdt_level_verts: std::array::from_fn(|_| AtomicU64::new(0)),
+            shard_loads: std::array::from_fn(|_| AtomicU64::new(0)),
             wal_records: AtomicU64::new(0),
             wal_bytes: AtomicU64::new(0),
             wal_fsyncs: AtomicU64::new(0),
@@ -621,6 +638,23 @@ impl Metrics {
         std::array::from_fn(|i| self.hdt_level_verts[i].load(Ordering::Relaxed))
     }
 
+    /// Record one shard's live primary load (sampled at publish from the
+    /// placement map; out-of-range shard ids are ignored).
+    pub fn set_shard_load(&self, shard: usize, v: u64) {
+        if self.enabled && shard < Self::MAX_SHARDS_TRACKED {
+            self.shard_loads[shard].store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Per-shard live primary loads (all tracked slots; callers truncate
+    /// to the engine's shard count).
+    pub fn shard_loads(&self) -> Vec<u64> {
+        self.shard_loads
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
     /// Zero the worker-accumulated structural gauges before a publish
     /// barrier; every worker then `add_gauge`s its share back in while
     /// handling the barrier marker, so the engine reads a consistent
@@ -717,6 +751,9 @@ mod tests {
         m.max_gauge(Gauge::HdtLevels, 2);
         m.add_level_verts(0, 10);
         m.add_level_verts(99, 1); // folds into the last slot
+        m.set_shard_load(2, 77);
+        m.set_shard_load(999, 1); // out of range: dropped, no panic
+        assert_eq!(m.shard_loads()[2], 77);
         assert_eq!(m.gauge(Gauge::LivePoints), 123.0);
         assert!((m.gauge(Gauge::GhostRatio) - 0.25).abs() < 1e-12);
         assert_eq!(m.gauge(Gauge::EttVertices), 15.0);

@@ -9,7 +9,7 @@
 //! ## File format
 //!
 //! ```text
-//! [magic "DDCKPT01"][u64 body_len][body][u32 crc32(body)]
+//! [magic "DDCKPT02"][u64 body_len][body][u32 crc32(body)]
 //! ```
 //!
 //! body (all little-endian):
@@ -17,7 +17,15 @@
 //! ```text
 //! version u64 · wal_seq u64 · eps f32 · dim u32
 //! · n_points u32 · n×(ext u64 · label i64 · core u8 · dim×f32)
+//! · placement_len u32 · placement_len bytes
 //! ```
+//!
+//! The trailing placement blob (`shard::PlacementMap::export`, length 0
+//! when the backend has no placement state) pins the cell→shard
+//! assignment at spill time, so a durable reopen reshards to the *same*
+//! assignment before re-ingesting points and the WAL tail re-evolves it
+//! identically. `DDCKPT01` files (no blob) fail the magic check and fall
+//! back to cold WAL replay, which is always correct.
 //!
 //! Writes go to a temp file that is fsynced and atomically renamed over
 //! `checkpoint.ckpt`, so readers only ever observe the previous complete
@@ -35,7 +43,7 @@ use super::crc32;
 /// Checkpoint file name inside a persist directory.
 pub const CHECKPOINT_FILE: &str = "checkpoint.ckpt";
 
-const MAGIC: &[u8; 8] = b"DDCKPT01";
+const MAGIC: &[u8; 8] = b"DDCKPT02";
 
 /// One serialized published snapshot. `labels[i]`/`cores[i]` describe
 /// `points[i]`: the row order is the only coupling between the three.
@@ -57,6 +65,9 @@ pub struct Checkpoint {
     pub labels: Vec<i64>,
     /// Core flag per live point (same order as `points`).
     pub cores: Vec<bool>,
+    /// Serialized cell→shard placement map (`PlacementMap::export`) at
+    /// spill time; `None` for backends without placement state.
+    pub placement: Option<Vec<u8>>,
 }
 
 impl Checkpoint {
@@ -75,6 +86,9 @@ impl Checkpoint {
                 b.extend_from_slice(&x.to_le_bytes());
             }
         }
+        let placement = self.placement.as_deref().unwrap_or(&[]);
+        b.extend_from_slice(&(placement.len() as u32).to_le_bytes());
+        b.extend_from_slice(placement);
         b
     }
 
@@ -110,10 +124,15 @@ impl Checkpoint {
             labels.push(label);
             cores.push(core);
         }
+        let placement_len = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?) as usize;
+        let placement = match placement_len {
+            0 => None,
+            n => Some(take(&mut at, n)?.to_vec()),
+        };
         if at != body.len() {
             return None;
         }
-        Some(Checkpoint { version, wal_seq, eps, dim, points, labels, cores })
+        Some(Checkpoint { version, wal_seq, eps, dim, points, labels, cores, placement })
     }
 }
 

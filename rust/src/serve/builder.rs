@@ -8,7 +8,9 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::driver::{make_engine, EngineKind};
 use crate::dbscan::{ConnKind, DbscanConfig};
-use crate::shard::{FaultPlan, ShardConfig, StitchMode};
+use crate::shard::{
+    FaultPlan, PlacementPolicy, ReshardMode, ShardConfig, StitchMode,
+};
 
 use super::durable::{DurableEngine, DEFAULT_CHECKPOINT_EVERY};
 use super::index::IndexPolicy;
@@ -57,6 +59,8 @@ pub struct EngineBuilder {
     block_side: u32,
     ghost_margin: u32,
     routing_dims: usize,
+    placement: Option<PlacementPolicy>,
+    reshard: ReshardMode,
     metrics: bool,
     index: IndexPolicy,
     persist: Option<PathBuf>,
@@ -85,6 +89,8 @@ impl EngineBuilder {
             block_side: 8,
             ghost_margin: 2,
             routing_dims: 0,
+            placement: None,
+            reshard: ReshardMode::Off,
             metrics: true,
             index: IndexPolicy::default(),
             persist: None,
@@ -173,6 +179,25 @@ impl EngineBuilder {
     /// Cell axes used for block routing (sharded backend; 0 = auto).
     pub fn routing_dims(mut self, routing_dims: usize) -> Self {
         self.routing_dims = routing_dims;
+        self
+    }
+
+    /// Cell→shard placement policy (sharded backend; default
+    /// [`PlacementPolicy::CellGraph`] — greedy cell-graph partitioning.
+    /// [`PlacementPolicy::BlockHash`] keeps the legacy stateless scatter).
+    /// Rejected at build time on the single backend.
+    pub fn placement(mut self, policy: PlacementPolicy) -> Self {
+        self.placement = Some(policy);
+        self
+    }
+
+    /// Live resharding (sharded backend; default [`ReshardMode::Off`]).
+    /// `Auto { max_cells_per_publish }` migrates up to that many cells
+    /// from the hottest to the coldest shard per publish when the load
+    /// imbalance trips the trigger. Requires ≥ 2 shards and `CellGraph`
+    /// placement; rejected at build time otherwise.
+    pub fn reshard(mut self, mode: ReshardMode) -> Self {
+        self.reshard = mode;
         self
     }
 
@@ -279,6 +304,45 @@ impl EngineBuilder {
                 self.index.cell_factor
             ));
         }
+        if self.backend == Backend::Single {
+            if self.placement.is_some() {
+                return Err(anyhow!(
+                    "placement() configures the sharded router's cell→shard \
+                     map; the single backend has no router — drop \
+                     .placement(..) or use Backend::Sharded(..)"
+                ));
+            }
+            if self.reshard != ReshardMode::Off {
+                return Err(anyhow!(
+                    "reshard() migrates cells between shard workers; the \
+                     single backend has none — drop .reshard(..) or use \
+                     Backend::Sharded(..)"
+                ));
+            }
+        }
+        let placement = self.placement.unwrap_or(PlacementPolicy::CellGraph);
+        if let ReshardMode::Auto { max_cells_per_publish } = self.reshard {
+            if max_cells_per_publish == 0 {
+                return Err(anyhow!(
+                    "reshard(Auto) needs max_cells_per_publish >= 1 — a \
+                     zero budget can never migrate anything"
+                ));
+            }
+            if let Backend::Sharded(shards) = self.backend {
+                if shards < 2 {
+                    return Err(anyhow!(
+                        "reshard(Auto) is meaningless at one shard — there \
+                         is nowhere to migrate to"
+                    ));
+                }
+            }
+            if placement != PlacementPolicy::CellGraph {
+                return Err(anyhow!(
+                    "reshard(Auto) requires PlacementPolicy::CellGraph — \
+                     BlockHash assignments are stateless and cannot migrate"
+                ));
+            }
+        }
         let inner: Box<dyn ClusterEngine> = match self.backend {
             Backend::Single => {
                 let hashing = make_engine(&self.dbscan, self.seed, self.hashing)?;
@@ -304,6 +368,8 @@ impl EngineBuilder {
                 scfg.block_side = self.block_side;
                 scfg.ghost_margin = self.ghost_margin;
                 scfg.routing_dims = self.routing_dims;
+                scfg.placement = placement;
+                scfg.reshard = self.reshard;
                 scfg.metrics = self.metrics;
                 scfg.publish_timeout_ms = self.publish_timeout_ms;
                 scfg.faults = self.faults;
@@ -376,6 +442,61 @@ mod tests {
         // invalid cell factor is rejected at build
         assert!(EngineBuilder::new(2).index_cell_factor(0.0).build().is_err());
         assert!(EngineBuilder::new(2).index_cell_factor(f32::NAN).build().is_err());
+    }
+
+    #[test]
+    fn placement_and_reshard_validation() {
+        // single backend has no router: both knobs are rejected
+        assert!(EngineBuilder::new(2)
+            .placement(PlacementPolicy::CellGraph)
+            .build()
+            .is_err());
+        assert!(EngineBuilder::new(2)
+            .reshard(ReshardMode::Auto { max_cells_per_publish: 8 })
+            .build()
+            .is_err());
+        // Auto needs somewhere to migrate to
+        assert!(EngineBuilder::new(2)
+            .backend(Backend::Sharded(1))
+            .reshard(ReshardMode::Auto { max_cells_per_publish: 8 })
+            .build()
+            .is_err());
+        // Auto over a stateless assignment cannot migrate
+        assert!(EngineBuilder::new(2)
+            .backend(Backend::Sharded(2))
+            .placement(PlacementPolicy::BlockHash)
+            .reshard(ReshardMode::Auto { max_cells_per_publish: 8 })
+            .build()
+            .is_err());
+        // a zero migration budget is a configuration bug, not a no-op
+        assert!(EngineBuilder::new(2)
+            .backend(Backend::Sharded(2))
+            .reshard(ReshardMode::Auto { max_cells_per_publish: 0 })
+            .build()
+            .is_err());
+        // the valid combinations build
+        for policy in [PlacementPolicy::BlockHash, PlacementPolicy::CellGraph] {
+            let mut eng = EngineBuilder::new(2)
+                .k(3)
+                .t(4)
+                .backend(Backend::Sharded(2))
+                .placement(policy)
+                .build()
+                .unwrap();
+            eng.upsert(1, &[0.5, 0.5]);
+            assert_eq!(eng.publish().live_points(), 1);
+            let _ = eng.finish();
+        }
+        let mut eng = EngineBuilder::new(2)
+            .k(3)
+            .t(4)
+            .backend(Backend::Sharded(2))
+            .reshard(ReshardMode::Auto { max_cells_per_publish: 8 })
+            .build()
+            .unwrap();
+        eng.upsert(1, &[0.5, 0.5]);
+        assert_eq!(eng.publish().live_points(), 1);
+        let _ = eng.finish();
     }
 
     #[test]

@@ -26,7 +26,12 @@
 //! recovered version). Clustering is *recomputed* from the coordinates
 //! during re-ingestion, which inherits the engine's determinism instead
 //! of trusting serialized labels; with no checkpoint, a cold full-log
-//! replay reproduces the uninterrupted run op-for-op.
+//! replay reproduces the uninterrupted run op-for-op. On sharded
+//! backends the checkpoint also carries the cell→shard placement map,
+//! restored *before* re-ingestion so recovery reshards points to the
+//! same assignment the original run had (and the WAL tail re-evolves it
+//! identically); a cold replay instead re-derives placement from the
+//! same deterministic op stream.
 //!
 //! Known limit: cluster events emitted to `watch()` subscribers carry the
 //! inner engine's un-rebased version after a recovery; views are always
@@ -98,6 +103,13 @@ impl DurableEngine {
                     c.dim,
                     inner.dim()
                 );
+                // pin the cell→shard assignment *before* any point flows
+                // through the router, so re-ingestion (and the WAL tail
+                // after it) reshards to the assignment the original run
+                // had at spill time
+                if let Some(blob) = &c.placement {
+                    inner.placement_restore(blob);
+                }
                 for chunk in c.points.chunks(RECOVER_CHUNK) {
                     let batch: Vec<Update<'_>> = chunk
                         .iter()
@@ -211,6 +223,7 @@ impl DurableEngine {
             points,
             labels,
             cores,
+            placement: self.inner.placement_blob(),
         };
         if write_checkpoint(&self.dir, &ckpt).is_ok() {
             // the checkpoint is durable; the log up to wal_seq is now
@@ -335,6 +348,14 @@ impl ClusterEngine for DurableEngine {
 
     fn obs_registry(&self) -> Option<Arc<Metrics>> {
         self.obs.clone()
+    }
+
+    fn placement_blob(&self) -> Option<Vec<u8>> {
+        self.inner.placement_blob()
+    }
+
+    fn placement_restore(&mut self, blob: &[u8]) {
+        self.inner.placement_restore(blob);
     }
 
     fn finish(mut self: Box<Self>) -> ServeOutcome {

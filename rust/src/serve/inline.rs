@@ -545,6 +545,7 @@ impl ClusterEngine for InlineEngine {
             update_stages: self.obs.update_stage_histos(),
             gauges: self.obs.gauge_values(),
             hdt_level_verts: self.obs.level_verts().to_vec(),
+            shard_loads: Vec::new(),
             wal: WalStats::default(),
         }
     }

@@ -73,7 +73,7 @@ pub use snapshot::{SnapshotStats, SnapshotView};
 
 pub use crate::coordinator::driver::EngineKind;
 pub use crate::dbscan::ConnKind;
-pub use crate::shard::{EngineError, StitchMode};
+pub use crate::shard::{EngineError, PlacementPolicy, ReshardMode, StitchMode};
 #[doc(hidden)]
 pub use crate::shard::FaultPlan;
 
@@ -342,6 +342,9 @@ pub struct MetricsSnapshot {
     pub gauges: Vec<(&'static str, f64)>,
     /// live ETT vertices per HDT level (deeper levels fold into the last)
     pub hdt_level_verts: Vec<u64>,
+    /// live primary points per shard from the placement map, sampled at
+    /// the last publish (empty on the single backend)
+    pub shard_loads: Vec<u64>,
     /// durability-layer counters (zero without `persist`)
     pub wal: WalStats,
 }
@@ -357,6 +360,7 @@ impl MetricsSnapshot {
             update_stages: Vec::new(),
             gauges: Vec::new(),
             hdt_level_verts: Vec::new(),
+            shard_loads: Vec::new(),
             wal: WalStats::default(),
         }
     }
@@ -421,6 +425,16 @@ impl MetricsSnapshot {
             ));
             for (level, v) in self.hdt_level_verts.iter().enumerate() {
                 out.push_str(&format!("{name}{{level=\"{level}\"}} {v}\n"));
+            }
+        }
+        if !self.shard_loads.is_empty() {
+            let name = "dyndbscan_shard_load";
+            out.push_str(&format!(
+                "# HELP {name} Live primary points per shard (placement map)\n\
+                 # TYPE {name} gauge\n"
+            ));
+            for (shard, v) in self.shard_loads.iter().enumerate() {
+                out.push_str(&format!("{name}{{shard=\"{shard}\"}} {v}\n"));
             }
         }
         if self.wal.records > 0 || self.wal.replay_records > 0 {
@@ -549,6 +563,22 @@ pub trait ClusterEngine {
     fn obs_registry(&self) -> Option<std::sync::Arc<crate::obs::Metrics>> {
         None
     }
+
+    /// Serialized cell→shard placement assignment, if the backend routes
+    /// through one — the hook the durability wrapper spills into
+    /// checkpoints so a reopen reshards to the same assignment. `None` on
+    /// backends without a placement map.
+    #[doc(hidden)]
+    fn placement_blob(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore a placement assignment spilled by [`Self::placement_blob`]
+    /// (called by recovery before re-ingesting checkpointed points).
+    /// Default: ignore — backends without a placement map have nothing to
+    /// restore.
+    #[doc(hidden)]
+    fn placement_restore(&mut self, _blob: &[u8]) {}
 
     /// Publish any pending writes, stop the backend and hand back the
     /// final view plus complete stats.

@@ -126,6 +126,21 @@ impl ShardedServe {
 
     fn publish_inner(&mut self) -> SnapshotView {
         self.heal_down_shards();
+        {
+            // live resharding rides the publish: a bounded cell migration
+            // (if load skew trips the trigger) re-routes members through
+            // the same pending batches the barrier below flushes, with
+            // coordinates re-fed from the façade's authoritative store —
+            // the exact respawn contract
+            let coords = &self.coords;
+            self.eng.maybe_reshard(|ext, buf| match coords.get(ext) {
+                Some(row) => {
+                    buf.extend_from_slice(row);
+                    true
+                }
+                None => false,
+            });
+        }
         let t0 = Stopwatch::start();
         let obs_on = self.eng.metrics().enabled();
         let snap = self.eng.publish();
@@ -166,7 +181,7 @@ impl ShardedServe {
             self.index.as_ref().map(|ix| ix.len() == self.coords.len()).unwrap_or(true),
             "spatial index out of sync with the coordinate store"
         );
-        let view = SnapshotView::new(
+        let mut view = SnapshotView::new(
             snap.seq,
             0,
             snap.live_points,
@@ -179,6 +194,7 @@ impl ShardedServe {
             self.eps,
             self.dim,
         );
+        view.set_reshard_epoch(self.eng.placement_version());
         let cow_ns = clk.as_mut().map_or(0, |c| c.lap());
         if self.hub.has_watchers() {
             let prev: FxHashSet<i64> =
@@ -301,6 +317,11 @@ impl ClusterEngine for ShardedServe {
             update_stages: m.update_stage_histos(),
             gauges: m.gauge_values(),
             hdt_level_verts: m.level_verts().to_vec(),
+            shard_loads: {
+                let mut loads = m.shard_loads();
+                loads.truncate(self.eng.shards());
+                loads
+            },
             wal: WalStats::default(),
         }
     }
@@ -313,6 +334,14 @@ impl ClusterEngine for ShardedServe {
 
     fn obs_registry(&self) -> Option<Arc<crate::obs::Metrics>> {
         Some(Arc::clone(self.eng.metrics()))
+    }
+
+    fn placement_blob(&self) -> Option<Vec<u8>> {
+        self.eng.placement_blob()
+    }
+
+    fn placement_restore(&mut self, blob: &[u8]) {
+        self.eng.placement_restore(blob);
     }
 
     fn finish(mut self: Box<Self>) -> ServeOutcome {

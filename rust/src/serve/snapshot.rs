@@ -131,6 +131,9 @@ pub struct SnapshotView {
     /// label → sorted members, built lazily on the first
     /// `cluster_members` call and shared by every clone of this view
     members: Arc<OnceLock<FxHashMap<i64, Vec<u64>>>>,
+    /// placement-map version this view was published under (0 on the
+    /// single backend and before any live migration)
+    reshard_epoch: u64,
     eps: f32,
     dim: usize,
 }
@@ -165,6 +168,7 @@ impl SnapshotView {
             coords,
             index,
             members: Arc::new(OnceLock::new()),
+            reshard_epoch: 0,
             eps,
             dim,
         }
@@ -183,6 +187,7 @@ impl SnapshotView {
             coords: CoordMap::new(),
             index: None,
             members: Arc::new(OnceLock::new()),
+            reshard_epoch: 0,
             eps,
             dim,
         }
@@ -190,6 +195,18 @@ impl SnapshotView {
 
     pub(crate) fn set_pending(&mut self, pending: u64) {
         self.pending = pending;
+    }
+
+    pub(crate) fn set_reshard_epoch(&mut self, epoch: u64) {
+        self.reshard_epoch = epoch;
+    }
+
+    /// Placement-map version this view was published under: bumped once
+    /// per applied live-resharding migration, 0 on the single backend.
+    /// Views with equal `(version, reshard_epoch)` were routed under the
+    /// same cell→shard assignment.
+    pub fn reshard_epoch(&self) -> u64 {
+        self.reshard_epoch
     }
 
     /// Shift the version by a recovered base — the durability wrapper's

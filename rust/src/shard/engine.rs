@@ -15,6 +15,13 @@
 //! [`StitchMode::FullRebuild`] fallback. Reads (`cluster_of`,
 //! `cluster_sizes`, `snapshot`) only touch the immutable snapshot — they
 //! never contend with the update path.
+//!
+//! With [`ReshardMode::Auto`], [`ShardedEngine::maybe_reshard`] runs
+//! ahead of each publish: the placement map plans a bounded cell
+//! migration when shard load skews, and the engine executes it through
+//! the same pending batches ordinary updates ride — deletes at shards
+//! losing a replica, re-inserts at shards gaining one — so migration
+//! needs no new worker or stitcher machinery and never blocks readers.
 
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
@@ -27,7 +34,8 @@ use crate::dbscan::RepairStats;
 use crate::obs::{Gauge, Metrics, PhaseClock, PublishStage, PublishTrace, Stopwatch};
 use crate::util::stats::LatencyHisto;
 
-use super::router::Router;
+use super::placement::{CellKey, PlacementPolicy, ReshardMode};
+use super::router::{RouteDecision, Router};
 use super::stitch::{stitch_full, GlobalSnapshot, LabelChange, Stitcher};
 use super::worker::{
     run_worker, ShardBatch, ShardCore, ShardDelta, ShardOp, ShardReply,
@@ -143,6 +151,11 @@ pub struct EngineStats {
     /// external deletes (each fans out to every holding shard)
     pub deletes: u64,
     pub publishes: u64,
+    /// cells migrated between shards by live resharding
+    pub migrated_cells: u64,
+    /// point replicas re-routed by live resharding (not counted in
+    /// `inserts`/`deletes` — migration moves existing points)
+    pub migrated_points: u64,
 }
 
 impl EngineStats {
@@ -215,8 +228,10 @@ pub struct ShardedEngine {
     /// `None` at S == 1: everything is primary on shard 0, no ghosts
     router: Option<Router>,
     backend: Backend,
-    /// ext → shards holding a replica (primary first); unused at S == 1
-    placement: FxHashMap<u64, Vec<u32>>,
+    /// ext → routing cell key; with the cell in hand, the shards holding
+    /// a replica are always derivable from the placement map's current
+    /// decision for that cell. Unused at S == 1.
+    ext_cell: FxHashMap<u64, CellKey>,
     /// per-shard batch being assembled (ops + one shared flat coord buffer
     /// — no per-op coordinate allocation on the wire)
     pending: Vec<ShardBatch>,
@@ -247,6 +262,14 @@ pub struct ShardedEngine {
     down: Vec<u32>,
     /// every fault observed so far, in detection order
     faults: Vec<EngineError>,
+    /// publishes to skip before live resharding may plan again — set by
+    /// `placement_restore` so the checkpoint-materialization publish of a
+    /// durable reopen replays the spilled assignment instead of planning
+    /// a divergent migration of its own
+    reshard_holdoff: u32,
+    /// cells moved by `maybe_reshard` since the last publish (consumed
+    /// into the `migration_cells` gauge)
+    migrated_this_publish: u64,
 }
 
 impl ShardedEngine {
@@ -260,6 +283,21 @@ impl ShardedEngine {
              ConnKind::Leveled provides them; use StitchMode::FullRebuild \
              for the flat ablation modes"
         );
+        if let ReshardMode::Auto { max_cells_per_publish } = cfg.reshard {
+            assert!(
+                shards >= 2,
+                "ReshardMode::Auto is meaningless at one shard"
+            );
+            assert!(
+                max_cells_per_publish >= 1,
+                "ReshardMode::Auto needs max_cells_per_publish >= 1"
+            );
+            assert!(
+                cfg.placement == PlacementPolicy::CellGraph,
+                "ReshardMode::Auto requires PlacementPolicy::CellGraph — \
+                 BlockHash assignments are stateless and cannot migrate"
+            );
+        }
         let obs = Arc::new(Metrics::new(cfg.metrics));
         let (router, backend) = if shards == 1 {
             (
@@ -300,7 +338,7 @@ impl ShardedEngine {
         ShardedEngine {
             router,
             backend,
-            placement: FxHashMap::default(),
+            ext_cell: FxHashMap::default(),
             pending: (0..shards).map(|_| ShardBatch::new()).collect(),
             stitcher: Stitcher::new(shards, cfg.seed),
             snapshot: GlobalSnapshot::empty(),
@@ -315,6 +353,8 @@ impl ShardedEngine {
             last_trace: PublishTrace::default(),
             down: Vec::new(),
             faults: Vec::new(),
+            reshard_holdoff: 0,
+            migrated_this_publish: 0,
             cfg,
         }
     }
@@ -344,20 +384,22 @@ impl ShardedEngine {
             self.pending[0].push_insert(ext, coords, true);
             return;
         };
-        let decision = router.route(coords);
-        let mut held: Vec<u32> = Vec::with_capacity(1 + decision.ghosts.len());
-        held.push(decision.primary as u32);
+        let cell = router.cell_key(coords);
+        let prev = self.ext_cell.insert(ext, cell);
+        assert!(prev.is_none(), "sharded insert of duplicate ext id {ext}");
+        let decision = router.decide(&cell);
+        let mut ghosts = 0u64;
         self.pending[decision.primary].push_insert(ext, coords, true);
         for &g in &decision.ghosts {
-            held.push(g as u32);
             self.pending[g].push_insert(ext, coords, false);
-            self.stats.ghost_inserts += 1;
+            ghosts += 1;
         }
-        let prev = self.placement.insert(ext, held);
-        assert!(prev.is_none(), "sharded insert of duplicate ext id {ext}");
+        router.note_insert(&cell, ext);
+        self.stats.ghost_inserts += ghosts;
     }
 
-    /// Buffer a delete for every shard holding a replica of `ext`.
+    /// Buffer a delete for every shard holding a replica of `ext` (the
+    /// placement map's current decision for its cell).
     pub fn delete(&mut self, ext: u64) {
         self.stats.deletes += 1;
         self.dirty = true;
@@ -366,13 +408,17 @@ impl ShardedEngine {
             self.pending[0].push_delete(ext);
             return;
         }
-        let held = self
-            .placement
+        let cell = self
+            .ext_cell
             .remove(&ext)
             .unwrap_or_else(|| panic!("sharded delete of unknown ext id {ext}"));
-        for s in held {
-            self.pending[s as usize].push_delete(ext);
+        let router = self.router.as_mut().expect("routed backend");
+        let decision = router.decide(&cell);
+        self.pending[decision.primary].push_delete(ext);
+        for &g in &decision.ghosts {
+            self.pending[g].push_delete(ext);
         }
+        router.note_remove(&cell, ext);
     }
 
     /// Ship buffered ops to the workers. Threads: blocks only when a
@@ -411,6 +457,101 @@ impl ShardedEngine {
                 }
             }
         }
+    }
+
+    /// Live resharding step, called by the serve façade right before each
+    /// publish. Asks the placement map for a bounded migration plan (empty
+    /// unless the hottest shard's load trips the trigger) and executes it
+    /// through the ordinary worker batches: for every member of every
+    /// affected cell, the decision delta between the old and new map
+    /// version turns into deletes at shards that lose the replica, inserts
+    /// (coords re-fetched via `coords_of`, exactly the respawn contract)
+    /// at shards that gain it, and a delete+insert pair where only the
+    /// primary/ghost role flips (workers apply batch ops in order, so the
+    /// pair is a replace). Readers keep serving the last published
+    /// snapshot throughout; the moved points travel with the publish that
+    /// follows. Returns the number of cells migrated.
+    ///
+    /// No-op when resharding is off, at S == 1, while degraded (heal
+    /// first: respawn re-feeds assume a stable assignment), or during a
+    /// restore holdoff publish.
+    pub fn maybe_reshard(
+        &mut self,
+        mut coords_of: impl FnMut(u64, &mut Vec<f32>) -> bool,
+    ) -> usize {
+        let ReshardMode::Auto { max_cells_per_publish } = self.cfg.reshard else {
+            return 0;
+        };
+        if self.router.is_none() || self.is_degraded() {
+            return 0;
+        }
+        if self.reshard_holdoff > 0 {
+            self.reshard_holdoff -= 1;
+            return 0;
+        }
+        let router = self.router.as_mut().expect("routed backend");
+        let plan = router.placement_mut().plan_migration(max_cells_per_publish);
+        if plan.is_empty() {
+            return 0;
+        }
+        let affected = router.placement().affected_cells(&plan);
+        // snapshot the old decisions before the version bump voids them
+        let old: Vec<RouteDecision> =
+            affected.iter().map(|c| router.decide(c).clone()).collect();
+        router.placement_mut().apply_moves(&plan);
+        let mut migrated_points = 0u64;
+        let mut coords: Vec<f32> = Vec::new();
+        for (cell, before) in affected.iter().zip(&old) {
+            let after = router.decide(cell).clone();
+            if after == *before {
+                continue;
+            }
+            for ext in router.placement().members_sorted(cell) {
+                let mut touched = false;
+                // shards losing their replica — or keeping it with a
+                // flipped primary/ghost role (delete now, re-insert below)
+                for &s in std::iter::once(&before.primary).chain(&before.ghosts) {
+                    let keeps = s == after.primary || after.ghosts.contains(&s);
+                    let flip =
+                        keeps && (s == before.primary) != (s == after.primary);
+                    if !keeps || flip {
+                        self.pending[s].push_delete(ext);
+                        touched = true;
+                    }
+                }
+                // shards gaining a replica (or completing a role flip)
+                let mut have_coords = false;
+                for &s in std::iter::once(&after.primary).chain(&after.ghosts) {
+                    let had = s == before.primary || before.ghosts.contains(&s);
+                    let flip =
+                        had && (s == before.primary) != (s == after.primary);
+                    if had && !flip {
+                        continue;
+                    }
+                    if !have_coords {
+                        coords.clear();
+                        have_coords = coords_of(ext, &mut coords);
+                        debug_assert!(
+                            have_coords,
+                            "live ext {ext} has no coordinate row"
+                        );
+                        if !have_coords {
+                            break;
+                        }
+                    }
+                    self.pending[s].push_insert(ext, &coords, s == after.primary);
+                    touched = true;
+                }
+                if touched {
+                    migrated_points += 1;
+                }
+            }
+        }
+        self.dirty = true;
+        self.stats.migrated_cells += plan.len() as u64;
+        self.stats.migrated_points += migrated_points;
+        self.migrated_this_publish += plan.len() as u64;
+        plan.len()
     }
 
     /// Flush and barrier on every worker **without** publishing: the
@@ -560,8 +701,17 @@ impl ShardedEngine {
             self.obs.set_gauge(Gauge::StitchEdges, edges as u64);
             self.obs
                 .set_ratio(Gauge::CowLabelSharing, self.stitcher.last_label_sharing());
+            if let Some(router) = &self.router {
+                let p = router.placement();
+                self.obs.set_gauge(Gauge::CutEdges, p.cut_edges());
+                for (s, &l) in p.load().iter().enumerate() {
+                    self.obs.set_shard_load(s, l);
+                }
+            }
+            self.obs.set_gauge(Gauge::MigrationCells, self.migrated_this_publish);
             self.last_trace = trace;
         }
+        self.migrated_this_publish = 0;
         self.snapshot = Arc::clone(&snap);
         self.stats.publishes += 1;
         self.dirty = false;
@@ -594,15 +744,17 @@ impl ShardedEngine {
     }
 
     /// Replace a quarantined shard's worker with a fresh one and rebuild
-    /// its slice from the authoritative engine state: the placement map
-    /// says which exts the shard held (and whether as primary), and
-    /// `coords_of(ext, buf)` appends the point's coordinate row (the
-    /// serve façade keeps every live row; return false for unknown exts).
-    /// The dead worker's stale roots are purged from the stitch graph,
-    /// and the fresh core's empty delta baseline makes its next report
-    /// ship the full assignment — the next publish heals the global
-    /// clustering without a full rebuild. No-op for up shards and the
-    /// inline backend.
+    /// its slice through the same cell-granular path migration uses: walk
+    /// the placement map's member-bearing cells in deterministic key
+    /// order, and for every cell whose routing decision involves the
+    /// healing shard, re-feed its members as whole cell-neighborhood
+    /// batches — `coords_of(ext, buf)` appends the point's coordinate row
+    /// (the serve façade keeps every live row; return false for unknown
+    /// exts). The dead worker's stale roots are purged from the stitch
+    /// graph, and the fresh core's empty delta baseline makes its next
+    /// report ship the full assignment — the next publish heals the
+    /// global clustering without a full rebuild. No-op for up shards and
+    /// the inline backend.
     pub fn respawn_shard(
         &mut self,
         shard: u32,
@@ -636,18 +788,23 @@ impl ShardedEngine {
         txs[s] = tx; // old sender dropped: a still-live old worker exits
         workers[s] = handle; // old handle dropped: detached
         self.stitcher.drop_shard(s);
+        let router = self.router.as_mut().expect("threads backend has a router");
         let mut batch = ShardBatch::new();
-        for (&ext, held) in self.placement.iter() {
-            let Some(pos) = held.iter().position(|&h| h == shard) else {
+        for cell in router.placement().cells_sorted() {
+            let decision = router.decide(&cell).clone();
+            let primary = decision.primary == s;
+            if !primary && !decision.ghosts.contains(&s) {
                 continue;
-            };
-            if coords_of(ext, &mut batch.coords) {
-                batch.ops.push(ShardOp::Insert { ext, primary: pos == 0 });
             }
-            if batch.ops.len() >= Self::RESEED_CHUNK {
-                let full = std::mem::take(&mut batch);
-                if txs[s].send(full).is_err() {
-                    return Err(EngineError::ShardDown { shard });
+            for ext in router.placement().members_sorted(&cell) {
+                if coords_of(ext, &mut batch.coords) {
+                    batch.ops.push(ShardOp::Insert { ext, primary });
+                }
+                if batch.ops.len() >= Self::RESEED_CHUNK {
+                    let full = std::mem::take(&mut batch);
+                    if txs[s].send(full).is_err() {
+                        return Err(EngineError::ShardDown { shard });
+                    }
                 }
             }
         }
@@ -657,6 +814,45 @@ impl ShardedEngine {
         self.down.retain(|&d| d != shard);
         self.dirty = true; // the heal must reach the next snapshot
         Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // placement / resharding surface
+    // ------------------------------------------------------------------
+
+    /// Routing epoch of the placement map: bumped once per applied
+    /// migration plan. 0 at S == 1 (no map) and before any migration.
+    pub fn placement_version(&self) -> u64 {
+        self.router.as_ref().map_or(0, |r| r.placement().version())
+    }
+
+    /// Serialized cell→shard assignment for checkpoint spill (`None` at
+    /// S == 1 — nothing to reshard).
+    pub fn placement_blob(&self) -> Option<Vec<u8>> {
+        self.router.as_ref().map(|r| r.placement().export())
+    }
+
+    /// Restore a spilled assignment into the (still empty) placement map
+    /// before recovery re-ingests the checkpointed points, so a durable
+    /// reopen reshards to exactly the assignment it spilled. Mismatched
+    /// or malformed blobs are ignored — the map then evolves afresh,
+    /// which is still correct, just a different (valid) assignment. Sets
+    /// a one-publish reshard holdoff so the checkpoint-materialization
+    /// publish replays rather than re-plans.
+    pub fn placement_restore(&mut self, blob: &[u8]) {
+        if let Some(r) = self.router.as_mut() {
+            if r.placement_mut().import(blob) {
+                self.reshard_holdoff = 1;
+            }
+        }
+    }
+
+    /// Expected replica count per shard from the placement map (members ×
+    /// routing fan-out) — the oracle the ownership-consistency tests
+    /// compare `GlobalSnapshot::shard_live` against after a quiesced
+    /// publish. `None` at S == 1.
+    pub fn expected_shard_replicas(&mut self) -> Option<Vec<u64>> {
+        self.router.as_mut().map(|r| r.placement_mut().expected_replicas())
     }
 
     // ------------------------------------------------------------------

@@ -11,21 +11,29 @@
 //! local to block boundaries.
 //!
 //! ```text
-//!            ┌────────┐   per-shard bounded op channels
-//!  updates ─▶│ Router │──┬──▶ [worker 0: DynamicDbscan]──┐  delta reports
-//!            │ (cell→ │  ├──▶ [worker 1: DynamicDbscan]──┤  (changed (ext,
-//!            │  block │  ├──▶ [worker 2: DynamicDbscan]──┼──▶ [Stitcher] ─▶ Arc<GlobalSnapshot>
-//!            │ →shard)│  └──▶ [worker 3: DynamicDbscan]──┘  local-root)s)      │
-//!            └────────┘      + ghost replicas    persistent stitch graph   reads: cluster_of /
-//!                              in boundary margin  over (shard, root) on   cluster_sizes / stats
-//!                                                  LeveledConn (HDT)
+//!            ┌─────────┐   per-shard bounded op channels
+//!  updates ─▶│ Router  │──┬──▶ [worker 0: DynamicDbscan]──┐  delta reports
+//!            │ (cell → │  ├──▶ [worker 1: DynamicDbscan]──┤  (changed (ext,
+//!            │ Placeme-│  ├──▶ [worker 2: DynamicDbscan]──┼──▶ [Stitcher] ─▶ Arc<GlobalSnapshot>
+//!            │ ntMap)  │  └──▶ [worker 3: DynamicDbscan]──┘  local-root)s)      │
+//!            └─────────┘      + ghost replicas    persistent stitch graph   reads: cluster_of /
+//!              versioned        in boundary margin  over (shard, root) on   cluster_sizes / stats
+//!              cell→shard map,  + migration batches LeveledConn (HDT)
+//!              live resharding    at publish
 //! ```
 //!
-//! **Routing** ([`router::Router`]): a point's cell is its integer grid
-//! coordinate row under hash function 0; cells are grouped into blocks of
-//! `block_side` cells along the first `routing_dims` axes, and the block is
-//! hashed to a shard. Deterministic in the seed — the same point always
-//! routes identically. At `shards == 1` the router (and ghost replication,
+//! **Routing** ([`router::Router`] + [`placement::PlacementMap`]): a
+//! point's cell is its integer grid coordinate row under hash function 0,
+//! truncated to the first `routing_dims` axes. Which shard owns a cell is
+//! answered by the router's stateful, versioned **placement map** — under
+//! the default [`PlacementPolicy::CellGraph`] cells are assigned greedily
+//! over cell adjacency (fewest new cut edges, load-capped, block hash as
+//! the bootstrap seed); [`PlacementPolicy::BlockHash`] keeps the legacy
+//! stateless block-hash scatter. Deterministic in (seed, config, op
+//! sequence) — the same stream always routes identically. With
+//! [`ReshardMode::Auto`], publish-time load imbalance triggers a bounded
+//! cell migration executed through the ordinary worker batches (see
+//! [`placement`]). At `shards == 1` the router (and ghost replication,
 //! and the worker channel) is bypassed entirely: the engine drives one
 //! inline [`worker::ShardCore`], so the one-shard configuration is the
 //! direct path plus delta bookkeeping instead of a slower pipeline.
@@ -59,12 +67,14 @@
 
 pub mod engine;
 pub mod labels;
+pub mod placement;
 pub mod router;
 pub mod stitch;
 pub mod worker;
 
 pub use engine::{EngineError, EngineOutcome, EngineStats, ShardedEngine};
 pub use labels::LabelMap;
+pub use placement::{CellKey, CellMove, PlacementMap, PlacementPolicy, ReshardMode};
 pub use router::{RouteDecision, Router};
 pub use stitch::{stitch_full, GlobalSnapshot, LabelChange, Stitcher};
 pub use worker::{
@@ -103,6 +113,15 @@ pub struct ShardConfig {
     /// replicate points whose cell is within this many cells of a block
     /// face; 2 keeps boundary-adjacent buckets complete in both shards
     pub ghost_margin: u32,
+    /// cell→shard assignment policy (default [`PlacementPolicy::CellGraph`]:
+    /// greedy cell-graph partitioning; [`PlacementPolicy::BlockHash`] is
+    /// the legacy stateless scatter)
+    pub placement: PlacementPolicy,
+    /// live resharding (default [`ReshardMode::Off`]). `Auto` requires
+    /// ≥ 2 shards and `CellGraph` placement (enforced by
+    /// `ShardedEngine::new`; the builder rejects it earlier with a typed
+    /// error).
+    pub reshard: ReshardMode,
     /// bounded op-channel capacity per worker, in batches
     pub queue: usize,
     /// snapshot publication strategy (delta = incremental, the default)
@@ -134,6 +153,8 @@ impl ShardConfig {
             routing_dims: 0,
             block_side: 8,
             ghost_margin: 2,
+            placement: PlacementPolicy::CellGraph,
+            reshard: ReshardMode::Off,
             queue: 8,
             stitch: StitchMode::Delta,
             conn: ConnKind::Leveled,

@@ -1,0 +1,894 @@
+//! Stateful cell→shard placement: the single authority on where a grid
+//! cell (and therefore every point hashing into it) lives, and on when
+//! cells should migrate between shards.
+//!
+//! The pre-placement router hashed a cell's *block* to a shard — a pure
+//! function, deterministic but blind to geometry and load: adjacent cell
+//! neighborhoods scatter across shards, so boundary replication (ghosts)
+//! grows with the shard count and eats the parallelism. This module
+//! replaces the pure function with an explicit, versioned assignment map
+//! in the spirit of Wang–Gu–Shun's cell-graph partitioning
+//! (arXiv:1912.06255):
+//!
+//! * **[`PlacementPolicy::BlockHash`]** keeps the legacy behavior bit-for-
+//!   bit: every cell's owner is the block hash, ghosts are the owners of
+//!   the cells within `ghost_margin` (identical to the old per-face rule
+//!   whenever `ghost_margin ≤ block_side`).
+//! * **[`PlacementPolicy::CellGraph`]** (the sharded default) assigns each
+//!   cell *greedily on first touch*: it joins the shard that owns the most
+//!   of its already-assigned neighbors — minimizing new cut edges — unless
+//!   that shard is over the load cap, in which case the least-loaded
+//!   admissible shard takes it (block hash as the bootstrap tie-break, so
+//!   an empty map starts out exactly like the legacy scatter). Assignments
+//!   are sticky: a cell's owner only changes through an explicit
+//!   migration, so in-flight batches always route consistently.
+//!
+//! **Ghost correctness is policy-independent.** A grid-LSH collision
+//! bounds the cell distance by one per axis, so replicating every point
+//! into the owners of all cells within `ghost_margin ≥ 1` of its own cell
+//! keeps every collision edge realized in at least one shard — and margin
+//! 2 keeps boundary-adjacent buckets complete, making replica core flags
+//! exact — *no matter what the cell→shard map looks like* (see DESIGN.md
+//! §Partitioning). To keep decisions stable, deciding a cell under
+//! `CellGraph` force-assigns its whole margin neighborhood, so a later
+//! first-touch of a neighbor can never change an already-issued decision.
+//!
+//! **Live resharding** ([`PlacementMap::plan_migration`]): when the
+//! hottest shard's live load exceeds the trigger slack over the mean, the
+//! map plans a bounded migration — boundary cells of the hot shard with
+//! the highest affinity to the coldest shard (whole cell neighborhoods
+//! peel together), capped per publish and by half the load imbalance so
+//! repeated plans converge instead of oscillating. [`apply_moves`]
+//! (re)assigns the cells, bumps the map **version** and clears the route
+//! cache; the engine then re-routes the members of every affected cell
+//! through the normal worker batches. Each map version defines one
+//! consistent routing epoch.
+//!
+//! [`apply_moves`]: PlacementMap::apply_moves
+
+use rustc_hash::{FxHashMap, FxHashSet};
+
+use crate::util::rng::mix64;
+
+use super::router::RouteDecision;
+
+/// Hard cap on routing axes (bounds the `(2m+1)^r` neighbor enumeration).
+pub const MAX_ROUTING_DIMS: usize = 4;
+
+/// A cell's routing coordinates: the grid cell of hash function 0,
+/// truncated to the routing axes (unused trailing axes are zero). Fixed
+/// width so keys are `Copy` and order deterministically.
+pub type CellKey = [i32; MAX_ROUTING_DIMS];
+
+/// How cells map to shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Legacy stateless scatter: owner = hash of the cell's block. Zero
+    /// placement state to migrate, but adjacent neighborhoods split across
+    /// shards and the ghost ratio grows with the shard count.
+    BlockHash,
+    /// Greedy cell-graph partitioning (sharded default): cells join the
+    /// shard owning most of their assigned neighbors, subject to a load
+    /// cap — fewer cut edges, fewer ghosts, and the substrate live
+    /// resharding migrates over.
+    CellGraph,
+}
+
+/// Whether publish-time load imbalance triggers live cell migration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReshardMode {
+    /// Assignments are sticky forever (still the default).
+    Off,
+    /// Plan and execute a bounded migration at publish when the load
+    /// imbalance trips [`RESHARD_TRIGGER_SLACK`]; at most
+    /// `max_cells_per_publish` cells move per publish, so reads never
+    /// wait on a stop-the-world rebuild.
+    Auto { max_cells_per_publish: usize },
+}
+
+/// One planned cell migration (source shard → target shard).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CellMove {
+    pub cell: CellKey,
+    pub from: u32,
+    pub to: u32,
+    /// live members the move re-routes (plan-time count)
+    pub points: usize,
+}
+
+/// Greedy admission: a shard may accept a first-touch cell while its load
+/// is within this slack of the mean.
+const LOAD_SLACK: f64 = 1.2;
+
+/// Absolute load headroom added to the greedy cap so the bootstrap phase
+/// (mean ≈ 0) doesn't force round-robin scatter.
+const LOAD_HEADROOM: f64 = 32.0;
+
+/// Migration triggers when the hottest shard exceeds the mean load by
+/// this factor (plus [`RESHARD_MIN_IMBALANCE`] points).
+const RESHARD_TRIGGER_SLACK: f64 = 1.25;
+
+/// Minimum absolute head-over-mean before migration is worth its churn.
+const RESHARD_MIN_IMBALANCE: u64 = 64;
+
+/// Per-cell assignment state: the owning shard and the live external ids
+/// whose *primary* cell this is (ghost replicas are derived, not stored).
+struct CellState {
+    owner: u32,
+    members: FxHashSet<u64>,
+}
+
+/// The versioned cell→shard assignment map. Owned by the router; every
+/// routing decision, load gauge, migration plan and respawn re-feed is
+/// answered from here — no other module may map cells (or blocks) to
+/// shards (lint-enforced).
+pub struct PlacementMap {
+    policy: PlacementPolicy,
+    shards: usize,
+    routing_dims: usize,
+    block_side: i32,
+    ghost_margin: i32,
+    /// bumped once per applied migration plan; decisions issued under one
+    /// version route consistently (the route cache never spans versions)
+    version: u64,
+    cells: FxHashMap<CellKey, CellState>,
+    /// live primary points per shard (the balance the greedy cap and the
+    /// migration trigger act on)
+    load: Vec<u64>,
+    /// dist-1 adjacent assigned cell pairs with different owners — the
+    /// quantity the greedy assignment minimizes (`cut_edges` gauge)
+    cut_edges: i64,
+    /// memoized decisions for the current version
+    route_cache: FxHashMap<CellKey, RouteDecision>,
+}
+
+/// The legacy block→shard hash — the bootstrap/fallback owner. Kept
+/// byte-identical to the pre-placement router so `BlockHash` reproduces
+/// historical routing exactly.
+fn shard_of_blocks(blocks: &[i32], shards: usize) -> usize {
+    let mut h: u64 = 0x8f3a_55b1_c2d4_e693;
+    for &b in blocks {
+        h = mix64(h ^ (b as u32 as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    }
+    (h % shards as u64) as usize
+}
+
+/// All cells within Chebyshev distance `radius` of `cell` along the first
+/// `r` axes, excluding `cell` itself, in deterministic odometer order.
+fn neighbor_keys(cell: &CellKey, r: usize, radius: i32) -> Vec<CellKey> {
+    if radius <= 0 {
+        return Vec::new();
+    }
+    let width = (2 * radius + 1) as usize;
+    let mut out = Vec::with_capacity(width.pow(r as u32).saturating_sub(1));
+    let mut off = [0i32; MAX_ROUTING_DIMS];
+    off[..r].fill(-radius);
+    loop {
+        if off[..r].iter().any(|&o| o != 0) {
+            let mut nb = *cell;
+            for ax in 0..r {
+                nb[ax] += off[ax];
+            }
+            out.push(nb);
+        }
+        let mut ax = 0;
+        loop {
+            if ax == r {
+                return out;
+            }
+            off[ax] += 1;
+            if off[ax] <= radius {
+                break;
+            }
+            off[ax] = -radius;
+            ax += 1;
+        }
+    }
+}
+
+impl PlacementMap {
+    pub fn new(
+        policy: PlacementPolicy,
+        shards: usize,
+        routing_dims: usize,
+        block_side: u32,
+        ghost_margin: u32,
+    ) -> Self {
+        assert!(block_side >= 1, "block_side must be >= 1");
+        assert!(
+            (1..=MAX_ROUTING_DIMS).contains(&routing_dims),
+            "routing_dims must be in 1..={MAX_ROUTING_DIMS}"
+        );
+        PlacementMap {
+            policy,
+            shards: shards.max(1),
+            routing_dims,
+            block_side: block_side as i32,
+            ghost_margin: ghost_margin as i32,
+            version: 0,
+            cells: FxHashMap::default(),
+            load: vec![0; shards.max(1)],
+            cut_edges: 0,
+            route_cache: FxHashMap::default(),
+        }
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn routing_dims(&self) -> usize {
+        self.routing_dims
+    }
+
+    /// Routing epoch: bumped once per applied migration plan (and restored
+    /// by [`Self::import`]).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Live primary points per shard.
+    pub fn load(&self) -> &[u64] {
+        &self.load
+    }
+
+    /// Dist-1 adjacent assigned cell pairs owned by different shards.
+    pub fn cut_edges(&self) -> u64 {
+        self.cut_edges.max(0) as u64
+    }
+
+    /// Assigned cells (member-bearing or not).
+    pub fn total_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Cells currently holding at least one live member.
+    pub fn live_cells(&self) -> usize {
+        self.cells.values().filter(|st| !st.members.is_empty()).count()
+    }
+
+    /// The legacy block-hash owner of `cell` — the bootstrap seed and the
+    /// `BlockHash` policy's entire answer.
+    fn fallback_owner(&self, cell: &CellKey) -> u32 {
+        let mut blocks = [0i32; MAX_ROUTING_DIMS];
+        for ax in 0..self.routing_dims {
+            blocks[ax] = cell[ax].div_euclid(self.block_side);
+        }
+        shard_of_blocks(&blocks[..self.routing_dims], self.shards) as u32
+    }
+
+    /// Greedy first-touch owner under `CellGraph`: most assigned dist-1
+    /// neighbors win (fewest new cut edges), the load cap keeps shards
+    /// balanced, and ties break load-ascending → block-hash → lowest id,
+    /// so an empty bootstrap reproduces the legacy scatter exactly.
+    fn pick_owner(&self, cell: &CellKey) -> u32 {
+        let mut votes = vec![0u32; self.shards];
+        for nb in neighbor_keys(cell, self.routing_dims, 1) {
+            if let Some(st) = self.cells.get(&nb) {
+                votes[st.owner as usize] += 1;
+            }
+        }
+        let total: u64 = self.load.iter().sum();
+        let cap = (total as f64 / self.shards as f64) * LOAD_SLACK + LOAD_HEADROOM;
+        let fb = self.fallback_owner(cell);
+        let mut best: Option<(u32, u64, bool, usize)> = None;
+        for s in 0..self.shards {
+            if self.load[s] as f64 > cap {
+                continue;
+            }
+            let key = (votes[s], u64::MAX - self.load[s], s as u32 == fb);
+            let better = match best {
+                None => true,
+                Some((v, il, f, _)) => key > (v, il, f),
+            };
+            if better {
+                best = Some((key.0, key.1, key.2, s));
+            }
+        }
+        match best {
+            Some((.., s)) => s as u32,
+            // every shard above cap is transient (min ≤ mean ≤ cap can
+            // only be violated mid-migration): least-loaded wins
+            None => {
+                let mut s = 0;
+                for i in 1..self.shards {
+                    if self.load[i] < self.load[s] {
+                        s = i;
+                    }
+                }
+                s as u32
+            }
+        }
+    }
+
+    /// Owner of `cell`, assigning it on first touch (sticky thereafter)
+    /// and keeping the cut-edge count current.
+    fn ensure_cell(&mut self, cell: &CellKey) -> u32 {
+        if let Some(st) = self.cells.get(cell) {
+            return st.owner;
+        }
+        let owner = match self.policy {
+            PlacementPolicy::CellGraph => self.pick_owner(cell),
+            PlacementPolicy::BlockHash => self.fallback_owner(cell),
+        };
+        let mut cut = 0i64;
+        for nb in neighbor_keys(cell, self.routing_dims, 1) {
+            if let Some(st) = self.cells.get(&nb) {
+                if st.owner != owner {
+                    cut += 1;
+                }
+            }
+        }
+        self.cut_edges += cut;
+        self.cells
+            .insert(*cell, CellState { owner, members: FxHashSet::default() });
+        owner
+    }
+
+    /// Owner for decision purposes. `CellGraph` force-assigns on touch so
+    /// issued decisions can never be invalidated by a later first-touch;
+    /// `BlockHash` stays stateless for untracked cells (probing a margin
+    /// neighborhood must not materialize map entries).
+    fn owner_of(&mut self, cell: &CellKey) -> u32 {
+        match self.policy {
+            PlacementPolicy::CellGraph => self.ensure_cell(cell),
+            PlacementPolicy::BlockHash => match self.cells.get(cell) {
+                Some(st) => st.owner,
+                None => self.fallback_owner(cell),
+            },
+        }
+    }
+
+    fn compute_decision(&mut self, cell: &CellKey) -> RouteDecision {
+        let primary = self.owner_of(cell) as usize;
+        let mut ghosts: Vec<usize> = Vec::new();
+        if self.shards > 1 && self.ghost_margin > 0 {
+            for nb in neighbor_keys(cell, self.routing_dims, self.ghost_margin) {
+                let s = self.owner_of(&nb) as usize;
+                if s != primary && !ghosts.contains(&s) {
+                    ghosts.push(s);
+                }
+            }
+            ghosts.sort_unstable();
+        }
+        RouteDecision { primary, ghosts }
+    }
+
+    /// The routing decision for `cell` under the current version:
+    /// primary = owner, ghosts = the other owners within `ghost_margin`.
+    /// Memoized until the next migration bumps the version.
+    pub fn decide(&mut self, cell: &CellKey) -> &RouteDecision {
+        if !self.route_cache.contains_key(cell) {
+            let dec = self.compute_decision(cell);
+            self.route_cache.insert(*cell, dec);
+        }
+        &self.route_cache[cell]
+    }
+
+    /// Record a live primary member of `cell` (tracks per-shard load and
+    /// the cell's member set for migration/respawn re-feeds).
+    pub fn note_insert(&mut self, cell: &CellKey, ext: u64) {
+        let owner = self.ensure_cell(cell);
+        let st = self.cells.get_mut(cell).expect("cell tracked above");
+        let fresh = st.members.insert(ext);
+        debug_assert!(fresh, "placement member {ext} inserted twice");
+        self.load[owner as usize] += 1;
+    }
+
+    /// Remove a live member recorded by [`Self::note_insert`].
+    pub fn note_remove(&mut self, cell: &CellKey, ext: u64) {
+        let st = self
+            .cells
+            .get_mut(cell)
+            .unwrap_or_else(|| panic!("member {ext} removed from untracked cell"));
+        let was = st.members.remove(&ext);
+        debug_assert!(was, "placement member {ext} removed twice");
+        let owner = st.owner as usize;
+        debug_assert!(self.load[owner] > 0, "shard load underflow");
+        self.load[owner] -= 1;
+    }
+
+    /// Live members whose primary cell is `cell`, ascending (sorted so
+    /// migration and respawn batches are deterministic regardless of hash
+    /// map iteration order).
+    pub fn members_sorted(&self, cell: &CellKey) -> Vec<u64> {
+        let mut out: Vec<u64> = self
+            .cells
+            .get(cell)
+            .map(|st| st.members.iter().copied().collect())
+            .unwrap_or_default();
+        out.sort_unstable();
+        out
+    }
+
+    /// Member-bearing cells in ascending key order — the deterministic
+    /// enumeration respawn re-feeds and tests walk.
+    pub fn cells_sorted(&self) -> Vec<CellKey> {
+        let mut out: Vec<CellKey> = self
+            .cells
+            .iter()
+            .filter(|(_, st)| !st.members.is_empty())
+            .map(|(k, _)| *k)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Plan a bounded migration from the hottest to the coldest shard.
+    /// Empty when balanced, under `BlockHash` (nothing to reassign), at
+    /// one shard, or when nothing fits the budget. Deterministic: the
+    /// candidate order is (cold-affinity score desc, cell key asc), never
+    /// map iteration order.
+    pub fn plan_migration(&mut self, max_cells: usize) -> Vec<CellMove> {
+        if self.shards < 2
+            || max_cells == 0
+            || self.policy != PlacementPolicy::CellGraph
+        {
+            return Vec::new();
+        }
+        let total: u64 = self.load.iter().sum();
+        if total == 0 {
+            return Vec::new();
+        }
+        let mean = total as f64 / self.shards as f64;
+        let (mut hot, mut cold) = (0usize, 0usize);
+        for s in 1..self.shards {
+            if self.load[s] > self.load[hot] {
+                hot = s;
+            }
+            if self.load[s] < self.load[cold] {
+                cold = s;
+            }
+        }
+        let trigger = mean * RESHARD_TRIGGER_SLACK + RESHARD_MIN_IMBALANCE as f64;
+        if (self.load[hot] as f64) <= trigger {
+            return Vec::new();
+        }
+        let imbalance = self.load[hot] - self.load[cold];
+        // moving m points changes the hot−cold gap from D to |D − 2m|:
+        // budgeting D/2 rebalances without overshooting into oscillation
+        let budget = imbalance / 2;
+        let mut cands: Vec<(i64, CellKey, usize)> = Vec::new();
+        for (cell, st) in self.cells.iter() {
+            if st.owner as usize != hot || st.members.is_empty() {
+                continue;
+            }
+            let mut score = 0i64;
+            for nb in neighbor_keys(cell, self.routing_dims, 1) {
+                if let Some(n) = self.cells.get(&nb) {
+                    if n.owner as usize == cold {
+                        score += 1;
+                    } else if n.owner as usize == hot {
+                        score -= 1;
+                    }
+                }
+            }
+            cands.push((score, *cell, st.members.len()));
+        }
+        cands.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut out = Vec::new();
+        let mut moved = 0u64;
+        for (_, cell, m) in cands {
+            if out.len() >= max_cells {
+                break;
+            }
+            let m64 = m as u64;
+            if moved + m64 <= budget {
+                out.push(CellMove {
+                    cell,
+                    from: hot as u32,
+                    to: cold as u32,
+                    points: m,
+                });
+                moved += m64;
+            } else if out.is_empty() && m64 < imbalance {
+                // one oversized hot cell: |D − 2m| < D is still a strict
+                // improvement, so take it alone rather than stall
+                out.push(CellMove {
+                    cell,
+                    from: hot as u32,
+                    to: cold as u32,
+                    points: m,
+                });
+                break;
+            }
+        }
+        out
+    }
+
+    /// Member-bearing cells whose routing decision may change under
+    /// `moves`: each moved cell plus everything within `ghost_margin` of
+    /// it. Sorted and deduplicated. Callers snapshot these cells'
+    /// decisions *before* [`Self::apply_moves`] to compute the re-route
+    /// delta.
+    pub fn affected_cells(&self, moves: &[CellMove]) -> Vec<CellKey> {
+        let mut out: Vec<CellKey> = Vec::new();
+        let member_bearing = |cell: &CellKey| {
+            self.cells.get(cell).is_some_and(|st| !st.members.is_empty())
+        };
+        for mv in moves {
+            if member_bearing(&mv.cell) {
+                out.push(mv.cell);
+            }
+            for nb in neighbor_keys(&mv.cell, self.routing_dims, self.ghost_margin)
+            {
+                if member_bearing(&nb) {
+                    out.push(nb);
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Execute a plan: reassign owners, carry member counts between shard
+    /// loads, keep the cut-edge count exact, bump the version and drop the
+    /// route cache. The *point*-level re-route (delete/insert through the
+    /// worker batches) is the engine's job.
+    pub fn apply_moves(&mut self, moves: &[CellMove]) {
+        if moves.is_empty() {
+            return;
+        }
+        for mv in moves {
+            let members = {
+                let st = self.cells.get(&mv.cell).expect("moving unassigned cell");
+                debug_assert_eq!(st.owner, mv.from, "stale migration plan");
+                st.members.len() as u64
+            };
+            let mut cut = 0i64;
+            for nb in neighbor_keys(&mv.cell, self.routing_dims, 1) {
+                if let Some(n) = self.cells.get(&nb) {
+                    if n.owner != mv.from {
+                        cut -= 1;
+                    }
+                    if n.owner != mv.to {
+                        cut += 1;
+                    }
+                }
+            }
+            self.cut_edges += cut;
+            self.cells.get_mut(&mv.cell).expect("moving unassigned cell").owner =
+                mv.to;
+            self.load[mv.from as usize] -= members;
+            self.load[mv.to as usize] += members;
+        }
+        self.version += 1;
+        self.route_cache.clear();
+    }
+
+    /// Expected replica count per shard (members × decision fan-out) —
+    /// the stitch-graph ownership-consistency oracle for tests.
+    pub fn expected_replicas(&mut self) -> Vec<u64> {
+        let cells: Vec<(CellKey, u64)> = self
+            .cells
+            .iter()
+            .filter(|(_, st)| !st.members.is_empty())
+            .map(|(k, st)| (*k, st.members.len() as u64))
+            .collect();
+        let mut out = vec![0u64; self.shards];
+        for (cell, m) in cells {
+            let dec = self.decide(&cell).clone();
+            out[dec.primary] += m;
+            for g in dec.ghosts {
+                out[g] += m;
+            }
+        }
+        out
+    }
+
+    /// Serialize the assignment (version, geometry, every cell's owner —
+    /// members are rebuilt by recovery re-ingestion) for checkpoint spill.
+    /// Little-endian, fixed layout; integrity is the checkpoint frame's
+    /// CRC.
+    pub fn export(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(29 + self.cells.len() * 20);
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.push(match self.policy {
+            PlacementPolicy::BlockHash => 0u8,
+            PlacementPolicy::CellGraph => 1u8,
+        });
+        out.extend_from_slice(&(self.shards as u32).to_le_bytes());
+        out.extend_from_slice(&(self.routing_dims as u32).to_le_bytes());
+        out.extend_from_slice(&(self.block_side as u32).to_le_bytes());
+        out.extend_from_slice(&(self.ghost_margin as u32).to_le_bytes());
+        let mut cells: Vec<(&CellKey, &CellState)> = self.cells.iter().collect();
+        cells.sort_unstable_by_key(|(k, _)| **k);
+        out.extend_from_slice(&(cells.len() as u32).to_le_bytes());
+        for (k, st) in cells {
+            for v in k.iter() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out.extend_from_slice(&st.owner.to_le_bytes());
+        }
+        out
+    }
+
+    /// Restore an exported assignment into an *empty* map (recovery runs
+    /// before re-ingestion). Returns `false` — leaving the map to evolve
+    /// organically — if the blob is malformed or was exported under a
+    /// different policy/geometry; recovery still converges then, it just
+    /// reshards afresh.
+    pub fn import(&mut self, blob: &[u8]) -> bool {
+        if self.load.iter().any(|&l| l > 0) {
+            return false;
+        }
+        let mut at = 0usize;
+        let take = |at: &mut usize, n: usize| -> Option<&[u8]> {
+            let s = blob.get(*at..*at + n)?;
+            *at += n;
+            Some(s)
+        };
+        let Some(v) = take(&mut at, 8) else { return false };
+        let version = u64::from_le_bytes(v.try_into().unwrap());
+        let Some(p) = take(&mut at, 1) else { return false };
+        let policy = match p[0] {
+            0 => PlacementPolicy::BlockHash,
+            1 => PlacementPolicy::CellGraph,
+            _ => return false,
+        };
+        let mut u32_at = |at: &mut usize| -> Option<u32> {
+            take(at, 4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+        };
+        let (Some(shards), Some(dims), Some(side), Some(margin)) = (
+            u32_at(&mut at),
+            u32_at(&mut at),
+            u32_at(&mut at),
+            u32_at(&mut at),
+        ) else {
+            return false;
+        };
+        if policy != self.policy
+            || shards as usize != self.shards
+            || dims as usize != self.routing_dims
+            || side as i32 != self.block_side
+            || margin as i32 != self.ghost_margin
+        {
+            return false;
+        }
+        let Some(n_cells) = u32_at(&mut at) else { return false };
+        if blob.len() - at != n_cells as usize * 20 {
+            return false;
+        }
+        let mut cells = FxHashMap::default();
+        for _ in 0..n_cells {
+            let mut key: CellKey = [0; MAX_ROUTING_DIMS];
+            for v in key.iter_mut() {
+                let s = take(&mut at, 4).unwrap();
+                *v = i32::from_le_bytes(s.try_into().unwrap());
+            }
+            let Some(owner) = u32_at(&mut at) else { return false };
+            if owner as usize >= self.shards {
+                return false;
+            }
+            cells.insert(key, CellState { owner, members: FxHashSet::default() });
+        }
+        // recompute the cut count from scratch (each pair seen twice)
+        let mut doubled = 0i64;
+        for (cell, st) in cells.iter() {
+            for nb in neighbor_keys(cell, self.routing_dims, 1) {
+                if let Some(n) = cells.get(&nb) {
+                    if n.owner != st.owner {
+                        doubled += 1;
+                    }
+                }
+            }
+        }
+        self.cells = cells;
+        self.cut_edges = doubled / 2;
+        self.version = version;
+        self.route_cache.clear();
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(a: i32, b: i32) -> CellKey {
+        [a, b, 0, 0]
+    }
+
+    fn map(policy: PlacementPolicy, shards: usize) -> PlacementMap {
+        PlacementMap::new(policy, shards, 2, 8, 2)
+    }
+
+    #[test]
+    fn block_hash_policy_matches_the_stateless_fallback() {
+        let mut m = map(PlacementPolicy::BlockHash, 4);
+        for a in -20..20 {
+            for b in -20..20 {
+                let c = key(a, b);
+                let fb = m.fallback_owner(&c) as usize;
+                let dec = m.decide(&c).clone();
+                assert_eq!(dec.primary, fb, "owner diverged from hash at {c:?}");
+                assert!(!dec.ghosts.contains(&dec.primary));
+                let mut sorted = dec.ghosts.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted, dec.ghosts, "ghosts unsorted or duplicated");
+            }
+        }
+        // stateless probing must not materialize cells
+        assert_eq!(m.total_cells(), 0);
+    }
+
+    #[test]
+    fn cell_graph_bootstrap_seeds_from_the_block_hash() {
+        let mut m = map(PlacementPolicy::CellGraph, 4);
+        // the very first cell of an empty, load-free map has no neighbor
+        // votes; the block-hash tie-break must win
+        let c = key(3, -5);
+        let fb = m.fallback_owner(&c) as usize;
+        assert_eq!(m.decide(&c).primary, fb);
+    }
+
+    #[test]
+    fn cell_graph_keeps_neighborhoods_together() {
+        let mut m = map(PlacementPolicy::CellGraph, 4);
+        let anchor = m.decide(&key(0, 0)).primary;
+        // deciding (0,0) force-assigned its whole margin neighborhood, so
+        // nearby cells vote themselves onto the same shard while balanced
+        for a in -1..=1 {
+            for b in -1..=1 {
+                assert_eq!(
+                    m.decide(&key(a, b)).primary,
+                    anchor,
+                    "adjacent cell ({a},{b}) split off its neighborhood"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn load_cap_forces_spill_to_other_shards() {
+        let mut m = map(PlacementPolicy::CellGraph, 2);
+        // hammer one growing region; the cap must eventually route new
+        // cells to the other shard even though affinity says otherwise
+        let mut ext = 0u64;
+        for a in 0..60 {
+            let c = key(a, 0);
+            let _ = m.decide(&c).clone();
+            for _ in 0..10 {
+                m.note_insert(&c, ext);
+                ext += 1;
+            }
+        }
+        assert!(
+            m.load().iter().all(|&l| l > 0),
+            "one shard absorbed everything: {:?}",
+            m.load()
+        );
+    }
+
+    #[test]
+    fn decisions_are_sticky_and_version_pinned() {
+        let mut m = map(PlacementPolicy::CellGraph, 3);
+        let before = m.decide(&key(5, 5)).clone();
+        // touching many other cells (shifting loads and votes) must not
+        // change an issued decision
+        let mut ext = 0u64;
+        for a in -10..10 {
+            let c = key(a, 9);
+            let _ = m.decide(&c).clone();
+            m.note_insert(&c, ext);
+            ext += 1;
+        }
+        assert_eq!(*m.decide(&key(5, 5)), before);
+        assert_eq!(m.version(), 0, "no migration ⇒ no version bump");
+    }
+
+    #[test]
+    fn migration_rebalances_and_bumps_the_version() {
+        let mut m = map(PlacementPolicy::CellGraph, 2);
+        // all load on whatever shard owns the hot region
+        let mut ext = 0u64;
+        for a in 0..8 {
+            for b in 0..8 {
+                let c = key(a, b);
+                let _ = m.decide(&c).clone();
+                for _ in 0..8 {
+                    m.note_insert(&c, ext);
+                    ext += 1;
+                }
+            }
+        }
+        let before_max = *m.load().iter().max().unwrap();
+        let mut guard = 0;
+        while let plan = m.plan_migration(4) {
+            if plan.is_empty() {
+                break;
+            }
+            for mv in &plan {
+                assert_ne!(mv.from, mv.to);
+            }
+            m.apply_moves(&plan);
+            guard += 1;
+            assert!(guard < 200, "migration failed to converge");
+        }
+        let after_max = *m.load().iter().max().unwrap();
+        assert!(
+            after_max < before_max,
+            "migration did not shed load ({before_max} → {after_max})"
+        );
+        assert!(m.version() > 0, "applied plans must bump the version");
+        let total: u64 = m.load().iter().sum();
+        assert_eq!(total, ext, "migration lost or duplicated load");
+    }
+
+    #[test]
+    fn affected_cells_cover_the_ghost_margin() {
+        let mut m = map(PlacementPolicy::CellGraph, 2);
+        let c = key(4, 4);
+        let _ = m.decide(&c).clone();
+        m.note_insert(&c, 1);
+        let nb = key(5, 5);
+        let _ = m.decide(&nb).clone();
+        m.note_insert(&nb, 2);
+        let moves = [CellMove { cell: c, from: m.decide(&c).primary as u32, to: 1, points: 1 }];
+        let affected = m.affected_cells(&moves);
+        assert!(affected.contains(&c));
+        assert!(
+            affected.contains(&nb),
+            "member-bearing margin neighbor missing from the affected set"
+        );
+    }
+
+    #[test]
+    fn export_import_reproduces_decisions_and_cut() {
+        let mut m = map(PlacementPolicy::CellGraph, 4);
+        let mut ext = 0u64;
+        for a in -6..6 {
+            for b in -6..6 {
+                let c = key(a, b);
+                let _ = m.decide(&c).clone();
+                m.note_insert(&c, ext);
+                ext += 1;
+            }
+        }
+        let plan = m.plan_migration(3);
+        m.apply_moves(&plan);
+        let blob = m.export();
+
+        let mut fresh = map(PlacementPolicy::CellGraph, 4);
+        assert!(fresh.import(&blob), "matching-config import must succeed");
+        assert_eq!(fresh.version(), m.version());
+        assert_eq!(fresh.cut_edges(), m.cut_edges());
+        for a in -6..6 {
+            for b in -6..6 {
+                let c = key(a, b);
+                assert_eq!(fresh.decide(&c), m.decide(&c), "decision diverged at {c:?}");
+            }
+        }
+        assert_eq!(fresh.export(), blob, "re-export must be byte-identical");
+
+        // geometry mismatch is refused, not silently adopted
+        let mut other = PlacementMap::new(PlacementPolicy::CellGraph, 4, 2, 4, 2);
+        assert!(!other.import(&blob));
+        let mut truncated = blob.clone();
+        truncated.pop();
+        let mut fresh2 = map(PlacementPolicy::CellGraph, 4);
+        assert!(!fresh2.import(&truncated));
+    }
+
+    #[test]
+    fn expected_replicas_count_members_times_fanout() {
+        let mut m = map(PlacementPolicy::CellGraph, 3);
+        let c = key(0, 0);
+        let dec = m.decide(&c).clone();
+        for e in 0..5 {
+            m.note_insert(&c, e);
+        }
+        let reps = m.expected_replicas();
+        assert_eq!(reps[dec.primary], 5);
+        for g in dec.ghosts {
+            assert_eq!(reps[g], 5);
+        }
+        assert_eq!(reps.iter().sum::<u64>() % 5, 0);
+    }
+}

@@ -1,27 +1,37 @@
-//! Deterministic spatial router: grid cell of hash function 0 → block →
-//! shard, plus ghost-replica targets for boundary cells.
+//! Deterministic spatial router: grid cell of hash function 0 → the
+//! placement map's owning shard, plus ghost-replica targets for boundary
+//! cells.
 //!
 //! The cell of a point is its integer grid-coordinate row under the first
 //! grid-LSH hash function — the same quantization every shard's
 //! `DynamicDbscan` applies (identical seed ⇒ identical shifts), so the
-//! router's geometry and the workers' bucket space agree exactly. Cells are
-//! grouped into blocks of `block_side` cells along the first
-//! `routing_dims` axes; the block coordinate row is hashed to a shard id.
-//! Spatially-close points share cells, cells share blocks, blocks pin a
-//! shard: density-connected regions co-locate.
+//! router's geometry and the workers' bucket space agree exactly. Which
+//! shard a cell lives on is **not** computed here: the router consults the
+//! stateful, versioned [`PlacementMap`] it owns (see
+//! [`super::placement`]). Under the legacy `BlockHash` policy the map
+//! answers with the old block-hash scatter, bit-for-bit; under the
+//! `CellGraph` default it assigns cells greedily over cell adjacency so
+//! density-connected neighborhoods co-locate — and live resharding may
+//! migrate them later, bumping the map version so in-flight batches keep
+//! routing against the epoch they started under.
 //!
 //! A collision under *any* of the `t` hash functions implies
 //! `‖x−y‖∞ ≤ 2ε`, which bounds the cell distance by one per axis — so
-//! cross-shard collision edges only involve points within one cell of a
-//! block face. Points within `ghost_margin` cells of a face are replicated
-//! into the neighboring block's shard (diagonal neighbors included via the
-//! offset product), which keeps those edges — and, with margin ≥ 2, the
-//! core status of every replica that carries one — realized inside at
-//! least one shard.
+//! cross-shard collision edges only involve points in cells whose
+//! neighborhoods straddle an ownership boundary. Points whose cell is
+//! within `ghost_margin` cells (L∞) of any cell owned by another shard
+//! are replicated into that shard; with margin ≥ 2 every bucket a core
+//! decision reads is complete wherever it is read, regardless of what the
+//! assignment map looks like (see DESIGN.md §Partitioning & live
+//! resharding).
+//!
+//! The router also forwards live membership (`note_insert`/`note_remove`)
+//! into the map, which is what makes per-shard load balancing, warm
+//! respawn re-feeds, and migration planning possible.
 
 use crate::lsh::GridHasher;
-use crate::util::rng::mix64;
 
+use super::placement::{CellKey, PlacementMap, MAX_ROUTING_DIMS};
 use super::ShardConfig;
 
 /// Where one point lives: its owning shard plus the shards that must hold
@@ -29,18 +39,16 @@ use super::ShardConfig;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RouteDecision {
     pub primary: usize,
-    /// deduplicated, never contains `primary`
+    /// sorted, deduplicated, never contains `primary`
     pub ghosts: Vec<usize>,
 }
 
-/// Deterministic point → shard router. Cheap (`O(d)` per point) relative
-/// to a structure update; runs on the caller thread ahead of the workers.
+/// Point → shard router: grid quantization on the caller thread, cell →
+/// shard answered (and memoized) by the owned [`PlacementMap`]. Cheap
+/// relative to a structure update.
 pub struct Router {
     hasher: GridHasher,
-    shards: usize,
-    routing_dims: usize,
-    block_side: i32,
-    ghost_margin: i32,
+    placement: PlacementMap,
     scratch: Vec<i32>,
 }
 
@@ -49,95 +57,76 @@ impl Router {
         assert!(cfg.block_side >= 1, "block_side must be >= 1");
         let hasher =
             GridHasher::new(cfg.dbscan.t, cfg.dbscan.dim, cfg.dbscan.eps, cfg.seed);
-        Router {
-            hasher,
-            shards: cfg.shards.max(1),
-            routing_dims: cfg.effective_routing_dims(),
-            block_side: cfg.block_side as i32,
-            ghost_margin: cfg.ghost_margin as i32,
-            scratch: Vec::new(),
-        }
+        let placement = PlacementMap::new(
+            cfg.placement,
+            cfg.shards.max(1),
+            cfg.effective_routing_dims(),
+            cfg.block_side,
+            cfg.ghost_margin,
+        );
+        Router { hasher, placement, scratch: Vec::new() }
     }
 
     pub fn shards(&self) -> usize {
-        self.shards
+        self.placement.shards()
     }
 
-    /// Grid cell of `x` under hash function 0 (the routing geometry).
+    /// Grid cell of `x` under hash function 0 (full dimensionality — the
+    /// routing geometry, un-truncated).
     pub fn cell(&mut self, x: &[f32]) -> Vec<i32> {
         self.scratch.resize(self.hasher.dim, 0);
         self.hasher.coords_into(0, x, &mut self.scratch);
         self.scratch.clone()
     }
 
-    fn shard_of_blocks(&self, blocks: &[i32]) -> usize {
-        let mut h: u64 = 0x8f3a_55b1_c2d4_e693;
-        for &b in blocks {
-            h = mix64(h ^ (b as u32 as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
-        }
-        (h % self.shards as u64) as usize
-    }
-
-    /// Route a point: owning shard + ghost shards. Deterministic in
-    /// (seed, config) — identical across runs and across router instances.
-    pub fn route(&mut self, x: &[f32]) -> RouteDecision {
+    /// Routing key of `x`: its cell truncated to the routing axes (the
+    /// placement map's key space).
+    pub fn cell_key(&mut self, x: &[f32]) -> CellKey {
         assert_eq!(x.len(), self.hasher.dim, "router point dimensionality mismatch");
         self.scratch.resize(self.hasher.dim, 0);
         self.hasher.coords_into(0, x, &mut self.scratch);
-        let (b, m, r) = (self.block_side, self.ghost_margin, self.routing_dims);
-        // block coordinates and the ghost offsets each routing axis allows
-        let mut blocks = [0i32; 4];
-        let mut opts = [[0i32; 3]; 4];
-        let mut counts = [1usize; 4];
-        for ax in 0..r {
-            let c = self.scratch[ax];
-            blocks[ax] = c.div_euclid(b);
-            let rem = c.rem_euclid(b);
-            let mut k = 1; // opts[ax][0] = 0 (stay) always present
-            if rem < m {
-                opts[ax][k] = -1;
-                k += 1;
-            }
-            if rem >= b - m {
-                opts[ax][k] = 1;
-                k += 1;
-            }
-            counts[ax] = k;
-        }
-        let primary = self.shard_of_blocks(&blocks[..r]);
-        let mut ghosts: Vec<usize> = Vec::new();
-        if self.shards > 1 {
-            // odometer over the per-axis offset choices, skipping all-zero
-            let mut idx = [0usize; 4];
-            'combos: loop {
-                let mut ax = 0;
-                loop {
-                    if ax == r {
-                        break 'combos;
-                    }
-                    idx[ax] += 1;
-                    if idx[ax] < counts[ax] {
-                        break;
-                    }
-                    idx[ax] = 0;
-                    ax += 1;
-                }
-                let mut nb = [0i32; 4];
-                for ax in 0..r {
-                    nb[ax] = blocks[ax] + opts[ax][idx[ax]];
-                }
-                let s = self.shard_of_blocks(&nb[..r]);
-                if s != primary && !ghosts.contains(&s) {
-                    ghosts.push(s);
-                }
-            }
-        }
-        RouteDecision { primary, ghosts }
+        let mut key: CellKey = [0; MAX_ROUTING_DIMS];
+        let r = self.placement.routing_dims();
+        key[..r].copy_from_slice(&self.scratch[..r]);
+        key
+    }
+
+    /// Routing decision for a cell key under the placement map's current
+    /// version (memoized there until a migration bumps it).
+    pub fn decide(&mut self, cell: &CellKey) -> &RouteDecision {
+        self.placement.decide(cell)
+    }
+
+    /// Route a point: owning shard + ghost shards. Deterministic in
+    /// (seed, config, op sequence) — identical across runs and across
+    /// router instances fed the same stream.
+    pub fn route(&mut self, x: &[f32]) -> RouteDecision {
+        let key = self.cell_key(x);
+        self.placement.decide(&key).clone()
+    }
+
+    /// Record a live primary member of `cell` in the placement map.
+    pub fn note_insert(&mut self, cell: &CellKey, ext: u64) {
+        self.placement.note_insert(cell, ext);
+    }
+
+    /// Remove a live member recorded by [`Self::note_insert`].
+    pub fn note_remove(&mut self, cell: &CellKey, ext: u64) {
+        self.placement.note_remove(cell, ext);
+    }
+
+    pub fn placement(&self) -> &PlacementMap {
+        &self.placement
+    }
+
+    pub fn placement_mut(&mut self) -> &mut PlacementMap {
+        &mut self.placement
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::placement::PlacementPolicy;
     use super::*;
     use crate::dbscan::DbscanConfig;
     use crate::util::rng::Rng;
@@ -162,6 +151,8 @@ mod tests {
         let c = cfg(4, 8, 2);
         let mut a = Router::new(&c);
         let mut b = Router::new(&c);
+        // greedy placement is stateful: determinism means two routers fed
+        // the same stream evolve identical maps and identical answers
         for p in points(500, 4, 9) {
             assert_eq!(a.route(&p), b.route(&p));
         }
@@ -182,7 +173,7 @@ mod tests {
             assert_eq!(dedup.len(), d.ghosts.len(), "duplicate ghost shard");
             saw_ghost |= !d.ghosts.is_empty();
         }
-        assert!(saw_ghost, "small blocks over a wide box must produce ghosts");
+        assert!(saw_ghost, "random spray over a wide box must produce ghosts");
     }
 
     #[test]
@@ -218,5 +209,22 @@ mod tests {
         if r.cell(&base) == r.cell(&nudged) {
             assert_eq!(d0, d1);
         }
+    }
+
+    #[test]
+    fn block_hash_policy_reproduces_the_legacy_scatter() {
+        // the legacy block-face ghost rule, restated cell-granularly: a
+        // point ghosts into exactly the shards hashing the blocks within
+        // `margin` cells of its own. BlockHash placement must agree.
+        let mut c = cfg(4, 4, 2);
+        c.placement = PlacementPolicy::BlockHash;
+        let mut r = Router::new(&c);
+        for p in points(1000, 4, 11) {
+            let d = r.route(&p);
+            assert!(d.primary < 4);
+            assert!(!d.ghosts.contains(&d.primary));
+        }
+        // stateless policy: routing alone materializes no placement cells
+        assert_eq!(r.placement().total_cells(), 0);
     }
 }

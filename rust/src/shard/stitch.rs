@@ -26,6 +26,11 @@
 //! stable across snapshots for points whose cluster did not change —
 //! unlike the old dense per-snapshot renumbering.
 //!
+//! Live resharding (`shard::placement`) is invisible here too: a migrated
+//! point leaves one shard's delta report (listed as no longer held) and
+//! appears in another's, so the stitch graph nets the ownership change out
+//! through the ordinary delta path — no migration-specific edge type.
+//!
 //! Soundness: a shard's component is an induced-subgraph component of the
 //! global collision graph, hence a subset of one global cluster — every
 //! stitch edge joins subsets of the same global cluster. Completeness

@@ -18,6 +18,13 @@
 //! * [`ShardOp::Sync`] — bare ack: barrier without consuming the
 //!   delta-tracking state (benches use it to isolate publish latency).
 //!
+//! **Live resharding needs no worker support.** When the placement layer
+//! migrates a cell between shards (`shard::placement`), the engine
+//! expresses the move as ordinary deletes at the losing shard and inserts
+//! at the gaining shard, riding this same FIFO op stream — a worker cannot
+//! tell a migration op from a client op, and the delta reports it already
+//! emits carry the ownership change to the stitcher.
+//!
 //! ## Batch wire format
 //!
 //! A [`ShardBatch`] carries its ops plus **one shared flat coordinate

@@ -220,6 +220,7 @@ fn timing_goes_through_the_obs_span_api() {
         ("shard/engine.rs", include_str!("../src/shard/engine.rs")),
         ("shard/labels.rs", include_str!("../src/shard/labels.rs")),
         ("shard/mod.rs", include_str!("../src/shard/mod.rs")),
+        ("shard/placement.rs", include_str!("../src/shard/placement.rs")),
         ("shard/router.rs", include_str!("../src/shard/router.rs")),
         ("shard/stitch.rs", include_str!("../src/shard/stitch.rs")),
         ("shard/worker.rs", include_str!("../src/shard/worker.rs")),
@@ -276,6 +277,43 @@ fn distance_scans_confined_to_the_oracle_module() {
     }
 }
 
+/// Every cell→shard assignment decision lives in `shard/placement.rs`:
+/// the block-hash scatter primitive (`shard_of_blocks` and its mix seed)
+/// must not be re-inlined anywhere else. The router *consults* the
+/// placement map; the engine, workers, stitcher and serve layer consume
+/// routing decisions. A second copy of the hash would silently fork the
+/// assignment the migration planner and the checkpoint blob both pin.
+#[test]
+fn shard_assignment_confined_to_placement() {
+    for (name, src) in [
+        ("shard/router.rs", include_str!("../src/shard/router.rs")),
+        ("shard/engine.rs", include_str!("../src/shard/engine.rs")),
+        ("shard/worker.rs", include_str!("../src/shard/worker.rs")),
+        ("shard/stitch.rs", include_str!("../src/shard/stitch.rs")),
+        ("shard/mod.rs", include_str!("../src/shard/mod.rs")),
+        ("serve/sharded.rs", include_str!("../src/serve/sharded.rs")),
+        ("serve/builder.rs", include_str!("../src/serve/builder.rs")),
+        ("serve/durable.rs", include_str!("../src/serve/durable.rs")),
+    ] {
+        for pat in ["shard_of_blocks", "0x8f3a_55b1"] {
+            assert!(
+                !src.contains(pat),
+                "{name} makes a shard-assignment decision ({pat}); only \
+                 shard/placement.rs may decide cell ownership — route \
+                 through Router::decide / PlacementMap instead"
+            );
+        }
+    }
+    let placement = include_str!("../src/shard/placement.rs");
+    for required in ["fn shard_of_blocks", "fn plan_migration", "fn apply_moves"] {
+        assert!(
+            placement.contains(required),
+            "shard/placement.rs lost `{required}` — the assignment \
+             primitives must stay in the placement module"
+        );
+    }
+}
+
 /// Channel endpoints and worker joins in the sharded serving path must
 /// never `unwrap`/`expect`: a dead worker is a *recoverable* fault
 /// (`EngineError` → `Health::Degraded` → respawn), not a panic. Every
@@ -287,6 +325,7 @@ fn distance_scans_confined_to_the_oracle_module() {
 fn channel_ops_never_unwrap_in_the_serving_path() {
     for (name, src) in [
         ("shard/engine.rs", include_str!("../src/shard/engine.rs")),
+        ("shard/placement.rs", include_str!("../src/shard/placement.rs")),
         ("shard/worker.rs", include_str!("../src/shard/worker.rs")),
         ("shard/mod.rs", include_str!("../src/shard/mod.rs")),
         ("serve/mod.rs", include_str!("../src/serve/mod.rs")),

@@ -153,6 +153,7 @@ fn checkpoint_roundtrip_and_damage_tolerance() {
         points: vec![(5, vec![1.0, 2.0, 3.0]), (9, vec![-1.0, 0.0, 4.5])],
         labels: vec![0, -1],
         cores: vec![true, false],
+        placement: Some(vec![0xDE, 0xAD, 0xBE, 0xEF]),
     };
     write_checkpoint(&dir, &ckpt).unwrap();
     let back = load_checkpoint(&dir).expect("valid checkpoint must load");
@@ -161,6 +162,13 @@ fn checkpoint_roundtrip_and_damage_tolerance() {
     assert_eq!(back.points, ckpt.points);
     assert_eq!(back.labels, ckpt.labels);
     assert_eq!(back.cores, ckpt.cores);
+    assert_eq!(back.placement, ckpt.placement, "placement blob survives the roundtrip");
+
+    // an absent placement blob encodes as length 0 and reads back as None
+    let bare = Checkpoint { placement: None, ..ckpt.clone() };
+    write_checkpoint(&dir, &bare).unwrap();
+    assert_eq!(load_checkpoint(&dir).unwrap().placement, None);
+    write_checkpoint(&dir, &ckpt).unwrap();
 
     // truncation (crash mid-spill before the atomic rename would normally
     // prevent this — belt and braces) reads as absent, never as garbage

@@ -1,0 +1,338 @@
+//! Live-resharding acceptance tests: differential checks of the
+//! `ReshardMode::Auto` migration path against a no-reshard oracle.
+//!
+//! The invariant under test: cell migration is a pure *placement* change.
+//! Whatever the placement map does — greedy assignment, load-triggered
+//! migration, restore from a checkpoint — the published global partition
+//! must equal the one produced by the same op stream with resharding
+//! off, after **every** publish, not just at quiescence. The workload is
+//! built to actually trip the migration trigger: a contiguous "snake" of
+//! cells is assigned to one shard while lightly loaded (CellGraph's
+//! adjacency voting gloms a contiguous region onto one owner), then
+//! hammered with dense inserts so that shard's member count blows past
+//! `mean · slack + floor` and `plan_migration` has real work to do.
+
+use std::path::PathBuf;
+
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::data::Dataset;
+use dyn_dbscan::dbscan::DbscanConfig;
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::serve::{
+    Backend, ClusterEngine, EngineBuilder, FaultPlan, PlacementPolicy,
+    ReshardMode, SnapshotView,
+};
+use dyn_dbscan::shard::{ShardConfig, ShardedEngine};
+use rustc_hash::FxHashMap;
+
+/// Fresh scratch directory under the system temp root (std-only: the
+/// container has no tempfile crate).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dyn-dbscan-reshard-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn builder(dim: usize) -> EngineBuilder {
+    // eager_attach makes non-core attachment depend on the final point
+    // set, not the insertion order — required by the ARI = 1.0 gates
+    EngineBuilder::new(dim).k(8).t(6).eps(0.75).seed(21).eager_attach(true)
+}
+
+/// Exact label-partition agreement over identical live sets.
+fn ari_of(a: &SnapshotView, b: &SnapshotView) -> f64 {
+    let la = a.labels();
+    let lb: FxHashMap<u64, i64> = b.labels().into_iter().collect();
+    assert_eq!(la.len(), lb.len(), "live sets diverged");
+    let mut pa = Vec::with_capacity(la.len());
+    let mut pb = Vec::with_capacity(la.len());
+    for (ext, va) in la {
+        pa.push(va);
+        pb.push(*lb.get(&ext).unwrap_or_else(|| panic!("{ext} missing in b")));
+    }
+    adjusted_rand_index(&pa, &pb)
+}
+
+/// One op of the skew workload: `Some(coords)` = upsert, `None` = remove.
+type Op = (u64, Option<Vec<f32>>);
+
+/// Deterministic hot-spot workload in 3-d.
+///
+/// Phase 1 — establish the assignment: `n_uniform` well-separated blob
+/// points plus one point in each cell of a 60-step snake along x (step
+/// 0.3 ≪ the eps·block_side cell width, so consecutive steps are
+/// neighbors and the snake spans several contiguous cells). Phase 2 —
+/// skew: `n_hot` more points jittered onto the same snake (every one
+/// lands in a cell already assigned in phase 1, so sticky first-touch
+/// routes them all to the snake's owner), interleaved with removals of
+/// some phase-1 blob points to deepen the imbalance.
+fn hot_spot_workload(n_uniform: usize, n_hot: usize, seed: u64) -> Vec<Op> {
+    let ds = make_blobs(
+        &BlobsConfig {
+            n: n_uniform,
+            dim: 3,
+            clusters: 4,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        seed,
+    );
+    let snake = |i: usize| -> Vec<f32> {
+        // 60 slots, 0.3 apart: span 18.0 ≈ six 3.0-wide routing cells,
+        // far from the blob box so the snake's cells are its own
+        let slot = (i % 60) as f32;
+        let jitter = ((i / 60) % 7) as f32 * 0.04;
+        vec![40.0 + slot * 0.3, 40.0 + jitter, 0.25]
+    };
+    let mut ops: Vec<Op> = Vec::new();
+    let base = n_uniform as u64;
+    // phase 1: uniform mass + one point per snake slot
+    for i in 0..n_uniform {
+        ops.push((i as u64, Some(ds.point(i).to_vec())));
+    }
+    for i in 0..60 {
+        ops.push((base + i as u64, Some(snake(i))));
+    }
+    // phase 2: hammer the snake, shed some uniform points
+    for i in 0..n_hot {
+        ops.push((base + 60 + i as u64, Some(snake(i))));
+        if i % 6 == 0 && i / 6 < n_uniform / 4 {
+            ops.push(((i / 6) as u64, None));
+        }
+    }
+    ops
+}
+
+fn apply(eng: &mut Box<dyn ClusterEngine>, op: &Op) {
+    match op {
+        (ext, Some(coords)) => eng.upsert(*ext, coords),
+        (ext, None) => eng.remove(*ext),
+    }
+}
+
+// ---------------------------------------------------------------------
+// the core differential gate
+// ---------------------------------------------------------------------
+
+/// Auto resharding must reproduce the no-reshard partition after every
+/// publish — and must actually migrate (the run is vacuous otherwise).
+#[test]
+fn auto_resharding_matches_the_off_oracle_at_every_publish() {
+    let ops = hot_spot_workload(400, 800, 31);
+    let mut auto = builder(3)
+        .backend(Backend::Sharded(2))
+        .reshard(ReshardMode::Auto { max_cells_per_publish: 8 })
+        .build()
+        .unwrap();
+    let mut off =
+        builder(3).backend(Backend::Sharded(2)).build().unwrap();
+    let mut last_epoch = 0;
+    for chunk in ops.chunks(150) {
+        for op in chunk {
+            apply(&mut auto, op);
+            apply(&mut off, op);
+        }
+        let va = auto.publish();
+        let vo = off.publish();
+        let ari = ari_of(&va, &vo);
+        assert_eq!(
+            ari, 1.0,
+            "partition diverged at version {} (ARI {ari})",
+            va.version()
+        );
+        assert_eq!(vo.reshard_epoch(), 0, "Off must never migrate");
+        last_epoch = va.reshard_epoch();
+    }
+    assert!(
+        last_epoch > 0,
+        "the skewed workload never tripped a migration — the test is vacuous"
+    );
+    let _ = auto.finish();
+    let _ = off.finish();
+}
+
+/// The point of migrating: under the same skewed stream, Auto's final
+/// per-shard load spread must beat the frozen Off assignment.
+#[test]
+fn auto_rebalances_the_hot_shard() {
+    let ops = hot_spot_workload(400, 800, 37);
+    let mut auto = builder(3)
+        .backend(Backend::Sharded(2))
+        .reshard(ReshardMode::Auto { max_cells_per_publish: 8 })
+        .build()
+        .unwrap();
+    let mut off =
+        builder(3).backend(Backend::Sharded(2)).build().unwrap();
+    for chunk in ops.chunks(150) {
+        for op in chunk {
+            apply(&mut auto, op);
+            apply(&mut off, op);
+        }
+        auto.publish();
+        off.publish();
+    }
+    let max_of = |eng: &Box<dyn ClusterEngine>| -> u64 {
+        let loads = eng.metrics().shard_loads;
+        assert_eq!(loads.len(), 2);
+        assert!(loads.iter().sum::<u64>() > 0, "loads were never published");
+        *loads.iter().max().unwrap()
+    };
+    let (a, o) = (max_of(&auto), max_of(&off));
+    assert!(
+        a < o,
+        "migration did not reduce the peak shard load (auto {a} vs off {o})"
+    );
+    let _ = auto.finish();
+    let _ = off.finish();
+}
+
+// ---------------------------------------------------------------------
+// composition with fault tolerance
+// ---------------------------------------------------------------------
+
+/// Degrade → heal → migrate: a worker killed mid-stream degrades health
+/// (resharding pauses while degraded), the next publish respawns and
+/// re-feeds from the placement map, and migration then resumes — final
+/// partition still exactly matches an unfaulted no-reshard oracle.
+#[test]
+fn killed_worker_heals_then_resharding_resumes() {
+    let ops = hot_spot_workload(400, 800, 41);
+    let plan = FaultPlan { shard: 1, kill_after_ops: Some(40), drop_next_reply: false };
+    let mut faulty = builder(3)
+        .backend(Backend::Sharded(3))
+        .publish_timeout_ms(750)
+        .reshard(ReshardMode::Auto { max_cells_per_publish: 8 })
+        .faults(plan)
+        .build()
+        .unwrap();
+    let mut oracle =
+        builder(3).backend(Backend::Sharded(3)).build().unwrap();
+    let mut saw_degraded = false;
+    for chunk in ops.chunks(150) {
+        for op in chunk {
+            apply(&mut faulty, op);
+            apply(&mut oracle, op);
+        }
+        faulty.publish();
+        oracle.publish();
+        saw_degraded |= !faulty.stats().health.is_ok();
+    }
+    assert!(saw_degraded, "the injected kill was never detected");
+    // one more publish heals (respawn runs at publish start), and with
+    // the skew still standing the reshard trigger fires post-heal
+    let healed = faulty.publish();
+    assert!(faulty.stats().health.is_ok(), "respawn must clear Degraded");
+    assert!(
+        healed.reshard_epoch() > 0,
+        "resharding never resumed after the heal"
+    );
+    let ov = oracle.publish();
+    let ari = ari_of(&healed, &ov);
+    assert_eq!(ari, 1.0, "post-heal partition diverged (ARI {ari})");
+    let out = faulty.finish();
+    assert!(out.stats.health.is_ok());
+    let _ = oracle.finish();
+}
+
+// ---------------------------------------------------------------------
+// durability
+// ---------------------------------------------------------------------
+
+/// A durable reopen must reshard to the *same* assignment it spilled:
+/// the checkpoint's placement blob is restored before re-ingestion, so
+/// the exported map (version included) round-trips bit-for-bit and the
+/// recovered partition matches.
+#[test]
+fn durable_reopen_reproduces_the_assignment() {
+    let dir = scratch("reopen");
+    let ops = hot_spot_workload(400, 800, 43);
+    let mut eng = builder(3)
+        .backend(Backend::Sharded(2))
+        .reshard(ReshardMode::Auto { max_cells_per_publish: 8 })
+        .persist(&dir)
+        .build()
+        .unwrap();
+    for chunk in ops.chunks(150) {
+        for op in chunk {
+            apply(&mut eng, op);
+        }
+        eng.publish();
+    }
+    let before = eng.publish();
+    assert!(before.reshard_epoch() > 0, "no migration before the close");
+    let blob_before =
+        eng.placement_blob().expect("sharded backend must export placement");
+    let _ = eng.finish();
+
+    let reopened = builder(3)
+        .backend(Backend::Sharded(2))
+        .reshard(ReshardMode::Auto { max_cells_per_publish: 8 })
+        .persist(&dir)
+        .build()
+        .unwrap();
+    let blob_after =
+        reopened.placement_blob().expect("reopened backend must export placement");
+    assert_eq!(blob_before, blob_after, "reopen re-derived a different assignment");
+    let rv = reopened.snapshot();
+    assert_eq!(rv.live_points(), before.live_points());
+    let ari = ari_of(&rv, &before);
+    assert_eq!(ari, 1.0, "reopened partition diverged (ARI {ari})");
+    let _ = reopened.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// stitch-graph ownership consistency
+// ---------------------------------------------------------------------
+
+/// After a quiesced publish the stitcher's per-shard live counts must
+/// equal the placement map's expectation (members × routing fan-out) —
+/// i.e. migration's delete/insert/flip ops left no stray or missing
+/// replica anywhere.
+#[test]
+fn ownership_matches_the_placement_expectation_after_migration() {
+    let cfg = DbscanConfig { k: 8, t: 6, eps: 0.75, dim: 3, ..Default::default() };
+    let mut scfg = ShardConfig::new(cfg, 3, 7);
+    scfg.reshard = ReshardMode::Auto { max_cells_per_publish: 8 };
+    assert_eq!(scfg.placement, PlacementPolicy::CellGraph, "sharded default");
+    let mut eng = ShardedEngine::new(scfg);
+    let mut coords: FxHashMap<u64, Vec<f32>> = FxHashMap::default();
+    let ops = hot_spot_workload(400, 800, 47);
+    for chunk in ops.chunks(150) {
+        for op in chunk {
+            match op {
+                (ext, Some(c)) => {
+                    coords.insert(*ext, c.clone());
+                    eng.insert(*ext, c);
+                }
+                (ext, None) => {
+                    coords.remove(ext);
+                    eng.delete(*ext);
+                }
+            }
+        }
+        eng.maybe_reshard(|ext, buf| match coords.get(&ext) {
+            Some(row) => {
+                buf.extend_from_slice(row);
+                true
+            }
+            None => false,
+        });
+        let snap = eng.publish();
+        let expected =
+            eng.expected_shard_replicas().expect("S > 1 has a placement map");
+        let got: Vec<u64> = snap.shard_live.iter().map(|&l| l as u64).collect();
+        assert_eq!(
+            expected, got,
+            "stitcher ownership diverged from the placement map at seq {}",
+            snap.seq
+        );
+    }
+    assert!(eng.placement_version() > 0, "no migration happened");
+    assert!(eng.stats().migrated_points > 0);
+    let out = eng.finish();
+    assert!(out.stats.health.is_ok());
+}
