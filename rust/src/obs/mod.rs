@@ -407,7 +407,7 @@ pub struct Metrics {
     /// live ETT vertices per HDT level (deeper levels fold into the last)
     hdt_level_verts: [AtomicU64; Self::MAX_LEVELS],
     /// live primary points per shard from the placement map, sampled at
-    /// publish (shards beyond the tracked cap are dropped, not folded)
+    /// publish (shards beyond the tracked cap fold into the last slot)
     shard_loads: [AtomicU64; Self::MAX_SHARDS_TRACKED],
     /// WAL records appended (durable-layer throughput counter)
     wal_records: AtomicU64,
@@ -428,8 +428,9 @@ impl Metrics {
     /// realistic shard size, and deeper levels fold into the last slot.
     pub const MAX_LEVELS: usize = 8;
 
-    /// Per-shard load gauges tracked (shard ids ≥ this are ignored — the
-    /// engine caps at far fewer workers than this on any real box).
+    /// Per-shard load gauges tracked; shard ids ≥ this fold into the
+    /// last slot (the engine caps at far fewer workers than this on any
+    /// real box, so the fold slot is normally just shard 31's own load).
     pub const MAX_SHARDS_TRACKED: usize = 32;
 
     pub fn new(enabled: bool) -> Self {
@@ -638,11 +639,22 @@ impl Metrics {
         std::array::from_fn(|i| self.hdt_level_verts[i].load(Ordering::Relaxed))
     }
 
-    /// Record one shard's live primary load (sampled at publish from the
-    /// placement map; out-of-range shard ids are ignored).
-    pub fn set_shard_load(&self, shard: usize, v: u64) {
-        if self.enabled && shard < Self::MAX_SHARDS_TRACKED {
-            self.shard_loads[shard].store(v, Ordering::Relaxed);
+    /// Record the per-shard live primary loads (sampled at publish from
+    /// the placement map). Shards past the tracked cap fold their load
+    /// into the last slot — mirroring `add_level_verts` — so the total
+    /// stays honest even on an implausibly wide fleet.
+    pub fn set_shard_loads(&self, loads: &[u64]) {
+        if !self.enabled {
+            return;
+        }
+        let last = Self::MAX_SHARDS_TRACKED - 1;
+        for (s, slot) in self.shard_loads.iter().enumerate() {
+            let v = if s == last {
+                loads.get(s..).map_or(0, |tail| tail.iter().sum())
+            } else {
+                loads.get(s).copied().unwrap_or(0)
+            };
+            slot.store(v, Ordering::Relaxed);
         }
     }
 
@@ -751,9 +763,18 @@ mod tests {
         m.max_gauge(Gauge::HdtLevels, 2);
         m.add_level_verts(0, 10);
         m.add_level_verts(99, 1); // folds into the last slot
-        m.set_shard_load(2, 77);
-        m.set_shard_load(999, 1); // out of range: dropped, no panic
+        let mut loads = vec![0u64; 40];
+        loads[2] = 77;
+        loads[31] = 5;
+        loads[39] = 3; // beyond the cap: folds into the last slot
+        m.set_shard_loads(&loads);
         assert_eq!(m.shard_loads()[2], 77);
+        assert_eq!(
+            m.shard_loads()[Metrics::MAX_SHARDS_TRACKED - 1],
+            8,
+            "overflow shards fold into the last slot"
+        );
+        assert_eq!(m.shard_loads().iter().sum::<u64>(), 85, "no load dropped");
         assert_eq!(m.gauge(Gauge::LivePoints), 123.0);
         assert!((m.gauge(Gauge::GhostRatio) - 0.25).abs() < 1e-12);
         assert_eq!(m.gauge(Gauge::EttVertices), 15.0);

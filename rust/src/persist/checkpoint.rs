@@ -24,8 +24,12 @@
 //! when the backend has no placement state) pins the cell→shard
 //! assignment at spill time, so a durable reopen reshards to the *same*
 //! assignment before re-ingesting points and the WAL tail re-evolves it
-//! identically. `DDCKPT01` files (no blob) fail the magic check and fall
-//! back to cold WAL replay, which is always correct.
+//! identically. Legacy `DDCKPT01` files (same body minus the trailing
+//! placement field) still load — with `placement: None` — because the
+//! WAL is truncated after every successful checkpoint: rejecting a
+//! valid old-format checkpoint would silently drop everything folded
+//! into it and replay only the post-checkpoint tail. New files are
+//! always written as `DDCKPT02`.
 //!
 //! Writes go to a temp file that is fsynced and atomically renamed over
 //! `checkpoint.ckpt`, so readers only ever observe the previous complete
@@ -44,6 +48,10 @@ use super::crc32;
 pub const CHECKPOINT_FILE: &str = "checkpoint.ckpt";
 
 const MAGIC: &[u8; 8] = b"DDCKPT02";
+/// Pre-placement format: identical body without the trailing placement
+/// field. Read-only — see the module docs for why rejecting it would
+/// lose data.
+const MAGIC_V1: &[u8; 8] = b"DDCKPT01";
 
 /// One serialized published snapshot. `labels[i]`/`cores[i]` describe
 /// `points[i]`: the row order is the only coupling between the three.
@@ -92,7 +100,9 @@ impl Checkpoint {
         b
     }
 
-    fn decode(body: &[u8]) -> Option<Checkpoint> {
+    /// `legacy` decodes the `DDCKPT01` body layout, which ends at the
+    /// point rows (no placement field).
+    fn decode(body: &[u8], legacy: bool) -> Option<Checkpoint> {
         let mut at = 0usize;
         let take = |at: &mut usize, n: usize| -> Option<&[u8]> {
             let end = at.checked_add(n)?;
@@ -124,10 +134,15 @@ impl Checkpoint {
             labels.push(label);
             cores.push(core);
         }
-        let placement_len = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?) as usize;
-        let placement = match placement_len {
-            0 => None,
-            n => Some(take(&mut at, n)?.to_vec()),
+        let placement = if legacy {
+            None
+        } else {
+            let placement_len =
+                u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?) as usize;
+            match placement_len {
+                0 => None,
+                n => Some(take(&mut at, n)?.to_vec()),
+            }
         };
         if at != body.len() {
             return None;
@@ -164,15 +179,21 @@ pub fn write_checkpoint(dir: &Path, ckpt: &Checkpoint) -> io::Result<()> {
     Ok(())
 }
 
-/// Load `<dir>/checkpoint.ckpt` if it exists and is intact; any damage
-/// (missing file, bad magic, short body, CRC mismatch, trailing garbage)
-/// yields `None` and the caller falls back to cold WAL replay.
+/// Load `<dir>/checkpoint.ckpt` if it exists and is intact; both current
+/// (`DDCKPT02`) and legacy (`DDCKPT01`) formats load. Any damage
+/// (missing file, unknown magic, short body, CRC mismatch, trailing
+/// garbage) yields `None` and the caller falls back to cold WAL replay.
 pub fn load_checkpoint(dir: &Path) -> Option<Checkpoint> {
     let mut buf = Vec::new();
     File::open(dir.join(CHECKPOINT_FILE)).ok()?.read_to_end(&mut buf).ok()?;
-    if buf.len() < MAGIC.len() + 12 || &buf[..MAGIC.len()] != MAGIC {
+    if buf.len() < MAGIC.len() + 12 {
         return None;
     }
+    let legacy = match &buf[..MAGIC.len()] {
+        m if m == MAGIC => false,
+        m if m == MAGIC_V1 => true,
+        _ => return None,
+    };
     let body_len =
         u64::from_le_bytes(buf[MAGIC.len()..MAGIC.len() + 8].try_into().ok()?) as usize;
     let start = MAGIC.len() + 8;
@@ -185,5 +206,5 @@ pub fn load_checkpoint(dir: &Path) -> Option<Checkpoint> {
     if crc32(body) != crc {
         return None;
     }
-    Checkpoint::decode(body)
+    Checkpoint::decode(body, legacy)
 }

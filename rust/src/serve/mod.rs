@@ -343,7 +343,9 @@ pub struct MetricsSnapshot {
     /// live ETT vertices per HDT level (deeper levels fold into the last)
     pub hdt_level_verts: Vec<u64>,
     /// live primary points per shard from the placement map, sampled at
-    /// the last publish (empty on the single backend)
+    /// the last publish (empty on the single backend; shards past
+    /// [`crate::obs::Metrics::MAX_SHARDS_TRACKED`] fold into the last
+    /// entry)
     pub shard_loads: Vec<u64>,
     /// durability-layer counters (zero without `persist`)
     pub wal: WalStats,
@@ -430,7 +432,8 @@ impl MetricsSnapshot {
         if !self.shard_loads.is_empty() {
             let name = "dyndbscan_shard_load";
             out.push_str(&format!(
-                "# HELP {name} Live primary points per shard (placement map)\n\
+                "# HELP {name} Live primary points per shard (placement map; \
+                 shards past the tracked cap fold into the highest slot)\n\
                  # TYPE {name} gauge\n"
             ));
             for (shard, v) in self.shard_loads.iter().enumerate() {

@@ -507,6 +507,16 @@ impl ShardedEngine {
                 continue;
             }
             for ext in router.placement().members_sorted(cell) {
+                // fetch coordinates before buffering anything: if the
+                // store has no row for this ext, skip it entirely so the
+                // losing shards keep their replica instead of dropping it
+                // with no re-insert at the gaining ones
+                coords.clear();
+                let have_coords = coords_of(ext, &mut coords);
+                debug_assert!(have_coords, "live ext {ext} has no coordinate row");
+                if !have_coords {
+                    continue;
+                }
                 let mut touched = false;
                 // shards losing their replica — or keeping it with a
                 // flipped primary/ghost role (delete now, re-insert below)
@@ -520,24 +530,12 @@ impl ShardedEngine {
                     }
                 }
                 // shards gaining a replica (or completing a role flip)
-                let mut have_coords = false;
                 for &s in std::iter::once(&after.primary).chain(&after.ghosts) {
                     let had = s == before.primary || before.ghosts.contains(&s);
                     let flip =
                         had && (s == before.primary) != (s == after.primary);
                     if had && !flip {
                         continue;
-                    }
-                    if !have_coords {
-                        coords.clear();
-                        have_coords = coords_of(ext, &mut coords);
-                        debug_assert!(
-                            have_coords,
-                            "live ext {ext} has no coordinate row"
-                        );
-                        if !have_coords {
-                            break;
-                        }
                     }
                     self.pending[s].push_insert(ext, &coords, s == after.primary);
                     touched = true;
@@ -704,9 +702,7 @@ impl ShardedEngine {
             if let Some(router) = &self.router {
                 let p = router.placement();
                 self.obs.set_gauge(Gauge::CutEdges, p.cut_edges());
-                for (s, &l) in p.load().iter().enumerate() {
-                    self.obs.set_shard_load(s, l);
-                }
+                self.obs.set_shard_loads(p.load());
             }
             self.obs.set_gauge(Gauge::MigrationCells, self.migrated_this_publish);
             self.last_trace = trace;

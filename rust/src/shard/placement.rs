@@ -800,7 +800,8 @@ mod tests {
         }
         let before_max = *m.load().iter().max().unwrap();
         let mut guard = 0;
-        while let plan = m.plan_migration(4) {
+        loop {
+            let plan = m.plan_migration(4);
             if plan.is_empty() {
                 break;
             }

@@ -186,6 +186,56 @@ fn checkpoint_roundtrip_and_damage_tolerance() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// A pre-placement `DDCKPT01` checkpoint must still load (as
+/// `placement: None`): the WAL was truncated when it spilled, so
+/// rejecting it would silently drop every point folded into it.
+#[test]
+fn legacy_v1_checkpoint_still_loads() {
+    let dir = scratch("ckpt-v1");
+    let ckpt = Checkpoint {
+        version: 7,
+        wal_seq: 21,
+        eps: 0.5,
+        dim: 2,
+        points: vec![(3, vec![0.5, -0.5]), (8, vec![2.0, 2.0])],
+        labels: vec![0, 0],
+        cores: vec![true, true],
+        placement: None,
+    };
+    // hand-frame the v1 layout: the v2 body minus the trailing
+    // placement length field, under the old magic
+    let mut body = Vec::new();
+    body.extend_from_slice(&ckpt.version.to_le_bytes());
+    body.extend_from_slice(&ckpt.wal_seq.to_le_bytes());
+    body.extend_from_slice(&ckpt.eps.to_le_bytes());
+    body.extend_from_slice(&ckpt.dim.to_le_bytes());
+    body.extend_from_slice(&(ckpt.points.len() as u32).to_le_bytes());
+    for (i, (ext, coords)) in ckpt.points.iter().enumerate() {
+        body.extend_from_slice(&ext.to_le_bytes());
+        body.extend_from_slice(&ckpt.labels[i].to_le_bytes());
+        body.push(ckpt.cores[i] as u8);
+        for x in coords {
+            body.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let mut file = Vec::new();
+    file.extend_from_slice(b"DDCKPT01");
+    file.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    file.extend_from_slice(&body);
+    file.extend_from_slice(&dyn_dbscan::persist::crc32(&body).to_le_bytes());
+    std::fs::write(dir.join(dyn_dbscan::persist::CHECKPOINT_FILE), &file).unwrap();
+
+    let back = load_checkpoint(&dir).expect("v1 checkpoint must load");
+    assert_eq!(back, ckpt);
+
+    // an unknown future magic is still rejected
+    let mut future = file.clone();
+    future[..8].copy_from_slice(b"DDCKPT99");
+    std::fs::write(dir.join(dyn_dbscan::persist::CHECKPOINT_FILE), &future).unwrap();
+    assert!(load_checkpoint(&dir).is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // ---------------------------------------------------------------------
 // crash recovery, differential against uninterrupted runs
 // ---------------------------------------------------------------------
