@@ -44,6 +44,7 @@ use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
 use dyn_dbscan::data::Dataset;
 use dyn_dbscan::dbscan::{Connectivity, DbscanConfig, DynamicDbscan, Op, RepairStats};
 use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::replica::ReadRouter;
 use dyn_dbscan::serve::{ClusterEngine, EngineBuilder};
 use dyn_dbscan::shard::{ReshardMode, ShardConfig, ShardedEngine, StitchMode};
 use dyn_dbscan::util::json::Json;
@@ -1257,6 +1258,9 @@ fn update_throughput(
     // read-path QPS at the same ends of the size span as recovery —
     // the ≥10× ε-speedup gate applies when both ends are full scale
     let read_section = read_path_section(&recovery_sizes, n, reps);
+    // replication axis: leader shipping tax at 0/1/2 followers, replica
+    // read fan-out, and incremental-vs-full follower bootstrap
+    let repl_section = replication_section(&ds, &ops, n, reps);
 
     let record = Json::obj(vec![
         ("bench", Json::str("updates_throughput")),
@@ -1282,6 +1286,7 @@ fn update_throughput(
         ("obs_overhead", obs_section),
         ("durability", durability_section),
         ("read_path", read_section),
+        ("replication", repl_section),
         (
             "single_batched",
             Json::obj(vec![
@@ -1482,6 +1487,230 @@ fn skew_stress_section(n: usize, shards: usize) -> Json {
             "auto_beats_off_on_skew",
             Json::num(if skew_max[1] < skew_max[0] { 1.0 } else { 0.0 }),
         ),
+    ])
+}
+
+// ---------------------------------------------------------------------
+// replication: leader shipping tax, read fan-out, bootstrap catch-up
+// ---------------------------------------------------------------------
+
+/// Budgeted leader write-path tax of WAL log-shipping (wall-time fraction
+/// of a leader with followers attached over the identical persistent run
+/// with none, min-of-reps), asserted at full scale. Shipping reads the
+/// already-written tail and queues frames on an in-process channel — it
+/// must stay well under the fsync it rides behind.
+const REPL_OVERHEAD_GATE_FULL: f64 = 0.05;
+/// Smoke backstop: tiny runs amortize the per-publish tail read over very
+/// few ops and single runs are scheduler-jitter-dominated.
+const REPL_OVERHEAD_GATE_SMOKE: f64 = 0.50;
+
+/// The gate that applies to a replication-overhead measurement at
+/// workload size `n` (shared by the recorder and the JSON validator).
+fn repl_gate(n: f64) -> f64 {
+    if n >= 10_000.0 {
+        REPL_OVERHEAD_GATE_FULL
+    } else {
+        REPL_OVERHEAD_GATE_SMOKE
+    }
+}
+
+/// Stream the churn workload through a replicated leader (publish every
+/// 2000 ops, checkpoint every 8 publishes — the `facade_churn_run`
+/// cadence). Followers are attached but *not* drained inside the timed
+/// loop: the measured wall is exactly the leader's write path including
+/// its per-publish ship. Returns (wall s, leader, router).
+fn replicated_churn_run(
+    ds: &Dataset,
+    ops: &[WlOp],
+    dir: &std::path::Path,
+    followers: usize,
+) -> (f64, Box<dyn ClusterEngine>, ReadRouter) {
+    let (mut leader, router) = EngineBuilder::new(DIM)
+        .seed(42)
+        .persist(dir)
+        .persist_every(8)
+        .replicate(followers)
+        .max_staleness(u64::MAX) // reads never force a catch-up here
+        .build_replicated()
+        .unwrap();
+    let t0 = Instant::now();
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            WlOp::Insert(ext) => leader.upsert(ext, ds.point(ext as usize)),
+            WlOp::Delete(ext) => leader.remove(ext),
+        }
+        if (i + 1) % 2000 == 0 {
+            leader.publish();
+        }
+    }
+    leader.publish();
+    (t0.elapsed().as_secs_f64(), leader, router)
+}
+
+/// The replication axis: leader write-path overhead at 0/1/2 attached
+/// followers (0 = the plain persistent engine, the baseline), aggregate
+/// ε-query capacity across the replica set, and bootstrap catch-up time
+/// from an incremental chain vs full-only checkpoints.
+fn replication_section(ds: &Dataset, ops: &[WlOp], n: usize, reps: usize) -> Json {
+    let total_ops = ops.len() as f64;
+    let follower_counts = [0usize, 1, 2];
+    let mut best = [f64::MAX; 3];
+    for rep in 0..reps {
+        for (fi, &followers) in follower_counts.iter().enumerate() {
+            let dir = persist_scratch(&format!("repl-{rep}-{followers}"));
+            let wall = if followers == 0 {
+                let (wall, eng) =
+                    facade_churn_run(ds, ops, Some((dir.as_path(), 8)));
+                let _ = eng.finish();
+                wall
+            } else {
+                let (wall, leader, mut router) =
+                    replicated_churn_run(ds, ops, &dir, followers);
+                // parity sanity outside the timing: everything the leader
+                // published is drainable and lands on its version
+                let applied = router.catch_up();
+                assert!(applied > 0, "followers never received a frame");
+                assert_eq!(
+                    router.read().version(),
+                    leader.snapshot().version(),
+                    "caught-up replica must match the leader version"
+                );
+                let _ = leader.finish();
+                wall
+            };
+            let _ = std::fs::remove_dir_all(&dir);
+            best[fi] = best[fi].min(wall);
+        }
+    }
+    let mut table = Table::new(
+        "replication: leader write path vs attached followers (churn)",
+        &["followers", "ops/s", "overhead"],
+    );
+    let mut leader_rows: Vec<Json> = Vec::new();
+    for (fi, &followers) in follower_counts.iter().enumerate() {
+        let overhead = best[fi] / best[0] - 1.0;
+        table.row(vec![
+            followers.to_string(),
+            format!("{:.0}", total_ops / best[fi]),
+            format!("{:+.2}%", overhead * 100.0),
+        ]);
+        leader_rows.push(Json::obj(vec![
+            ("followers", Json::num(followers as f64)),
+            ("wall_s", Json::num(best[fi])),
+            ("ops_per_s", Json::num(total_ops / best[fi])),
+            ("overhead_frac", Json::num(overhead)),
+        ]));
+    }
+    table.print();
+
+    // read fan-out: ε-query QPS of the leader's view and of each caught-up
+    // replica's view. Replicas share no mutable state, so the replica
+    // set's aggregate capacity is the sum of its members — that sum (vs
+    // the leader alone) is the scaling claim recorded here.
+    let dir = persist_scratch("repl-read");
+    let (_, leader, mut router) = replicated_churn_run(ds, ops, &dir, 2);
+    router.catch_up();
+    let probes = read_probes(ds, n, 64, 0xD1CE);
+    let lv = leader.snapshot();
+    let leader_qps = time_queries(&probes, reps, |p| {
+        std::hint::black_box(lv.epsilon_neighbors(p));
+    });
+    let mut replica_qps: Vec<f64> = Vec::new();
+    for i in 0..router.len() {
+        let rv = router.replica(i).snapshot();
+        assert_eq!(rv.version(), lv.version());
+        replica_qps.push(time_queries(&probes, reps, |p| {
+            std::hint::black_box(rv.epsilon_neighbors(p));
+        }));
+    }
+    let aggregate: f64 = replica_qps.iter().sum();
+    let _ = leader.finish();
+    drop(router);
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut scale_table = Table::new(
+        "replication: ε-query capacity (leader vs replica set)",
+        &["source", "ε qps"],
+    );
+    scale_table.row(vec!["leader".into(), format!("{leader_qps:.0}")]);
+    for (i, q) in replica_qps.iter().enumerate() {
+        scale_table.row(vec![format!("replica {i}"), format!("{q:.0}")]);
+    }
+    scale_table.row(vec!["replica set (sum)".into(), format!("{aggregate:.0}")]);
+    scale_table.print();
+
+    // bootstrap catch-up: crash a persistent leader mid-stream, then time
+    // how long attaching one follower takes — checkpoint chain (full ⊕
+    // delta) vs full-only spills, identical op history
+    let mut boot: Vec<Json> = Vec::new();
+    let mut boot_table = Table::new(
+        "replication: follower bootstrap after leader crash",
+        &["checkpoints", "bootstrap s", "tail records replayed"],
+    );
+    for incremental in [true, false] {
+        let dir = persist_scratch(&format!("repl-boot-{incremental}"));
+        let mut b = EngineBuilder::new(DIM)
+            .seed(42)
+            .persist(&dir)
+            .persist_every(8)
+            .incremental_checkpoints(incremental);
+        let mut eng = b.build().unwrap();
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                WlOp::Insert(ext) => eng.upsert(ext, ds.point(ext as usize)),
+                WlOp::Delete(ext) => eng.remove(ext),
+            }
+            if (i + 1) % 2000 == 0 {
+                eng.publish();
+            }
+        }
+        eng.publish();
+        std::mem::forget(eng); // crash: no flush, no shutdown spill
+        b = EngineBuilder::new(DIM)
+            .seed(42)
+            .persist(&dir)
+            .persist_every(8)
+            .incremental_checkpoints(incremental);
+        let t0 = Instant::now();
+        let (leader, router) =
+            b.replicate(1).max_staleness(0).build_replicated().unwrap();
+        let boot_s = t0.elapsed().as_secs_f64();
+        let replayed = leader.metrics().wal.replay_records;
+        boot_table.row(vec![
+            if incremental { "full + delta chain" } else { "full only" }.into(),
+            format!("{boot_s:.3}"),
+            replayed.to_string(),
+        ]);
+        boot.push(Json::obj(vec![
+            ("incremental", Json::num(if incremental { 1.0 } else { 0.0 })),
+            ("bootstrap_s", Json::num(boot_s)),
+            ("tail_records_replayed", Json::num(replayed as f64)),
+        ]));
+        drop(router);
+        let _ = leader.finish();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    boot_table.print();
+
+    Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("reps", Json::num(reps as f64)),
+        ("publish_every", Json::num(2_000.0)),
+        ("checkpoint_every_publishes", Json::num(8.0)),
+        ("gate_frac", Json::num(repl_gate(n as f64))),
+        ("leader", Json::Arr(leader_rows)),
+        (
+            "read_scaling",
+            Json::obj(vec![
+                ("probes", Json::num(probes.len() as f64)),
+                ("leader_eps_qps", Json::num(leader_qps)),
+                (
+                    "replica_eps_qps",
+                    Json::Arr(replica_qps.iter().map(|&q| Json::num(q)).collect()),
+                ),
+                ("aggregate_eps_qps", Json::num(aggregate)),
+            ]),
+        ),
+        ("bootstrap", Json::Arr(boot)),
     ])
 }
 
@@ -1742,6 +1971,75 @@ fn validate_updates_json(path: &std::path::Path) {
             skew.get("auto_beats_off_on_skew").and_then(|v| v.as_f64()),
             Some(1.0),
             "auto resharding failed to beat the frozen assignment under skew"
+        );
+    }
+
+    // replication axis: the follower sweep is complete, the leader's
+    // shipping tax is inside the budget for the recorded n, and the
+    // fan-out + bootstrap measurements carry non-degenerate numbers
+    let repl = j
+        .get("replication")
+        .unwrap_or_else(|| panic!("missing replication in {}", path.display()));
+    let repl_n = repl.get("n").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let gate = repl_gate(repl_n);
+    let leader_rows = repl
+        .get("leader")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("missing replication.leader in {}", path.display()));
+    assert_eq!(
+        leader_rows.len(),
+        3,
+        "replication leader sweep must cover 0/1/2 followers"
+    );
+    for row in leader_rows {
+        assert!(
+            row.get("ops_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "replication leader row missing throughput"
+        );
+        let followers =
+            row.get("followers").and_then(|v| v.as_f64()).unwrap_or(-1.0);
+        let overhead = row
+            .get("overhead_frac")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::MAX);
+        assert!(
+            overhead <= gate,
+            "log-shipping tax at {followers} followers is {:.1}% \
+             (gate {:.0}% at n={repl_n})",
+            overhead * 100.0,
+            gate * 100.0
+        );
+    }
+    let scaling = repl.get("read_scaling").unwrap_or_else(|| {
+        panic!("missing replication.read_scaling in {}", path.display())
+    });
+    let replica_qps = scaling
+        .get("replica_eps_qps")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("missing replica_eps_qps in {}", path.display()));
+    assert_eq!(replica_qps.len(), 2, "read scaling must cover both replicas");
+    let aggregate = scaling
+        .get("aggregate_eps_qps")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    let worst_replica = replica_qps
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(0.0))
+        .fold(f64::MAX, f64::min);
+    assert!(
+        worst_replica > 0.0 && aggregate >= worst_replica,
+        "replica read fan-out is degenerate (aggregate {aggregate}, \
+         worst replica {worst_replica})"
+    );
+    let boot = repl
+        .get("bootstrap")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("missing replication.bootstrap in {}", path.display()));
+    assert_eq!(boot.len(), 2, "bootstrap must cover incremental and full");
+    for row in boot {
+        assert!(
+            row.get("bootstrap_s").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+            "bootstrap row missing wall time"
         );
     }
 }

@@ -94,6 +94,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     };
     let kind = engine_kind(args)?;
     let shards = args.get_usize("shards", 1)?;
+    let replicas = args.get_usize("replicas", 0)?;
     let conn = {
         let name = args.get("conn").unwrap_or("leveled");
         ConnKind::from_name(name)
@@ -151,7 +152,23 @@ fn cmd_stream(args: &Args) -> Result<()> {
         if shards > 1 { format!("sharded({shards})") } else { "single".into() },
         builder.effective_stitch(),
     );
-    let engine = builder.build()?;
+    let (engine, mut router) = if replicas > 0 {
+        if args.get("persist").is_none() {
+            return Err(anyhow!(
+                "--replicas needs --persist DIR: replicas bootstrap from the \
+                 checkpoint chain and ship the on-disk WAL"
+            ));
+        }
+        let (leader, router) =
+            builder.replicate(replicas).build_replicated()?;
+        println!(
+            "replicating to {replicas} read replica(s) \
+             (WAL log-shipping at every publish fsync)"
+        );
+        (leader, Some(router))
+    } else {
+        (builder.build()?, None)
+    };
     let labels = ds.labels.clone();
     let truth = move |e: u64| labels[e as usize];
     let mut emit = |text: &str| print!("{text}");
@@ -186,6 +203,19 @@ fn cmd_stream(args: &Args) -> Result<()> {
     println!("add     latency: {}", stats.add_latency.summary());
     println!("delete  latency: {}", stats.delete_latency.summary());
     println!("publish latency: {}", stats.publish_latency.summary());
+    if let Some(router) = router.as_mut() {
+        // the final publish shipped its frames before the leader shut
+        // down; drain them and show version parity
+        let applied = router.catch_up();
+        let replica_view = router.read();
+        println!(
+            "replication: {} replica(s) applied {applied} shipped frames; \
+             replica version {} vs leader {}",
+            router.len(),
+            replica_view.version(),
+            out.outcome.snapshot.version(),
+        );
+    }
     Ok(())
 }
 

@@ -117,6 +117,9 @@ COMMANDS:
                  --persist DIR (durable engine: op-log WAL + periodic
                  checkpoint in DIR; a rerun recovers the persisted
                  state before streaming)
+                 --replicas N (with --persist: N WAL-shipped read
+                 replicas bootstrapped from the checkpoint chain; the
+                 run reports shipped frames and version parity)
     query      Load a dataset, publish one snapshot, then answer point
                queries through the snapshot-pinned ε-cell index AND the
                brute-force scan oracle (timed, cross-checked identical)

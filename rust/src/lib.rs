@@ -19,8 +19,11 @@
 //!   ([`metrics`]), datasets ([`data`]), the streaming coordinator
 //!   ([`coordinator`]), the sharded parallel serving engine with
 //!   cross-shard cluster stitching ([`shard`]), the durability primitives
-//!   behind `EngineBuilder::persist` ([`persist`]: CRC-framed op-log WAL +
-//!   checkpoint spill) and the benchmark harness ([`bench_harness`]).
+//!   behind `EngineBuilder::persist` ([`persist`]: segmented CRC-framed
+//!   op-log WAL + full/incremental checkpoint spill), the WAL log-shipping
+//!   replication layer ([`replica`]: read replicas, staleness-bounded read
+//!   routing, leader promotion) and the benchmark harness
+//!   ([`bench_harness`]).
 //! * **L2/L1 (python, build-time only)** — JAX/Pallas compute graphs
 //!   (batched grid-hash quantizer, pairwise-distance tiles, PCA projection)
 //!   AOT-lowered to HLO text and executed through [`runtime`] on the PJRT
@@ -89,6 +92,33 @@
 //! # let _ = view;
 //! ```
 //!
+//! Add `.replicate(n)` on top of `.persist(dir)` and `build_replicated()`
+//! returns the writable leader plus a [`replica::ReadRouter`] over `n`
+//! read replicas — each bootstrapped from the checkpoint chain and fed
+//! the leader's fsynced WAL frames at every publish. Replica views carry
+//! the leader's version numbering and are bit-identical to the leader's
+//! view at the same version; staleness is bounded in publish barriers,
+//! and `ReadRouter::promote(i)` fails a follower over into a writable
+//! leader:
+//!
+//! ```no_run
+//! use dyn_dbscan::serve::{ClusterEngine, EngineBuilder};
+//!
+//! let (mut leader, mut reads) = EngineBuilder::new(2)
+//!     .persist("/var/lib/dyn-dbscan")
+//!     .replicate(2)          // two read replicas
+//!     .max_staleness(0)      // reads always catch up to the leader
+//!     .build_replicated()
+//!     .unwrap();
+//! leader.upsert(1, &[0.0, 0.0]);
+//! let v = leader.publish(); // fsync + ship to both replicas
+//! let r = reads.read();     // replica view, version parity with v
+//! assert_eq!(r.version(), v.version());
+//! // leader gone? drain the tail and keep serving writes:
+//! let mut leader2 = reads.promote(0);
+//! leader2.upsert(2, &[0.1, 0.1]);
+//! ```
+//!
 //! The structure-level API ([`dbscan::DynamicDbscan`]: `add_point` /
 //! `delete_point` / `get_cluster` over internal `PointId`s) remains for
 //! embedding and ablation; see `DESIGN.md` §Serving API for when to use
@@ -107,6 +137,7 @@ pub mod lsh;
 pub mod metrics;
 pub mod obs;
 pub mod persist;
+pub mod replica;
 pub mod runtime;
 pub mod serve;
 pub mod shard;

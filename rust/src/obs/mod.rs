@@ -324,10 +324,16 @@ pub enum Gauge {
     CutEdges,
     /// cells migrated by live resharding in the last publish interval
     MigrationCells,
+    /// slowest replica-shipped WAL sequence floor on the leader
+    /// (`u64::MAX` scaled down to 0 when no followers are attached)
+    ShipFloor,
+    /// publishes the slowest follower trails the leader by (leader-side:
+    /// sampled at ship; follower-side registries report their own lag)
+    ReplicaLagPublishes,
 }
 
 impl Gauge {
-    pub const COUNT: usize = 15;
+    pub const COUNT: usize = 17;
     pub const ALL: [Gauge; Self::COUNT] = [
         Gauge::LivePoints,
         Gauge::GhostRatio,
@@ -344,6 +350,8 @@ impl Gauge {
         Gauge::CowIndexSharing,
         Gauge::CutEdges,
         Gauge::MigrationCells,
+        Gauge::ShipFloor,
+        Gauge::ReplicaLagPublishes,
     ];
 
     pub fn name(self) -> &'static str {
@@ -363,6 +371,8 @@ impl Gauge {
             Gauge::CowIndexSharing => "cow_index_sharing",
             Gauge::CutEdges => "cut_edges",
             Gauge::MigrationCells => "migration_cells",
+            Gauge::ShipFloor => "ship_floor",
+            Gauge::ReplicaLagPublishes => "replica_lag_publishes",
         }
     }
 
@@ -421,6 +431,12 @@ pub struct Metrics {
     replay_ns: AtomicU64,
     /// WAL records replayed by the last crash recovery
     replay_records: AtomicU64,
+    /// WAL frames shipped to replication followers
+    ship_frames: AtomicU64,
+    /// ship rounds completed (one per durable publish with followers)
+    ship_rounds: AtomicU64,
+    /// per-round ship latency (read tail + transport sends)
+    ship: AtomicHisto,
 }
 
 impl Metrics {
@@ -450,6 +466,9 @@ impl Metrics {
             fsync: AtomicHisto::new(),
             replay_ns: AtomicU64::new(0),
             replay_records: AtomicU64::new(0),
+            ship_frames: AtomicU64::new(0),
+            ship_rounds: AtomicU64::new(0),
+            ship: AtomicHisto::new(),
         }
     }
 
@@ -579,6 +598,32 @@ impl Metrics {
             self.replay_ns.load(Ordering::Relaxed),
             self.replay_records.load(Ordering::Relaxed),
         )
+    }
+
+    // ---- replication ------------------------------------------------
+
+    /// One log-shipping round completed in `ns`, forwarding `frames` WAL
+    /// frames to followers.
+    #[inline]
+    pub fn record_ship(&self, ns: u64, frames: u64) {
+        if self.enabled {
+            self.ship_rounds.fetch_add(1, Ordering::Relaxed);
+            self.ship_frames.fetch_add(frames, Ordering::Relaxed);
+            self.ship.record(ns);
+        }
+    }
+
+    /// `(frames shipped, ship rounds)` since the engine started.
+    pub fn ship_counters(&self) -> (u64, u64) {
+        (
+            self.ship_frames.load(Ordering::Relaxed),
+            self.ship_rounds.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Live merged view of the per-round ship latencies.
+    pub fn ship_histo(&self) -> LatencyHisto {
+        self.ship.snapshot()
     }
 
     // ---- gauges -----------------------------------------------------

@@ -42,12 +42,22 @@ use std::fs::{self, File, OpenOptions};
 use std::io::{self, Read, Write};
 use std::path::Path;
 
+use rustc_hash::{FxHashMap, FxHashSet};
+
 use super::crc32;
+use crate::util::cow_map::chunk_ix_of;
 
 /// Checkpoint file name inside a persist directory.
 pub const CHECKPOINT_FILE: &str = "checkpoint.ckpt";
 
+/// Incremental delta file name inside a persist directory (`DDCKPT03`,
+/// chained to the full checkpoint — see [`CheckpointDelta`]).
+pub const DELTA_FILE: &str = "checkpoint.delta";
+
 const MAGIC: &[u8; 8] = b"DDCKPT02";
+/// Incremental delta record: dirty coordinate chunks + a full label/core
+/// overlay, chained to the `DDCKPT02` full spill whose version it names.
+const MAGIC_DELTA: &[u8; 8] = b"DDCKPT03";
 /// Pre-placement format: identical body without the trailing placement
 /// field. Read-only — see the module docs for why rejecting it would
 /// lose data.
@@ -207,4 +217,483 @@ pub fn load_checkpoint(dir: &Path) -> Option<Checkpoint> {
         return None;
     }
     Checkpoint::decode(body, legacy)
+}
+
+/// Incremental checkpoint: the coordinate chunks of the façade's
+/// `ChunkedCowMap` store that changed since the last *full* spill, plus a
+/// compact `(ext, label, core)` overlay for every live point. Labels can
+/// move en masse at a publish without their coordinate chunk changing
+/// (cluster merges relabel points the update never touched), so the
+/// overlay — 17 bytes/point vs `17 + 4·dim` for a full row — is always
+/// complete while the bulky coordinate payload is spilled only for dirty
+/// chunks.
+///
+/// A delta is *cumulative since the full spill it chains to*
+/// ([`CheckpointDelta::base_version`]): each incremental spill atomically
+/// replaces `checkpoint.delta`, so at most one delta exists and recovery
+/// is always `full ⊕ delta ⊕ WAL tail`. Chunk-replacement semantics make
+/// deletions implicit — reconstruction drops every base point whose chunk
+/// (under [`chunk_ix_of`] at [`CheckpointDelta::chunk_count`]) is dirty,
+/// then inserts the delta's rows for those chunks.
+///
+/// ## File format
+///
+/// ```text
+/// [magic "DDCKPT03"][u64 body_len][body][u32 crc32(body)]
+/// ```
+///
+/// body (all little-endian):
+///
+/// ```text
+/// base_version u64 · version u64 · wal_seq u64 · eps f32 · dim u32
+/// · chunk_count u32 · n_dirty u32
+/// · n_dirty×(chunk_ix u32 · rows u32 · rows×(ext u64 · dim×f32))
+/// · n_live u32 · n_live×(ext u64 · label i64 · core u8)
+/// · placement_len u32 · placement_len bytes
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointDelta {
+    /// `version` of the full `DDCKPT02` spill this delta chains to. A
+    /// delta whose base is not the resident full checkpoint is stale and
+    /// ignored.
+    pub base_version: u64,
+    /// Snapshot version of the delta spill itself.
+    pub version: u64,
+    /// Last WAL sequence number folded in; replay resumes past it.
+    pub wal_seq: u64,
+    /// Engine ε, for the recovery sanity check.
+    pub eps: f32,
+    /// Point dimensionality.
+    pub dim: u32,
+    /// Chunk count of the coordinate map at spill time (power of two);
+    /// reconstruction re-derives base-point chunk membership with it.
+    pub chunk_count: u32,
+    /// Dirty chunks as `(chunk_ix, complete rows of that chunk)`.
+    pub chunks: Vec<(u32, Vec<(u64, Vec<f32>)>)>,
+    /// `(ext, label, core)` for every live point at the delta's version.
+    pub overlay: Vec<(u64, i64, bool)>,
+    /// Serialized placement map at delta spill time (`None` = empty).
+    pub placement: Option<Vec<u8>>,
+}
+
+impl CheckpointDelta {
+    fn encode(&self) -> Vec<u8> {
+        let rows: usize = self.chunks.iter().map(|(_, r)| r.len()).sum();
+        let mut b = Vec::with_capacity(
+            44 + rows * (8 + self.dim as usize * 4) + self.overlay.len() * 17,
+        );
+        b.extend_from_slice(&self.base_version.to_le_bytes());
+        b.extend_from_slice(&self.version.to_le_bytes());
+        b.extend_from_slice(&self.wal_seq.to_le_bytes());
+        b.extend_from_slice(&self.eps.to_le_bytes());
+        b.extend_from_slice(&self.dim.to_le_bytes());
+        b.extend_from_slice(&self.chunk_count.to_le_bytes());
+        b.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        for (ix, rows) in &self.chunks {
+            b.extend_from_slice(&ix.to_le_bytes());
+            b.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+            for (ext, coords) in rows {
+                b.extend_from_slice(&ext.to_le_bytes());
+                for &x in coords {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        b.extend_from_slice(&(self.overlay.len() as u32).to_le_bytes());
+        for (ext, label, core) in &self.overlay {
+            b.extend_from_slice(&ext.to_le_bytes());
+            b.extend_from_slice(&label.to_le_bytes());
+            b.push(*core as u8);
+        }
+        let placement = self.placement.as_deref().unwrap_or(&[]);
+        b.extend_from_slice(&(placement.len() as u32).to_le_bytes());
+        b.extend_from_slice(placement);
+        b
+    }
+
+    fn decode(body: &[u8]) -> Option<CheckpointDelta> {
+        let mut at = 0usize;
+        let take = |at: &mut usize, n: usize| -> Option<&[u8]> {
+            let end = at.checked_add(n)?;
+            if end > body.len() {
+                return None;
+            }
+            let s = &body[*at..end];
+            *at = end;
+            Some(s)
+        };
+        let base_version = u64::from_le_bytes(take(&mut at, 8)?.try_into().ok()?);
+        let version = u64::from_le_bytes(take(&mut at, 8)?.try_into().ok()?);
+        let wal_seq = u64::from_le_bytes(take(&mut at, 8)?.try_into().ok()?);
+        let eps = f32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?);
+        let dim = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?);
+        let chunk_count = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?);
+        if chunk_count == 0 || !chunk_count.is_power_of_two() {
+            return None;
+        }
+        let n_dirty = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?) as usize;
+        let mut chunks = Vec::with_capacity(n_dirty.min(1 << 20));
+        for _ in 0..n_dirty {
+            let ix = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?);
+            if ix >= chunk_count {
+                return None;
+            }
+            let n_rows = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?) as usize;
+            let mut rows = Vec::with_capacity(n_rows.min(1 << 20));
+            for _ in 0..n_rows {
+                let ext = u64::from_le_bytes(take(&mut at, 8)?.try_into().ok()?);
+                let raw = take(&mut at, dim as usize * 4)?;
+                let coords: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect();
+                rows.push((ext, coords));
+            }
+            chunks.push((ix, rows));
+        }
+        let n_live = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?) as usize;
+        let mut overlay = Vec::with_capacity(n_live.min(1 << 20));
+        for _ in 0..n_live {
+            let ext = u64::from_le_bytes(take(&mut at, 8)?.try_into().ok()?);
+            let label = i64::from_le_bytes(take(&mut at, 8)?.try_into().ok()?);
+            let core = take(&mut at, 1)?[0] != 0;
+            overlay.push((ext, label, core));
+        }
+        let placement_len = u32::from_le_bytes(take(&mut at, 4)?.try_into().ok()?) as usize;
+        let placement = match placement_len {
+            0 => None,
+            n => Some(take(&mut at, n)?.to_vec()),
+        };
+        if at != body.len() {
+            return None;
+        }
+        Some(CheckpointDelta {
+            base_version,
+            version,
+            wal_seq,
+            eps,
+            dim,
+            chunk_count,
+            chunks,
+            overlay,
+            placement,
+        })
+    }
+
+    /// Fold this delta over its full base checkpoint, producing the
+    /// equivalent full `Checkpoint` at the delta's version. `None` if the
+    /// delta does not chain to `base` (stale base version, or an overlay
+    /// inconsistent with the merged point set) — the caller then recovers
+    /// from the base alone, which stays correct because WAL retention is
+    /// floored at the *full* spill's sequence, not the delta's.
+    pub fn apply_to(&self, base: &Checkpoint) -> Option<Checkpoint> {
+        if self.base_version != base.version
+            || self.dim != base.dim
+            || self.eps.to_bits() != base.eps.to_bits()
+        {
+            return None;
+        }
+        let dirty: FxHashSet<u32> = self.chunks.iter().map(|&(ix, _)| ix).collect();
+        let mut points: Vec<(u64, Vec<f32>)> = base
+            .points
+            .iter()
+            .filter(|(ext, _)| {
+                !dirty.contains(&(chunk_ix_of(*ext, self.chunk_count as usize) as u32))
+            })
+            .cloned()
+            .collect();
+        for (_, rows) in &self.chunks {
+            points.extend(rows.iter().cloned());
+        }
+        let over: FxHashMap<u64, (i64, bool)> = self
+            .overlay
+            .iter()
+            .map(|&(ext, label, core)| (ext, (label, core)))
+            .collect();
+        if over.len() != points.len() {
+            return None;
+        }
+        let mut labels = Vec::with_capacity(points.len());
+        let mut cores = Vec::with_capacity(points.len());
+        for (ext, _) in &points {
+            let &(label, core) = over.get(ext)?;
+            labels.push(label);
+            cores.push(core);
+        }
+        Some(Checkpoint {
+            version: self.version,
+            wal_seq: self.wal_seq,
+            eps: self.eps,
+            dim: self.dim,
+            points,
+            labels,
+            cores,
+            placement: self.placement.clone(),
+        })
+    }
+}
+
+/// Atomically replace `<dir>/checkpoint.delta` with `delta` — same
+/// temp + fsync + rename + dir-sync discipline as [`write_checkpoint`].
+pub fn write_delta(dir: &Path, delta: &CheckpointDelta) -> io::Result<()> {
+    fs::create_dir_all(dir)?;
+    let body = delta.encode();
+    let tmp = dir.join("delta.tmp");
+    {
+        let mut f = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&tmp)?;
+        f.write_all(MAGIC_DELTA)?;
+        f.write_all(&(body.len() as u64).to_le_bytes())?;
+        f.write_all(&body)?;
+        f.write_all(&crc32(&body).to_le_bytes())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, dir.join(DELTA_FILE))?;
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Remove `<dir>/checkpoint.delta` (after a full spill resets the chain).
+/// A missing file is fine.
+pub fn clear_delta(dir: &Path) {
+    let _ = fs::remove_file(dir.join(DELTA_FILE));
+}
+
+/// Load `<dir>/checkpoint.delta` if present and intact; `None` on any
+/// damage (recovery then uses the full checkpoint alone).
+pub fn load_delta(dir: &Path) -> Option<CheckpointDelta> {
+    let mut buf = Vec::new();
+    File::open(dir.join(DELTA_FILE)).ok()?.read_to_end(&mut buf).ok()?;
+    if buf.len() < MAGIC_DELTA.len() + 12 {
+        return None;
+    }
+    if &buf[..MAGIC_DELTA.len()] != MAGIC_DELTA {
+        return None;
+    }
+    let body_len =
+        u64::from_le_bytes(buf[8..16].try_into().ok()?) as usize;
+    let start = 16;
+    let end = start.checked_add(body_len)?;
+    if end + 4 != buf.len() {
+        return None;
+    }
+    let body = &buf[start..end];
+    let crc = u32::from_le_bytes(buf[end..end + 4].try_into().ok()?);
+    if crc32(body) != crc {
+        return None;
+    }
+    CheckpointDelta::decode(body)
+}
+
+/// Load the checkpoint chain: the full checkpoint, with the incremental
+/// delta folded over it when one is present, intact and chained to this
+/// exact base. A stale or damaged delta degrades silently to the full
+/// checkpoint — never to an error — because the WAL is retained back to
+/// the full spill's sequence floor, so the longer tail replay recovers
+/// the same state.
+pub fn load_checkpoint_chain(dir: &Path) -> Option<Checkpoint> {
+    let base = load_checkpoint(dir)?;
+    match load_delta(dir).and_then(|d| d.apply_to(&base)) {
+        Some(merged) => Some(merged),
+        None => Some(base),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    const CHUNKS: u32 = 64;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dyn-dbscan-ckpt-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Some ext that hashes into the same chunk as `like` (but isn't it).
+    fn chunk_mate(like: u64) -> u64 {
+        let want = chunk_ix_of(like, CHUNKS as usize);
+        (100..).find(|&e| e != like && chunk_ix_of(e, CHUNKS as usize) == want).unwrap()
+    }
+
+    fn base() -> Checkpoint {
+        Checkpoint {
+            version: 10,
+            wal_seq: 40,
+            eps: 0.75,
+            dim: 2,
+            points: vec![
+                (1, vec![1.0, 1.0]),
+                (2, vec![2.0, 2.0]),
+                (3, vec![3.0, 3.0]),
+            ],
+            labels: vec![0, 0, 1],
+            cores: vec![true, true, false],
+            placement: None,
+        }
+    }
+
+    #[test]
+    fn delta_roundtrip_preserves_every_field() {
+        let dir = scratch("delta-roundtrip");
+        let delta = CheckpointDelta {
+            base_version: 10,
+            version: 12,
+            wal_seq: 55,
+            eps: 0.75,
+            dim: 2,
+            chunk_count: CHUNKS,
+            chunks: vec![
+                (chunk_ix_of(2, CHUNKS as usize) as u32, vec![(2, vec![9.0, 9.0])]),
+            ],
+            overlay: vec![(1, 0, true), (2, 2, false), (3, 1, false)],
+            placement: Some(vec![0xAB, 0xCD]),
+        };
+        write_delta(&dir, &delta).unwrap();
+        assert_eq!(load_delta(&dir).expect("intact delta must load"), delta);
+
+        // absent placement encodes as length 0 and reads back as None
+        let bare = CheckpointDelta { placement: None, ..delta.clone() };
+        write_delta(&dir, &bare).unwrap();
+        assert_eq!(load_delta(&dir).unwrap().placement, None);
+
+        // clear_delta ends the chain; clearing twice is fine
+        clear_delta(&dir);
+        assert!(load_delta(&dir).is_none());
+        clear_delta(&dir);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Three exts guaranteed to live in three distinct chunks.
+    fn distinct_chunk_exts() -> (u64, u64, u64) {
+        let a = 1u64;
+        let ca = chunk_ix_of(a, CHUNKS as usize);
+        let b = (2u64..).find(|&e| chunk_ix_of(e, CHUNKS as usize) != ca).unwrap();
+        let cb = chunk_ix_of(b, CHUNKS as usize);
+        let c = (b + 1..)
+            .find(|&e| {
+                let cx = chunk_ix_of(e, CHUNKS as usize);
+                cx != ca && cx != cb
+            })
+            .unwrap();
+        (a, b, c)
+    }
+
+    #[test]
+    fn apply_to_replaces_dirty_chunks_and_keeps_the_rest() {
+        // a: untouched chunk — b: chunk rewritten — c: chunk emptied
+        let (a, b, c) = distinct_chunk_exts();
+        let base = Checkpoint {
+            version: 10,
+            wal_seq: 40,
+            eps: 0.75,
+            dim: 2,
+            points: vec![
+                (a, vec![1.0, 1.0]),
+                (b, vec![2.0, 2.0]),
+                (c, vec![3.0, 3.0]),
+            ],
+            labels: vec![0, 0, 1],
+            cores: vec![true, true, false],
+            placement: None,
+        };
+        let mate = chunk_mate(b); // inserted into b's chunk by the delta
+        let delta = CheckpointDelta {
+            base_version: 10,
+            version: 12,
+            wal_seq: 55,
+            eps: 0.75,
+            dim: 2,
+            chunk_count: CHUNKS,
+            chunks: vec![
+                // b moved, `mate` is new; the complete rows of that chunk
+                (
+                    chunk_ix_of(b, CHUNKS as usize) as u32,
+                    vec![(b, vec![9.0, 9.0]), (mate, vec![8.0, 8.0])],
+                ),
+                // c's chunk dirty with no surviving rows = deletion
+                (chunk_ix_of(c, CHUNKS as usize) as u32, vec![]),
+            ],
+            overlay: vec![(a, 0, true), (b, 5, false), (mate, 5, true)],
+            placement: Some(vec![0x01]),
+        };
+
+        let merged = delta.apply_to(&base).expect("chained delta must apply");
+        assert_eq!(merged.version, 12);
+        assert_eq!(merged.wal_seq, 55);
+        assert_eq!(merged.placement, Some(vec![0x01]));
+        let mut rows: Vec<(u64, Vec<f32>, i64, bool)> = merged
+            .points
+            .iter()
+            .enumerate()
+            .map(|(i, (ext, x))| (*ext, x.clone(), merged.labels[i], merged.cores[i]))
+            .collect();
+        rows.sort_by_key(|r| r.0);
+        let mut expect = vec![
+            (a, vec![1.0, 1.0], 0i64, true),    // clean chunk: carried over
+            (b, vec![9.0, 9.0], 5, false),      // dirty chunk: replaced
+            (mate, vec![8.0, 8.0], 5, true),    // dirty chunk: inserted
+        ];
+        expect.sort_by_key(|r| r.0);
+        assert_eq!(rows, expect); // c gone: chunk dirty, re-listed without it
+    }
+
+    #[test]
+    fn stale_or_inconsistent_delta_degrades_to_the_full_checkpoint() {
+        let dir = scratch("delta-stale");
+        let base = base();
+        write_checkpoint(&dir, &base).unwrap();
+
+        // base_version mismatch: the chain is broken
+        let stale = CheckpointDelta {
+            base_version: 9, // base is at 10
+            version: 12,
+            wal_seq: 55,
+            eps: 0.75,
+            dim: 2,
+            chunk_count: CHUNKS,
+            chunks: vec![],
+            overlay: vec![(1, 0, true), (2, 0, true), (3, 1, false)],
+            placement: None,
+        };
+        assert!(stale.apply_to(&base).is_none());
+        write_delta(&dir, &stale).unwrap();
+        let chain = load_checkpoint_chain(&dir).unwrap();
+        assert_eq!(chain, base, "stale delta must degrade to the full spill");
+
+        // an overlay that disagrees with the merged point set is rejected
+        let short_overlay = CheckpointDelta {
+            base_version: 10,
+            overlay: vec![(1, 0, true)],
+            ..stale.clone()
+        };
+        assert!(short_overlay.apply_to(&base).is_none());
+
+        // CRC damage: load_delta refuses, the chain degrades
+        let good = CheckpointDelta { base_version: 10, ..stale };
+        write_delta(&dir, &good).unwrap();
+        assert!(load_delta(&dir).is_some());
+        let path = dir.join(DELTA_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 6] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_delta(&dir).is_none());
+        assert_eq!(load_checkpoint_chain(&dir).unwrap(), base);
+
+        // truncation likewise
+        std::fs::write(&path, &bytes[..n / 2]).unwrap();
+        assert!(load_delta(&dir).is_none());
+        assert_eq!(load_checkpoint_chain(&dir).unwrap(), base);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

@@ -3,15 +3,22 @@
 //!
 //! The serving layer (`serve::DurableEngine`) composes the two into crash
 //! recovery for any backend: on open it loads the latest *valid* checkpoint
-//! (`checkpoint::load_checkpoint` tolerates truncation and CRC damage by
-//! falling back to `None`), replays the WAL tail past the checkpoint's
-//! `wal_seq` floor, and resumes at the recovered snapshot version. Both
-//! files live under one persist directory:
+//! chain (`checkpoint::load_checkpoint_chain` tolerates truncation and CRC
+//! damage by degrading delta → full → `None`), replays the WAL tail past
+//! the chain's `wal_seq` floor, and resumes at the recovered snapshot
+//! version. The files live under one persist directory:
 //!
 //! ```text
-//! <dir>/wal.log          append-only, CRC-framed op records
-//! <dir>/checkpoint.ckpt  latest snapshot spill (atomic tmp+rename)
+//! <dir>/wal.log                    active WAL segment (CRC-framed records)
+//! <dir>/wal.<ix>.<last_seq>.log    sealed WAL segments (retention units)
+//! <dir>/checkpoint.ckpt            latest full snapshot spill (DDCKPT02)
+//! <dir>/checkpoint.delta           incremental spill chained to it (DDCKPT03)
 //! ```
+//!
+//! The segmented WAL lets checkpoint truncation and replica log-shipping
+//! coexist: sealed segments are deleted only below
+//! `min(full-checkpoint floor, slowest shipped floor)` — see `wal` and
+//! `serve::DurableEngine`.
 //!
 //! Neither file format depends on in-memory layout: everything is
 //! little-endian, length-prefixed and CRC-guarded, so a torn final record
@@ -26,8 +33,15 @@
 pub mod checkpoint;
 pub mod wal;
 
-pub use checkpoint::{load_checkpoint, write_checkpoint, Checkpoint, CHECKPOINT_FILE};
-pub use wal::{read_wal, WalOp, WalRecord, WalWriter, WAL_FILE};
+pub use checkpoint::{
+    clear_delta, load_checkpoint, load_checkpoint_chain, load_delta,
+    write_checkpoint, write_delta, Checkpoint, CheckpointDelta, CHECKPOINT_FILE,
+    DELTA_FILE,
+};
+pub use wal::{
+    decode_frame, encode_frame, read_frames_after, read_wal, WalOp, WalRecord,
+    WalWriter, WAL_FILE,
+};
 
 /// CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) — the same
 /// checksum gzip/zip use. Hand-rolled bitwise form: the WAL frames are

@@ -1,4 +1,4 @@
-//! Append-only op-log WAL.
+//! Append-only op-log WAL, segmented for retention.
 //!
 //! Every mutation that goes through a persistent engine is framed and
 //! appended *before* it is applied in memory (write-ahead), and the log is
@@ -28,9 +28,31 @@
 //! the group fsync, so a fully-recovered log replays to exactly the
 //! published state).
 //!
+//! This module is the *only* place frames are encoded or decoded
+//! (`tests/lint.rs` enforces it): replication ships the exact on-disk
+//! frame bytes over its `Transport`, and followers decode them with
+//! [`decode_frame`] — one wire format, one codec.
+//!
+//! ## Segments
+//!
+//! The log is a sequence of segment files: one *active* segment
+//! (`wal.log`, append-only) plus zero or more *sealed* segments named
+//! `wal.<seal_ix>.<last_seq>.log`. [`WalWriter::roll`] seals the active
+//! segment (fsync, then an atomic rename that embeds its highest sequence
+//! number in the name) and starts a fresh one; [`WalWriter::retain`]
+//! deletes sealed segments whose records all fall at or below a floor.
+//! Segmentation lets checkpoint truncation and replica shipping coexist:
+//! the engine rolls at every checkpoint and retains down to
+//! `min(checkpoint floor, slowest shipped floor)`, so a lagging follower
+//! holds history open without blocking checkpoints, and with no followers
+//! the retention floor equals the checkpoint floor and sealed segments die
+//! immediately (the old truncate-after-checkpoint behaviour). Directories
+//! written before segmentation hold only `wal.log` and read unchanged.
+//!
 //! The reader stops at the first torn or corrupt frame and reports the log
-//! as not clean — a crash mid-append damages at most the final record, and
-//! recovery proceeds from the longest valid prefix.
+//! as not clean — a crash mid-append damages at most the final record of
+//! the active segment, and recovery proceeds from the longest valid
+//! prefix.
 
 use std::fs::{File, OpenOptions};
 use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
@@ -38,7 +60,7 @@ use std::path::{Path, PathBuf};
 
 use super::crc32;
 
-/// WAL file name inside a persist directory.
+/// Active WAL segment name inside a persist directory.
 pub const WAL_FILE: &str = "wal.log";
 
 const TAG_UPSERT: u8 = 1;
@@ -160,6 +182,41 @@ impl WalRecord {
     }
 }
 
+/// Frame one record exactly as [`WalWriter::append`] writes it to disk:
+/// `[u32 len][u32 crc32(payload)][payload]`. The replication shipper uses
+/// this only in tests; in production it forwards the on-disk bytes
+/// verbatim — both sides of the wire share this one codec.
+pub fn encode_frame(rec: &WalRecord) -> Vec<u8> {
+    let mut payload = Vec::new();
+    rec.encode(&mut payload);
+    let mut out = Vec::with_capacity(payload.len() + 8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode one frame from the head of `buf`. Returns the record and the
+/// framed byte count consumed, or `None` if the head is torn, corrupt
+/// (CRC mismatch) or not a valid record — the caller treats that as the
+/// end of usable input, mirroring the on-disk reader.
+pub fn decode_frame(buf: &[u8]) -> Option<(WalRecord, usize)> {
+    if buf.len() < 8 {
+        return None;
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let end = 8usize.checked_add(len)?;
+    if end > buf.len() {
+        return None;
+    }
+    let payload = &buf[8..end];
+    if crc32(payload) != crc {
+        return None;
+    }
+    WalRecord::decode(payload).map(|rec| (rec, end))
+}
+
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
@@ -217,32 +274,99 @@ impl Cursor<'_> {
     }
 }
 
-/// Appending writer over `<dir>/wal.log`. Records buffer in user space
-/// until [`WalWriter::sync`] (the group fsync at publish); the number of
-/// appended-but-unsynced records is exposed as [`WalWriter::pending`] so
-/// the engine can surface it as the `wal_lag` gauge.
+/// One sealed (read-only) segment: `wal.<ix>.<last_seq>.log`. The highest
+/// sequence number lives in the file name so retention never has to read
+/// segment bodies.
+#[derive(Debug, Clone)]
+struct Sealed {
+    ix: u64,
+    last_seq: u64,
+    path: PathBuf,
+}
+
+/// Parse `wal.<ix>.<last_seq>.log`; `None` for any other name (including
+/// the active `wal.log`). Unknown files are never deleted.
+fn parse_sealed(dir: &Path, name: &str) -> Option<Sealed> {
+    let rest = name.strip_prefix("wal.")?.strip_suffix(".log")?;
+    let (ix, last_seq) = rest.split_once('.')?;
+    Some(Sealed {
+        ix: ix.parse().ok()?,
+        last_seq: last_seq.parse().ok()?,
+        path: dir.join(name),
+    })
+}
+
+/// Sealed segments in `dir`, sorted by seal index (append order).
+fn list_sealed(dir: &Path) -> io::Result<Vec<Sealed>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e),
+    };
+    for entry in entries {
+        let entry = entry?;
+        if let Some(name) = entry.file_name().to_str() {
+            if let Some(seg) = parse_sealed(dir, name) {
+                out.push(seg);
+            }
+        }
+    }
+    out.sort_by_key(|s| s.ix);
+    Ok(out)
+}
+
+/// Appending writer over the segmented log in `dir`. Records buffer in
+/// user space until [`WalWriter::sync`] (the group fsync at publish); the
+/// number of appended-but-unsynced records is exposed as
+/// [`WalWriter::pending`] so the engine can surface it as the `wal_lag`
+/// gauge.
 pub struct WalWriter {
+    dir: PathBuf,
     file: BufWriter<File>,
     path: PathBuf,
     pending: u64,
     frame: Vec<u8>,
+    sealed: Vec<Sealed>,
+    next_seal_ix: u64,
+    /// Highest sequence number in the active segment (0 = none seen).
+    active_last_seq: u64,
+    /// Records in the active segment (pre-existing + appended).
+    active_records: u64,
 }
 
 impl WalWriter {
-    /// Open (creating if needed) the WAL inside `dir` for appending.
+    /// Open (creating if needed) the segmented WAL inside `dir` for
+    /// appending. Pre-existing sealed segments are indexed from their
+    /// names; a pre-existing active segment is scanned once so rolls and
+    /// retention know its sequence range.
     pub fn open(dir: &Path) -> io::Result<Self> {
         std::fs::create_dir_all(dir)?;
+        let sealed = list_sealed(dir)?;
+        let next_seal_ix = sealed.last().map(|s| s.ix + 1).unwrap_or(1);
         let path = dir.join(WAL_FILE);
+        let (active_last_seq, active_records) = match read_segment(&path) {
+            Ok((recs, _clean)) => {
+                (recs.last().map(|r| r.seq()).unwrap_or(0), recs.len() as u64)
+            }
+            Err(e) if e.kind() == io::ErrorKind::NotFound => (0, 0),
+            Err(e) => return Err(e),
+        };
         let file = OpenOptions::new().create(true).append(true).open(&path)?;
         Ok(WalWriter {
+            dir: dir.to_path_buf(),
             file: BufWriter::new(file),
             path,
             pending: 0,
             frame: Vec::new(),
+            sealed,
+            next_seal_ix,
+            active_last_seq,
+            active_records,
         })
     }
 
-    /// Path of the underlying log file.
+    /// Path of the active segment file.
     pub fn path(&self) -> &Path {
         &self.path
     }
@@ -259,12 +383,23 @@ impl WalWriter {
         self.file.write_all(&crc.to_le_bytes())?;
         self.file.write_all(&self.frame)?;
         self.pending += 1;
+        self.active_records += 1;
+        self.active_last_seq = self.active_last_seq.max(rec.seq());
         Ok(self.frame.len() + 8)
     }
 
     /// Appended-but-unsynced record count (the `wal_lag` gauge).
     pub fn pending(&self) -> u64 {
         self.pending
+    }
+
+    /// Flush buffered frames to the OS **without** an fsync: after this,
+    /// readers of the file see whole frames up to the last append (no
+    /// torn mid-buffer tail), but the bytes are not yet crash-durable.
+    /// The durable engine calls this before the inner publish so a warm
+    /// shard heal running *inside* the publish reads a complete log.
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.file.flush()
     }
 
     /// Group fsync: flush buffered frames and force them to stable
@@ -277,58 +412,316 @@ impl WalWriter {
         Ok(n)
     }
 
-    /// Drop every record (after a checkpoint has folded them in). The file
-    /// is truncated in place and the truncation is fsynced, so a crash
-    /// right after leaves an empty (clean) log rather than a stale one.
+    /// Seal the active segment and start a fresh one. The active file is
+    /// synced, then atomically renamed to `wal.<ix>.<last_seq>.log`; a
+    /// crash between the steps leaves either the old active segment or
+    /// the sealed file — both readable, no frame lost. An empty active
+    /// segment is left in place (no zero-record seals).
+    pub fn roll(&mut self) -> io::Result<()> {
+        if self.active_records == 0 {
+            return Ok(());
+        }
+        self.file.flush()?;
+        self.file.get_ref().sync_data()?;
+        let ix = self.next_seal_ix;
+        let sealed_path =
+            self.dir.join(format!("wal.{ix:06}.{}.log", self.active_last_seq));
+        std::fs::rename(&self.path, &sealed_path)?;
+        self.sealed.push(Sealed {
+            ix,
+            last_seq: self.active_last_seq,
+            path: sealed_path,
+        });
+        self.next_seal_ix = ix + 1;
+        let file = OpenOptions::new().create(true).append(true).open(&self.path)?;
+        self.file = BufWriter::new(file);
+        self.pending = 0;
+        self.active_last_seq = 0;
+        self.active_records = 0;
+        // make the rename + new file durable as a directory entry change
+        if let Ok(d) = File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+
+    /// Delete sealed segments whose every record has `seq <= floor`. The
+    /// active segment is never deleted. Callers compute the floor as
+    /// `min(checkpoint wal_seq, slowest shipped seq)` so neither recovery
+    /// nor a lagging follower loses history it still needs.
+    pub fn retain(&mut self, floor: u64) -> io::Result<()> {
+        let mut kept = Vec::with_capacity(self.sealed.len());
+        for seg in self.sealed.drain(..) {
+            if seg.last_seq <= floor && std::fs::remove_file(&seg.path).is_ok() {
+                continue;
+            }
+            kept.push(seg);
+        }
+        self.sealed = kept;
+        Ok(())
+    }
+
+    /// Number of sealed segments currently retained.
+    pub fn sealed_segments(&self) -> usize {
+        self.sealed.len()
+    }
+
+    /// Drop the entire log: every sealed segment plus the active
+    /// contents. Equivalent to `roll()` + `retain(u64::MAX)` but keeps
+    /// the pre-segmentation semantics (an empty, clean active file) for
+    /// callers with no retention constraints.
     pub fn truncate(&mut self) -> io::Result<()> {
+        for seg in self.sealed.drain(..) {
+            let _ = std::fs::remove_file(&seg.path);
+        }
         self.file.flush()?;
         let f = self.file.get_mut();
         f.set_len(0)?;
         f.seek(SeekFrom::Start(0))?;
         f.sync_data()?;
         self.pending = 0;
+        self.active_last_seq = 0;
+        self.active_records = 0;
         Ok(())
     }
 }
 
-/// Read every valid record from `<dir>/wal.log`. Returns the records plus
-/// a `clean` flag: `false` means the log ended in a torn or corrupt frame
-/// (expected after a crash mid-append) and recovery proceeds from the
-/// returned prefix. A missing file reads as empty and clean.
-pub fn read_wal(dir: &Path) -> io::Result<(Vec<WalRecord>, bool)> {
-    let path = dir.join(WAL_FILE);
+/// Read every valid record from one segment file. Same contract as
+/// [`read_wal`] but for a single file.
+fn read_segment(path: &Path) -> io::Result<(Vec<WalRecord>, bool)> {
     let mut buf = Vec::new();
-    match File::open(&path) {
-        Ok(mut f) => {
-            f.read_to_end(&mut buf)?;
-        }
-        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok((Vec::new(), true)),
-        Err(e) => return Err(e),
-    }
+    File::open(path)?.read_to_end(&mut buf)?;
     let mut records = Vec::new();
     let mut at = 0usize;
     while at < buf.len() {
-        if at + 8 > buf.len() {
-            return Ok((records, false)); // torn header
+        match decode_frame(&buf[at..]) {
+            Some((rec, used)) => {
+                records.push(rec);
+                at += used;
+            }
+            None => return Ok((records, false)), // torn or corrupt tail
         }
-        let len = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
-        let crc = u32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap());
-        let start = at + 8;
-        let Some(end) = start.checked_add(len) else {
-            return Ok((records, false));
-        };
-        if end > buf.len() {
-            return Ok((records, false)); // torn payload
-        }
-        let payload = &buf[start..end];
-        if crc32(payload) != crc {
-            return Ok((records, false)); // bit rot / torn rewrite
-        }
-        match WalRecord::decode(payload) {
-            Some(rec) => records.push(rec),
-            None => return Ok((records, false)),
-        }
-        at = end;
     }
     Ok((records, true))
+}
+
+/// Read every valid record from the segmented log in `dir` — sealed
+/// segments in seal order, then the active segment. Returns the records
+/// plus a `clean` flag: `false` means the log ended in a torn or corrupt
+/// frame (expected after a crash mid-append) and recovery proceeds from
+/// the returned prefix. A missing directory or file reads as empty and
+/// clean.
+pub fn read_wal(dir: &Path) -> io::Result<(Vec<WalRecord>, bool)> {
+    let mut records = Vec::new();
+    for seg in list_sealed(dir)? {
+        let (mut recs, clean) = read_segment(&seg.path)?;
+        records.append(&mut recs);
+        if !clean {
+            // damage in a sealed segment: recovery stops at the longest
+            // valid prefix, exactly as with a torn active tail
+            return Ok((records, false));
+        }
+    }
+    match read_segment(&dir.join(WAL_FILE)) {
+        Ok((mut recs, clean)) => {
+            records.append(&mut recs);
+            Ok((records, clean))
+        }
+        Err(e) if e.kind() == io::ErrorKind::NotFound => Ok((records, true)),
+        Err(e) => Err(e),
+    }
+}
+
+/// Read the raw frames of every record with `seq > floor`, in log order,
+/// as `(seq, frame bytes)` pairs — the shipping tail. Sealed segments
+/// whose name proves `last_seq <= floor` are skipped without opening
+/// them. Only frames made durable by a prior [`WalWriter::sync`] are
+/// guaranteed visible; the durable engine ships immediately after its
+/// publish fsync, so the tail it reads is exactly the committed prefix.
+pub fn read_frames_after(dir: &Path, floor: u64) -> io::Result<Vec<(u64, Vec<u8>)>> {
+    let mut out = Vec::new();
+    let mut paths: Vec<PathBuf> = list_sealed(dir)?
+        .into_iter()
+        .filter(|s| s.last_seq > floor)
+        .map(|s| s.path)
+        .collect();
+    paths.push(dir.join(WAL_FILE));
+    for path in paths {
+        let mut buf = Vec::new();
+        match File::open(&path) {
+            Ok(mut f) => {
+                f.read_to_end(&mut buf)?;
+            }
+            Err(e) if e.kind() == io::ErrorKind::NotFound => continue,
+            Err(e) => return Err(e),
+        }
+        let mut at = 0usize;
+        while at < buf.len() {
+            match decode_frame(&buf[at..]) {
+                Some((rec, used)) => {
+                    if rec.seq() > floor {
+                        out.push((rec.seq(), buf[at..at + used].to_vec()));
+                    }
+                    at += used;
+                }
+                None => break, // torn tail: ship only the valid prefix
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dyn-dbscan-wal-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn upsert(seq: u64) -> WalRecord {
+        WalRecord::Upsert { seq, ext: seq * 10, coords: vec![seq as f32, -1.0] }
+    }
+
+    #[test]
+    fn roll_seals_segments_and_read_wal_stitches_them_in_order() {
+        let dir = scratch("roll");
+        let mut w = WalWriter::open(&dir).unwrap();
+        for seq in 1..=3 {
+            w.append(&upsert(seq)).unwrap();
+        }
+        w.roll().unwrap();
+        assert_eq!(w.sealed_segments(), 1);
+        // an empty active segment never seals (no zero-record files)
+        w.roll().unwrap();
+        assert_eq!(w.sealed_segments(), 1);
+        for seq in 4..=5 {
+            w.append(&upsert(seq)).unwrap();
+        }
+        w.roll().unwrap();
+        w.append(&upsert(6)).unwrap();
+        w.sync().unwrap();
+        assert_eq!(w.sealed_segments(), 2);
+        // the last_seq in each sealed name matches its contents
+        assert!(dir.join("wal.000001.3.log").exists());
+        assert!(dir.join("wal.000002.5.log").exists());
+
+        let (recs, clean) = read_wal(&dir).unwrap();
+        assert!(clean);
+        assert_eq!(recs.len(), 6);
+        assert_eq!(recs.iter().map(WalRecord::seq).collect::<Vec<_>>(), vec![
+            1, 2, 3, 4, 5, 6
+        ]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retain_deletes_only_wholly_covered_sealed_segments() {
+        let dir = scratch("retain");
+        let mut w = WalWriter::open(&dir).unwrap();
+        for seq in 1..=3 {
+            w.append(&upsert(seq)).unwrap();
+        }
+        w.roll().unwrap(); // sealed: seqs 1..=3
+        for seq in 4..=6 {
+            w.append(&upsert(seq)).unwrap();
+        }
+        w.roll().unwrap(); // sealed: seqs 4..=6
+        w.append(&upsert(7)).unwrap();
+        w.sync().unwrap();
+
+        // floor 5 covers the first segment but not the second
+        w.retain(5).unwrap();
+        assert_eq!(w.sealed_segments(), 1);
+        let (recs, _) = read_wal(&dir).unwrap();
+        assert_eq!(recs.first().unwrap().seq(), 4, "segment 2 survives whole");
+        assert_eq!(recs.last().unwrap().seq(), 7, "active segment untouched");
+
+        // the active segment is never deleted, whatever the floor
+        w.retain(u64::MAX).unwrap();
+        assert_eq!(w.sealed_segments(), 0);
+        let (recs, _) = read_wal(&dir).unwrap();
+        assert_eq!(recs.iter().map(WalRecord::seq).collect::<Vec<_>>(), vec![7]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_indexes_sealed_segments_and_continues_the_seal_sequence() {
+        let dir = scratch("reopen");
+        let mut w = WalWriter::open(&dir).unwrap();
+        w.append(&upsert(1)).unwrap();
+        w.roll().unwrap();
+        w.append(&upsert(2)).unwrap();
+        w.sync().unwrap();
+        drop(w);
+
+        let mut w = WalWriter::open(&dir).unwrap();
+        assert_eq!(w.sealed_segments(), 1);
+        w.append(&upsert(3)).unwrap();
+        w.roll().unwrap(); // must seal as ix 2 with last_seq 3
+        assert!(dir.join("wal.000002.3.log").exists());
+        let (recs, clean) = read_wal(&dir).unwrap();
+        assert!(clean);
+        assert_eq!(recs.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_frames_after_ships_the_tail_past_the_floor() {
+        let dir = scratch("frames-after");
+        let mut w = WalWriter::open(&dir).unwrap();
+        for seq in 1..=4 {
+            w.append(&upsert(seq)).unwrap();
+        }
+        w.roll().unwrap();
+        w.append(&WalRecord::Publish { seq: 5, version: 1 }).unwrap();
+        w.sync().unwrap();
+
+        // floor 0: everything, sealed then active, as verbatim frames
+        let all = read_frames_after(&dir, 0).unwrap();
+        assert_eq!(all.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![
+            1, 2, 3, 4, 5
+        ]);
+        // each shipped frame decodes back with the shared codec
+        for (seq, frame) in &all {
+            let (rec, used) = decode_frame(frame).expect("shipped frame decodes");
+            assert_eq!(rec.seq(), *seq);
+            assert_eq!(*used, frame.len());
+            assert_eq!(encode_frame(&rec), *frame, "frame bytes are verbatim");
+        }
+        // floor 4 skips the sealed segment without opening it and the
+        // covered prefix of the active one
+        let tail = read_frames_after(&dir, 4).unwrap();
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].0, 5);
+        // floor at the frontier: nothing to ship
+        assert!(read_frames_after(&dir, 5).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_single_file_directory_reads_unchanged() {
+        let dir = scratch("legacy");
+        // a pre-segmentation dir: just wal.log, no sealed segments
+        let mut w = WalWriter::open(&dir).unwrap();
+        for seq in 1..=3 {
+            w.append(&upsert(seq)).unwrap();
+        }
+        w.sync().unwrap();
+        drop(w);
+        let (recs, clean) = read_wal(&dir).unwrap();
+        assert!(clean);
+        assert_eq!(recs.len(), 3);
+        // truncate keeps the old semantics: an empty, clean active file
+        let mut w = WalWriter::open(&dir).unwrap();
+        w.truncate().unwrap();
+        let (recs, clean) = read_wal(&dir).unwrap();
+        assert!(clean);
+        assert!(recs.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

@@ -1,0 +1,262 @@
+//! [`ReplicaEngine`] — the follower half of WAL log-shipping.
+//!
+//! A follower is a full clustering engine (same builder configuration,
+//! same deterministic seed as the leader) that never accepts writes from
+//! callers. It bootstraps by running the **leader's own recovery path**
+//! (`serve::durable::recover_into`: checkpoint chain + WAL tail) against
+//! the leader's persist directory, then applies shipped frames from its
+//! transport: op frames replay through the same `upsert`/`remove`/`apply`
+//! entry points, and every `Publish{seq, version}` marker triggers a
+//! local publish whose [`SnapshotView`] is re-based to the leader's
+//! `version` — version parity by construction, and (determinism of the
+//! pipeline) bit-identical labels, neighborhoods and kNN answers at every
+//! version the leader published.
+//!
+//! The pull model is synchronous: nothing happens between
+//! [`ReplicaEngine::catch_up`] calls, which makes staleness a checkable
+//! quantity (leader publish clock minus markers applied) rather than a
+//! race, and keeps the follower free of background threads and wall-clock
+//! reads.
+//!
+//! [`ReplicaEngine::promote`] flips the follower into a writable leader:
+//! it drains every shipped frame, then hands back a `ClusterEngine` that
+//! continues the leader's version numbering. Ops shipped after the last
+//! marker (the un-published tail) survive promotion as pending writes.
+
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::obs::Gauge;
+use crate::persist::wal::{decode_frame, WalOp, WalRecord};
+use crate::serve::durable::recover_into;
+use crate::serve::{ClusterEngine, SnapshotView, Update};
+
+use super::transport::FrameReceiver;
+
+/// Read-only follower over a shipped WAL stream. See the [module
+/// docs](self).
+pub struct ReplicaEngine {
+    inner: Box<dyn ClusterEngine>,
+    rx: FrameReceiver,
+    /// highest WAL sequence number applied (bootstrap floor, then the
+    /// last shipped frame folded in)
+    applied_seq: u64,
+    /// external version = version_base + inner version (re-anchored at
+    /// every applied `Publish` marker)
+    version_base: u64,
+    /// `Publish` markers applied since attach — the follower's side of
+    /// the staleness clock
+    applied_publishes: u64,
+    /// the leader's publish count since attach (shared clock)
+    leader_publishes: Arc<AtomicU64>,
+    /// latest replica-published view (changes only at markers)
+    view: SnapshotView,
+}
+
+impl ReplicaEngine {
+    /// Bootstrap a follower: recover `inner` (a fresh engine built from
+    /// the leader's configuration) from the leader's persist directory,
+    /// exactly as the leader itself would recover. The returned engine's
+    /// [`Self::floor`] is what the leader's shipper must subscribe past.
+    pub fn bootstrap(
+        mut inner: Box<dyn ClusterEngine>,
+        dir: &Path,
+        rx: FrameReceiver,
+        leader_publishes: Arc<AtomicU64>,
+    ) -> io::Result<ReplicaEngine> {
+        let recovered = recover_into(dir, &mut inner)?;
+        let mut view = inner.snapshot();
+        view.rebase_version(recovered.version_base);
+        Ok(ReplicaEngine {
+            inner,
+            rx,
+            applied_seq: recovered.next_seq - 1,
+            version_base: recovered.version_base,
+            applied_publishes: 0,
+            leader_publishes,
+            view,
+        })
+    }
+
+    /// Highest WAL sequence number the bootstrap (or shipping so far)
+    /// has folded in — the shipper's subscription floor.
+    pub fn floor(&self) -> u64 {
+        self.applied_seq
+    }
+
+    /// Apply every shipped frame queued on the transport; returns how
+    /// many frames were folded in. Op frames become pending writes;
+    /// each `Publish` marker publishes locally and re-bases the view to
+    /// the leader's version. A frame that fails to decode (CRC damage in
+    /// transit) stops the drain — nothing past a damaged frame is
+    /// trusted, mirroring the on-disk reader.
+    pub fn catch_up(&mut self) -> u64 {
+        let mut applied = 0u64;
+        while let Some((seq, frame)) = self.rx.try_next() {
+            if seq <= self.applied_seq {
+                continue; // already covered by the bootstrap
+            }
+            let Some((rec, _)) = decode_frame(&frame) else {
+                break;
+            };
+            self.apply_record(rec);
+            self.applied_seq = seq;
+            applied += 1;
+        }
+        if let Some(m) = self.inner.obs_registry() {
+            m.set_gauge(Gauge::ReplicaLagPublishes, self.lag_publishes());
+        }
+        applied
+    }
+
+    fn apply_record(&mut self, rec: WalRecord) {
+        match rec {
+            WalRecord::Upsert { ext, coords, .. } => {
+                self.inner.upsert(ext, &coords);
+            }
+            WalRecord::Remove { ext, .. } => self.inner.remove(ext),
+            WalRecord::Apply { ops, .. } => {
+                let batch: Vec<Update<'_>> = ops
+                    .iter()
+                    .map(|op| match op {
+                        WalOp::Upsert { ext, coords } => Update::Upsert {
+                            ext: *ext,
+                            coords: coords.as_slice(),
+                        },
+                        WalOp::Remove { ext } => Update::Remove { ext: *ext },
+                    })
+                    .collect();
+                self.inner.apply(&batch);
+            }
+            WalRecord::Publish { version, .. } => {
+                let raw = self.inner.publish();
+                // re-anchor so the local view carries the leader's
+                // version numbering at this marker
+                self.version_base = version.saturating_sub(raw.version());
+                let mut view = raw;
+                view.rebase_version(self.version_base);
+                self.view = view;
+                self.applied_publishes += 1;
+            }
+        }
+    }
+
+    /// The latest replica-published view. Carries the leader's version
+    /// numbering; `pending_writes()` counts shipped ops applied after
+    /// the last marker (visible only after the next marker).
+    pub fn snapshot(&self) -> SnapshotView {
+        let mut view = self.view.clone();
+        view.set_pending(self.inner.pending_writes());
+        view
+    }
+
+    /// Leader publishes this follower has not applied yet (0 = caught
+    /// up). Counted in publish barriers since attach, never wall-clock.
+    pub fn lag_publishes(&self) -> u64 {
+        self.leader_publishes
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.applied_publishes)
+    }
+
+    /// Data dimensionality (matches the leader).
+    pub fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    /// Drain the shipped tail, then flip into a writable leader that
+    /// continues the leader's version numbering. Ops shipped after the
+    /// last `Publish` marker become pending writes of the new leader.
+    pub fn promote(mut self) -> Box<dyn ClusterEngine> {
+        self.catch_up();
+        Box::new(PromotedLeader {
+            inner: self.inner,
+            version_base: self.version_base,
+        })
+    }
+}
+
+/// A follower flipped writable: the wrapped backend plus the version
+/// offset that keeps the old leader's numbering going.
+struct PromotedLeader {
+    inner: Box<dyn ClusterEngine>,
+    version_base: u64,
+}
+
+impl ClusterEngine for PromotedLeader {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn upsert(&mut self, ext: u64, coords: &[f32]) {
+        self.inner.upsert(ext, coords);
+    }
+
+    fn remove(&mut self, ext: u64) {
+        self.inner.remove(ext);
+    }
+
+    fn apply(&mut self, batch: &[Update<'_>]) {
+        self.inner.apply(batch);
+    }
+
+    fn contains(&self, ext: u64) -> bool {
+        self.inner.contains(ext)
+    }
+
+    fn publish(&mut self) -> SnapshotView {
+        let mut view = self.inner.publish();
+        view.rebase_version(self.version_base);
+        view
+    }
+
+    fn snapshot(&self) -> SnapshotView {
+        let mut view = self.inner.snapshot();
+        view.rebase_version(self.version_base);
+        view
+    }
+
+    fn watch(&mut self) -> crate::serve::ClusterEvents {
+        self.inner.watch()
+    }
+
+    fn pending_writes(&self) -> u64 {
+        self.inner.pending_writes()
+    }
+
+    fn stats(&self) -> crate::serve::Stats {
+        self.inner.stats()
+    }
+
+    fn metrics(&self) -> crate::serve::MetricsSnapshot {
+        self.inner.metrics()
+    }
+
+    fn verify(&self) -> Result<(), String> {
+        self.inner.verify()
+    }
+
+    fn obs_registry(&self) -> Option<Arc<crate::obs::Metrics>> {
+        self.inner.obs_registry()
+    }
+
+    fn placement_blob(&self) -> Option<Vec<u8>> {
+        self.inner.placement_blob()
+    }
+
+    fn placement_restore(&mut self, blob: &[u8]) {
+        self.inner.placement_restore(blob);
+    }
+
+    fn install_wal_heal(&mut self, dir: &Path) {
+        self.inner.install_wal_heal(dir);
+    }
+
+    fn finish(self: Box<Self>) -> crate::serve::ServeOutcome {
+        let base = self.version_base;
+        let mut out = self.inner.finish();
+        out.snapshot.rebase_version(base);
+        out
+    }
+}

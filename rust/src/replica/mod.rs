@@ -1,0 +1,61 @@
+//! `replica` — WAL log-shipping read replicas with leader promotion.
+//!
+//! Replication reuses the durability pipeline end to end instead of
+//! introducing a second state-transfer mechanism:
+//!
+//! ```text
+//!   leader (DurableEngine)                      follower (ReplicaEngine)
+//!   ──────────────────────                      ────────────────────────
+//!   upsert/remove/apply ──► WAL frames          bootstrap:
+//!   publish ──► fsync ──► LogShipper::ship        checkpoint chain +
+//!        │                    │                    WAL tail (the leader's
+//!        │              Transport (frames,         own recovery path)
+//!        │               verbatim on-disk        then per shipped frame:
+//!        │               bytes, CRC intact)        op     → replay write
+//!        ▼                    ▼                    Publish→ local publish,
+//!   checkpoint spill     FrameReceiver                      rebase to the
+//!   + segment roll/retain                                   leader version
+//! ```
+//!
+//! **What a follower serves.** Re-published [`SnapshotView`]s with the
+//! leader's version numbering: a replica view at version `v` is
+//! bit-identical to the leader's view at `v` (labels, ε-neighborhoods,
+//! kNN) because both sides run the same deterministic pipeline over the
+//! same op stream — the shipped frames are byte-for-byte the leader's
+//! durable log. Views advance only at `Publish` markers; ops after the
+//! last marker sit as pending writes, exactly like un-published writes
+//! on the leader.
+//!
+//! **Staleness.** Measured in leader publish barriers via a shared
+//! clock, never wall-clock. [`ReadRouter::read`] enforces the configured
+//! bound by synchronously catching a lagging replica up before
+//! answering; [`ReplicaEngine::catch_up`] is the only way follower state
+//! advances (no background threads — lag is checkable, not racy).
+//!
+//! **Retention coupling.** The leader retains sealed WAL segments down
+//! to `min(checkpoint floor, slowest shipped floor)`
+//! ([`LogShipper::min_floor`]), so a lagging follower holds exactly the
+//! history it still needs open, and nothing more.
+//!
+//! **Promotion.** [`ReadRouter::promote`] (or
+//! [`ReplicaEngine::promote`]) drains the shipped tail and returns a
+//! writable engine continuing the leader's version numbering — the
+//! fail-over path when the leader process is gone. Ops the dead leader
+//! accepted but never published are by contract not recovered (same
+//! guarantee as its own crash recovery).
+//!
+//! Construct with `EngineBuilder::replicate(n)` +
+//! `EngineBuilder::build_replicated` (requires `persist`); see the
+//! quick-start in the crate docs.
+//!
+//! [`SnapshotView`]: crate::serve::SnapshotView
+
+mod engine;
+mod ship;
+mod router;
+pub mod transport;
+
+pub use engine::ReplicaEngine;
+pub use router::{ReadPreference, ReadRouter};
+pub use ship::LogShipper;
+pub use transport::{channel_pair, FrameReceiver, Transport, TransportClosed};

@@ -1,0 +1,107 @@
+//! [`ReadRouter`] — staleness-bounded read fan-out over a replica set.
+//!
+//! Owns every follower built by `EngineBuilder::build_replicated` and
+//! answers reads with [`crate::serve::SnapshotView`]s, spreading load by
+//! [`ReadPreference`]. The staleness bound is measured in **leader
+//! publishes** (the shared publish clock), never wall-clock: a returned
+//! view lags the leader by at most `max_staleness` publish barriers,
+//! enforced by synchronously catching the chosen replica up when it has
+//! fallen past the bound (the pull model makes "catch up now" always
+//! possible — everything published is already queued on the transport).
+
+use crate::serve::{ClusterEngine, SnapshotView};
+
+use super::engine::ReplicaEngine;
+
+/// Which replica answers the next read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadPreference {
+    /// Strict rotation — even load, no lag awareness.
+    RoundRobin,
+    /// The replica with the fewest leader publishes outstanding (ties
+    /// broken by index) — freshest answers under skewed apply rates.
+    LeastLagged,
+}
+
+/// Staleness-bounded read router over the follower set. See the [module
+/// docs](self).
+pub struct ReadRouter {
+    replicas: Vec<ReplicaEngine>,
+    pref: ReadPreference,
+    /// max leader publishes a served view may trail by (0 = always
+    /// catch up before answering)
+    max_staleness: u64,
+    /// round-robin cursor
+    next: usize,
+}
+
+impl ReadRouter {
+    pub(crate) fn new(
+        replicas: Vec<ReplicaEngine>,
+        pref: ReadPreference,
+        max_staleness: u64,
+    ) -> Self {
+        ReadRouter { replicas, pref, max_staleness, next: 0 }
+    }
+
+    /// Followers in the set.
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    /// Drain every follower's shipped queue; returns total frames
+    /// applied. Call between leader publishes to keep lag near zero, or
+    /// let [`Self::read`] catch up lazily at the staleness bound.
+    pub fn catch_up(&mut self) -> u64 {
+        self.replicas.iter_mut().map(|r| r.catch_up()).sum()
+    }
+
+    /// Leader publishes outstanding per follower, by index.
+    pub fn lags(&self) -> Vec<u64> {
+        self.replicas.iter().map(|r| r.lag_publishes()).collect()
+    }
+
+    /// Serve one read: pick a replica by preference, catch it up if it
+    /// trails the leader by more than the staleness bound, and return
+    /// its view. Panics if the router was built with zero replicas.
+    pub fn read(&mut self) -> SnapshotView {
+        assert!(!self.replicas.is_empty(), "read on an empty replica set");
+        let i = match self.pref {
+            ReadPreference::RoundRobin => {
+                let i = self.next % self.replicas.len();
+                self.next = self.next.wrapping_add(1);
+                i
+            }
+            ReadPreference::LeastLagged => self
+                .replicas
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, r)| (r.lag_publishes(), *i))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        };
+        if self.replicas[i].lag_publishes() > self.max_staleness {
+            self.replicas[i].catch_up();
+        }
+        self.replicas[i].snapshot()
+    }
+
+    /// Direct access to one follower (diagnostics and tests).
+    pub fn replica(&self, i: usize) -> &ReplicaEngine {
+        &self.replicas[i]
+    }
+
+    /// Consume the router and promote follower `i` into a writable
+    /// leader (draining its shipped tail); the other followers are
+    /// dropped — their transports close, and the old leader's shipper
+    /// (if it still runs) unsubscribes them on its next ship.
+    pub fn promote(mut self, i: usize) -> Box<dyn ClusterEngine> {
+        assert!(i < self.replicas.len(), "promote index out of range");
+        let chosen = self.replicas.swap_remove(i);
+        chosen.promote()
+    }
+}

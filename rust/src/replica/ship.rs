@@ -1,0 +1,114 @@
+//! [`LogShipper`] — the leader half of WAL log-shipping.
+//!
+//! Lives inside the leader's `DurableEngine`, which calls
+//! [`LogShipper::ship`] immediately after every publish fsync: the tail
+//! it reads from disk (`persist::wal::read_frames_after`) is therefore
+//! exactly the committed prefix, and followers can never observe a frame
+//! the leader could lose in a crash. Each subscriber has its own shipped
+//! floor — the highest WAL sequence number already sent to it — so a
+//! freshly attached follower (bootstrapped from the checkpoint chain)
+//! starts past what its bootstrap already covered, and the minimum floor
+//! across subscribers ([`LogShipper::min_floor`]) is what the engine
+//! feeds into WAL segment retention: sealed segments survive until the
+//! slowest follower has their frames.
+//!
+//! A subscriber whose transport reports
+//! [`TransportClosed`](super::transport::TransportClosed) is dropped on
+//! the spot — a dead follower must not pin segment retention forever.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::persist::wal::read_frames_after;
+
+use super::transport::Transport;
+
+struct Subscriber {
+    transport: Box<dyn Transport>,
+    /// highest WAL sequence number already shipped to this follower
+    floor: u64,
+}
+
+/// Leader-side log shipper: per-subscriber shipped floors over a shared
+/// read of the on-disk WAL tail. See the [module docs](self).
+pub struct LogShipper {
+    subs: Vec<Subscriber>,
+    /// leader publishes since the shipper was created — the reference
+    /// clock for follower staleness (followers count the `Publish`
+    /// markers they apply against this)
+    publishes: Arc<AtomicU64>,
+}
+
+impl Default for LogShipper {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogShipper {
+    pub fn new() -> Self {
+        LogShipper { subs: Vec::new(), publishes: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Attach a follower whose bootstrap already covers every record at
+    /// or below `floor`; shipping starts with the first frame past it.
+    pub fn subscribe(&mut self, transport: Box<dyn Transport>, floor: u64) {
+        self.subs.push(Subscriber { transport, floor });
+    }
+
+    /// Live subscribers.
+    pub fn subscribers(&self) -> usize {
+        self.subs.len()
+    }
+
+    /// The shared leader-publish counter — cloned into each follower so
+    /// it can compute its own lag without reaching into the leader.
+    pub fn publish_clock(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.publishes)
+    }
+
+    /// Count one leader publish (called by the durable engine right
+    /// after the publish fsync, before shipping its frames).
+    pub fn note_publish(&self) {
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Ship every durable frame past each subscriber's floor, in log
+    /// order; returns the total frames forwarded (summed over
+    /// subscribers). Subscribers whose transport is closed are dropped.
+    pub fn ship(&mut self, dir: &Path) -> std::io::Result<u64> {
+        if self.subs.is_empty() {
+            return Ok(0);
+        }
+        let read_floor = self.min_floor();
+        let frames = read_frames_after(dir, read_floor)?;
+        let mut shipped = 0u64;
+        let mut kept = Vec::with_capacity(self.subs.len());
+        for mut sub in self.subs.drain(..) {
+            let mut alive = true;
+            for (seq, frame) in &frames {
+                if *seq <= sub.floor {
+                    continue;
+                }
+                if sub.transport.send(*seq, frame).is_err() {
+                    alive = false;
+                    break;
+                }
+                sub.floor = *seq;
+                shipped += 1;
+            }
+            if alive {
+                kept.push(sub);
+            }
+        }
+        self.subs = kept;
+        Ok(shipped)
+    }
+
+    /// Slowest shipped floor across subscribers (`u64::MAX` with none) —
+    /// the shipping side of the WAL segment retention floor.
+    pub fn min_floor(&self) -> u64 {
+        self.subs.iter().map(|s| s.floor).min().unwrap_or(u64::MAX)
+    }
+}

@@ -3,11 +3,13 @@
 //! triplet every consumer had to wire up by hand.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::driver::{make_engine, EngineKind};
 use crate::dbscan::{ConnKind, DbscanConfig};
+use crate::replica::{channel_pair, LogShipper, ReadPreference, ReadRouter, ReplicaEngine};
 use crate::shard::{
     FaultPlan, PlacementPolicy, ReshardMode, ShardConfig, StitchMode,
 };
@@ -65,8 +67,12 @@ pub struct EngineBuilder {
     index: IndexPolicy,
     persist: Option<PathBuf>,
     checkpoint_every: u64,
+    incremental_ckpt: bool,
     publish_timeout_ms: u64,
     faults: Option<FaultPlan>,
+    replicas: usize,
+    read_pref: ReadPreference,
+    max_staleness: u64,
 }
 
 impl EngineBuilder {
@@ -95,8 +101,12 @@ impl EngineBuilder {
             index: IndexPolicy::default(),
             persist: None,
             checkpoint_every: DEFAULT_CHECKPOINT_EVERY,
+            incremental_ckpt: true,
             publish_timeout_ms: 10_000,
             faults: None,
+            replicas: 0,
+            read_pref: ReadPreference::RoundRobin,
+            max_staleness: 0,
         }
     }
 
@@ -227,6 +237,41 @@ impl EngineBuilder {
         self
     }
 
+    /// Incremental checkpoint spills (default on; persistent engines
+    /// only): between full spills, write `DDCKPT03` deltas carrying only
+    /// the coordinate chunks dirtied since the last full spill. Off pins
+    /// every spill to a full `DDCKPT02` — the bootstrap-equivalence test
+    /// baseline and the conservative fallback.
+    pub fn incremental_checkpoints(mut self, on: bool) -> Self {
+        self.incremental_ckpt = on;
+        self
+    }
+
+    /// Attach `n` WAL-shipped read replicas (requires [`Self::persist`];
+    /// build with [`Self::build_replicated`]). Each replica bootstraps
+    /// from the checkpoint chain and applies the leader's fsynced frames
+    /// at every publish; see [`crate::replica`] for the contract.
+    pub fn replicate(mut self, n: usize) -> Self {
+        self.replicas = n;
+        self
+    }
+
+    /// How the [`ReadRouter`] picks the replica answering each read
+    /// (default [`ReadPreference::RoundRobin`]).
+    pub fn read_preference(mut self, pref: ReadPreference) -> Self {
+        self.read_pref = pref;
+        self
+    }
+
+    /// Staleness bound for routed reads, in **leader publishes** (default
+    /// 0 — always catch the chosen replica up before answering). A view
+    /// returned by `ReadRouter::read` never trails the leader by more
+    /// publish barriers than this.
+    pub fn max_staleness(mut self, publishes: u64) -> Self {
+        self.max_staleness = publishes;
+        self
+    }
+
     /// How long a publish barrier waits per outstanding shard reply
     /// before quarantining the worker as wedged (sharded backend;
     /// default 10 s).
@@ -286,10 +331,9 @@ impl EngineBuilder {
         })
     }
 
-    /// Construct the engine. Errors on contradictory configuration
-    /// (delta publishing on a connectivity without stable component ids)
-    /// or a failed hash-stage setup.
-    pub fn build(self) -> Result<Box<dyn ClusterEngine>> {
+    /// Reject contradictory configuration; returns the resolved publish
+    /// strategy on success.
+    fn validate(&self) -> Result<StitchMode> {
         let stitch = self.effective_stitch();
         if stitch == StitchMode::Delta && !self.conn.supports_comp_tracking() {
             return Err(anyhow!(
@@ -343,11 +387,21 @@ impl EngineBuilder {
                 ));
             }
         }
-        let inner: Box<dyn ClusterEngine> = match self.backend {
+        Ok(stitch)
+    }
+
+    /// Construct one bare (non-durable) backend from this configuration.
+    /// Called once by [`Self::build`]; [`Self::build_replicated`] calls
+    /// it once per engine — the leader and every follower are built from
+    /// the same deterministic configuration, which is what makes shipped
+    /// replay bit-reproducible.
+    fn build_inner(&self, stitch: StitchMode) -> Result<Box<dyn ClusterEngine>> {
+        let placement = self.placement.unwrap_or(PlacementPolicy::CellGraph);
+        Ok(match self.backend {
             Backend::Single => {
                 let hashing = make_engine(&self.dbscan, self.seed, self.hashing)?;
                 Box::new(InlineEngine::new(
-                    self.dbscan,
+                    self.dbscan.clone(),
                     self.conn,
                     stitch,
                     self.seed,
@@ -361,7 +415,8 @@ impl EngineBuilder {
                 // `hashing` choice applies to the single backend only
                 // (the CLI surfaces this to the user — library consumers
                 // get silent, documented behaviour instead of stderr)
-                let mut scfg = ShardConfig::new(self.dbscan, shards, self.seed);
+                let mut scfg =
+                    ShardConfig::new(self.dbscan.clone(), shards, self.seed);
                 scfg.conn = self.conn;
                 scfg.stitch = stitch;
                 scfg.queue = self.queue;
@@ -372,20 +427,88 @@ impl EngineBuilder {
                 scfg.reshard = self.reshard;
                 scfg.metrics = self.metrics;
                 scfg.publish_timeout_ms = self.publish_timeout_ms;
-                scfg.faults = self.faults;
+                scfg.faults = self.faults.clone();
                 Box::new(ShardedServe::new(scfg, self.index))
             }
-        };
+        })
+    }
+
+    /// Construct the engine. Errors on contradictory configuration
+    /// (delta publishing on a connectivity without stable component ids)
+    /// or a failed hash-stage setup.
+    pub fn build(self) -> Result<Box<dyn ClusterEngine>> {
+        if self.replicas > 0 {
+            return Err(anyhow!(
+                "replicate({}) builds a leader plus read replicas — call \
+                 build_replicated() instead of build()",
+                self.replicas
+            ));
+        }
+        let stitch = self.validate()?;
+        let inner = self.build_inner(stitch)?;
         match self.persist {
             None => Ok(inner),
             Some(dir) => {
-                let eng = DurableEngine::open(&dir, inner, self.checkpoint_every)
-                    .with_context(|| {
-                        format!("opening persist directory {}", dir.display())
-                    })?;
+                let mut eng =
+                    DurableEngine::open(&dir, inner, self.checkpoint_every)
+                        .with_context(|| {
+                            format!("opening persist directory {}", dir.display())
+                        })?;
+                eng.set_incremental(self.incremental_ckpt);
                 Ok(Box::new(eng))
             }
         }
+    }
+
+    /// Construct a replicated deployment: the durable **leader** plus a
+    /// [`ReadRouter`] over [`Self::replicate`]`(n)` read replicas.
+    /// Requires [`Self::persist`] — replicas bootstrap from the
+    /// checkpoint chain and the leader ships its fsynced WAL frames to
+    /// them at every publish. See [`crate::replica`] for read,
+    /// staleness and promotion semantics.
+    pub fn build_replicated(
+        self,
+    ) -> Result<(Box<dyn ClusterEngine>, ReadRouter)> {
+        let Some(dir) = self.persist.clone() else {
+            return Err(anyhow!(
+                "build_replicated() needs .persist(dir): replicas bootstrap \
+                 from the checkpoint chain and ship the on-disk WAL"
+            ));
+        };
+        if self.replicas == 0 {
+            return Err(anyhow!(
+                "build_replicated() needs .replicate(n) with n >= 1"
+            ));
+        }
+        let stitch = self.validate()?;
+        // the leader recovers first, so followers bootstrap from a
+        // directory the leader has already validated
+        let mut leader =
+            DurableEngine::open(&dir, self.build_inner(stitch)?, self.checkpoint_every)
+                .with_context(|| {
+                    format!("opening persist directory {}", dir.display())
+                })?;
+        leader.set_incremental(self.incremental_ckpt);
+        let mut shipper = LogShipper::new();
+        let clock = shipper.publish_clock();
+        let mut followers = Vec::with_capacity(self.replicas);
+        for i in 0..self.replicas {
+            let (tx, rx) = channel_pair();
+            let rep = ReplicaEngine::bootstrap(
+                self.build_inner(stitch)?,
+                &dir,
+                rx,
+                Arc::clone(&clock),
+            )
+            .with_context(|| {
+                format!("bootstrapping replica {i} from {}", dir.display())
+            })?;
+            shipper.subscribe(tx, rep.floor());
+            followers.push(rep);
+        }
+        leader.set_shipper(shipper);
+        let router = ReadRouter::new(followers, self.read_pref, self.max_staleness);
+        Ok((Box::new(leader), router))
     }
 }
 

@@ -1,8 +1,9 @@
 //! [`DurableEngine`] — crash recovery for any serve backend.
 //!
 //! A decorator over `Box<dyn ClusterEngine>` that write-ahead-logs every
-//! mutation into `<dir>/wal.log` ([`crate::persist::wal`]) and
-//! periodically spills the published state into `<dir>/checkpoint.ckpt`
+//! mutation into the segmented WAL under `<dir>` ([`crate::persist::wal`])
+//! and periodically spills the published state into
+//! `<dir>/checkpoint.ckpt` / `<dir>/checkpoint.delta`
 //! ([`crate::persist::checkpoint`]). `EngineBuilder::persist(dir)` wraps
 //! the chosen backend in this type; nothing else about the engine changes.
 //!
@@ -17,21 +18,44 @@
 //!
 //! ## Recovery
 //!
-//! On open, the wrapper loads the latest *valid* checkpoint (corrupt or
-//! truncated ones read as absent), re-ingests its points through the
-//! public write path, then replays the WAL tail past the checkpoint's
-//! sequence floor — `Publish` records replay as real publishes, so the
-//! engine resumes at the recorded [`SnapshotView::version`] (continuity
-//! is kept by re-anchoring the inner engine's fresh counter at the
-//! recovered version). Clustering is *recomputed* from the coordinates
-//! during re-ingestion, which inherits the engine's determinism instead
-//! of trusting serialized labels; with no checkpoint, a cold full-log
-//! replay reproduces the uninterrupted run op-for-op. On sharded
-//! backends the checkpoint also carries the cell→shard placement map,
-//! restored *before* re-ingestion so recovery reshards points to the
-//! same assignment the original run had (and the WAL tail re-evolves it
-//! identically); a cold replay instead re-derives placement from the
-//! same deterministic op stream.
+//! On open, the wrapper loads the latest *valid* checkpoint chain
+//! (full + incremental delta; corrupt or truncated pieces degrade to the
+//! shorter chain), re-ingests its points through the public write path,
+//! then replays the WAL tail past the chain's sequence floor — `Publish`
+//! records replay as real publishes, so the engine resumes at the
+//! recorded [`SnapshotView::version`] (continuity is kept by re-anchoring
+//! the inner engine's fresh counter at the recovered version). Clustering
+//! is *recomputed* from the coordinates during re-ingestion, which
+//! inherits the engine's determinism instead of trusting serialized
+//! labels; with no checkpoint, a cold full-log replay reproduces the
+//! uninterrupted run op-for-op. On sharded backends the checkpoint also
+//! carries the cell→shard placement map, restored *before* re-ingestion
+//! so recovery reshards points to the same assignment the original run
+//! had (and the WAL tail re-evolves it identically); a cold replay
+//! instead re-derives placement from the same deterministic op stream.
+//!
+//! ## Incremental checkpoints
+//!
+//! With `EngineBuilder::incremental_checkpoints(true)` (the default), a
+//! spill writes a full `DDCKPT02` file only when the chain needs a reset
+//! (first spill, chunk-map growth, a long delta chain, or most chunks
+//! dirty anyway); otherwise it writes a `DDCKPT03` delta — the coordinate
+//! chunks of the façade's CoW store whose write generation moved since
+//! the last *full* spill, plus a compact label/core overlay — and
+//! atomically replaces `checkpoint.delta`. The WAL retention floor stays
+//! at the **full** spill's sequence, so a damaged delta degrades to
+//! `full + longer WAL tail`, never to data loss.
+//!
+//! ## Segment retention & log shipping
+//!
+//! Every spill seals the active WAL segment ([`WalWriter::roll`]) and
+//! drops sealed segments below `min(full-checkpoint floor, slowest
+//! shipped floor)` ([`WalWriter::retain`]). With no replicas attached the
+//! ship floor is `∞` and this reduces to truncate-after-checkpoint; with
+//! an attached [`crate::replica::LogShipper`] the log is shipped right
+//! after each publish fsync (the frames a follower applies are exactly
+//! the bytes the crash-recovery reader trusts), and segments survive
+//! until the slowest follower has them.
 //!
 //! Known limit: cluster events emitted to `watch()` subscribers carry the
 //! inner engine's un-rebased version after a recovery; views are always
@@ -43,9 +67,10 @@ use std::sync::Arc;
 
 use crate::obs::{Gauge, Metrics, Stopwatch};
 use crate::persist::{
-    load_checkpoint, read_wal, write_checkpoint, Checkpoint, WalOp, WalRecord,
-    WalWriter,
+    clear_delta, load_checkpoint_chain, read_wal, write_checkpoint, write_delta,
+    Checkpoint, CheckpointDelta, WalOp, WalRecord, WalWriter,
 };
+use crate::replica::LogShipper;
 
 use super::events::ClusterEvents;
 use super::snapshot::SnapshotView;
@@ -54,10 +79,120 @@ use super::{ClusterEngine, MetricsSnapshot, ServeOutcome, Stats, Update, WalStat
 /// Default publish cadence between checkpoint spills.
 pub(crate) const DEFAULT_CHECKPOINT_EVERY: u64 = 8;
 
+/// Incremental spills allowed between full spills before the chain is
+/// reset with a full one (bounds both `checkpoint.delta` staleness and
+/// how far behind the full floor the WAL retention can trail).
+const DELTA_CHAIN_MAX: u64 = 8;
+
 /// How many checkpoint points are re-ingested per `apply` batch during
 /// recovery (bounds peak `Update` buffer size, and on the sharded backend
 /// gives workers batch-level parallelism while replay streams).
 const RECOVER_CHUNK: usize = 2048;
+
+/// What [`recover_into`] reconstructed — shared by [`DurableEngine::open`]
+/// and the replica bootstrap (`crate::replica::ReplicaEngine`), so a
+/// follower's starting state is bit-for-bit the leader's recovery of the
+/// same directory.
+pub(crate) struct Recovered {
+    /// next WAL sequence number to assign (leader) / first shipped
+    /// sequence still needed (follower floor is `next_seq - 1`)
+    pub next_seq: u64,
+    /// recovered-version offset: external version = base + inner version
+    pub version_base: u64,
+    /// records + checkpoint points folded in (for the recovery metrics)
+    pub replayed: u64,
+}
+
+/// Recover a **fresh, empty** engine to the durable state under `dir`:
+/// checkpoint chain re-ingestion, then WAL tail replay past its floor.
+pub(crate) fn recover_into(
+    dir: &Path,
+    inner: &mut Box<dyn ClusterEngine>,
+) -> io::Result<Recovered> {
+    let ckpt = load_checkpoint_chain(dir);
+    let (records, _clean) = read_wal(dir)?;
+    let mut replayed: u64 = 0;
+    let mut next_seq: u64 = 1;
+    // version to resume at: the checkpoint's, superseded by any later
+    // Publish record in the tail
+    let mut recovered_version: u64 = 0;
+    let ckpt_floor = match &ckpt {
+        Some(c) => {
+            assert_eq!(
+                c.dim as usize,
+                inner.dim(),
+                "checkpoint dim {} does not match the configured engine \
+                 dim {} — wrong persist directory?",
+                c.dim,
+                inner.dim()
+            );
+            // pin the cell→shard assignment *before* any point flows
+            // through the router, so re-ingestion (and the WAL tail
+            // after it) reshards to the assignment the original run
+            // had at spill time
+            if let Some(blob) = &c.placement {
+                inner.placement_restore(blob);
+            }
+            for chunk in c.points.chunks(RECOVER_CHUNK) {
+                let batch: Vec<Update<'_>> = chunk
+                    .iter()
+                    .map(|(ext, coords)| Update::Upsert {
+                        ext: *ext,
+                        coords: coords.as_slice(),
+                    })
+                    .collect();
+                inner.apply(&batch);
+            }
+            if !c.points.is_empty() || c.version > 0 {
+                // materialize the checkpoint state as one publish, so
+                // tail replay starts from the same published baseline
+                // the original run had when the checkpoint was taken
+                inner.publish();
+            }
+            recovered_version = c.version;
+            next_seq = c.wal_seq + 1;
+            replayed += c.points.len() as u64;
+            c.wal_seq
+        }
+        None => 0,
+    };
+    for rec in &records {
+        let seq = rec.seq();
+        if seq <= ckpt_floor {
+            continue; // already folded into the checkpoint
+        }
+        next_seq = next_seq.max(seq + 1);
+        replayed += 1;
+        match rec {
+            WalRecord::Upsert { ext, coords, .. } => {
+                inner.upsert(*ext, coords);
+            }
+            WalRecord::Remove { ext, .. } => inner.remove(*ext),
+            WalRecord::Apply { ops, .. } => {
+                let batch: Vec<Update<'_>> = ops
+                    .iter()
+                    .map(|op| match op {
+                        WalOp::Upsert { ext, coords } => Update::Upsert {
+                            ext: *ext,
+                            coords: coords.as_slice(),
+                        },
+                        WalOp::Remove { ext } => Update::Remove { ext: *ext },
+                    })
+                    .collect();
+                inner.apply(&batch);
+            }
+            WalRecord::Publish { version, .. } => {
+                inner.publish();
+                recovered_version = *version;
+            }
+        }
+    }
+    // re-anchor: the inner engine restarted its publish counter from
+    // zero; external versions continue where the log left off
+    let inner_version = inner.snapshot().version();
+    let version_base = recovered_version.saturating_sub(inner_version);
+    Ok(Recovered { next_seq, version_base, replayed })
+}
 
 /// Durability decorator: WAL + periodic checkpoint around any backend.
 /// Constructed by `EngineBuilder::persist(dir)`; see the [module
@@ -72,6 +207,19 @@ pub struct DurableEngine {
     version_base: u64,
     publishes_since_ckpt: u64,
     checkpoint_every: u64,
+    /// spill deltas chained to the last full checkpoint (vs full-only)
+    incremental: bool,
+    /// coordinate-store write generation covered by the last full spill
+    /// of this process (0 = none yet → next spill is full)
+    full_gen: u64,
+    /// snapshot version of that full spill (the delta chain's base)
+    full_version: u64,
+    /// WAL sequence floor of that full spill — the checkpoint side of
+    /// the segment retention floor (deltas do *not* advance it)
+    full_seq: u64,
+    deltas_since_full: u64,
+    /// replica log shipper; `None` when no followers are attached
+    shipper: Option<LogShipper>,
     /// the backend's metrics registry (None when the backend exposes none)
     obs: Option<Arc<Metrics>>,
 }
@@ -86,100 +234,29 @@ impl DurableEngine {
     ) -> io::Result<DurableEngine> {
         let obs = inner.obs_registry();
         let sw = Stopwatch::start();
-        let ckpt = load_checkpoint(dir);
-        let (records, _clean) = read_wal(dir)?;
-        let mut replayed: u64 = 0;
-        let mut next_seq: u64 = 1;
-        // version to resume at: the checkpoint's, superseded by any later
-        // Publish record in the tail
-        let mut recovered_version: u64 = 0;
-        let ckpt_floor = match &ckpt {
-            Some(c) => {
-                assert_eq!(
-                    c.dim as usize,
-                    inner.dim(),
-                    "checkpoint dim {} does not match the configured engine \
-                     dim {} — wrong persist directory?",
-                    c.dim,
-                    inner.dim()
-                );
-                // pin the cell→shard assignment *before* any point flows
-                // through the router, so re-ingestion (and the WAL tail
-                // after it) reshards to the assignment the original run
-                // had at spill time
-                if let Some(blob) = &c.placement {
-                    inner.placement_restore(blob);
-                }
-                for chunk in c.points.chunks(RECOVER_CHUNK) {
-                    let batch: Vec<Update<'_>> = chunk
-                        .iter()
-                        .map(|(ext, coords)| Update::Upsert {
-                            ext: *ext,
-                            coords: coords.as_slice(),
-                        })
-                        .collect();
-                    inner.apply(&batch);
-                }
-                if !c.points.is_empty() || c.version > 0 {
-                    // materialize the checkpoint state as one publish, so
-                    // tail replay starts from the same published baseline
-                    // the original run had when the checkpoint was taken
-                    inner.publish();
-                }
-                recovered_version = c.version;
-                next_seq = c.wal_seq + 1;
-                replayed += c.points.len() as u64;
-                c.wal_seq
-            }
-            None => 0,
-        };
-        for rec in &records {
-            let seq = rec.seq();
-            if seq <= ckpt_floor {
-                continue; // already folded into the checkpoint
-            }
-            next_seq = next_seq.max(seq + 1);
-            replayed += 1;
-            match rec {
-                WalRecord::Upsert { ext, coords, .. } => {
-                    inner.upsert(*ext, coords);
-                }
-                WalRecord::Remove { ext, .. } => inner.remove(*ext),
-                WalRecord::Apply { ops, .. } => {
-                    let batch: Vec<Update<'_>> = ops
-                        .iter()
-                        .map(|op| match op {
-                            WalOp::Upsert { ext, coords } => Update::Upsert {
-                                ext: *ext,
-                                coords: coords.as_slice(),
-                            },
-                            WalOp::Remove { ext } => Update::Remove { ext: *ext },
-                        })
-                        .collect();
-                    inner.apply(&batch);
-                }
-                WalRecord::Publish { version, .. } => {
-                    inner.publish();
-                    recovered_version = *version;
-                }
-            }
-        }
-        // re-anchor: the inner engine restarted its publish counter from
-        // zero; external versions continue where the log left off
-        let inner_version = inner.snapshot().version();
-        let version_base = recovered_version.saturating_sub(inner_version);
+        let recovered = recover_into(dir, &mut inner)?;
         if let Some(m) = &obs {
-            m.record_recovery(sw.elapsed_ns(), replayed);
+            m.record_recovery(sw.elapsed_ns(), recovered.replayed);
         }
+        // recovery is done: from here on the sharded backend may heal a
+        // dead shard warm, straight from this directory's checkpoint +
+        // WAL tail (no-op hook on other backends)
+        inner.install_wal_heal(dir);
         let wal = WalWriter::open(dir)?;
         Ok(DurableEngine {
             inner,
             wal,
             dir: dir.to_path_buf(),
-            next_seq,
-            version_base,
+            next_seq: recovered.next_seq,
+            version_base: recovered.version_base,
             publishes_since_ckpt: 0,
             checkpoint_every: checkpoint_every.max(1),
+            incremental: true,
+            full_gen: 0,
+            full_version: 0,
+            full_seq: 0,
+            deltas_since_full: 0,
+            shipper: None,
             obs,
         })
     }
@@ -187,6 +264,24 @@ impl DurableEngine {
     /// The persist directory this engine recovers from and spills into.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Spill full checkpoints only (disable the `DDCKPT03` delta chain).
+    /// Wired to `EngineBuilder::incremental_checkpoints(false)`.
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental = on;
+    }
+
+    /// Attach the replica log shipper. From now on every durable publish
+    /// ships the fsynced WAL tail to its subscribers, and sealed WAL
+    /// segments are retained until the slowest subscriber has them.
+    pub fn set_shipper(&mut self, shipper: LogShipper) {
+        self.shipper = Some(shipper);
+    }
+
+    /// Last WAL sequence number assigned so far.
+    pub fn last_seq(&self) -> u64 {
+        self.next_seq - 1
     }
 
     fn note_append(&self, bytes: usize) {
@@ -202,11 +297,45 @@ impl DurableEngine {
         s
     }
 
-    /// Serialize `view` into `<dir>/checkpoint.ckpt` and (only once the
-    /// atomic rename has landed) drop the WAL records it folds in. A
-    /// failed spill keeps the WAL intact — recovery still works, the log
-    /// is just longer; the spill is retried a cadence later.
+    /// The segment-retention floor: sealed WAL segments at or below it
+    /// are dead weight. Recovery needs everything past the last *full*
+    /// spill; each shipping subscriber needs everything past its floor.
+    fn retention_floor(&self) -> u64 {
+        let ship = self.shipper.as_ref().map(|s| s.min_floor()).unwrap_or(u64::MAX);
+        self.full_seq.min(ship)
+    }
+
+    /// Serialize `view` into the checkpoint chain and (only once the
+    /// atomic rename has landed) roll the WAL and drop sealed segments
+    /// below the retention floor. A failed spill keeps the WAL intact —
+    /// recovery still works, the log is just longer; the spill is
+    /// retried a cadence later.
     fn spill_checkpoint(&mut self, view: &SnapshotView, wal_seq: u64) {
+        // a delta only makes sense against a full spill taken by *this*
+        // process (generations restart on reopen), with a short chain,
+        // and when clean chunks still carry most of the payload
+        let dirty = if self.full_gen > 0 {
+            view.coords_chunks_dirty_since(self.full_gen)
+        } else {
+            Vec::new()
+        };
+        let go_delta = self.incremental
+            && self.full_gen > 0
+            && self.deltas_since_full < DELTA_CHAIN_MAX
+            && dirty.len() * 2 <= view.coords_num_chunks();
+        let wrote = if go_delta {
+            self.spill_delta(view, wal_seq, dirty)
+        } else {
+            self.spill_full(view, wal_seq)
+        };
+        if wrote {
+            let _ = self.wal.roll();
+            let _ = self.wal.retain(self.retention_floor());
+        }
+        self.publishes_since_ckpt = 0;
+    }
+
+    fn spill_full(&mut self, view: &SnapshotView, wal_seq: u64) -> bool {
         let mut points = Vec::with_capacity(view.live_points());
         let mut labels = Vec::with_capacity(view.live_points());
         let mut cores = Vec::with_capacity(view.live_points());
@@ -225,18 +354,66 @@ impl DurableEngine {
             cores,
             placement: self.inner.placement_blob(),
         };
-        if write_checkpoint(&self.dir, &ckpt).is_ok() {
-            // the checkpoint is durable; the log up to wal_seq is now
-            // redundant (everything newer was group-fsynced before it)
-            let _ = self.wal.truncate();
+        if write_checkpoint(&self.dir, &ckpt).is_err() {
+            return false;
         }
-        self.publishes_since_ckpt = 0;
+        // the full spill resets the delta chain and advances the
+        // checkpoint side of the retention floor
+        clear_delta(&self.dir);
+        self.full_gen = view.coords_generation();
+        self.full_version = view.version();
+        self.full_seq = wal_seq;
+        self.deltas_since_full = 0;
+        true
     }
 
-    /// The WAL-framed publish: fsync the op tail, publish, append the
-    /// commit marker with the minted version, fsync again, then maybe
-    /// spill a checkpoint.
+    fn spill_delta(
+        &mut self,
+        view: &SnapshotView,
+        wal_seq: u64,
+        dirty: Vec<usize>,
+    ) -> bool {
+        let mut chunks = Vec::with_capacity(dirty.len());
+        for ix in dirty {
+            let mut rows = Vec::new();
+            view.for_each_point_in_chunk(ix, &mut |ext, coords| {
+                rows.push((ext, coords.to_vec()));
+            });
+            chunks.push((ix as u32, rows));
+        }
+        let mut overlay = Vec::with_capacity(view.live_points());
+        view.for_each_label(&mut |ext, label, core| {
+            overlay.push((ext, label, core));
+        });
+        let delta = CheckpointDelta {
+            base_version: self.full_version,
+            version: view.version(),
+            wal_seq,
+            eps: view.eps(),
+            dim: view.dim() as u32,
+            chunk_count: view.coords_num_chunks() as u32,
+            chunks,
+            overlay,
+            placement: self.inner.placement_blob(),
+        };
+        if write_delta(&self.dir, &delta).is_err() {
+            return false;
+        }
+        self.deltas_since_full += 1;
+        true
+    }
+
+    /// The WAL-framed publish: flush the op tail so on-disk frames are
+    /// whole (the warm-heal reader may run inside the publish), publish,
+    /// append the commit marker with the minted version, group-fsync,
+    /// ship the durable tail to any attached followers, then maybe spill
+    /// a checkpoint.
     fn publish_durable(&mut self) -> SnapshotView {
+        // complete every buffered frame on disk before the inner publish:
+        // a degraded sharded backend heals inside publish by replaying
+        // this very log, and must see whole frames up to the last append
+        // (flush only — the durability fsync comes after the marker)
+        self.wal.flush().expect("WAL flush failed");
         let mut view = self.inner.publish();
         view.rebase_version(self.version_base);
         let seq = self.next_seq();
@@ -248,6 +425,17 @@ impl DurableEngine {
         if let Some(m) = &self.obs {
             m.record_wal_fsync(sw.elapsed_ns());
             m.set_gauge(Gauge::WalLag, 0);
+        }
+        if let Some(shipper) = &mut self.shipper {
+            let sw = Stopwatch::start();
+            shipper.note_publish();
+            let shipped = shipper.ship(&self.dir).unwrap_or(0);
+            if let Some(m) = &self.obs {
+                m.record_ship(sw.elapsed_ns(), shipped);
+                let floor = shipper.min_floor();
+                let floor = if floor == u64::MAX { 0 } else { floor };
+                m.set_gauge(Gauge::ShipFloor, floor);
+            }
         }
         self.publishes_since_ckpt += 1;
         if self.publishes_since_ckpt >= self.checkpoint_every {
@@ -366,10 +554,14 @@ impl ClusterEngine for DurableEngine {
         } else {
             let _ = self.wal.sync();
         }
-        // a shutdown checkpoint makes the next open replay-free
+        // a shutdown checkpoint makes the next open replay-free; always
+        // full — a clean shutdown is the natural chain reset
         let view = self.snapshot();
         let last_seq = self.next_seq - 1;
-        self.spill_checkpoint(&view, last_seq);
+        if self.spill_full(&view, last_seq) {
+            let _ = self.wal.roll();
+            let _ = self.wal.retain(self.retention_floor());
+        }
         let mut out = self.inner.finish();
         out.snapshot.rebase_version(self.version_base);
         out

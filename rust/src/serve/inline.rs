@@ -472,6 +472,10 @@ impl ClusterEngine for InlineEngine {
             self.eps,
             self.dim,
         );
+        // the clone above froze this publish's writes into the view;
+        // stamp later writes with a fresh generation so incremental
+        // checkpoint spills can diff chunks against this publish
+        self.coords.advance_gen();
         if let Some(c) = clk.as_mut() {
             trace.record(PublishStage::SnapshotCow, c.lap());
         }

@@ -57,7 +57,7 @@
 //! ([`MetricsSnapshot::render_prometheus`]).
 
 pub mod builder;
-mod durable;
+pub(crate) mod durable;
 pub mod driver;
 pub mod events;
 pub mod index;
@@ -582,6 +582,14 @@ pub trait ClusterEngine {
     /// restore.
     #[doc(hidden)]
     fn placement_restore(&mut self, _blob: &[u8]) {}
+
+    /// Tell the backend where durable state lives so it can heal a dead
+    /// shard **warm** — re-seeding from the checkpoint chain + WAL tail
+    /// instead of the in-memory store. Called by the durability wrapper
+    /// once recovery has completed. Default: ignore — only the sharded
+    /// backend heals.
+    #[doc(hidden)]
+    fn install_wal_heal(&mut self, _dir: &std::path::Path) {}
 
     /// Publish any pending writes, stop the backend and hand back the
     /// final view plus complete stats.

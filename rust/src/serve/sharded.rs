@@ -4,9 +4,10 @@
 //! bookkeeping and publish-pinned coordinate state the raw engine does
 //! not keep.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use rustc_hash::FxHashSet;
+use rustc_hash::{FxHashMap, FxHashSet};
 
 use crate::dbscan::RepairStats;
 use crate::obs::{Gauge, PhaseClock, Stopwatch, UpdateStage};
@@ -41,6 +42,58 @@ pub(crate) struct ShardedServe {
     pending: u64,
     inserts: u64,
     deletes: u64,
+    /// persist directory for warm shard heals (`install_wal_heal`);
+    /// `None` when the engine is not wrapped in a `DurableEngine`
+    wal_heal_dir: Option<PathBuf>,
+}
+
+/// Rebuild the live `ext → coords` relation from durable state: the
+/// checkpoint chain plus the WAL tail past its floor. The durable engine
+/// flushes the WAL *before* the inner publish (whose barrier runs the
+/// heal), so this replay reconstructs exactly the façade's live
+/// coordinate set at heal time. `None` on any read failure — the caller
+/// falls back to the in-memory re-feed.
+fn durable_coords(dir: &Path) -> Option<FxHashMap<u64, Vec<f32>>> {
+    use crate::persist::{load_checkpoint_chain, read_wal, WalOp, WalRecord};
+    let mut map: FxHashMap<u64, Vec<f32>> = FxHashMap::default();
+    let floor = match load_checkpoint_chain(dir) {
+        Some(c) => {
+            let floor = c.wal_seq;
+            for (ext, row) in c.points {
+                map.insert(ext, row);
+            }
+            floor
+        }
+        None => 0, // cold full-log replay
+    };
+    let (records, _clean) = read_wal(dir).ok()?;
+    for rec in records {
+        if rec.seq() <= floor {
+            continue;
+        }
+        match rec {
+            WalRecord::Upsert { ext, coords, .. } => {
+                map.insert(ext, coords);
+            }
+            WalRecord::Remove { ext, .. } => {
+                map.remove(&ext);
+            }
+            WalRecord::Apply { ops, .. } => {
+                for op in ops {
+                    match op {
+                        WalOp::Upsert { ext, coords } => {
+                            map.insert(ext, coords);
+                        }
+                        WalOp::Remove { ext } => {
+                            map.remove(&ext);
+                        }
+                    }
+                }
+            }
+            WalRecord::Publish { .. } => {}
+        }
+    }
+    Some(map)
 }
 
 impl ShardedServe {
@@ -59,6 +112,7 @@ impl ShardedServe {
             pending: 0,
             inserts: 0,
             deletes: 0,
+            wal_heal_dir: None,
         }
     }
 
@@ -72,13 +126,45 @@ impl ShardedServe {
         }
     }
 
-    /// Respawn every shard quarantined **before** this publish, re-seeding
-    /// each from the façade's coordinate store. A fault detected during
-    /// the barrier of the current publish therefore surfaces as
-    /// `Degraded` at least once; the *next* publish heals it.
+    /// Respawn every shard quarantined **before** this publish. With a
+    /// persist directory installed ([`ClusterEngine::install_wal_heal`])
+    /// the re-seed coordinates come **warm** from durable state — the
+    /// checkpoint chain plus the WAL tail, i.e. the same bytes crash
+    /// recovery trusts — proving the log is sufficient to rebuild any
+    /// single shard without the in-memory store. When persistence is off
+    /// (or the durable read fails or disagrees with the live set), the
+    /// heal falls back to the façade's coordinate map, the original
+    /// placement re-feed. A fault detected during the barrier of the
+    /// current publish surfaces as `Degraded` at least once; the *next*
+    /// publish heals it.
     fn heal_down_shards(&mut self) {
         let down: Vec<u32> = self.eng.down_shards().to_vec();
+        if down.is_empty() {
+            return;
+        }
+        let durable = self
+            .wal_heal_dir
+            .as_deref()
+            .and_then(durable_coords)
+            // a durable set that disagrees with the live one means the
+            // directory is stale or damaged — don't seed from it
+            .filter(|m| m.len() == self.coords.len());
         for s in down {
+            if let Some(map) = &durable {
+                let healed = self
+                    .eng
+                    .respawn_shard(s, |ext, buf| match map.get(&ext) {
+                        Some(row) => {
+                            buf.extend_from_slice(row);
+                            true
+                        }
+                        None => false,
+                    })
+                    .is_ok();
+                if healed {
+                    continue;
+                }
+            }
             let coords = &self.coords;
             // a failed respawn leaves the shard quarantined (and the
             // fault logged in the engine) — retried at the next publish
@@ -195,6 +281,10 @@ impl ShardedServe {
             self.dim,
         );
         view.set_reshard_epoch(self.eng.placement_version());
+        // the clone above froze this publish's writes into the view;
+        // stamp later writes with a fresh generation so incremental
+        // checkpoint spills can diff chunks against this publish
+        self.coords.advance_gen();
         let cow_ns = clk.as_mut().map_or(0, |c| c.lap());
         if self.hub.has_watchers() {
             let prev: FxHashSet<i64> =
@@ -342,6 +432,10 @@ impl ClusterEngine for ShardedServe {
 
     fn placement_restore(&mut self, blob: &[u8]) {
         self.eng.placement_restore(blob);
+    }
+
+    fn install_wal_heal(&mut self, dir: &Path) {
+        self.wal_heal_dir = Some(dir.to_path_buf());
     }
 
     fn finish(mut self: Box<Self>) -> ServeOutcome {

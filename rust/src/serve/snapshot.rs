@@ -27,6 +27,20 @@
 //!   obtained) says how many such writes the engine had buffered.
 //! * For read-your-writes, call [`super::ClusterEngine::publish`] and use
 //!   the view it returns (its `pending_writes` is 0 by construction).
+//!
+//! ## Replica staleness contract
+//!
+//! A view served by a [`crate::replica::ReplicaEngine`] carries the
+//! **leader's** version numbering (replicas rebase at every shipped
+//! `Publish{seq, version}` marker), and a replica view at version `v` is
+//! bit-identical — labels, cores, `epsilon_neighbors`, `k_nearest`,
+//! cluster membership — to the leader's view at the same `v`: both are
+//! deterministic replays of the same op prefix. What a replica view may
+//! be is *behind*: at most `max_staleness` leader publishes (the
+//! [`crate::replica::ReadRouter`] bound, measured in publishes — never a
+//! wall-clock claim), and never mid-publish — replicas apply shipped ops
+//! only up to complete publish markers, so no view exposes a state the
+//! leader never published.
 
 use std::sync::{Arc, OnceLock};
 
@@ -89,6 +103,35 @@ impl CoordMap {
     /// `cow_coord_sharing` gauge.
     pub fn sharing_ratio(&self) -> f64 {
         self.inner.sharing_ratio()
+    }
+
+    /// Bump the write generation (once per publish, after cloning into
+    /// the view) — the chunk-level dirty clock incremental checkpoints
+    /// spill against.
+    pub fn advance_gen(&mut self) {
+        self.inner.advance_gen();
+    }
+
+    /// Write generation carried by this map (a view's clone keeps the
+    /// generation of the publish that froze it).
+    pub fn generation(&self) -> u64 {
+        self.inner.generation()
+    }
+
+    /// Current chunk count (power of two).
+    pub fn num_chunks(&self) -> usize {
+        self.inner.num_chunks()
+    }
+
+    /// Chunks mutated after generation `floor` — the incremental spill's
+    /// dirty set when `floor` is the generation of the last full spill.
+    pub fn chunks_dirty_since(&self, floor: u64) -> Vec<usize> {
+        self.inner.chunks_dirty_since(floor)
+    }
+
+    /// Visit `(ext, coords)` of one chunk.
+    pub fn for_each_in_chunk(&self, ix: usize, mut f: impl FnMut(u64, &[f32])) {
+        self.inner.for_each_in_chunk(ix, |k, v| f(k, v.as_ref()));
     }
 }
 
@@ -225,6 +268,42 @@ impl SnapshotView {
             // live coordinate row always has a label
             let label = self.labels.get(ext).unwrap_or(-1);
             f(ext, coords, label, self.cores.get(ext).is_some());
+        }
+    }
+
+    /// Write generation of the coordinate store frozen in this view —
+    /// the dirty clock the incremental checkpoint spill records and later
+    /// diffs against.
+    pub(crate) fn coords_generation(&self) -> u64 {
+        self.coords.generation()
+    }
+
+    /// Chunk count of the frozen coordinate store (power of two).
+    pub(crate) fn coords_num_chunks(&self) -> usize {
+        self.coords.num_chunks()
+    }
+
+    /// Coordinate chunks mutated after generation `floor` as of this
+    /// view — the incremental spill's dirty set.
+    pub(crate) fn coords_chunks_dirty_since(&self, floor: u64) -> Vec<usize> {
+        self.coords.chunks_dirty_since(floor)
+    }
+
+    /// Visit `(ext, coords)` of one coordinate chunk — the incremental
+    /// spill's per-dirty-chunk serialization walk.
+    pub(crate) fn for_each_point_in_chunk(
+        &self,
+        ix: usize,
+        f: &mut dyn FnMut(u64, &[f32]),
+    ) {
+        self.coords.for_each_in_chunk(ix, |ext, coords| f(ext, coords));
+    }
+
+    /// Visit every live point as `(ext, label, is_core)` without touching
+    /// coordinates — the incremental spill's label overlay walk.
+    pub(crate) fn for_each_label(&self, f: &mut dyn FnMut(u64, i64, bool)) {
+        for (ext, label) in self.labels.iter() {
+            f(ext, label, self.cores.get(ext).is_some());
         }
     }
 

@@ -26,6 +26,15 @@ use crate::util::rng::mix64;
 /// Initial chunk count (power of two).
 const MIN_CHUNKS: usize = 64;
 
+/// The chunk a key lives in for a given (power-of-two) chunk count —
+/// exposed so the incremental-checkpoint loader can re-derive chunk
+/// membership of previously spilled keys without the map itself.
+#[inline]
+pub fn chunk_ix_of(key: u64, num_chunks: usize) -> usize {
+    debug_assert!(num_chunks.is_power_of_two());
+    (mix64(key) as usize) & (num_chunks - 1)
+}
+
 /// Chunked CoW `u64 → V` map. Cloning is `O(#chunks)` pointer copies.
 #[derive(Clone, Debug)]
 pub struct ChunkedCowMap<V> {
@@ -33,6 +42,15 @@ pub struct ChunkedCowMap<V> {
     len: usize,
     /// target mean entries per chunk; growth triggers at twice this
     target_per_chunk: usize,
+    /// write generation: bumped by [`advance_gen`](Self::advance_gen)
+    /// (once per publish); every mutation stamps its chunk with the
+    /// current value, giving chunk-level dirty tracking for incremental
+    /// checkpoint spills without any clear/reset race — a spill just
+    /// remembers the generation it covered and later asks for chunks
+    /// stamped after it.
+    write_gen: u64,
+    /// generation of the last mutation per chunk (0 = never written)
+    chunk_gen: Vec<u64>,
 }
 
 impl<V: Clone> ChunkedCowMap<V> {
@@ -42,6 +60,8 @@ impl<V: Clone> ChunkedCowMap<V> {
             chunks: (0..MIN_CHUNKS).map(|_| Arc::new(FxHashMap::default())).collect(),
             len: 0,
             target_per_chunk,
+            write_gen: 1,
+            chunk_gen: vec![0; MIN_CHUNKS],
         }
     }
 
@@ -68,6 +88,7 @@ impl<V: Clone> ChunkedCowMap<V> {
     /// target chunk iff it is shared with a clone.
     pub fn set(&mut self, key: u64, value: V) -> Option<V> {
         let i = self.chunk_ix(key);
+        self.chunk_gen[i] = self.write_gen;
         let prev = Arc::make_mut(&mut self.chunks[i]).insert(key, value);
         if prev.is_none() {
             self.len += 1;
@@ -83,6 +104,7 @@ impl<V: Clone> ChunkedCowMap<V> {
         if !self.chunks[i].contains_key(&key) {
             return None;
         }
+        self.chunk_gen[i] = self.write_gen;
         let prev = Arc::make_mut(&mut self.chunks[i]).remove(&key);
         if prev.is_some() {
             self.len -= 1;
@@ -98,6 +120,7 @@ impl<V: Clone> ChunkedCowMap<V> {
         if !self.chunks[i].contains_key(&key) {
             return None;
         }
+        self.chunk_gen[i] = self.write_gen;
         Arc::make_mut(&mut self.chunks[i]).get_mut(&key)
     }
 
@@ -107,6 +130,7 @@ impl<V: Clone> ChunkedCowMap<V> {
         if !self.chunks[i].contains_key(&key) {
             self.len += 1;
         }
+        self.chunk_gen[i] = self.write_gen;
         Arc::make_mut(&mut self.chunks[i]).entry(key).or_insert_with(make)
     }
 
@@ -129,6 +153,36 @@ impl<V: Clone> ChunkedCowMap<V> {
             fresh[(mix64(k) as usize) & (new_n - 1)].insert(k, v.clone());
         }
         self.chunks = fresh.into_iter().map(Arc::new).collect();
+        // a re-shard moves keys between chunks, so every chunk is dirty
+        // relative to any earlier spill
+        self.chunk_gen = vec![self.write_gen; new_n];
+    }
+
+    /// Bump the write generation. The serve façade calls this once per
+    /// publish, right after cloning the map into the snapshot, so the
+    /// snapshot's clone carries the generation stamps of exactly the
+    /// writes folded into it.
+    pub fn advance_gen(&mut self) {
+        self.write_gen += 1;
+    }
+
+    /// Current write generation.
+    pub fn generation(&self) -> u64 {
+        self.write_gen
+    }
+
+    /// Chunks mutated *after* generation `floor` (ascending indices) —
+    /// the dirty set an incremental spill serializes when `floor` is the
+    /// generation covered by the last full spill.
+    pub fn chunks_dirty_since(&self, floor: u64) -> Vec<usize> {
+        (0..self.chunks.len()).filter(|&i| self.chunk_gen[i] > floor).collect()
+    }
+
+    /// Iterate `(key, &value)` of one chunk.
+    pub fn for_each_in_chunk(&self, ix: usize, mut f: impl FnMut(u64, &V)) {
+        for (&k, v) in self.chunks[ix].iter() {
+            f(k, v);
+        }
     }
 
     /// How many chunks are *not* shared with any clone — i.e. were

@@ -229,12 +229,68 @@ fn timing_goes_through_the_obs_span_api() {
         ("dbscan/invariants.rs", include_str!("../src/dbscan/invariants.rs")),
         ("dbscan/leveled.rs", include_str!("../src/dbscan/leveled.rs")),
         ("dbscan/mod.rs", include_str!("../src/dbscan/mod.rs")),
+        ("replica/engine.rs", include_str!("../src/replica/engine.rs")),
+        ("replica/ship.rs", include_str!("../src/replica/ship.rs")),
+        ("replica/router.rs", include_str!("../src/replica/router.rs")),
+        ("replica/transport.rs", include_str!("../src/replica/transport.rs")),
+        ("replica/mod.rs", include_str!("../src/replica/mod.rs")),
     ] {
         assert!(
             !src.contains("Instant::now("),
             "{name} reads the wall clock directly; time through \
              obs::Stopwatch / obs::PhaseClock / span! so the overhead \
              stays auditable and the metrics switch stays total"
+        );
+    }
+}
+
+/// The WAL frame codec — length/CRC framing, field packing — lives in
+/// `persist/wal.rs` and nowhere else. Replication ships the on-disk
+/// frames verbatim and decodes them through `persist::wal::decode_frame`;
+/// a second encoder or a hand-rolled byte pick in `replica/` would fork
+/// the wire format from the disk format and silently break the
+/// "shipped bytes = recovery bytes" guarantee.
+#[test]
+fn wal_frame_codec_confined_to_persist_wal() {
+    for (name, src) in [
+        ("replica/engine.rs", include_str!("../src/replica/engine.rs")),
+        ("replica/ship.rs", include_str!("../src/replica/ship.rs")),
+        ("replica/router.rs", include_str!("../src/replica/router.rs")),
+        ("replica/transport.rs", include_str!("../src/replica/transport.rs")),
+        ("replica/mod.rs", include_str!("../src/replica/mod.rs")),
+    ] {
+        for pat in [
+            "to_le_bytes(",
+            "from_le_bytes(",
+            "crc32(",
+            "fn encode_frame",
+            "fn decode_frame",
+        ] {
+            assert!(
+                !src.contains(pat),
+                "{name} touches WAL frame bytes directly ({pat}); frames \
+                 cross the replica layer opaque — only persist/wal.rs \
+                 encodes or decodes them"
+            );
+        }
+    }
+    // the sanctioned codec, and the sanctioned call sites
+    let wal = include_str!("../src/persist/wal.rs");
+    for required in ["fn encode_frame", "fn decode_frame"] {
+        assert!(
+            wal.contains(required),
+            "persist/wal.rs lost `{required}` — the shipping layer and \
+             the recovery reader both depend on the shared frame codec"
+        );
+    }
+    for (name, src) in [
+        ("replica/ship.rs", include_str!("../src/replica/ship.rs")),
+        ("replica/engine.rs", include_str!("../src/replica/engine.rs")),
+    ] {
+        assert!(
+            src.contains("persist::wal::"),
+            "{name} no longer goes through persist::wal for frame I/O; \
+             ship and apply must reuse the durability codec"
         );
     }
 }
@@ -335,6 +391,11 @@ fn channel_ops_never_unwrap_in_the_serving_path() {
         ("serve/index.rs", include_str!("../src/serve/index.rs")),
         ("serve/inline.rs", include_str!("../src/serve/inline.rs")),
         ("serve/sharded.rs", include_str!("../src/serve/sharded.rs")),
+        // replica/transport.rs is exempt: it *is* the channel primitive,
+        // and its in-file unit test asserts on send results directly
+        ("replica/engine.rs", include_str!("../src/replica/engine.rs")),
+        ("replica/ship.rs", include_str!("../src/replica/ship.rs")),
+        ("replica/router.rs", include_str!("../src/replica/router.rs")),
     ] {
         for (ln, line) in src.lines().enumerate() {
             let channel_op = line.contains(".send(")

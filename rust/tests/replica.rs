@@ -1,0 +1,335 @@
+//! Replication acceptance tests: differential checks of WAL log-shipping
+//! read replicas against the leader they follow — bit-identical reads at
+//! the same snapshot version, the bounded-staleness read contract under
+//! churn, leader loss → promotion → uninterrupted service, and the
+//! equivalence of incremental-checkpoint and full-checkpoint bootstrap.
+//!
+//! Replica determinism is stronger than crash-recovery determinism: a
+//! replica attached to a *fresh* persist directory sees every op in the
+//! exact order the leader logged it (shipped frames are the leader's
+//! on-disk bytes), so labels — not just the partition — must match. Only
+//! bootstrap from a pre-existing checkpoint re-ingests in a different
+//! order, where the gate relaxes to ARI = 1.0 on well-separated blobs.
+
+use std::path::PathBuf;
+
+use dyn_dbscan::data::blobs::{make_blobs, BlobsConfig};
+use dyn_dbscan::data::Dataset;
+use dyn_dbscan::metrics::adjusted_rand_index;
+use dyn_dbscan::persist::load_delta;
+use dyn_dbscan::serve::{ClusterEngine, EngineBuilder, SnapshotView};
+use rustc_hash::FxHashMap;
+
+/// Fresh scratch directory under the system temp root (std-only: the
+/// container has no tempfile crate). Unique per test name + process so
+/// parallel test binaries never collide; recreated empty on entry.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dyn-dbscan-replica-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn blobs(n: usize, seed: u64) -> Dataset {
+    // well separated (center_box ≫ std): border attachment is
+    // order-independent up to the cluster label, so checkpoint-order
+    // re-ingestion during bootstrap cannot cost ARI
+    make_blobs(
+        &BlobsConfig {
+            n,
+            dim: 3,
+            clusters: 4,
+            std: 0.3,
+            center_box: 20.0,
+            weights: vec![],
+        },
+        seed,
+    )
+}
+
+fn builder(dim: usize) -> EngineBuilder {
+    // eager_attach makes non-core attachment depend on the final point
+    // set, not the insertion order — required by the ARI = 1.0 gates
+    EngineBuilder::new(dim).k(8).t(6).eps(0.75).seed(21).eager_attach(true)
+}
+
+/// Exact label-partition agreement over identical live sets.
+fn ari_of(a: &SnapshotView, b: &SnapshotView) -> f64 {
+    let la = a.labels();
+    let lb: FxHashMap<u64, i64> = b.labels().into_iter().collect();
+    assert_eq!(la.len(), lb.len(), "live sets diverged");
+    let mut pa = Vec::with_capacity(la.len());
+    let mut pb = Vec::with_capacity(la.len());
+    for (ext, va) in la {
+        pa.push(va);
+        pb.push(*lb.get(&ext).unwrap_or_else(|| panic!("{ext} missing in b")));
+    }
+    adjusted_rand_index(&pa, &pb)
+}
+
+// ---------------------------------------------------------------------
+// bit-identical replica reads
+// ---------------------------------------------------------------------
+
+/// A replica view at version `v` answers every read — labels,
+/// ε-neighborhoods, kNN — bit-identically to the leader's view at `v`,
+/// across a delete-heavy churn schedule. Fresh persist directory, so the
+/// followers see the leader's op stream verbatim: the gate is exact
+/// equality, not ARI.
+#[test]
+fn replica_reads_are_bit_identical_at_the_same_version() {
+    let dir = scratch("bit-identical");
+    let ds = blobs(600, 3);
+    let (mut leader, mut reads) = builder(3)
+        .persist(&dir)
+        .persist_every(1_000_000) // pure shipping: no mid-run spill
+        .replicate(2)
+        .max_staleness(0)
+        .build_replicated()
+        .unwrap();
+
+    for (i, chunk) in (0..ds.n()).collect::<Vec<_>>().chunks(100).enumerate() {
+        for &j in chunk {
+            leader.upsert(j as u64, ds.point(j));
+        }
+        // churn: every other chunk deletes half of the previous chunk
+        if i % 2 == 1 {
+            for e in ((i - 1) * 100..(i - 1) * 100 + 50).map(|e| e as u64) {
+                leader.remove(e);
+            }
+        }
+        let lv = leader.publish();
+        let shipped = reads.catch_up();
+        assert!(shipped > 0, "publish must ship frames to the followers");
+
+        // both followers (round-robin covers the pair in two reads)
+        for _ in 0..2 {
+            let rv = reads.read();
+            assert_eq!(rv.version(), lv.version(), "version parity");
+            assert_eq!(rv.live_points(), lv.live_points());
+            assert_eq!(rv.core_points(), lv.core_points());
+            let mut ll = lv.labels();
+            let mut rl = rv.labels();
+            ll.sort_unstable();
+            rl.sort_unstable();
+            assert_eq!(ll, rl, "replica labels must be bit-identical");
+
+            // point queries answer from the replica's own pinned index
+            for &p in &[0usize, 150, 420] {
+                let probe = ds.point(p.min(ds.n() - 1));
+                let mut ln = lv.epsilon_neighbors(probe);
+                let mut rn = rv.epsilon_neighbors(probe);
+                ln.sort_unstable();
+                rn.sort_unstable();
+                assert_eq!(ln, rn, "ε-neighborhood diverged at probe {p}");
+                assert_eq!(
+                    lv.k_nearest(probe, 5),
+                    rv.k_nearest(probe, 5),
+                    "kNN diverged at probe {p}"
+                );
+            }
+        }
+    }
+    let _ = leader.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// bounded staleness
+// ---------------------------------------------------------------------
+
+/// Staleness is measured in leader publish barriers and `read()` enforces
+/// the configured bound: a lazy replica set falls behind publish by
+/// publish, and a read either serves the (still-consistent) stale view —
+/// when inside the bound — or synchronously catches the replica up first.
+#[test]
+fn reads_respect_the_publish_staleness_bound() {
+    let dir = scratch("staleness");
+    let ds = blobs(300, 5);
+    let (mut leader, mut lazy) = builder(3)
+        .persist(&dir)
+        .replicate(2)
+        .max_staleness(100) // never forces a catch-up in this run
+        .build_replicated()
+        .unwrap();
+
+    let mut versions = Vec::new();
+    for chunk in (0..ds.n()).collect::<Vec<_>>().chunks(60) {
+        for &j in chunk {
+            leader.upsert(j as u64, ds.point(j));
+        }
+        versions.push(leader.publish().version());
+    }
+    // nothing drained: every follower trails by all five publishes
+    assert_eq!(lazy.lags(), vec![5, 5]);
+    let stale = lazy.read();
+    assert_eq!(
+        stale.version(),
+        0,
+        "inside the bound, read() serves the stale view as-is"
+    );
+    assert_eq!(lazy.lags(), vec![5, 5], "a bounded read must not catch up");
+
+    // a zero-staleness router over the same shipped stream always
+    // answers at the leader's frontier
+    let dir2 = scratch("staleness-zero");
+    let (mut leader2, mut fresh) = builder(3)
+        .persist(&dir2)
+        .replicate(2)
+        .max_staleness(0)
+        .build_replicated()
+        .unwrap();
+    for chunk in (0..ds.n()).collect::<Vec<_>>().chunks(60) {
+        for &j in chunk {
+            leader2.upsert(j as u64, ds.point(j));
+        }
+        let lv = leader2.publish();
+        // no explicit catch_up(): read() must do it to honor the bound
+        let rv = fresh.read();
+        assert_eq!(rv.version(), lv.version(), "zero staleness = parity");
+        // the replica that answered is now at the frontier
+        assert!(fresh.lags().iter().any(|&l| l == 0));
+    }
+    // per-replica lag accounting: the round-robin partner of the last
+    // read may still trail, but never by more than the publishes issued
+    for lag in fresh.lags() {
+        assert!(lag <= versions.len() as u64);
+    }
+    let _ = leader.finish();
+    let _ = leader2.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+// ---------------------------------------------------------------------
+// leader loss → promotion
+// ---------------------------------------------------------------------
+
+/// Kill the leader (`mem::forget`: no flush, no shutdown spill) and
+/// promote the follower: the promoted engine continues the leader's
+/// version numbering, serves the full published history, and keeps
+/// clustering new writes — ARI = 1.0 against an uninterrupted oracle fed
+/// the identical op sequence.
+#[test]
+fn leader_kill_then_promote_continues_service() {
+    let dir = scratch("promote");
+    let ds = blobs(600, 9);
+    let (mut leader, mut reads) = builder(3)
+        .persist(&dir)
+        .replicate(1)
+        .max_staleness(0)
+        .build_replicated()
+        .unwrap();
+    let mut oracle = builder(3).build().unwrap();
+
+    let mut last_version = 0;
+    for chunk in (0..400).collect::<Vec<_>>().chunks(100) {
+        for &j in chunk {
+            leader.upsert(j as u64, ds.point(j));
+            oracle.upsert(j as u64, ds.point(j));
+        }
+        last_version = leader.publish().version();
+        oracle.publish();
+    }
+    // accepted but never published: lost with the leader, by contract
+    leader.upsert(999_999, &[50.0, 50.0, 50.0]);
+    std::mem::forget(leader);
+
+    let mut promoted = reads.promote(0);
+    let pv = promoted.snapshot();
+    assert_eq!(pv.version(), last_version, "version continuity");
+    assert!(!pv.contains(999_999), "unpublished write must not survive");
+
+    // the new leader keeps serving writes where the old one stopped
+    for j in 400..ds.n() {
+        promoted.upsert(j as u64, ds.point(j));
+        oracle.upsert(j as u64, ds.point(j));
+    }
+    let after = promoted.publish();
+    let fv = oracle.publish();
+    assert_eq!(after.version(), last_version + 1, "numbering continues");
+    assert_eq!(after.live_points(), fv.live_points());
+    let ari = ari_of(&after, &fv);
+    assert_eq!(ari, 1.0, "post-promotion partition diverged (ARI {ari})");
+    let _ = promoted.finish();
+    let _ = oracle.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// incremental vs full checkpoint bootstrap
+// ---------------------------------------------------------------------
+
+/// Followers bootstrapping from an incremental chain (full spill + delta
+/// checkpoints + WAL tail) and from full-only checkpoints must recover
+/// the same published state: same version, same live/core counts, same
+/// partition. The incremental run must actually exercise the delta path
+/// (a `checkpoint.delta` survives on disk at bootstrap time).
+#[test]
+fn incremental_and_full_bootstrap_are_equivalent() {
+    let ds = blobs(600, 13);
+    let mut dirs = Vec::new();
+    for (tag, incremental) in [("boot-incr", true), ("boot-full", false)] {
+        let dir = scratch(tag);
+        let mut leader = builder(3)
+            .persist(&dir)
+            .persist_every(2)
+            .incremental_checkpoints(incremental)
+            .build()
+            .unwrap();
+        // bulk load + publishes: cadence lands the first (always full)
+        // spill with the whole dataset folded in
+        for chunk in (0..ds.n()).collect::<Vec<_>>().chunks(150) {
+            for &j in chunk {
+                leader.upsert(j as u64, ds.point(j));
+            }
+            leader.publish();
+        }
+        // small touch-ups: 20 distinct keys dirty at most 20 of the 64
+        // coordinate chunks, so the incremental run spills deltas
+        // instead of re-writing the full state
+        for round in 0..4u64 {
+            for e in 0..5u64 {
+                let j = (round * 5 + e) as usize;
+                leader.upsert(j as u64, ds.point(ds.n() - 1 - j));
+            }
+            leader.publish();
+        }
+        if incremental {
+            assert!(
+                load_delta(&dir).is_some(),
+                "incremental run must leave a delta checkpoint behind"
+            );
+        } else {
+            assert!(load_delta(&dir).is_none());
+        }
+        // crash, not shutdown: finish() would spill a fresh full
+        // checkpoint and erase the chain we want to bootstrap from
+        std::mem::forget(leader);
+        dirs.push(dir);
+    }
+
+    // bootstrap one follower from each directory and compare
+    let mut views = Vec::new();
+    for dir in &dirs {
+        let (leader, mut reads) = builder(3)
+            .persist(dir)
+            .persist_every(1_000_000)
+            .replicate(1)
+            .max_staleness(0)
+            .build_replicated()
+            .unwrap();
+        views.push(reads.read());
+        let _ = leader.finish();
+    }
+    let (incr, full) = (&views[0], &views[1]);
+    assert_eq!(incr.version(), full.version(), "recovered version parity");
+    assert_eq!(incr.live_points(), full.live_points());
+    assert_eq!(incr.core_points(), full.core_points());
+    let ari = ari_of(incr, full);
+    assert_eq!(ari, 1.0, "incremental bootstrap diverged from full (ARI {ari})");
+    for dir in dirs {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
